@@ -1,0 +1,11 @@
+use gee_sparse::runtime::Runtime;
+use std::time::Instant;
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).unwrap();
+    for b in ["s", "m", "l"] {
+        let t0 = Instant::now();
+        let n = rt.warmup(b).unwrap();
+        println!("bucket {b}: {n} variants compiled in {:.2}s", t0.elapsed().as_secs_f64());
+    }
+}

@@ -1,0 +1,129 @@
+//! The GEE line's companion capabilities (refs [11]-[13] of the paper),
+//! built on the sparse pipeline:
+//!
+//! 1. **Unsupervised ensemble** — community detection with no labels
+//!    (embed ↔ cluster refinement, best-of-R replicates);
+//! 2. **Vertex dynamics** — time-series of graphs, per-vertex pattern
+//!    shift detection;
+//! 3. **Graph fusion** — multi-modal graphs over one vertex set,
+//!    concatenated embeddings.
+//!
+//! Run with: `cargo run --release --example gee_extensions`
+
+use gee_sparse::gee::ensemble::{gee_ensemble, EnsembleConfig};
+use gee_sparse::gee::fusion::gee_fuse;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::tasks::dynamics::{shifted_vertices, vertex_dynamics};
+use gee_sparse::tasks::knn::loo_1nn_accuracy;
+use gee_sparse::tasks::metrics::adjusted_rand_index;
+use gee_sparse::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // ---------------- 1. unsupervised ensemble
+    let mut params = SbmParams::paper(1_000);
+    for i in 0..3 {
+        params.block_probs[i * 3 + i] = 0.3;
+    }
+    let g = generate_sbm(&params, 17);
+    let truth: Vec<usize> = g.labels.iter().map(|&l| l as usize).collect();
+    let res = gee_ensemble(&g, 3, &EnsembleConfig::new(5));
+    let pred: Vec<usize> = res.labels.iter().map(|&l| l as usize).collect();
+    println!("== unsupervised GEE ensemble (no labels given) ==");
+    println!(
+        "SBM n=1000: ARI vs hidden truth = {:.4} (objective {:.4}, rounds {:?})\n",
+        adjusted_rand_index(&pred, &truth),
+        res.objective,
+        res.rounds
+    );
+
+    // ---------------- 2. vertex dynamics over a time series
+    let windows = drifting_series(60, 4, 31);
+    let refs: Vec<&Graph> = windows.iter().collect();
+    let dyn_res = vertex_dynamics(&refs, &GeeOptions::new(false, true, true));
+    let shifts = shifted_vertices(&dyn_res, 0.3);
+    println!("== vertex dynamics (pattern-shift detection) ==");
+    println!(
+        "{} windows, {} vertices flagged (threshold 0.3); top movers: {:?}\n",
+        windows.len(),
+        shifts.len(),
+        &shifts[..shifts.len().min(5)]
+    );
+
+    // ---------------- 3. multi-graph fusion
+    let (g1, g2) = complementary_views(200, 41);
+    let opts = GeeOptions::new(true, true, false);
+    let zf = gee_fuse(&[&g1, &g2], &opts)?;
+    println!("== synergistic graph fusion ==");
+    println!(
+        "view1 1-NN acc {:.3} | view2 {:.3} | fused {:.3} (N x {} embedding)",
+        loo_1nn_accuracy(
+            &gee_sparse::gee::Engine::SparseFast.embed(&g1, &opts)?,
+            &g1.labels
+        ),
+        loo_1nn_accuracy(
+            &gee_sparse::gee::Engine::SparseFast.embed(&g2, &opts)?,
+            &g2.labels
+        ),
+        loo_1nn_accuracy(&zf, &g1.labels),
+        zf.ncols
+    );
+    Ok(())
+}
+
+/// Time series where vertices 0..6 migrate to the other community midway.
+fn drifting_series(n: usize, windows: usize, seed: u64) -> Vec<Graph> {
+    let mut rng = Rng::new(seed);
+    let labels: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+    (0..windows)
+        .map(|t| {
+            let flipped = t >= windows / 2;
+            let mut g = Graph::new(n, 2);
+            g.labels = labels.clone();
+            for _ in 0..n * 8 {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a == b {
+                    continue;
+                }
+                let eff = |v: usize| -> i32 {
+                    if flipped && v < 6 {
+                        1 - labels[v]
+                    } else {
+                        labels[v]
+                    }
+                };
+                let p = if eff(a) == eff(b) { 0.65 } else { 0.08 };
+                if rng.f64() < p {
+                    g.add_edge(a as u32, b as u32, 1.0);
+                }
+            }
+            g
+        })
+        .collect()
+}
+
+/// Two weak complementary views of one 2-block vertex set.
+fn complementary_views(n: usize, seed: u64) -> (Graph, Graph) {
+    let mut rng = Rng::new(seed);
+    let labels: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+    let mut mk = |within_axis: bool| {
+        let mut g = Graph::new(n, 2);
+        g.labels = labels.clone();
+        for _ in 0..n * 5 {
+            let a = rng.below(n);
+            let b = rng.below(n);
+            if a == b {
+                continue;
+            }
+            let same = labels[a] == labels[b];
+            let p = if same == within_axis { 0.7 } else { 0.25 };
+            if rng.f64() < p {
+                g.add_edge(a as u32, b as u32, 1.0);
+            }
+        }
+        g
+    };
+    (mk(true), mk(false))
+}

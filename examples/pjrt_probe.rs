@@ -1,0 +1,39 @@
+//! §Perf probe: PJRT execute latency per bucket (after warm compile).
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::runtime::Runtime;
+use std::time::Instant;
+
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = Runtime::new(&dir).unwrap();
+    // (label, n, target undirected edges) sized to land in each bucket
+    for (bucket, n, e) in [("s", 120, 800), ("m", 1_000, 7_000), ("l", 6_000, 60_000)] {
+        let g = generate_sbm(
+            &SbmParams::fitted(n, 3, e, 3.0, vec![0.2, 0.3, 0.5]),
+            42,
+        );
+        let opts = GeeOptions::ALL;
+        rt.embed(&g, &opts).unwrap(); // warm: compile + first run
+        let t0 = Instant::now();
+        let reps = 5;
+        for _ in 0..reps {
+            std::hint::black_box(rt.embed(&g, &opts).unwrap());
+        }
+        let per = t0.elapsed().as_secs_f64() / reps as f64;
+        let native = {
+            let t = Instant::now();
+            for _ in 0..reps {
+                std::hint::black_box(Engine::SparseFast.embed(&g, &opts).unwrap());
+            }
+            t.elapsed().as_secs_f64() / reps as f64
+        };
+        println!(
+            "bucket {bucket}: graph n={n} e={} -> pjrt {:.4}s/embed, native {:.5}s ({}x)",
+            g.num_edges(),
+            per,
+            native,
+            (per / native.max(1e-9)) as u64
+        );
+    }
+}

@@ -1,0 +1,206 @@
+"""Faithful Python implementations of the paper's two systems, used to
+reproduce Tables 3-4 and Fig. 3 *at the paper's own abstraction level*.
+
+The paper's headline speedups (86x on SBM-10k, 2.5-4x on real data) come
+from replacing interpreted per-edge work and dense intermediates with
+scipy's C-backed sparse kernels. A compiled port (our rust engines) makes
+both sides fast and the gap collapses — so the paper-shape reproduction
+lives here, in Python, while rust reproduces the *system* and goes faster
+than both (EXPERIMENTS.md records all three).
+
+* ``gee_original`` — the original GEE (Shen & Priebe 2023) as published:
+  a Python loop over the edge list accumulating into a dense numpy Z,
+  with dense W and per-edge Laplacian scaling. Matches the reference
+  GraphEncoder.py structure.
+* ``gee_sparse_scipy`` — the paper's sparse GEE: every matrix in
+  scipy.sparse (DOK construction -> CSR compute), Table 1 verbatim.
+
+Both support the lap/diag/cor options and agree to 1e-10 (tested in
+python/tests/test_paper_bench.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import scipy.sparse as sp
+
+
+# --------------------------------------------------------------- original
+
+
+def gee_original(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    *,
+    lap: bool = False,
+    diag: bool = False,
+    cor: bool = False,
+) -> np.ndarray:
+    """Original GEE: per-edge Python loop, dense accumulators.
+
+    ``src``/``dst``/``w`` describe *undirected* edges (each once); labels
+    use -1 for unlabeled. This mirrors the published implementation's
+    structure: nk counts, per-vertex weight, one pass over the edge list.
+    """
+    n = labels.shape[0]
+    nk = np.zeros(k)
+    for y in labels:  # label counting loop, as in the reference code
+        if y >= 0:
+            nk[y] += 1
+    wv = np.zeros(n)
+    for i in range(n):
+        if labels[i] >= 0 and nk[labels[i]] > 0:
+            wv[i] = 1.0 / nk[labels[i]]
+
+    if lap:
+        deg = np.zeros(n)
+        for e in range(src.shape[0]):  # degree loop
+            a, b = src[e], dst[e]
+            deg[a] += w[e]
+            if a != b:
+                deg[b] += w[e]
+        if diag:
+            deg += 1.0
+        s = np.where(deg > 0, 1.0 / np.sqrt(np.where(deg > 0, deg, 1.0)), 0.0)
+
+    z = np.zeros((n, k))
+    for e in range(src.shape[0]):  # the main embedding loop
+        a, b, we = src[e], dst[e], w[e]
+        scale = (s[a] * s[b]) if lap else 1.0
+        yb = labels[b]
+        if yb >= 0:
+            z[a, yb] += we * scale * wv[b]
+        if a != b:
+            ya = labels[a]
+            if ya >= 0:
+                z[b, ya] += we * scale * wv[a]
+
+    if diag:
+        for i in range(n):  # self-loop augmentation loop
+            y = labels[i]
+            if y >= 0:
+                z[i, y] += (s[i] * s[i] if lap else 1.0) * wv[i]
+
+    if cor:
+        norms = np.linalg.norm(z, axis=1)
+        nz = norms > 0
+        z[nz] /= norms[nz, None]
+    return z
+
+
+# ----------------------------------------------------------------- sparse
+
+
+def build_weight_dok(labels: np.ndarray, k: int) -> sp.csr_matrix:
+    """The paper's W_s construction: DOK inserts, then CSR conversion."""
+    n = labels.shape[0]
+    nk = np.zeros(k)
+    valid = labels >= 0
+    np.add.at(nk, labels[valid], 1)
+    w = sp.dok_matrix((n, k))
+    for j in range(n):
+        y = labels[j]
+        if y >= 0 and nk[y] > 0:
+            w[j, y] = 1.0 / nk[y]
+    return w.tocsr()
+
+
+def gee_sparse_scipy(
+    src: np.ndarray,
+    dst: np.ndarray,
+    w: np.ndarray,
+    labels: np.ndarray,
+    k: int,
+    *,
+    lap: bool = False,
+    diag: bool = False,
+    cor: bool = False,
+) -> np.ndarray:
+    """Sparse GEE per Table 1: CSR adjacency, diagonal CSR I_s/D_s."""
+    n = labels.shape[0]
+    # symmetrize the undirected edge list into CSR A_s
+    loops = src == dst
+    rows = np.concatenate([src, dst[~loops]])
+    cols = np.concatenate([dst, src[~loops]])
+    vals = np.concatenate([w, w[~loops]])
+    a = sp.csr_matrix((vals, (rows, cols)), shape=(n, n))
+    if diag:
+        a = a + sp.identity(n, format="csr")
+    if lap:
+        deg = np.asarray(a.sum(axis=1)).ravel()
+        s = np.where(deg > 0, 1.0 / np.sqrt(np.where(deg > 0, deg, 1.0)), 0.0)
+        d_half = sp.diags(s).tocsr()
+        a = d_half @ a @ d_half
+    ws = build_weight_dok(labels, k)
+    z = a @ ws  # CSR x CSR
+    z = np.asarray(z.todense())
+    if cor:
+        norms = np.linalg.norm(z, axis=1)
+        nz = norms > 0
+        z[nz] /= norms[nz, None]
+    return z
+
+
+# ------------------------------------------------------------- generators
+
+
+def sbm_paper(n: int, seed: int):
+    """The paper's SBM (classes [.2,.3,.5], within .13, between .10),
+    returned as an undirected edge list + labels."""
+    rng = np.random.default_rng(seed)
+    labels = rng.choice(3, size=n, p=[0.2, 0.3, 0.5]).astype(np.int64)
+    src_all, dst_all = [], []
+    order = np.argsort(labels, kind="stable")
+    groups = [order[labels[order] == c] for c in range(3)]
+    for a in range(3):
+        for b in range(a, 3):
+            p = 0.13 if a == b else 0.10
+            ga, gb = groups[a], groups[b]
+            if a == b:
+                # sample upper triangle via binomial counts per row block
+                m = len(ga)
+                if m < 2:
+                    continue
+                mask = rng.random((m, m)) < p
+                iu = np.triu_indices(m, k=1)
+                sel = mask[iu]
+                src_all.append(ga[iu[0][sel]])
+                dst_all.append(ga[iu[1][sel]])
+            else:
+                mask = rng.random((len(ga), len(gb))) < p
+                ii, jj = np.nonzero(mask)
+                src_all.append(ga[ii])
+                dst_all.append(gb[jj])
+    src = np.concatenate(src_all)
+    dst = np.concatenate(dst_all)
+    w = np.ones(src.shape[0])
+    return src.astype(np.int64), dst.astype(np.int64), w, labels
+
+
+def load_edge_files(stem: str):
+    """Load `<stem>.edges` / `<stem>.labels` written by `gee generate`."""
+    src, dst, w = [], [], []
+    with open(stem + ".edges") as f:
+        for line in f:
+            t = line.strip()
+            if not t or t[0] in "#%":
+                continue
+            parts = t.replace(",", " ").split()
+            src.append(int(parts[0]))
+            dst.append(int(parts[1]))
+            w.append(float(parts[2]) if len(parts) > 2 else 1.0)
+    labels = []
+    with open(stem + ".labels") as f:
+        for line in f:
+            t = line.strip()
+            if t and t[0] not in "#%":
+                labels.append(int(t))
+    return (
+        np.asarray(src, dtype=np.int64),
+        np.asarray(dst, dtype=np.int64),
+        np.asarray(w),
+        np.asarray(labels, dtype=np.int64),
+    )

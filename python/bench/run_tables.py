@@ -1,0 +1,119 @@
+"""Regenerate the paper's evaluation — Fig. 3 and Tables 3-4 — with the
+paper's own technology (Python: loop-based original GEE vs scipy sparse
+GEE). This is where the published speedup *shape* reproduces; the rust
+benches cover the compiled port.
+
+Usage (from python/):
+    python -m bench.run_tables fig3   [--sizes 100,1000,3000,5000,10000] [--reps 3]
+    python -m bench.run_tables table3 [--twins-dir ../twins] [--max-edges N]
+    python -m bench.run_tables table4 ...
+
+Tables need the dataset twins exported first:
+    for d in Citeseer Cora proteins-all PubMed CL-100K-1d8-L9 [CL-100K-1d8-L5]:
+        target/release/gee generate --dataset $d --out twins/$d
+(the Makefile target `twins` does this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+import numpy as np
+
+from .paper_gee import gee_original, gee_sparse_scipy, load_edge_files, sbm_paper
+
+OPTION_GRID_T3 = [(True, d, c) for d in (True, False) for c in (True, False)]
+OPTION_GRID_T4 = [(False, d, c) for d in (True, False) for c in (True, False)]
+
+TWINS = [
+    "Citeseer",
+    "Cora",
+    "proteins-all",
+    "PubMed",
+    "CL-100K-1d8-L9",
+    "CL-100K-1d8-L5",
+]
+
+
+def timed(fn, reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_fig3(sizes, reps):
+    print("Fig 3 (Python) — GEE vs sparse GEE, SBM, Lap=T Diag=T Cor=T")
+    print(f"{'nodes':>8} {'edges':>10} {'GEE (s)':>10} {'sparse (s)':>11} {'speedup':>8}")
+    for n in sizes:
+        src, dst, w, labels = sbm_paper(n, seed=7)
+        r = 1 if n >= 5000 else reps
+        t_gee = timed(
+            lambda: gee_original(src, dst, w, labels, 3, lap=True, diag=True, cor=True), r
+        )
+        t_sparse = timed(
+            lambda: gee_sparse_scipy(src, dst, w, labels, 3, lap=True, diag=True, cor=True),
+            reps,
+        )
+        print(
+            f"{n:>8} {src.shape[0]:>10} {t_gee:>10.3f} {t_sparse:>11.3f} "
+            f"{t_gee / max(t_sparse, 1e-9):>7.1f}x"
+        )
+
+
+def run_table(grid, table_no, twins_dir, max_edges, reps):
+    print(f"Table {table_no} (Python) — operation time (s), twins from {twins_dir}")
+    header = "  ".join(
+        f"L{'T' if l else 'F'},D{'T' if d else 'F'},C{'T' if c else 'F'}"
+        + "  [GEE | sparse]"
+        for l, d, c in grid
+    )
+    print(f"{'dataset':>16}  {header}")
+    for name in TWINS:
+        stem = os.path.join(twins_dir, name)
+        if not os.path.exists(stem + ".edges"):
+            print(f"{name:>16}  (twin not exported; run `make twins`)")
+            continue
+        src, dst, w, labels = load_edge_files(stem)
+        if src.shape[0] > max_edges:
+            print(f"{name:>16}  (skipped: {src.shape[0]} edges > --max-edges)")
+            continue
+        k = int(labels.max()) + 1
+        cells = []
+        for lap, diag, cor in grid:
+            t_gee = timed(
+                lambda: gee_original(src, dst, w, labels, k, lap=lap, diag=diag, cor=cor),
+                reps,
+            )
+            t_sp = timed(
+                lambda: gee_sparse_scipy(src, dst, w, labels, k, lap=lap, diag=diag, cor=cor),
+                reps,
+            )
+            cells.append(f"[{t_gee:8.3f} | {t_sp:7.3f}]")
+        print(f"{name:>16}  " + "  ".join(cells))
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("which", choices=["fig3", "table3", "table4"])
+    ap.add_argument("--sizes", default="100,1000,3000,5000,10000")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--twins-dir", default="../twins")
+    ap.add_argument("--max-edges", type=int, default=10**9)
+    args = ap.parse_args()
+    if args.which == "fig3":
+        run_fig3([int(s) for s in args.sizes.split(",")], args.reps)
+    elif args.which == "table3":
+        run_table(OPTION_GRID_T3, 3, args.twins_dir, args.max_edges, args.reps)
+    else:
+        run_table(OPTION_GRID_T4, 4, args.twins_dir, args.max_edges, args.reps)
+
+
+if __name__ == "__main__":
+    main()
+    sys.stdout.flush()

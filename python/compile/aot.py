@@ -1,0 +1,127 @@
+"""AOT compile path: lower every GEE variant to HLO text + manifest.
+
+Emits HLO *text*, never ``.serialize()``: jax >= 0.5 writes HloModuleProto
+with 64-bit instruction ids that the xla crate's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+One artifact per (size bucket × option combo).  Size buckets fix the padded
+(N, E, K) — PJRT executables are shape-specialized, so the rust runtime
+picks the smallest bucket that fits a request and pads per the contract in
+model.py.  ``artifacts/manifest.json`` records every artifact with its
+shapes, flags and tile plan so the rust side never hardcodes names.
+
+Run as:  cd python && python -m compile.aot --out-dir ../artifacts
+The Makefile invokes this once; python never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import itertools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.gee_pallas import tile_plan, vmem_footprint_bytes
+from .model import gee_forward
+
+# (name, N, E, K): padded sizes per bucket.  E counts *directed* edges
+# (an undirected edge occupies two slots).  K is padded class count.
+BUCKETS = [
+    ("s", 256, 2_048, 8),
+    ("m", 2_048, 16_384, 8),
+    ("l", 8_192, 131_072, 16),
+]
+
+FLAG_NAMES = ("lap", "diag", "cor")
+
+
+def variant_name(bucket: str, lap: bool, diag: bool, cor: bool) -> str:
+    flags = "".join(
+        c if on else "-" for c, on in zip("ldc", (lap, diag, cor))
+    )
+    return f"gee_{bucket}_{flags}"
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the interchange format)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(n: int, e: int, k: int, lap: bool, diag: bool, cor: bool):
+    fn = functools.partial(gee_forward, k=k, lap=lap, diag=diag, cor=cor)
+    # Return a 1-tuple: the rust side unwraps with to_tuple1().
+    wrapped = lambda src, dst, w, labels: (fn(src, dst, w, labels),)
+    specs = (
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((e,), jnp.int32),
+        jax.ShapeDtypeStruct((e,), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+    )
+    return jax.jit(wrapped).lower(*specs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--buckets",
+        default=",".join(b[0] for b in BUCKETS),
+        help="comma-separated bucket names to build",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.buckets.split(","))
+
+    manifest = {"format": "hlo-text", "variants": []}
+    for (bucket, n, e, k), (lap, diag, cor) in itertools.product(
+        [b for b in BUCKETS if b[0] in wanted],
+        itertools.product([False, True], repeat=3),
+    ):
+        name = variant_name(bucket, lap, diag, cor)
+        t0 = time.time()
+        lowered = lower_variant(n, e, k, lap, diag, cor)
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, path), "w") as f:
+            f.write(text)
+        bn, te = tile_plan(n, e, k)
+        manifest["variants"].append(
+            {
+                "name": name,
+                "file": path,
+                "bucket": bucket,
+                "n": n,
+                "e": e,
+                "k": k,
+                "lap": lap,
+                "diag": diag,
+                "cor": cor,
+                "block_n": bn,
+                "tile_e": te,
+                "vmem_bytes": vmem_footprint_bytes(bn, te, k),
+                "input_order": "sorted-by-src-preferred",
+            }
+        )
+        print(
+            f"{name}: n={n} e={e} k={k} -> {len(text) / 1e3:.0f} kB "
+            f"in {time.time() - t0:.1f}s"
+        )
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {len(manifest['variants'])} variants to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

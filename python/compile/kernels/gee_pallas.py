@@ -1,0 +1,170 @@
+"""L1 Pallas kernel: the GEE aggregation hot spot, MXU-shaped.
+
+The computation is the scatter-add at the heart of ``Z = A @ W``:
+
+    Z[src[e], :] += contrib[e, :]        for every edge e
+
+where ``contrib[e] = scale(e) * W[dst[e]]`` is precomputed at L2 (an XLA
+gather).  Scatter is hostile to the TPU MXU, so the kernel re-expresses it
+as a matmul — the paper's "never touch zeros" insight translated from CSR
+row loops to a systolic-array-friendly schedule:
+
+    for each edge tile T_e (grid axis 1, innermost):
+        onehot[t, n] = (src[t] == n_block_base + n)      # built in VMEM
+        Z_block    += onehotᵀ @ contrib_tile             # (Nb×Te)·(Te×K)
+
+Grid = (num_node_blocks, num_edge_tiles).  The Z block (Nb × K, K small)
+stays VMEM-resident across all edge tiles of one node block; edge tiles
+stream HBM→VMEM via BlockSpec — this is the threadblock→BlockSpec
+translation called out in DESIGN.md §Hardware-Adaptation.
+
+Edges whose src falls outside the current node block produce an all-zero
+one-hot row and contribute nothing, so correctness never depends on how
+edges are ordered; *performance* on real hardware does (sorting edges by
+src makes most (block, tile) pairs empty), which the AOT manifest records
+as the preferred input order.
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls.  Interpret mode lowers the kernel to plain HLO (a fori-loop
+of dynamic slices + dots), which the rust runtime compiles natively.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lane width the contraction dim should be padded to on a real TPU; in
+# interpret mode this only affects shapes, not correctness.
+MIN_K_PAD = 8
+
+
+def _gee_scatter_kernel(src_ref, contrib_ref, z_ref, *, block_n: int, tile_e: int):
+    """One (node_block, edge_tile) grid step: Z_block += onehotᵀ @ contrib.
+
+    §Perf iteration 2 (see EXPERIMENTS.md §Perf/L1): a (block, tile) pair
+    whose row ranges are disjoint contributes nothing, so the `pl.when`
+    guard below skips the one-hot build and the MXU contraction for those
+    cells. The tile's row range is its min/max src (O(T) to compute, vs
+    the O(T·Nb) it saves) — correct for any edge order, but the *skip*
+    only pays when edges arrive sorted by src, the order the rust runtime
+    feeds (artifact.rs): then each tile overlaps 1-2 node blocks and the
+    active work drops from O(N_p·E_p) to O(E_p·block_n).
+    """
+    i = pl.program_id(0)  # node block
+    j = pl.program_id(1)  # edge tile (innermost: Z block stays resident)
+
+    @pl.when(j == 0)
+    def _init():
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    base = i * block_n
+    src = src_ref[...]
+    overlaps = (jnp.max(src) >= base) & (jnp.min(src) < base + block_n)
+
+    @pl.when(overlaps)
+    def _accumulate():
+        local = src - base  # [Te] in-block row index (or out of range)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (tile_e, block_n), 1)
+        onehot = (local[:, None] == cols).astype(jnp.float32)  # [Te, Nb]
+        z_ref[...] += jnp.dot(
+            onehot.T, contrib_ref[...], preferred_element_type=jnp.float32
+        )
+
+
+def pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+def gee_scatter_matmul(
+    src: jnp.ndarray,
+    contrib: jnp.ndarray,
+    n: int,
+    *,
+    block_n: int = 1024,
+    tile_e: int = 256,
+) -> jnp.ndarray:
+    """Z[n, k] = segment-sum of contrib rows by src, via the Pallas kernel.
+
+    ``src`` int32[E]; ``contrib`` float32[E, K].  Padded edges must carry
+    all-zero contrib rows (their src value is then irrelevant).
+    """
+    e, k = contrib.shape
+    block_n = min(block_n, n)
+    tile_e = min(tile_e, max(e, 1))
+
+    # Pad every axis to its tile multiple; zero contrib rows are exact no-ops.
+    src_p = pad_to(src, 0, tile_e)
+    contrib_p = pad_to(pad_to(contrib, 0, tile_e), 1, MIN_K_PAD)
+    e_p, k_p = contrib_p.shape
+    n_p = ((n + block_n - 1) // block_n) * block_n
+
+    grid = (n_p // block_n, e_p // tile_e)
+    kernel = functools.partial(_gee_scatter_kernel, block_n=block_n, tile_e=tile_e)
+    z = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_e,), lambda i, j: (j,)),
+            pl.BlockSpec((tile_e, k_p), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k_p), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_p, k_p), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic; see module docstring
+    )(src_p, contrib_p)
+    return z[:n, :k]
+
+
+def vmem_footprint_bytes(block_n: int, tile_e: int, k: int) -> int:
+    """Estimated VMEM residency of one grid step on a real TPU (f32).
+
+    onehot (Te×Nb) + contrib tile (Te×K) + Z block (Nb×K) + src tile (Te).
+    Used by DESIGN.md §Perf to pick block shapes against the ~16 MiB/core
+    VMEM budget; interpret-mode wallclock is NOT a TPU proxy.
+    """
+    k_p = max(k, MIN_K_PAD)
+    return 4 * (tile_e * block_n + tile_e * k_p + block_n * k_p + tile_e)
+
+
+def mxu_utilization_estimate(
+    block_n: int, tile_e: int, k: int, avg_edges_per_block_tile: float
+) -> float:
+    """Fraction of MXU MACs doing useful work in one grid step.
+
+    The (Nb×Te)·(Te×K) contraction issues Nb*Te*K MACs; only the MACs whose
+    one-hot entry is 1 are useful: avg_edges_per_block_tile * K.  With edges
+    sorted by src, avg_edges ≈ tile_e for the diagonal (block, tile) pairs
+    and ~0 elsewhere, giving util ≈ tile_e/(block_n) per useful step — the
+    motivation for small node blocks on real hardware.
+    """
+    useful = avg_edges_per_block_tile * k
+    total = block_n * tile_e * max(k, MIN_K_PAD)
+    return useful / total
+
+
+def tile_plan(n: int, e: int, k: int) -> Tuple[int, int]:
+    """Pick (block_n, tile_e) for a size bucket.
+
+    §Perf iteration 3: with the disjoint-cell skip in place, *active*
+    compute scales as O(E·block_n) — so small node blocks win as long as
+    the per-cell guard overhead stays amortized. block_n=512 balances active compute against per-cell slice
+    overhead (cells scale as (N/bn)·(E/te)) (EXPERIMENTS.md §Perf/L1).
+    Edge tiles then grow to fill the VMEM budget (onehot ≲ 1 MiB,
+    whole step ≲ 4 MiB).
+    """
+    block_n = min(n, 512)
+    tile_e = 256
+    while vmem_footprint_bytes(block_n, tile_e * 2, k) <= 4 * 1024 * 1024 and tile_e < e:
+        tile_e *= 2
+    return block_n, min(tile_e, 1024)

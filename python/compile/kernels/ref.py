@@ -1,0 +1,130 @@
+"""Pure-jnp correctness oracles for GEE.
+
+Two independent reference implementations:
+
+* ``gee_dense_ref`` — the textbook formulation: materialize the dense
+  adjacency matrix, apply the option transforms exactly as written in the
+  paper (Table 1), and compute ``Z = A @ W``.  This is the ground truth the
+  Pallas kernel and the L2 model are validated against.
+* ``gee_segment_ref`` — an edge-list formulation built on
+  ``jax.ops.segment_sum`` (no dense adjacency).  Used as a second oracle so
+  a bug shared by the dense path and the model is unlikely to hide.
+
+Conventions (shared with model.py / the rust runtime):
+
+* The edge list is *directed*: an undirected graph must be passed with both
+  ``(i, j)`` and ``(j, i)`` present.  Padded edges carry weight 0 and are
+  exact no-ops in every variant.
+* ``labels`` are int32 in ``[0, K)``; ``-1`` marks an unlabeled / padding
+  vertex.  Unlabeled vertices get an all-zero row in W (they receive an
+  embedding but contribute to nobody's, matching the original GEE).
+* Degrees are row sums of the (possibly diagonal-augmented) adjacency.
+* All divisions are "safe": ``x / 0 -> 0``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import ops as jops
+
+
+def safe_recip_sqrt(x: jnp.ndarray) -> jnp.ndarray:
+    """1/sqrt(x) with 0 -> 0 (zero-degree vertices stay zero)."""
+    return jnp.where(x > 0, 1.0 / jnp.sqrt(jnp.where(x > 0, x, 1.0)), 0.0)
+
+
+def safe_recip(x: jnp.ndarray) -> jnp.ndarray:
+    """1/x with 0 -> 0."""
+    return jnp.where(x > 0, 1.0 / jnp.where(x > 0, x, 1.0), 0.0)
+
+
+def class_weight_matrix(labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    """The paper's W: one-hot(labels) with 1 replaced by 1/n_k.
+
+    Rows of unlabeled vertices (label < 0) are all zero; classes with zero
+    members produce an all-zero column.
+    """
+    valid = labels >= 0
+    clamped = jnp.where(valid, labels, 0)
+    onehot = (clamped[:, None] == jnp.arange(k)[None, :]).astype(jnp.float32)
+    onehot = onehot * valid[:, None].astype(jnp.float32)
+    n_k = onehot.sum(axis=0)  # [K] class sizes
+    return onehot * safe_recip(n_k)[None, :]
+
+
+def dense_adjacency(
+    src: jnp.ndarray, dst: jnp.ndarray, w: jnp.ndarray, n: int
+) -> jnp.ndarray:
+    a = jnp.zeros((n, n), dtype=jnp.float32)
+    return a.at[src, dst].add(w.astype(jnp.float32))
+
+
+def gee_dense_ref(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    w: jnp.ndarray,
+    labels: jnp.ndarray,
+    k: int,
+    *,
+    lap: bool = False,
+    diag: bool = False,
+    cor: bool = False,
+) -> jnp.ndarray:
+    """Ground-truth GEE via a dense adjacency matrix (Table 1 verbatim)."""
+    n = labels.shape[0]
+    a = dense_adjacency(src, dst, w, n)
+    if diag:
+        a = a + jnp.eye(n, dtype=jnp.float32)
+    if lap:
+        d = a.sum(axis=1)
+        s = safe_recip_sqrt(d)
+        a = s[:, None] * a * s[None, :]
+    wmat = class_weight_matrix(labels, k)
+    z = a @ wmat
+    if cor:
+        norms = jnp.linalg.norm(z, axis=1)
+        z = z * safe_recip(norms)[:, None]
+    return z
+
+
+def gee_segment_ref(
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    w: jnp.ndarray,
+    labels: jnp.ndarray,
+    k: int,
+    *,
+    lap: bool = False,
+    diag: bool = False,
+    cor: bool = False,
+) -> jnp.ndarray:
+    """Second oracle: edge-list GEE via segment_sum, no dense adjacency.
+
+    Algebra used for the option combos (matches gee_dense_ref exactly):
+
+    * diag adds a weight-1 self loop to every vertex; its contribution is
+      handled analytically as ``diag_scale * W`` instead of appending edges.
+    * lap scales edge (i, j) by ``1/sqrt(d_i * d_j)`` where d includes the
+      self loop when diag is on; the self-loop term is then scaled ``1/d_i``.
+    """
+    n = labels.shape[0]
+    wmat = class_weight_matrix(labels, k)
+    w = w.astype(jnp.float32)
+    deg = jops.segment_sum(w, src, num_segments=n)
+    if diag:
+        deg = deg + 1.0
+    if lap:
+        s = safe_recip_sqrt(deg)
+        edge_scale = w * s[src] * s[dst]
+        self_scale = safe_recip(deg) if diag else None
+    else:
+        edge_scale = w
+        self_scale = jnp.ones((n,), dtype=jnp.float32) if diag else None
+    contrib = edge_scale[:, None] * wmat[dst]  # [E, K]
+    z = jops.segment_sum(contrib, src, num_segments=n)
+    if self_scale is not None:
+        z = z + self_scale[:, None] * wmat
+    if cor:
+        norms = jnp.linalg.norm(z, axis=1)
+        z = z * safe_recip(norms)[:, None]
+    return z

@@ -1,0 +1,59 @@
+"""Loader / generator plumbing for the python bench tier."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from bench.paper_gee import gee_original, gee_sparse_scipy, load_edge_files
+from bench.run_tables import OPTION_GRID_T3, OPTION_GRID_T4, TWINS, timed
+
+
+def test_option_grids_match_paper_layout():
+    assert len(OPTION_GRID_T3) == 4
+    assert all(l for (l, _, _) in OPTION_GRID_T3)
+    assert len(OPTION_GRID_T4) == 4
+    assert not any(l for (l, _, _) in OPTION_GRID_T4)
+    # column order: DT,CT / DT,CF / DF,CT / DF,CF
+    assert OPTION_GRID_T3[0] == (True, True, True)
+    assert OPTION_GRID_T3[3] == (True, False, False)
+
+
+def test_twins_list_matches_table2():
+    assert TWINS == [
+        "Citeseer",
+        "Cora",
+        "proteins-all",
+        "PubMed",
+        "CL-100K-1d8-L9",
+        "CL-100K-1d8-L5",
+    ]
+
+
+def test_load_edge_files_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        stem = os.path.join(d, "toy")
+        with open(stem + ".edges", "w") as f:
+            f.write("# comment\n0 1\n1 2 0.5\n")
+        with open(stem + ".labels", "w") as f:
+            f.write("0\n1\n-1\n")
+        src, dst, w, labels = load_edge_files(stem)
+        assert src.tolist() == [0, 1]
+        assert dst.tolist() == [1, 2]
+        assert w.tolist() == [1.0, 0.5]
+        assert labels.tolist() == [0, 1, -1]
+        # and both paper impls run on it
+        z1 = gee_original(src, dst, w, labels, 2, lap=True, diag=True, cor=True)
+        z2 = gee_sparse_scipy(src, dst, w, labels, 2, lap=True, diag=True, cor=True)
+        np.testing.assert_allclose(z1, z2, atol=1e-12)
+
+
+def test_timed_returns_min_of_reps():
+    calls = []
+
+    def fn():
+        calls.append(1)
+
+    t = timed(fn, 3)
+    assert len(calls) == 3
+    assert t >= 0.0

@@ -1,0 +1,169 @@
+"""L2 model correctness: gee_forward vs both oracles across all options."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.ref import (
+    class_weight_matrix,
+    gee_dense_ref,
+    gee_segment_ref,
+)
+from compile.model import gee_forward
+
+ALL_COMBOS = list(itertools.product([False, True], repeat=3))
+
+
+def rand_graph(rng, n, e, k, unlabeled=0, zero_edges=0, symmetric=False):
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32) + 0.1
+    if symmetric:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        w = np.concatenate([w, w])
+    if zero_edges:
+        w[-zero_edges:] = 0.0
+    labels = rng.integers(0, k, n).astype(np.int32)
+    if unlabeled:
+        labels[rng.choice(n, unlabeled, replace=False)] = -1
+    return src, dst, w, labels
+
+
+@pytest.mark.parametrize("lap,diag,cor", ALL_COMBOS)
+def test_model_matches_dense_ref(lap, diag, cor):
+    rng = np.random.default_rng(7)
+    src, dst, w, labels = rand_graph(rng, 70, 350, 5, unlabeled=4, zero_edges=10)
+    zd = gee_dense_ref(src, dst, w, labels, 5, lap=lap, diag=diag, cor=cor)
+    zm = gee_forward(
+        src, dst, w, labels, k=5, lap=lap, diag=diag, cor=cor, block_n=32, tile_e=64
+    )
+    np.testing.assert_allclose(np.asarray(zm), np.asarray(zd), rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("lap,diag,cor", ALL_COMBOS)
+def test_segment_matches_dense_ref(lap, diag, cor):
+    rng = np.random.default_rng(8)
+    src, dst, w, labels = rand_graph(rng, 50, 240, 4, symmetric=True)
+    zd = gee_dense_ref(src, dst, w, labels, 4, lap=lap, diag=diag, cor=cor)
+    zs = gee_segment_ref(src, dst, w, labels, 4, lap=lap, diag=diag, cor=cor)
+    np.testing.assert_allclose(np.asarray(zs), np.asarray(zd), rtol=1e-4, atol=1e-5)
+
+
+def test_pallas_vs_segment_path_identical_pipeline():
+    """use_pallas only swaps the scatter engine; everything else identical."""
+    rng = np.random.default_rng(9)
+    src, dst, w, labels = rand_graph(rng, 80, 400, 6)
+    for lap, diag, cor in ALL_COMBOS:
+        zp = gee_forward(src, dst, w, labels, k=6, lap=lap, diag=diag, cor=cor, use_pallas=True)
+        zs = gee_forward(src, dst, w, labels, k=6, lap=lap, diag=diag, cor=cor, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(zp), np.asarray(zs), rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------ option identities
+
+
+def test_diag_equals_explicit_self_loops():
+    rng = np.random.default_rng(10)
+    src, dst, w, labels = rand_graph(rng, 40, 150, 3)
+    n = 40
+    z_diag = gee_forward(src, dst, w, labels, k=3, diag=True)
+    # explicit weight-1 self loops, diag off
+    src2 = np.concatenate([src, np.arange(n, dtype=np.int32)])
+    dst2 = np.concatenate([dst, np.arange(n, dtype=np.int32)])
+    w2 = np.concatenate([w, np.ones(n, dtype=np.float32)])
+    z_loops = gee_forward(src2, dst2, w2, labels, k=3, diag=False)
+    np.testing.assert_allclose(np.asarray(z_diag), np.asarray(z_loops), rtol=1e-4, atol=1e-6)
+
+
+def test_cor_rows_unit_norm():
+    rng = np.random.default_rng(11)
+    src, dst, w, labels = rand_graph(rng, 60, 300, 4, symmetric=True)
+    z = np.asarray(gee_forward(src, dst, w, labels, k=4, cor=True))
+    norms = np.linalg.norm(z, axis=1)
+    nonzero = norms > 1e-8
+    np.testing.assert_allclose(norms[nonzero], 1.0, rtol=1e-5)
+
+
+def test_lap_symmetric_spectral_bound():
+    """Normalized-adjacency rows of D^-1/2 A D^-1/2 W stay bounded by 1."""
+    rng = np.random.default_rng(12)
+    src, dst, w, labels = rand_graph(rng, 50, 200, 4, symmetric=True)
+    z = np.asarray(gee_forward(src, dst, w, labels, k=4, lap=True))
+    # each entry is a convex-ish combination of 1/n_k weights; crude bound
+    assert np.all(np.isfinite(z))
+    assert np.abs(z).max() <= 1.0 + 1e-5
+
+
+def test_weight_matrix_columns_sum_to_one():
+    labels = np.array([0, 0, 1, 2, 2, 2, -1], dtype=np.int32)
+    wmat = np.asarray(class_weight_matrix(jnp.asarray(labels), 4))
+    np.testing.assert_allclose(wmat.sum(axis=0)[:3], 1.0, rtol=1e-6)
+    assert wmat.sum(axis=0)[3] == 0.0  # empty class
+    assert np.all(wmat[-1] == 0.0)  # unlabeled row
+
+
+def test_unlabeled_vertex_still_gets_embedding():
+    src = np.array([5, 0], dtype=np.int32)
+    dst = np.array([0, 5], dtype=np.int32)
+    w = np.array([1.0, 1.0], dtype=np.float32)
+    labels = np.array([0, 0, 1, 1, 1, -1], dtype=np.int32)
+    z = np.asarray(gee_forward(src, dst, w, labels, k=2))
+    assert z[5, 0] > 0  # unlabeled vertex 5 sees its class-0 neighbor
+    # but contributes nothing: vertex 0's row only counts labeled neighbors
+    assert z[0, 1] == 0.0
+
+
+def test_row_sums_equal_degree_fraction():
+    """Plain GEE: Z_i sums to sum_j e_ij / n_{y_j} — check via all-one-class."""
+    rng = np.random.default_rng(13)
+    n, e = 30, 120
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    w = rng.random(e).astype(np.float32)
+    labels = np.zeros(n, dtype=np.int32)  # one class of size n
+    z = np.asarray(gee_forward(src, dst, w, labels, k=1))
+    deg = np.zeros(n, dtype=np.float64)
+    np.add.at(deg, src, w.astype(np.float64))
+    np.testing.assert_allclose(z[:, 0], deg / n, rtol=1e-4, atol=1e-6)
+
+
+# ------------------------------------------------------ hypothesis sweep
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(min_value=2, max_value=60),
+    e=st.integers(min_value=1, max_value=250),
+    k=st.integers(min_value=1, max_value=9),
+    lap=st.booleans(),
+    diag=st.booleans(),
+    cor=st.booleans(),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_model_vs_dense(n, e, k, lap, diag, cor, seed):
+    rng = np.random.default_rng(seed)
+    src, dst, w, labels = rand_graph(rng, n, e, k)
+    zd = gee_dense_ref(src, dst, w, labels, k, lap=lap, diag=diag, cor=cor)
+    zm = gee_forward(src, dst, w, labels, k=k, lap=lap, diag=diag, cor=cor)
+    np.testing.assert_allclose(np.asarray(zm), np.asarray(zd), rtol=1e-3, atol=1e-4)
+
+
+def test_padding_invariance_full_contract():
+    """Padding contract used by the rust runtime: extra zero-weight edges and
+    label=-1 vertices leave the unpadded block of Z unchanged."""
+    rng = np.random.default_rng(14)
+    src, dst, w, labels = rand_graph(rng, 45, 180, 5, symmetric=True)
+    z = np.asarray(gee_forward(src, dst, w, labels, k=5, lap=True, diag=True, cor=True))
+    # pad to n=64, e=512
+    pad_e = 512 - len(src)
+    src_p = np.concatenate([src, np.zeros(pad_e, dtype=np.int32)])
+    dst_p = np.concatenate([dst, np.zeros(pad_e, dtype=np.int32)])
+    w_p = np.concatenate([w, np.zeros(pad_e, dtype=np.float32)])
+    labels_p = np.concatenate([labels, np.full(64 - 45, -1, dtype=np.int32)])
+    z_p = np.asarray(gee_forward(src_p, dst_p, w_p, labels_p, k=5, lap=True, diag=True, cor=True))
+    np.testing.assert_allclose(z_p[:45], z, rtol=1e-4, atol=1e-6)
+    assert np.all(z_p[45:] == 0.0)

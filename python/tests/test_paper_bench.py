@@ -1,0 +1,60 @@
+"""The two Python paper implementations must agree with each other and
+with the jax dense oracle, across all 8 option combos."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from bench.paper_gee import gee_original, gee_sparse_scipy, sbm_paper
+from compile.kernels.ref import gee_dense_ref
+
+ALL = list(itertools.product([False, True], repeat=3))
+
+
+def undirected_random(rng, n, m, k):
+    src = rng.integers(0, n, m).astype(np.int64)
+    dst = rng.integers(0, n, m).astype(np.int64)
+    w = rng.random(m) + 0.1
+    labels = rng.integers(0, k, n).astype(np.int64)
+    labels[rng.choice(n, max(1, n // 10), replace=False)] = -1
+    return src, dst, w, labels
+
+
+@pytest.mark.parametrize("lap,diag,cor", ALL)
+def test_original_vs_sparse_scipy(lap, diag, cor):
+    rng = np.random.default_rng(1)
+    src, dst, w, labels = undirected_random(rng, 60, 200, 4)
+    a = gee_original(src, dst, w, labels, 4, lap=lap, diag=diag, cor=cor)
+    b = gee_sparse_scipy(src, dst, w, labels, 4, lap=lap, diag=diag, cor=cor)
+    np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12)
+
+
+@pytest.mark.parametrize("lap,diag,cor", [(False,) * 3, (True,) * 3, (True, False, True)])
+def test_python_impls_vs_jax_oracle(lap, diag, cor):
+    """Cross-check against the (directed-edge-list) jax oracle: expand the
+    undirected list into both directions first."""
+    rng = np.random.default_rng(2)
+    src, dst, w, labels = undirected_random(rng, 40, 120, 3)
+    a = gee_original(src, dst, w, labels, 3, lap=lap, diag=diag, cor=cor)
+    loops = src == dst
+    dsrc = np.concatenate([src, dst[~loops]]).astype(np.int32)
+    ddst = np.concatenate([dst, src[~loops]]).astype(np.int32)
+    dw = np.concatenate([w, w[~loops]]).astype(np.float32)
+    z = gee_dense_ref(dsrc, ddst, dw, labels.astype(np.int32), 3, lap=lap, diag=diag, cor=cor)
+    np.testing.assert_allclose(a, np.asarray(z), rtol=1e-4, atol=1e-5)
+
+
+def test_sbm_paper_generator_stats():
+    src, dst, w, labels = sbm_paper(1500, seed=3)
+    assert labels.shape == (1500,)
+    counts = np.bincount(labels, minlength=3)
+    fracs = counts / 1500
+    assert abs(fracs[0] - 0.2) < 0.05
+    assert abs(fracs[2] - 0.5) < 0.05
+    # expected edges ~ p-weighted pair counts
+    n_pairs = 1500 * 1499 / 2
+    d = src.shape[0] / n_pairs
+    assert 0.09 < d < 0.14  # between between- and within-block density
+    assert np.all(w == 1.0)
+    assert np.all(src != dst)

@@ -1,0 +1,135 @@
+//! Bench: ablations over the design choices DESIGN.md calls out.
+//!
+//! A. W construction: DOK→CSR (published pipeline) vs direct CSR emission
+//! B. SpMM engine: CSR×CSR (Gustavson, scipy's path) vs CSR×dense-K
+//! C. COO→CSR build: general (counting sort + per-row sort) vs presorted
+//! D. Storage: sparse pipeline bytes vs dense-Z (edge-list GEE) vs dense A
+//! E. Service batching: solo vs disjoint-union packing (native lane)
+
+use std::time::Duration;
+
+use gee_sparse::coordinator::batcher::BatchCapacity;
+use gee_sparse::coordinator::{EmbedRequest, EmbedService, Lane, ServiceConfig};
+use gee_sparse::gee::sparse_gee::{Construction, SparseGee, SpmmEngine};
+use gee_sparse::gee::edgelist_gee::EdgeListGee;
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::sparse::Csr;
+use gee_sparse::util::rng::Rng;
+use gee_sparse::util::timing::{bench_runs, secs, Stats};
+
+fn stats(reps: usize, f: impl FnMut() -> ()) -> Stats {
+    let mut f = f;
+    Stats::from_runs(&bench_runs(1, reps, || f()))
+}
+
+fn main() {
+    let quick = std::env::var("GEE_BENCH_QUICK").is_ok();
+    let n = if quick { 3_000 } else { 10_000 };
+    let reps = if quick { 2 } else { 5 };
+    let g = generate_sbm(&SbmParams::paper(n), 7);
+    println!(
+        "== bench ablation (SBM n={n}, edges={}, reps={reps}) ==\n",
+        g.num_edges()
+    );
+    let opts = GeeOptions::ALL;
+
+    // ---------------- A + B: construction × spmm grid
+    println!("A/B. sparse-GEE engine grid (Lap=T Diag=T Cor=T, median s):");
+    for construction in [Construction::DokThenCsr, Construction::DirectCsr] {
+        for spmm in [SpmmEngine::CsrCsr, SpmmEngine::CsrDense, SpmmEngine::Fused] {
+            let engine = SparseGee { construction, spmm };
+            let st = stats(reps, || {
+                std::hint::black_box(engine.embed(&g, &opts));
+            });
+            println!(
+                "  {:>12?} + {:>9?}: {}",
+                construction,
+                spmm,
+                secs(st.median)
+            );
+        }
+    }
+
+    // ---------------- A2: amortized repeated-embedding (the Tables 3-4
+    // workload: 8 option combos on one graph)
+    println!("\nA2. all 8 combos on one graph (total s):");
+    let combos = GeeOptions::table_order();
+    let st_solo = stats(reps.min(3), || {
+        for o in &combos {
+            std::hint::black_box(SparseGee::fast().embed(&g, o));
+        }
+    });
+    let st_prepared = stats(reps.min(3), || {
+        let p = SparseGee::prepare(&g);
+        for o in &combos {
+            std::hint::black_box(p.embed(o));
+        }
+    });
+    let st_edgelist = stats(reps.min(3), || {
+        for o in &combos {
+            std::hint::black_box(EdgeListGee.embed(&g, o));
+        }
+    });
+    println!("  fused, rebuild each time: {}", secs(st_solo.median));
+    println!("  prepared once + 8 embeds: {}", secs(st_prepared.median));
+    println!("  edge-list baseline (8x):  {}", secs(st_edgelist.median));
+
+    // ---------------- C: COO→CSR build paths
+    println!("\nC. COO→CSR conversion (adjacency of the same graph):");
+    let mut coo = g.adjacency();
+    let st_general = stats(reps, || {
+        std::hint::black_box(Csr::from_coo(&coo));
+    });
+    coo.sort_dedup();
+    let st_sorted = stats(reps, || {
+        std::hint::black_box(Csr::from_coo_sorted(&coo));
+    });
+    println!("  general (counting sort): {}", secs(st_general.median));
+    println!("  presorted single pass:   {}", secs(st_sorted.median));
+
+    // ---------------- D: storage accounting
+    println!("\nD. storage (bytes) for the Laplacian pipeline:");
+    let sparse_bytes = SparseGee::default().storage_bytes(&g, &opts);
+    let edgelist_bytes = EdgeListGee.workspace_bytes(&g) + g.num_edges() * 3 * 8;
+    let dense_bytes = g.n * g.n * 8;
+    println!("  sparse GEE (A_s + W_s + Z_s): {:>14}", sparse_bytes);
+    println!("  edge-list GEE (list + dense Z): {:>12}", edgelist_bytes);
+    println!("  dense adjacency alone:        {:>14}", dense_bytes);
+
+    // ---------------- E: batching on/off through the service
+    println!("\nE. service throughput, batching off vs on (400 small requests):");
+    for batching in [false, true] {
+        let svc = EmbedService::start(ServiceConfig {
+            lane: Lane::Native(Engine::SparseFast),
+            workers: 2,
+            batching,
+            batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
+            batch_linger: Duration::from_millis(2),
+            queue_depth: 1024,
+        });
+        let mut rng = Rng::new(99);
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..400)
+            .map(|i| {
+                let gn = 30 + rng.below(120);
+                let gg = generate_sbm(
+                    &SbmParams::fitted(gn, 3, gn * 3, 3.0, vec![0.2, 0.3, 0.5]),
+                    4_000 + i as u64,
+                );
+                svc.submit(EmbedRequest { graph: gg, options: GeeOptions::ALL }).unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = svc.shutdown();
+        println!(
+            "  batching={batching}: {:.2}s ({:.0} req/s, avg fill {:.2})",
+            wall.as_secs_f64(),
+            400.0 / wall.as_secs_f64(),
+            m.avg_batch_fill()
+        );
+    }
+}

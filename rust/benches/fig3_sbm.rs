@@ -1,0 +1,59 @@
+//! Bench: Fig. 3 — GEE vs sparse GEE runtime over the SBM size sweep
+//! (100 … 10,000 nodes, paper parameters, Lap = Diag = Cor = T).
+//!
+//! Regenerates the paper's two series plus our engine variants. Custom
+//! harness (the offline crate set has no criterion); medians over REPS
+//! runs after one warmup. `GEE_BENCH_QUICK=1` trims the sweep.
+
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::harness::{format_fig3, measure, run_fig3, FIG3_SIZES};
+use gee_sparse::util::timing::secs;
+
+fn main() {
+    let quick = std::env::var("GEE_BENCH_QUICK").is_ok();
+    let sizes: Vec<usize> = if quick {
+        vec![100, 1_000, 3_000]
+    } else {
+        FIG3_SIZES.to_vec()
+    };
+    let reps = if quick { 2 } else { 5 };
+
+    println!("== bench fig3_sbm (reps={reps}) ==");
+    let points = run_fig3(&sizes, reps, 7);
+    println!("{}", format_fig3(&points));
+
+    // extended series: the §Perf-tuned sparse engine and the dense strawman
+    println!("extended engines on the same graphs:");
+    println!(
+        "{:>8} {:>12} {:>12} {:>14}",
+        "nodes", "sparse-fast", "dense", "paper GEE/sparse"
+    );
+    let paper: &[(usize, f64, f64)] = &[
+        // (n, GEE s, sparse GEE s) read off the paper's Fig. 3 narrative:
+        // largest point quoted exactly (52.4 vs 0.6); others approximate
+        (10_000, 52.4, 0.6),
+    ];
+    let opts = GeeOptions::ALL;
+    for &n in &sizes {
+        let g = generate_sbm(&SbmParams::paper(n), 7);
+        let fast = measure(Engine::SparseFast, &g, &opts, 1, reps);
+        let dense = if n <= 5_000 {
+            secs(measure(Engine::Dense, &g, &opts, 0, reps.min(2)).median)
+        } else {
+            "OOM-budget".to_string()
+        };
+        let paper_note = paper
+            .iter()
+            .find(|(pn, _, _)| *pn == n)
+            .map(|(_, pg, ps)| format!("{pg}/{ps}s ({}x)", (pg / ps).round()))
+            .unwrap_or_default();
+        println!(
+            "{:>8} {:>12} {:>12} {:>14}",
+            n,
+            secs(fast.median),
+            dense,
+            paper_note
+        );
+    }
+}

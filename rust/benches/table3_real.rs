@@ -1,0 +1,21 @@
+//! Bench: Table 3 — GEE vs Sparse GEE on the real-dataset twins, the
+//! Laplacian-on half of the option grid (Lap = T × {Diag, Cor}).
+//!
+//! `GEE_BENCH_QUICK=1` skips the 10M-edge CL-100K-1d8-L5 twin (its
+//! generation alone is ~30 s).
+
+use gee_sparse::harness::{format_table, run_table};
+
+fn main() {
+    let quick = std::env::var("GEE_BENCH_QUICK").is_ok();
+    let max_edges = if quick { 500_000 } else { usize::MAX };
+    let reps = if quick { 2 } else { 3 };
+    println!("== bench table3_real (reps={reps}, Lap=T) ==");
+    let rows = run_table(true, reps, max_edges);
+    println!("{}", format_table(&rows, 3));
+    println!(
+        "paper reference (scipy, i5 laptop) for the largest twin, Lap=T Diag=T Cor=T:\n  \
+         CL-100K-1d8-L5: GEE 604.018 s, Sparse GEE 174.552 s (3.5x)\n  \
+         expectation here: same ordering (sparse wins), compiled-rust constants"
+    );
+}

@@ -1,0 +1,255 @@
+//! Dynamic batching by disjoint union — the coordinator's throughput
+//! lever for the PJRT lane.
+//!
+//! PJRT executables are shape-specialized: a request for a 60-vertex graph
+//! still pays for the full padded (N, E, K) bucket. The batcher packs many
+//! small graphs into ONE padded execution as a disjoint union:
+//!
+//! * vertices of graph i are shifted by a node offset;
+//! * labels of graph i are shifted by a class offset (classes of different
+//!   graphs never share a column, so each graph keeps its own `n_k`
+//!   normalization — this is what makes the union *exact*, not an
+//!   approximation);
+//! * no edges cross graphs, so degrees, Laplacian scaling, diagonal
+//!   augmentation and row normalization all act per-graph.
+//!
+//! `split` slices each member's Z block back out. Equality with
+//! per-graph embedding is tested for every option combo below and for the
+//! PJRT path in `rust/tests/coordinator_integration.rs`.
+
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// Capacity of one packed execution (mirrors an artifact bucket).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchCapacity {
+    pub max_nodes: usize,
+    pub max_directed_edges: usize,
+    pub max_classes: usize,
+    /// Cap on members per batch regardless of fit (latency control).
+    pub max_requests: usize,
+}
+
+impl BatchCapacity {
+    /// Capacity matching an artifact bucket (n, e, k).
+    pub fn from_bucket(n: usize, e: usize, k: usize) -> Self {
+        BatchCapacity { max_nodes: n, max_directed_edges: e, max_classes: k, max_requests: 64 }
+    }
+
+    /// Does a single graph fit at all?
+    pub fn admits(&self, g: &Graph) -> bool {
+        g.n <= self.max_nodes
+            && g.num_directed() <= self.max_directed_edges
+            && g.k <= self.max_classes
+    }
+}
+
+/// Placement of one member inside a packed batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub node_offset: usize,
+    pub class_offset: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+/// A packed batch: the union graph plus each member's placement.
+#[derive(Clone, Debug)]
+pub struct PackedBatch {
+    pub union: Graph,
+    pub placements: Vec<Placement>,
+}
+
+/// Greedily pack graphs (in arrival order, first-fit into the current
+/// batch) under `cap`. Returns batches with the indices of the member
+/// graphs. Graphs that individually exceed `cap` are returned in
+/// `oversize` for the caller to route to a solo lane.
+pub fn pack_graphs(
+    graphs: &[&Graph],
+    cap: &BatchCapacity,
+) -> (Vec<(PackedBatch, Vec<usize>)>, Vec<usize>) {
+    let mut batches: Vec<(PackedBatch, Vec<usize>)> = Vec::new();
+    let mut oversize = Vec::new();
+    let mut current: Vec<usize> = Vec::new();
+    let mut used = (0usize, 0usize, 0usize); // nodes, edges, classes
+
+    let flush = |current: &mut Vec<usize>,
+                 batches: &mut Vec<(PackedBatch, Vec<usize>)>| {
+        if !current.is_empty() {
+            let members: Vec<&Graph> = current.iter().map(|&i| graphs[i]).collect();
+            batches.push((build_union(&members), std::mem::take(current)));
+        }
+    };
+
+    for (i, g) in graphs.iter().enumerate() {
+        if !cap.admits(g) {
+            oversize.push(i);
+            continue;
+        }
+        let need = (g.n, g.num_directed(), g.k);
+        let fits = current.len() < cap.max_requests
+            && used.0 + need.0 <= cap.max_nodes
+            && used.1 + need.1 <= cap.max_directed_edges
+            && used.2 + need.2 <= cap.max_classes;
+        if !fits {
+            flush(&mut current, &mut batches);
+            used = (0, 0, 0);
+        }
+        current.push(i);
+        used = (used.0 + need.0, used.1 + need.1, used.2 + need.2);
+    }
+    flush(&mut current, &mut batches);
+    (batches, oversize)
+}
+
+/// Build the disjoint union with node/class offsets.
+pub fn build_union(members: &[&Graph]) -> PackedBatch {
+    let total_n: usize = members.iter().map(|g| g.n).sum();
+    let total_k: usize = members.iter().map(|g| g.k).sum();
+    let mut union = Graph::new(total_n, total_k);
+    let mut placements = Vec::with_capacity(members.len());
+    let mut node_off = 0usize;
+    let mut class_off = 0usize;
+    for g in members {
+        for v in 0..g.n {
+            union.labels[node_off + v] = if g.labels[v] >= 0 {
+                g.labels[v] + class_off as i32
+            } else {
+                -1
+            };
+        }
+        for e in 0..g.num_edges() {
+            union.add_edge(
+                g.src[e] + node_off as u32,
+                g.dst[e] + node_off as u32,
+                g.w[e],
+            );
+        }
+        placements.push(Placement { node_offset: node_off, class_offset: class_off, n: g.n, k: g.k });
+        node_off += g.n;
+        class_off += g.k;
+    }
+    PackedBatch { union, placements }
+}
+
+/// Slice one member's embedding block out of the union's Z.
+pub fn split_member(z_union: &Dense, p: &Placement) -> Dense {
+    let mut z = Dense::zeros(p.n, p.k);
+    for r in 0..p.n {
+        for c in 0..p.k {
+            *z.get_mut(r, c) = z_union.get(p.node_offset + r, p.class_offset + c);
+        }
+    }
+    z
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::{Engine, GeeOptions};
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g
+    }
+
+    #[test]
+    fn union_embedding_equals_individual_all_combos() {
+        let g1 = random_graph(201, 30, 80, 3);
+        let g2 = random_graph(202, 45, 120, 4);
+        let g3 = random_graph(203, 20, 40, 2);
+        let batch = build_union(&[&g1, &g2, &g3]);
+        assert_eq!(batch.union.n, 95);
+        assert_eq!(batch.union.k, 9);
+        for opts in GeeOptions::table_order() {
+            let zu = Engine::Sparse.embed(&batch.union, &opts).unwrap();
+            for (g, p) in [&g1, &g2, &g3].iter().zip(&batch.placements) {
+                let z_split = split_member(&zu, p);
+                let z_solo = Engine::Sparse.embed(g, &opts).unwrap();
+                assert!(
+                    z_solo.max_abs_diff(&z_split) < 1e-10,
+                    "union != solo at {:?}",
+                    opts
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn union_with_unlabeled_members() {
+        let mut g1 = random_graph(204, 25, 60, 3);
+        g1.labels[0] = -1;
+        let g2 = random_graph(205, 25, 60, 3);
+        let batch = build_union(&[&g1, &g2]);
+        assert_eq!(batch.union.labels[0], -1);
+        let opts = GeeOptions::ALL;
+        let zu = Engine::Sparse.embed(&batch.union, &opts).unwrap();
+        let z1 = split_member(&zu, &batch.placements[0]);
+        let solo = Engine::Sparse.embed(&g1, &opts).unwrap();
+        assert!(solo.max_abs_diff(&z1) < 1e-10);
+    }
+
+    #[test]
+    fn pack_respects_capacity() {
+        let graphs: Vec<Graph> = (0..6).map(|i| random_graph(210 + i, 40, 60, 3)).collect();
+        let refs: Vec<&Graph> = graphs.iter().collect();
+        let cap = BatchCapacity {
+            max_nodes: 100,
+            max_directed_edges: 1_000,
+            max_classes: 16,
+            max_requests: 64,
+        };
+        let (batches, oversize) = pack_graphs(&refs, &cap);
+        assert!(oversize.is_empty());
+        // 40 nodes each, 100 max -> 2 per batch -> 3 batches
+        assert_eq!(batches.len(), 3);
+        for (b, members) in &batches {
+            assert!(b.union.n <= cap.max_nodes);
+            assert!(b.union.k <= cap.max_classes);
+            assert_eq!(members.len(), 2);
+        }
+        // all members covered exactly once, in order
+        let all: Vec<usize> = batches.iter().flat_map(|(_, m)| m.clone()).collect();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn pack_routes_oversize_to_solo() {
+        let small = random_graph(220, 10, 20, 2);
+        let big = random_graph(221, 500, 100, 2);
+        let refs: Vec<&Graph> = vec![&small, &big];
+        let cap = BatchCapacity {
+            max_nodes: 100,
+            max_directed_edges: 10_000,
+            max_classes: 16,
+            max_requests: 64,
+        };
+        let (batches, oversize) = pack_graphs(&refs, &cap);
+        assert_eq!(batches.len(), 1);
+        assert_eq!(oversize, vec![1]);
+    }
+
+    #[test]
+    fn max_requests_limits_fill() {
+        let graphs: Vec<Graph> = (0..5).map(|i| random_graph(230 + i, 5, 5, 2)).collect();
+        let refs: Vec<&Graph> = graphs.iter().collect();
+        let cap = BatchCapacity {
+            max_nodes: 1_000,
+            max_directed_edges: 10_000,
+            max_classes: 100,
+            max_requests: 2,
+        };
+        let (batches, _) = pack_graphs(&refs, &cap);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].1.len(), 2);
+        assert_eq!(batches[2].1.len(), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! Service metrics: lock-free counters + log-bucketed latency histogram
+//! with p50/p95/p99 extraction — what `serve_embeddings` reports and
+//! EXPERIMENTS.md records.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log-spaced latency buckets: bucket i covers
+/// [2^i, 2^(i+1)) microseconds; 40 buckets ≈ 18 minutes max.
+const BUCKETS: usize = 40;
+
+/// Thread-safe metrics sink.
+#[derive(Debug)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    /// Total vertices and directed edges processed (throughput numerators).
+    pub vertices: AtomicU64,
+    pub edges: AtomicU64,
+    latency_us: [AtomicU64; BUCKETS],
+    latency_sum_us: AtomicU64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_requests: AtomicU64::new(0),
+            vertices: AtomicU64::new(0),
+            edges: AtomicU64::new(0),
+            latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency_sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    fn bucket(us: u64) -> usize {
+        (63 - us.max(1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Record one completed request's latency.
+    pub fn observe_latency(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.latency_us[Self::bucket(us)].fetch_add(1, Ordering::Relaxed);
+        self.latency_sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Quantile over the histogram (0.0..=1.0), as an upper bucket bound.
+    pub fn latency_quantile(&self, q: f64) -> Duration {
+        let counts: Vec<u64> = self
+            .latency_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((total as f64) * q).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        Duration::from_micros(1u64 << BUCKETS)
+    }
+
+    /// Mean latency.
+    pub fn latency_mean(&self) -> Duration {
+        let n = self
+            .latency_us
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .sum::<u64>();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.latency_sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted={} completed={} failed={} rejected={} batches={} (avg fill {:.2}) p50={:?} p95={:?} p99={:?} mean={:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.avg_batch_fill(),
+            self.latency_quantile(0.50),
+            self.latency_quantile(0.95),
+            self.latency_quantile(0.99),
+            self.latency_mean(),
+        )
+    }
+
+    pub fn avg_batch_fill(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            return 0.0;
+        }
+        self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(Metrics::bucket(1), 0);
+        assert_eq!(Metrics::bucket(2), 1);
+        assert_eq!(Metrics::bucket(3), 1);
+        assert_eq!(Metrics::bucket(4), 2);
+        assert_eq!(Metrics::bucket(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_monotone() {
+        let m = Metrics::new();
+        for us in [10u64, 100, 1_000, 10_000, 100_000] {
+            for _ in 0..20 {
+                m.observe_latency(Duration::from_micros(us));
+            }
+        }
+        let p50 = m.latency_quantile(0.5);
+        let p95 = m.latency_quantile(0.95);
+        let p99 = m.latency_quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p50 >= Duration::from_micros(512)); // median bucket ≈ 1ms
+        assert!(m.latency_mean() > Duration::ZERO);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.latency_quantile(0.99), Duration::ZERO);
+        assert_eq!(m.latency_mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn batch_fill_average() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_requests.fetch_add(7, Ordering::Relaxed);
+        assert!((m.avg_batch_fill() - 3.5).abs() < 1e-12);
+        assert!(m.summary().contains("batches=2"));
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 coordinator — the serving layer around the embedding engines:
+//!
+//! * [`queue`] — bounded admission queue with backpressure
+//! * [`batcher`] — exact disjoint-union dynamic batching (class-offset
+//!   trick keeps per-graph `1/n_k` normalization intact)
+//! * [`service`] — worker lanes (native pool / dedicated PJRT thread),
+//!   request lifecycle, graceful shutdown
+//! * [`streaming`] — incremental GEE under edge/vertex/label updates
+//! * [`metrics`] — counters + latency histogram (p50/p95/p99)
+
+pub mod batcher;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+pub mod service;
+pub mod streaming;
+
+pub use server::TcpServer;
+pub use service::{EmbedRequest, EmbedResponse, EmbedService, Lane, ServiceConfig};
+pub use streaming::StreamingGee;

@@ -1,0 +1,231 @@
+//! Bounded MPMC job queue with blocking push/pop and explicit
+//! backpressure — the admission-control stage of the embedding service.
+//! (The offline crate set has no tokio/crossbeam-channel; Mutex+Condvar
+//! is entirely adequate for graph-sized work items.)
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Why a push was refused.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushError {
+    /// Queue at capacity (try_push only).
+    Full,
+    /// Queue closed for new work.
+    Closed,
+}
+
+/// Bounded multi-producer multi-consumer FIFO.
+pub struct BoundedQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+struct Inner<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0);
+        BoundedQueue {
+            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity,
+        }
+    }
+
+    /// Non-blocking push; `Full` applies backpressure to the caller.
+    pub fn try_push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err((item, PushError::Closed));
+        }
+        if g.items.len() >= self.capacity {
+            return Err((item, PushError::Full));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push — waits for space. Errors only when closed.
+    pub fn push(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err((item, PushError::Closed));
+            }
+            if g.items.len() < self.capacity {
+                g.items.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    /// Pop with a deadline; `Ok(None)` = closed+drained, `Err(())` = timed
+    /// out with the queue still open (the batcher's flush tick).
+    pub fn pop_timeout(&self, timeout: Duration) -> Result<Option<T>, ()> {
+        let mut g = self.inner.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(item) = g.items.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Ok(Some(item));
+            }
+            if g.closed {
+                return Ok(None);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(());
+            }
+            let (guard, res) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+            if res.timed_out() && g.items.is_empty() {
+                if g.closed {
+                    return Ok(None);
+                }
+                return Err(());
+            }
+        }
+    }
+
+    /// Close: producers fail fast, consumers drain then see `None`.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = BoundedQueue::new(4);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn try_push_full_backpressure() {
+        let q = BoundedQueue::new(1);
+        q.try_push(1).unwrap();
+        match q.try_push(2) {
+            Err((2, PushError::Full)) => {}
+            other => panic!("expected Full, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = BoundedQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8).unwrap_err().1, PushError::Closed);
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_ticks() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Err(()));
+        q.try_push(1).unwrap();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(Some(1)));
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(10)), Ok(None));
+    }
+
+    #[test]
+    fn blocking_push_wakes_on_pop() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(2).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let q = Arc::new(BoundedQueue::new(8));
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let q = q.clone();
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(x) = q.pop() {
+                        got.push(x);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<i32> = consumers
+            .into_iter()
+            .flat_map(|c| c.join().unwrap())
+            .collect();
+        all.sort_unstable();
+        let mut expect: Vec<i32> =
+            (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        expect.sort_unstable();
+        assert_eq!(all, expect);
+    }
+}

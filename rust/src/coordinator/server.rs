@@ -1,0 +1,328 @@
+//! TCP front-end for the embedding service — the network-facing launcher
+//! (std::net; the offline crate set has no HTTP stack, so the protocol is
+//! a minimal line-oriented text exchange that any language can speak).
+//!
+//! ## Protocol
+//!
+//! One request per connection (or pipelined sequentially):
+//!
+//! ```text
+//! -> EMBED code=ldc k=3 n=5
+//! -> LABELS 0 0 1 2 -1
+//! -> EDGES 0:1:1.0 1:2:0.5 3:4:2
+//! -> END
+//! <- OK 5 3
+//! <- 0.0 0.5 0.0          (one row per vertex, K floats)
+//! ...
+//! <- DONE
+//! ```
+//!
+//! or `ERR <message>` on any failure. `PING` → `PONG` for health checks.
+//! Requests are forwarded to an [`EmbedService`], so batching,
+//! backpressure and metrics apply unchanged.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::service::{EmbedRequest, EmbedService};
+use crate::gee::GeeOptions;
+use crate::graph::Graph;
+
+/// A running TCP server bound to `addr()`.
+pub struct TcpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind (use port 0 for an ephemeral port) and start serving requests
+    /// against `service`. One thread per connection; connections are
+    /// short-lived embed exchanges so this is plenty.
+    pub fn start(bind: &str, service: Arc<EmbedService>) -> Result<TcpServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let svc = service.clone();
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream, &svc);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(TcpServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; in-flight connections finish on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, service: &EmbedService) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "PING" {
+            writeln!(writer, "PONG")?;
+            writer.flush()?;
+            continue;
+        }
+        if line == "QUIT" {
+            return Ok(());
+        }
+        match parse_and_embed(line, &mut reader, service) {
+            Ok(z) => {
+                writeln!(writer, "OK {} {}", z.nrows, z.ncols)?;
+                for r in 0..z.nrows {
+                    let row: Vec<String> =
+                        z.row(r).iter().map(|v| format!("{v:.9}")).collect();
+                    writeln!(writer, "{}", row.join(" "))?;
+                }
+                writeln!(writer, "DONE")?;
+            }
+            Err(e) => {
+                writeln!(writer, "ERR {e:#}")?;
+            }
+        }
+        writer.flush()?;
+    }
+}
+
+fn parse_and_embed(
+    header: &str,
+    reader: &mut impl BufRead,
+    service: &EmbedService,
+) -> Result<crate::sparse::Dense> {
+    let mut parts = header.split_whitespace();
+    if parts.next() != Some("EMBED") {
+        bail!("expected EMBED, got '{header}'");
+    }
+    let mut code = "---".to_string();
+    let mut k = 0usize;
+    let mut n = 0usize;
+    for p in parts {
+        let (key, val) = p.split_once('=').context("EMBED args are key=val")?;
+        match key {
+            "code" => code = val.to_string(),
+            "k" => k = val.parse().context("bad k")?,
+            "n" => n = val.parse().context("bad n")?,
+            other => bail!("unknown EMBED arg '{other}'"),
+        }
+    }
+    let options = GeeOptions::from_code(&code).context("bad options code")?;
+    if n == 0 || k == 0 {
+        bail!("EMBED requires n=<vertices> k=<classes>");
+    }
+
+    let mut g = Graph::new(n, k);
+    loop {
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed mid-request");
+        }
+        let line = line.trim();
+        if line == "END" {
+            break;
+        }
+        if let Some(rest) = line.strip_prefix("LABELS ") {
+            let labels: Vec<i32> = rest
+                .split_whitespace()
+                .map(|t| t.parse::<i32>().context("bad label"))
+                .collect::<Result<_>>()?;
+            if labels.len() != n {
+                bail!("LABELS has {} entries, expected {n}", labels.len());
+            }
+            g.labels = labels;
+        } else if let Some(rest) = line.strip_prefix("EDGES") {
+            for tok in rest.split_whitespace() {
+                let mut it = tok.split(':');
+                let a: u32 = it.next().context("edge src")?.parse().context("bad src")?;
+                let b: u32 = it.next().context("edge dst")?.parse().context("bad dst")?;
+                let w: f64 = match it.next() {
+                    Some(s) => s.parse().context("bad weight")?,
+                    None => 1.0,
+                };
+                if a as usize >= n || b as usize >= n {
+                    bail!("edge {a}:{b} out of range (n={n})");
+                }
+                g.add_edge(a, b, w);
+            }
+        } else if !line.is_empty() {
+            bail!("unexpected line '{line}'");
+        }
+    }
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+    let rx = service
+        .submit(EmbedRequest { graph: g, options })
+        .map_err(|e| anyhow::anyhow!("service rejected request: {e:?}"))?;
+    let resp = rx.recv().context("service dropped reply")??;
+    Ok(resp.z)
+}
+
+/// Minimal client for tests / examples: one embed round trip.
+pub fn client_embed(
+    addr: SocketAddr,
+    code: &str,
+    labels: &[i32],
+    edges: &[(u32, u32, f64)],
+    k: usize,
+) -> Result<crate::sparse::Dense> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "EMBED code={code} k={k} n={}", labels.len())?;
+    let labels_s: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
+    writeln!(writer, "LABELS {}", labels_s.join(" "))?;
+    let edges_s: Vec<String> =
+        edges.iter().map(|(a, b, w)| format!("{a}:{b}:{w}")).collect();
+    writeln!(writer, "EDGES {}", edges_s.join(" "))?;
+    writeln!(writer, "END")?;
+    writer.flush()?;
+
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let line = line.trim();
+    let Some(rest) = line.strip_prefix("OK ") else {
+        bail!("server said: {line}");
+    };
+    let mut it = rest.split_whitespace();
+    let nrows: usize = it.next().context("rows")?.parse()?;
+    let ncols: usize = it.next().context("cols")?.parse()?;
+    let mut z = crate::sparse::Dense::zeros(nrows, ncols);
+    for r in 0..nrows {
+        let mut row = String::new();
+        reader.read_line(&mut row)?;
+        for (c, tok) in row.split_whitespace().enumerate() {
+            *z.get_mut(r, c) = tok.parse()?;
+        }
+    }
+    let mut done = String::new();
+    reader.read_line(&mut done)?;
+    if done.trim() != "DONE" {
+        bail!("missing DONE trailer");
+    }
+    Ok(z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::gee::Engine;
+    use crate::util::rng::Rng;
+
+    fn start_server() -> (TcpServer, Arc<EmbedService>) {
+        let svc = Arc::new(EmbedService::start(ServiceConfig::default()));
+        let server = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+        (server, svc)
+    }
+
+    #[test]
+    fn embed_round_trip_matches_native() {
+        let (server, _svc) = start_server();
+        let mut rng = Rng::new(71);
+        let n = 30;
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(3) as i32).collect();
+        let edges: Vec<(u32, u32, f64)> = (0..80)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1))
+            .collect();
+        let z = client_embed(server.addr(), "ldc", &labels, &edges, 3).unwrap();
+
+        let mut g = Graph::new(n, 3);
+        g.labels = labels;
+        for &(a, b, w) in &edges {
+            g.add_edge(a, b, w);
+        }
+        let expect = Engine::SparseFast.embed(&g, &GeeOptions::ALL).unwrap();
+        assert!(expect.max_abs_diff(&z) < 1e-8);
+        server.stop();
+    }
+
+    #[test]
+    fn ping_and_error_paths() {
+        let (server, _svc) = start_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "PING").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+
+        // bad request
+        writeln!(writer, "EMBED code=zzz k=2 n=3").unwrap();
+        writeln!(writer, "END").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, _svc) = start_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..6)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + i);
+                    let n = 20;
+                    let labels: Vec<i32> = (0..n).map(|_| rng.below(2) as i32).collect();
+                    let edges: Vec<(u32, u32, f64)> = (0..40)
+                        .map(|_| (rng.below(n) as u32, rng.below(n) as u32, 1.0))
+                        .collect();
+                    let z = client_embed(addr, "-d-", &labels, &edges, 2).unwrap();
+                    assert_eq!(z.nrows, 20);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn rejects_out_of_range_edge() {
+        let (server, _svc) = start_server();
+        let err = client_embed(server.addr(), "---", &[0, 1], &[(0, 9, 1.0)], 2);
+        assert!(err.is_err());
+        server.stop();
+    }
+}

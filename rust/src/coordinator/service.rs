@@ -1,0 +1,473 @@
+//! The embedding service: bounded admission queue → worker lanes →
+//! dynamic batcher → engine (native sparse GEE or PJRT artifacts) →
+//! reply channels + metrics.
+//!
+//! Lanes:
+//! * **native** — a pool of threads running the in-process engines
+//!   (`Engine::Sparse*` etc.). Handles any graph size.
+//! * **pjrt** — one dedicated thread owning the PJRT [`Runtime`] (its
+//!   handles are not `Send`); serves graphs that fit an artifact bucket
+//!   and falls back to the native engine for oversize requests.
+//!
+//! Batching: workers drain the queue for up to `batch_linger`, group
+//! drained jobs by option combo, pack each group into disjoint-union
+//! batches (see [`super::batcher`] for why the union is exact), embed
+//! once per batch, and split the replies. With batching off every job is
+//! solo. Shutdown is graceful: queued work completes, then workers exit.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{pack_graphs, split_member, BatchCapacity};
+use super::metrics::Metrics;
+use super::queue::{BoundedQueue, PushError};
+use crate::gee::{Engine, GeeOptions};
+use crate::graph::Graph;
+use crate::runtime::Runtime;
+use crate::sparse::Dense;
+
+/// Which compute lane serves requests.
+#[derive(Clone, Debug)]
+pub enum Lane {
+    /// In-process engines only.
+    Native(Engine),
+    /// PJRT artifacts from this directory, native fallback for oversize.
+    Pjrt { artifact_dir: std::path::PathBuf, fallback: Engine },
+}
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub lane: Lane,
+    /// Native worker threads (the PJRT lane always adds its own single
+    /// dedicated thread).
+    pub workers: usize,
+    pub queue_depth: usize,
+    /// Enable disjoint-union dynamic batching.
+    pub batching: bool,
+    pub batch_capacity: BatchCapacity,
+    /// How long a worker lingers draining the queue to fill a batch.
+    pub batch_linger: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            lane: Lane::Native(Engine::SparseFast),
+            workers: 2,
+            queue_depth: 256,
+            batching: true,
+            batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
+            batch_linger: Duration::from_millis(2),
+        }
+    }
+}
+
+/// One embedding request.
+#[derive(Clone, Debug)]
+pub struct EmbedRequest {
+    pub graph: Graph,
+    pub options: GeeOptions,
+}
+
+/// The reply.
+#[derive(Clone, Debug)]
+pub struct EmbedResponse {
+    pub z: Dense,
+    /// Queue + compute time, as observed by the worker.
+    pub latency: Duration,
+    /// "native" / "pjrt" / "native-fallback".
+    pub via: &'static str,
+    /// How many requests shared the execution (1 = solo).
+    pub batch_size: usize,
+}
+
+struct Job {
+    req: EmbedRequest,
+    submitted: Instant,
+    reply: mpsc::Sender<Result<EmbedResponse>>,
+}
+
+/// Handle to a running service.
+pub struct EmbedService {
+    queue: Arc<BoundedQueue<Job>>,
+    metrics: Arc<Metrics>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl EmbedService {
+    /// Spawn workers and return the handle.
+    pub fn start(cfg: ServiceConfig) -> EmbedService {
+        let queue = Arc::new(BoundedQueue::new(cfg.queue_depth));
+        let metrics = Arc::new(Metrics::new());
+        let mut handles = Vec::new();
+
+        match &cfg.lane {
+            Lane::Native(engine) => {
+                for _ in 0..cfg.workers.max(1) {
+                    let q = queue.clone();
+                    let m = metrics.clone();
+                    let cfg = cfg.clone();
+                    let engine = *engine;
+                    handles.push(std::thread::spawn(move || {
+                        native_worker(&q, &m, &cfg, engine);
+                    }));
+                }
+            }
+            Lane::Pjrt { artifact_dir, fallback } => {
+                let q = queue.clone();
+                let m = metrics.clone();
+                let cfg_pjrt = cfg.clone();
+                let dir = artifact_dir.clone();
+                let fallback = *fallback;
+                handles.push(std::thread::spawn(move || {
+                    pjrt_worker(&q, &m, &cfg_pjrt, &dir, fallback);
+                }));
+                // extra native workers drain overflow alongside
+                for _ in 1..cfg.workers {
+                    let q = queue.clone();
+                    let m = metrics.clone();
+                    let cfg = cfg.clone();
+                    handles.push(std::thread::spawn(move || {
+                        native_worker(&q, &m, &cfg, fallback);
+                    }));
+                }
+            }
+        }
+        EmbedService { queue, metrics, handles }
+    }
+
+    /// Submit with backpressure: `Err` means the queue is full/closed and
+    /// the caller should retry or shed load.
+    pub fn try_submit(
+        &self,
+        req: EmbedRequest,
+    ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { req, submitted: Instant::now(), reply: tx };
+        match self.queue.try_push(job) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err((_, e)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Blocking submit (waits for queue space).
+    pub fn submit(
+        &self,
+        req: EmbedRequest,
+    ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
+        let (tx, rx) = mpsc::channel();
+        let job = Job { req, submitted: Instant::now(), reply: tx };
+        match self.queue.push(job) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err((_, e)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Drain queued work, stop workers, return final metrics.
+    pub fn shutdown(self) -> Arc<Metrics> {
+        self.queue.close();
+        for h in self.handles {
+            let _ = h.join();
+        }
+        self.metrics
+    }
+}
+
+/// Drain up to a batch worth of extra jobs (same linger deadline).
+fn gather(q: &BoundedQueue<Job>, cfg: &ServiceConfig, first: Job) -> Vec<Job> {
+    let mut jobs = vec![first];
+    if !cfg.batching {
+        return jobs;
+    }
+    let deadline = Instant::now() + cfg.batch_linger;
+    while jobs.len() < cfg.batch_capacity.max_requests {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match q.pop_timeout(deadline - now) {
+            Ok(Some(job)) => jobs.push(job),
+            Ok(None) | Err(()) => break,
+        }
+    }
+    jobs
+}
+
+/// Group → pack → run → reply, for one drained set of jobs.
+fn process_jobs<F>(jobs: Vec<Job>, cfg: &ServiceConfig, metrics: &Metrics, mut run: F)
+where
+    F: FnMut(&Graph, &GeeOptions) -> (Result<Dense>, &'static str),
+{
+    // group by option combo (batches must share the transform)
+    let mut groups: std::collections::HashMap<GeeOptions, Vec<Job>> =
+        std::collections::HashMap::new();
+    for job in jobs {
+        groups.entry(job.req.options).or_default().push(job);
+    }
+    for (opts, group) in groups {
+        let graphs: Vec<&Graph> = group.iter().map(|j| &j.req.graph).collect();
+        let (batches, oversize) = if cfg.batching {
+            pack_graphs(&graphs, &cfg.batch_capacity)
+        } else {
+            (Vec::new(), (0..graphs.len()).collect())
+        };
+
+        for (packed, member_idx) in &batches {
+            let size = member_idx.len();
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
+            let (result, via) = run(&packed.union, &opts);
+            match result {
+                Ok(zu) => {
+                    for (slot, &mi) in member_idx.iter().enumerate() {
+                        let z = split_member(&zu, &packed.placements[slot]);
+                        finish(&group[mi], z, via, size, metrics);
+                    }
+                }
+                Err(e) => {
+                    for &mi in member_idx {
+                        fail(&group[mi], format!("{e:#}"), metrics);
+                    }
+                }
+            }
+        }
+        for &mi in &oversize {
+            let job = &group[mi];
+            let (result, via) = run(&job.req.graph, &opts);
+            match result {
+                Ok(z) => finish(job, z, via, 1, metrics),
+                Err(e) => fail(job, format!("{e:#}"), metrics),
+            }
+        }
+    }
+}
+
+fn finish(job: &Job, z: Dense, via: &'static str, batch_size: usize, metrics: &Metrics) {
+    let latency = job.submitted.elapsed();
+    metrics.completed.fetch_add(1, Ordering::Relaxed);
+    metrics.vertices.fetch_add(job.req.graph.n as u64, Ordering::Relaxed);
+    metrics.edges.fetch_add(job.req.graph.num_directed() as u64, Ordering::Relaxed);
+    metrics.observe_latency(latency);
+    let _ = job
+        .reply
+        .send(Ok(EmbedResponse { z, latency, via, batch_size }));
+}
+
+fn fail(job: &Job, msg: String, metrics: &Metrics) {
+    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    let _ = job.reply.send(Err(anyhow::anyhow!(msg)));
+}
+
+fn native_worker(q: &BoundedQueue<Job>, metrics: &Metrics, cfg: &ServiceConfig, engine: Engine) {
+    while let Some(first) = q.pop() {
+        let jobs = gather(q, cfg, first);
+        process_jobs(jobs, cfg, metrics, |g, opts| (engine.embed(g, opts), "native"));
+    }
+}
+
+fn pjrt_worker(
+    q: &BoundedQueue<Job>,
+    metrics: &Metrics,
+    cfg: &ServiceConfig,
+    artifact_dir: &std::path::Path,
+    fallback: Engine,
+) {
+    let runtime = match Runtime::new(artifact_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            // fail every job with a clear message; service stays up on the
+            // native fallback workers
+            while let Some(job) = q.pop() {
+                fail(&job, format!("pjrt runtime unavailable: {e:#}"), metrics);
+            }
+            return;
+        }
+    };
+    while let Some(first) = q.pop() {
+        let jobs = gather(q, cfg, first);
+        process_jobs(jobs, cfg, metrics, |g, opts| {
+            if runtime.fits(g, opts) {
+                (runtime.embed(g, opts), "pjrt")
+            } else {
+                (fallback.embed(g, opts), "native-fallback")
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, 1.0);
+        }
+        g
+    }
+
+    #[test]
+    fn serves_correct_embeddings() {
+        let svc = EmbedService::start(ServiceConfig::default());
+        let g = random_graph(401, 40, 100, 3);
+        let opts = GeeOptions::ALL;
+        let rx = svc.submit(EmbedRequest { graph: g.clone(), options: opts }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        let expect = Engine::SparseFast.embed(&g, &opts).unwrap();
+        assert!(expect.max_abs_diff(&resp.z) < 1e-10);
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 3,
+            ..ServiceConfig::default()
+        });
+        let graphs: Vec<Graph> = (0..40).map(|i| random_graph(410 + i, 25, 60, 3)).collect();
+        let rxs: Vec<_> = graphs
+            .iter()
+            .map(|g| {
+                svc.submit(EmbedRequest { graph: g.clone(), options: GeeOptions::NONE })
+                    .unwrap()
+            })
+            .collect();
+        for (g, rx) in graphs.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            let expect = Engine::SparseFast.embed(g, &GeeOptions::NONE).unwrap();
+            assert!(expect.max_abs_diff(&resp.z) < 1e-10);
+        }
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 40);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn batching_packs_multiple_requests() {
+        // single worker + generous linger -> requests coalesce
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            batch_linger: Duration::from_millis(50),
+            ..ServiceConfig::default()
+        });
+        let graphs: Vec<Graph> = (0..8).map(|i| random_graph(420 + i, 20, 40, 2)).collect();
+        let rxs: Vec<_> = graphs
+            .iter()
+            .map(|g| {
+                svc.submit(EmbedRequest { graph: g.clone(), options: GeeOptions::NONE })
+                    .unwrap()
+            })
+            .collect();
+        let mut max_batch = 0;
+        for rx in rxs {
+            let resp = rx.recv().unwrap().unwrap();
+            max_batch = max_batch.max(resp.batch_size);
+        }
+        assert!(max_batch > 1, "no coalescing observed");
+        let m = svc.shutdown();
+        assert!(m.avg_batch_fill() > 1.0);
+    }
+
+    #[test]
+    fn mixed_options_never_share_a_union() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            batch_linger: Duration::from_millis(30),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(430, 30, 80, 3);
+        let combos = GeeOptions::table_order();
+        let rxs: Vec<_> = combos
+            .iter()
+            .map(|o| svc.submit(EmbedRequest { graph: g.clone(), options: *o }).unwrap())
+            .collect();
+        for (o, rx) in combos.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            let expect = Engine::SparseFast.embed(&g, o).unwrap();
+            assert!(expect.max_abs_diff(&resp.z) < 1e-10, "combo {o:?}");
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // zero workers is not allowed; use 1 worker + tiny queue + slow
+        // feed via large graphs to observe rejection
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            batching: false,
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(440, 400, 4_000, 4);
+        let mut rejected = false;
+        let mut rxs = Vec::new();
+        for _ in 0..50 {
+            match svc.try_submit(EmbedRequest { graph: g.clone(), options: GeeOptions::ALL }) {
+                Ok(rx) => rxs.push(rx),
+                Err(PushError::Full) => {
+                    rejected = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        }
+        assert!(rejected, "queue never filled");
+        for rx in rxs {
+            let _ = rx.recv().unwrap();
+        }
+        let m = svc.shutdown();
+        assert!(m.rejected.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn shutdown_completes_queued_work() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 2,
+            ..ServiceConfig::default()
+        });
+        let mut rxs = Vec::new();
+        for i in 0..10 {
+            let g = random_graph(450 + i, 30, 60, 3);
+            rxs.push(svc.submit(EmbedRequest { graph: g, options: GeeOptions::NONE }).unwrap());
+        }
+        let m = svc.shutdown();
+        for rx in rxs {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert_eq!(m.completed.load(Ordering::Relaxed), 10);
+    }
+}

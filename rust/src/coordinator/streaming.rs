@@ -1,0 +1,321 @@
+//! Streaming (incremental) GEE — the coordinator's dynamic-graph lane,
+//! the setting of the GEE line's time-series work (Shen et al. 2023,
+//! communication-pattern shifts): edges arrive as a stream and embeddings
+//! must stay queryable without recomputing from scratch.
+//!
+//! Key design: the state is the *unnormalized* class-sum matrix
+//! `counts[i][c] = Σ_{(i,j)∈E, y_j=c} w_ij` plus degrees and class sizes.
+//! Because the `1/n_k` normalization is applied at snapshot time,
+//! every mutation is O(1) or O(deg):
+//!
+//! * `add_edge`      O(1)
+//! * `add_vertex`    O(K)
+//! * `relabel`       O(deg(v))   (moves v's contribution column at its
+//!                                neighbors)
+//! * `snapshot`      O(N·K) for plain/diag/cor — exact;
+//!                   O(E + N·K) when Laplacian is on (degree-dependent
+//!                   scaling breaks O(1) incrementality; recomputed from
+//!                   the adjacency list, still one pass).
+//!
+//! Every snapshot is *exact*: equality with the batch `SparseGee` is
+//! property-tested across all 8 option combos after random edit scripts.
+
+use crate::gee::options::GeeOptions;
+use crate::gee::weights::class_counts;
+use crate::graph::Graph;
+use crate::sparse::ops::{normalize_rows, safe_recip, safe_recip_sqrt};
+use crate::sparse::Dense;
+
+/// Incremental GEE state.
+#[derive(Clone, Debug)]
+pub struct StreamingGee {
+    k: usize,
+    labels: Vec<i32>,
+    /// Unnormalized class sums, row-major N×K.
+    counts: Vec<f64>,
+    /// Weighted degree (self loops once).
+    degrees: Vec<f64>,
+    /// Class sizes.
+    n_k: Vec<f64>,
+    /// Adjacency list (neighbor, weight); self loops stored once.
+    adj: Vec<Vec<(u32, f64)>>,
+    /// Edges processed (for metrics).
+    pub edges_seen: usize,
+}
+
+impl StreamingGee {
+    /// Start from an existing labeled graph (may have zero edges).
+    pub fn new(g: &Graph) -> Self {
+        let mut s = StreamingGee {
+            k: g.k,
+            labels: g.labels.clone(),
+            counts: vec![0.0; g.n * g.k],
+            degrees: vec![0.0; g.n],
+            n_k: class_counts(&g.labels, g.k),
+            adj: vec![Vec::new(); g.n],
+            edges_seen: 0,
+        };
+        for i in 0..g.num_edges() {
+            s.add_edge(g.src[i], g.dst[i], g.w[i]);
+        }
+        s
+    }
+
+    pub fn n(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Insert an undirected edge. O(1).
+    pub fn add_edge(&mut self, a: u32, b: u32, w: f64) {
+        let (ai, bi) = (a as usize, b as usize);
+        assert!(ai < self.n() && bi < self.n());
+        let (la, lb) = (self.labels[ai], self.labels[bi]);
+        if lb >= 0 {
+            self.counts[ai * self.k + lb as usize] += w;
+        }
+        self.degrees[ai] += w;
+        if ai != bi {
+            if la >= 0 {
+                self.counts[bi * self.k + la as usize] += w;
+            }
+            self.degrees[bi] += w;
+        }
+        self.adj[ai].push((b, w));
+        if ai != bi {
+            self.adj[bi].push((a, w));
+        }
+        self.edges_seen += 1;
+    }
+
+    /// Append a vertex with the given label (or -1). O(K). Returns its id.
+    pub fn add_vertex(&mut self, label: i32) -> u32 {
+        assert!(label < self.k as i32);
+        let id = self.n() as u32;
+        self.labels.push(label);
+        self.counts.extend(std::iter::repeat(0.0).take(self.k));
+        self.degrees.push(0.0);
+        self.adj.push(Vec::new());
+        if label >= 0 {
+            self.n_k[label as usize] += 1.0;
+        }
+        id
+    }
+
+    /// Change a vertex's label. O(deg(v)): moves v's contribution from the
+    /// old class column to the new one at every neighbor.
+    pub fn relabel(&mut self, v: u32, new_label: i32) {
+        let vi = v as usize;
+        assert!(vi < self.n() && new_label < self.k as i32);
+        let old = self.labels[vi];
+        if old == new_label {
+            return;
+        }
+        if old >= 0 {
+            self.n_k[old as usize] -= 1.0;
+        }
+        if new_label >= 0 {
+            self.n_k[new_label as usize] += 1.0;
+        }
+        // move v's column contribution at each neighbor (self loops move
+        // v's own row too, handled uniformly since adj stores (v, w))
+        for &(u, w) in &self.adj[vi] {
+            let ui = u as usize;
+            if old >= 0 {
+                self.counts[ui * self.k + old as usize] -= w;
+            }
+            if new_label >= 0 {
+                self.counts[ui * self.k + new_label as usize] += w;
+            }
+        }
+        self.labels[vi] = new_label;
+    }
+
+    /// Exact embedding snapshot under the given options.
+    pub fn snapshot(&self, opts: &GeeOptions) -> Dense {
+        let n = self.n();
+        let k = self.k;
+        let inv_nk: Vec<f64> = self.n_k.iter().map(|&c| safe_recip(c)).collect();
+        let mut z = Dense::zeros(n, k);
+
+        if opts.laplacian {
+            // one pass over the adjacency list with degree scaling
+            let mut deg = self.degrees.clone();
+            if opts.diagonal {
+                for d in deg.iter_mut() {
+                    *d += 1.0;
+                }
+            }
+            let s: Vec<f64> = deg.iter().map(|&d| safe_recip_sqrt(d)).collect();
+            for v in 0..n {
+                let row = z.row_mut(v);
+                for &(u, w) in &self.adj[v] {
+                    let ui = u as usize;
+                    let lu = self.labels[ui];
+                    if lu >= 0 {
+                        row[lu as usize] += w * s[v] * s[ui] * inv_nk[lu as usize];
+                    }
+                }
+                // adj double-stores proper edges but self loops only once,
+                // which matches the degree convention already.
+            }
+            if opts.diagonal {
+                for v in 0..n {
+                    let l = self.labels[v];
+                    if l >= 0 {
+                        *z.get_mut(v, l as usize) += s[v] * s[v] * inv_nk[l as usize];
+                    }
+                }
+            }
+        } else {
+            for v in 0..n {
+                let row = z.row_mut(v);
+                let base = v * k;
+                for c in 0..k {
+                    row[c] = self.counts[base + c] * inv_nk[c];
+                }
+            }
+            if opts.diagonal {
+                for v in 0..n {
+                    let l = self.labels[v];
+                    if l >= 0 {
+                        *z.get_mut(v, l as usize) += inv_nk[l as usize];
+                    }
+                }
+            }
+        }
+
+        if opts.correlation {
+            normalize_rows(&mut z);
+        }
+        z
+    }
+
+    /// Export the current state as a plain graph (for checkpointing and
+    /// the equality tests).
+    pub fn to_graph(&self) -> Graph {
+        let n = self.n();
+        let mut g = Graph::new(n, self.k);
+        g.labels = self.labels.clone();
+        for v in 0..n {
+            for &(u, w) in &self.adj[v] {
+                // emit each proper edge once (from its lower endpoint's
+                // list the first time we see it with u >= v)
+                if u as usize >= v {
+                    g.add_edge(v as u32, u, w);
+                }
+            }
+        }
+        // adj double-stores proper edges: (v,u) appears in v's list and u's
+        // list; the filter above keeps exactly one copy. Self loops stored
+        // once and kept once.
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::Engine;
+    use crate::util::rng::Rng;
+
+    fn check_all_combos(s: &StreamingGee) {
+        let g = s.to_graph();
+        for opts in GeeOptions::table_order() {
+            let batch = Engine::Sparse.embed(&g, &opts).unwrap();
+            let stream = s.snapshot(&opts);
+            assert!(
+                batch.max_abs_diff(&stream) < 1e-10,
+                "streaming != batch at {:?}: {}",
+                opts,
+                batch.max_abs_diff(&stream)
+            );
+        }
+    }
+
+    #[test]
+    fn matches_batch_after_edge_stream() {
+        let mut g = Graph::new(30, 3);
+        let mut rng = Rng::new(301);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        let mut s = StreamingGee::new(&g);
+        for _ in 0..150 {
+            s.add_edge(rng.below(30) as u32, rng.below(30) as u32, rng.f64() + 0.1);
+        }
+        check_all_combos(&s);
+    }
+
+    #[test]
+    fn matches_batch_after_vertex_growth() {
+        let mut g = Graph::new(10, 3);
+        let mut rng = Rng::new(302);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        let mut s = StreamingGee::new(&g);
+        for i in 0..40 {
+            if i % 3 == 0 {
+                let lbl = if i % 6 == 0 { -1 } else { rng.below(3) as i32 };
+                s.add_vertex(lbl);
+            }
+            let n = s.n();
+            s.add_edge(rng.below(n) as u32, rng.below(n) as u32, 1.0);
+        }
+        check_all_combos(&s);
+    }
+
+    #[test]
+    fn matches_batch_after_relabels() {
+        let mut g = Graph::new(25, 4);
+        let mut rng = Rng::new(303);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(4) as i32;
+        }
+        for _ in 0..80 {
+            g.add_edge(rng.below(25) as u32, rng.below(25) as u32, rng.f64() + 0.1);
+        }
+        let mut s = StreamingGee::new(&g);
+        for _ in 0..30 {
+            let v = rng.below(25) as u32;
+            let new = (rng.below(5) as i32) - 1; // includes -1
+            s.relabel(v, new);
+        }
+        check_all_combos(&s);
+    }
+
+    #[test]
+    fn self_loops_in_stream() {
+        let mut g = Graph::new(8, 2);
+        g.labels = vec![0, 0, 1, 1, 0, 1, 0, 1];
+        let mut s = StreamingGee::new(&g);
+        s.add_edge(3, 3, 2.5);
+        s.add_edge(0, 3, 1.0);
+        s.add_edge(3, 3, 0.5);
+        check_all_combos(&s);
+    }
+
+    #[test]
+    fn snapshot_is_pure() {
+        let mut g = Graph::new(12, 2);
+        g.labels = (0..12).map(|i| (i % 2) as i32).collect();
+        let mut s = StreamingGee::new(&g);
+        s.add_edge(0, 1, 1.0);
+        let a = s.snapshot(&GeeOptions::ALL);
+        let b = s.snapshot(&GeeOptions::ALL);
+        assert!(a.max_abs_diff(&b) == 0.0);
+    }
+
+    #[test]
+    fn edges_seen_counter() {
+        let g = Graph::new(5, 2);
+        let mut s = StreamingGee::new(&g);
+        s.add_edge(0, 1, 1.0);
+        s.add_edge(1, 2, 1.0);
+        assert_eq!(s.edges_seen, 2);
+    }
+}

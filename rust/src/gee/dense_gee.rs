@@ -1,0 +1,126 @@
+//! Dense GEE — the adjacency-matrix strawman baseline.
+//!
+//! Materializes the full N×N dense adjacency and follows Table 1
+//! literally: `(A + I)`, `D^-1/2 A D^-1/2`, `Z = A·W`, row-normalize.
+//! Quadratic in N for both space and time, so it carries a hard node
+//! budget; the benches use it to show the blow-up the paper's Fig. 3
+//! left y-axis implies for non-sparse representations.
+
+use anyhow::{bail, Result};
+
+use super::options::GeeOptions;
+use super::weights::weight_matrix_dense;
+use crate::graph::Graph;
+use crate::sparse::ops::{inv_sqrt_vec, normalize_rows};
+use crate::sparse::Dense;
+
+/// Largest N the dense baseline will accept by default (an N×N f64 matrix
+/// at this size is ~3.2 GB — past what a 16 GB laptop can double-buffer).
+pub const DEFAULT_MAX_NODES: usize = 20_000;
+
+/// Dense-adjacency GEE baseline.
+#[derive(Clone, Debug)]
+pub struct DenseGee {
+    pub max_nodes: usize,
+}
+
+impl Default for DenseGee {
+    fn default() -> Self {
+        DenseGee { max_nodes: DEFAULT_MAX_NODES }
+    }
+}
+
+impl DenseGee {
+    /// Embed; errors when the graph exceeds the node budget.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Result<Dense> {
+        if g.n > self.max_nodes {
+            bail!(
+                "dense GEE baseline refuses n={} > max_nodes={} (needs {:.1} GB)",
+                g.n,
+                self.max_nodes,
+                (g.n * g.n * 8) as f64 / 1e9
+            );
+        }
+        let mut a = g.adjacency().to_dense();
+        if opts.diagonal {
+            a.add_eye();
+        }
+        if opts.laplacian {
+            let s = inv_sqrt_vec(&a.row_sums());
+            a.scale_sym(&s);
+        }
+        let w = weight_matrix_dense(&g.labels, g.k);
+        let mut z = a.matmul(&w);
+        if opts.correlation {
+            normalize_rows(&mut z);
+        }
+        Ok(z)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph() -> Graph {
+        // 0-1-2 path, labels [0, 1, 0]
+        let mut g = Graph::new(3, 2);
+        g.labels = vec![0, 1, 0];
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 1.0);
+        g
+    }
+
+    #[test]
+    fn plain_embedding_by_hand() {
+        // W = [[1/2,0],[0,1],[1/2,0]]; A path.
+        // Z0 = A0·W = row of vertex 0 = neighbor 1 -> [0, 1]
+        // Z1 = neighbors 0,2 -> [1/2+1/2, 0] = [1, 0]
+        let g = path_graph();
+        let z = DenseGee::default().embed(&g, &GeeOptions::NONE).unwrap();
+        assert_eq!(z.row(0), &[0.0, 1.0]);
+        assert_eq!(z.row(1), &[1.0, 0.0]);
+        assert_eq!(z.row(2), &[0.0, 1.0]);
+    }
+
+    #[test]
+    fn diagonal_adds_self_weight() {
+        let g = path_graph();
+        let z = DenseGee::default()
+            .embed(&g, &GeeOptions::new(false, true, false))
+            .unwrap();
+        // vertex 0: neighbor 1 (class 1) + self (class 0, 1/n0 = 1/2)
+        assert_eq!(z.row(0), &[0.5, 1.0]);
+    }
+
+    #[test]
+    fn correlation_unit_rows() {
+        let g = path_graph();
+        let z = DenseGee::default()
+            .embed(&g, &GeeOptions::new(false, false, true))
+            .unwrap();
+        for r in 0..3 {
+            let norm: f64 = z.row(r).iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn laplacian_by_hand() {
+        // degrees [1, 2, 1]; scaled edge (0,1): 1/sqrt(1*2)
+        let g = path_graph();
+        let z = DenseGee::default()
+            .embed(&g, &GeeOptions::new(true, false, false))
+            .unwrap();
+        let s = 1.0 / 2.0f64.sqrt();
+        assert!((z.get(0, 1) - s).abs() < 1e-12);
+        assert!((z.get(1, 0) - (s * 0.5 + s * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn node_budget_enforced() {
+        let g = Graph::new(100, 2);
+        let gee = DenseGee { max_nodes: 50 };
+        assert!(gee.embed(&g, &GeeOptions::NONE).is_err());
+    }
+}

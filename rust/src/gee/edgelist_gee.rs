@@ -1,0 +1,186 @@
+//! Edge-list GEE — the **original GEE** algorithm (Shen & Priebe 2023)
+//! that the paper benchmarks against: one pass over the edge list with a
+//! dense N×K accumulator, never materializing the adjacency matrix, but
+//! also never storing W / D / Z sparsely.
+//!
+//! This is the faithful port of the reference Python `GraphEncoder`
+//! (linear time, edge-list driven); the paper's contribution
+//! ([`super::sparse_gee::SparseGee`]) differs by keeping *every*
+//! intermediate in sparse form.
+
+use super::options::GeeOptions;
+use super::weights::weight_values;
+use crate::graph::Graph;
+use crate::sparse::ops::{normalize_rows, safe_recip, safe_recip_sqrt};
+use crate::sparse::Dense;
+
+/// Original (edge-list) GEE.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EdgeListGee;
+
+impl EdgeListGee {
+    /// Embed the graph: O(E + N·K) time, dense N×K output.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let n = g.n;
+        let k = g.k;
+        // per-vertex 1/n_{y_j} and class id
+        let wv = weight_values(&g.labels, k);
+
+        // pass 1 (lap only): weighted degrees, self loops counted once,
+        // +1 for diagonal augmentation
+        let scale: Option<Vec<f64>> = if opts.laplacian {
+            let mut deg = g.degrees();
+            if opts.diagonal {
+                for d in deg.iter_mut() {
+                    *d += 1.0;
+                }
+            }
+            Some(deg.iter().map(|&d| safe_recip_sqrt(d)).collect())
+        } else {
+            None
+        };
+
+        // pass 2: accumulate Z over the edge list (both directions)
+        let mut z = Dense::zeros(n, k);
+        for i in 0..g.num_edges() {
+            let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+            let (la, lb) = (g.labels[a], g.labels[b]);
+            let s = match &scale {
+                Some(sc) => sc[a] * sc[b],
+                None => 1.0,
+            };
+            if lb >= 0 {
+                *z.get_mut(a, lb as usize) += w * s * wv[b];
+            }
+            if a != b {
+                if la >= 0 {
+                    *z.get_mut(b, la as usize) += w * s * wv[a];
+                }
+            }
+        }
+
+        // diagonal augmentation: self loop of weight 1 on every vertex
+        if opts.diagonal {
+            for v in 0..n {
+                let l = g.labels[v];
+                if l >= 0 {
+                    let s = match &scale {
+                        // self loop scaled by 1/d_v (s_v * s_v)
+                        Some(sc) => sc[v] * sc[v],
+                        None => 1.0,
+                    };
+                    *z.get_mut(v, l as usize) += s * wv[v];
+                }
+            }
+        }
+
+        if opts.correlation {
+            normalize_rows(&mut z);
+        }
+        z
+    }
+
+    /// Peak auxiliary memory in bytes (the dense Z + degree vector) —
+    /// reported by the space benches.
+    pub fn workspace_bytes(&self, g: &Graph) -> usize {
+        g.n * g.k * 8 + g.n * 8
+    }
+}
+
+/// Safe reciprocal is re-exported through ops; silence unused import when
+/// laplacian is off in doctests.
+#[allow(dead_code)]
+fn _keep(x: f64) -> f64 {
+    safe_recip(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::dense_gee::DenseGee;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..m {
+            let a = rng.below(n) as u32;
+            let b = rng.below(n) as u32;
+            g.add_edge(a, b, rng.f64() + 0.1);
+        }
+        g
+    }
+
+    #[test]
+    fn matches_dense_gee_all_combos() {
+        let g = random_graph(31, 60, 200, 4);
+        let dense = DenseGee::default();
+        for opts in GeeOptions::table_order() {
+            let zd = dense.embed(&g, &opts).unwrap();
+            let ze = EdgeListGee.embed(&g, &opts);
+            assert!(
+                zd.max_abs_diff(&ze) < 1e-10,
+                "mismatch at {:?}: {}",
+                opts,
+                zd.max_abs_diff(&ze)
+            );
+        }
+    }
+
+    #[test]
+    fn matches_dense_gee_with_self_loops_and_unlabeled() {
+        let mut g = random_graph(32, 40, 120, 3);
+        g.add_edge(5, 5, 2.0);
+        g.add_edge(7, 7, 1.0);
+        g.labels[3] = -1;
+        g.labels[11] = -1;
+        let dense = DenseGee::default();
+        for opts in GeeOptions::table_order() {
+            let zd = dense.embed(&g, &opts).unwrap();
+            let ze = EdgeListGee.embed(&g, &opts);
+            assert!(zd.max_abs_diff(&ze) < 1e-10, "mismatch at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn sbm_communities_separate_in_embedding() {
+        // On a well-separated SBM the mean embedding of each class should
+        // put the most mass on its own coordinate... with within > between
+        // this means diagonal dominance of the class-mean matrix.
+        let mut params = SbmParams::paper(600);
+        // exaggerate separation for a deterministic test
+        for i in 0..3 {
+            params.block_probs[i * 3 + i] = 0.30;
+        }
+        let g = generate_sbm(&params, 77);
+        let z = EdgeListGee.embed(&g, &GeeOptions::NONE);
+        let mut means = vec![vec![0.0f64; 3]; 3];
+        let counts = g.class_counts();
+        for v in 0..g.n {
+            let l = g.labels[v] as usize;
+            for c in 0..3 {
+                means[l][c] += z.get(v, c) / counts[l] as f64;
+            }
+        }
+        for l in 0..3 {
+            for c in 0..3 {
+                if c != l {
+                    assert!(
+                        means[l][l] > means[l][c],
+                        "class {l} mean not diagonal-dominant: {means:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_linear_in_nk() {
+        let g = random_graph(33, 100, 50, 5);
+        assert_eq!(EdgeListGee.workspace_bytes(&g), 100 * 5 * 8 + 100 * 8);
+    }
+}

@@ -1,0 +1,107 @@
+//! Unified embedding front-end: one enum over the three GEE
+//! implementations plus the PJRT-compiled path, so the coordinator, CLI
+//! and benches can switch engines by name.
+
+use anyhow::Result;
+
+use super::dense_gee::DenseGee;
+use super::edgelist_gee::EdgeListGee;
+use super::options::GeeOptions;
+use super::sparse_gee::SparseGee;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// Which implementation computes the embedding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Dense-adjacency strawman (quadratic; node-budgeted).
+    Dense,
+    /// Original edge-list GEE (Shen & Priebe 2023).
+    EdgeList,
+    /// The paper's sparse GEE, published configuration (DOK + CSR×CSR).
+    Sparse,
+    /// Sparse GEE, §Perf-tuned configuration (direct CSR + CSR×dense).
+    SparseFast,
+}
+
+impl Engine {
+    pub const ALL: &'static [Engine] =
+        &[Engine::Dense, Engine::EdgeList, Engine::Sparse, Engine::SparseFast];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Engine::Dense => "dense",
+            Engine::EdgeList => "edgelist",
+            Engine::Sparse => "sparse",
+            Engine::SparseFast => "sparse-fast",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Engine> {
+        match s {
+            "dense" => Some(Engine::Dense),
+            "edgelist" | "gee" | "original" => Some(Engine::EdgeList),
+            "sparse" => Some(Engine::Sparse),
+            "sparse-fast" | "fast" => Some(Engine::SparseFast),
+            _ => None,
+        }
+    }
+
+    /// Run the embedding. All engines produce identical numerics (tested);
+    /// they differ in data structures and therefore speed/space.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Result<Dense> {
+        match self {
+            Engine::Dense => DenseGee::default().embed(g, opts),
+            Engine::EdgeList => Ok(EdgeListGee.embed(g, opts)),
+            Engine::Sparse => Ok(SparseGee::default().embed(g, opts)),
+            Engine::SparseFast => Ok(SparseGee::fast().embed(g, opts)),
+        }
+    }
+}
+
+/// An embedding result with its provenance.
+#[derive(Clone, Debug)]
+pub struct Embedding {
+    pub z: Dense,
+    pub engine: Engine,
+    pub options: GeeOptions,
+}
+
+impl Embedding {
+    pub fn compute(engine: Engine, g: &Graph, opts: &GeeOptions) -> Result<Embedding> {
+        Ok(Embedding { z: engine.embed(g, opts)?, engine, options: *opts })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn names_roundtrip() {
+        for e in Engine::ALL {
+            assert_eq!(Engine::from_name(e.name()), Some(*e));
+        }
+        assert_eq!(Engine::from_name("original"), Some(Engine::EdgeList));
+        assert_eq!(Engine::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn engines_agree_via_front_end() {
+        let mut rng = Rng::new(51);
+        let mut g = Graph::new(25, 3);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        for _ in 0..70 {
+            g.add_edge(rng.below(25) as u32, rng.below(25) as u32, 1.0);
+        }
+        let opts = GeeOptions::ALL;
+        let base = Engine::Dense.embed(&g, &opts).unwrap();
+        for e in Engine::ALL {
+            let z = e.embed(&g, &opts).unwrap();
+            assert!(base.max_abs_diff(&z) < 1e-10, "{} disagrees", e.name());
+        }
+    }
+}

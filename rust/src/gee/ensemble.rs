@@ -1,0 +1,176 @@
+//! Unsupervised GEE via the encoder *ensemble* (Shen, Park & Priebe 2023,
+//! ref [11] of the paper): simultaneous vertex embedding and community
+//! detection when **no labels are given**.
+//!
+//! Algorithm (per the reference):
+//! 1. draw R random label initializations;
+//! 2. for each, alternate GEE-embed → k-means-relabel until the labels
+//!    stop changing (or max iters);
+//! 3. keep the replicate with the best clustering objective (minimal
+//!    normalized k-means inertia).
+//!
+//! Uses the §Perf [`PreparedGraph`](super::sparse_gee::PreparedGraph)
+//! so the per-iteration cost is one accumulation pass — the refinement
+//! loop re-embeds under *new labels*, which only needs the label/weight
+//! vectors recomputed, not the graph structure.
+
+use super::options::GeeOptions;
+use super::sparse_gee::SparseGee;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+use crate::tasks::kmeans::{kmeans, KMeansConfig};
+use crate::util::rng::Rng;
+
+/// Ensemble configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EnsembleConfig {
+    /// Number of random restarts (replicates).
+    pub replicates: usize,
+    /// Max embed→cluster refinement rounds per replicate.
+    pub max_rounds: usize,
+    /// Options used for the embedding step (diag+lap recommended).
+    pub options: GeeOptions,
+    pub seed: u64,
+}
+
+impl EnsembleConfig {
+    pub fn new(replicates: usize) -> Self {
+        EnsembleConfig {
+            replicates,
+            max_rounds: 20,
+            options: GeeOptions::new(true, true, false),
+            seed: 0xE25E,
+        }
+    }
+}
+
+/// Result of the unsupervised ensemble.
+#[derive(Clone, Debug)]
+pub struct EnsembleResult {
+    /// Detected community per vertex (0..k).
+    pub labels: Vec<i32>,
+    /// Final embedding under the detected labels.
+    pub z: Dense,
+    /// Normalized inertia of the winning replicate (lower = tighter).
+    pub objective: f64,
+    /// Rounds until convergence, per replicate.
+    pub rounds: Vec<usize>,
+}
+
+/// Run unsupervised GEE: detect `k` communities with no label input.
+pub fn gee_ensemble(g: &Graph, k: usize, cfg: &EnsembleConfig) -> EnsembleResult {
+    assert!(k >= 1);
+    let mut rng = Rng::new(cfg.seed);
+    let mut best: Option<EnsembleResult> = None;
+    let mut rounds_log = Vec::with_capacity(cfg.replicates);
+
+    for _ in 0..cfg.replicates {
+        // random init
+        let mut labels: Vec<i32> = (0..g.n).map(|_| rng.below(k) as i32).collect();
+        let mut rounds = 0usize;
+        let mut z = Dense::zeros(g.n, k);
+        for round in 0..cfg.max_rounds {
+            rounds = round + 1;
+            // embed under current labels
+            let mut gl = g.clone();
+            gl.k = k;
+            gl.labels = labels.clone();
+            z = SparseGee::fast().embed(&gl, &cfg.options);
+            // re-cluster in embedding space
+            let km = kmeans(
+                &z,
+                &KMeansConfig { k, max_iters: 50, tol: 1e-6, seed: rng.next_u64() },
+            );
+            let new_labels: Vec<i32> = km.assignments.iter().map(|&c| c as i32).collect();
+            let changed = new_labels
+                .iter()
+                .zip(labels.iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            labels = new_labels;
+            if changed == 0 {
+                break;
+            }
+        }
+        rounds_log.push(rounds);
+        // objective: k-means inertia normalized by total variance
+        let km = kmeans(&z, &KMeansConfig { k, max_iters: 50, tol: 1e-6, seed: 1 });
+        let total_var: f64 = {
+            let mut mean = vec![0.0; z.ncols];
+            for r in 0..z.nrows {
+                for (m, &v) in mean.iter_mut().zip(z.row(r)) {
+                    *m += v / z.nrows as f64;
+                }
+            }
+            (0..z.nrows)
+                .map(|r| {
+                    z.row(r)
+                        .iter()
+                        .zip(mean.iter())
+                        .map(|(v, m)| (v - m) * (v - m))
+                        .sum::<f64>()
+                })
+                .sum()
+        };
+        let objective = if total_var > 0.0 { km.inertia / total_var } else { km.inertia };
+        let candidate = EnsembleResult { labels, z, objective, rounds: vec![] };
+        best = match best {
+            Some(b) if b.objective <= candidate.objective => Some(b),
+            _ => Some(candidate),
+        };
+    }
+    let mut out = best.expect("replicates >= 1");
+    out.rounds = rounds_log;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+    use crate::tasks::metrics::adjusted_rand_index;
+
+    fn well_separated_sbm(n: usize, seed: u64) -> Graph {
+        let mut p = SbmParams::paper(n);
+        for i in 0..3 {
+            p.block_probs[i * 3 + i] = 0.35; // strong communities
+        }
+        generate_sbm(&p, seed)
+    }
+
+    #[test]
+    fn recovers_sbm_communities_without_labels() {
+        let g = well_separated_sbm(400, 5);
+        let truth: Vec<usize> = g.labels.iter().map(|&l| l as usize).collect();
+        let res = gee_ensemble(&g, 3, &EnsembleConfig::new(4));
+        let pred: Vec<usize> = res.labels.iter().map(|&l| l as usize).collect();
+        let ari = adjusted_rand_index(&pred, &truth);
+        assert!(ari > 0.8, "ensemble ARI {ari}");
+        assert_eq!(res.z.nrows, 400);
+        assert!(res.objective.is_finite());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = well_separated_sbm(150, 6);
+        let a = gee_ensemble(&g, 3, &EnsembleConfig::new(2));
+        let b = gee_ensemble(&g, 3, &EnsembleConfig::new(2));
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn rounds_logged_per_replicate() {
+        let g = well_separated_sbm(100, 7);
+        let cfg = EnsembleConfig { replicates: 3, ..EnsembleConfig::new(3) };
+        let res = gee_ensemble(&g, 3, &cfg);
+        assert_eq!(res.rounds.len(), 3);
+        assert!(res.rounds.iter().all(|&r| (1..=20).contains(&r)));
+    }
+
+    #[test]
+    fn k_one_trivially_converges() {
+        let g = well_separated_sbm(60, 8);
+        let res = gee_ensemble(&g, 1, &EnsembleConfig::new(1));
+        assert!(res.labels.iter().all(|&l| l == 0));
+    }
+}

@@ -1,0 +1,20 @@
+//! GEE core: the paper's method and its baselines.
+//!
+//! * [`options::GeeOptions`] — lap / diag / cor flags (Tables 3-4 grid)
+//! * [`weights`] — W construction in every storage format
+//! * [`dense_gee::DenseGee`] — dense-adjacency strawman
+//! * [`edgelist_gee::EdgeListGee`] — the original GEE (linear, edge list)
+//! * [`sparse_gee::SparseGee`] — the paper's sparse pipeline (DOK→CSR)
+//! * [`embed::Engine`] — unified front-end over all implementations
+
+pub mod dense_gee;
+pub mod ensemble;
+pub mod edgelist_gee;
+pub mod embed;
+pub mod fusion;
+pub mod options;
+pub mod sparse_gee;
+pub mod weights;
+
+pub use embed::{Embedding, Engine};
+pub use options::GeeOptions;

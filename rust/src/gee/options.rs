@@ -1,0 +1,120 @@
+//! The three GEE options (paper §2): Laplacian normalization, diagonal
+//! augmentation, correlation — and the 8-combination grid Tables 3-4
+//! sweep.
+
+/// Option flags for a GEE run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub struct GeeOptions {
+    /// Replace A with D^-1/2 A D^-1/2 (Laplacian normalization).
+    pub laplacian: bool,
+    /// Replace A with A + I (diagonal augmentation).
+    pub diagonal: bool,
+    /// Row-normalize Z to unit 2-norm (correlation).
+    pub correlation: bool,
+}
+
+impl GeeOptions {
+    pub const NONE: GeeOptions =
+        GeeOptions { laplacian: false, diagonal: false, correlation: false };
+    pub const ALL: GeeOptions =
+        GeeOptions { laplacian: true, diagonal: true, correlation: true };
+
+    pub fn new(laplacian: bool, diagonal: bool, correlation: bool) -> Self {
+        GeeOptions { laplacian, diagonal, correlation }
+    }
+
+    /// All 8 combinations, in the paper's table order: Lap=T half first
+    /// (Table 3), then Lap=F (Table 4); within a half, Diag=T before
+    /// Diag=F, Cor=T before Cor=F.
+    pub fn table_order() -> Vec<GeeOptions> {
+        let mut out = Vec::with_capacity(8);
+        for &lap in &[true, false] {
+            for &diag in &[true, false] {
+                for &cor in &[true, false] {
+                    out.push(GeeOptions::new(lap, diag, cor));
+                }
+            }
+        }
+        out
+    }
+
+    /// Header label as printed in Tables 3-4.
+    pub fn label(&self) -> String {
+        fn tf(b: bool) -> char {
+            if b {
+                'T'
+            } else {
+                'F'
+            }
+        }
+        format!(
+            "Lap = {}, Diag = {}, Cor = {}",
+            tf(self.laplacian),
+            tf(self.diagonal),
+            tf(self.correlation)
+        )
+    }
+
+    /// Compact code matching artifact names: e.g. "l-c", "---", "ldc".
+    pub fn code(&self) -> String {
+        format!(
+            "{}{}{}",
+            if self.laplacian { 'l' } else { '-' },
+            if self.diagonal { 'd' } else { '-' },
+            if self.correlation { 'c' } else { '-' },
+        )
+    }
+
+    /// Parse a compact code (inverse of [`code`](Self::code)).
+    pub fn from_code(code: &str) -> Option<GeeOptions> {
+        let b: Vec<char> = code.chars().collect();
+        if b.len() != 3 {
+            return None;
+        }
+        let pick = |c: char, on: char| -> Option<bool> {
+            if c == on {
+                Some(true)
+            } else if c == '-' {
+                Some(false)
+            } else {
+                None
+            }
+        };
+        Some(GeeOptions {
+            laplacian: pick(b[0], 'l')?,
+            diagonal: pick(b[1], 'd')?,
+            correlation: pick(b[2], 'c')?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eight_unique_combos() {
+        let combos = GeeOptions::table_order();
+        assert_eq!(combos.len(), 8);
+        let set: std::collections::HashSet<_> = combos.iter().collect();
+        assert_eq!(set.len(), 8);
+        // table order: first four have laplacian on
+        assert!(combos[..4].iter().all(|o| o.laplacian));
+        assert!(combos[4..].iter().all(|o| !o.laplacian));
+    }
+
+    #[test]
+    fn label_matches_paper_format() {
+        let o = GeeOptions::new(true, false, true);
+        assert_eq!(o.label(), "Lap = T, Diag = F, Cor = T");
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for o in GeeOptions::table_order() {
+            assert_eq!(GeeOptions::from_code(&o.code()), Some(o));
+        }
+        assert_eq!(GeeOptions::from_code("xyz"), None);
+        assert_eq!(GeeOptions::from_code("ld"), None);
+    }
+}

@@ -1,0 +1,137 @@
+//! Construction of the paper's weight matrix W (§2): the normalized
+//! one-hot encoding with `W[j, y_j] = 1/n_{y_j}`, in each storage format
+//! the three GEE variants consume.
+
+use crate::sparse::{Csr, Dense, Dok};
+
+/// Per-class vertex counts as f64 (unlabeled vertices excluded).
+pub fn class_counts(labels: &[i32], k: usize) -> Vec<f64> {
+    let mut n_k = vec![0.0f64; k];
+    for &l in labels {
+        if l >= 0 {
+            n_k[l as usize] += 1.0;
+        }
+    }
+    n_k
+}
+
+/// Dense N×K weight matrix (baseline GEE variants).
+pub fn weight_matrix_dense(labels: &[i32], k: usize) -> Dense {
+    let n_k = class_counts(labels, k);
+    let mut w = Dense::zeros(labels.len(), k);
+    for (j, &l) in labels.iter().enumerate() {
+        if l >= 0 && n_k[l as usize] > 0.0 {
+            *w.get_mut(j, l as usize) = 1.0 / n_k[l as usize];
+        }
+    }
+    w
+}
+
+/// The paper's construction path: build W in DOK (random-access inserts),
+/// exactly as the scipy implementation does before converting to CSR.
+pub fn weight_matrix_dok(labels: &[i32], k: usize) -> Dok {
+    let n_k = class_counts(labels, k);
+    let mut w = Dok::with_capacity(labels.len(), k, labels.len());
+    for (j, &l) in labels.iter().enumerate() {
+        if l >= 0 && n_k[l as usize] > 0.0 {
+            w.set(j as u32, l as u32, 1.0 / n_k[l as usize]);
+        }
+    }
+    w
+}
+
+/// Direct CSR construction — the §Perf fast path: W has exactly one entry
+/// per labeled row, so CSR can be emitted in one pass with no hashing and
+/// no sort. Ablation partner of [`weight_matrix_dok`].
+pub fn weight_matrix_csr_direct(labels: &[i32], k: usize) -> Csr {
+    let n_k = class_counts(labels, k);
+    let n = labels.len();
+    let mut indptr = Vec::with_capacity(n + 1);
+    let mut indices = Vec::with_capacity(n);
+    let mut data = Vec::with_capacity(n);
+    indptr.push(0);
+    for &l in labels {
+        if l >= 0 && n_k[l as usize] > 0.0 {
+            indices.push(l as u32);
+            data.push(1.0 / n_k[l as usize]);
+        }
+        indptr.push(indices.len());
+    }
+    Csr { nrows: n, ncols: k, indptr, indices, data }
+}
+
+/// Per-vertex weight value `1/n_{y_j}` (0 for unlabeled) — the edge-list
+/// GEE variant consumes W in this collapsed form.
+pub fn weight_values(labels: &[i32], k: usize) -> Vec<f64> {
+    let n_k = class_counts(labels, k);
+    labels
+        .iter()
+        .map(|&l| {
+            if l >= 0 && n_k[l as usize] > 0.0 {
+                1.0 / n_k[l as usize]
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const LABELS: &[i32] = &[0, 0, 1, 2, 2, 2, -1];
+
+    #[test]
+    fn counts_exclude_unlabeled() {
+        assert_eq!(class_counts(LABELS, 3), vec![2.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn dense_columns_sum_to_one() {
+        let w = weight_matrix_dense(LABELS, 3);
+        for c in 0..3 {
+            let sum: f64 = (0..7).map(|r| w.get(r, c)).sum();
+            assert!((sum - 1.0).abs() < 1e-12, "col {c} sums to {sum}");
+        }
+        assert_eq!(w.row(6), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn all_formats_agree() {
+        let dense = weight_matrix_dense(LABELS, 3);
+        let dok = weight_matrix_dok(LABELS, 3).to_csr().to_dense();
+        let direct = weight_matrix_csr_direct(LABELS, 3).to_dense();
+        assert!(dense.max_abs_diff(&dok) < 1e-15);
+        assert!(dense.max_abs_diff(&direct) < 1e-15);
+    }
+
+    #[test]
+    fn direct_csr_has_one_entry_per_labeled_row() {
+        let w = weight_matrix_csr_direct(LABELS, 3);
+        assert_eq!(w.nnz(), 6);
+        assert_eq!(w.indptr.len(), 8);
+    }
+
+    #[test]
+    fn weight_values_match_dense_diagonal() {
+        let vals = weight_values(LABELS, 3);
+        let dense = weight_matrix_dense(LABELS, 3);
+        for (j, &l) in LABELS.iter().enumerate() {
+            if l >= 0 {
+                assert_eq!(vals[j], dense.get(j, l as usize));
+            } else {
+                assert_eq!(vals[j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_class_is_all_zero() {
+        let labels = &[0, 0, 2]; // class 1 empty
+        let w = weight_matrix_dense(labels, 3);
+        for r in 0..3 {
+            assert_eq!(w.get(r, 1), 0.0);
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! Dataset twins — synthetic stand-ins for the paper's Table 2 benchmark
+//! graphs (Network Depository downloads are unavailable offline; see
+//! DESIGN.md §Substitutions).
+//!
+//! Each twin matches the real dataset on every quantity the paper's
+//! measurements depend on: vertex count, (undirected) edge count, class
+//! count, and edge density (Eq. 2) — the sparse-op runtimes being measured
+//! are functions of (N, E, K) and the sparsity pattern, not of semantic
+//! content. Citation/bio graphs are planted-partition SBM twins; the
+//! CL-100K pair uses the Chung-Lu power-law generator its name refers to.
+
+use super::chung_lu::{generate_chung_lu, ChungLuParams};
+use super::edgelist::Graph;
+use super::sbm::{generate_sbm, SbmParams};
+
+/// How a twin is generated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Planted-partition SBM fitted to (n, e, k).
+    Sbm,
+    /// Chung-Lu power-law with γ = 1.8.
+    ChungLu,
+}
+
+/// A Table-2 dataset description.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    pub classes: usize,
+    pub family: Family,
+    /// Seed so every run of every bench sees the identical twin.
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Edge density per Eq. (2).
+    pub fn density(&self) -> f64 {
+        2.0 * self.edges as f64 / (self.nodes as f64 * (self.nodes as f64 - 1.0))
+    }
+
+    /// Generate the twin graph.
+    pub fn generate(&self) -> Graph {
+        match self.family {
+            Family::Sbm => {
+                let probs = vec![1.0 / self.classes as f64; self.classes];
+                let params =
+                    SbmParams::fitted(self.nodes, self.classes, self.edges, 3.0, probs);
+                generate_sbm(&params, self.seed)
+            }
+            Family::ChungLu => {
+                let params = ChungLuParams {
+                    n: self.nodes,
+                    edges: self.edges,
+                    gamma: 1.8,
+                    k: self.classes,
+                };
+                generate_chung_lu(&params, self.seed)
+            }
+        }
+    }
+}
+
+/// The paper's Table 2, in order.
+pub const TABLE2: &[DatasetSpec] = &[
+    DatasetSpec { name: "Citeseer", nodes: 3_327, edges: 4_732, classes: 6, family: Family::Sbm, seed: 0x5EED_0001 },
+    DatasetSpec { name: "Cora", nodes: 2_708, edges: 5_429, classes: 7, family: Family::Sbm, seed: 0x5EED_0002 },
+    DatasetSpec { name: "proteins-all", nodes: 43_471, edges: 162_088, classes: 3, family: Family::Sbm, seed: 0x5EED_0003 },
+    DatasetSpec { name: "PubMed", nodes: 19_717, edges: 44_338, classes: 3, family: Family::Sbm, seed: 0x5EED_0004 },
+    DatasetSpec { name: "CL-100K-1d8-L9", nodes: 92_482, edges: 373_986, classes: 9, family: Family::ChungLu, seed: 0x5EED_0005 },
+    DatasetSpec { name: "CL-100K-1d8-L5", nodes: 92_482, edges: 10_000_000, classes: 5, family: Family::ChungLu, seed: 0x5EED_0006 },
+];
+
+/// Look a spec up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+    let needle = name.to_ascii_lowercase();
+    TABLE2.iter().find(|s| s.name.to_ascii_lowercase() == needle)
+}
+
+/// The paper's Table 2 densities, for cross-checking the twins.
+pub fn paper_density(name: &str) -> Option<f64> {
+    match name {
+        "Citeseer" => Some(0.00085),
+        "Cora" => Some(0.00148),
+        "proteins-all" => Some(0.00017),
+        "PubMed" => Some(0.00023),
+        "CL-100K-1d8-L9" => Some(0.00009),
+        "CL-100K-1d8-L5" => Some(0.00234),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_six_datasets() {
+        assert_eq!(TABLE2.len(), 6);
+        assert!(by_name("cora").is_some());
+        assert!(by_name("CL-100K-1d8-L5").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn densities_match_paper_table2() {
+        for spec in TABLE2 {
+            let expect = paper_density(spec.name).unwrap();
+            let got = spec.density();
+            // Table 2 rounds to 5 decimals
+            assert!(
+                (got - expect).abs() < 5e-5,
+                "{}: computed {got} vs paper {expect}",
+                spec.name
+            );
+        }
+    }
+
+    #[test]
+    fn small_twins_match_spec_counts() {
+        for spec in TABLE2.iter().take(2) {
+            let g = spec.generate();
+            assert_eq!(g.n, spec.nodes);
+            assert_eq!(g.k, spec.classes);
+            let got = g.num_edges() as f64;
+            let want = spec.edges as f64;
+            let tol: f64 = if spec.family == Family::ChungLu { 0.0 } else { 0.08 };
+            assert!(
+                (got - want).abs() / want <= tol.max(1e-9),
+                "{}: edges {got} vs {want}",
+                spec.name
+            );
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn twins_are_reproducible() {
+        let spec = by_name("Cora").unwrap();
+        let a = spec.generate();
+        let b = spec.generate();
+        assert_eq!(a.src, b.src);
+        assert_eq!(a.labels, b.labels);
+    }
+}

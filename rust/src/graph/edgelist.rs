@@ -1,0 +1,223 @@
+//! The labeled graph type shared by every layer: an undirected weighted
+//! edge list (each edge stored once) plus vertex labels.
+//!
+//! Conventions match the paper and the AOT model contract:
+//! * labels are `i32`, `-1` = unlabeled/padding;
+//! * the *directed view* (both orientations of every edge, self loops once)
+//!   is what GEE and the compiled artifacts consume;
+//! * edge weights default to 1.0 when the source data has none.
+
+use crate::sparse::Coo;
+
+/// Undirected, weighted, vertex-labeled graph.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    /// Vertex count.
+    pub n: usize,
+    /// Number of label classes K (class ids are `0..k`).
+    pub k: usize,
+    /// Edge endpoints (each undirected edge once; `src[i] == dst[i]` is a
+    /// self loop).
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    /// Edge weights, same length as `src`/`dst`.
+    pub w: Vec<f64>,
+    /// Vertex labels in `[0, k)`, or -1.
+    pub labels: Vec<i32>,
+}
+
+impl Graph {
+    /// Empty graph with `n` vertices, `k` classes, all vertices unlabeled.
+    pub fn new(n: usize, k: usize) -> Self {
+        Graph { n, k, src: vec![], dst: vec![], w: vec![], labels: vec![-1; n] }
+    }
+
+    /// Number of stored (undirected) edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    /// Number of directed slots the edge list expands to (self loops count
+    /// once, proper edges twice) — the `E` the AOT buckets are sized by.
+    pub fn num_directed(&self) -> usize {
+        let loops = self
+            .src
+            .iter()
+            .zip(self.dst.iter())
+            .filter(|(a, b)| a == b)
+            .count();
+        2 * (self.num_edges() - loops) + loops
+    }
+
+    /// Append an undirected edge.
+    #[inline]
+    pub fn add_edge(&mut self, a: u32, b: u32, w: f64) {
+        debug_assert!((a as usize) < self.n && (b as usize) < self.n);
+        self.src.push(a);
+        self.dst.push(b);
+        self.w.push(w);
+    }
+
+    /// Edge density per the paper's Eq. (2): `2|E| / (|V|(|V|-1))`.
+    pub fn density(&self) -> f64 {
+        if self.n < 2 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / (self.n as f64 * (self.n as f64 - 1.0))
+    }
+
+    /// Directed expansion as COO adjacency: both orientations of each
+    /// proper edge, self loops once. This is `A` in the paper.
+    pub fn adjacency(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.n, self.n, self.num_directed());
+        for i in 0..self.num_edges() {
+            let (a, b, w) = (self.src[i], self.dst[i], self.w[i]);
+            coo.push(a, b, w);
+            if a != b {
+                coo.push(b, a, w);
+            }
+        }
+        coo
+    }
+
+    /// Directed edge arrays `(src, dst, w)` — the runtime's input layout.
+    pub fn directed_edges(&self) -> (Vec<u32>, Vec<u32>, Vec<f64>) {
+        let m = self.num_directed();
+        let mut src = Vec::with_capacity(m);
+        let mut dst = Vec::with_capacity(m);
+        let mut w = Vec::with_capacity(m);
+        for i in 0..self.num_edges() {
+            let (a, b, ww) = (self.src[i], self.dst[i], self.w[i]);
+            src.push(a);
+            dst.push(b);
+            w.push(ww);
+            if a != b {
+                src.push(b);
+                dst.push(a);
+                w.push(ww);
+            }
+        }
+        (src, dst, w)
+    }
+
+    /// Weighted degree of every vertex (self loops count once).
+    pub fn degrees(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.n];
+        for i in 0..self.num_edges() {
+            let (a, b, w) = (self.src[i] as usize, self.dst[i] as usize, self.w[i]);
+            d[a] += w;
+            if a != b {
+                d[b] += w;
+            }
+        }
+        d
+    }
+
+    /// Count of vertices per class (length k; unlabeled excluded).
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.k];
+        for &l in &self.labels {
+            if l >= 0 {
+                c[l as usize] += 1;
+            }
+        }
+        c
+    }
+
+    /// Sanity-check internal invariants; returns an error string if broken.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.labels.len() != self.n {
+            return Err(format!("labels len {} != n {}", self.labels.len(), self.n));
+        }
+        if self.src.len() != self.dst.len() || self.src.len() != self.w.len() {
+            return Err("edge array length mismatch".into());
+        }
+        for i in 0..self.num_edges() {
+            if self.src[i] as usize >= self.n || self.dst[i] as usize >= self.n {
+                return Err(format!("edge {i} endpoint out of range"));
+            }
+            if !self.w[i].is_finite() {
+                return Err(format!("edge {i} non-finite weight"));
+            }
+        }
+        for (v, &l) in self.labels.iter().enumerate() {
+            if l >= self.k as i32 {
+                return Err(format!("vertex {v} label {l} >= k {}", self.k));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle() -> Graph {
+        let mut g = Graph::new(3, 2);
+        g.labels = vec![0, 0, 1];
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(2, 0, 3.0);
+        g
+    }
+
+    #[test]
+    fn density_eq2() {
+        let g = triangle();
+        assert!((g.density() - 1.0).abs() < 1e-12); // complete graph
+        let mut g2 = Graph::new(4, 1);
+        g2.add_edge(0, 1, 1.0);
+        assert!((g2.density() - 2.0 / 12.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn directed_expansion_counts() {
+        let mut g = triangle();
+        g.add_edge(1, 1, 5.0); // self loop
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.num_directed(), 7);
+        let (src, dst, w) = g.directed_edges();
+        assert_eq!(src.len(), 7);
+        assert_eq!(dst.len(), 7);
+        assert_eq!(w.len(), 7);
+    }
+
+    #[test]
+    fn adjacency_symmetric() {
+        let g = triangle();
+        let d = g.adjacency().to_dense();
+        for r in 0..3 {
+            for c in 0..3 {
+                assert_eq!(d.get(r, c), d.get(c, r));
+            }
+        }
+        assert_eq!(d.get(0, 1), 1.0);
+        assert_eq!(d.get(2, 1), 2.0);
+    }
+
+    #[test]
+    fn degrees_count_self_loop_once() {
+        let mut g = Graph::new(2, 1);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 0, 2.0);
+        assert_eq!(g.degrees(), vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn class_counts_skip_unlabeled() {
+        let mut g = triangle();
+        g.labels[1] = -1;
+        assert_eq!(g.class_counts(), vec![1, 1]);
+    }
+
+    #[test]
+    fn validate_catches_bad_label() {
+        let mut g = triangle();
+        g.labels[0] = 7;
+        assert!(g.validate().is_err());
+        let g2 = triangle();
+        assert!(g2.validate().is_ok());
+    }
+}

@@ -1,0 +1,164 @@
+//! Edge-list file I/O — the interchange format the paper's tooling uses
+//! (one `src dst [weight]` line per edge, plus a companion `.labels` file
+//! with one integer label per vertex line).
+//!
+//! Lines starting with `#` or `%` are comments (Network-Depository files
+//! use both). Separators: any run of spaces/tabs/commas.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::edgelist::Graph;
+
+/// Parse an edge-list file into a graph. `n` is inferred as max id + 1
+/// unless `min_n` raises it; labels start unlabeled (use
+/// [`read_labels`] to fill them).
+pub fn read_edges(path: &Path, min_n: usize) -> Result<Graph> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut w = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut parts = t.split(|c: char| c.is_whitespace() || c == ',').filter(|s| !s.is_empty());
+        let a: u32 = parts
+            .next()
+            .with_context(|| format!("{}:{}: missing src", path.display(), lineno + 1))?
+            .parse()
+            .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
+        let b: u32 = parts
+            .next()
+            .with_context(|| format!("{}:{}: missing dst", path.display(), lineno + 1))?
+            .parse()
+            .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
+        let weight: f64 = match parts.next() {
+            Some(s) => s
+                .parse()
+                .with_context(|| format!("{}:{}: bad weight", path.display(), lineno + 1))?,
+            None => 1.0,
+        };
+        max_id = max_id.max(a).max(b);
+        src.push(a);
+        dst.push(b);
+        w.push(weight);
+    }
+    let n = (max_id as usize + 1).max(min_n);
+    let mut g = Graph::new(n, 0);
+    g.src = src;
+    g.dst = dst;
+    g.w = w;
+    g.labels = vec![-1; n];
+    Ok(g)
+}
+
+/// Read one label per line into an existing graph; sets `k` = max + 1.
+pub fn read_labels(path: &Path, g: &mut Graph) -> Result<()> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut labels = Vec::with_capacity(g.n);
+    for line in BufReader::new(file).lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        labels.push(t.parse::<i32>().context("bad label")?);
+    }
+    if labels.len() != g.n {
+        bail!("label count {} != vertex count {}", labels.len(), g.n);
+    }
+    g.k = labels.iter().copied().max().unwrap_or(-1).max(-1) as usize + 1;
+    g.labels = labels;
+    Ok(())
+}
+
+/// Write a graph to `<stem>.edges` + `<stem>.labels`.
+pub fn write_graph(stem: &Path, g: &Graph) -> Result<()> {
+    let epath = stem.with_extension("edges");
+    let mut ef = BufWriter::new(File::create(&epath)?);
+    writeln!(ef, "# {} vertices, {} undirected edges", g.n, g.num_edges())?;
+    for i in 0..g.num_edges() {
+        if (g.w[i] - 1.0).abs() < f64::EPSILON {
+            writeln!(ef, "{} {}", g.src[i], g.dst[i])?;
+        } else {
+            writeln!(ef, "{} {} {}", g.src[i], g.dst[i], g.w[i])?;
+        }
+    }
+    let lpath = stem.with_extension("labels");
+    let mut lf = BufWriter::new(File::create(&lpath)?);
+    for &l in &g.labels {
+        writeln!(lf, "{l}")?;
+    }
+    Ok(())
+}
+
+/// Load `<stem>.edges` + `<stem>.labels`.
+pub fn read_graph(stem: &Path) -> Result<Graph> {
+    let mut g = read_edges(&stem.with_extension("edges"), 0)?;
+    let lpath = stem.with_extension("labels");
+    if lpath.exists() {
+        read_labels(&lpath, &mut g)?;
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("gee_io_test_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_graph() {
+        let mut g = Graph::new(4, 2);
+        g.labels = vec![0, 1, 1, -1];
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 2.5);
+        let stem = tmpdir().join("roundtrip");
+        write_graph(&stem, &g).unwrap();
+        let g2 = read_graph(&stem).unwrap();
+        assert_eq!(g2.n, 4);
+        assert_eq!(g2.k, 2);
+        assert_eq!(g2.src, g.src);
+        assert_eq!(g2.w, g.w);
+        assert_eq!(g2.labels, g.labels);
+    }
+
+    #[test]
+    fn parses_comments_and_commas() {
+        let p = tmpdir().join("commas.edges");
+        std::fs::write(&p, "# comment\n% another\n0,1\n1 2 0.5\n\n").unwrap();
+        let g = read_edges(&p, 0).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.w, vec![1.0, 0.5]);
+        assert_eq!(g.n, 3);
+    }
+
+    #[test]
+    fn min_n_raises_vertex_count() {
+        let p = tmpdir().join("minn.edges");
+        std::fs::write(&p, "0 1\n").unwrap();
+        let g = read_edges(&p, 10).unwrap();
+        assert_eq!(g.n, 10);
+    }
+
+    #[test]
+    fn label_count_mismatch_errors() {
+        let d = tmpdir();
+        std::fs::write(d.join("bad.edges"), "0 1\n").unwrap();
+        std::fs::write(d.join("bad.labels"), "0\n1\n2\n").unwrap();
+        let mut g = read_edges(&d.join("bad.edges"), 0).unwrap();
+        assert!(read_labels(&d.join("bad.labels"), &mut g).is_err());
+    }
+}

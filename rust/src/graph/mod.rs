@@ -1,0 +1,12 @@
+//! Graph layer: the labeled-graph type, generators for the paper's
+//! workloads (SBM §4.1, Chung-Lu twins of the Table-2 benchmark data),
+//! file I/O, and the statistics behind Fig. 2 / Table 2.
+
+pub mod chung_lu;
+pub mod datasets;
+pub mod edgelist;
+pub mod io;
+pub mod sbm;
+pub mod stats;
+
+pub use edgelist::Graph;

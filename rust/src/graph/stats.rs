@@ -1,0 +1,158 @@
+//! Graph statistics — everything Fig. 2's four panels report, plus degree
+//! summaries used by examples and EXPERIMENTS.md.
+
+use super::edgelist::Graph;
+
+/// The data behind the paper's Fig. 2 (SBM structure panels).
+#[derive(Clone, Debug)]
+pub struct Fig2Stats {
+    /// Panel (lower left): vertices per class.
+    pub class_counts: Vec<usize>,
+    /// Panel (lower right): class percentage of the population.
+    pub class_percent: Vec<f64>,
+    /// Panel (upper left): empirical within/between block edge densities,
+    /// K×K row-major.
+    pub block_density: Vec<f64>,
+    /// Panel (upper right): the block probabilities are a model input; here
+    /// we store the empirical edge counts per block, K×K row-major.
+    pub block_edges: Vec<usize>,
+}
+
+/// Compute all Fig. 2 panels for a labeled graph.
+pub fn fig2_stats(g: &Graph) -> Fig2Stats {
+    let k = g.k;
+    let counts = g.class_counts();
+    let total: usize = counts.iter().sum();
+    let percent: Vec<f64> = counts
+        .iter()
+        .map(|&c| 100.0 * c as f64 / total.max(1) as f64)
+        .collect();
+
+    let mut block_edges = vec![0usize; k * k];
+    for i in 0..g.num_edges() {
+        let (a, b) = (g.labels[g.src[i] as usize], g.labels[g.dst[i] as usize]);
+        if a < 0 || b < 0 {
+            continue;
+        }
+        let (a, b) = (a as usize, b as usize);
+        block_edges[a * k + b] += 1;
+        if a != b {
+            block_edges[b * k + a] += 1;
+        }
+    }
+
+    let mut block_density = vec![0.0; k * k];
+    for a in 0..k {
+        for b in 0..k {
+            let pairs = if a == b {
+                counts[a] as f64 * (counts[a] as f64 - 1.0) / 2.0
+            } else {
+                counts[a] as f64 * counts[b] as f64
+            };
+            // within-block edges were double-counted into the symmetric
+            // matrix only once (a==b case added once)
+            let e = block_edges[a * k + b] as f64;
+            block_density[a * k + b] = if pairs > 0.0 { e / pairs } else { 0.0 };
+        }
+    }
+
+    Fig2Stats { class_counts: counts, class_percent: percent, block_density, block_edges }
+}
+
+/// Degree distribution summary.
+#[derive(Clone, Debug)]
+pub struct DegreeStats {
+    pub min: f64,
+    pub max: f64,
+    pub mean: f64,
+    pub isolated: usize,
+}
+
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let deg = g.degrees();
+    let mut min = f64::INFINITY;
+    let mut max = 0.0f64;
+    let mut sum = 0.0;
+    let mut isolated = 0usize;
+    for &d in &deg {
+        min = min.min(d);
+        max = max.max(d);
+        sum += d;
+        if d == 0.0 {
+            isolated += 1;
+        }
+    }
+    DegreeStats {
+        min: if deg.is_empty() { 0.0 } else { min },
+        max,
+        mean: sum / deg.len().max(1) as f64,
+        isolated,
+    }
+}
+
+/// Histogram of integer-rounded degrees in log2 buckets (for power-law
+/// eyeballing in examples).
+pub fn degree_histogram_log2(g: &Graph) -> Vec<(u32, usize)> {
+    let mut buckets: Vec<usize> = Vec::new();
+    for d in g.degrees() {
+        let b = if d < 1.0 { 0 } else { (d.log2().floor() as u32) + 1 } as usize;
+        if b >= buckets.len() {
+            buckets.resize(b + 1, 0);
+        }
+        buckets[b] += 1;
+    }
+    buckets
+        .into_iter()
+        .enumerate()
+        .map(|(i, c)| (i as u32, c))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+
+    #[test]
+    fn fig2_panels_consistent() {
+        let g = generate_sbm(&SbmParams::paper(2000), 5);
+        let s = fig2_stats(&g);
+        assert_eq!(s.class_counts.len(), 3);
+        assert!((s.class_percent.iter().sum::<f64>() - 100.0).abs() < 1e-9);
+        // empirical block densities should approximate 0.13 / 0.10
+        for a in 0..3 {
+            for b in 0..3 {
+                let d = s.block_density[a * 3 + b];
+                let expect = if a == b { 0.13 } else { 0.10 };
+                assert!(
+                    (d - expect).abs() < 0.02,
+                    "block ({a},{b}) density {d} vs {expect}"
+                );
+            }
+        }
+        // block matrix symmetric
+        for a in 0..3 {
+            for b in 0..3 {
+                assert_eq!(s.block_edges[a * 3 + b], s.block_edges[b * 3 + a]);
+            }
+        }
+    }
+
+    #[test]
+    fn degree_stats_basic() {
+        let mut g = Graph::new(4, 1);
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(0, 2, 1.0);
+        let s = degree_stats(&g);
+        assert_eq!(s.max, 2.0);
+        assert_eq!(s.isolated, 1);
+        assert!((s.mean - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_all_vertices() {
+        let g = generate_sbm(&SbmParams::paper(500), 6);
+        let h = degree_histogram_log2(&g);
+        assert_eq!(h.iter().map(|&(_, c)| c).sum::<usize>(), 500);
+    }
+}

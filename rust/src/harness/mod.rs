@@ -1,0 +1,246 @@
+//! Benchmark harness — the code that regenerates every table and figure
+//! of the paper's evaluation section. Shared by the `cargo bench` targets
+//! (`rust/benches/*.rs`) and the `gee bench-table` CLI so the numbers in
+//! EXPERIMENTS.md come from one implementation.
+
+use std::time::Duration;
+
+use crate::gee::{Engine, GeeOptions};
+use crate::graph::datasets::{paper_density, DatasetSpec, TABLE2};
+use crate::graph::sbm::{generate_sbm, SbmParams};
+use crate::graph::Graph;
+use crate::util::timing::{bench_runs, secs, Stats};
+
+/// One measured cell: engine × (dataset, options).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub engine: Engine,
+    pub options: GeeOptions,
+    pub stats: Stats,
+}
+
+/// Measure one engine on one graph/options combo.
+pub fn measure(engine: Engine, g: &Graph, opts: &GeeOptions, warmup: usize, reps: usize) -> Stats {
+    let runs = bench_runs(warmup, reps, || {
+        engine.embed(g, opts).expect("engine must handle this graph")
+    });
+    Stats::from_runs(&runs)
+}
+
+// ------------------------------------------------------------- Fig. 3
+
+/// The paper's Fig. 3 node counts.
+pub const FIG3_SIZES: &[usize] = &[100, 1_000, 3_000, 5_000, 10_000];
+
+/// One Fig. 3 series point.
+#[derive(Clone, Debug)]
+pub struct Fig3Point {
+    pub n: usize,
+    pub edges: usize,
+    pub gee: Stats,
+    pub sparse: Stats,
+}
+
+/// Run the Fig. 3 sweep: SBM at the paper's parameters, all options on
+/// (Lap = Diag = Cor = T), original GEE vs sparse GEE.
+pub fn run_fig3(sizes: &[usize], reps: usize, seed: u64) -> Vec<Fig3Point> {
+    let opts = GeeOptions::ALL;
+    sizes
+        .iter()
+        .map(|&n| {
+            let g = generate_sbm(&SbmParams::paper(n), seed);
+            let gee = measure(Engine::EdgeList, &g, &opts, 1, reps);
+            let sparse = measure(Engine::Sparse, &g, &opts, 1, reps);
+            Fig3Point { n, edges: g.num_edges(), gee, sparse }
+        })
+        .collect()
+}
+
+/// Render Fig. 3 as the table of series the paper plots.
+pub fn format_fig3(points: &[Fig3Point]) -> String {
+    let mut out = String::new();
+    out.push_str("Fig 3 — GEE vs sparse GEE on simulated SBM (Lap=T, Diag=T, Cor=T)\n");
+    out.push_str(&format!(
+        "{:>8} {:>10} {:>12} {:>12} {:>9}\n",
+        "nodes", "edges", "GEE (s)", "sparse (s)", "speedup"
+    ));
+    for p in points {
+        let s = p.gee.median.as_secs_f64() / p.sparse.median.as_secs_f64().max(1e-12);
+        out.push_str(&format!(
+            "{:>8} {:>10} {:>12} {:>12} {:>8.1}x\n",
+            p.n,
+            p.edges,
+            secs(p.gee.median),
+            secs(p.sparse.median),
+            s
+        ));
+    }
+    out
+}
+
+// -------------------------------------------------------- Tables 3-4
+
+/// One row of Table 3 or 4: a dataset × 4 option combos × both engines.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    pub dataset: &'static str,
+    pub nodes: usize,
+    pub edges: usize,
+    /// (options, original GEE stats, sparse GEE stats), 4 combos.
+    pub cells: Vec<(GeeOptions, Stats, Stats)>,
+}
+
+/// The paper's Table 3 (Lap = T) or Table 4 (Lap = F) option columns.
+pub fn table_columns(lap: bool) -> Vec<GeeOptions> {
+    let mut cols = Vec::new();
+    for &diag in &[true, false] {
+        for &cor in &[true, false] {
+            cols.push(GeeOptions::new(lap, diag, cor));
+        }
+    }
+    cols
+}
+
+/// Run one of the real-dataset tables over the Table-2 twins.
+/// `max_edges` lets quick runs skip the 10M-edge twin.
+pub fn run_table(lap: bool, reps: usize, max_edges: usize) -> Vec<TableRow> {
+    let cols = table_columns(lap);
+    TABLE2
+        .iter()
+        .filter(|spec| spec.edges <= max_edges)
+        .map(|spec| run_table_row(spec, &cols, reps))
+        .collect()
+}
+
+/// Run a single dataset row.
+pub fn run_table_row(spec: &DatasetSpec, cols: &[GeeOptions], reps: usize) -> TableRow {
+    let g = spec.generate();
+    let cells = cols
+        .iter()
+        .map(|opts| {
+            let gee = measure(Engine::EdgeList, &g, opts, 1, reps);
+            let sparse = measure(Engine::Sparse, &g, opts, 1, reps);
+            (*opts, gee, sparse)
+        })
+        .collect();
+    TableRow { dataset: spec.name, nodes: g.n, edges: g.num_edges(), cells }
+}
+
+/// Render in the paper's layout: per combo, GEE column then Sparse GEE.
+pub fn format_table(rows: &[TableRow], table_no: usize) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table {table_no} — GEE vs Sparse GEE on real-dataset twins (operation time, s)\n"
+    ));
+    if let Some(first) = rows.first() {
+        out.push_str(&format!("{:>28}", "Data Set (node/edge)"));
+        for (o, _, _) in &first.cells {
+            out.push_str(&format!(" | {:^21}", o.label().replace("Lap = ", "L").replace("Diag = ", "D").replace("Cor = ", "C")));
+        }
+        out.push('\n');
+        out.push_str(&format!("{:>28}", ""));
+        for _ in &first.cells {
+            out.push_str(&format!(" | {:>9} {:>11}", "GEE", "Sparse GEE"));
+        }
+        out.push('\n');
+    }
+    for r in rows {
+        out.push_str(&format!(
+            "{:>28}",
+            format!("{} ({}/{})", r.dataset, r.nodes, r.edges)
+        ));
+        for (_, gee, sparse) in &r.cells {
+            out.push_str(&format!(
+                " | {:>9} {:>11}",
+                secs(gee.median),
+                secs(sparse.median)
+            ));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+// ------------------------------------------------------------ Table 2
+
+/// Render Table 2 (dataset statistics) from the twin registry, with the
+/// paper's published densities alongside for the fidelity check.
+pub fn format_table2() -> String {
+    let mut out = String::new();
+    out.push_str("Table 2 — datasets (synthetic twins; density per Eq. 2)\n");
+    out.push_str(&format!(
+        "{:>16} {:>8} {:>11} {:>8} {:>12} {:>12}\n",
+        "Dataset", "Nodes", "Edges", "Classes", "Density", "Paper d"
+    ));
+    for spec in TABLE2 {
+        out.push_str(&format!(
+            "{:>16} {:>8} {:>11} {:>8} {:>12.5} {:>12.5}\n",
+            spec.name,
+            spec.nodes,
+            spec.edges,
+            spec.classes,
+            spec.density(),
+            paper_density(spec.name).unwrap_or(f64::NAN)
+        ));
+    }
+    out
+}
+
+// ----------------------------------------------------------- summary
+
+/// Throughput in directed edges per second for a measured stat.
+pub fn edges_per_sec(edges: usize, d: Duration) -> f64 {
+    2.0 * edges as f64 / d.as_secs_f64().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_quick_run_produces_points() {
+        let points = run_fig3(&[100, 300], 2, 1);
+        assert_eq!(points.len(), 2);
+        assert!(points[1].edges > points[0].edges);
+        let text = format_fig3(&points);
+        assert!(text.contains("nodes"));
+        assert!(text.contains("300"));
+    }
+
+    #[test]
+    fn table_columns_layout() {
+        let t3 = table_columns(true);
+        assert_eq!(t3.len(), 4);
+        assert!(t3.iter().all(|o| o.laplacian));
+        assert_eq!(t3[0], GeeOptions::new(true, true, true));
+        assert_eq!(t3[3], GeeOptions::new(true, false, false));
+        let t4 = table_columns(false);
+        assert!(t4.iter().all(|o| !o.laplacian));
+    }
+
+    #[test]
+    fn table_quick_row() {
+        let cols = table_columns(false);
+        let spec = &TABLE2[1]; // Cora twin
+        let row = run_table_row(spec, &cols[..1], 1);
+        assert_eq!(row.dataset, "Cora");
+        assert_eq!(row.cells.len(), 1);
+        let text = format_table(&[row], 4);
+        assert!(text.contains("Cora"));
+        assert!(text.contains("Sparse GEE"));
+    }
+
+    #[test]
+    fn table2_includes_all_six() {
+        let t = format_table2();
+        for spec in TABLE2 {
+            assert!(t.contains(spec.name));
+        }
+    }
+
+    #[test]
+    fn edges_per_sec_sane() {
+        let e = edges_per_sec(1000, Duration::from_secs(1));
+        assert!((e - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,29 @@
+//! # gee-sparse — Sparse Graph Encoder Embedding, three-layer edition
+//!
+//! Production-grade reproduction of **Qin & Shen, "Efficient Graph Encoder
+//! Embedding for Large Sparse Graphs in Python" (2024)** as a rust
+//! coordinator (L3) over JAX/Pallas AOT-compiled compute (L2/L1) executed
+//! through PJRT, plus a full native sparse pipeline for the paper's
+//! CPU-scale experiments.
+//!
+//! Layout (see DESIGN.md for the full inventory):
+//!
+//! * [`sparse`] — COO / DOK / CSR / dense substrate
+//! * [`graph`] — graph type, SBM & Chung-Lu generators, dataset twins,
+//!   stats (edge density Eq. 2, Fig 2 panels)
+//! * [`gee`] — the three GEE implementations (dense, edge-list "original",
+//!   sparse) and the lap/diag/cor options
+//! * [`tasks`] — downstream validation: k-means, 1-NN, LDA, ARI/NMI
+//! * [`runtime`] — PJRT client, artifact manifest, padded execution
+//! * [`coordinator`] — embedding service: queue, batcher, streaming
+//!   updates, metrics
+//! * [`util`] — PRNG, JSON, property-test harness, timing
+
+pub mod coordinator;
+pub mod gee;
+pub mod graph;
+pub mod harness;
+pub mod runtime;
+pub mod sparse;
+pub mod tasks;
+pub mod util;

@@ -1,0 +1,309 @@
+//! `gee` — command-line front end for the sparse-GEE stack.
+//!
+//! Subcommands:
+//! * `info`        — Table 2 twins + artifact manifest summary
+//! * `generate`    — write a dataset twin / SBM graph to .edges/.labels
+//! * `embed`       — embed a graph with any engine (native or PJRT)
+//! * `bench-table` — regenerate a paper table/figure (2, 3, 4, fig3)
+//! * `serve`       — run the embedding service demo under synthetic load
+//!
+//! Arg parsing is hand-rolled (`--key value` / `--flag`) because the
+//! offline crate set has no clap; see `Args` below.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use gee_sparse::coordinator::batcher::BatchCapacity;
+use gee_sparse::coordinator::{EmbedRequest, EmbedService, Lane, ServiceConfig};
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::datasets::by_name;
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::{io, Graph};
+use gee_sparse::harness;
+use gee_sparse::runtime::{Manifest, Runtime};
+use gee_sparse::tasks::kmeans::{kmeans, KMeansConfig};
+use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
+use gee_sparse::util::rng::Rng;
+
+/// Minimal `--key value` / `--flag` parser.
+struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut values = HashMap::new();
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                flags.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { values, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+            None => Ok(default),
+        }
+    }
+
+    fn has(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+}
+
+fn default_artifacts() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Resolve the graph a command operates on.
+fn load_graph(args: &Args) -> Result<Graph> {
+    if let Some(name) = args.get("dataset") {
+        let spec = by_name(name)
+            .with_context(|| format!("unknown dataset '{name}' (see `gee info`)"))?;
+        eprintln!("generating twin '{}' ({} nodes)...", spec.name, spec.nodes);
+        return Ok(spec.generate());
+    }
+    if let Some(n) = args.get("sbm") {
+        let n: usize = n.parse().context("--sbm takes a node count")?;
+        let seed = args.get_usize("seed", 7)? as u64;
+        return Ok(generate_sbm(&SbmParams::paper(n), seed));
+    }
+    if let Some(stem) = args.get("input") {
+        return io::read_graph(Path::new(stem));
+    }
+    bail!("specify a graph: --dataset NAME | --sbm N | --input STEM")
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("{}", harness::format_table2());
+    let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts);
+    match Manifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {} variants in {}", m.variants.len(), dir.display());
+            for b in m.buckets() {
+                let v = m.variants.iter().find(|v| v.bucket == b).unwrap();
+                println!(
+                    "  bucket {b}: n={} e={} k={} (block_n={} tile_e={} vmem={}K)",
+                    v.n,
+                    v.e,
+                    v.k,
+                    v.block_n,
+                    v.tile_e,
+                    v.vmem_bytes / 1024
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e:#})"),
+    }
+    Ok(())
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let out = args.get("out").context("--out STEM required")?;
+    io::write_graph(Path::new(out), &g)?;
+    println!(
+        "wrote {}.edges / {}.labels  (n={}, edges={}, k={}, density={:.5})",
+        out,
+        out,
+        g.n,
+        g.num_edges(),
+        g.k,
+        g.density()
+    );
+    Ok(())
+}
+
+fn cmd_embed(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let opts = GeeOptions::from_code(args.get("options").unwrap_or("---"))
+        .context("--options takes a 3-char code like ldc, l-c, ---")?;
+    let t0 = Instant::now();
+    let z = if args.has("pjrt") {
+        let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts);
+        let rt = Runtime::new(&dir)?;
+        println!("pjrt platform: {}", rt.platform());
+        rt.embed(&g, &opts)?
+    } else {
+        let engine = Engine::from_name(args.get("engine").unwrap_or("sparse"))
+            .context("--engine must be dense|edgelist|sparse|sparse-fast")?;
+        engine.embed(&g, &opts)?
+    };
+    let dt = t0.elapsed();
+    println!(
+        "embedded n={} edges={} k={} with {} in {:.3}s ({:.0} edges/s)",
+        g.n,
+        g.num_edges(),
+        g.k,
+        opts.label(),
+        dt.as_secs_f64(),
+        harness::edges_per_sec(g.num_edges(), dt)
+    );
+    if args.has("cluster") {
+        let res = kmeans(&z, &KMeansConfig::new(g.k));
+        let pred: Vec<i32> = res.assignments.iter().map(|&c| c as i32).collect();
+        let (a, b) = paired_labels(&pred, &g.labels);
+        println!("k-means ARI vs labels: {:.4}", adjusted_rand_index(&a, &b));
+    }
+    if let Some(out) = args.get("out") {
+        let mut text = String::new();
+        for r in 0..z.nrows {
+            let row: Vec<String> = z.row(r).iter().map(|v| format!("{v:.6}")).collect();
+            text.push_str(&row.join("\t"));
+            text.push('\n');
+        }
+        std::fs::write(out, text)?;
+        println!("embedding written to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_bench_table(args: &Args) -> Result<()> {
+    let which = args.get("table").unwrap_or("fig3");
+    let reps = args.get_usize("reps", 3)?;
+    match which {
+        "2" => println!("{}", harness::format_table2()),
+        "3" | "4" => {
+            let lap = which == "3";
+            let max_edges = args.get_usize(
+                "max-edges",
+                if args.has("quick") { 500_000 } else { usize::MAX },
+            )?;
+            let rows = harness::run_table(lap, reps, max_edges);
+            println!("{}", harness::format_table(&rows, if lap { 3 } else { 4 }));
+        }
+        "fig3" => {
+            let sizes: Vec<usize> = match args.get("sizes") {
+                Some(s) => s
+                    .split(',')
+                    .map(|x| x.parse().context("bad --sizes"))
+                    .collect::<Result<_>>()?,
+                None if args.has("quick") => vec![100, 1_000, 3_000],
+                None => harness::FIG3_SIZES.to_vec(),
+            };
+            let points = harness::run_fig3(&sizes, reps, 7);
+            println!("{}", harness::format_fig3(&points));
+        }
+        other => bail!("unknown table '{other}' (use 2, 3, 4 or fig3)"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let requests = args.get_usize("requests", 200)?;
+    let workers = args.get_usize("workers", 2)?;
+    // network mode: expose the service over TCP and block
+    if let Some(bind) = args.get("listen") {
+        let svc = std::sync::Arc::new(EmbedService::start(ServiceConfig {
+            workers,
+            ..ServiceConfig::default()
+        }));
+        let server = gee_sparse::coordinator::TcpServer::start(bind, svc)?;
+        println!("listening on {} (line protocol; PING/EMBED; ctrl-c to stop)", server.addr());
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    let lane = if args.has("pjrt") {
+        let dir = args.get("artifacts").map(PathBuf::from).unwrap_or_else(default_artifacts);
+        Lane::Pjrt { artifact_dir: dir, fallback: Engine::SparseFast }
+    } else {
+        Lane::Native(Engine::SparseFast)
+    };
+    let svc = EmbedService::start(ServiceConfig {
+        lane,
+        workers,
+        batching: !args.has("no-batching"),
+        batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
+        batch_linger: Duration::from_millis(2),
+        queue_depth: 512,
+    });
+
+    let mut rng = Rng::new(args.get_usize("seed", 11)? as u64);
+    let combos = GeeOptions::table_order();
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let n = 30 + rng.below(200);
+        let g = generate_sbm(
+            &SbmParams::fitted(n, 3, n * 3, 3.0, vec![0.2, 0.3, 0.5]),
+            1000 + i as u64,
+        );
+        let opts = combos[rng.below(8)];
+        rxs.push(
+            svc.submit(EmbedRequest { graph: g, options: opts })
+                .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?,
+        );
+    }
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let m = svc.shutdown();
+    println!(
+        "served {ok}/{requests} requests in {:.2}s ({:.0} req/s)",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64()
+    );
+    println!("{}", m.summary());
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "usage: gee <command> [options]\n\
+     commands:\n\
+       info         [--artifacts DIR]\n\
+       generate     --dataset NAME | --sbm N   --out STEM [--seed S]\n\
+       embed        --dataset NAME | --sbm N | --input STEM\n\
+                    [--engine dense|edgelist|sparse|sparse-fast] [--options ldc]\n\
+                    [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
+       bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
+       serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
+                    [--listen ADDR:PORT]   (network mode: TCP line protocol)\n"
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        print!("{}", usage());
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "info" => cmd_info(&args),
+        "generate" => cmd_generate(&args),
+        "embed" => cmd_embed(&args),
+        "bench-table" => cmd_bench_table(&args),
+        "serve" => cmd_serve(&args),
+        "help" | "--help" | "-h" => {
+            print!("{}", usage());
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}

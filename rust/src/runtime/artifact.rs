@@ -1,0 +1,266 @@
+//! Artifact manifest: the index of AOT-compiled GEE variants written by
+//! `python/compile/aot.py`, and the bucket-selection + padding logic that
+//! maps a concrete graph onto a shape-specialized PJRT executable.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::gee::GeeOptions;
+use crate::util::json::Json;
+
+/// One compiled (bucket × option-combo) variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub bucket: String,
+    /// Padded vertex count.
+    pub n: usize,
+    /// Padded directed-edge count.
+    pub e: usize,
+    /// Padded class count.
+    pub k: usize,
+    pub options: GeeOptions,
+    /// L1 kernel tile plan (recorded for §Perf accounting).
+    pub block_n: usize,
+    pub tile_e: usize,
+    pub vmem_bytes: usize,
+}
+
+impl Variant {
+    /// Does a graph with these dimensions fit this variant?
+    pub fn fits(&self, n: usize, e: usize, k: usize) -> bool {
+        n <= self.n && e <= self.e && k <= self.k
+    }
+
+    /// Absolute path of the HLO file.
+    pub fn path(&self, dir: &Path) -> PathBuf {
+        dir.join(&self.file)
+    }
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: Vec<Variant>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`?)", path.display()))?;
+        let root = Json::parse(&text).context("parse manifest.json")?;
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text") {
+            bail!("manifest format is not hlo-text");
+        }
+        let mut variants = Vec::new();
+        for v in root
+            .get("variants")
+            .and_then(Json::as_arr)
+            .context("manifest missing variants")?
+        {
+            let take_str = |k: &str| -> Result<String> {
+                Ok(v.get(k)
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("variant missing {k}"))?
+                    .to_string())
+            };
+            let take_n = |k: &str| -> Result<usize> {
+                v.get(k)
+                    .and_then(Json::as_usize)
+                    .with_context(|| format!("variant missing {k}"))
+            };
+            let take_b = |k: &str| -> Result<bool> {
+                v.get(k)
+                    .and_then(Json::as_bool)
+                    .with_context(|| format!("variant missing {k}"))
+            };
+            variants.push(Variant {
+                name: take_str("name")?,
+                file: take_str("file")?,
+                bucket: take_str("bucket")?,
+                n: take_n("n")?,
+                e: take_n("e")?,
+                k: take_n("k")?,
+                options: GeeOptions::new(take_b("lap")?, take_b("diag")?, take_b("cor")?),
+                block_n: take_n("block_n")?,
+                tile_e: take_n("tile_e")?,
+                vmem_bytes: take_n("vmem_bytes")?,
+            });
+        }
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), variants })
+    }
+
+    /// Smallest variant (by padded element count) that fits the request
+    /// and matches the option flags exactly.
+    pub fn select(&self, n: usize, e: usize, k: usize, opts: &GeeOptions) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .filter(|v| v.options == *opts && v.fits(n, e, k))
+            .min_by_key(|v| v.n * v.k + v.e)
+    }
+
+    /// All bucket names, deduped, in manifest order.
+    pub fn buckets(&self) -> Vec<String> {
+        let mut seen = Vec::new();
+        for v in &self.variants {
+            if !seen.contains(&v.bucket) {
+                seen.push(v.bucket.clone());
+            }
+        }
+        seen
+    }
+}
+
+/// Padded input arrays for one variant, ready to become literals.
+#[derive(Clone, Debug)]
+pub struct PaddedInputs {
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub w: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// Real (unpadded) sizes, to slice the output back down.
+    pub real_n: usize,
+    pub real_k: usize,
+}
+
+/// Pad a directed edge list + labels to a variant's bucket shape, per the
+/// contract in `python/compile/model.py`: zero-weight edges and -1 labels
+/// are exact no-ops. Edges are sorted by src first — the kernel's
+/// preferred input order (see gee_pallas.py).
+pub fn pad_inputs(
+    variant: &Variant,
+    src: &[u32],
+    dst: &[u32],
+    w: &[f64],
+    labels: &[i32],
+) -> Result<PaddedInputs> {
+    let (n, e) = (labels.len(), src.len());
+    if !variant.fits(n, e, usize::MAX.min(variant.k)) {
+        bail!(
+            "graph (n={n}, e={e}) does not fit variant {} (n={}, e={})",
+            variant.name,
+            variant.n,
+            variant.e
+        );
+    }
+    // sort edges by src (stable counting-sort order via indices)
+    let mut order: Vec<usize> = (0..e).collect();
+    order.sort_unstable_by_key(|&i| src[i]);
+    let mut ps = Vec::with_capacity(variant.e);
+    let mut pd = Vec::with_capacity(variant.e);
+    let mut pw = Vec::with_capacity(variant.e);
+    for &i in &order {
+        ps.push(src[i] as i32);
+        pd.push(dst[i] as i32);
+        pw.push(w[i] as f32);
+    }
+    ps.resize(variant.e, 0);
+    pd.resize(variant.e, 0);
+    pw.resize(variant.e, 0.0);
+    let mut pl = labels.to_vec();
+    pl.resize(variant.n, -1);
+    Ok(PaddedInputs { src: ps, dst: pd, w: pw, labels: pl, real_n: n, real_k: variant.k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest() -> Manifest {
+        let mk = |bucket: &str, n: usize, e: usize, k: usize, code: &str| Variant {
+            name: format!("gee_{bucket}_{code}"),
+            file: format!("gee_{bucket}_{code}.hlo.txt"),
+            bucket: bucket.into(),
+            n,
+            e,
+            k,
+            options: GeeOptions::from_code(code).unwrap(),
+            block_n: 128,
+            tile_e: 64,
+            vmem_bytes: 1 << 20,
+        };
+        Manifest {
+            dir: PathBuf::from("/tmp"),
+            variants: vec![
+                mk("s", 256, 2048, 8, "---"),
+                mk("s", 256, 2048, 8, "ldc"),
+                mk("m", 2048, 16384, 8, "---"),
+                mk("m", 2048, 16384, 8, "ldc"),
+            ],
+        }
+    }
+
+    #[test]
+    fn select_prefers_smallest_fitting() {
+        let m = fake_manifest();
+        let v = m.select(100, 500, 4, &GeeOptions::NONE).unwrap();
+        assert_eq!(v.bucket, "s");
+        let v = m.select(1000, 500, 4, &GeeOptions::NONE).unwrap();
+        assert_eq!(v.bucket, "m");
+        assert!(m.select(10_000, 500, 4, &GeeOptions::NONE).is_none());
+        assert!(m
+            .select(100, 500, 4, &GeeOptions::new(true, false, false))
+            .is_none());
+    }
+
+    #[test]
+    fn pad_inputs_contract() {
+        let m = fake_manifest();
+        let v = m.select(3, 2, 2, &GeeOptions::NONE).unwrap();
+        let p = pad_inputs(v, &[1, 0], &[2, 1], &[0.5, 1.5], &[0, 1, -1]).unwrap();
+        assert_eq!(p.src.len(), 2048);
+        assert_eq!(p.labels.len(), 256);
+        // sorted by src: edge (0,1) first
+        assert_eq!(p.src[0], 0);
+        assert_eq!(p.dst[0], 1);
+        assert_eq!(p.w[0], 1.5);
+        assert_eq!(p.w[2], 0.0); // padding
+        assert_eq!(p.labels[3], -1);
+        assert_eq!(p.real_n, 3);
+    }
+
+    #[test]
+    fn pad_rejects_oversize() {
+        let m = fake_manifest();
+        let v = m.select(3, 2, 2, &GeeOptions::NONE).unwrap().clone();
+        let src: Vec<u32> = (0..3000).map(|i| i % 10).collect();
+        let dst = src.clone();
+        let w = vec![1.0; 3000];
+        let labels = vec![0; 10];
+        assert!(pad_inputs(&v, &src, &dst, &w, &labels).is_err());
+    }
+
+    #[test]
+    fn buckets_deduped() {
+        assert_eq!(fake_manifest().buckets(), vec!["s".to_string(), "m".to_string()]);
+    }
+
+    #[test]
+    fn load_real_manifest_if_built() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 24);
+        // every option combo must exist in every bucket
+        for b in m.buckets() {
+            for o in GeeOptions::table_order() {
+                assert!(
+                    m.variants.iter().any(|v| v.bucket == b && v.options == o),
+                    "missing {b}/{}",
+                    o.code()
+                );
+            }
+        }
+    }
+}

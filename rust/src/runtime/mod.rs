@@ -1,0 +1,11 @@
+//! Runtime layer: load and execute the AOT-compiled GEE artifacts
+//! (HLO text emitted by `python/compile/aot.py`) on the PJRT CPU client.
+//!
+//! * [`artifact`] — manifest parsing, bucket selection, padding contract
+//! * [`pjrt`] — client + executable cache + the execute hot path
+
+pub mod artifact;
+pub mod pjrt;
+
+pub use artifact::Manifest;
+pub use pjrt::Runtime;

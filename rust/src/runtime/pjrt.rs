@@ -1,0 +1,146 @@
+//! PJRT execution of the AOT-compiled GEE artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): load HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `compile` →
+//! `execute`. Executables are compiled once per variant and cached; the
+//! request path is pad → 4 literals → execute → slice — no Python
+//! anywhere.
+//!
+//! Threading note: the underlying PJRT handles are raw pointers without
+//! Send/Sync markers, so a [`Runtime`] is confined to the thread that
+//! created it. The coordinator gives its PJRT lane a dedicated worker
+//! thread (see `coordinator::service`).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{pad_inputs, Manifest, Variant};
+use crate::gee::GeeOptions;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// PJRT-backed GEE engine.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `artifact_dir`.
+    pub fn new(artifact_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Can this runtime serve a graph of the given size at all?
+    pub fn fits(&self, g: &Graph, opts: &GeeOptions) -> bool {
+        self.manifest
+            .select(g.n, g.num_directed(), g.k, opts)
+            .is_some()
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant.
+    fn executable(&self, variant: &Variant) -> Result<()> {
+        let mut cache = self.cache.borrow_mut();
+        if cache.contains_key(&variant.name) {
+            return Ok(());
+        }
+        let path = variant.path(&self.manifest.dir);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", variant.name))?;
+        cache.insert(variant.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Eagerly compile every variant of a bucket (used at service start so
+    /// first-request latency is flat).
+    pub fn warmup(&self, bucket: &str) -> Result<usize> {
+        let variants: Vec<Variant> = self
+            .manifest
+            .variants
+            .iter()
+            .filter(|v| v.bucket == bucket)
+            .cloned()
+            .collect();
+        for v in &variants {
+            self.executable(v)?;
+        }
+        Ok(variants.len())
+    }
+
+    /// Embed a graph through the compiled artifact for `opts`.
+    ///
+    /// Returns the N×K embedding (f64 for API uniformity with the native
+    /// engines; the artifact computes in f32 — differences vs the native
+    /// f64 pipeline are bounded by f32 epsilon · degree).
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Result<Dense> {
+        let (src, dst, w) = g.directed_edges();
+        let variant = self
+            .manifest
+            .select(g.n, src.len(), g.k, opts)
+            .with_context(|| {
+                format!(
+                    "no artifact bucket fits n={} e={} k={} {}",
+                    g.n,
+                    src.len(),
+                    g.k,
+                    opts.label()
+                )
+            })?
+            .clone();
+        self.executable(&variant)?;
+        let padded = pad_inputs(&variant, &src, &dst, &w, &g.labels)?;
+
+        let lits = [
+            xla::Literal::vec1(padded.src.as_slice()),
+            xla::Literal::vec1(padded.dst.as_slice()),
+            xla::Literal::vec1(padded.w.as_slice()),
+            xla::Literal::vec1(padded.labels.as_slice()),
+        ];
+        let cache = self.cache.borrow();
+        let exe = cache.get(&variant.name).expect("compiled above");
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("execute {}", variant.name))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?
+            .to_tuple1()
+            .context("unwrap 1-tuple")?;
+        let flat: Vec<f32> = out.to_vec().context("read f32 output")?;
+        // padded output is (variant.n, variant.k); slice to (g.n, g.k)
+        let mut z = Dense::zeros(g.n, g.k);
+        for r in 0..g.n {
+            for c in 0..g.k {
+                *z.get_mut(r, c) = flat[r * variant.k + c] as f64;
+            }
+        }
+        Ok(z)
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+// Integration tests live in rust/tests/runtime_integration.rs (they need
+// built artifacts); unit coverage for selection/padding is in artifact.rs.

@@ -1,0 +1,217 @@
+//! COO (coordinate / triplet) sparse matrix — the edge-list format.
+//!
+//! This is the paper's on-wire representation: each entry is a
+//! `(row, col, value)` triplet, exactly one per edge, with zeros never
+//! stored. COO is the natural construction format (streaming edges in) and
+//! converts to [`Csr`](super::csr::Csr) for compute.
+
+use super::csr::Csr;
+use super::dense::Dense;
+
+/// Coordinate-format sparse matrix with f64 values and u32 indices.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub vals: Vec<f64>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Coo { nrows, ncols, rows: vec![], cols: vec![], vals: vec![] }
+    }
+
+    /// With pre-reserved capacity for `nnz` entries.
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(nnz),
+            cols: Vec::with_capacity(nnz),
+            vals: Vec::with_capacity(nnz),
+        }
+    }
+
+    /// Build from triplet slices (lengths must match; indices in range).
+    pub fn from_triplets(
+        nrows: usize,
+        ncols: usize,
+        rows: &[u32],
+        cols: &[u32],
+        vals: &[f64],
+    ) -> Self {
+        assert_eq!(rows.len(), cols.len());
+        assert_eq!(rows.len(), vals.len());
+        debug_assert!(rows.iter().all(|&r| (r as usize) < nrows));
+        debug_assert!(cols.iter().all(|&c| (c as usize) < ncols));
+        Coo {
+            nrows,
+            ncols,
+            rows: rows.to_vec(),
+            cols: cols.to_vec(),
+            vals: vals.to_vec(),
+        }
+    }
+
+    /// Number of stored (not necessarily distinct) entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    /// Append one entry.
+    #[inline]
+    pub fn push(&mut self, row: u32, col: u32, val: f64) {
+        debug_assert!((row as usize) < self.nrows && (col as usize) < self.ncols);
+        self.rows.push(row);
+        self.cols.push(col);
+        self.vals.push(val);
+    }
+
+    /// Sort entries by (row, col) and merge duplicates by summation.
+    /// Drops exact-zero merged entries (mirrors `scipy.sparse.coo.sum_duplicates`
+    /// followed by `eliminate_zeros`).
+    pub fn sort_dedup(&mut self) {
+        let mut order: Vec<u32> = (0..self.nnz() as u32).collect();
+        order.sort_unstable_by_key(|&i| {
+            (self.rows[i as usize], self.cols[i as usize])
+        });
+        let mut rows = Vec::with_capacity(self.nnz());
+        let mut cols = Vec::with_capacity(self.nnz());
+        let mut vals = Vec::with_capacity(self.nnz());
+        for &i in &order {
+            let (r, c, v) = (
+                self.rows[i as usize],
+                self.cols[i as usize],
+                self.vals[i as usize],
+            );
+            if let (Some(&lr), Some(&lc)) = (rows.last(), cols.last()) {
+                if lr == r && lc == c {
+                    *vals.last_mut().unwrap() += v;
+                    continue;
+                }
+            }
+            rows.push(r);
+            cols.push(c);
+            vals.push(v);
+        }
+        // eliminate zeros created by cancellation
+        let mut w = 0;
+        for i in 0..vals.len() {
+            if vals[i] != 0.0 {
+                rows[w] = rows[i];
+                cols[w] = cols[i];
+                vals[w] = vals[i];
+                w += 1;
+            }
+        }
+        rows.truncate(w);
+        cols.truncate(w);
+        vals.truncate(w);
+        self.rows = rows;
+        self.cols = cols;
+        self.vals = vals;
+    }
+
+    /// Transpose (swap row/col indices; O(nnz)).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            rows: self.cols.clone(),
+            cols: self.rows.clone(),
+            vals: self.vals.clone(),
+        }
+    }
+
+    /// Convert to CSR (sorts + dedups internally; see [`Csr::from_coo`]).
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_coo(self)
+    }
+
+    /// Materialize as a dense matrix (tests/small baselines only).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for i in 0..self.nnz() {
+            *d.get_mut(self.rows[i] as usize, self.cols[i] as usize) += self.vals[i];
+        }
+        d
+    }
+
+    /// Row sums (out-degrees when this is an adjacency matrix).
+    pub fn row_sums(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.nrows];
+        for i in 0..self.nnz() {
+            d[self.rows[i] as usize] += self.vals[i];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        // 3x4:  [ . 1 . 2 ]
+        //       [ . . . . ]
+        //       [ 3 . 4 . ]
+        Coo::from_triplets(3, 4, &[0, 0, 2, 2], &[1, 3, 0, 2], &[1.0, 2.0, 3.0, 4.0])
+    }
+
+    #[test]
+    fn push_and_nnz() {
+        let mut m = Coo::new(2, 2);
+        assert_eq!(m.nnz(), 0);
+        m.push(0, 1, 5.0);
+        m.push(1, 0, -1.0);
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn sort_dedup_sums_duplicates() {
+        let mut m = Coo::from_triplets(
+            2,
+            2,
+            &[1, 0, 1, 1],
+            &[1, 0, 1, 0],
+            &[1.0, 2.0, 3.0, 4.0],
+        );
+        m.sort_dedup();
+        assert_eq!(m.rows, vec![0, 1, 1]);
+        assert_eq!(m.cols, vec![0, 0, 1]);
+        assert_eq!(m.vals, vec![2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn sort_dedup_drops_cancelled_zeros() {
+        let mut m = Coo::from_triplets(1, 2, &[0, 0], &[1, 1], &[2.5, -2.5]);
+        m.sort_dedup();
+        assert_eq!(m.nnz(), 0);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = sample();
+        let t = m.transpose().transpose();
+        assert_eq!(m, t);
+    }
+
+    #[test]
+    fn to_dense_matches_entries() {
+        let d = sample().to_dense();
+        assert_eq!(d.get(0, 1), 1.0);
+        assert_eq!(d.get(0, 3), 2.0);
+        assert_eq!(d.get(2, 0), 3.0);
+        assert_eq!(d.get(2, 2), 4.0);
+        assert_eq!(d.get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn row_sums_are_degrees() {
+        assert_eq!(sample().row_sums(), vec![3.0, 0.0, 7.0]);
+    }
+}

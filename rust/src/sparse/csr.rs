@@ -1,0 +1,503 @@
+//! CSR (compressed sparse row) matrix — the paper's compute format.
+//!
+//! Layout exactly as in the paper's Fig. 1: `indptr` (length nrows+1),
+//! `indices` (column ids per entry), `data` (values), entries of row `r`
+//! living in `indptr[r]..indptr[r+1]`, sorted by column within each row.
+//!
+//! Compute kernels implemented here:
+//! * `spmm_dense`  — CSR × dense (the `A_s · W` product with W as N×K
+//!   dense; the hot path when K is small),
+//! * `spmm_csr`    — CSR × CSR via Gustavson's algorithm (the literal
+//!   `A_s · W_s` of the paper where W is also sparse),
+//! * `spmv`, `row_sums`, `scale_sym`, `add_diag` — the Laplacian /
+//!   diagonal-augmentation building blocks.
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+/// Compressed-sparse-row matrix, f64 values, u32 column indices.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<u32>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Empty matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Csr {
+            nrows,
+            ncols,
+            indptr: vec![0; nrows + 1],
+            indices: vec![],
+            data: vec![],
+        }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        Csr {
+            nrows: n,
+            ncols: n,
+            indptr: (0..=n).collect(),
+            indices: (0..n as u32).collect(),
+            data: vec![1.0; n],
+        }
+    }
+
+    /// Diagonal matrix from a vector (zeros skipped).
+    pub fn from_diag(diag: &[f64]) -> Self {
+        let n = diag.len();
+        let mut indptr = Vec::with_capacity(n + 1);
+        let mut indices = Vec::new();
+        let mut data = Vec::new();
+        indptr.push(0);
+        for (i, &v) in diag.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: n, ncols: n, indptr, indices, data }
+    }
+
+    /// Build from COO, summing duplicates. Counting sort on rows — O(nnz),
+    /// no comparison sort on the full triplet set (the §Perf fast path; see
+    /// `from_coo_sorted` for the ablation baseline that assumes presorted
+    /// input).
+    pub fn from_coo(coo: &Coo) -> Self {
+        let nnz = coo.nnz();
+        // counting sort by row
+        let mut counts = vec![0usize; coo.nrows + 1];
+        for &r in &coo.rows {
+            counts[r as usize + 1] += 1;
+        }
+        for i in 0..coo.nrows {
+            counts[i + 1] += counts[i];
+        }
+        let mut col_tmp = vec![0u32; nnz];
+        let mut val_tmp = vec![0.0f64; nnz];
+        {
+            let mut next = counts.clone();
+            for i in 0..nnz {
+                let r = coo.rows[i] as usize;
+                let slot = next[r];
+                next[r] += 1;
+                col_tmp[slot] = coo.cols[i];
+                val_tmp[slot] = coo.vals[i];
+            }
+        }
+        // per-row: sort by column, merge duplicates
+        let mut indptr = Vec::with_capacity(coo.nrows + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut data = Vec::with_capacity(nnz);
+        indptr.push(0);
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        for r in 0..coo.nrows {
+            let (lo, hi) = (counts[r], counts[r + 1]);
+            scratch.clear();
+            scratch.extend(
+                col_tmp[lo..hi].iter().copied().zip(val_tmp[lo..hi].iter().copied()),
+            );
+            scratch.sort_unstable_by_key(|&(c, _)| c);
+            for &(c, v) in scratch.iter() {
+                if let Some(last) = indices.last() {
+                    if *last == c && data.len() > indptr[r] {
+                        *data.last_mut().unwrap() += v;
+                        continue;
+                    }
+                }
+                indices.push(c);
+                data.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: coo.nrows, ncols: coo.ncols, indptr, indices, data }
+    }
+
+    /// Build from a COO already sorted by (row, col) with no duplicates —
+    /// single O(nnz) pass, zero scratch. Ablation partner of `from_coo`.
+    pub fn from_coo_sorted(coo: &Coo) -> Self {
+        let mut indptr = Vec::with_capacity(coo.nrows + 1);
+        indptr.push(0);
+        let mut r = 0usize;
+        for (i, &row) in coo.rows.iter().enumerate() {
+            debug_assert!(row as usize >= r, "input not row-sorted");
+            while r < row as usize {
+                indptr.push(i);
+                r += 1;
+            }
+        }
+        while r < coo.nrows {
+            indptr.push(coo.nnz());
+            r += 1;
+        }
+        Csr {
+            nrows: coo.nrows,
+            ncols: coo.ncols,
+            indptr,
+            indices: coo.cols.clone(),
+            data: coo.vals.clone(),
+        }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Entries of row `r` as (columns, values) slices.
+    #[inline]
+    pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.data[lo..hi])
+    }
+
+    /// Random-access read: binary search within the row.
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        let (cols, vals) = self.row(r);
+        match cols.binary_search(&(c as u32)) {
+            Ok(i) => vals[i],
+            Err(_) => 0.0,
+        }
+    }
+
+    /// Row sums (the degree vector when `self` is an adjacency matrix).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.nrows)
+            .map(|r| self.row(r).1.iter().sum())
+            .collect()
+    }
+
+    /// Sparse matrix × dense vector.
+    pub fn spmv(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.ncols);
+        (0..self.nrows)
+            .map(|r| {
+                let (cols, vals) = self.row(r);
+                cols.iter()
+                    .zip(vals.iter())
+                    .map(|(&c, &v)| v * x[c as usize])
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// CSR × dense: (m×n) · (n×k) → dense (m×k). The GEE hot path —
+    /// each nonzero touches one k-wide dense row; k is the class count.
+    pub fn spmm_dense(&self, b: &Dense) -> Dense {
+        assert_eq!(self.ncols, b.nrows);
+        let k = b.ncols;
+        let mut out = Dense::zeros(self.nrows, k);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let orow = &mut out.data[r * k..(r + 1) * k];
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                let brow = &b.data[c as usize * k..(c as usize + 1) * k];
+                for (o, &bb) in orow.iter_mut().zip(brow.iter()) {
+                    *o += v * bb;
+                }
+            }
+        }
+        out
+    }
+
+    /// CSR × CSR via Gustavson: for each row of A, scatter-accumulate the
+    /// scaled rows of B into a dense workspace, then gather the nonzeros.
+    /// This is what `scipy.sparse.csr_matmat` does under `A_s @ W_s`.
+    pub fn spmm_csr(&self, b: &Csr) -> Csr {
+        assert_eq!(self.ncols, b.nrows);
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices: Vec<u32> = Vec::new();
+        let mut data: Vec<f64> = Vec::new();
+        indptr.push(0);
+        let mut acc = vec![0.0f64; b.ncols];
+        let mut touched: Vec<u32> = Vec::new();
+        for r in 0..self.nrows {
+            let (acols, avals) = self.row(r);
+            for (&ac, &av) in acols.iter().zip(avals.iter()) {
+                let (bcols, bvals) = b.row(ac as usize);
+                for (&bc, &bv) in bcols.iter().zip(bvals.iter()) {
+                    if acc[bc as usize] == 0.0 && !touched.contains(&bc) {
+                        touched.push(bc);
+                    }
+                    acc[bc as usize] += av * bv;
+                }
+            }
+            touched.sort_unstable();
+            for &c in &touched {
+                let v = acc[c as usize];
+                if v != 0.0 {
+                    indices.push(c);
+                    data.push(v);
+                }
+                acc[c as usize] = 0.0;
+            }
+            touched.clear();
+            indptr.push(indices.len());
+        }
+        Csr { nrows: self.nrows, ncols: b.ncols, indptr, indices, data }
+    }
+
+    /// `self + diag(d)` — diagonal augmentation with d=1 everywhere gives
+    /// the paper's `A_s + I_s`. Preserves sortedness; O(nnz + n).
+    pub fn add_diag(&self, d: &[f64]) -> Csr {
+        assert_eq!(self.nrows, self.ncols);
+        assert_eq!(d.len(), self.nrows);
+        let mut indptr = Vec::with_capacity(self.nrows + 1);
+        let mut indices = Vec::with_capacity(self.nnz() + self.nrows);
+        let mut data = Vec::with_capacity(self.nnz() + self.nrows);
+        indptr.push(0);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            let mut placed = d[r] == 0.0; // nothing to place if zero
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                if !placed && (c as usize) >= r {
+                    if c as usize == r {
+                        indices.push(c);
+                        data.push(v + d[r]);
+                        placed = true;
+                        continue;
+                    } else {
+                        indices.push(r as u32);
+                        data.push(d[r]);
+                        placed = true;
+                    }
+                }
+                indices.push(c);
+                data.push(v);
+            }
+            if !placed {
+                indices.push(r as u32);
+                data.push(d[r]);
+            }
+            indptr.push(indices.len());
+        }
+        Csr { nrows: self.nrows, ncols: self.ncols, indptr, indices, data }
+    }
+
+    /// Symmetric diagonal scaling `diag(s) · A · diag(s)` in place —
+    /// the Laplacian normalization with `s = d^-1/2`.
+    pub fn scale_sym(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.nrows);
+        assert_eq!(s.len(), self.ncols);
+        for r in 0..self.nrows {
+            let sr = s[r];
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            for i in lo..hi {
+                self.data[i] *= sr * s[self.indices[i] as usize];
+            }
+        }
+    }
+
+    /// Transpose via counting sort on columns — O(nnz + ncols).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.ncols + 1];
+        for &c in &self.indices {
+            counts[c as usize + 1] += 1;
+        }
+        for i in 0..self.ncols {
+            counts[i + 1] += counts[i];
+        }
+        let indptr = counts.clone();
+        let mut indices = vec![0u32; self.nnz()];
+        let mut data = vec![0.0f64; self.nnz()];
+        let mut next = counts;
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                let slot = next[c as usize];
+                next[c as usize] += 1;
+                indices[slot] = r as u32;
+                data[slot] = v;
+            }
+        }
+        Csr {
+            nrows: self.ncols,
+            ncols: self.nrows,
+            indptr,
+            indices,
+            data,
+        }
+    }
+
+    /// Back to COO (row-sorted).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                coo.push(r as u32, c, v);
+            }
+        }
+        coo
+    }
+
+    /// Materialize dense (tests / small baselines).
+    pub fn to_dense(&self) -> Dense {
+        let mut d = Dense::zeros(self.nrows, self.ncols);
+        for r in 0..self.nrows {
+            let (cols, vals) = self.row(r);
+            for (&c, &v) in cols.iter().zip(vals.iter()) {
+                *d.get_mut(r, c as usize) += v;
+            }
+        }
+        d
+    }
+
+    /// Bytes of storage held (the paper's CSR-vs-edge-list space argument:
+    /// 3E for triplets vs E·(4+8) + (R+1)·8 here).
+    pub fn storage_bytes(&self) -> usize {
+        self.indptr.len() * std::mem::size_of::<usize>()
+            + self.indices.len() * std::mem::size_of::<u32>()
+            + self.data.len() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The worked example from the paper's Fig. 1.
+    /// row_2 has value 2 at col_1 and 3 at col_5.
+    fn fig1_matrix() -> Csr {
+        let coo = Coo::from_triplets(
+            4,
+            6,
+            &[0, 0, 1, 2, 2, 3],
+            &[0, 3, 2, 1, 5, 4],
+            &[5.0, 1.0, 4.0, 2.0, 3.0, 6.0],
+        );
+        Csr::from_coo(&coo)
+    }
+
+    #[test]
+    fn fig1_row_pointers() {
+        let m = fig1_matrix();
+        // index_pointers length = R + 1
+        assert_eq!(m.indptr.len(), 5);
+        // row_2's start/end pointers are 3 and 5 (paper's worked example)
+        assert_eq!(m.indptr[2], 3);
+        assert_eq!(m.indptr[3], 5);
+        let (cols, vals) = m.row(2);
+        assert_eq!(cols, &[1, 5]);
+        assert_eq!(vals, &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn from_coo_sums_duplicates() {
+        let coo = Coo::from_triplets(2, 2, &[0, 0, 1], &[1, 1, 0], &[2.0, 3.0, 1.0]);
+        let m = Csr::from_coo(&coo);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.get(0, 1), 5.0);
+    }
+
+    #[test]
+    fn from_coo_sorted_matches_general() {
+        let mut rng = Rng::new(5);
+        let mut coo = Coo::new(20, 20);
+        for _ in 0..100 {
+            coo.push(rng.below(20) as u32, rng.below(20) as u32, rng.f64() + 0.1);
+        }
+        coo.sort_dedup();
+        assert_eq!(Csr::from_coo(&coo), Csr::from_coo_sorted(&coo));
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let m = fig1_matrix();
+        let x = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let y = m.spmv(&x);
+        let d = m.to_dense();
+        for r in 0..4 {
+            let expect: f64 = (0..6).map(|c| d.get(r, c) * x[c]).sum();
+            assert!((y[r] - expect).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn spmm_dense_matches_dense_matmul() {
+        let mut rng = Rng::new(6);
+        let mut coo = Coo::new(15, 10);
+        for _ in 0..40 {
+            coo.push(rng.below(15) as u32, rng.below(10) as u32, rng.f64());
+        }
+        let a = Csr::from_coo(&coo);
+        let b = Dense::from_vec(10, 3, (0..30).map(|i| i as f64 * 0.5).collect());
+        let got = a.spmm_dense(&b);
+        let expect = a.to_dense().matmul(&b);
+        assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn spmm_csr_matches_dense_matmul() {
+        let mut rng = Rng::new(7);
+        let mut ca = Coo::new(12, 9);
+        let mut cb = Coo::new(9, 7);
+        for _ in 0..30 {
+            ca.push(rng.below(12) as u32, rng.below(9) as u32, rng.f64() - 0.5);
+            cb.push(rng.below(9) as u32, rng.below(7) as u32, rng.f64() - 0.5);
+        }
+        let a = Csr::from_coo(&ca);
+        let b = Csr::from_coo(&cb);
+        let got = a.spmm_csr(&b).to_dense();
+        let expect = a.to_dense().matmul(&b.to_dense());
+        assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn add_diag_all_positions() {
+        // diagonal before / inside / after existing entries
+        let coo = Coo::from_triplets(3, 3, &[0, 1, 2], &[2, 1, 0], &[1.0, 5.0, 2.0]);
+        let m = Csr::from_coo(&coo).add_diag(&[1.0, 1.0, 1.0]);
+        let d = m.to_dense();
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(0, 2), 1.0);
+        assert_eq!(d.get(1, 1), 6.0);
+        assert_eq!(d.get(2, 2), 1.0);
+        assert_eq!(d.get(2, 0), 2.0);
+        // columns stay sorted
+        for r in 0..3 {
+            let (cols, _) = m.row(r);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn scale_sym_matches_dense() {
+        // scale_sym needs a square matrix; build one directly
+        let coo = Coo::from_triplets(3, 3, &[0, 1, 2, 2], &[1, 0, 2, 1], &[2.0, 3.0, 4.0, 5.0]);
+        let mut m = Csr::from_coo(&coo);
+        let s = vec![0.5, 2.0, 1.5];
+        let mut dd = m.to_dense();
+        m.scale_sym(&s);
+        dd.scale_sym(&s);
+        assert!(m.to_dense().max_abs_diff(&dd) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = fig1_matrix();
+        let tt = m.transpose().transpose();
+        assert_eq!(m, tt);
+    }
+
+    #[test]
+    fn eye_is_identity_under_spmm() {
+        let m = fig1_matrix();
+        let i6 = Csr::eye(6);
+        let prod = m.spmm_csr(&i6);
+        assert_eq!(prod.to_dense().data, m.to_dense().data);
+    }
+
+    #[test]
+    fn storage_bytes_counts() {
+        let m = fig1_matrix();
+        assert_eq!(m.storage_bytes(), 5 * 8 + 6 * 4 + 6 * 8);
+    }
+}

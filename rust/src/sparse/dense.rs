@@ -1,0 +1,165 @@
+//! Dense row-major f64 matrix — the baseline substrate the paper's
+//! "original GEE" comparisons run on, plus the output container for
+//! embeddings (Z is N×K with small K, effectively dense).
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Dense {
+    /// All-zero matrix.
+    pub fn zeros(nrows: usize, ncols: usize) -> Self {
+        Dense { nrows, ncols, data: vec![0.0; nrows * ncols] }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Dense::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// From a row-major data vec.
+    pub fn from_vec(nrows: usize, ncols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), nrows * ncols);
+        Dense { nrows, ncols, data }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.ncols + c]
+    }
+
+    #[inline]
+    pub fn get_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.ncols + c]
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// Mutable row slice.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.ncols..(r + 1) * self.ncols]
+    }
+
+    /// Dense matmul: self (m×n) · other (n×p) → (m×p). ikj loop order for
+    /// cache-friendly access to both operands.
+    pub fn matmul(&self, other: &Dense) -> Dense {
+        assert_eq!(self.ncols, other.nrows);
+        let (m, n, p) = (self.nrows, self.ncols, other.ncols);
+        let mut out = Dense::zeros(m, p);
+        for i in 0..m {
+            for kk in 0..n {
+                let a = self.data[i * n + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[kk * p..(kk + 1) * p];
+                let orow = &mut out.data[i * p..(i + 1) * p];
+                for (o, &b) in orow.iter_mut().zip(brow.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// self += other (elementwise).
+    pub fn add_assign(&mut self, other: &Dense) {
+        assert_eq!(self.nrows, other.nrows);
+        assert_eq!(self.ncols, other.ncols);
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Add the identity in place (square only) — diagonal augmentation.
+    pub fn add_eye(&mut self) {
+        assert_eq!(self.nrows, self.ncols);
+        for i in 0..self.nrows {
+            self.data[i * self.ncols + i] += 1.0;
+        }
+    }
+
+    /// Row sums (degrees for adjacency).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.nrows)
+            .map(|r| self.row(r).iter().sum())
+            .collect()
+    }
+
+    /// Scale row r by s[r] and column c by s[c]: `diag(s) · A · diag(s)`.
+    pub fn scale_sym(&mut self, s: &[f64]) {
+        assert_eq!(s.len(), self.nrows);
+        assert_eq!(s.len(), self.ncols);
+        for r in 0..self.nrows {
+            let sr = s[r];
+            for c in 0..self.ncols {
+                self.data[r * self.ncols + c] *= sr * s[c];
+            }
+        }
+    }
+
+    /// Max |a - b| over all entries.
+    pub fn max_abs_diff(&self, other: &Dense) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_matmul_is_identity_op() {
+        let a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let i = Dense::eye(2);
+        assert_eq!(a.matmul(&i), a);
+        assert_eq!(i.matmul(&a), a);
+    }
+
+    #[test]
+    fn matmul_known_product() {
+        let a = Dense::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Dense::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn add_eye_and_row_sums() {
+        let mut a = Dense::zeros(3, 3);
+        a.add_eye();
+        assert_eq!(a.row_sums(), vec![1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn scale_sym_matches_diag_products() {
+        let mut a = Dense::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        a.scale_sym(&[2.0, 0.5]);
+        assert_eq!(a.data, vec![4.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn max_abs_diff() {
+        let a = Dense::from_vec(1, 2, vec![1.0, 2.0]);
+        let b = Dense::from_vec(1, 2, vec![1.5, 2.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+}

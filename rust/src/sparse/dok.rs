@@ -1,0 +1,131 @@
+//! DOK (dictionary of keys) sparse matrix — the paper's construction
+//! format: O(1) random insert/accumulate while building intermediate
+//! matrices (W, the degree diagonal), then converted to CSR for compute.
+//! Mirrors `scipy.sparse.dok_matrix` usage in the reference implementation.
+
+use std::collections::HashMap;
+
+use super::coo::Coo;
+use super::csr::Csr;
+
+/// Dictionary-of-keys sparse matrix.
+#[derive(Clone, Debug, Default)]
+pub struct Dok {
+    pub nrows: usize,
+    pub ncols: usize,
+    map: HashMap<(u32, u32), f64>,
+}
+
+impl Dok {
+    pub fn new(nrows: usize, ncols: usize) -> Self {
+        Dok { nrows, ncols, map: HashMap::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, nnz: usize) -> Self {
+        Dok { nrows, ncols, map: HashMap::with_capacity(nnz) }
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Set entry (r, c) to `val` (overwrites).
+    #[inline]
+    pub fn set(&mut self, r: u32, c: u32, val: f64) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        if val == 0.0 {
+            self.map.remove(&(r, c));
+        } else {
+            self.map.insert((r, c), val);
+        }
+    }
+
+    /// Accumulate into entry (r, c).
+    #[inline]
+    pub fn add(&mut self, r: u32, c: u32, val: f64) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        *self.map.entry((r, c)).or_insert(0.0) += val;
+    }
+
+    /// Read entry (zero when absent).
+    #[inline]
+    pub fn get(&self, r: u32, c: u32) -> f64 {
+        self.map.get(&(r, c)).copied().unwrap_or(0.0)
+    }
+
+    /// Convert to COO (entry order unspecified).
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::with_capacity(self.nrows, self.ncols, self.nnz());
+        for (&(r, c), &v) in &self.map {
+            if v != 0.0 {
+                coo.push(r, c, v);
+            }
+        }
+        coo
+    }
+
+    /// Convert to CSR — the DOK→CSR step the paper's pipeline performs
+    /// before every compute phase.
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_coo(&self.to_coo())
+    }
+
+    /// Build a diagonal DOK from a vector (degree / identity matrices).
+    pub fn from_diag(diag: &[f64]) -> Self {
+        let n = diag.len();
+        let mut d = Dok::with_capacity(n, n, n);
+        for (i, &v) in diag.iter().enumerate() {
+            if v != 0.0 {
+                d.set(i as u32, i as u32, v);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_add() {
+        let mut d = Dok::new(3, 3);
+        d.set(0, 1, 2.0);
+        d.add(0, 1, 3.0);
+        assert_eq!(d.get(0, 1), 5.0);
+        assert_eq!(d.get(2, 2), 0.0);
+        assert_eq!(d.nnz(), 1);
+    }
+
+    #[test]
+    fn set_zero_removes() {
+        let mut d = Dok::new(2, 2);
+        d.set(1, 1, 4.0);
+        d.set(1, 1, 0.0);
+        assert_eq!(d.nnz(), 0);
+    }
+
+    #[test]
+    fn to_csr_roundtrip_values() {
+        let mut d = Dok::new(3, 4);
+        d.set(2, 0, 3.0);
+        d.set(0, 3, 2.0);
+        d.set(0, 1, 1.0);
+        let csr = d.to_csr();
+        assert_eq!(csr.nnz(), 3);
+        assert_eq!(csr.get(2, 0), 3.0);
+        assert_eq!(csr.get(0, 3), 2.0);
+        assert_eq!(csr.get(0, 1), 1.0);
+        assert_eq!(csr.get(1, 1), 0.0);
+    }
+
+    #[test]
+    fn from_diag_skips_zeros() {
+        let d = Dok::from_diag(&[1.0, 0.0, 3.0]);
+        assert_eq!(d.nnz(), 2);
+        assert_eq!(d.get(0, 0), 1.0);
+        assert_eq!(d.get(1, 1), 0.0);
+        assert_eq!(d.get(2, 2), 3.0);
+    }
+}

@@ -1,0 +1,22 @@
+//! Sparse-matrix substrate: the data structures the paper's method is
+//! built from, implemented from scratch (no scipy on this side of the
+//! fence).
+//!
+//! * [`coo::Coo`] — triplet / edge-list format (construction, I/O)
+//! * [`dok::Dok`] — dictionary-of-keys (random-access construction; the
+//!   paper builds W and the diagonal matrices in DOK, then converts)
+//! * [`csr::Csr`] — compressed sparse row (all compute: SpMV, SpMM,
+//!   diagonal add, symmetric scaling, transpose)
+//! * [`dense::Dense`] — dense baseline substrate + embedding container
+//! * [`ops`] — shared row/vector kernels (norms, safe division, axpy)
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod dok;
+pub mod ops;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use dense::Dense;
+pub use dok::Dok;

@@ -1,0 +1,94 @@
+//! Shared vector/row kernels used by every GEE variant: safe reciprocals,
+//! row norms, row normalization (the paper's "correlation" option), axpy.
+
+use super::dense::Dense;
+
+/// 1/sqrt(x) with 0 → 0 (zero-degree vertices stay zero everywhere).
+#[inline]
+pub fn safe_recip_sqrt(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0 / x.sqrt()
+    } else {
+        0.0
+    }
+}
+
+/// 1/x with 0 → 0.
+#[inline]
+pub fn safe_recip(x: f64) -> f64 {
+    if x > 0.0 {
+        1.0 / x
+    } else {
+        0.0
+    }
+}
+
+/// Elementwise safe inverse sqrt of a degree vector.
+pub fn inv_sqrt_vec(d: &[f64]) -> Vec<f64> {
+    d.iter().map(|&x| safe_recip_sqrt(x)).collect()
+}
+
+/// Euclidean norm of each row of a dense matrix.
+pub fn row_norms(m: &Dense) -> Vec<f64> {
+    (0..m.nrows)
+        .map(|r| m.row(r).iter().map(|x| x * x).sum::<f64>().sqrt())
+        .collect()
+}
+
+/// In-place row 2-norm normalization — the paper's correlation option.
+/// All-zero rows are left untouched (safe division).
+pub fn normalize_rows(m: &mut Dense) {
+    for r in 0..m.nrows {
+        let norm: f64 = m.row(r).iter().map(|x| x * x).sum::<f64>().sqrt();
+        let s = safe_recip(norm);
+        if s != 0.0 {
+            for x in m.row_mut(r) {
+                *x *= s;
+            }
+        }
+    }
+}
+
+/// y += a * x.
+pub fn axpy(a: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, &xi) in y.iter_mut().zip(x.iter()) {
+        *yi += a * xi;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn safe_funcs_zero() {
+        assert_eq!(safe_recip(0.0), 0.0);
+        assert_eq!(safe_recip_sqrt(0.0), 0.0);
+        assert_eq!(safe_recip(4.0), 0.25);
+        assert_eq!(safe_recip_sqrt(4.0), 0.5);
+    }
+
+    #[test]
+    fn row_norms_known() {
+        let m = Dense::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        assert_eq!(row_norms(&m), vec![5.0, 0.0]);
+    }
+
+    #[test]
+    fn normalize_rows_unit_or_zero() {
+        let mut m = Dense::from_vec(2, 2, vec![3.0, 4.0, 0.0, 0.0]);
+        normalize_rows(&mut m);
+        assert!((m.get(0, 0) - 0.6).abs() < 1e-12);
+        assert!((m.get(0, 1) - 0.8).abs() < 1e-12);
+        assert_eq!(m.row(1), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let x = vec![1.0, 2.0];
+        let mut y = vec![10.0, 20.0];
+        axpy(0.5, &x, &mut y);
+        assert_eq!(y, vec![10.5, 21.0]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Graph bootstrap on GEE embeddings — one of the applications the paper
+//! lists in §1 (via the original GEE work): resample the edge list with
+//! replacement, re-embed each replicate, and report per-vertex embedding
+//! variability (standard errors / percentile intervals). Vertices whose
+//! embedding is unstable under resampling sit near community boundaries.
+
+use crate::gee::options::GeeOptions;
+use crate::gee::sparse_gee::SparseGee;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+use crate::util::rng::Rng;
+
+/// Bootstrap output.
+#[derive(Clone, Debug)]
+pub struct BootstrapResult {
+    /// Point estimate: embedding of the original graph.
+    pub z: Dense,
+    /// Per-vertex, per-dimension standard error across replicates (N×K).
+    pub stderr: Dense,
+    /// Per-vertex total instability: mean stderr across dimensions.
+    pub instability: Vec<f64>,
+    pub replicates: usize,
+}
+
+/// Edge-resampling bootstrap: each replicate draws |E| edges with
+/// replacement from the original edge list (weights carried along).
+pub fn bootstrap_embedding(
+    g: &Graph,
+    opts: &GeeOptions,
+    replicates: usize,
+    seed: u64,
+) -> BootstrapResult {
+    assert!(replicates >= 2);
+    let engine = SparseGee::fast();
+    let z = engine.embed(g, opts);
+    let n = g.n;
+    let k = g.k;
+    let m = g.num_edges();
+
+    let mut rng = Rng::new(seed);
+    let mut sum = Dense::zeros(n, k);
+    let mut sumsq = Dense::zeros(n, k);
+    for _ in 0..replicates {
+        let mut gb = Graph::new(n, k);
+        gb.labels = g.labels.clone();
+        for _ in 0..m {
+            let e = rng.below(m);
+            gb.add_edge(g.src[e], g.dst[e], g.w[e]);
+        }
+        let zb = engine.embed(&gb, opts);
+        for i in 0..n * k {
+            sum.data[i] += zb.data[i];
+            sumsq.data[i] += zb.data[i] * zb.data[i];
+        }
+    }
+
+    let r = replicates as f64;
+    let mut stderr = Dense::zeros(n, k);
+    for i in 0..n * k {
+        let mean = sum.data[i] / r;
+        let var = (sumsq.data[i] / r - mean * mean).max(0.0) * r / (r - 1.0);
+        stderr.data[i] = var.sqrt();
+    }
+    let instability: Vec<f64> = (0..n)
+        .map(|v| stderr.row(v).iter().sum::<f64>() / k as f64)
+        .collect();
+    BootstrapResult { z, stderr, instability, replicates }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+
+    #[test]
+    fn boundary_vertices_are_less_stable() {
+        // strong 2-block graph plus one vertex (0) wired half-half
+        let mut p = SbmParams::fitted(120, 2, 1200, 6.0, vec![0.5, 0.5]);
+        p.class_probs = vec![0.5, 0.5];
+        let mut g = generate_sbm(&p, 9);
+        // rewire vertex 0: give it equal ties to both blocks
+        let keep: Vec<usize> = (0..g.num_edges())
+            .filter(|&i| g.src[i] != 0 && g.dst[i] != 0)
+            .collect();
+        let (src, dst, w): (Vec<u32>, Vec<u32>, Vec<f64>) = (
+            keep.iter().map(|&i| g.src[i]).collect(),
+            keep.iter().map(|&i| g.dst[i]).collect(),
+            keep.iter().map(|&i| g.w[i]).collect(),
+        );
+        g.src = src;
+        g.dst = dst;
+        g.w = w;
+        for v in 1..5u32 {
+            g.add_edge(0, v, 1.0);
+        }
+        let other: Vec<u32> = (1..g.n as u32)
+            .filter(|&v| g.labels[v as usize] != g.labels[0])
+            .take(4)
+            .collect();
+        for v in other {
+            g.add_edge(0, v, 1.0);
+        }
+
+        let res = bootstrap_embedding(&g, &GeeOptions::new(false, true, true), 12, 3);
+        assert_eq!(res.replicates, 12);
+        // vertex 0 (boundary, low degree) should be among the least stable
+        let mut order: Vec<usize> = (0..g.n).collect();
+        order.sort_by(|&a, &b| {
+            res.instability[b].partial_cmp(&res.instability[a]).unwrap()
+        });
+        let rank0 = order.iter().position(|&v| v == 0).unwrap();
+        assert!(rank0 < g.n / 3, "vertex 0 stability rank {rank0}");
+    }
+
+    #[test]
+    fn stderr_nonnegative_and_shaped() {
+        let g = generate_sbm(&SbmParams::paper(80), 4);
+        let res = bootstrap_embedding(&g, &GeeOptions::NONE, 5, 1);
+        assert_eq!(res.stderr.nrows, 80);
+        assert!(res.stderr.data.iter().all(|&x| x >= 0.0));
+        assert_eq!(res.instability.len(), 80);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = generate_sbm(&SbmParams::paper(60), 5);
+        let a = bootstrap_embedding(&g, &GeeOptions::NONE, 4, 7);
+        let b = bootstrap_embedding(&g, &GeeOptions::NONE, 4, 7);
+        assert_eq!(a.instability, b.instability);
+    }
+}

@@ -1,0 +1,157 @@
+//! Vertex dynamics over graph time series (Shen, Larson, Trinh, Qin,
+//! Park & Priebe 2023, ref [12] of the paper): embed each time window
+//! with GEE and measure per-vertex movement between consecutive
+//! embeddings. Vertices whose communication pattern shifts show large
+//! dynamics; stable vertices stay near zero — the reference uses this to
+//! discover pattern shifts in large-scale networks.
+
+use crate::gee::options::GeeOptions;
+use crate::gee::sparse_gee::SparseGee;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// Per-window embedding plus per-vertex movement vs the previous window.
+#[derive(Clone, Debug)]
+pub struct DynamicsResult {
+    /// One embedding per window, each N × K.
+    pub embeddings: Vec<Dense>,
+    /// Per-window per-vertex Euclidean displacement from the previous
+    /// window (first window is all zeros). `dynamics[t][v]`.
+    pub dynamics: Vec<Vec<f64>>,
+}
+
+/// Embed a time series of graphs (same vertex set / labels per window)
+/// and compute vertex dynamics. The correlation option is recommended so
+/// displacement measures direction change, not degree drift.
+pub fn vertex_dynamics(windows: &[&Graph], opts: &GeeOptions) -> DynamicsResult {
+    let engine = SparseGee::fast();
+    let embeddings: Vec<Dense> = windows.iter().map(|g| engine.embed(g, opts)).collect();
+    let mut dynamics = Vec::with_capacity(windows.len());
+    for t in 0..embeddings.len() {
+        if t == 0 {
+            dynamics.push(vec![0.0; embeddings[0].nrows]);
+            continue;
+        }
+        let (prev, cur) = (&embeddings[t - 1], &embeddings[t]);
+        let n = prev.nrows.min(cur.nrows);
+        let mut d = vec![0.0; cur.nrows];
+        for v in 0..n {
+            d[v] = prev
+                .row(v)
+                .iter()
+                .zip(cur.row(v))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+        }
+        dynamics.push(d);
+    }
+    DynamicsResult { embeddings, dynamics }
+}
+
+/// Vertices whose max displacement over the series exceeds `threshold`,
+/// sorted by descending peak movement — the "shift detector" output.
+pub fn shifted_vertices(res: &DynamicsResult, threshold: f64) -> Vec<(usize, f64)> {
+    let n = res.dynamics.iter().map(|d| d.len()).max().unwrap_or(0);
+    let mut peaks = vec![0.0f64; n];
+    for d in &res.dynamics {
+        for (v, &x) in d.iter().enumerate() {
+            if x > peaks[v] {
+                peaks[v] = x;
+            }
+        }
+    }
+    let mut out: Vec<(usize, f64)> = peaks
+        .into_iter()
+        .enumerate()
+        .filter(|&(_, p)| p > threshold)
+        .collect();
+    out.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Three windows: stable 2-community graph, then vertices 0..5 switch
+    /// their connectivity to the other community in window 2.
+    fn series(seed: u64) -> Vec<Graph> {
+        let n = 60;
+        let mut rng = Rng::new(seed);
+        let labels: Vec<i32> = (0..n).map(|i| (i % 2) as i32).collect();
+        let mut make = |movers_flipped: bool| {
+            let mut g = Graph::new(n, 2);
+            g.labels = labels.clone();
+            for _ in 0..n * 8 {
+                let a = rng.below(n);
+                let b = rng.below(n);
+                if a == b {
+                    continue;
+                }
+                let eff = |v: usize| -> i32 {
+                    if movers_flipped && v < 5 {
+                        1 - labels[v]
+                    } else {
+                        labels[v]
+                    }
+                };
+                let p = if eff(a) == eff(b) { 0.7 } else { 0.1 };
+                if rng.f64() < p {
+                    g.add_edge(a as u32, b as u32, 1.0);
+                }
+            }
+            g
+        };
+        vec![make(false), make(false), make(true)]
+    }
+
+    #[test]
+    fn movers_have_largest_dynamics() {
+        let windows = series(21);
+        let refs: Vec<&Graph> = windows.iter().collect();
+        let res = vertex_dynamics(&refs, &GeeOptions::new(false, true, true));
+        assert_eq!(res.dynamics.len(), 3);
+        assert!(res.dynamics[0].iter().all(|&d| d == 0.0));
+        // window 2: movers (0..5) should out-move the stable majority
+        let d2 = &res.dynamics[2];
+        let mover_mean: f64 = d2[..5].iter().sum::<f64>() / 5.0;
+        let stable_mean: f64 = d2[5..].iter().sum::<f64>() / (d2.len() - 5) as f64;
+        assert!(
+            mover_mean > 2.0 * stable_mean,
+            "movers {mover_mean} vs stable {stable_mean}"
+        );
+    }
+
+    #[test]
+    fn shift_detector_ranks_movers_first() {
+        let windows = series(22);
+        let refs: Vec<&Graph> = windows.iter().collect();
+        let res = vertex_dynamics(&refs, &GeeOptions::new(false, true, true));
+        let shifts = shifted_vertices(&res, 0.0);
+        // at least 3 of the 5 movers in the top 8
+        let top: Vec<usize> = shifts.iter().take(8).map(|&(v, _)| v).collect();
+        let movers_in_top = top.iter().filter(|&&v| v < 5).count();
+        assert!(movers_in_top >= 3, "top8 {top:?}");
+    }
+
+    #[test]
+    fn stable_series_has_small_dynamics() {
+        let windows = series(23);
+        let refs: Vec<&Graph> = windows[..2].iter().collect(); // two stable windows
+        let res = vertex_dynamics(&refs, &GeeOptions::new(false, true, true));
+        let mean: f64 =
+            res.dynamics[1].iter().sum::<f64>() / res.dynamics[1].len() as f64;
+        assert!(mean < 0.5, "stable mean movement {mean}");
+    }
+
+    #[test]
+    fn single_window_is_trivial() {
+        let windows = series(24);
+        let refs: Vec<&Graph> = windows[..1].iter().collect();
+        let res = vertex_dynamics(&refs, &GeeOptions::NONE);
+        assert_eq!(res.embeddings.len(), 1);
+        assert!(shifted_vertices(&res, 0.0).is_empty());
+    }
+}

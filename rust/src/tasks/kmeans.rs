@@ -1,0 +1,187 @@
+//! Lloyd's k-means with k-means++ initialization — vertex clustering on
+//! GEE embeddings (the paper's cited downstream task; GEE+k-means is the
+//! community-detection recipe of Shen et al.).
+
+use crate::sparse::Dense;
+use crate::util::rng::Rng;
+
+/// k-means configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct KMeansConfig {
+    pub k: usize,
+    pub max_iters: usize,
+    /// Relative change of total inertia that counts as converged.
+    pub tol: f64,
+    pub seed: u64,
+}
+
+impl KMeansConfig {
+    pub fn new(k: usize) -> Self {
+        KMeansConfig { k, max_iters: 100, tol: 1e-6, seed: 0xC1_0551 }
+    }
+}
+
+/// k-means result.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub assignments: Vec<usize>,
+    pub centroids: Dense,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+#[inline]
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Run k-means on the rows of `x`.
+pub fn kmeans(x: &Dense, cfg: &KMeansConfig) -> KMeansResult {
+    let n = x.nrows;
+    let d = x.ncols;
+    let k = cfg.k.min(n.max(1));
+    let mut rng = Rng::new(cfg.seed);
+
+    // --- k-means++ seeding
+    let mut centroids = Dense::zeros(k, d);
+    let first = rng.below(n);
+    centroids.row_mut(0).copy_from_slice(x.row(first));
+    let mut dist2: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centroids.row(0))).collect();
+    for c in 1..k {
+        let total: f64 = dist2.iter().sum();
+        let pick = if total > 0.0 {
+            let mut t = rng.f64() * total;
+            let mut chosen = n - 1;
+            for (i, &d2) in dist2.iter().enumerate() {
+                t -= d2;
+                if t <= 0.0 {
+                    chosen = i;
+                    break;
+                }
+            }
+            chosen
+        } else {
+            rng.below(n)
+        };
+        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        for i in 0..n {
+            let nd = sq_dist(x.row(i), centroids.row(c));
+            if nd < dist2[i] {
+                dist2[i] = nd;
+            }
+        }
+    }
+
+    // --- Lloyd iterations
+    let mut assignments = vec![0usize; n];
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.max_iters {
+        iterations = it + 1;
+        // assign
+        let mut new_inertia = 0.0;
+        for i in 0..n {
+            let mut best = 0usize;
+            let mut best_d = f64::INFINITY;
+            for c in 0..k {
+                let d2 = sq_dist(x.row(i), centroids.row(c));
+                if d2 < best_d {
+                    best_d = d2;
+                    best = c;
+                }
+            }
+            assignments[i] = best;
+            new_inertia += best_d;
+        }
+        // update
+        let mut counts = vec![0usize; k];
+        let mut sums = Dense::zeros(k, d);
+        for i in 0..n {
+            let c = assignments[i];
+            counts[c] += 1;
+            for (s, &v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums.row_mut(c) {
+                    *s /= counts[c] as f64;
+                }
+                centroids.row_mut(c).copy_from_slice(sums.row(c));
+            } else {
+                // re-seed empty cluster at the farthest point
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sq_dist(x.row(a), centroids.row(assignments[a]))
+                            .partial_cmp(&sq_dist(x.row(b), centroids.row(assignments[b])))
+                            .unwrap()
+                    })
+                    .unwrap_or(0);
+                centroids.row_mut(c).copy_from_slice(x.row(far));
+            }
+        }
+        // converged?
+        if inertia.is_finite() && (inertia - new_inertia).abs() <= cfg.tol * inertia.max(1e-12) {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+
+    KMeansResult { assignments, centroids, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs() -> Dense {
+        // two tight blobs around (0,0) and (10,10)
+        let mut pts = Vec::new();
+        for i in 0..20 {
+            let j = (i % 5) as f64 * 0.01;
+            pts.extend_from_slice(&[j, -j]);
+        }
+        for i in 0..20 {
+            let j = (i % 5) as f64 * 0.01;
+            pts.extend_from_slice(&[10.0 + j, 10.0 - j]);
+        }
+        Dense::from_vec(40, 2, pts)
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let x = blobs();
+        let res = kmeans(&x, &KMeansConfig::new(2));
+        // all of first 20 in one cluster, all of last 20 in the other
+        let a = res.assignments[0];
+        assert!(res.assignments[..20].iter().all(|&c| c == a));
+        let b = res.assignments[20];
+        assert_ne!(a, b);
+        assert!(res.assignments[20..].iter().all(|&c| c == b));
+        assert!(res.inertia < 1.0);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let x = blobs();
+        let r1 = kmeans(&x, &KMeansConfig::new(2));
+        let r2 = kmeans(&x, &KMeansConfig::new(2));
+        assert_eq!(r1.assignments, r2.assignments);
+    }
+
+    #[test]
+    fn k_larger_than_n_clamped() {
+        let x = Dense::from_vec(3, 1, vec![0.0, 1.0, 2.0]);
+        let res = kmeans(&x, &KMeansConfig::new(10));
+        assert_eq!(res.assignments.len(), 3);
+    }
+
+    #[test]
+    fn inertia_zero_for_k_equals_n() {
+        let x = Dense::from_vec(4, 1, vec![0.0, 5.0, 10.0, 15.0]);
+        let res = kmeans(&x, &KMeansConfig::new(4));
+        assert!(res.inertia < 1e-9, "inertia {}", res.inertia);
+    }
+}

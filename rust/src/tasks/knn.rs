@@ -1,0 +1,154 @@
+//! k-nearest-neighbor vertex classification on embeddings — the
+//! vertex-classification downstream task GEE was designed for
+//! (original GEE pairs the embedding with 5-NN / LDA).
+
+use crate::sparse::Dense;
+
+/// Classify each query row by majority vote among its k nearest train
+/// rows (Euclidean). Ties break toward the nearest contributing class.
+pub fn knn_classify(
+    train: &Dense,
+    train_labels: &[i32],
+    queries: &Dense,
+    k: usize,
+) -> Vec<i32> {
+    assert_eq!(train.nrows, train_labels.len());
+    assert_eq!(train.ncols, queries.ncols);
+    let k = k.max(1).min(train.nrows);
+    let mut out = Vec::with_capacity(queries.nrows);
+    // reusable scratch of (dist, idx)
+    let mut dists: Vec<(f64, usize)> = Vec::with_capacity(train.nrows);
+    for q in 0..queries.nrows {
+        dists.clear();
+        let qrow = queries.row(q);
+        for t in 0..train.nrows {
+            let d: f64 = qrow
+                .iter()
+                .zip(train.row(t))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            dists.push((d, t));
+        }
+        // partial select of the k smallest
+        dists.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+        let neighbors = &mut dists[..k];
+        neighbors.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // majority vote
+        let mut votes: std::collections::HashMap<i32, (usize, f64)> =
+            std::collections::HashMap::new();
+        for &(d, t) in neighbors.iter() {
+            let e = votes.entry(train_labels[t]).or_insert((0, f64::INFINITY));
+            e.0 += 1;
+            e.1 = e.1.min(d);
+        }
+        let best = votes
+            .into_iter()
+            .max_by(|a, b| {
+                (a.1 .0, std::cmp::Reverse(ordered(a.1 .1)))
+                    .cmp(&(b.1 .0, std::cmp::Reverse(ordered(b.1 .1))))
+            })
+            .map(|(l, _)| l)
+            .unwrap_or(-1);
+        out.push(best);
+    }
+    out
+}
+
+/// Total-order wrapper for f64 (NaN-free by construction here).
+fn ordered(x: f64) -> u64 {
+    x.to_bits() ^ (((x.to_bits() as i64) >> 63) as u64 >> 1)
+}
+
+/// Leave-one-out 1-NN training accuracy — a quick embedding-quality
+/// metric used by the examples.
+pub fn loo_1nn_accuracy(x: &Dense, labels: &[i32]) -> f64 {
+    let n = x.nrows;
+    if n < 2 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    let mut counted = 0usize;
+    for i in 0..n {
+        if labels[i] < 0 {
+            continue;
+        }
+        let mut best = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        for j in 0..n {
+            if j == i || labels[j] < 0 {
+                continue;
+            }
+            let d: f64 = x
+                .row(i)
+                .iter()
+                .zip(x.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = j;
+            }
+        }
+        if best != usize::MAX {
+            counted += 1;
+            if labels[best] == labels[i] {
+                correct += 1;
+            }
+        }
+    }
+    if counted == 0 {
+        0.0
+    } else {
+        correct as f64 / counted as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn train_set() -> (Dense, Vec<i32>) {
+        let x = Dense::from_vec(
+            6,
+            1,
+            vec![0.0, 0.1, 0.2, 10.0, 10.1, 10.2],
+        );
+        (x, vec![0, 0, 0, 1, 1, 1])
+    }
+
+    #[test]
+    fn classifies_obvious_queries() {
+        let (x, y) = train_set();
+        let q = Dense::from_vec(2, 1, vec![0.05, 9.9]);
+        assert_eq!(knn_classify(&x, &y, &q, 3), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_one_nearest() {
+        let (x, y) = train_set();
+        let q = Dense::from_vec(1, 1, vec![5.2]);
+        // nearest single point is 10.0 (class 1)? |5.2-0.2|=5.0, |5.2-10|=4.8
+        assert_eq!(knn_classify(&x, &y, &q, 1), vec![1]);
+    }
+
+    #[test]
+    fn k_clamped_to_train_size() {
+        let (x, y) = train_set();
+        let q = Dense::from_vec(1, 1, vec![0.0]);
+        // k=100 -> all 6 vote, tie 3-3 broken by nearest distance (class 0)
+        assert_eq!(knn_classify(&x, &y, &q, 100), vec![0]);
+    }
+
+    #[test]
+    fn loo_accuracy_perfect_on_separated() {
+        let (x, y) = train_set();
+        assert_eq!(loo_1nn_accuracy(&x, &y), 1.0);
+    }
+
+    #[test]
+    fn loo_skips_unlabeled() {
+        let x = Dense::from_vec(3, 1, vec![0.0, 0.1, 100.0]);
+        let y = vec![0, 0, -1];
+        assert_eq!(loo_1nn_accuracy(&x, &y), 1.0);
+    }
+}

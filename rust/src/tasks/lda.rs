@@ -1,0 +1,151 @@
+//! Linear Discriminant Analysis classifier (diagonal-covariance variant)
+//! — the second classifier the original GEE paper pairs with the
+//! embedding. Gaussian class-conditional model with shared diagonal
+//! covariance: robust, closed-form, and O(N·K·D).
+
+use crate::sparse::Dense;
+
+/// Fitted LDA model.
+#[derive(Clone, Debug)]
+pub struct Lda {
+    /// Class means, K×D.
+    pub means: Dense,
+    /// Shared diagonal variance, length D.
+    pub var: Vec<f64>,
+    /// Log class priors, length K.
+    pub log_priors: Vec<f64>,
+    pub k: usize,
+}
+
+impl Lda {
+    /// Fit on labeled rows (label < 0 rows are ignored).
+    pub fn fit(x: &Dense, labels: &[i32], k: usize) -> Lda {
+        assert_eq!(x.nrows, labels.len());
+        let d = x.ncols;
+        let mut counts = vec![0usize; k];
+        let mut means = Dense::zeros(k, d);
+        for (i, &l) in labels.iter().enumerate() {
+            if l < 0 {
+                continue;
+            }
+            counts[l as usize] += 1;
+            for (m, &v) in means.row_mut(l as usize).iter_mut().zip(x.row(i)) {
+                *m += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for m in means.row_mut(c) {
+                    *m /= counts[c] as f64;
+                }
+            }
+        }
+        // pooled diagonal variance
+        let mut var = vec![0.0f64; d];
+        let mut total = 0usize;
+        for (i, &l) in labels.iter().enumerate() {
+            if l < 0 {
+                continue;
+            }
+            total += 1;
+            for (j, (&v, &m)) in x.row(i).iter().zip(means.row(l as usize)).enumerate() {
+                var[j] += (v - m) * (v - m);
+            }
+        }
+        let denom = total.saturating_sub(k).max(1) as f64;
+        for v in var.iter_mut() {
+            *v = (*v / denom).max(1e-12); // regularize
+        }
+        let total_f = total.max(1) as f64;
+        let log_priors = counts
+            .iter()
+            .map(|&c| ((c.max(1)) as f64 / total_f).ln())
+            .collect();
+        Lda { means, var, log_priors, k }
+    }
+
+    /// Per-class discriminant scores for one row.
+    pub fn scores(&self, row: &[f64]) -> Vec<f64> {
+        (0..self.k)
+            .map(|c| {
+                let mut s = self.log_priors[c];
+                for (j, (&v, &m)) in row.iter().zip(self.means.row(c)).enumerate() {
+                    s -= (v - m) * (v - m) / (2.0 * self.var[j]);
+                }
+                s
+            })
+            .collect()
+    }
+
+    /// Predict the class of each row.
+    pub fn predict(&self, x: &Dense) -> Vec<i32> {
+        (0..x.nrows)
+            .map(|i| {
+                let s = self.scores(x.row(i));
+                s.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(c, _)| c as i32)
+                    .unwrap_or(-1)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn recovers_separated_gaussians() {
+        let mut rng = Rng::new(61);
+        let n_per = 100;
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..3 {
+            let cx = c as f64 * 5.0;
+            for _ in 0..n_per {
+                data.push(cx + 0.3 * rng.normal());
+                data.push(-cx + 0.3 * rng.normal());
+                labels.push(c as i32);
+            }
+        }
+        let x = Dense::from_vec(3 * n_per, 2, data);
+        let lda = Lda::fit(&x, &labels, 3);
+        let pred = lda.predict(&x);
+        let correct = pred
+            .iter()
+            .zip(labels.iter())
+            .filter(|(p, l)| p == l)
+            .count();
+        assert!(correct as f64 / labels.len() as f64 > 0.99);
+    }
+
+    #[test]
+    fn ignores_unlabeled_rows() {
+        let x = Dense::from_vec(4, 1, vec![0.0, 0.2, 10.0, 500.0]);
+        let labels = vec![0, 0, 1, -1];
+        let lda = Lda::fit(&x, &labels, 2);
+        // the outlier 500.0 must not have influenced class means
+        assert!(lda.means.get(0, 0) < 1.0);
+        assert!((lda.means.get(1, 0) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn priors_reflect_imbalance() {
+        let x = Dense::from_vec(4, 1, vec![0.0, 0.1, 0.2, 10.0]);
+        let labels = vec![0, 0, 0, 1];
+        let lda = Lda::fit(&x, &labels, 2);
+        assert!(lda.log_priors[0] > lda.log_priors[1]);
+    }
+
+    #[test]
+    fn empty_class_does_not_panic() {
+        let x = Dense::from_vec(2, 1, vec![0.0, 1.0]);
+        let labels = vec![0, 0];
+        let lda = Lda::fit(&x, &labels, 3);
+        let pred = lda.predict(&x);
+        assert_eq!(pred.len(), 2);
+    }
+}

@@ -1,0 +1,152 @@
+//! Clustering/classification quality metrics: accuracy, Adjusted Rand
+//! Index, Normalized Mutual Information — used to validate that every
+//! engine's embedding supports the downstream tasks equally well.
+
+use std::collections::HashMap;
+
+/// Fraction of agreeing positions (ignores pairs where truth < 0).
+pub fn accuracy(pred: &[i32], truth: &[i32]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let mut n = 0usize;
+    let mut ok = 0usize;
+    for (&p, &t) in pred.iter().zip(truth.iter()) {
+        if t < 0 {
+            continue;
+        }
+        n += 1;
+        if p == t {
+            ok += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        ok as f64 / n as f64
+    }
+}
+
+/// Contingency table between two labelings (ignoring truth < 0 pairs).
+fn contingency(a: &[usize], b: &[usize]) -> (HashMap<(usize, usize), f64>, HashMap<usize, f64>, HashMap<usize, f64>, f64) {
+    let mut joint: HashMap<(usize, usize), f64> = HashMap::new();
+    let mut ma: HashMap<usize, f64> = HashMap::new();
+    let mut mb: HashMap<usize, f64> = HashMap::new();
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        *joint.entry((x, y)).or_insert(0.0) += 1.0;
+        *ma.entry(x).or_insert(0.0) += 1.0;
+        *mb.entry(y).or_insert(0.0) += 1.0;
+    }
+    let n = a.len() as f64;
+    (joint, ma, mb, n)
+}
+
+fn choose2(x: f64) -> f64 {
+    x * (x - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index between two clusterings (label values arbitrary).
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let (joint, ma, mb, n) = contingency(a, b);
+    let sum_ij: f64 = joint.values().map(|&c| choose2(c)).sum();
+    let sum_a: f64 = ma.values().map(|&c| choose2(c)).sum();
+    let sum_b: f64 = mb.values().map(|&c| choose2(c)).sum();
+    let expected = sum_a * sum_b / choose2(n).max(1.0);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return if (sum_ij - expected).abs() < 1e-12 { 1.0 } else { 0.0 };
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information (arithmetic normalization).
+pub fn nmi(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let (joint, ma, mb, n) = contingency(a, b);
+    let mut mi = 0.0;
+    for (&(x, y), &c) in &joint {
+        let pxy = c / n;
+        let px = ma[&x] / n;
+        let py = mb[&y] / n;
+        if pxy > 0.0 {
+            mi += pxy * (pxy / (px * py)).ln();
+        }
+    }
+    let ha: f64 = -ma.values().map(|&c| (c / n) * (c / n).ln()).sum::<f64>();
+    let hb: f64 = -mb.values().map(|&c| (c / n) * (c / n).ln()).sum::<f64>();
+    let denom = 0.5 * (ha + hb);
+    if denom <= 0.0 {
+        // both partitions trivial (single cluster): identical -> 1
+        return 1.0;
+    }
+    (mi / denom).clamp(0.0, 1.0)
+}
+
+/// Convert i32 labels (with possible -1) into usize labels, filtering
+/// pairs where either side is negative. Returns (a, b) filtered together.
+pub fn paired_labels(a: &[i32], b: &[i32]) -> (Vec<usize>, Vec<usize>) {
+    let mut xa = Vec::new();
+    let mut xb = Vec::new();
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        if x >= 0 && y >= 0 {
+            xa.push(x as usize);
+            xb.push(y as usize);
+        }
+    }
+    (xa, xb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[0, 9], &[-1, -1]), 0.0);
+    }
+
+    #[test]
+    fn ari_identical_is_one() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_permutation_invariant() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        let b = vec![2, 2, 0, 0, 1, 1]; // same partition, relabeled
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        // checkerboard against halves: ARI should be low/negative-ish
+        let a: Vec<usize> = (0..40).map(|i| i % 2).collect();
+        let b: Vec<usize> = (0..40).map(|i| i / 20).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 0.2, "ari {ari}");
+    }
+
+    #[test]
+    fn nmi_bounds_and_identity() {
+        let a = vec![0, 0, 1, 1];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let b = vec![0, 1, 0, 1];
+        let v = nmi(&a, &b);
+        assert!((0.0..=1.0).contains(&v));
+        assert!(v < 0.1);
+    }
+
+    #[test]
+    fn paired_filters_negatives() {
+        let (a, b) = paired_labels(&[0, -1, 2], &[1, 1, -1]);
+        assert_eq!(a, vec![0]);
+        assert_eq!(b, vec![1]);
+    }
+}

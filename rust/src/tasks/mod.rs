@@ -1,0 +1,11 @@
+//! Downstream tasks that validate embedding quality: vertex clustering
+//! (k-means → ARI/NMI against SBM ground truth), vertex classification
+//! (k-NN, LDA → accuracy). These are the applications the GEE line of
+//! work targets; the examples use them as end-to-end sanity checks.
+
+pub mod bootstrap;
+pub mod dynamics;
+pub mod kmeans;
+pub mod knn;
+pub mod lda;
+pub mod metrics;

@@ -1,0 +1,9 @@
+//! Support utilities: deterministic PRNG, minimal JSON, property-test
+//! harness, timing. Everything here exists because the offline crate set
+//! excludes the usual suspects (`rand`, `serde`, `proptest`, `criterion`);
+//! each module documents the substitution.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod timing;

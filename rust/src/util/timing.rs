@@ -1,0 +1,87 @@
+//! Timing helpers shared by the bench harnesses and the coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+/// Measure the wall time of `f`, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run `f` `reps` times after `warmup` unmeasured runs; return per-rep
+/// durations. The paper reports single-run operation times; we report
+/// min/median/mean so noise on a shared box is visible.
+pub fn bench_runs<T>(warmup: usize, reps: usize, mut f: impl FnMut() -> T) -> Vec<Duration> {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            t0.elapsed()
+        })
+        .collect()
+}
+
+/// Summary statistics over a set of timed runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl Stats {
+    pub fn from_runs(runs: &[Duration]) -> Stats {
+        assert!(!runs.is_empty());
+        let mut sorted = runs.to_vec();
+        sorted.sort();
+        let mean_nanos =
+            sorted.iter().map(|d| d.as_nanos()).sum::<u128>() / sorted.len() as u128;
+        Stats {
+            min: sorted[0],
+            median: sorted[sorted.len() / 2],
+            mean: Duration::from_nanos(mean_nanos as u64),
+            max: *sorted.last().unwrap(),
+        }
+    }
+}
+
+/// Format a duration like the paper's tables (seconds, 3 decimals).
+pub fn secs(d: Duration) -> String {
+    format!("{:.3}", d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_result() {
+        let (x, d) = time_it(|| 21 * 2);
+        assert_eq!(x, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let runs = vec![
+            Duration::from_millis(3),
+            Duration::from_millis(1),
+            Duration::from_millis(2),
+        ];
+        let s = Stats::from_runs(&runs);
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.mean, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn secs_formats_three_decimals() {
+        assert_eq!(secs(Duration::from_millis(1234)), "1.234");
+    }
+}

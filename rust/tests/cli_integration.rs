@@ -1,0 +1,136 @@
+//! CLI end-to-end tests: drive the `gee` binary the way a user would
+//! (generate → embed from files → bench-table → serve), checking output
+//! and exit codes. Cargo provides the binary path via CARGO_BIN_EXE_gee.
+
+use std::process::Command;
+
+fn gee() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gee"))
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = gee().args(args).output().expect("spawn gee");
+    assert!(
+        out.status.success(),
+        "gee {:?} failed:\nstdout: {}\nstderr: {}",
+        args,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_lists_commands() {
+    let text = run_ok(&["help"]);
+    for cmd in ["info", "generate", "embed", "bench-table", "serve"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn unknown_command_fails() {
+    let out = gee().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn info_prints_table2() {
+    let text = run_ok(&["info"]);
+    assert!(text.contains("Citeseer"));
+    assert!(text.contains("CL-100K-1d8-L5"));
+    assert!(text.contains("10000000"));
+}
+
+#[test]
+fn generate_then_embed_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("gee_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join("sbm500");
+    let stem_s = stem.to_str().unwrap();
+    let gen = run_ok(&["generate", "--sbm", "500", "--seed", "3", "--out", stem_s]);
+    assert!(gen.contains("n=500"));
+    assert!(stem.with_extension("edges").exists());
+    assert!(stem.with_extension("labels").exists());
+
+    let zpath = dir.join("z.tsv");
+    let emb = run_ok(&[
+        "embed",
+        "--input",
+        stem_s,
+        "--engine",
+        "sparse",
+        "--options",
+        "ldc",
+        "--cluster",
+        "--out",
+        zpath.to_str().unwrap(),
+    ]);
+    assert!(emb.contains("embedded n=500"));
+    assert!(emb.contains("ARI"));
+    // ARI on a paper-parameter SBM at n=500 should be decent
+    let ari: f64 = emb
+        .lines()
+        .find(|l| l.contains("ARI"))
+        .and_then(|l| l.split(':').nth(1))
+        .unwrap()
+        .trim()
+        .parse()
+        .unwrap();
+    assert!(ari > 0.3, "CLI clustering ARI {ari}");
+    // embedding file: 500 rows, 3 columns
+    let z = std::fs::read_to_string(&zpath).unwrap();
+    let rows: Vec<&str> = z.lines().collect();
+    assert_eq!(rows.len(), 500);
+    assert_eq!(rows[0].split('\t').count(), 3);
+}
+
+#[test]
+fn engines_agree_through_cli_files() {
+    let dir = std::env::temp_dir().join(format!("gee_cli_eng_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let stem = dir.join("g");
+    run_ok(&["generate", "--sbm", "200", "--seed", "9", "--out", stem.to_str().unwrap()]);
+    let mut outputs = Vec::new();
+    for engine in ["edgelist", "sparse", "sparse-fast"] {
+        let zp = dir.join(format!("z_{engine}.tsv"));
+        run_ok(&[
+            "embed",
+            "--input",
+            stem.to_str().unwrap(),
+            "--engine",
+            engine,
+            "--options",
+            "ld-",
+            "--out",
+            zp.to_str().unwrap(),
+        ]);
+        outputs.push(std::fs::read_to_string(&zp).unwrap());
+    }
+    assert_eq!(outputs[0], outputs[1]);
+    assert_eq!(outputs[1], outputs[2]);
+}
+
+#[test]
+fn bench_table_2_runs() {
+    let text = run_ok(&["bench-table", "--table", "2"]);
+    assert!(text.contains("Table 2"));
+    assert!(text.contains("PubMed"));
+}
+
+#[test]
+fn serve_completes_small_load() {
+    let text = run_ok(&["serve", "--requests", "40", "--workers", "2"]);
+    assert!(text.contains("served 40/40"));
+    assert!(text.contains("completed=40"));
+}
+
+#[test]
+fn bad_options_code_reports_error() {
+    let out = gee()
+        .args(["embed", "--sbm", "50", "--options", "zzz"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("options"));
+}

@@ -1,0 +1,160 @@
+//! End-to-end coordinator tests: the full service with the PJRT lane —
+//! queue → batcher → disjoint-union pack → compiled artifact execution →
+//! split → reply — must return embeddings identical (to f32 tolerance)
+//! with solo native computation.
+
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use gee_sparse::coordinator::batcher::BatchCapacity;
+use gee_sparse::coordinator::{EmbedRequest, EmbedService, Lane, ServiceConfig, StreamingGee};
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::Graph;
+use gee_sparse::util::rng::Rng;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(k) as i32;
+    }
+    for _ in 0..m {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            g.add_edge(a, b, 1.0);
+        }
+    }
+    g
+}
+
+const TOL: f64 = 5e-4;
+
+#[test]
+fn pjrt_lane_serves_batched_requests() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = EmbedService::start(ServiceConfig {
+        lane: Lane::Pjrt { artifact_dir: dir, fallback: Engine::SparseFast },
+        workers: 1,
+        batching: true,
+        // pack into the "s" bucket: 256 nodes / 2048 directed edges / 8 classes
+        batch_capacity: BatchCapacity::from_bucket(256, 2_048, 8),
+        batch_linger: Duration::from_millis(40),
+        ..ServiceConfig::default()
+    });
+
+    // 6 small graphs with k=2 -> several should share one padded execution
+    let graphs: Vec<Graph> = (0..6).map(|i| random_graph(500 + i, 30, 60, 2)).collect();
+    let opts = GeeOptions::new(true, true, false);
+    let rxs: Vec<_> = graphs
+        .iter()
+        .map(|g| svc.submit(EmbedRequest { graph: g.clone(), options: opts }).unwrap())
+        .collect();
+
+    let mut pjrt_served = 0usize;
+    let mut max_batch = 0usize;
+    for (g, rx) in graphs.iter().zip(rxs) {
+        let resp = rx.recv().unwrap().unwrap();
+        if resp.via == "pjrt" {
+            pjrt_served += 1;
+        }
+        max_batch = max_batch.max(resp.batch_size);
+        let expect = Engine::Sparse.embed(g, &opts).unwrap();
+        assert!(
+            expect.max_abs_diff(&resp.z) < TOL,
+            "batched pjrt result diverged: {}",
+            expect.max_abs_diff(&resp.z)
+        );
+    }
+    assert!(pjrt_served > 0, "no request went through the pjrt lane");
+    assert!(max_batch > 1, "no batching happened on the pjrt lane");
+    svc.shutdown();
+}
+
+#[test]
+fn pjrt_lane_falls_back_for_oversize() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = EmbedService::start(ServiceConfig {
+        lane: Lane::Pjrt { artifact_dir: dir, fallback: Engine::SparseFast },
+        workers: 1,
+        batching: false,
+        ..ServiceConfig::default()
+    });
+    // n = 9000 exceeds the largest bucket (8192)
+    let g = random_graph(510, 9_000, 3_000, 4);
+    let rx = svc.submit(EmbedRequest { graph: g.clone(), options: GeeOptions::NONE }).unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert_eq!(resp.via, "native-fallback");
+    let expect = Engine::SparseFast.embed(&g, &GeeOptions::NONE).unwrap();
+    assert!(expect.max_abs_diff(&resp.z) < 1e-10);
+    svc.shutdown();
+}
+
+#[test]
+fn mixed_sizes_and_options_under_load() {
+    let Some(dir) = artifact_dir() else { return };
+    let svc = EmbedService::start(ServiceConfig {
+        lane: Lane::Pjrt { artifact_dir: dir, fallback: Engine::SparseFast },
+        workers: 2, // pjrt thread + 1 native drainer
+        batching: true,
+        batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 8),
+        batch_linger: Duration::from_millis(5),
+        ..ServiceConfig::default()
+    });
+    let mut rng = Rng::new(520);
+    let combos = GeeOptions::table_order();
+    let mut cases = Vec::new();
+    for i in 0..24 {
+        let n = 20 + rng.below(150);
+        let g = random_graph(600 + i, n, n * 3, 2 + rng.below(3));
+        let opts = combos[rng.below(8)];
+        cases.push((g, opts));
+    }
+    let rxs: Vec<_> = cases
+        .iter()
+        .map(|(g, o)| svc.submit(EmbedRequest { graph: g.clone(), options: *o }).unwrap())
+        .collect();
+    for ((g, o), rx) in cases.iter().zip(rxs) {
+        let resp = rx.recv().unwrap().unwrap();
+        let expect = Engine::Sparse.embed(g, o).unwrap();
+        assert!(
+            expect.max_abs_diff(&resp.z) < TOL,
+            "case ({}, {:?}) diverged via {}",
+            g.n,
+            o,
+            resp.via
+        );
+    }
+    let m = svc.shutdown();
+    assert_eq!(m.completed.load(Ordering::Relaxed), 24);
+    assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+}
+
+#[test]
+fn streaming_then_service_snapshot_consistency() {
+    // streaming lane feeding the batch service: snapshot of a streamed
+    // graph embedded through the service equals the streaming snapshot
+    let mut g = Graph::new(50, 3);
+    let mut rng = Rng::new(530);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(3) as i32;
+    }
+    let mut stream = StreamingGee::new(&g);
+    for _ in 0..200 {
+        stream.add_edge(rng.below(50) as u32, rng.below(50) as u32, 1.0);
+    }
+    let snapshot = stream.snapshot(&GeeOptions::ALL);
+
+    let svc = EmbedService::start(ServiceConfig::default());
+    let rx = svc
+        .submit(EmbedRequest { graph: stream.to_graph(), options: GeeOptions::ALL })
+        .unwrap();
+    let resp = rx.recv().unwrap().unwrap();
+    assert!(snapshot.max_abs_diff(&resp.z) < 1e-10);
+    svc.shutdown();
+}

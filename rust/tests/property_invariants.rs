@@ -1,0 +1,341 @@
+//! Property-based invariants over the whole native stack, using the
+//! in-repo mini property harness (util::prop — the offline crate set has
+//! no proptest). Each property runs over many seeded random cases; a
+//! failure reports the reproducing seed.
+
+use gee_sparse::coordinator::batcher::{build_union, split_member};
+use gee_sparse::coordinator::StreamingGee;
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::Graph;
+use gee_sparse::sparse::{Coo, Csr, Dense};
+use gee_sparse::util::prop::forall;
+use gee_sparse::util::rng::Rng;
+
+fn random_coo(rng: &mut Rng, max_n: usize, max_nnz: usize) -> Coo {
+    let nrows = 1 + rng.below(max_n);
+    let ncols = 1 + rng.below(max_n);
+    let nnz = rng.below(max_nnz);
+    let mut coo = Coo::new(nrows, ncols);
+    for _ in 0..nnz {
+        coo.push(
+            rng.below(nrows) as u32,
+            rng.below(ncols) as u32,
+            rng.f64() * 2.0 - 1.0,
+        );
+    }
+    coo
+}
+
+fn random_labeled_graph(rng: &mut Rng) -> Graph {
+    let n = 2 + rng.below(60);
+    let k = 1 + rng.below(6);
+    let m = rng.below(4 * n);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        // ~10% unlabeled
+        *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+    }
+    for _ in 0..m {
+        g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.05);
+    }
+    g
+}
+
+#[test]
+fn prop_csr_coo_roundtrip_preserves_matrix() {
+    forall(
+        "csr_coo_roundtrip",
+        120,
+        |rng| random_coo(rng, 30, 120),
+        |coo| {
+            let csr = Csr::from_coo(coo);
+            let back = Csr::from_coo(&csr.to_coo());
+            if csr == back {
+                Ok(())
+            } else {
+                Err("CSR -> COO -> CSR not idempotent".into())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_csr_matches_dense_semantics() {
+    forall(
+        "csr_dense_semantics",
+        80,
+        |rng| random_coo(rng, 25, 100),
+        |coo| {
+            let csr = Csr::from_coo(coo);
+            let dense = coo.to_dense();
+            if csr.to_dense().max_abs_diff(&dense) > 1e-12 {
+                return Err("to_dense mismatch".into());
+            }
+            // row sums
+            let rs_csr = csr.row_sums();
+            let rs_dense = dense.row_sums();
+            for (a, b) in rs_csr.iter().zip(rs_dense.iter()) {
+                if (a - b).abs() > 1e-9 {
+                    return Err(format!("row_sums {a} vs {b}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_spmm_csr_equals_dense_matmul() {
+    forall(
+        "spmm_oracle",
+        60,
+        |rng| {
+            let a = random_coo(rng, 20, 80);
+            let mut b = random_coo(rng, 20, 80);
+            b.nrows = a.ncols; // force conformable shapes
+            b.rows.iter_mut().for_each(|r| *r %= a.ncols.max(1) as u32);
+            (a, b)
+        },
+        |(a, b)| {
+            let ca = Csr::from_coo(a);
+            let cb = Csr::from_coo(b);
+            let got = ca.spmm_csr(&cb).to_dense();
+            let expect = a.to_dense().matmul(&b.to_dense());
+            if got.max_abs_diff(&expect) > 1e-9 {
+                Err(format!("spmm diff {}", got.max_abs_diff(&expect)))
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_transpose_involution_and_sums() {
+    forall(
+        "transpose",
+        80,
+        |rng| random_coo(rng, 25, 100),
+        |coo| {
+            let csr = Csr::from_coo(coo);
+            let tt = csr.transpose().transpose();
+            if tt != csr {
+                return Err("transpose not an involution".into());
+            }
+            // col sums of A == row sums of A^T
+            let t = csr.transpose();
+            let mut col_sums = vec![0.0; csr.ncols];
+            for r in 0..csr.nrows {
+                let (cols, vals) = csr.row(r);
+                for (&c, &v) in cols.iter().zip(vals) {
+                    col_sums[c as usize] += v;
+                }
+            }
+            for (a, b) in col_sums.iter().zip(t.row_sums().iter()) {
+                if (a - b).abs() > 1e-9 {
+                    return Err("col/row sum mismatch".into());
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_all_engines_agree_every_combo() {
+    forall(
+        "engines_agree",
+        40,
+        |rng| {
+            let g = random_labeled_graph(rng);
+            let opts = GeeOptions::table_order()[rng.below(8)];
+            (g, opts)
+        },
+        |(g, opts)| {
+            let base = Engine::Dense.embed(g, opts).map_err(|e| e.to_string())?;
+            for e in Engine::ALL {
+                let z = e.embed(g, opts).map_err(|e| e.to_string())?;
+                let d = base.max_abs_diff(&z);
+                if d > 1e-9 {
+                    return Err(format!("{} diff {d}", e.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_embedding_rows_bounded_by_one() {
+    // every Z entry is a sum of at most-all of one class's 1/n_k weights,
+    // scaled by ≤1 factors under lap; so entries lie in [0, max_weight·deg]
+    // and cor rows have norm ≤ 1 + eps
+    forall(
+        "row_norm_bound",
+        40,
+        |rng| random_labeled_graph(rng),
+        |g| {
+            let z = Engine::Sparse.embed(g, &GeeOptions::new(false, false, true)).unwrap();
+            for r in 0..z.nrows {
+                let norm: f64 = z.row(r).iter().map(|x| x * x).sum::<f64>().sqrt();
+                if norm > 1.0 + 1e-9 {
+                    return Err(format!("row {r} norm {norm} > 1"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_unlabeled_vertices_never_contribute() {
+    // dropping all edges *to* unlabeled vertices must not change Z
+    forall(
+        "unlabeled_no_contrib",
+        40,
+        |rng| random_labeled_graph(rng),
+        |g| {
+            let z_full = Engine::Sparse.embed(g, &GeeOptions::NONE).unwrap();
+            // rebuild without any edge whose endpoint-label contribution
+            // would come from an unlabeled vertex: that's edges where the
+            // *other* endpoint is unlabeled — they contribute nothing
+            let mut z_manual = Dense::zeros(g.n, g.k);
+            let nk = {
+                let mut v = vec![0.0; g.k];
+                for &l in &g.labels {
+                    if l >= 0 {
+                        v[l as usize] += 1.0;
+                    }
+                }
+                v
+            };
+            for i in 0..g.num_edges() {
+                let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+                let (la, lb) = (g.labels[a], g.labels[b]);
+                if lb >= 0 {
+                    *z_manual.get_mut(a, lb as usize) += w / nk[lb as usize];
+                }
+                if a != b && la >= 0 {
+                    *z_manual.get_mut(b, la as usize) += w / nk[la as usize];
+                }
+            }
+            if z_full.max_abs_diff(&z_manual) > 1e-9 {
+                Err("unlabeled contribution leaked".into())
+            } else {
+                Ok(())
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_equals_batch_after_random_script() {
+    forall(
+        "streaming_vs_batch",
+        25,
+        |rng| {
+            let n0 = 5 + rng.below(20);
+            let k = 2 + rng.below(4);
+            let script_len = rng.below(60);
+            let seed = rng.next_u64();
+            (n0, k, script_len, seed)
+        },
+        |&(n0, k, script_len, seed)| {
+            let mut rng = Rng::new(seed);
+            let mut g0 = Graph::new(n0, k);
+            for l in g0.labels.iter_mut() {
+                *l = rng.below(k) as i32;
+            }
+            let mut s = StreamingGee::new(&g0);
+            for _ in 0..script_len {
+                match rng.below(4) {
+                    0 => {
+                        let lbl = if rng.f64() < 0.2 { -1 } else { rng.below(k) as i32 };
+                        s.add_vertex(lbl);
+                    }
+                    1 => {
+                        let v = rng.below(s.n()) as u32;
+                        let lbl = if rng.f64() < 0.2 { -1 } else { rng.below(k) as i32 };
+                        s.relabel(v, lbl);
+                    }
+                    _ => {
+                        let n = s.n();
+                        s.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+                    }
+                }
+            }
+            let g = s.to_graph();
+            for opts in GeeOptions::table_order() {
+                let batch = Engine::Sparse.embed(&g, &opts).unwrap();
+                let stream = s.snapshot(&opts);
+                let d = batch.max_abs_diff(&stream);
+                if d > 1e-9 {
+                    return Err(format!("{:?} diff {d}", opts));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_union_batching_exact() {
+    forall(
+        "union_exact",
+        25,
+        |rng| {
+            let count = 2 + rng.below(4);
+            let seed = rng.next_u64();
+            (count, seed)
+        },
+        |&(count, seed)| {
+            let mut rng = Rng::new(seed);
+            let graphs: Vec<Graph> = (0..count).map(|_| random_labeled_graph(&mut rng)).collect();
+            let refs: Vec<&Graph> = graphs.iter().collect();
+            let batch = build_union(&refs);
+            let opts = GeeOptions::table_order()[rng.below(8)];
+            let zu = Engine::Sparse.embed(&batch.union, &opts).unwrap();
+            for (g, p) in graphs.iter().zip(&batch.placements) {
+                let solo = Engine::Sparse.embed(g, &opts).unwrap();
+                let split = split_member(&zu, p);
+                let d = solo.max_abs_diff(&split);
+                if d > 1e-9 {
+                    return Err(format!("member diff {d} at {:?}", opts));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_weight_matrix_column_stochastic() {
+    forall(
+        "w_column_stochastic",
+        60,
+        |rng| {
+            let n = 1 + rng.below(50);
+            let k = 1 + rng.below(8);
+            let labels: Vec<i32> = (0..n)
+                .map(|_| if rng.f64() < 0.15 { -1 } else { rng.below(k) as i32 })
+                .collect();
+            (labels, k)
+        },
+        |(labels, k)| {
+            let w = gee_sparse::gee::weights::weight_matrix_csr_direct(labels, *k);
+            let t = w.transpose();
+            for c in 0..*k {
+                let (_, vals) = t.row(c);
+                let sum: f64 = vals.iter().sum();
+                let present = labels.iter().any(|&l| l == c as i32);
+                if present && (sum - 1.0).abs() > 1e-9 {
+                    return Err(format!("class {c} column sums to {sum}"));
+                }
+                if !present && sum != 0.0 {
+                    return Err(format!("empty class {c} has mass {sum}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

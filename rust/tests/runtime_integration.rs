@@ -1,0 +1,113 @@
+//! Cross-layer integration: the PJRT-executed AOT artifacts must agree
+//! with the native rust SparseGee on real graphs, across every option
+//! combination and bucket. This is the test that proves L1 (Pallas
+//! kernel) → L2 (jax model) → AOT HLO → L3 (rust runtime) compose.
+//!
+//! Requires `make artifacts` to have run; tests exit early (pass) when the
+//! manifest is absent so `cargo test` works on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+
+use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::runtime::Runtime;
+use gee_sparse::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(k) as i32;
+    }
+    for _ in 0..m {
+        let a = rng.below(n) as u32;
+        let b = rng.below(n) as u32;
+        if a != b {
+            g.add_edge(a, b, rng.f64() + 0.1);
+        }
+    }
+    g
+}
+
+/// f32 artifact vs f64 native: tolerance scales with accumulation depth.
+const TOL: f64 = 5e-4;
+
+#[test]
+fn pjrt_matches_native_all_option_combos() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+
+    let g = random_graph(101, 80, 300, 5);
+    for opts in GeeOptions::table_order() {
+        let native = Engine::Sparse.embed(&g, &opts).unwrap();
+        let pjrt = rt.embed(&g, &opts).unwrap();
+        let diff = native.max_abs_diff(&pjrt);
+        assert!(diff < TOL, "{}: max diff {diff}", opts.label());
+    }
+}
+
+#[test]
+fn pjrt_matches_native_on_sbm_medium_bucket() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    // n=700 forces the m bucket (n>256)
+    let g = generate_sbm(&SbmParams::paper(700), 33);
+    let opts = GeeOptions::ALL;
+    let native = Engine::Sparse.embed(&g, &opts).unwrap();
+    let pjrt = rt.embed(&g, &opts).unwrap();
+    let diff = native.max_abs_diff(&pjrt);
+    assert!(diff < TOL, "max diff {diff}");
+}
+
+#[test]
+fn pjrt_handles_unlabeled_and_weighted() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let mut g = random_graph(102, 60, 200, 4);
+    g.labels[0] = -1;
+    g.labels[10] = -1;
+    for opts in [GeeOptions::NONE, GeeOptions::ALL] {
+        let native = Engine::Sparse.embed(&g, &opts).unwrap();
+        let pjrt = rt.embed(&g, &opts).unwrap();
+        assert!(native.max_abs_diff(&pjrt) < TOL);
+    }
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let g = random_graph(103, 40, 100, 3);
+    assert_eq!(rt.compiled_count(), 0);
+    rt.embed(&g, &GeeOptions::NONE).unwrap();
+    assert_eq!(rt.compiled_count(), 1);
+    rt.embed(&g, &GeeOptions::NONE).unwrap();
+    assert_eq!(rt.compiled_count(), 1); // cache hit
+    rt.embed(&g, &GeeOptions::ALL).unwrap();
+    assert_eq!(rt.compiled_count(), 2);
+}
+
+#[test]
+fn warmup_compiles_whole_bucket() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let compiled = rt.warmup("s").unwrap();
+    assert_eq!(compiled, 8);
+    assert_eq!(rt.compiled_count(), 8);
+}
+
+#[test]
+fn oversize_graph_is_rejected_cleanly() {
+    let Some(dir) = artifact_dir() else { return };
+    let rt = Runtime::new(&dir).unwrap();
+    let g = random_graph(104, 9000, 10, 3); // n exceeds the largest bucket
+    assert!(!rt.fits(&g, &GeeOptions::NONE));
+    assert!(rt.embed(&g, &GeeOptions::NONE).is_err());
+}
