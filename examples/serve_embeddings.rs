@@ -79,6 +79,10 @@ fn main() -> anyhow::Result<()> {
         batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
         batch_linger: Duration::from_millis(2),
         queue_depth: 1024,
+        // big solo graphs (the 90th-percentile tail below) use the
+        // row-parallel engine instead of pinning one worker
+        intra_op_threads: 4,
+        intra_op_min_edges: 20_000,
     });
 
     let requests = if quick { 200 } else { 800 };

@@ -107,6 +107,7 @@ fn main() {
             batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
             batch_linger: Duration::from_millis(2),
             queue_depth: 1024,
+            ..ServiceConfig::default()
         });
         let mut rng = Rng::new(99);
         let t0 = std::time::Instant::now();

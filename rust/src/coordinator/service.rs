@@ -53,6 +53,19 @@ pub struct ServiceConfig {
     pub batch_capacity: BatchCapacity,
     /// How long a worker lingers draining the queue to fill a batch.
     pub batch_linger: Duration,
+    /// Intra-op threads for large solo graphs: a graph too big for the
+    /// batcher (the `pack_graphs` oversize lane) with at least
+    /// `intra_op_min_edges` directed edges is embedded by the row-parallel
+    /// engine (`Engine::SparsePar`) with this many threads, instead of
+    /// pinning a single worker while the rest of the pool idles.
+    /// 0 or 1 disables intra-op parallelism. Each busy worker can route
+    /// independently, so burst compute concurrency is up to
+    /// `workers × intra_op_threads` (the engine additionally caps its
+    /// thread count at the machine's available parallelism); size the two
+    /// knobs together.
+    pub intra_op_threads: usize,
+    /// Directed-edge threshold for the intra-op routing above.
+    pub intra_op_min_edges: usize,
 }
 
 impl Default for ServiceConfig {
@@ -64,6 +77,8 @@ impl Default for ServiceConfig {
             batching: true,
             batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
             batch_linger: Duration::from_millis(2),
+            intra_op_threads: 0,
+            intra_op_min_edges: 500_000,
         }
     }
 }
@@ -81,7 +96,7 @@ pub struct EmbedResponse {
     pub z: Dense,
     /// Queue + compute time, as observed by the worker.
     pub latency: Duration,
-    /// "native" / "pjrt" / "native-fallback".
+    /// "native" / "native-par" / "pjrt" / "native-fallback".
     pub via: &'static str,
     /// How many requests shared the execution (1 = solo).
     pub batch_size: usize,
@@ -259,7 +274,19 @@ where
         }
         for &mi in &oversize {
             let job = &group[mi];
-            let (result, via) = run(&job.req.graph, &opts);
+            let g = &job.req.graph;
+            // large solo graphs go to the row-parallel engine so the
+            // embed uses the whole machine instead of one worker thread
+            let (result, via) = if cfg.intra_op_threads > 1
+                && g.num_directed() >= cfg.intra_op_min_edges
+            {
+                (
+                    Engine::SparsePar(cfg.intra_op_threads).embed(g, &opts),
+                    "native-par",
+                )
+            } else {
+                run(g, &opts)
+            };
             match result {
                 Ok(z) => finish(job, z, via, 1, metrics),
                 Err(e) => fail(job, format!("{e:#}"), metrics),
@@ -451,6 +478,45 @@ mod tests {
         }
         let m = svc.shutdown();
         assert!(m.rejected.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn intra_op_routes_large_solo_graphs_to_parallel_engine() {
+        // tiny batch capacity -> the graph is oversize -> solo lane; with
+        // the intra-op knob on, the solo lane must use the parallel engine
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            intra_op_threads: 2,
+            intra_op_min_edges: 1,
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(460, 60, 200, 3);
+        let opts = GeeOptions::ALL;
+        let rx = svc.submit(EmbedRequest { graph: g.clone(), options: opts }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "native-par");
+        let expect = Engine::Sparse.embed(&g, &opts).unwrap();
+        assert!(expect.max_abs_diff(&resp.z) < 1e-10);
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn intra_op_disabled_keeps_solo_lane_on_worker_engine() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            intra_op_threads: 0,
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(461, 60, 200, 3);
+        let rx = svc
+            .submit(EmbedRequest { graph: g, options: GeeOptions::NONE })
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "native");
+        svc.shutdown();
     }
 
     #[test]

@@ -7,6 +7,7 @@ use anyhow::Result;
 use super::dense_gee::DenseGee;
 use super::edgelist_gee::EdgeListGee;
 use super::options::GeeOptions;
+use super::parallel::ParallelGee;
 use super::sparse_gee::SparseGee;
 use crate::graph::Graph;
 use crate::sparse::Dense;
@@ -22,11 +23,19 @@ pub enum Engine {
     Sparse,
     /// Sparse GEE, §Perf-tuned configuration (direct CSR + CSR×dense).
     SparseFast,
+    /// Row-parallel sparse GEE (std threads; 0 = auto). Bitwise-identical
+    /// output to `SparseFast` for any thread count.
+    SparsePar(usize),
 }
 
 impl Engine {
-    pub const ALL: &'static [Engine] =
-        &[Engine::Dense, Engine::EdgeList, Engine::Sparse, Engine::SparseFast];
+    pub const ALL: &'static [Engine] = &[
+        Engine::Dense,
+        Engine::EdgeList,
+        Engine::Sparse,
+        Engine::SparseFast,
+        Engine::SparsePar(0),
+    ];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -34,15 +43,21 @@ impl Engine {
             Engine::EdgeList => "edgelist",
             Engine::Sparse => "sparse",
             Engine::SparseFast => "sparse-fast",
+            Engine::SparsePar(_) => "sparse-par",
         }
     }
 
     pub fn from_name(s: &str) -> Option<Engine> {
+        // "sparse-par:T" pins the thread count; bare "sparse-par" = auto
+        if let Some(t) = s.strip_prefix("sparse-par:") {
+            return t.parse().ok().map(Engine::SparsePar);
+        }
         match s {
             "dense" => Some(Engine::Dense),
             "edgelist" | "gee" | "original" => Some(Engine::EdgeList),
             "sparse" => Some(Engine::Sparse),
             "sparse-fast" | "fast" => Some(Engine::SparseFast),
+            "sparse-par" | "par" => Some(Engine::SparsePar(0)),
             _ => None,
         }
     }
@@ -55,6 +70,7 @@ impl Engine {
             Engine::EdgeList => Ok(EdgeListGee.embed(g, opts)),
             Engine::Sparse => Ok(SparseGee::default().embed(g, opts)),
             Engine::SparseFast => Ok(SparseGee::fast().embed(g, opts)),
+            Engine::SparsePar(t) => Ok(ParallelGee::new(*t).embed(g, opts)),
         }
     }
 }
@@ -84,6 +100,9 @@ mod tests {
             assert_eq!(Engine::from_name(e.name()), Some(*e));
         }
         assert_eq!(Engine::from_name("original"), Some(Engine::EdgeList));
+        assert_eq!(Engine::from_name("sparse-par"), Some(Engine::SparsePar(0)));
+        assert_eq!(Engine::from_name("sparse-par:4"), Some(Engine::SparsePar(4)));
+        assert_eq!(Engine::from_name("sparse-par:zap"), None);
         assert_eq!(Engine::from_name("bogus"), None);
     }
 

@@ -5,6 +5,8 @@
 //! * [`dense_gee::DenseGee`] — dense-adjacency strawman
 //! * [`edgelist_gee::EdgeListGee`] — the original GEE (linear, edge list)
 //! * [`sparse_gee::SparseGee`] — the paper's sparse pipeline (DOK→CSR)
+//! * [`parallel::ParallelGee`] — row-parallel sparse GEE (std threads,
+//!   bitwise-deterministic for any thread count)
 //! * [`embed::Engine`] — unified front-end over all implementations
 
 pub mod dense_gee;
@@ -13,8 +15,10 @@ pub mod edgelist_gee;
 pub mod embed;
 pub mod fusion;
 pub mod options;
+pub mod parallel;
 pub mod sparse_gee;
 pub mod weights;
 
 pub use embed::{Embedding, Engine};
 pub use options::GeeOptions;
+pub use parallel::ParallelGee;

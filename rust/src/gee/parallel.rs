@@ -1,0 +1,465 @@
+//! Row-parallel sparse GEE — intra-graph parallelism over std threads.
+//!
+//! The serial fused engine ([`super::sparse_gee::SparseGee`] with
+//! `SpmmEngine::Fused`, and its amortized twin [`PreparedGraph`]) is one
+//! counting sort plus one row-major accumulation pass. Both passes
+//! parallelize along the row dimension with no shared mutable state
+//! (Edge-Parallel GEE, Lubonja, Priebe & Shen, arXiv:2402.04403, shows
+//! the per-row accumulation scales near-linearly; One-Hot GEE,
+//! arXiv:2109.13098, frames billions of edges as the target scale):
+//!
+//! * **prepare** — each thread counting-sorts a contiguous chunk of the
+//!   edge list into a thread-local row-grouped buffer; local counts merge
+//!   by prefix sum into the global `indptr`, then threads copy their row
+//!   segments into disjoint ranges of the global `cols`/`vals` arrays.
+//!   Concatenating per-thread segments in thread order reproduces global
+//!   edge order within every row, so the arrays are **bitwise identical**
+//!   to the serial [`PreparedGraph::new`] for any thread count.
+//! * **degrees** — recovered per row as the ordered sum of that row's
+//!   values. The serial constructor accumulates `deg[v]` in edge order,
+//!   which is exactly the order the row's values land in, so this too is
+//!   bitwise identical (and thread-count independent, unlike merging
+//!   per-thread partial degree sums would be).
+//! * **embed** — rows of Z are partitioned into contiguous chunks
+//!   balanced by nonzero count; each thread owns a disjoint
+//!   `z.data` slice via [`std::thread::scope`] + `split_at_mut`, so there
+//!   are no locks and no atomics. Every row is computed by exactly one
+//!   thread with the same sequential accumulation the serial engine uses:
+//!   the output is bitwise-deterministic regardless of thread count, and
+//!   bitwise-equal to the serial fused engine. The lap/diag/cor options
+//!   fold analytically exactly as `embed_fused` does.
+//!
+//! No dependencies beyond std. Exposed through
+//! [`Engine::SparsePar`](super::embed::Engine) and the coordinator's
+//! `ServiceConfig::intra_op_threads` knob (large solo graphs from the
+//! batcher's oversize lane route here instead of pinning one worker).
+
+use std::thread;
+
+use super::options::GeeOptions;
+use super::sparse_gee::{PreparedGraph, SparseGee};
+use super::weights::weight_values;
+use crate::graph::Graph;
+use crate::sparse::ops::{safe_recip, safe_recip_sqrt};
+use crate::sparse::Dense;
+
+/// Below this many undirected edges `ParallelGee::embed` stays serial —
+/// thread spawn/merge overhead dominates tiny graphs.
+pub const PAR_MIN_EDGES: usize = 2_048;
+
+/// Row-parallel sparse GEE engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelGee {
+    /// Worker thread count; 0 = use `std::thread::available_parallelism`.
+    pub threads: usize,
+}
+
+impl ParallelGee {
+    pub fn new(threads: usize) -> Self {
+        ParallelGee { threads }
+    }
+
+    /// The thread count a call will actually use. Capped at the machine's
+    /// available parallelism: more threads than cores never helps this
+    /// memory-bound workload, and the cap bounds oversubscription when
+    /// several coordinator workers route intra-op embeds concurrently.
+    pub fn resolved_threads(&self) -> usize {
+        let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if self.threads > 0 {
+            self.threads.min(avail)
+        } else {
+            avail
+        }
+    }
+
+    /// Embed the graph. Output is bitwise-identical to the serial fused
+    /// engine (`SparseGee::fast()`) for every option combination and any
+    /// thread count.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let t = self.resolved_threads();
+        if t <= 1 || g.num_edges() < PAR_MIN_EDGES {
+            return SparseGee::fast().embed(g, opts);
+        }
+        prepare_par(g, t).embed_par(opts, t)
+    }
+}
+
+/// Pick `chunks` contiguous row ranges with roughly equal nonzero counts.
+/// Returns `chunks + 1` non-decreasing boundaries from 0 to n.
+fn row_chunks(indptr: &[usize], chunks: usize) -> Vec<usize> {
+    let n = indptr.len() - 1;
+    let total = indptr[n];
+    let chunks = chunks.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(chunks + 1);
+    bounds.push(0usize);
+    for i in 1..chunks {
+        let target = (total as u128 * i as u128 / chunks as u128) as usize;
+        let mut r = *bounds.last().unwrap();
+        while r < n && indptr[r] < target {
+            r += 1;
+        }
+        bounds.push(r);
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// One thread's counting-sorted slice of the edge list.
+struct LocalSort {
+    /// Row pointers (length n+1) into `cols`/`vals`.
+    indptr: Vec<usize>,
+    cols: Vec<u32>,
+    vals: Vec<f64>,
+}
+
+/// Build a [`PreparedGraph`] with `threads` workers: per-thread local
+/// counting sorts over contiguous edge chunks, merged by prefix sum.
+/// The result is bitwise-identical to the serial [`PreparedGraph::new`].
+pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
+    let n = g.n;
+    let ne = g.num_edges();
+    let m = g.num_directed();
+    let t = threads.max(1).min(ne.max(1));
+    if t <= 1 || n == 0 {
+        return PreparedGraph::new(g);
+    }
+    let chunk = (ne + t - 1) / t;
+
+    // ---- phase 1 (parallel): counting-sort each edge chunk locally
+    let locals: Vec<LocalSort> = thread::scope(|s| {
+        let handles: Vec<_> = (0..t)
+            .map(|ti| {
+                let lo = (ti * chunk).min(ne);
+                let hi = ((ti + 1) * chunk).min(ne);
+                s.spawn(move || {
+                    let mut counts = vec![0usize; n + 1];
+                    for i in lo..hi {
+                        let (a, b) = (g.src[i] as usize, g.dst[i] as usize);
+                        counts[a + 1] += 1;
+                        if a != b {
+                            counts[b + 1] += 1;
+                        }
+                    }
+                    for v in 0..n {
+                        counts[v + 1] += counts[v];
+                    }
+                    let local_m = counts[n];
+                    let mut cols = vec![0u32; local_m];
+                    let mut vals = vec![0.0f64; local_m];
+                    let mut next = counts.clone();
+                    for i in lo..hi {
+                        let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+                        cols[next[a]] = g.dst[i];
+                        vals[next[a]] = w;
+                        next[a] += 1;
+                        if a != b {
+                            cols[next[b]] = g.src[i];
+                            vals[next[b]] = w;
+                            next[b] += 1;
+                        }
+                    }
+                    LocalSort { indptr: counts, cols, vals }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("prepare_par sort worker panicked"))
+            .collect()
+    });
+
+    // ---- phase 2 (serial, O(t·n)): merge per-row counts, prefix-sum
+    let mut indptr = vec![0usize; n + 1];
+    for l in &locals {
+        for v in 0..n {
+            indptr[v + 1] += l.indptr[v + 1] - l.indptr[v];
+        }
+    }
+    for v in 0..n {
+        indptr[v + 1] += indptr[v];
+    }
+    debug_assert_eq!(indptr[n], m);
+
+    // ---- phase 3 (parallel): copy each thread's row segments into the
+    // global arrays. Row ranges are disjoint contiguous slices, handed out
+    // via split_at_mut — no locks. Concatenating thread segments in thread
+    // order restores global edge order within each row, and the per-row
+    // ordered value sum reproduces the serial degree accumulation exactly.
+    let mut cols = vec![0u32; m];
+    let mut vals = vec![0.0f64; m];
+    let mut deg = vec![0.0f64; n];
+    let bounds = row_chunks(&indptr, t);
+    thread::scope(|s| {
+        let mut cols_rest: &mut [u32] = &mut cols;
+        let mut vals_rest: &mut [f64] = &mut vals;
+        let mut deg_rest: &mut [f64] = &mut deg;
+        for w in bounds.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            let len = indptr[r1] - indptr[r0];
+            let (c_here, c_next) = std::mem::take(&mut cols_rest).split_at_mut(len);
+            let (v_here, v_next) = std::mem::take(&mut vals_rest).split_at_mut(len);
+            let (d_here, d_next) = std::mem::take(&mut deg_rest).split_at_mut(r1 - r0);
+            cols_rest = c_next;
+            vals_rest = v_next;
+            deg_rest = d_next;
+            if r0 == r1 {
+                continue;
+            }
+            let locals = &locals;
+            s.spawn(move || {
+                let mut write = 0usize;
+                for r in r0..r1 {
+                    let row_start = write;
+                    for l in locals {
+                        let (lo, hi) = (l.indptr[r], l.indptr[r + 1]);
+                        c_here[write..write + (hi - lo)].copy_from_slice(&l.cols[lo..hi]);
+                        v_here[write..write + (hi - lo)].copy_from_slice(&l.vals[lo..hi]);
+                        write += hi - lo;
+                    }
+                    d_here[r - r0] = v_here[row_start..write].iter().sum::<f64>();
+                }
+            });
+        }
+    });
+
+    PreparedGraph {
+        n,
+        k: g.k,
+        indptr,
+        cols,
+        vals,
+        deg,
+        wv: weight_values(&g.labels, g.k),
+        labels: g.labels.clone(),
+    }
+}
+
+impl PreparedGraph {
+    /// Row-parallel embed: identical numerics to [`PreparedGraph::embed`]
+    /// (bitwise — each row is one thread's sequential accumulation in the
+    /// same order), `threads`-way parallel over row chunks balanced by
+    /// nonzero count.
+    pub fn embed_par(&self, opts: &GeeOptions, threads: usize) -> Dense {
+        let (n, k) = (self.n, self.k);
+        let t = threads.max(1).min(n.max(1));
+        if t <= 1 {
+            return self.embed(opts);
+        }
+        let scale: Option<Vec<f64>> = if opts.laplacian {
+            let bump = if opts.diagonal { 1.0 } else { 0.0 };
+            Some(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)).collect())
+        } else {
+            None
+        };
+        let mut z = Dense::zeros(n, k);
+        let bounds = row_chunks(&self.indptr, t);
+        thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut z.data;
+            for w in bounds.windows(2) {
+                let (r0, r1) = (w[0], w[1]);
+                let (chunk, next) =
+                    std::mem::take(&mut rest).split_at_mut((r1 - r0) * k);
+                rest = next;
+                if r0 == r1 {
+                    continue;
+                }
+                let sc = scale.as_deref();
+                s.spawn(move || self.embed_rows(opts, r0, r1, sc, chunk));
+            }
+        });
+        z
+    }
+
+    /// Accumulate rows `r0..r1` of Z into `out` (their contiguous slice of
+    /// `z.data`), with the options folded analytically. This is the single
+    /// source of truth for the per-row accumulation: the serial
+    /// [`PreparedGraph::embed`] runs it over `0..n` and the parallel path
+    /// runs it per chunk, so the bitwise-identity contract between the two
+    /// cannot drift.
+    pub(crate) fn embed_rows(
+        &self,
+        opts: &GeeOptions,
+        r0: usize,
+        r1: usize,
+        scale: Option<&[f64]>,
+        out: &mut [f64],
+    ) {
+        let k = self.k;
+        debug_assert_eq!(out.len(), (r1 - r0) * k);
+        for r in r0..r1 {
+            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
+            match scale {
+                Some(s) => {
+                    let sr = s[r];
+                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
+                        let c = c as usize;
+                        let y = self.labels[c];
+                        if y >= 0 {
+                            zrow[y as usize] += v * sr * s[c] * self.wv[c];
+                        }
+                    }
+                }
+                None => {
+                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
+                        let c = c as usize;
+                        let y = self.labels[c];
+                        if y >= 0 {
+                            zrow[y as usize] += v * self.wv[c];
+                        }
+                    }
+                }
+            }
+            if opts.diagonal {
+                let y = self.labels[r];
+                if y >= 0 {
+                    let s2 = scale.map(|s| s[r] * s[r]).unwrap_or(1.0);
+                    zrow[y as usize] += s2 * self.wv[r];
+                }
+            }
+            if opts.correlation {
+                // row-local, same op order as ops::normalize_rows
+                let norm: f64 = zrow.iter().map(|x| x * x).sum::<f64>().sqrt();
+                let s = safe_recip(norm);
+                if s != 0.0 {
+                    for x in zrow.iter_mut() {
+                        *x *= s;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::embed::Engine;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            // ~8% unlabeled
+            *l = if rng.f64() < 0.08 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        // guaranteed self loops
+        g.add_edge(1, 1, 2.5);
+        g.add_edge((n - 1) as u32, (n - 1) as u32, 0.7);
+        g
+    }
+
+    #[test]
+    fn prepare_par_bitwise_matches_serial() {
+        let g = random_graph(61, 300, 2_000, 4);
+        let serial = PreparedGraph::new(&g);
+        for t in [1usize, 2, 3, 8] {
+            let par = prepare_par(&g, t);
+            assert_eq!(par.indptr, serial.indptr, "indptr differs at t={t}");
+            assert_eq!(par.cols, serial.cols, "cols differ at t={t}");
+            assert_eq!(par.vals, serial.vals, "vals differ at t={t}");
+            assert_eq!(par.deg, serial.deg, "deg differs at t={t}");
+        }
+    }
+
+    #[test]
+    fn embed_par_bitwise_matches_serial_all_combos() {
+        let g = random_graph(62, 250, 1_500, 5);
+        let prepared = prepare_par(&g, 4);
+        for opts in GeeOptions::table_order() {
+            let serial = prepared.embed(&opts);
+            for t in [1usize, 2, 8] {
+                let par = prepared.embed_par(&opts, t);
+                assert_eq!(
+                    par.data, serial.data,
+                    "embed_par not bitwise at {opts:?}, t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_engine_matches_sparse_engine_selfloops_unlabeled() {
+        // equivalence vs the published sparse pipeline across the full
+        // option grid, on a graph with self loops and -1 labels
+        let g = random_graph(63, 200, 1_200, 3);
+        for opts in GeeOptions::table_order() {
+            let sparse = Engine::Sparse.embed(&g, &opts).unwrap();
+            for t in [1usize, 2, 8] {
+                let par = prepare_par(&g, t).embed_par(&opts, t);
+                assert!(
+                    sparse.max_abs_diff(&par) < 1e-10,
+                    "parallel vs sparse mismatch at {opts:?}, t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_engine_bitwise_matches_fused_engine() {
+        // a graph large enough to take the genuinely parallel path in
+        // ParallelGee::embed (>= PAR_MIN_EDGES undirected edges)
+        let g = random_graph(64, 1_500, 3 * PAR_MIN_EDGES, 4);
+        assert!(g.num_edges() >= PAR_MIN_EDGES);
+        for opts in GeeOptions::table_order() {
+            let fused = SparseGee::fast().embed(&g, &opts);
+            let z1 = ParallelGee::new(1).embed(&g, &opts);
+            let z2 = ParallelGee::new(2).embed(&g, &opts);
+            let z8 = ParallelGee::new(8).embed(&g, &opts);
+            assert_eq!(z1.data, fused.data, "t=1 not bitwise at {opts:?}");
+            assert_eq!(z2.data, fused.data, "t=2 not bitwise at {opts:?}");
+            assert_eq!(z8.data, fused.data, "t=8 not bitwise at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // empty graph
+        let g0 = Graph::new(5, 2);
+        let z = prepare_par(&g0, 4).embed_par(&GeeOptions::ALL, 4);
+        assert_eq!(z.nrows, 5);
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        // single vertex with a self loop
+        let mut g1 = Graph::new(1, 1);
+        g1.labels[0] = 0;
+        g1.add_edge(0, 0, 2.0);
+        let expect = SparseGee::fast().embed(&g1, &GeeOptions::ALL);
+        let got = prepare_par(&g1, 8).embed_par(&GeeOptions::ALL, 8);
+        assert_eq!(got.data, expect.data);
+        // more threads than rows/edges
+        let g2 = random_graph(65, 3, 4, 2);
+        let expect = SparseGee::fast().embed(&g2, &GeeOptions::NONE);
+        let got = prepare_par(&g2, 64).embed_par(&GeeOptions::NONE, 64);
+        assert_eq!(got.data, expect.data);
+    }
+
+    #[test]
+    fn row_chunks_cover_and_balance() {
+        let g = random_graph(66, 400, 3_000, 3);
+        let p = PreparedGraph::new(&g);
+        let bounds = row_chunks(&p.indptr, 4);
+        assert_eq!(bounds.first(), Some(&0));
+        assert_eq!(bounds.last(), Some(&400));
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        // every chunk holds at most ~2x the fair nnz share
+        let total = p.indptr[400];
+        for w in bounds.windows(2) {
+            let nnz = p.indptr[w[1]] - p.indptr[w[0]];
+            assert!(nnz <= total / 2 + total / 4, "chunk nnz {nnz} of {total}");
+        }
+    }
+
+    #[test]
+    fn resolved_threads_auto_and_capped() {
+        assert!(ParallelGee::new(0).resolved_threads() >= 1);
+        // explicit counts are honored up to the core count, never beyond
+        let r = ParallelGee::new(3).resolved_threads();
+        assert!((1..=3).contains(&r), "resolved {r}");
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(ParallelGee::new(usize::MAX).resolved_threads() <= avail);
+    }
+}

@@ -127,97 +127,12 @@ impl SparseGee {
     /// Row-major accumulation is also the cache story: each Z row stays
     /// hot while its neighbors stream, unlike the edge-order scatter of
     /// the edge-list baseline.
+    ///
+    /// Both passes are exactly [`PreparedGraph::new`] + [`PreparedGraph::
+    /// embed`] (which in turn shares its accumulation with the
+    /// row-parallel engine) — one implementation, used un-amortized here.
     fn embed_fused(&self, g: &Graph, opts: &GeeOptions) -> Dense {
-        let n = g.n;
-        let k = g.k;
-        let m = g.num_directed();
-
-        // ---- pass 1: counting sort of directed edges by source row,
-        //      accumulating weighted degrees as we count
-        let mut counts = vec![0usize; n + 1];
-        let mut deg = vec![0.0f64; n];
-        for i in 0..g.num_edges() {
-            let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
-            counts[a + 1] += 1;
-            deg[a] += w;
-            if a != b {
-                counts[b + 1] += 1;
-                deg[b] += w;
-            }
-        }
-        for i in 0..n {
-            counts[i + 1] += counts[i];
-        }
-        let mut cols = vec![0u32; m];
-        let mut vals = vec![0.0f64; m];
-        {
-            let mut next = counts.clone();
-            for i in 0..g.num_edges() {
-                let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
-                cols[next[a]] = g.dst[i];
-                vals[next[a]] = w;
-                next[a] += 1;
-                if a != b {
-                    cols[next[b]] = g.src[i];
-                    vals[next[b]] = w;
-                    next[b] += 1;
-                }
-            }
-        }
-
-        // ---- analytic option terms
-        let wv = super::weights::weight_values(&g.labels, k);
-        let scale: Option<Vec<f64>> = if opts.laplacian {
-            if opts.diagonal {
-                for d in deg.iter_mut() {
-                    *d += 1.0;
-                }
-            }
-            Some(deg.iter().map(|&d| crate::sparse::ops::safe_recip_sqrt(d)).collect())
-        } else {
-            None
-        };
-
-        // ---- pass 2: row-major accumulation (the SpMM against the
-        //      implicit one-hot W: one k-slot update per nonzero)
-        let mut z = Dense::zeros(n, k);
-        for r in 0..n {
-            let (lo, hi) = (counts[r], counts[r + 1]);
-            let zrow = &mut z.data[r * k..(r + 1) * k];
-            match &scale {
-                Some(s) => {
-                    let sr = s[r];
-                    for (&c, &v) in cols[lo..hi].iter().zip(&vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = g.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * sr * s[c] * wv[c];
-                        }
-                    }
-                }
-                None => {
-                    for (&c, &v) in cols[lo..hi].iter().zip(&vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = g.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * wv[c];
-                        }
-                    }
-                }
-            }
-            if opts.diagonal {
-                let y = g.labels[r];
-                if y >= 0 {
-                    let s2 = scale.as_ref().map(|s| s[r] * s[r]).unwrap_or(1.0);
-                    zrow[y as usize] += s2 * wv[r];
-                }
-            }
-        }
-
-        if opts.correlation {
-            normalize_rows(&mut z);
-        }
-        z
+        PreparedGraph::new(g).embed(opts)
     }
 
     /// Prepare a graph once for repeated embedding (see [`PreparedGraph`]).
@@ -272,14 +187,16 @@ impl SparseGee {
 /// options folded analytically — no per-call construction at all.
 #[derive(Clone, Debug)]
 pub struct PreparedGraph {
-    n: usize,
-    k: usize,
-    indptr: Vec<usize>,
-    cols: Vec<u32>,
-    vals: Vec<f64>,
-    deg: Vec<f64>,
-    wv: Vec<f64>,
-    labels: Vec<i32>,
+    // crate-visible so gee::parallel can build the identical structure
+    // with per-thread counting sorts and read it for row-parallel embeds
+    pub(crate) n: usize,
+    pub(crate) k: usize,
+    pub(crate) indptr: Vec<usize>,
+    pub(crate) cols: Vec<u32>,
+    pub(crate) vals: Vec<f64>,
+    pub(crate) deg: Vec<f64>,
+    pub(crate) wv: Vec<f64>,
+    pub(crate) labels: Vec<i32>,
 }
 
 impl PreparedGraph {
@@ -328,6 +245,9 @@ impl PreparedGraph {
     }
 
     /// Embed under any option combo: one pass over the prepared structure.
+    /// Delegates to the same per-row accumulation routine the row-parallel
+    /// engine runs per chunk (`embed_rows` in `gee::parallel`), so serial
+    /// and parallel embeds share one implementation and stay bitwise-equal.
     pub fn embed(&self, opts: &GeeOptions) -> Dense {
         let (n, k) = (self.n, self.k);
         let scale: Option<Vec<f64>> = if opts.laplacian {
@@ -342,41 +262,7 @@ impl PreparedGraph {
             None
         };
         let mut z = Dense::zeros(n, k);
-        for r in 0..n {
-            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
-            let zrow = &mut z.data[r * k..(r + 1) * k];
-            match &scale {
-                Some(s) => {
-                    let sr = s[r];
-                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = self.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * sr * s[c] * self.wv[c];
-                        }
-                    }
-                }
-                None => {
-                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = self.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * self.wv[c];
-                        }
-                    }
-                }
-            }
-            if opts.diagonal {
-                let y = self.labels[r];
-                if y >= 0 {
-                    let s2 = scale.as_ref().map(|s| s[r] * s[r]).unwrap_or(1.0);
-                    zrow[y as usize] += s2 * self.wv[r];
-                }
-            }
-        }
-        if opts.correlation {
-            normalize_rows(&mut z);
-        }
+        self.embed_rows(opts, 0, n, scale.as_deref(), &mut z.data);
         z
     }
 }

@@ -148,7 +148,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
         rt.embed(&g, &opts)?
     } else {
         let engine = Engine::from_name(args.get("engine").unwrap_or("sparse"))
-            .context("--engine must be dense|edgelist|sparse|sparse-fast")?;
+            .context("--engine must be dense|edgelist|sparse|sparse-fast|sparse-par[:T]")?;
         engine.embed(&g, &opts)?
     };
     let dt = t0.elapsed();
@@ -218,6 +218,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(bind) = args.get("listen") {
         let svc = std::sync::Arc::new(EmbedService::start(ServiceConfig {
             workers,
+            intra_op_threads: args.get_usize("intra-op", 0)?,
             ..ServiceConfig::default()
         }));
         let server = gee_sparse::coordinator::TcpServer::start(bind, svc)?;
@@ -239,6 +240,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_capacity: BatchCapacity::from_bucket(2_048, 16_384, 16),
         batch_linger: Duration::from_millis(2),
         queue_depth: 512,
+        intra_op_threads: args.get_usize("intra-op", 0)?,
+        ..ServiceConfig::default()
     });
 
     let mut rng = Rng::new(args.get_usize("seed", 11)? as u64);
@@ -280,10 +283,11 @@ fn usage() -> &'static str {
        info         [--artifacts DIR]\n\
        generate     --dataset NAME | --sbm N   --out STEM [--seed S]\n\
        embed        --dataset NAME | --sbm N | --input STEM\n\
-                    [--engine dense|edgelist|sparse|sparse-fast] [--options ldc]\n\
-                    [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
+                    [--engine dense|edgelist|sparse|sparse-fast|sparse-par[:T]]\n\
+                    [--options ldc] [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
+                    [--intra-op T]   (row-parallel threads for oversize graphs)\n\
                     [--listen ADDR:PORT]   (network mode: TCP line protocol)\n"
 }
 

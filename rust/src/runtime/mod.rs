@@ -6,6 +6,9 @@
 
 pub mod artifact;
 pub mod pjrt;
+#[cfg(not(feature = "xla"))]
+#[allow(dead_code)]
+pub(crate) mod xla_stub;
 
 pub use artifact::Manifest;
 pub use pjrt::Runtime;

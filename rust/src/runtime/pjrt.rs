@@ -17,6 +17,12 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+// Without the `xla` feature the PJRT bindings resolve to the in-crate stub
+// (same API surface, every call errors); with it, `xla::` resolves to the
+// vendored crate via the extern prelude.
+#[cfg(not(feature = "xla"))]
+use super::xla_stub as xla;
+
 use super::artifact::{pad_inputs, Manifest, Variant};
 use crate::gee::GeeOptions;
 use crate::graph::Graph;

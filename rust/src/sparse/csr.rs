@@ -209,6 +209,12 @@ impl Csr {
     /// CSR × CSR via Gustavson: for each row of A, scatter-accumulate the
     /// scaled rows of B into a dense workspace, then gather the nonzeros.
     /// This is what `scipy.sparse.csr_matmat` does under `A_s @ W_s`.
+    ///
+    /// First-touch detection uses an SMMP-style marker array (`mark[c]`
+    /// holds the last row that touched column c) so each nonzero costs
+    /// O(1) — a `touched.contains` linear scan here would degrade the
+    /// whole product from O(flops) to O(flops · row_nnz) on dense-ish
+    /// output rows (see the regression test below).
     pub fn spmm_csr(&self, b: &Csr) -> Csr {
         assert_eq!(self.ncols, b.nrows);
         let mut indptr = Vec::with_capacity(self.nrows + 1);
@@ -216,13 +222,16 @@ impl Csr {
         let mut data: Vec<f64> = Vec::new();
         indptr.push(0);
         let mut acc = vec![0.0f64; b.ncols];
+        // usize::MAX: no row has touched this column yet (rows are < nrows)
+        let mut mark = vec![usize::MAX; b.ncols];
         let mut touched: Vec<u32> = Vec::new();
         for r in 0..self.nrows {
             let (acols, avals) = self.row(r);
             for (&ac, &av) in acols.iter().zip(avals.iter()) {
                 let (bcols, bvals) = b.row(ac as usize);
                 for (&bc, &bv) in bcols.iter().zip(bvals.iter()) {
-                    if acc[bc as usize] == 0.0 && !touched.contains(&bc) {
+                    if mark[bc as usize] != r {
+                        mark[bc as usize] = r;
                         touched.push(bc);
                     }
                     acc[bc as usize] += av * bv;
@@ -448,6 +457,62 @@ mod tests {
         let got = a.spmm_csr(&b).to_dense();
         let expect = a.to_dense().matmul(&b.to_dense());
         assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn spmm_csr_dense_rows_regression() {
+        // A dense row in A times a B with wide rows used to trigger the
+        // O(row_nnz) `touched.contains` scan per nonzero; the marker array
+        // keeps it O(1). Verify correctness on exactly that shape: row 0
+        // of A is fully dense, B has dense-ish rows, so the output row
+        // touches every column many times over.
+        let n = 64;
+        let mut rng = Rng::new(8);
+        let mut ca = Coo::new(4, n);
+        for c in 0..n {
+            ca.push(0, c as u32, rng.f64() + 0.5); // dense row
+        }
+        ca.push(1, 3, 2.0);
+        ca.push(2, 3, -1.0);
+        let mut cb = Coo::new(n, 48);
+        for r in 0..n {
+            for _ in 0..24 {
+                cb.push(r as u32, rng.below(48) as u32, rng.f64() - 0.5);
+            }
+        }
+        let a = Csr::from_coo(&ca);
+        let b = Csr::from_coo(&cb);
+        let got = a.spmm_csr(&b);
+        let expect = a.to_dense().matmul(&b.to_dense());
+        assert!(got.to_dense().max_abs_diff(&expect) < 1e-9);
+        // output columns stay sorted within each row
+        for r in 0..got.nrows {
+            let (cols, _) = got.row(r);
+            assert!(cols.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn spmm_csr_repeated_touches_of_same_column() {
+        // many B-rows all hitting the same output column — the marker must
+        // record the column exactly once per output row
+        let a = Csr::from_coo(&Coo::from_triplets(
+            1,
+            3,
+            &[0, 0, 0],
+            &[0, 1, 2],
+            &[1.0, 1.0, 1.0],
+        ));
+        let b = Csr::from_coo(&Coo::from_triplets(
+            3,
+            2,
+            &[0, 1, 2],
+            &[1, 1, 1],
+            &[2.0, 3.0, 4.0],
+        ));
+        let z = a.spmm_csr(&b);
+        assert_eq!(z.nnz(), 1);
+        assert_eq!(z.get(0, 1), 9.0);
     }
 
     #[test]

@@ -92,7 +92,7 @@ fn engines_agree_through_cli_files() {
     let stem = dir.join("g");
     run_ok(&["generate", "--sbm", "200", "--seed", "9", "--out", stem.to_str().unwrap()]);
     let mut outputs = Vec::new();
-    for engine in ["edgelist", "sparse", "sparse-fast"] {
+    for engine in ["edgelist", "sparse", "sparse-fast", "sparse-par:4"] {
         let zp = dir.join(format!("z_{engine}.tsv"));
         run_ok(&[
             "embed",
@@ -107,8 +107,9 @@ fn engines_agree_through_cli_files() {
         ]);
         outputs.push(std::fs::read_to_string(&zp).unwrap());
     }
-    assert_eq!(outputs[0], outputs[1]);
-    assert_eq!(outputs[1], outputs[2]);
+    for pair in outputs.windows(2) {
+        assert_eq!(pair[0], pair[1]);
+    }
 }
 
 #[test]
