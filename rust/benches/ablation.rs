@@ -2,37 +2,59 @@
 //!
 //! A. W construction: DOK→CSR (published pipeline) vs direct CSR emission
 //! B. SpMM engine: CSR×CSR (Gustavson, scipy's path) vs CSR×dense-K
+//! A2. amortized repeated embedding (the Tables 3-4 workload)
+//! A3. pooled u32 pipeline vs the PR-1 allocate-per-call fused engine —
+//!     the zero-allocation acceptance comparison, recorded to
+//!     `BENCH_gee.json` as engines "sparse-fast" vs "sparse-pooled" /
+//!     "sparse-prepared-pooled"
 //! C. COO→CSR build: general (counting sort + per-row sort) vs presorted
 //! D. Storage: sparse pipeline bytes vs dense-Z (edge-list GEE) vs dense A
 //! E. Service batching: solo vs disjoint-union packing (native lane)
+//!
+//! `QUICK=1` trims sizes for CI smoke runs.
 
 use std::time::Duration;
 
 use gee_sparse::coordinator::batcher::BatchCapacity;
 use gee_sparse::coordinator::{EmbedRequest, EmbedService, Lane, ServiceConfig};
-use gee_sparse::gee::sparse_gee::{Construction, SparseGee, SpmmEngine};
+use gee_sparse::gee::sparse_gee::{embed_fused_into, Construction, SparseGee, SpmmEngine};
 use gee_sparse::gee::edgelist_gee::EdgeListGee;
-use gee_sparse::gee::{Engine, GeeOptions};
+use gee_sparse::gee::{EmbedWorkspace, Engine, GeeOptions};
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::sparse::Csr;
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
 use gee_sparse::util::rng::Rng;
 use gee_sparse::util::timing::{bench_runs, secs, Stats};
 
-fn stats(reps: usize, f: impl FnMut() -> ()) -> Stats {
+fn stats(reps: usize, f: impl FnMut()) -> Stats {
     let mut f = f;
     Stats::from_runs(&bench_runs(1, reps, || f()))
 }
 
 fn main() {
-    let quick = std::env::var("GEE_BENCH_QUICK").is_ok();
-    let n = if quick { 3_000 } else { 10_000 };
+    let quick = quick_mode();
+    let n = if quick { 2_000 } else { 10_000 };
     let reps = if quick { 2 } else { 5 };
     let g = generate_sbm(&SbmParams::paper(n), 7);
     println!(
-        "== bench ablation (SBM n={n}, edges={}, reps={reps}) ==\n",
-        g.num_edges()
+        "== bench ablation (SBM n={n}, edges={} / {} directed, reps={reps}) ==\n",
+        g.num_edges(),
+        g.num_directed()
     );
     let opts = GeeOptions::ALL;
+    let mut records = Vec::new();
+    let mut push = |engine: &str, threads: usize, st: &Stats, base_ns: u128| {
+        records.push(BenchRecord {
+            bench: "ablation".into(),
+            engine: engine.into(),
+            n: g.n,
+            m: g.num_directed(),
+            k: g.k,
+            threads,
+            median_ns: st.median.as_nanos(),
+            speedup: base_ns as f64 / st.median.as_nanos().max(1) as f64,
+        });
+    };
 
     // ---------------- A + B: construction × spmm grid
     println!("A/B. sparse-GEE engine grid (Lap=T Diag=T Cor=T, median s):");
@@ -74,6 +96,47 @@ fn main() {
     println!("  fused, rebuild each time: {}", secs(st_solo.median));
     println!("  prepared once + 8 embeds: {}", secs(st_prepared.median));
     println!("  edge-list baseline (8x):  {}", secs(st_edgelist.median));
+
+    // ---------------- A3: pooled u32 pipeline vs allocate-per-call (the
+    // PR-1 engine). Same fused numerics; the pooled path reuses every
+    // buffer from a warm workspace, the fresh path allocates all of them
+    // per embed. Also the fully-amortized service path: prepared once,
+    // pooled embed per request.
+    println!("\nA3. pooled vs allocate-per-call (one ldc embed, median s):");
+    let st_fresh = stats(reps, || {
+        std::hint::black_box(SparseGee::fast().embed(&g, &opts));
+    });
+    let mut ws = EmbedWorkspace::new();
+    embed_fused_into(&g, &opts, &mut ws); // warm the workspace
+    let st_pooled = stats(reps, || {
+        embed_fused_into(&g, &opts, &mut ws);
+        std::hint::black_box(ws.z.data.as_ptr());
+    });
+    let prepared = SparseGee::prepare(&g);
+    let mut ws2 = EmbedWorkspace::new();
+    prepared.embed_into(&opts, &mut ws2);
+    let st_prep_pooled = stats(reps, || {
+        prepared.embed_into(&opts, &mut ws2);
+        std::hint::black_box(ws2.z.data.as_ptr());
+    });
+    let base = st_fresh.median.as_nanos();
+    push("sparse-fast", 1, &st_fresh, base);
+    push("sparse-pooled", 1, &st_pooled, base);
+    push("sparse-prepared-pooled", 1, &st_prep_pooled, base);
+    println!(
+        "  allocate-per-call (PR-1):   {}",
+        secs(st_fresh.median)
+    );
+    println!(
+        "  pooled fused (u32 + ws):    {}  ({:.2}x)",
+        secs(st_pooled.median),
+        base as f64 / st_pooled.median.as_nanos().max(1) as f64
+    );
+    println!(
+        "  prepared + pooled embed:    {}  ({:.2}x)",
+        secs(st_prep_pooled.median),
+        base as f64 / st_prep_pooled.median.as_nanos().max(1) as f64
+    );
 
     // ---------------- C: COO→CSR build paths
     println!("\nC. COO→CSR conversion (adjacency of the same graph):");
@@ -133,4 +196,6 @@ fn main() {
             m.avg_batch_fill()
         );
     }
+
+    write_records("ablation", &records);
 }

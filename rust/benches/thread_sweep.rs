@@ -1,27 +1,53 @@
 //! Bench: thread-sweep scaling of the row-parallel sparse GEE engine —
 //! the intra-graph ablation of Edge-Parallel GEE (Lubonja, Priebe & Shen,
-//! arXiv:2402.04403) on SBM and Chung-Lu graphs.
+//! arXiv:2402.04403) on SBM and Chung-Lu graphs — plus the new
+//! edge-parallel edge-list lane.
 //!
 //! Reports, per thread count: full embed (parallel prepare + parallel
 //! accumulate), the amortized repeated-embed path (prepare once, embed
-//! per option combo), and the speedup over one thread. Also checks the
-//! determinism contract: every thread count's output must be
-//! bitwise-identical to the serial fused engine.
+//! per option combo), the edge-parallel edge-list engine, and the
+//! speedup over one thread. Also checks the determinism contracts: the
+//! row-parallel output must be bitwise-identical to the serial fused
+//! engine at every thread count; the edge-parallel engine must agree to
+//! ≤1e-12.
 //!
-//! The acceptance target for this PR: >1.5x at 4 threads on a
-//! >= 1M-directed-edge SBM graph. `GEE_BENCH_QUICK=1` trims sizes.
+//! Results are appended to `BENCH_gee.json` (see `util::benchlog`).
+//! `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) trims sizes for CI smoke.
 
+use gee_sparse::gee::edgelist_par::EdgeListParGee;
 use gee_sparse::gee::parallel::{prepare_par, ParallelGee};
 use gee_sparse::gee::sparse_gee::SparseGee;
-use gee_sparse::gee::GeeOptions;
+use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
 use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::Graph;
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
 use gee_sparse::util::timing::{bench_runs, secs, Stats};
 
 const THREADS: &[usize] = &[1, 2, 4, 8];
 
-fn sweep(name: &str, g: &Graph, reps: usize) {
+fn record(
+    out: &mut Vec<BenchRecord>,
+    engine: &str,
+    g: &Graph,
+    threads: usize,
+    st: &Stats,
+    base_ns: u128,
+) {
+    let ns = st.median.as_nanos();
+    out.push(BenchRecord {
+        bench: "thread_sweep".into(),
+        engine: engine.into(),
+        n: g.n,
+        m: g.num_directed(),
+        k: g.k,
+        threads,
+        median_ns: ns,
+        speedup: base_ns as f64 / (ns.max(1) as f64),
+    });
+}
+
+fn sweep(name: &str, g: &Graph, reps: usize, records: &mut Vec<BenchRecord>) {
     let opts = GeeOptions::ALL;
     println!(
         "-- {name}: n={} edges={} ({} directed), k={}",
@@ -31,7 +57,7 @@ fn sweep(name: &str, g: &Graph, reps: usize) {
         g.k
     );
 
-    // determinism gate: parallel output must equal the serial fused engine
+    // determinism gates
     let serial = SparseGee::fast().embed(g, &opts);
     for &t in THREADS {
         let z = ParallelGee::new(t).embed(g, &opts);
@@ -39,66 +65,93 @@ fn sweep(name: &str, g: &Graph, reps: usize) {
             z.data, serial.data,
             "{name}: t={t} output not bitwise-identical to serial"
         );
+        let ze = EdgeListParGee::new(t).embed(g, &opts);
+        let d = serial.max_abs_diff(&ze);
+        assert!(d <= 1e-12, "{name}: edge-par t={t} diff {d} vs serial");
     }
-    println!("   bitwise-identical to serial fused engine at all thread counts ✓");
+    println!("   row-par bitwise ✓, edge-par ≤1e-12 ✓ at all thread counts");
 
     println!(
-        "   {:>8} {:>12} {:>9} {:>14} {:>9}",
-        "threads", "embed (s)", "speedup", "amortized (s)", "speedup"
+        "   {:>8} {:>12} {:>9} {:>14} {:>9} {:>13} {:>9}",
+        "threads", "embed (s)", "speedup", "amortized (s)", "speedup", "edge-par (s)", "speedup"
     );
-    let mut base_embed = 0.0f64;
-    let mut base_amort = 0.0f64;
-    for &t in THREADS {
+    let mut base_embed = 0u128;
+    let mut base_amort = 0u128;
+    let mut base_epar = 0u128;
+    // sweep only thread counts the machine actually has: the engines cap
+    // at available parallelism, and an oversubscribed prepared-lane run
+    // (which spawns exactly t) is not scaling data either
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    for &t in THREADS.iter().filter(|&&t| t <= avail.max(1)) {
         let engine = ParallelGee::new(t);
         let full = Stats::from_runs(&bench_runs(1, reps, || {
             std::hint::black_box(engine.embed(g, &opts));
         }));
-        // amortized: prepare once, one embed pass per option combo
+        // amortized: prepare once, one embed pass per option combo,
+        // pooled workspace (the serving hot path)
         let prepared = prepare_par(g, t);
         let combos = GeeOptions::table_order();
+        let mut ws = EmbedWorkspace::new();
         let amort = Stats::from_runs(&bench_runs(1, reps, || {
             for o in &combos {
-                std::hint::black_box(prepared.embed_par(o, t));
+                prepared.embed_par_into(o, t, &mut ws);
+                std::hint::black_box(ws.z.data.as_ptr());
             }
         }));
-        let fs = full.median.as_secs_f64();
-        let am = amort.median.as_secs_f64();
+        // edge-parallel edge-list lane, pooled
+        let epar_engine = EdgeListParGee::new(t);
+        let mut ws2 = EmbedWorkspace::new();
+        let epar = Stats::from_runs(&bench_runs(1, reps, || {
+            epar_engine.embed_into(g, &opts, &mut ws2);
+            std::hint::black_box(ws2.z.data.as_ptr());
+        }));
         if t == 1 {
-            base_embed = fs;
-            base_amort = am;
+            base_embed = full.median.as_nanos();
+            base_amort = amort.median.as_nanos();
+            base_epar = epar.median.as_nanos();
         }
+        // t <= avail by the sweep filter, so every lane really ran t-way
+        record(records, "sparse-par", g, t, &full, base_embed);
+        record(records, "sparse-par-prepared", g, t, &amort, base_amort);
+        record(records, "edgelist-par", g, t, &epar, base_epar);
         println!(
-            "   {:>8} {:>12} {:>8.2}x {:>14} {:>8.2}x",
+            "   {:>8} {:>12} {:>8.2}x {:>14} {:>8.2}x {:>13} {:>8.2}x",
             t,
             secs(full.median),
-            base_embed / fs.max(1e-12),
+            base_embed as f64 / full.median.as_nanos().max(1) as f64,
             secs(amort.median),
-            base_amort / am.max(1e-12)
+            base_amort as f64 / amort.median.as_nanos().max(1) as f64,
+            secs(epar.median),
+            base_epar as f64 / epar.median.as_nanos().max(1) as f64,
         );
     }
     println!();
 }
 
 fn main() {
-    let quick = std::env::var("GEE_BENCH_QUICK").is_ok();
+    let quick = quick_mode();
     let reps = if quick { 2 } else { 3 };
     println!(
         "== bench thread_sweep (reps={reps}, cores available: {}) ==\n",
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     );
+    let mut records = Vec::new();
 
     // SBM at the paper's parameters: n=10k gives ~5.6M undirected edges
     // (~11M directed), well past the 1M-directed-edge acceptance bar.
-    let sbm_n = if quick { 3_000 } else { 10_000 };
+    let sbm_n = if quick { 2_000 } else { 10_000 };
     let sbm = generate_sbm(&SbmParams::paper(sbm_n), 7);
-    sweep("SBM (paper params)", &sbm, reps);
+    sweep("SBM (paper params)", &sbm, reps, &mut records);
 
     // Chung-Lu power-law twin: skewed degrees stress the nnz-balanced row
     // partition (a hub row cannot be split, only isolated in a chunk).
-    let cl_edges = if quick { 300_000 } else { 1_000_000 };
+    let cl_edges = if quick { 100_000 } else { 1_000_000 };
+    let cl_n = if quick { 10_000 } else { 50_000 };
     let cl = generate_chung_lu(
-        &ChungLuParams { n: 50_000, edges: cl_edges, gamma: 1.8, k: 5 },
+        &ChungLuParams { n: cl_n, edges: cl_edges, gamma: 1.8, k: 5 },
         11,
     );
-    sweep("Chung-Lu (gamma=1.8)", &cl, reps);
+    sweep("Chung-Lu (gamma=1.8)", &cl, reps, &mut records);
+
+    write_records("thread_sweep", &records);
 }

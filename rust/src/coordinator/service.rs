@@ -26,6 +26,7 @@ use anyhow::Result;
 use super::batcher::{pack_graphs, split_member, BatchCapacity};
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, PushError};
+use crate::gee::workspace::WorkspacePool;
 use crate::gee::{Engine, GeeOptions};
 use crate::graph::Graph;
 use crate::runtime::Runtime;
@@ -112,6 +113,10 @@ struct Job {
 pub struct EmbedService {
     queue: Arc<BoundedQueue<Job>>,
     metrics: Arc<Metrics>,
+    /// Shared pool of warmed embed workspaces: each worker checks one out
+    /// for its lifetime, so steady-state serving performs no per-request
+    /// scratch allocation (only the response Z buffer is fresh).
+    pool: Arc<WorkspacePool>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -120,6 +125,7 @@ impl EmbedService {
     pub fn start(cfg: ServiceConfig) -> EmbedService {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::new());
+        let pool = WorkspacePool::new();
         let mut handles = Vec::new();
 
         match &cfg.lane {
@@ -128,9 +134,10 @@ impl EmbedService {
                     let q = queue.clone();
                     let m = metrics.clone();
                     let cfg = cfg.clone();
+                    let p = pool.clone();
                     let engine = *engine;
                     handles.push(std::thread::spawn(move || {
-                        native_worker(&q, &m, &cfg, engine);
+                        native_worker(&q, &m, &cfg, engine, &p);
                     }));
                 }
             }
@@ -139,22 +146,24 @@ impl EmbedService {
                 let m = metrics.clone();
                 let cfg_pjrt = cfg.clone();
                 let dir = artifact_dir.clone();
+                let p = pool.clone();
                 let fallback = *fallback;
                 handles.push(std::thread::spawn(move || {
-                    pjrt_worker(&q, &m, &cfg_pjrt, &dir, fallback);
+                    pjrt_worker(&q, &m, &cfg_pjrt, &dir, fallback, &p);
                 }));
                 // extra native workers drain overflow alongside
                 for _ in 1..cfg.workers {
                     let q = queue.clone();
                     let m = metrics.clone();
                     let cfg = cfg.clone();
+                    let p = pool.clone();
                     handles.push(std::thread::spawn(move || {
-                        native_worker(&q, &m, &cfg, fallback);
+                        native_worker(&q, &m, &cfg, fallback, &p);
                     }));
                 }
             }
         }
-        EmbedService { queue, metrics, handles }
+        EmbedService { queue, metrics, pool, handles }
     }
 
     /// Submit with backpressure: `Err` means the queue is full/closed and
@@ -202,6 +211,18 @@ impl EmbedService {
 
     pub fn queue_depth(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Idle workspaces currently in the shared pool (observability; while
+    /// workers run, each holds one checked out).
+    pub fn idle_workspaces(&self) -> usize {
+        self.pool.idle()
+    }
+
+    /// Handle to the shared workspace pool (it outlives `shutdown`, so
+    /// callers can verify warm buffers were returned).
+    pub fn workspace_pool(&self) -> Arc<WorkspacePool> {
+        self.pool.clone()
     }
 
     /// Drain queued work, stop workers, return final metrics.
@@ -311,10 +332,21 @@ fn fail(job: &Job, msg: String, metrics: &Metrics) {
     let _ = job.reply.send(Err(anyhow::anyhow!(msg)));
 }
 
-fn native_worker(q: &BoundedQueue<Job>, metrics: &Metrics, cfg: &ServiceConfig, engine: Engine) {
+fn native_worker(
+    q: &BoundedQueue<Job>,
+    metrics: &Metrics,
+    cfg: &ServiceConfig,
+    engine: Engine,
+    pool: &Arc<WorkspacePool>,
+) {
+    // one warmed workspace for this worker's lifetime; returns to the
+    // pool (capacity intact) when the worker exits
+    let mut ws = pool.checkout();
     while let Some(first) = q.pop() {
         let jobs = gather(q, cfg, first);
-        process_jobs(jobs, cfg, metrics, |g, opts| (engine.embed(g, opts), "native"));
+        process_jobs(jobs, cfg, metrics, |g, opts| {
+            (engine.embed_pooled(g, opts, &mut ws), "native")
+        });
     }
 }
 
@@ -324,6 +356,7 @@ fn pjrt_worker(
     cfg: &ServiceConfig,
     artifact_dir: &std::path::Path,
     fallback: Engine,
+    pool: &Arc<WorkspacePool>,
 ) {
     let runtime = match Runtime::new(artifact_dir) {
         Ok(rt) => rt,
@@ -336,13 +369,14 @@ fn pjrt_worker(
             return;
         }
     };
+    let mut ws = pool.checkout();
     while let Some(first) = q.pop() {
         let jobs = gather(q, cfg, first);
         process_jobs(jobs, cfg, metrics, |g, opts| {
             if runtime.fits(g, opts) {
                 (runtime.embed(g, opts), "pjrt")
             } else {
-                (fallback.embed(g, opts), "native-fallback")
+                (fallback.embed_pooled(g, opts, &mut ws), "native-fallback")
             }
         });
     }
@@ -517,6 +551,24 @@ mod tests {
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.via, "native");
         svc.shutdown();
+    }
+
+    #[test]
+    fn workers_return_workspaces_to_pool_on_shutdown() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 3,
+            ..ServiceConfig::default()
+        });
+        let pool = svc.workspace_pool();
+        // workers hold their workspaces while running
+        assert_eq!(svc.idle_workspaces(), 0);
+        let g = random_graph(470, 30, 80, 3);
+        let rx = svc
+            .submit(EmbedRequest { graph: g, options: GeeOptions::ALL })
+            .unwrap();
+        rx.recv().unwrap().unwrap();
+        svc.shutdown();
+        assert_eq!(pool.idle(), 3, "each worker must return its workspace");
     }
 
     #[test]

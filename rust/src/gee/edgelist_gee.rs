@@ -9,7 +9,8 @@
 //! intermediate in sparse form.
 
 use super::options::GeeOptions;
-use super::weights::weight_values;
+use super::weights::weight_values_into;
+use super::workspace::{reset_f64, EmbedWorkspace};
 use crate::graph::Graph;
 use crate::sparse::ops::{normalize_rows, safe_recip, safe_recip_sqrt};
 use crate::sparse::Dense;
@@ -21,69 +22,104 @@ pub struct EdgeListGee;
 impl EdgeListGee {
     /// Embed the graph: O(E + N·K) time, dense N×K output.
     pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let mut ws = EmbedWorkspace::new();
+        self.embed_into(g, opts, &mut ws);
+        ws.take_z()
+    }
+
+    /// Embed into `ws.z`, borrowing the degree/scale/weight scratch from
+    /// `ws` — zero heap allocations once the workspace is warm at this
+    /// graph shape. Numerics identical to [`embed`](Self::embed).
+    pub fn embed_into(&self, g: &Graph, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
         let n = g.n;
         let k = g.k;
-        // per-vertex 1/n_{y_j} and class id
-        let wv = weight_values(&g.labels, k);
-
-        // pass 1 (lap only): weighted degrees, self loops counted once,
-        // +1 for diagonal augmentation
-        let scale: Option<Vec<f64>> = if opts.laplacian {
-            let mut deg = g.degrees();
-            if opts.diagonal {
-                for d in deg.iter_mut() {
-                    *d += 1.0;
-                }
-            }
-            Some(deg.iter().map(|&d| safe_recip_sqrt(d)).collect())
-        } else {
-            None
-        };
+        let EmbedWorkspace { z, scale, deg, wv, nk, .. } = ws;
+        // per-vertex 1/n_{y_j}
+        weight_values_into(&g.labels, k, nk, wv);
+        let use_scale = degree_scale_into(g, opts, deg, scale);
+        let sc: Option<&[f64]> = if use_scale { Some(&scale[..]) } else { None };
 
         // pass 2: accumulate Z over the edge list (both directions)
-        let mut z = Dense::zeros(n, k);
+        z.nrows = n;
+        z.ncols = k;
+        reset_f64(&mut z.data, n * k);
         for i in 0..g.num_edges() {
             let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
             let (la, lb) = (g.labels[a], g.labels[b]);
-            let s = match &scale {
+            let s = match sc {
                 Some(sc) => sc[a] * sc[b],
                 None => 1.0,
             };
             if lb >= 0 {
                 *z.get_mut(a, lb as usize) += w * s * wv[b];
             }
-            if a != b {
-                if la >= 0 {
-                    *z.get_mut(b, la as usize) += w * s * wv[a];
-                }
+            if a != b && la >= 0 {
+                *z.get_mut(b, la as usize) += w * s * wv[a];
             }
         }
 
-        // diagonal augmentation: self loop of weight 1 on every vertex
-        if opts.diagonal {
-            for v in 0..n {
-                let l = g.labels[v];
-                if l >= 0 {
-                    let s = match &scale {
-                        // self loop scaled by 1/d_v (s_v * s_v)
-                        Some(sc) => sc[v] * sc[v],
-                        None => 1.0,
-                    };
-                    *z.get_mut(v, l as usize) += s * wv[v];
-                }
-            }
-        }
-
-        if opts.correlation {
-            normalize_rows(&mut z);
-        }
-        z
+        diag_cor_epilogue(&g.labels, opts, sc, &wv[..], z);
     }
 
     /// Peak auxiliary memory in bytes (the dense Z + degree vector) —
     /// reported by the space benches.
     pub fn workspace_bytes(&self, g: &Graph) -> usize {
         g.n * g.k * 8 + g.n * 8
+    }
+}
+
+/// Pass 1 of both edge-list lanes (lap only): weighted degrees (self
+/// loops counted once) and the `d^-1/2` scale with the diag bump folded
+/// in, written into the workspace buffers. Returns whether the scale is
+/// active. Shared by the serial and edge-parallel lanes so their
+/// numerics cannot drift.
+pub(crate) fn degree_scale_into(
+    g: &Graph,
+    opts: &GeeOptions,
+    deg: &mut Vec<f64>,
+    scale: &mut Vec<f64>,
+) -> bool {
+    if !opts.laplacian {
+        return false;
+    }
+    reset_f64(deg, g.n);
+    for i in 0..g.num_edges() {
+        let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+        deg[a] += w;
+        if a != b {
+            deg[b] += w;
+        }
+    }
+    let bump = if opts.diagonal { 1.0 } else { 0.0 };
+    scale.clear();
+    scale.extend(deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
+    true
+}
+
+/// Shared epilogue of both edge-list lanes: diagonal augmentation (a
+/// weight-1 self loop on every labeled vertex, scaled by `s_v²` under
+/// lap) and row correlation.
+pub(crate) fn diag_cor_epilogue(
+    labels: &[i32],
+    opts: &GeeOptions,
+    sc: Option<&[f64]>,
+    wv: &[f64],
+    z: &mut crate::sparse::Dense,
+) {
+    let k = z.ncols;
+    if opts.diagonal {
+        for (v, &l) in labels.iter().enumerate() {
+            if l >= 0 {
+                let s = match sc {
+                    Some(sc) => sc[v] * sc[v],
+                    None => 1.0,
+                };
+                z.data[v * k + l as usize] += s * wv[v];
+            }
+        }
+    }
+    if opts.correlation {
+        normalize_rows(z);
     }
 }
 
@@ -176,6 +212,22 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn embed_into_bitwise_matches_embed_and_reuses_buffers() {
+        let mut g = random_graph(34, 50, 160, 4);
+        g.add_edge(6, 6, 1.2);
+        g.labels[2] = -1;
+        let mut ws = EmbedWorkspace::new();
+        EdgeListGee.embed_into(&g, &GeeOptions::ALL, &mut ws); // warm
+        let cap = ws.z.data.capacity();
+        for opts in GeeOptions::table_order() {
+            let fresh = EdgeListGee.embed(&g, &opts);
+            EdgeListGee.embed_into(&g, &opts, &mut ws);
+            assert_eq!(ws.z.data, fresh.data, "pooled edge-list at {opts:?}");
+        }
+        assert_eq!(ws.z.data.capacity(), cap);
     }
 
     #[test]

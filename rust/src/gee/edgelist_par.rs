@@ -1,0 +1,210 @@
+//! Edge-parallel GEE — the parallel lane for the **original** edge-list
+//! algorithm (Shen & Priebe 2023), closing the ROADMAP's "edge-list GEE
+//! with per-thread Z partials" item.
+//!
+//! The edge list is split into contiguous chunks of equal edge count
+//! (every edge costs the same — two scaled scatter-adds); each thread
+//! accumulates its chunk into a private N×K partial of Z (per-thread
+//! partials per Edge-Parallel GEE, arXiv:2402.04403 — no atomics, no
+//! locks), and the partials are summed in thread order afterwards.
+//!
+//! Determinism contract (weaker than the row-parallel engine's, by the
+//! nature of edge partitioning):
+//! * for a **fixed thread count** the output is bitwise-reproducible —
+//!   chunk boundaries and the merge order are functions of (E, T) only;
+//! * across thread counts (and vs the serial [`EdgeListGee`]) results
+//!   agree to floating-point reassociation error (≤1e-12 in the parity
+//!   suite): summing a vertex's contributions per-chunk-then-merge
+//!   regroups the additions.
+//!
+//! Memory: T−1 extra N×K partials (borrowed from the workspace and
+//! reused across calls). For very large N prefer the row-parallel
+//! engine, whose footprint is independent of thread count.
+
+use std::thread;
+
+use super::edgelist_gee::{degree_scale_into, diag_cor_epilogue, EdgeListGee};
+use super::options::GeeOptions;
+use super::parallel::PAR_MIN_EDGES;
+use super::weights::weight_values_into;
+use super::workspace::{reset_f64, EmbedWorkspace};
+use crate::graph::Graph;
+use crate::sparse::partition::even_chunks;
+use crate::sparse::Dense;
+
+/// Edge-parallel edge-list GEE engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EdgeListParGee {
+    /// Worker thread count; 0 = use `std::thread::available_parallelism`.
+    pub threads: usize,
+}
+
+impl EdgeListParGee {
+    pub fn new(threads: usize) -> Self {
+        EdgeListParGee { threads }
+    }
+
+    /// The thread count a call will actually use — the shared policy in
+    /// [`crate::sparse::partition::resolve_threads`] (0 = auto, explicit
+    /// requests capped at available parallelism).
+    pub fn resolved_threads(&self) -> usize {
+        crate::sparse::partition::resolve_threads(self.threads)
+    }
+
+    /// Embed the graph. Falls back to the serial edge-list engine below
+    /// [`PAR_MIN_EDGES`] undirected edges.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let mut ws = EmbedWorkspace::new();
+        self.embed_into(g, opts, &mut ws);
+        ws.take_z()
+    }
+
+    /// Embed into `ws.z`; Z, the per-thread partials and all scalar
+    /// scratch borrow from the workspace and stay warm across calls.
+    pub fn embed_into(&self, g: &Graph, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
+        let t = self.resolved_threads();
+        let ne = g.num_edges();
+        if t <= 1 || ne < PAR_MIN_EDGES {
+            EdgeListGee.embed_into(g, opts, ws);
+            return;
+        }
+        let (n, k) = (g.n, g.k);
+        let EmbedWorkspace { z, scale, deg, wv, nk, partials, .. } = ws;
+        weight_values_into(&g.labels, k, nk, wv);
+        // pass 1 is the serial lane's, verbatim (shared helper)
+        let use_scale = degree_scale_into(g, opts, deg, scale);
+        let sc: Option<&[f64]> = if use_scale { Some(&scale[..]) } else { None };
+        let wv_s: &[f64] = &wv[..];
+        let labels: &[i32] = &g.labels[..];
+
+        // pass 2 (parallel): thread 0 accumulates straight into Z, the
+        // rest into private partials; every buffer is zeroed first
+        z.nrows = n;
+        z.ncols = k;
+        reset_f64(&mut z.data, n * k);
+        if partials.len() < t - 1 {
+            partials.resize_with(t - 1, Vec::new);
+        }
+        for p in partials[..t - 1].iter_mut() {
+            reset_f64(p, n * k);
+        }
+        let ebounds = even_chunks(ne, t);
+        thread::scope(|s| {
+            let mut bufs: Vec<&mut [f64]> = Vec::with_capacity(t);
+            bufs.push(&mut z.data[..]);
+            for p in partials[..t - 1].iter_mut() {
+                bufs.push(&mut p[..]);
+            }
+            for (w, buf) in ebounds.windows(2).zip(bufs) {
+                let (lo, hi) = (w[0], w[1]);
+                if lo == hi {
+                    continue;
+                }
+                s.spawn(move || {
+                    for i in lo..hi {
+                        let (a, b, wgt) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+                        let (la, lb) = (labels[a], labels[b]);
+                        let s = match sc {
+                            Some(sc) => sc[a] * sc[b],
+                            None => 1.0,
+                        };
+                        if lb >= 0 {
+                            buf[a * k + lb as usize] += wgt * s * wv_s[b];
+                        }
+                        if a != b && la >= 0 {
+                            buf[b * k + la as usize] += wgt * s * wv_s[a];
+                        }
+                    }
+                });
+            }
+        });
+
+        // deterministic merge: partials summed in thread order
+        for p in partials[..t - 1].iter() {
+            for (zi, &pi) in z.data.iter_mut().zip(p.iter()) {
+                *zi += pi;
+            }
+        }
+
+        // diag augmentation + correlation: the serial lane's epilogue
+        diag_cor_epilogue(labels, opts, sc, wv_s, z);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.08 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(1, 1, 2.5);
+        g.add_edge((n - 1) as u32, (n - 1) as u32, 0.7);
+        g
+    }
+
+    #[test]
+    fn matches_serial_edgelist_within_tolerance() {
+        // large enough to take the genuinely parallel path
+        let g = random_graph(81, 600, 3 * PAR_MIN_EDGES, 4);
+        assert!(g.num_edges() >= PAR_MIN_EDGES);
+        for opts in GeeOptions::table_order() {
+            let serial = EdgeListGee.embed(&g, &opts);
+            for t in [2usize, 3, 8] {
+                let par = EdgeListParGee::new(t).embed(&g, &opts);
+                let d = serial.max_abs_diff(&par);
+                assert!(d <= 1e-12, "edge-par vs serial {d} at {opts:?}, t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_reproducible_at_fixed_thread_count() {
+        let g = random_graph(82, 400, 2 * PAR_MIN_EDGES, 3);
+        for opts in [GeeOptions::NONE, GeeOptions::ALL] {
+            let a = EdgeListParGee::new(3).embed(&g, &opts);
+            let b = EdgeListParGee::new(3).embed(&g, &opts);
+            assert_eq!(a.data, b.data, "not reproducible at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn small_graphs_fall_back_to_serial_bitwise() {
+        let g = random_graph(83, 40, 100, 3);
+        assert!(g.num_edges() < PAR_MIN_EDGES);
+        for opts in GeeOptions::table_order() {
+            let serial = EdgeListGee.embed(&g, &opts);
+            let par = EdgeListParGee::new(8).embed(&g, &opts);
+            assert_eq!(par.data, serial.data, "fallback not bitwise at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_partials_reused_across_calls() {
+        let g = random_graph(84, 300, 2 * PAR_MIN_EDGES, 3);
+        let engine = EdgeListParGee::new(2);
+        if engine.resolved_threads() < 2 {
+            return; // single-core runner: nothing to assert about partials
+        }
+        let mut ws = EmbedWorkspace::new();
+        engine.embed_into(&g, &GeeOptions::ALL, &mut ws); // warm
+        assert!(!ws.partials.is_empty());
+        let caps: Vec<usize> = ws.partials.iter().map(|p| p.capacity()).collect();
+        let zcap = ws.z.data.capacity();
+        for opts in GeeOptions::table_order() {
+            engine.embed_into(&g, &opts, &mut ws);
+        }
+        assert_eq!(
+            ws.partials.iter().map(|p| p.capacity()).collect::<Vec<_>>(),
+            caps
+        );
+        assert_eq!(ws.z.data.capacity(), zcap);
+    }
+}

@@ -1,15 +1,23 @@
-//! Unified embedding front-end: one enum over the three GEE
-//! implementations plus the PJRT-compiled path, so the coordinator, CLI
-//! and benches can switch engines by name.
+//! Unified embedding front-end: one enum over the GEE implementations
+//! plus the PJRT-compiled path, so the coordinator, CLI and benches can
+//! switch engines by name.
+//!
+//! This is also where the u32 index-compaction boundary check lives:
+//! graphs whose directed-edge or vertex count exceeds `u32::MAX` are
+//! rejected with a real error before any engine runs (the constructors
+//! would otherwise panic with the same message).
 
 use anyhow::Result;
 
 use super::dense_gee::DenseGee;
 use super::edgelist_gee::EdgeListGee;
+use super::edgelist_par::EdgeListParGee;
 use super::options::GeeOptions;
 use super::parallel::ParallelGee;
 use super::sparse_gee::SparseGee;
+use super::workspace::EmbedWorkspace;
 use crate::graph::Graph;
+use crate::sparse::index::try_index;
 use crate::sparse::Dense;
 
 /// Which implementation computes the embedding.
@@ -19,9 +27,13 @@ pub enum Engine {
     Dense,
     /// Original edge-list GEE (Shen & Priebe 2023).
     EdgeList,
+    /// Edge-parallel edge-list GEE (per-thread Z partials, deterministic
+    /// merge; 0 = auto threads). Bitwise-reproducible at a fixed thread
+    /// count, ≤1e-12 vs the serial edge-list engine.
+    EdgeListPar(usize),
     /// The paper's sparse GEE, published configuration (DOK + CSR×CSR).
     Sparse,
-    /// Sparse GEE, §Perf-tuned configuration (direct CSR + CSR×dense).
+    /// Sparse GEE, §Perf-tuned configuration (direct CSR + fused SpMM).
     SparseFast,
     /// Row-parallel sparse GEE (std threads; 0 = auto). Bitwise-identical
     /// output to `SparseFast` for any thread count.
@@ -32,6 +44,7 @@ impl Engine {
     pub const ALL: &'static [Engine] = &[
         Engine::Dense,
         Engine::EdgeList,
+        Engine::EdgeListPar(0),
         Engine::Sparse,
         Engine::SparseFast,
         Engine::SparsePar(0),
@@ -41,6 +54,7 @@ impl Engine {
         match self {
             Engine::Dense => "dense",
             Engine::EdgeList => "edgelist",
+            Engine::EdgeListPar(_) => "edgelist-par",
             Engine::Sparse => "sparse",
             Engine::SparseFast => "sparse-fast",
             Engine::SparsePar(_) => "sparse-par",
@@ -48,13 +62,18 @@ impl Engine {
     }
 
     pub fn from_name(s: &str) -> Option<Engine> {
-        // "sparse-par:T" pins the thread count; bare "sparse-par" = auto
+        // "sparse-par:T" / "edgelist-par:T" pin the thread count; the
+        // bare names mean auto
         if let Some(t) = s.strip_prefix("sparse-par:") {
             return t.parse().ok().map(Engine::SparsePar);
+        }
+        if let Some(t) = s.strip_prefix("edgelist-par:") {
+            return t.parse().ok().map(Engine::EdgeListPar);
         }
         match s {
             "dense" => Some(Engine::Dense),
             "edgelist" | "gee" | "original" => Some(Engine::EdgeList),
+            "edgelist-par" | "epar" => Some(Engine::EdgeListPar(0)),
             "sparse" => Some(Engine::Sparse),
             "sparse-fast" | "fast" => Some(Engine::SparseFast),
             "sparse-par" | "par" => Some(Engine::SparsePar(0)),
@@ -62,15 +81,66 @@ impl Engine {
         }
     }
 
+    /// Reject graphs that overflow the u32 index space with a real error
+    /// (engines past this point may assume 32-bit indexability). The
+    /// common path is O(1): the directed expansion is at most 2·E, so the
+    /// exact (O(E)) self-loop count is only taken when the cheap bound
+    /// does not already prove fit.
+    fn check_index_width(g: &Graph) -> Result<()> {
+        // anyhow::Error::new keeps IndexOverflow downcastable, so callers
+        // can tell capacity rejection apart from other embed failures
+        try_index(g.n, "vertices").map_err(anyhow::Error::new)?;
+        if g.num_edges().saturating_mul(2) > crate::sparse::MAX_INDEX {
+            try_index(g.num_directed(), "directed edges").map_err(anyhow::Error::new)?;
+        }
+        Ok(())
+    }
+
     /// Run the embedding. All engines produce identical numerics (tested);
     /// they differ in data structures and therefore speed/space.
     pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Result<Dense> {
+        Self::check_index_width(g)?;
         match self {
             Engine::Dense => DenseGee::default().embed(g, opts),
             Engine::EdgeList => Ok(EdgeListGee.embed(g, opts)),
+            Engine::EdgeListPar(t) => Ok(EdgeListParGee::new(*t).embed(g, opts)),
             Engine::Sparse => Ok(SparseGee::default().embed(g, opts)),
             Engine::SparseFast => Ok(SparseGee::fast().embed(g, opts)),
             Engine::SparsePar(t) => Ok(ParallelGee::new(*t).embed(g, opts)),
+        }
+    }
+
+    /// Run the embedding with scratch borrowed from `ws` — the serving
+    /// hot path. The engines with pooled lanes (edge-list, fused sparse,
+    /// both parallel lanes) perform no per-request allocations beyond the
+    /// returned Z buffer once the workspace is warm; the reference
+    /// configurations (`Dense`, `Sparse`) keep their allocating paths —
+    /// they exist for fidelity to the published pipeline, not throughput.
+    pub fn embed_pooled(
+        &self,
+        g: &Graph,
+        opts: &GeeOptions,
+        ws: &mut EmbedWorkspace,
+    ) -> Result<Dense> {
+        Self::check_index_width(g)?;
+        match self {
+            Engine::EdgeList => {
+                EdgeListGee.embed_into(g, opts, ws);
+                Ok(ws.take_z())
+            }
+            Engine::EdgeListPar(t) => {
+                EdgeListParGee::new(*t).embed_into(g, opts, ws);
+                Ok(ws.take_z())
+            }
+            Engine::SparseFast => {
+                super::sparse_gee::embed_fused_into(g, opts, ws);
+                Ok(ws.take_z())
+            }
+            Engine::SparsePar(t) => {
+                ParallelGee::new(*t).embed_with(g, opts, ws);
+                Ok(ws.take_z())
+            }
+            Engine::Dense | Engine::Sparse => self.embed(g, opts),
         }
     }
 }
@@ -102,6 +172,11 @@ mod tests {
         assert_eq!(Engine::from_name("original"), Some(Engine::EdgeList));
         assert_eq!(Engine::from_name("sparse-par"), Some(Engine::SparsePar(0)));
         assert_eq!(Engine::from_name("sparse-par:4"), Some(Engine::SparsePar(4)));
+        assert_eq!(Engine::from_name("edgelist-par"), Some(Engine::EdgeListPar(0)));
+        assert_eq!(
+            Engine::from_name("edgelist-par:3"),
+            Some(Engine::EdgeListPar(3))
+        );
         assert_eq!(Engine::from_name("sparse-par:zap"), None);
         assert_eq!(Engine::from_name("bogus"), None);
     }
@@ -121,6 +196,31 @@ mod tests {
         for e in Engine::ALL {
             let z = e.embed(&g, &opts).unwrap();
             assert!(base.max_abs_diff(&z) < 1e-10, "{} disagrees", e.name());
+        }
+    }
+
+    #[test]
+    fn pooled_front_end_matches_allocating_front_end() {
+        let mut rng = Rng::new(52);
+        let mut g = Graph::new(40, 4);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(4) as i32;
+        }
+        for _ in 0..200 {
+            g.add_edge(rng.below(40) as u32, rng.below(40) as u32, rng.f64() + 0.1);
+        }
+        let mut ws = EmbedWorkspace::new();
+        for e in Engine::ALL {
+            for opts in GeeOptions::table_order() {
+                let fresh = e.embed(&g, &opts).unwrap();
+                let pooled = e.embed_pooled(&g, &opts, &mut ws).unwrap();
+                assert_eq!(
+                    pooled.data,
+                    fresh.data,
+                    "pooled {} drifted at {opts:?}",
+                    e.name()
+                );
+            }
         }
     }
 }

@@ -4,21 +4,30 @@
 //! * [`weights`] — W construction in every storage format
 //! * [`dense_gee::DenseGee`] — dense-adjacency strawman
 //! * [`edgelist_gee::EdgeListGee`] — the original GEE (linear, edge list)
+//! * [`edgelist_par::EdgeListParGee`] — edge-parallel edge-list GEE
+//!   (per-thread Z partials, deterministic merge)
 //! * [`sparse_gee::SparseGee`] — the paper's sparse pipeline (DOK→CSR)
 //! * [`parallel::ParallelGee`] — row-parallel sparse GEE (std threads,
 //!   bitwise-deterministic for any thread count)
+//! * [`workspace::EmbedWorkspace`] — pooled scratch buffers; every engine
+//!   has an `*_into` lane that allocates nothing once the workspace is
+//!   warm ([`workspace::WorkspacePool`] shares them between workers)
 //! * [`embed::Engine`] — unified front-end over all implementations
 
 pub mod dense_gee;
 pub mod ensemble;
 pub mod edgelist_gee;
+pub mod edgelist_par;
 pub mod embed;
 pub mod fusion;
 pub mod options;
 pub mod parallel;
 pub mod sparse_gee;
 pub mod weights;
+pub mod workspace;
 
+pub use edgelist_par::EdgeListParGee;
 pub use embed::{Embedding, Engine};
 pub use options::GeeOptions;
 pub use parallel::ParallelGee;
+pub use workspace::{EmbedWorkspace, WorkspacePool};

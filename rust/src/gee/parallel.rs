@@ -10,8 +10,13 @@
 //!
 //! * **prepare** — each thread counting-sorts a contiguous chunk of the
 //!   edge list into a thread-local row-grouped buffer; local counts merge
-//!   by prefix sum into the global `indptr`, then threads copy their row
-//!   segments into disjoint ranges of the global `cols`/`vals` arrays.
+//!   into the global `indptr` by a **parallel vertex-range merge** (each
+//!   thread owns a contiguous vertex range, sums the per-vertex deltas
+//!   across locals, prefix-sums within its range; range totals are
+//!   prefix-summed serially and the offsets applied back in parallel —
+//!   pure integer arithmetic, so the result is identical to the serial
+//!   merge for any thread count). Threads then copy their row segments
+//!   into disjoint ranges of the global `cols`/`vals` arrays.
 //!   Concatenating per-thread segments in thread order reproduces global
 //!   edge order within every row, so the arrays are **bitwise identical**
 //!   to the serial [`PreparedGraph::new`] for any thread count.
@@ -21,13 +26,14 @@
 //!   bitwise identical (and thread-count independent, unlike merging
 //!   per-thread partial degree sums would be).
 //! * **embed** — rows of Z are partitioned into contiguous chunks
-//!   balanced by nonzero count; each thread owns a disjoint
+//!   balanced by nonzero count ([`crate::sparse::partition::nnz_chunks`],
+//!   shared with `Csr::spmm_dense_par`); each thread owns a disjoint
 //!   `z.data` slice via [`std::thread::scope`] + `split_at_mut`, so there
 //!   are no locks and no atomics. Every row is computed by exactly one
 //!   thread with the same sequential accumulation the serial engine uses:
 //!   the output is bitwise-deterministic regardless of thread count, and
 //!   bitwise-equal to the serial fused engine. The lap/diag/cor options
-//!   fold analytically exactly as `embed_fused` does.
+//!   fold analytically exactly as the fused path does.
 //!
 //! No dependencies beyond std. Exposed through
 //! [`Engine::SparsePar`](super::embed::Engine) and the coordinator's
@@ -37,10 +43,13 @@
 use std::thread;
 
 use super::options::GeeOptions;
-use super::sparse_gee::{PreparedGraph, SparseGee};
+use super::sparse_gee::PreparedGraph;
 use super::weights::weight_values;
+use super::workspace::EmbedWorkspace;
 use crate::graph::Graph;
-use crate::sparse::ops::{safe_recip, safe_recip_sqrt};
+use crate::sparse::index::to_index;
+use crate::sparse::ops::safe_recip_sqrt;
+use crate::sparse::partition::{even_chunks, nnz_chunks};
 use crate::sparse::Dense;
 
 /// Below this many undirected edges `ParallelGee::embed` stays serial —
@@ -59,66 +68,122 @@ impl ParallelGee {
         ParallelGee { threads }
     }
 
-    /// The thread count a call will actually use. Capped at the machine's
-    /// available parallelism: more threads than cores never helps this
-    /// memory-bound workload, and the cap bounds oversubscription when
-    /// several coordinator workers route intra-op embeds concurrently.
+    /// The thread count a call will actually use — the shared policy in
+    /// [`crate::sparse::partition::resolve_threads`] (0 = auto, explicit
+    /// requests capped at available parallelism).
     pub fn resolved_threads(&self) -> usize {
-        let avail = thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-        if self.threads > 0 {
-            self.threads.min(avail)
-        } else {
-            avail
-        }
+        crate::sparse::partition::resolve_threads(self.threads)
     }
 
     /// Embed the graph. Output is bitwise-identical to the serial fused
     /// engine (`SparseGee::fast()`) for every option combination and any
     /// thread count.
     pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let mut ws = EmbedWorkspace::new();
+        self.embed_with(g, opts, &mut ws);
+        ws.take_z()
+    }
+
+    /// Embed into `ws.z`. The output buffer and (on the serial fallback)
+    /// all scratch come from `ws`; the genuinely parallel path still
+    /// allocates its thread-local sort buffers, which is why the serving
+    /// layer's zero-allocation contract covers the serial prepared path.
+    pub fn embed_with(&self, g: &Graph, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
         let t = self.resolved_threads();
         if t <= 1 || g.num_edges() < PAR_MIN_EDGES {
-            return SparseGee::fast().embed(g, opts);
+            super::sparse_gee::embed_fused_into(g, opts, ws);
+            return;
         }
-        prepare_par(g, t).embed_par(opts, t)
+        prepare_par(g, t).embed_par_into(opts, t, ws);
     }
-}
-
-/// Pick `chunks` contiguous row ranges with roughly equal nonzero counts.
-/// Returns `chunks + 1` non-decreasing boundaries from 0 to n.
-fn row_chunks(indptr: &[usize], chunks: usize) -> Vec<usize> {
-    let n = indptr.len() - 1;
-    let total = indptr[n];
-    let chunks = chunks.max(1).min(n.max(1));
-    let mut bounds = Vec::with_capacity(chunks + 1);
-    bounds.push(0usize);
-    for i in 1..chunks {
-        let target = (total as u128 * i as u128 / chunks as u128) as usize;
-        let mut r = *bounds.last().unwrap();
-        while r < n && indptr[r] < target {
-            r += 1;
-        }
-        bounds.push(r);
-    }
-    bounds.push(n);
-    bounds
 }
 
 /// One thread's counting-sorted slice of the edge list.
 struct LocalSort {
-    /// Row pointers (length n+1) into `cols`/`vals`.
-    indptr: Vec<usize>,
+    /// Row pointers (length n+1, u32-compacted) into `cols`/`vals`.
+    indptr: Vec<u32>,
     cols: Vec<u32>,
     vals: Vec<f64>,
 }
 
+/// Serial reference merge of per-thread counts: per-vertex deltas summed
+/// across locals, then prefix-summed. O(t·n). Kept as the oracle the
+/// parallel merge must reproduce exactly (pure integer arithmetic).
+fn merge_counts_serial(locals: &[LocalSort], n: usize) -> Vec<u32> {
+    let mut indptr = vec![0u32; n + 1];
+    for l in locals {
+        for v in 0..n {
+            indptr[v + 1] += l.indptr[v + 1] - l.indptr[v];
+        }
+    }
+    for v in 0..n {
+        indptr[v + 1] += indptr[v];
+    }
+    indptr
+}
+
+/// Parallel count-merge by vertex-range split (the ROADMAP open item):
+/// each thread sums the per-vertex count deltas across all locals for a
+/// contiguous vertex range and prefix-sums within the range (O(t·n/T)
+/// per thread); the T range totals are prefix-summed serially and the
+/// offsets applied back in parallel. Output is **identical** to
+/// [`merge_counts_serial`] for any thread count — integer arithmetic has
+/// no reassociation error — and the equality is asserted in debug builds.
+fn merge_counts_par(locals: &[LocalSort], n: usize, threads: usize) -> Vec<u32> {
+    let mut indptr = vec![0u32; n + 1];
+    let vbounds = even_chunks(n, threads);
+    let totals: Vec<u32> = thread::scope(|s| {
+        let mut rest: &mut [u32] = &mut indptr[1..];
+        let mut handles = Vec::with_capacity(vbounds.len() - 1);
+        for w in vbounds.windows(2) {
+            let (v0, v1) = (w[0], w[1]);
+            let (here, next) = std::mem::take(&mut rest).split_at_mut(v1 - v0);
+            rest = next;
+            handles.push(s.spawn(move || {
+                let mut run = 0u32;
+                for (i, v) in (v0..v1).enumerate() {
+                    for l in locals {
+                        run += l.indptr[v + 1] - l.indptr[v];
+                    }
+                    here[i] = run;
+                }
+                run
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("count-merge worker panicked"))
+            .collect()
+    });
+    thread::scope(|s| {
+        let mut rest: &mut [u32] = &mut indptr[1..];
+        let mut off = 0u32;
+        for (w, &total) in vbounds.windows(2).zip(totals.iter()) {
+            let (here, next) = std::mem::take(&mut rest).split_at_mut(w[1] - w[0]);
+            rest = next;
+            if off != 0 && !here.is_empty() {
+                let o = off;
+                s.spawn(move || {
+                    for x in here.iter_mut() {
+                        *x += o;
+                    }
+                });
+            }
+            off += total;
+        }
+    });
+    indptr
+}
+
 /// Build a [`PreparedGraph`] with `threads` workers: per-thread local
-/// counting sorts over contiguous edge chunks, merged by prefix sum.
+/// counting sorts over contiguous edge chunks, merged by the parallel
+/// vertex-range merge above.
 /// The result is bitwise-identical to the serial [`PreparedGraph::new`].
 pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
     let n = g.n;
     let ne = g.num_edges();
     let m = g.num_directed();
+    to_index(m, "directed edges");
     let t = threads.max(1).min(ne.max(1));
     if t <= 1 || n == 0 {
         return PreparedGraph::new(g);
@@ -132,7 +197,7 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
                 let lo = (ti * chunk).min(ne);
                 let hi = ((ti + 1) * chunk).min(ne);
                 s.spawn(move || {
-                    let mut counts = vec![0usize; n + 1];
+                    let mut counts = vec![0u32; n + 1];
                     for i in lo..hi {
                         let (a, b) = (g.src[i] as usize, g.dst[i] as usize);
                         counts[a + 1] += 1;
@@ -143,18 +208,18 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
                     for v in 0..n {
                         counts[v + 1] += counts[v];
                     }
-                    let local_m = counts[n];
+                    let local_m = counts[n] as usize;
                     let mut cols = vec![0u32; local_m];
                     let mut vals = vec![0.0f64; local_m];
                     let mut next = counts.clone();
                     for i in lo..hi {
                         let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
-                        cols[next[a]] = g.dst[i];
-                        vals[next[a]] = w;
+                        cols[next[a] as usize] = g.dst[i];
+                        vals[next[a] as usize] = w;
                         next[a] += 1;
                         if a != b {
-                            cols[next[b]] = g.src[i];
-                            vals[next[b]] = w;
+                            cols[next[b] as usize] = g.src[i];
+                            vals[next[b] as usize] = w;
                             next[b] += 1;
                         }
                     }
@@ -168,17 +233,10 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
             .collect()
     });
 
-    // ---- phase 2 (serial, O(t·n)): merge per-row counts, prefix-sum
-    let mut indptr = vec![0usize; n + 1];
-    for l in &locals {
-        for v in 0..n {
-            indptr[v + 1] += l.indptr[v + 1] - l.indptr[v];
-        }
-    }
-    for v in 0..n {
-        indptr[v + 1] += indptr[v];
-    }
-    debug_assert_eq!(indptr[n], m);
+    // ---- phase 2 (parallel): vertex-range count-merge + two-level scan
+    let indptr = merge_counts_par(&locals, n, t);
+    debug_assert_eq!(indptr, merge_counts_serial(&locals, n));
+    debug_assert_eq!(indptr[n] as usize, m);
 
     // ---- phase 3 (parallel): copy each thread's row segments into the
     // global arrays. Row ranges are disjoint contiguous slices, handed out
@@ -188,14 +246,14 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
     let mut cols = vec![0u32; m];
     let mut vals = vec![0.0f64; m];
     let mut deg = vec![0.0f64; n];
-    let bounds = row_chunks(&indptr, t);
+    let bounds = nnz_chunks(&indptr, t);
     thread::scope(|s| {
         let mut cols_rest: &mut [u32] = &mut cols;
         let mut vals_rest: &mut [f64] = &mut vals;
         let mut deg_rest: &mut [f64] = &mut deg;
         for w in bounds.windows(2) {
             let (r0, r1) = (w[0], w[1]);
-            let len = indptr[r1] - indptr[r0];
+            let len = (indptr[r1] - indptr[r0]) as usize;
             let (c_here, c_next) = std::mem::take(&mut cols_rest).split_at_mut(len);
             let (v_here, v_next) = std::mem::take(&mut vals_rest).split_at_mut(len);
             let (d_here, d_next) = std::mem::take(&mut deg_rest).split_at_mut(r1 - r0);
@@ -211,7 +269,7 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
                 for r in r0..r1 {
                     let row_start = write;
                     for l in locals {
-                        let (lo, hi) = (l.indptr[r], l.indptr[r + 1]);
+                        let (lo, hi) = (l.indptr[r] as usize, l.indptr[r + 1] as usize);
                         c_here[write..write + (hi - lo)].copy_from_slice(&l.cols[lo..hi]);
                         v_here[write..write + (hi - lo)].copy_from_slice(&l.vals[lo..hi]);
                         write += hi - lo;
@@ -240,19 +298,32 @@ impl PreparedGraph {
     /// same order), `threads`-way parallel over row chunks balanced by
     /// nonzero count.
     pub fn embed_par(&self, opts: &GeeOptions, threads: usize) -> Dense {
+        let mut ws = EmbedWorkspace::new();
+        self.embed_par_into(opts, threads, &mut ws);
+        ws.take_z()
+    }
+
+    /// Row-parallel embed into `ws.z` — the pooled twin of
+    /// [`embed_par`](Self::embed_par); Z and the scale vector borrow from
+    /// the workspace.
+    pub fn embed_par_into(&self, opts: &GeeOptions, threads: usize, ws: &mut EmbedWorkspace) {
         let (n, k) = (self.n, self.k);
         let t = threads.max(1).min(n.max(1));
         if t <= 1 {
-            return self.embed(opts);
+            self.embed_into(opts, ws);
+            return;
         }
-        let scale: Option<Vec<f64>> = if opts.laplacian {
+        let use_scale = opts.laplacian;
+        if use_scale {
             let bump = if opts.diagonal { 1.0 } else { 0.0 };
-            Some(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)).collect())
-        } else {
-            None
-        };
-        let mut z = Dense::zeros(n, k);
-        let bounds = row_chunks(&self.indptr, t);
+            ws.scale.clear();
+            ws.scale
+                .extend(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
+        }
+        ws.reset_z(n, k);
+        let EmbedWorkspace { z, scale, .. } = ws;
+        let sc_opt: Option<&[f64]> = if use_scale { Some(&scale[..]) } else { None };
+        let bounds = nnz_chunks(&self.indptr, t);
         thread::scope(|s| {
             let mut rest: &mut [f64] = &mut z.data;
             for w in bounds.windows(2) {
@@ -263,71 +334,10 @@ impl PreparedGraph {
                 if r0 == r1 {
                     continue;
                 }
-                let sc = scale.as_deref();
+                let sc = sc_opt;
                 s.spawn(move || self.embed_rows(opts, r0, r1, sc, chunk));
             }
         });
-        z
-    }
-
-    /// Accumulate rows `r0..r1` of Z into `out` (their contiguous slice of
-    /// `z.data`), with the options folded analytically. This is the single
-    /// source of truth for the per-row accumulation: the serial
-    /// [`PreparedGraph::embed`] runs it over `0..n` and the parallel path
-    /// runs it per chunk, so the bitwise-identity contract between the two
-    /// cannot drift.
-    pub(crate) fn embed_rows(
-        &self,
-        opts: &GeeOptions,
-        r0: usize,
-        r1: usize,
-        scale: Option<&[f64]>,
-        out: &mut [f64],
-    ) {
-        let k = self.k;
-        debug_assert_eq!(out.len(), (r1 - r0) * k);
-        for r in r0..r1 {
-            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
-            let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
-            match scale {
-                Some(s) => {
-                    let sr = s[r];
-                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = self.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * sr * s[c] * self.wv[c];
-                        }
-                    }
-                }
-                None => {
-                    for (&c, &v) in self.cols[lo..hi].iter().zip(&self.vals[lo..hi]) {
-                        let c = c as usize;
-                        let y = self.labels[c];
-                        if y >= 0 {
-                            zrow[y as usize] += v * self.wv[c];
-                        }
-                    }
-                }
-            }
-            if opts.diagonal {
-                let y = self.labels[r];
-                if y >= 0 {
-                    let s2 = scale.map(|s| s[r] * s[r]).unwrap_or(1.0);
-                    zrow[y as usize] += s2 * self.wv[r];
-                }
-            }
-            if opts.correlation {
-                // row-local, same op order as ops::normalize_rows
-                let norm: f64 = zrow.iter().map(|x| x * x).sum::<f64>().sqrt();
-                let s = safe_recip(norm);
-                if s != 0.0 {
-                    for x in zrow.iter_mut() {
-                        *x *= s;
-                    }
-                }
-            }
-        }
     }
 }
 
@@ -335,6 +345,7 @@ impl PreparedGraph {
 mod tests {
     use super::*;
     use crate::gee::embed::Engine;
+    use crate::gee::sparse_gee::SparseGee;
     use crate::util::rng::Rng;
 
     fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
@@ -367,6 +378,32 @@ mod tests {
     }
 
     #[test]
+    fn parallel_count_merge_identical_to_serial() {
+        // direct oracle check on synthetic locals with skewed counts
+        let mut rng = Rng::new(71);
+        let n = 537; // deliberately not a multiple of any thread count
+        let locals: Vec<LocalSort> = (0..5)
+            .map(|_| {
+                let mut counts = vec![0u32; n + 1];
+                for v in 0..n {
+                    // hub-skew: a few vertices carry most of the mass
+                    let c = if rng.f64() < 0.02 { rng.below(200) } else { rng.below(4) };
+                    counts[v + 1] = counts[v] + c as u32;
+                }
+                LocalSort { indptr: counts, cols: vec![], vals: vec![] }
+            })
+            .collect();
+        let serial = merge_counts_serial(&locals, n);
+        for t in [1usize, 2, 3, 4, 7, 16, 64] {
+            assert_eq!(
+                merge_counts_par(&locals, n, t),
+                serial,
+                "parallel merge differs at t={t}"
+            );
+        }
+    }
+
+    #[test]
     fn embed_par_bitwise_matches_serial_all_combos() {
         let g = random_graph(62, 250, 1_500, 5);
         let prepared = prepare_par(&g, 4);
@@ -380,6 +417,21 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn embed_par_into_reuses_workspace_and_matches() {
+        let g = random_graph(67, 300, 6_000, 4);
+        let prepared = prepare_par(&g, 4);
+        let mut ws = EmbedWorkspace::new();
+        prepared.embed_par_into(&GeeOptions::ALL, 4, &mut ws); // warm
+        let cap = ws.z.data.capacity();
+        for opts in GeeOptions::table_order() {
+            let expect = prepared.embed(&opts);
+            prepared.embed_par_into(&opts, 4, &mut ws);
+            assert_eq!(ws.z.data, expect.data, "pooled par embed at {opts:?}");
+        }
+        assert_eq!(ws.z.data.capacity(), cap, "workspace grew in steady state");
     }
 
     #[test]
@@ -438,17 +490,17 @@ mod tests {
     }
 
     #[test]
-    fn row_chunks_cover_and_balance() {
+    fn nnz_chunks_cover_and_balance_on_prepared_graph() {
         let g = random_graph(66, 400, 3_000, 3);
         let p = PreparedGraph::new(&g);
-        let bounds = row_chunks(&p.indptr, 4);
+        let bounds = nnz_chunks(&p.indptr, 4);
         assert_eq!(bounds.first(), Some(&0));
         assert_eq!(bounds.last(), Some(&400));
         assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
         // every chunk holds at most ~2x the fair nnz share
-        let total = p.indptr[400];
+        let total = p.indptr[400] as usize;
         for w in bounds.windows(2) {
-            let nnz = p.indptr[w[1]] - p.indptr[w[0]];
+            let nnz = (p.indptr[w[1]] - p.indptr[w[0]]) as usize;
             assert!(nnz <= total / 2 + total / 4, "chunk nnz {nnz} of {total}");
         }
     }

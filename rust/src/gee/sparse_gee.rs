@@ -18,9 +18,11 @@
 //! match the published pipeline; the §Perf pass benchmarks the knobs.
 
 use super::options::GeeOptions;
-use super::weights::{weight_matrix_csr_direct, weight_matrix_dok};
+use super::weights::{weight_matrix_csr_direct, weight_matrix_dok, weight_values_into};
+use super::workspace::{reset_f64, reset_u32, EmbedWorkspace};
 use crate::graph::Graph;
-use crate::sparse::ops::{inv_sqrt_vec, normalize_rows};
+use crate::sparse::index::to_index;
+use crate::sparse::ops::{inv_sqrt_vec, normalize_rows, safe_recip, safe_recip_sqrt};
 use crate::sparse::{Csr, Dense};
 
 /// How W_s is constructed.
@@ -132,7 +134,9 @@ impl SparseGee {
     /// embed`] (which in turn shares its accumulation with the
     /// row-parallel engine) — one implementation, used un-amortized here.
     fn embed_fused(&self, g: &Graph, opts: &GeeOptions) -> Dense {
-        PreparedGraph::new(g).embed(opts)
+        let mut ws = EmbedWorkspace::new();
+        embed_fused_into(g, opts, &mut ws);
+        ws.take_z()
     }
 
     /// Prepare a graph once for repeated embedding (see [`PreparedGraph`]).
@@ -152,7 +156,7 @@ impl SparseGee {
         let mut z = a.spmm_csr(&w);
         if opts.correlation {
             for r in 0..z.nrows {
-                let (lo, hi) = (z.indptr[r], z.indptr[r + 1]);
+                let (lo, hi) = (z.indptr[r] as usize, z.indptr[r + 1] as usize);
                 let norm: f64 =
                     z.data[lo..hi].iter().map(|x| x * x).sum::<f64>().sqrt();
                 if norm > 0.0 {
@@ -191,7 +195,7 @@ pub struct PreparedGraph {
     // with per-thread counting sorts and read it for row-parallel embeds
     pub(crate) n: usize,
     pub(crate) k: usize,
-    pub(crate) indptr: Vec<usize>,
+    pub(crate) indptr: Vec<u32>,
     pub(crate) cols: Vec<u32>,
     pub(crate) vals: Vec<f64>,
     pub(crate) deg: Vec<f64>,
@@ -199,41 +203,184 @@ pub struct PreparedGraph {
     pub(crate) labels: Vec<i32>,
 }
 
+/// Counting-sort the graph's directed edges into row-grouped arrays,
+/// writing into caller-provided buffers (capacity-reusing, u32 row
+/// pointers). One implementation serves [`PreparedGraph::new`] and the
+/// pooled fused path ([`embed_fused_into`]), so the two stay
+/// bitwise-identical.
+pub(crate) fn prepare_into(
+    g: &Graph,
+    indptr: &mut Vec<u32>,
+    next: &mut Vec<u32>,
+    cols: &mut Vec<u32>,
+    vals: &mut Vec<f64>,
+    deg: &mut Vec<f64>,
+) {
+    let n = g.n;
+    let m = g.num_directed();
+    to_index(m, "directed edges");
+    reset_u32(indptr, n + 1);
+    reset_f64(deg, n);
+    for i in 0..g.num_edges() {
+        let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+        indptr[a + 1] += 1;
+        deg[a] += w;
+        if a != b {
+            indptr[b + 1] += 1;
+            deg[b] += w;
+        }
+    }
+    for i in 0..n {
+        indptr[i + 1] += indptr[i];
+    }
+    reset_u32(cols, m);
+    reset_f64(vals, m);
+    next.clear();
+    next.extend_from_slice(indptr);
+    for i in 0..g.num_edges() {
+        let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
+        cols[next[a] as usize] = g.dst[i];
+        vals[next[a] as usize] = w;
+        next[a] += 1;
+        if a != b {
+            cols[next[b] as usize] = g.src[i];
+            vals[next[b] as usize] = w;
+            next[b] += 1;
+        }
+    }
+}
+
+/// Borrowed view of a prepared row-grouped structure — the single
+/// accumulation routine below runs over it whether the buffers live in a
+/// [`PreparedGraph`] or an [`EmbedWorkspace`].
+pub(crate) struct AccumCtx<'a> {
+    pub indptr: &'a [u32],
+    pub cols: &'a [u32],
+    pub vals: &'a [f64],
+    pub labels: &'a [i32],
+    pub wv: &'a [f64],
+    pub k: usize,
+}
+
+/// Accumulate rows `r0..r1` of Z into `out` (their contiguous slice of
+/// the output buffer), with the lap/diag/cor options folded analytically.
+/// This is the single source of truth for the per-row accumulation: the
+/// serial prepared path runs it over `0..n`, the row-parallel engine per
+/// chunk, and the pooled fused path over workspace buffers — so the
+/// bitwise-identity contract between them cannot drift.
+pub(crate) fn accumulate_rows(
+    ctx: &AccumCtx<'_>,
+    opts: &GeeOptions,
+    r0: usize,
+    r1: usize,
+    scale: Option<&[f64]>,
+    out: &mut [f64],
+) {
+    let k = ctx.k;
+    debug_assert_eq!(out.len(), (r1 - r0) * k);
+    for r in r0..r1 {
+        let (lo, hi) = (ctx.indptr[r] as usize, ctx.indptr[r + 1] as usize);
+        let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
+        match scale {
+            Some(s) => {
+                let sr = s[r];
+                for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
+                    let c = c as usize;
+                    let y = ctx.labels[c];
+                    if y >= 0 {
+                        zrow[y as usize] += v * sr * s[c] * ctx.wv[c];
+                    }
+                }
+            }
+            None => {
+                for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
+                    let c = c as usize;
+                    let y = ctx.labels[c];
+                    if y >= 0 {
+                        zrow[y as usize] += v * ctx.wv[c];
+                    }
+                }
+            }
+        }
+        if opts.diagonal {
+            let y = ctx.labels[r];
+            if y >= 0 {
+                let s2 = scale.map(|s| s[r] * s[r]).unwrap_or(1.0);
+                zrow[y as usize] += s2 * ctx.wv[r];
+            }
+        }
+        if opts.correlation {
+            // row-local, same op order as ops::normalize_rows
+            let norm: f64 = zrow.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let s = safe_recip(norm);
+            if s != 0.0 {
+                for x in zrow.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+    }
+}
+
+/// The §Perf fused pipeline with every buffer borrowed from `ws`: one
+/// counting sort into the workspace's prepared-structure buffers, then
+/// one accumulation pass into `ws.z`. **Zero heap allocations** once the
+/// workspace is warm at this graph shape (pinned by the counting-
+/// allocator test). Numerically bitwise-identical to
+/// `SparseGee::fast().embed`.
+pub fn embed_fused_into(g: &Graph, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
+    let EmbedWorkspace {
+        z,
+        scale,
+        deg,
+        wv,
+        nk,
+        indptr,
+        next,
+        cols,
+        vals,
+        ..
+    } = ws;
+    prepare_into(g, indptr, next, cols, vals, deg);
+    weight_values_into(&g.labels, g.k, nk, wv);
+    z.nrows = g.n;
+    z.ncols = g.k;
+    reset_f64(&mut z.data, g.n * g.k);
+    let use_scale = opts.laplacian;
+    if use_scale {
+        let bump = if opts.diagonal { 1.0 } else { 0.0 };
+        scale.clear();
+        scale.extend(deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
+    }
+    let ctx = AccumCtx {
+        indptr: &indptr[..],
+        cols: &cols[..],
+        vals: &vals[..],
+        labels: &g.labels[..],
+        wv: &wv[..],
+        k: g.k,
+    };
+    accumulate_rows(
+        &ctx,
+        opts,
+        0,
+        g.n,
+        if use_scale { Some(&scale[..]) } else { None },
+        &mut z.data,
+    );
+}
+
 impl PreparedGraph {
     /// Build the reusable structure: O(N + E), done once.
     pub fn new(g: &Graph) -> PreparedGraph {
-        let n = g.n;
-        let m = g.num_directed();
-        let mut indptr = vec![0usize; n + 1];
-        let mut deg = vec![0.0f64; n];
-        for i in 0..g.num_edges() {
-            let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
-            indptr[a + 1] += 1;
-            deg[a] += w;
-            if a != b {
-                indptr[b + 1] += 1;
-                deg[b] += w;
-            }
-        }
-        for i in 0..n {
-            indptr[i + 1] += indptr[i];
-        }
-        let mut cols = vec![0u32; m];
-        let mut vals = vec![0.0f64; m];
-        let mut next = indptr.clone();
-        for i in 0..g.num_edges() {
-            let (a, b, w) = (g.src[i] as usize, g.dst[i] as usize, g.w[i]);
-            cols[next[a]] = g.dst[i];
-            vals[next[a]] = w;
-            next[a] += 1;
-            if a != b {
-                cols[next[b]] = g.src[i];
-                vals[next[b]] = w;
-                next[b] += 1;
-            }
-        }
+        let mut indptr = Vec::new();
+        let mut next = Vec::new();
+        let mut cols = Vec::new();
+        let mut vals = Vec::new();
+        let mut deg = Vec::new();
+        prepare_into(g, &mut indptr, &mut next, &mut cols, &mut vals, &mut deg);
         PreparedGraph {
-            n,
+            n: g.n,
             k: g.k,
             indptr,
             cols,
@@ -245,25 +392,58 @@ impl PreparedGraph {
     }
 
     /// Embed under any option combo: one pass over the prepared structure.
-    /// Delegates to the same per-row accumulation routine the row-parallel
-    /// engine runs per chunk (`embed_rows` in `gee::parallel`), so serial
-    /// and parallel embeds share one implementation and stay bitwise-equal.
+    /// Delegates to [`embed_into`](Self::embed_into) with a fresh
+    /// workspace; repeated-embed callers should hold their own
+    /// [`EmbedWorkspace`] and call `embed_into` directly for the
+    /// allocation-free path.
     pub fn embed(&self, opts: &GeeOptions) -> Dense {
-        let (n, k) = (self.n, self.k);
-        let scale: Option<Vec<f64>> = if opts.laplacian {
+        let mut ws = EmbedWorkspace::new();
+        self.embed_into(opts, &mut ws);
+        ws.take_z()
+    }
+
+    /// Embed into `ws.z`, borrowing every scratch buffer from `ws`.
+    /// **Zero heap allocations** once `ws` is warm at this shape — the
+    /// steady-state serving path.
+    pub fn embed_into(&self, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
+        ws.reset_z(self.n, self.k);
+        let use_scale = opts.laplacian;
+        if use_scale {
             let bump = if opts.diagonal { 1.0 } else { 0.0 };
-            Some(
-                self.deg
-                    .iter()
-                    .map(|&d| crate::sparse::ops::safe_recip_sqrt(d + bump))
-                    .collect(),
-            )
-        } else {
-            None
+            ws.scale.clear();
+            ws.scale
+                .extend(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
+        }
+        let EmbedWorkspace { z, scale, .. } = ws;
+        self.embed_rows(
+            opts,
+            0,
+            self.n,
+            if use_scale { Some(&scale[..]) } else { None },
+            &mut z.data,
+        );
+    }
+
+    /// Accumulate rows `r0..r1` of Z into `out` — thin wrapper over
+    /// [`accumulate_rows`] viewing this prepared structure. The
+    /// row-parallel engine calls this per chunk.
+    pub(crate) fn embed_rows(
+        &self,
+        opts: &GeeOptions,
+        r0: usize,
+        r1: usize,
+        scale: Option<&[f64]>,
+        out: &mut [f64],
+    ) {
+        let ctx = AccumCtx {
+            indptr: &self.indptr[..],
+            cols: &self.cols[..],
+            vals: &self.vals[..],
+            labels: &self.labels[..],
+            wv: &self.wv[..],
+            k: self.k,
         };
-        let mut z = Dense::zeros(n, k);
-        self.embed_rows(opts, 0, n, scale.as_deref(), &mut z.data);
-        z
+        accumulate_rows(&ctx, opts, r0, r1, scale, out);
     }
 }
 
@@ -357,6 +537,52 @@ mod tests {
                 "prepared mismatch at {opts:?}"
             );
         }
+    }
+
+    #[test]
+    fn pooled_paths_bitwise_match_allocating_paths() {
+        let mut g = random_graph(47, 60, 250, 4);
+        g.add_edge(9, 9, 1.5);
+        g.labels[5] = -1;
+        let prepared = SparseGee::prepare(&g);
+        let mut ws = EmbedWorkspace::new();
+        for opts in GeeOptions::table_order() {
+            let fresh = prepared.embed(&opts);
+            prepared.embed_into(&opts, &mut ws);
+            assert_eq!(ws.z.data, fresh.data, "embed_into drifted at {opts:?}");
+            embed_fused_into(&g, &opts, &mut ws);
+            assert_eq!(ws.z.data, fresh.data, "fused_into drifted at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn warm_workspace_keeps_capacity_across_embeds() {
+        let g = random_graph(48, 80, 400, 3);
+        let prepared = SparseGee::prepare(&g);
+        let mut ws = EmbedWorkspace::new();
+        // warm both pooled paths once
+        prepared.embed_into(&GeeOptions::ALL, &mut ws);
+        embed_fused_into(&g, &GeeOptions::ALL, &mut ws);
+        let caps = (
+            ws.z.data.capacity(),
+            ws.scale.capacity(),
+            ws.cols.capacity(),
+            ws.vals.capacity(),
+        );
+        for opts in GeeOptions::table_order() {
+            prepared.embed_into(&opts, &mut ws);
+            embed_fused_into(&g, &opts, &mut ws);
+        }
+        assert_eq!(
+            (
+                ws.z.data.capacity(),
+                ws.scale.capacity(),
+                ws.cols.capacity(),
+                ws.vals.capacity(),
+            ),
+            caps,
+            "steady-state embeds must not grow any buffer"
+        );
     }
 
     #[test]

@@ -46,16 +46,17 @@ pub fn weight_matrix_dok(labels: &[i32], k: usize) -> Dok {
 pub fn weight_matrix_csr_direct(labels: &[i32], k: usize) -> Csr {
     let n_k = class_counts(labels, k);
     let n = labels.len();
+    crate::sparse::index::to_index(n, "vertices");
     let mut indptr = Vec::with_capacity(n + 1);
     let mut indices = Vec::with_capacity(n);
     let mut data = Vec::with_capacity(n);
-    indptr.push(0);
+    indptr.push(0u32);
     for &l in labels {
         if l >= 0 && n_k[l as usize] > 0.0 {
             indices.push(l as u32);
             data.push(1.0 / n_k[l as usize]);
         }
-        indptr.push(indices.len());
+        indptr.push(indices.len() as u32);
     }
     Csr { nrows: n, ncols: k, indptr, indices, data }
 }
@@ -63,17 +64,37 @@ pub fn weight_matrix_csr_direct(labels: &[i32], k: usize) -> Csr {
 /// Per-vertex weight value `1/n_{y_j}` (0 for unlabeled) — the edge-list
 /// GEE variant consumes W in this collapsed form.
 pub fn weight_values(labels: &[i32], k: usize) -> Vec<f64> {
-    let n_k = class_counts(labels, k);
-    labels
-        .iter()
-        .map(|&l| {
-            if l >= 0 && n_k[l as usize] > 0.0 {
-                1.0 / n_k[l as usize]
-            } else {
-                0.0
-            }
-        })
-        .collect()
+    let mut n_k = Vec::new();
+    let mut wv = Vec::new();
+    weight_values_into(labels, k, &mut n_k, &mut wv);
+    wv
+}
+
+/// Fill `n_k` with per-class counts, reusing its capacity — the pooled
+/// twin of [`class_counts`] (zero allocations once the buffer is warm).
+pub fn class_counts_into(labels: &[i32], k: usize, n_k: &mut Vec<f64>) {
+    n_k.clear();
+    n_k.resize(k, 0.0);
+    for &l in labels {
+        if l >= 0 {
+            n_k[l as usize] += 1.0;
+        }
+    }
+}
+
+/// Fill `wv` with the per-vertex `1/n_{y_j}` weights, using `n_k` as
+/// class-count scratch — the pooled twin of [`weight_values`]. Both
+/// buffers reuse their capacity: zero allocations once warm.
+pub fn weight_values_into(labels: &[i32], k: usize, n_k: &mut Vec<f64>, wv: &mut Vec<f64>) {
+    class_counts_into(labels, k, n_k);
+    wv.clear();
+    wv.extend(labels.iter().map(|&l| {
+        if l >= 0 && n_k[l as usize] > 0.0 {
+            1.0 / n_k[l as usize]
+        } else {
+            0.0
+        }
+    }));
 }
 
 #[cfg(test)]
@@ -124,6 +145,21 @@ mod tests {
                 assert_eq!(vals[j], 0.0);
             }
         }
+    }
+
+    #[test]
+    fn into_variants_match_and_reuse_capacity() {
+        let mut n_k = Vec::new();
+        let mut wv = Vec::new();
+        weight_values_into(LABELS, 3, &mut n_k, &mut wv);
+        assert_eq!(n_k, class_counts(LABELS, 3));
+        assert_eq!(wv, weight_values(LABELS, 3));
+        // second fill with the same shapes must not grow the buffers
+        let (cap_nk, cap_wv) = (n_k.capacity(), wv.capacity());
+        weight_values_into(LABELS, 3, &mut n_k, &mut wv);
+        assert_eq!(n_k.capacity(), cap_nk);
+        assert_eq!(wv.capacity(), cap_wv);
+        assert_eq!(wv, weight_values(LABELS, 3));
     }
 
     #[test]

@@ -1,0 +1,233 @@
+//! Pooled embedding workspaces — the allocation-free hot path.
+//!
+//! Every engine's `*_into` entry point borrows an [`EmbedWorkspace`]
+//! instead of allocating its accumulator (Z), degree/scale vectors,
+//! weight vectors, prepared-graph buffers and per-thread partials from
+//! scratch. Buffers are recycled with `clear()` + `resize()` so capacity
+//! is kept between calls: after one warm-up embed at a given shape, a
+//! steady stream of same-shape requests performs **zero heap
+//! allocations** (pinned by the counting-allocator test in
+//! `rust/tests/alloc_zero.rs`).
+//!
+//! [`WorkspacePool`] shares warmed workspaces between the coordinator's
+//! worker threads: each worker checks one out for its lifetime and the
+//! buffers return to the pool on drop, so steady-state serving reuses
+//! capacity across the whole service instead of re-warming per thread
+//! restart.
+
+use std::sync::{Arc, Mutex};
+
+use crate::sparse::Dense;
+
+/// Reusable buffers for one embedding computation. All fields keep their
+/// capacity across calls; engines only ever `clear`/`resize` them.
+#[derive(Debug)]
+pub struct EmbedWorkspace {
+    /// Output embedding of the most recent `*_into` call (N×K).
+    pub z: Dense,
+    /// Laplacian scale `d^-1/2` (length n when laplacian is on).
+    pub(crate) scale: Vec<f64>,
+    /// Weighted degrees (length n).
+    pub(crate) deg: Vec<f64>,
+    /// Per-vertex `1/n_{y_j}` weights (length n).
+    pub(crate) wv: Vec<f64>,
+    /// Per-class counts scratch (length k).
+    pub(crate) nk: Vec<f64>,
+    /// Prepared-structure row pointers (length n+1, u32-compacted).
+    pub(crate) indptr: Vec<u32>,
+    /// Counting-sort write cursors (length n+1).
+    pub(crate) next: Vec<u32>,
+    /// Prepared-structure column ids (length m directed).
+    pub(crate) cols: Vec<u32>,
+    /// Prepared-structure edge weights (length m directed).
+    pub(crate) vals: Vec<f64>,
+    /// Per-thread partial Z buffers for the edge-parallel engine.
+    pub(crate) partials: Vec<Vec<f64>>,
+}
+
+impl EmbedWorkspace {
+    /// A fresh workspace holding no capacity. The first embed at a given
+    /// shape warms it; subsequent same-shape embeds are allocation-free.
+    pub fn new() -> Self {
+        EmbedWorkspace {
+            z: Dense::zeros(0, 0),
+            scale: Vec::new(),
+            deg: Vec::new(),
+            wv: Vec::new(),
+            nk: Vec::new(),
+            indptr: Vec::new(),
+            next: Vec::new(),
+            cols: Vec::new(),
+            vals: Vec::new(),
+            partials: Vec::new(),
+        }
+    }
+
+    /// Shape `z` to n×k and zero it, reusing capacity.
+    pub(crate) fn reset_z(&mut self, n: usize, k: usize) {
+        self.z.nrows = n;
+        self.z.ncols = k;
+        reset_f64(&mut self.z.data, n * k);
+    }
+
+    /// Move the result out, leaving an empty (capacity-free) Z behind.
+    /// The scratch buffers stay warm; only the Z allocation is given up —
+    /// it becomes the caller's response buffer, which has to be an owned
+    /// allocation anyway.
+    pub fn take_z(&mut self) -> Dense {
+        std::mem::replace(&mut self.z, Dense::zeros(0, 0))
+    }
+
+    /// Bytes of capacity currently held across all buffers (observability
+    /// for pool sizing).
+    pub fn capacity_bytes(&self) -> usize {
+        self.z.data.capacity() * 8
+            + (self.scale.capacity() + self.deg.capacity() + self.wv.capacity()) * 8
+            + (self.nk.capacity() + self.vals.capacity()) * 8
+            + (self.indptr.capacity() + self.next.capacity() + self.cols.capacity()) * 4
+            + self.partials.iter().map(|p| p.capacity() * 8).sum::<usize>()
+    }
+}
+
+impl Default for EmbedWorkspace {
+    fn default() -> Self {
+        EmbedWorkspace::new()
+    }
+}
+
+/// Zero-fill `buf` to `len`, reusing capacity (allocates only on growth).
+#[inline]
+pub(crate) fn reset_f64(buf: &mut Vec<f64>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0.0);
+}
+
+/// Zero-fill `buf` to `len`, reusing capacity (allocates only on growth).
+#[inline]
+pub(crate) fn reset_u32(buf: &mut Vec<u32>, len: usize) {
+    buf.clear();
+    buf.resize(len, 0);
+}
+
+/// A shared pool of warmed [`EmbedWorkspace`]s. Checkout pops a warmed
+/// workspace (or builds a cold one); the guard returns it on drop.
+#[derive(Debug, Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<EmbedWorkspace>>,
+}
+
+impl WorkspacePool {
+    pub fn new() -> Arc<WorkspacePool> {
+        Arc::new(WorkspacePool::default())
+    }
+
+    /// Borrow a workspace; it returns to the pool when the guard drops.
+    pub fn checkout(self: &Arc<Self>) -> PooledWorkspace {
+        let ws = self
+            .free
+            .lock()
+            .expect("workspace pool lock poisoned")
+            .pop()
+            .unwrap_or_default();
+        PooledWorkspace { ws: Some(ws), pool: Arc::clone(self) }
+    }
+
+    /// Number of idle workspaces currently pooled.
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("workspace pool lock poisoned").len()
+    }
+}
+
+/// RAII guard over a checked-out workspace.
+#[derive(Debug)]
+pub struct PooledWorkspace {
+    ws: Option<EmbedWorkspace>,
+    pool: Arc<WorkspacePool>,
+}
+
+impl std::ops::Deref for PooledWorkspace {
+    type Target = EmbedWorkspace;
+    fn deref(&self) -> &EmbedWorkspace {
+        self.ws.as_ref().expect("workspace present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledWorkspace {
+    fn deref_mut(&mut self) -> &mut EmbedWorkspace {
+        self.ws.as_mut().expect("workspace present until drop")
+    }
+}
+
+impl Drop for PooledWorkspace {
+    fn drop(&mut self) {
+        if let Some(ws) = self.ws.take() {
+            self.pool
+                .free
+                .lock()
+                .expect("workspace pool lock poisoned")
+                .push(ws);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reset_reuses_capacity() {
+        let mut ws = EmbedWorkspace::new();
+        ws.reset_z(10, 4);
+        assert_eq!(ws.z.data.len(), 40);
+        assert_eq!((ws.z.nrows, ws.z.ncols), (10, 4));
+        let cap = ws.z.data.capacity();
+        ws.z.data[0] = 5.0;
+        ws.reset_z(10, 4);
+        assert_eq!(ws.z.data[0], 0.0, "reset must zero the buffer");
+        assert_eq!(ws.z.data.capacity(), cap, "same shape must not realloc");
+        // shrinking keeps capacity too
+        ws.reset_z(2, 2);
+        assert_eq!(ws.z.data.len(), 4);
+        assert_eq!(ws.z.data.capacity(), cap);
+    }
+
+    #[test]
+    fn take_z_leaves_workspace_usable() {
+        let mut ws = EmbedWorkspace::new();
+        ws.reset_z(3, 2);
+        ws.z.data[5] = 1.5;
+        let z = ws.take_z();
+        assert_eq!((z.nrows, z.ncols), (3, 2));
+        assert_eq!(z.data[5], 1.5);
+        assert_eq!(ws.z.data.len(), 0);
+        ws.reset_z(4, 1);
+        assert_eq!(ws.z.data.len(), 4);
+    }
+
+    #[test]
+    fn pool_roundtrip_keeps_warm_buffers() {
+        let pool = WorkspacePool::new();
+        assert_eq!(pool.idle(), 0);
+        let cap = {
+            let mut ws = pool.checkout();
+            ws.reset_z(100, 8);
+            ws.z.data.capacity()
+        };
+        assert_eq!(pool.idle(), 1, "drop must return the workspace");
+        let ws2 = pool.checkout();
+        assert_eq!(pool.idle(), 0);
+        assert!(ws2.z.data.capacity() >= cap, "warm capacity must survive");
+        drop(ws2);
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn pool_grows_under_concurrent_checkout() {
+        let pool = WorkspacePool::new();
+        let a = pool.checkout();
+        let b = pool.checkout();
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+}

@@ -148,7 +148,9 @@ fn cmd_embed(args: &Args) -> Result<()> {
         rt.embed(&g, &opts)?
     } else {
         let engine = Engine::from_name(args.get("engine").unwrap_or("sparse"))
-            .context("--engine must be dense|edgelist|sparse|sparse-fast|sparse-par[:T]")?;
+            .context(
+                "--engine must be dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]",
+            )?;
         engine.embed(&g, &opts)?
     };
     let dt = t0.elapsed();
@@ -283,7 +285,7 @@ fn usage() -> &'static str {
        info         [--artifacts DIR]\n\
        generate     --dataset NAME | --sbm N   --out STEM [--seed S]\n\
        embed        --dataset NAME | --sbm N | --input STEM\n\
-                    [--engine dense|edgelist|sparse|sparse-fast|sparse-par[:T]]\n\
+                    [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]]\n\
                     [--options ldc] [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\

@@ -4,23 +4,35 @@
 //! `indices` (column ids per entry), `data` (values), entries of row `r`
 //! living in `indptr[r]..indptr[r+1]`, sorted by column within each row.
 //!
+//! Both `indptr` and `indices` are **u32** (see [`super::index`]): the
+//! compute loops are memory-bandwidth bound, and 32-bit indices halve the
+//! index bytes streamed per nonzero. Constructors check the `u32::MAX`
+//! entry cap instead of silently truncating.
+//!
 //! Compute kernels implemented here:
 //! * `spmm_dense`  — CSR × dense (the `A_s · W` product with W as N×K
 //!   dense; the hot path when K is small),
+//! * `spmm_dense_par` — the same product, row-parallel over nnz-balanced
+//!   chunks (bitwise-identical to `spmm_dense` for any thread count),
 //! * `spmm_csr`    — CSR × CSR via Gustavson's algorithm (the literal
 //!   `A_s · W_s` of the paper where W is also sparse),
 //! * `spmv`, `row_sums`, `scale_sym`, `add_diag` — the Laplacian /
 //!   diagonal-augmentation building blocks.
 
+use std::thread;
+
 use super::coo::Coo;
 use super::dense::Dense;
+use super::index::to_index;
+use super::partition::nnz_chunks;
 
-/// Compressed-sparse-row matrix, f64 values, u32 column indices.
+/// Compressed-sparse-row matrix, f64 values, u32 row pointers and column
+/// indices.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Csr {
     pub nrows: usize,
     pub ncols: usize,
-    pub indptr: Vec<usize>,
+    pub indptr: Vec<u32>,
     pub indices: Vec<u32>,
     pub data: Vec<f64>,
 }
@@ -39,11 +51,12 @@ impl Csr {
 
     /// Identity.
     pub fn eye(n: usize) -> Self {
+        let nu = to_index(n, "rows");
         Csr {
             nrows: n,
             ncols: n,
-            indptr: (0..=n).collect(),
-            indices: (0..n as u32).collect(),
+            indptr: (0..=nu).collect(),
+            indices: (0..nu).collect(),
             data: vec![1.0; n],
         }
     }
@@ -51,16 +64,17 @@ impl Csr {
     /// Diagonal matrix from a vector (zeros skipped).
     pub fn from_diag(diag: &[f64]) -> Self {
         let n = diag.len();
+        to_index(n, "rows");
         let mut indptr = Vec::with_capacity(n + 1);
         let mut indices = Vec::new();
         let mut data = Vec::new();
-        indptr.push(0);
+        indptr.push(0u32);
         for (i, &v) in diag.iter().enumerate() {
             if v != 0.0 {
                 indices.push(i as u32);
                 data.push(v);
             }
-            indptr.push(indices.len());
+            indptr.push(indices.len() as u32);
         }
         Csr { nrows: n, ncols: n, indptr, indices, data }
     }
@@ -71,8 +85,12 @@ impl Csr {
     /// input).
     pub fn from_coo(coo: &Coo) -> Self {
         let nnz = coo.nnz();
-        // counting sort by row
-        let mut counts = vec![0usize; coo.nrows + 1];
+        // fail fast (with context) before any allocation if the entry
+        // count cannot be indexed in 32 bits
+        to_index(nnz, "stored entries");
+        // counting sort by row — u32 counters, the same width the final
+        // indptr uses, so the sort streams half the index bytes
+        let mut counts = vec![0u32; coo.nrows + 1];
         for &r in &coo.rows {
             counts[r as usize + 1] += 1;
         }
@@ -85,7 +103,7 @@ impl Csr {
             let mut next = counts.clone();
             for i in 0..nnz {
                 let r = coo.rows[i] as usize;
-                let slot = next[r];
+                let slot = next[r] as usize;
                 next[r] += 1;
                 col_tmp[slot] = coo.cols[i];
                 val_tmp[slot] = coo.vals[i];
@@ -95,10 +113,10 @@ impl Csr {
         let mut indptr = Vec::with_capacity(coo.nrows + 1);
         let mut indices = Vec::with_capacity(nnz);
         let mut data = Vec::with_capacity(nnz);
-        indptr.push(0);
+        indptr.push(0u32);
         let mut scratch: Vec<(u32, f64)> = Vec::new();
         for r in 0..coo.nrows {
-            let (lo, hi) = (counts[r], counts[r + 1]);
+            let (lo, hi) = (counts[r] as usize, counts[r + 1] as usize);
             scratch.clear();
             scratch.extend(
                 col_tmp[lo..hi].iter().copied().zip(val_tmp[lo..hi].iter().copied()),
@@ -106,7 +124,7 @@ impl Csr {
             scratch.sort_unstable_by_key(|&(c, _)| c);
             for &(c, v) in scratch.iter() {
                 if let Some(last) = indices.last() {
-                    if *last == c && data.len() > indptr[r] {
+                    if *last == c && data.len() > indptr[r] as usize {
                         *data.last_mut().unwrap() += v;
                         continue;
                     }
@@ -114,7 +132,7 @@ impl Csr {
                 indices.push(c);
                 data.push(v);
             }
-            indptr.push(indices.len());
+            indptr.push(indices.len() as u32);
         }
         Csr { nrows: coo.nrows, ncols: coo.ncols, indptr, indices, data }
     }
@@ -122,18 +140,19 @@ impl Csr {
     /// Build from a COO already sorted by (row, col) with no duplicates —
     /// single O(nnz) pass, zero scratch. Ablation partner of `from_coo`.
     pub fn from_coo_sorted(coo: &Coo) -> Self {
+        to_index(coo.nnz(), "stored entries");
         let mut indptr = Vec::with_capacity(coo.nrows + 1);
-        indptr.push(0);
+        indptr.push(0u32);
         let mut r = 0usize;
         for (i, &row) in coo.rows.iter().enumerate() {
             debug_assert!(row as usize >= r, "input not row-sorted");
             while r < row as usize {
-                indptr.push(i);
+                indptr.push(i as u32);
                 r += 1;
             }
         }
         while r < coo.nrows {
-            indptr.push(coo.nnz());
+            indptr.push(coo.nnz() as u32);
             r += 1;
         }
         Csr {
@@ -153,7 +172,7 @@ impl Csr {
     /// Entries of row `r` as (columns, values) slices.
     #[inline]
     pub fn row(&self, r: usize) -> (&[u32], &[f64]) {
-        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
         (&self.indices[lo..hi], &self.data[lo..hi])
     }
 
@@ -193,9 +212,19 @@ impl Csr {
         assert_eq!(self.ncols, b.nrows);
         let k = b.ncols;
         let mut out = Dense::zeros(self.nrows, k);
-        for r in 0..self.nrows {
+        self.spmm_dense_rows(b, 0, self.nrows, &mut out.data);
+        out
+    }
+
+    /// Accumulate rows `r0..r1` of the product into `out` (their
+    /// contiguous slice of the output buffer). Shared by the serial and
+    /// row-parallel SpMM so the two cannot drift.
+    fn spmm_dense_rows(&self, b: &Dense, r0: usize, r1: usize, out: &mut [f64]) {
+        let k = b.ncols;
+        debug_assert_eq!(out.len(), (r1 - r0) * k);
+        for r in r0..r1 {
             let (cols, vals) = self.row(r);
-            let orow = &mut out.data[r * k..(r + 1) * k];
+            let orow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
             for (&c, &v) in cols.iter().zip(vals.iter()) {
                 let brow = &b.data[c as usize * k..(c as usize + 1) * k];
                 for (o, &bb) in orow.iter_mut().zip(brow.iter()) {
@@ -203,6 +232,36 @@ impl Csr {
                 }
             }
         }
+    }
+
+    /// Row-parallel CSR × dense over nnz-balanced row chunks. Each thread
+    /// owns a disjoint slice of the output via `split_at_mut` (no locks,
+    /// no atomics) and runs the same sequential per-row accumulation as
+    /// [`spmm_dense`](Self::spmm_dense), so the result is
+    /// **bitwise-identical** to the serial product for any thread count.
+    /// `threads == 0` uses the machine's available parallelism.
+    pub fn spmm_dense_par(&self, b: &Dense, threads: usize) -> Dense {
+        assert_eq!(self.ncols, b.nrows);
+        let t = super::partition::resolve_threads(threads).min(self.nrows.max(1));
+        if t <= 1 {
+            return self.spmm_dense(b);
+        }
+        let k = b.ncols;
+        let mut out = Dense::zeros(self.nrows, k);
+        let bounds = nnz_chunks(&self.indptr, t);
+        thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut out.data;
+            for w in bounds.windows(2) {
+                let (r0, r1) = (w[0], w[1]);
+                let (chunk, next) =
+                    std::mem::take(&mut rest).split_at_mut((r1 - r0) * k);
+                rest = next;
+                if r0 == r1 {
+                    continue;
+                }
+                s.spawn(move || self.spmm_dense_rows(b, r0, r1, chunk));
+            }
+        });
         out
     }
 
@@ -220,7 +279,7 @@ impl Csr {
         let mut indptr = Vec::with_capacity(self.nrows + 1);
         let mut indices: Vec<u32> = Vec::new();
         let mut data: Vec<f64> = Vec::new();
-        indptr.push(0);
+        indptr.push(0u32);
         let mut acc = vec![0.0f64; b.ncols];
         // usize::MAX: no row has touched this column yet (rows are < nrows)
         let mut mark = vec![usize::MAX; b.ncols];
@@ -247,7 +306,7 @@ impl Csr {
                 acc[c as usize] = 0.0;
             }
             touched.clear();
-            indptr.push(indices.len());
+            indptr.push(to_index(indices.len(), "stored entries"));
         }
         Csr { nrows: self.nrows, ncols: b.ncols, indptr, indices, data }
     }
@@ -257,10 +316,11 @@ impl Csr {
     pub fn add_diag(&self, d: &[f64]) -> Csr {
         assert_eq!(self.nrows, self.ncols);
         assert_eq!(d.len(), self.nrows);
+        to_index(self.nnz() + self.nrows, "stored entries");
         let mut indptr = Vec::with_capacity(self.nrows + 1);
         let mut indices = Vec::with_capacity(self.nnz() + self.nrows);
         let mut data = Vec::with_capacity(self.nnz() + self.nrows);
-        indptr.push(0);
+        indptr.push(0u32);
         for r in 0..self.nrows {
             let (cols, vals) = self.row(r);
             let mut placed = d[r] == 0.0; // nothing to place if zero
@@ -284,7 +344,7 @@ impl Csr {
                 indices.push(r as u32);
                 data.push(d[r]);
             }
-            indptr.push(indices.len());
+            indptr.push(indices.len() as u32);
         }
         Csr { nrows: self.nrows, ncols: self.ncols, indptr, indices, data }
     }
@@ -296,7 +356,7 @@ impl Csr {
         assert_eq!(s.len(), self.ncols);
         for r in 0..self.nrows {
             let sr = s[r];
-            let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+            let (lo, hi) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
             for i in lo..hi {
                 self.data[i] *= sr * s[self.indices[i] as usize];
             }
@@ -305,7 +365,8 @@ impl Csr {
 
     /// Transpose via counting sort on columns — O(nnz + ncols).
     pub fn transpose(&self) -> Csr {
-        let mut counts = vec![0usize; self.ncols + 1];
+        to_index(self.nnz(), "stored entries");
+        let mut counts = vec![0u32; self.ncols + 1];
         for &c in &self.indices {
             counts[c as usize + 1] += 1;
         }
@@ -319,7 +380,7 @@ impl Csr {
         for r in 0..self.nrows {
             let (cols, vals) = self.row(r);
             for (&c, &v) in cols.iter().zip(vals.iter()) {
-                let slot = next[c as usize];
+                let slot = next[c as usize] as usize;
                 next[c as usize] += 1;
                 indices[slot] = r as u32;
                 data[slot] = v;
@@ -358,10 +419,11 @@ impl Csr {
         d
     }
 
-    /// Bytes of storage held (the paper's CSR-vs-edge-list space argument:
-    /// 3E for triplets vs E·(4+8) + (R+1)·8 here).
+    /// Bytes of storage held (the paper's CSR-vs-edge-list space argument,
+    /// sharpened by u32 compaction: E·(4+8) + (R+1)·4 here vs 3E·8 for
+    /// triplets).
     pub fn storage_bytes(&self) -> usize {
-        self.indptr.len() * std::mem::size_of::<usize>()
+        self.indptr.len() * std::mem::size_of::<u32>()
             + self.indices.len() * std::mem::size_of::<u32>()
             + self.data.len() * std::mem::size_of::<f64>()
     }
@@ -441,6 +503,41 @@ mod tests {
         let got = a.spmm_dense(&b);
         let expect = a.to_dense().matmul(&b);
         assert!(got.max_abs_diff(&expect) < 1e-12);
+    }
+
+    #[test]
+    fn spmm_dense_par_bitwise_matches_serial() {
+        let mut rng = Rng::new(9);
+        let mut coo = Coo::new(200, 150);
+        for _ in 0..3_000 {
+            coo.push(rng.below(200) as u32, rng.below(150) as u32, rng.f64() - 0.5);
+        }
+        let a = Csr::from_coo(&coo);
+        let b = Dense::from_vec(
+            150,
+            4,
+            (0..600).map(|i| (i as f64).sin()).collect(),
+        );
+        let serial = a.spmm_dense(&b);
+        for t in [0usize, 1, 2, 3, 8, 64] {
+            let par = a.spmm_dense_par(&b, t);
+            assert_eq!(par.data, serial.data, "t={t} not bitwise-identical");
+        }
+    }
+
+    #[test]
+    fn spmm_dense_par_degenerate_shapes() {
+        // empty matrix
+        let a = Csr::zeros(3, 3);
+        let b = Dense::zeros(3, 2);
+        let z = a.spmm_dense_par(&b, 4);
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        // single row
+        let coo = Coo::from_triplets(1, 2, &[0, 0], &[0, 1], &[1.0, 2.0]);
+        let a = Csr::from_coo(&coo);
+        let b = Dense::from_vec(2, 1, vec![3.0, 4.0]);
+        let z = a.spmm_dense_par(&b, 8);
+        assert_eq!(z.data, vec![11.0]);
     }
 
     #[test]
@@ -562,7 +659,8 @@ mod tests {
 
     #[test]
     fn storage_bytes_counts() {
+        // u32 row pointers: (R+1)·4 + E·4 + E·8
         let m = fig1_matrix();
-        assert_eq!(m.storage_bytes(), 5 * 8 + 6 * 4 + 6 * 8);
+        assert_eq!(m.storage_bytes(), 5 * 4 + 6 * 4 + 6 * 8);
     }
 }

@@ -1,0 +1,86 @@
+//! u32 index compaction — the §Perf memory-traffic half of the sparse
+//! story.
+//!
+//! Every CSR row pointer and column index in the crate is stored as
+//! `u32`, not `usize`: the embed and SpMM loops are memory-bandwidth
+//! bound (Edge-Parallel GEE, arXiv:2402.04403), so halving index width
+//! halves the index bytes streamed per nonzero. The trade is a hard cap
+//! of `u32::MAX` vertices / stored entries per matrix — far beyond any
+//! target graph (the paper's largest real dataset is ~5M edges) but
+//! checked, never assumed:
+//!
+//! * [`try_index`] is the fallible conversion for API boundaries (the
+//!   engine front-end rejects oversize graphs with a real error);
+//! * [`to_index`] is the infallible-by-contract conversion used inside
+//!   constructors that run after the boundary check — it still panics
+//!   with a descriptive message rather than silently truncating.
+
+use std::fmt;
+
+/// Largest vertex count / entry count a u32-indexed structure can hold.
+pub const MAX_INDEX: usize = u32::MAX as usize;
+
+/// A graph or matrix dimension exceeded the u32 index space.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IndexOverflow {
+    /// What overflowed ("vertices", "stored entries", ...).
+    pub what: &'static str,
+    /// The offending value.
+    pub value: usize,
+}
+
+impl fmt::Display for IndexOverflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} count {} exceeds the u32 index space ({}); \
+             this build compacts all sparse indices to 32 bits",
+            self.what, self.value, MAX_INDEX
+        )
+    }
+}
+
+impl std::error::Error for IndexOverflow {}
+
+/// Checked `usize -> u32` for index values. Errors instead of truncating.
+#[inline]
+pub fn try_index(value: usize, what: &'static str) -> Result<u32, IndexOverflow> {
+    u32::try_from(value).map_err(|_| IndexOverflow { what, value })
+}
+
+/// `usize -> u32` that panics with a descriptive message on overflow.
+/// Used inside constructors; API boundaries use [`try_index`] first.
+#[inline]
+pub fn to_index(value: usize, what: &'static str) -> u32 {
+    match try_index(value, what) {
+        Ok(v) => v,
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_convert() {
+        assert_eq!(try_index(0, "x"), Ok(0));
+        assert_eq!(try_index(MAX_INDEX, "x"), Ok(u32::MAX));
+        assert_eq!(to_index(7, "x"), 7);
+    }
+
+    #[test]
+    fn overflow_is_an_error_with_context() {
+        let e = try_index(MAX_INDEX + 1, "vertices").unwrap_err();
+        assert_eq!(e.what, "vertices");
+        assert_eq!(e.value, MAX_INDEX + 1);
+        assert!(e.to_string().contains("vertices"));
+        assert!(e.to_string().contains("u32"));
+    }
+
+    #[test]
+    #[should_panic(expected = "stored entries")]
+    fn to_index_panics_with_message() {
+        to_index(MAX_INDEX + 1, "stored entries");
+    }
+}

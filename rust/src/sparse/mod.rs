@@ -6,17 +6,22 @@
 //! * [`dok::Dok`] — dictionary-of-keys (random-access construction; the
 //!   paper builds W and the diagonal matrices in DOK, then converts)
 //! * [`csr::Csr`] — compressed sparse row (all compute: SpMV, SpMM,
-//!   diagonal add, symmetric scaling, transpose)
+//!   diagonal add, symmetric scaling, transpose), u32-compacted indices
 //! * [`dense::Dense`] — dense baseline substrate + embedding container
 //! * [`ops`] — shared row/vector kernels (norms, safe division, axpy)
+//! * [`index`] — checked usize→u32 index conversion (the compaction cap)
+//! * [`partition`] — nnz-balanced row chunking for row-parallel kernels
 
 pub mod coo;
 pub mod csr;
 pub mod dense;
 pub mod dok;
+pub mod index;
 pub mod ops;
+pub mod partition;
 
 pub use coo::Coo;
 pub use csr::Csr;
 pub use dense::Dense;
 pub use dok::Dok;
+pub use index::{IndexOverflow, MAX_INDEX};

@@ -1,0 +1,100 @@
+//! Row-range partitioning shared by every row-parallel kernel: the
+//! nnz-balanced contiguous chunking introduced for the row-parallel GEE
+//! engine (`gee::parallel`), reused by `Csr::spmm_dense_par` and the
+//! parallel count-merge. Balancing by nonzero count (not row count)
+//! keeps skewed-degree graphs (Chung-Lu hubs) from serializing on one
+//! thread; a hub row cannot be split, only isolated in its own chunk.
+
+/// Resolve a requested worker-thread count against the machine: `0`
+/// means "use all available parallelism", explicit requests are capped
+/// at the core count (more threads never help these memory-bound
+/// kernels, and the cap bounds oversubscription when several service
+/// workers run intra-op embeds concurrently). One policy, shared by
+/// every parallel lane.
+pub fn resolve_threads(requested: usize) -> usize {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    if requested > 0 {
+        requested.min(avail)
+    } else {
+        avail
+    }
+}
+
+/// Pick `chunks` contiguous row ranges with roughly equal nonzero counts.
+/// Returns `chunks + 1` non-decreasing boundaries from 0 to n.
+/// `indptr` is a CSR row-pointer array (length n+1, u32-compacted).
+pub fn nnz_chunks(indptr: &[u32], chunks: usize) -> Vec<usize> {
+    let n = indptr.len() - 1;
+    let total = indptr[n] as usize;
+    let chunks = chunks.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(chunks + 1);
+    bounds.push(0usize);
+    for i in 1..chunks {
+        let target = (total as u128 * i as u128 / chunks as u128) as usize;
+        let mut r = *bounds.last().unwrap();
+        while r < n && (indptr[r] as usize) < target {
+            r += 1;
+        }
+        bounds.push(r);
+    }
+    bounds.push(n);
+    bounds
+}
+
+/// Split `0..n` into `chunks` contiguous ranges of near-equal length.
+/// Returns `chunks + 1` boundaries (used for vertex-range splits where
+/// every element costs the same, e.g. the parallel count-merge).
+pub fn even_chunks(n: usize, chunks: usize) -> Vec<usize> {
+    let chunks = chunks.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(chunks + 1);
+    for i in 0..=chunks {
+        bounds.push(n * i / chunks);
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_threads_policy() {
+        assert!(resolve_threads(0) >= 1);
+        assert!((1..=3).contains(&resolve_threads(3)));
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert!(resolve_threads(usize::MAX) <= avail);
+        assert_eq!(resolve_threads(1), 1);
+    }
+
+    #[test]
+    fn nnz_chunks_cover_range() {
+        // 6 rows with nnz 0,10,0,1,1,0 -> indptr
+        let indptr: Vec<u32> = vec![0, 0, 10, 10, 11, 12, 12];
+        let b = nnz_chunks(&indptr, 3);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&6));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn nnz_chunks_more_chunks_than_rows() {
+        let indptr: Vec<u32> = vec![0, 1, 2];
+        let b = nnz_chunks(&indptr, 16);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&2));
+    }
+
+    #[test]
+    fn nnz_chunks_empty_matrix() {
+        let indptr: Vec<u32> = vec![0];
+        assert_eq!(nnz_chunks(&indptr, 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn even_chunks_cover_and_balance() {
+        let b = even_chunks(10, 3);
+        assert_eq!(b, vec![0, 3, 6, 10]);
+        assert_eq!(even_chunks(2, 8), vec![0, 1, 2]);
+        assert_eq!(even_chunks(0, 4), vec![0, 0]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Machine-readable bench results — `BENCH_gee.json`.
+//!
+//! Every harness=false bench appends its measurements here so the perf
+//! trajectory of the repo is recorded per-PR instead of scrolling away in
+//! CI logs. The file is a single JSON object `{"records": [...]}`; each
+//! record carries (bench, engine, n, m, k, threads, median_ns, speedup).
+//! Re-running a bench replaces that bench's records and keeps every other
+//! bench's, so the file accumulates one coherent snapshot per machine.
+//!
+//! Serialization is hand-rolled (the offline crate set has no serde);
+//! reading back uses [`crate::util::json`].
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::PathBuf;
+
+use super::json::Json;
+
+/// One measurement row.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Which bench produced it ("thread_sweep", "ablation", ...).
+    pub bench: String,
+    /// Engine / configuration label ("sparse-par", "sparse-pooled", ...).
+    pub engine: String,
+    /// Vertices.
+    pub n: usize,
+    /// Directed edges.
+    pub m: usize,
+    /// Classes.
+    pub k: usize,
+    /// Thread count (1 for serial configurations).
+    pub threads: usize,
+    /// Median wall time of one run, nanoseconds.
+    pub median_ns: u128,
+    /// Speedup vs that bench's stated baseline (1.0 = the baseline row).
+    pub speedup: f64,
+}
+
+impl BenchRecord {
+    fn to_json(&self) -> String {
+        // engine/bench labels are ASCII identifiers; escape minimally
+        format!(
+            "{{\"bench\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"m\": {}, \
+             \"k\": {}, \"threads\": {}, \"median_ns\": {}, \"speedup\": {:.4}}}",
+            escape(&self.bench),
+            escape(&self.engine),
+            self.n,
+            self.m,
+            self.k,
+            self.threads,
+            self.median_ns,
+            self.speedup
+        )
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) shrinks bench sizes for CI
+/// smoke runs.
+pub fn quick_mode() -> bool {
+    std::env::var("QUICK").map(|v| v == "1").unwrap_or(false)
+        || std::env::var("GEE_BENCH_QUICK").is_ok()
+}
+
+/// Where the results file lives: `$BENCH_GEE_PATH`, or `BENCH_gee.json`
+/// at the repository root. Cargo runs bench binaries with the *package*
+/// root (`rust/`) as working directory, so the default is anchored to
+/// the crate's manifest dir at compile time rather than the cwd.
+pub fn bench_json_path() -> PathBuf {
+    if let Ok(p) = std::env::var("BENCH_GEE_PATH") {
+        return PathBuf::from(p);
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|repo_root| repo_root.join("BENCH_gee.json"))
+        .unwrap_or_else(|| PathBuf::from("BENCH_gee.json"))
+}
+
+/// Records of other benches currently in the file (used to merge).
+fn read_other_benches(bench: &str) -> Vec<String> {
+    let Ok(text) = fs::read_to_string(bench_json_path()) else {
+        return Vec::new();
+    };
+    let Ok(doc) = Json::parse(&text) else {
+        return Vec::new(); // corrupt file: start over
+    };
+    let mut kept = Vec::new();
+    if let Some(records) = doc.get("records").and_then(|r| r.as_arr()) {
+        for rec in records {
+            let from = rec.get("bench").and_then(|b| b.as_str()).unwrap_or("");
+            if from != bench {
+                kept.push(render_record(rec));
+            }
+        }
+    }
+    kept
+}
+
+/// Re-serialize a parsed record (round-trips the fields we define;
+/// unknown fields are dropped).
+fn render_record(rec: &Json) -> String {
+    let s = |key: &str| rec.get(key).and_then(|v| v.as_str()).unwrap_or("").to_string();
+    let u = |key: &str| rec.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    BenchRecord {
+        bench: s("bench"),
+        engine: s("engine"),
+        n: u("n") as usize,
+        m: u("m") as usize,
+        k: u("k") as usize,
+        threads: u("threads") as usize,
+        median_ns: u("median_ns") as u128,
+        speedup: u("speedup"),
+    }
+    .to_json()
+}
+
+/// Merge `records` for `bench` into the results file: other benches'
+/// records are preserved, this bench's previous records are replaced.
+/// Errors are reported to stderr, never fatal — a bench must still print
+/// its human-readable table on a read-only filesystem.
+pub fn write_records(bench: &str, records: &[BenchRecord]) {
+    let mut rows = read_other_benches(bench);
+    rows.extend(records.iter().map(|r| r.to_json()));
+    let mut out = String::from("{\"records\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        let _ = writeln!(out, "  {row}{sep}");
+    }
+    out.push_str("]}\n");
+    let path = bench_json_path();
+    if let Err(e) = fs::write(&path, out) {
+        eprintln!("warning: could not write {}: {e}", path.display());
+    } else {
+        println!("(bench records written to {})", path.display());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_serializes_to_parseable_json() {
+        let r = BenchRecord {
+            bench: "thread_sweep".into(),
+            engine: "sparse-par".into(),
+            n: 10_000,
+            m: 11_000_000,
+            k: 3,
+            threads: 4,
+            median_ns: 123_456_789,
+            speedup: 2.5,
+        };
+        let doc = Json::parse(&r.to_json()).unwrap();
+        assert_eq!(doc.get("engine").unwrap().as_str(), Some("sparse-par"));
+        assert_eq!(doc.get("n").unwrap().as_usize(), Some(10_000));
+        assert_eq!(doc.get("threads").unwrap().as_usize(), Some(4));
+        assert_eq!(doc.get("median_ns").unwrap().as_usize(), Some(123_456_789));
+        assert!((doc.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn full_document_shape_parses() {
+        let rows = [
+            BenchRecord {
+                bench: "a".into(),
+                engine: "x".into(),
+                n: 1,
+                m: 2,
+                k: 3,
+                threads: 1,
+                median_ns: 10,
+                speedup: 1.0,
+            },
+            BenchRecord {
+                bench: "a".into(),
+                engine: "y".into(),
+                n: 1,
+                m: 2,
+                k: 3,
+                threads: 2,
+                median_ns: 5,
+                speedup: 2.0,
+            },
+        ];
+        let mut out = String::from("{\"records\": [\n");
+        for (i, r) in rows.iter().enumerate() {
+            let sep = if i + 1 < rows.len() { "," } else { "" };
+            out.push_str(&format!("  {}{sep}\n", r.to_json()));
+        }
+        out.push_str("]}\n");
+        let doc = Json::parse(&out).unwrap();
+        assert_eq!(doc.get("records").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn default_path_is_repo_root_not_cwd() {
+        // guards the cargo-bench cwd gotcha: cargo runs bench binaries
+        // from the package root, so the default must be absolute
+        if std::env::var("BENCH_GEE_PATH").is_err() {
+            let p = bench_json_path();
+            assert!(p.is_absolute(), "default bench path must not depend on cwd");
+            assert_eq!(p.file_name().and_then(|f| f.to_str()), Some("BENCH_gee.json"));
+        }
+    }
+
+    #[test]
+    fn quick_mode_reads_env() {
+        // can't mutate the environment safely in parallel tests; just
+        // exercise the call
+        let _ = quick_mode();
+    }
+}

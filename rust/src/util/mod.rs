@@ -3,6 +3,7 @@
 //! excludes the usual suspects (`rand`, `serde`, `proptest`, `criterion`);
 //! each module documents the substitution.
 
+pub mod benchlog;
 pub mod json;
 pub mod prop;
 pub mod rng;

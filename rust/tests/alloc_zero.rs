@@ -1,0 +1,133 @@
+//! Zero-allocation proof for the pooled serving path (ISSUE 2
+//! acceptance): a counting global allocator wraps `System`, and a
+//! repeated-embed (service-style) workload over a warm
+//! [`EmbedWorkspace`] must perform **zero** heap allocations per
+//! request — across the prepared lane, the one-shot fused lane and the
+//! edge-list lane, for every option combo.
+//!
+//! This file intentionally contains a single `#[test]`: the counter is
+//! process-global, so sibling tests running on other threads would
+//! pollute the measured window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use gee_sparse::gee::edgelist_gee::EdgeListGee;
+use gee_sparse::gee::sparse_gee::{embed_fused_into, SparseGee};
+use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
+use gee_sparse::graph::Graph;
+use gee_sparse::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocations() -> u64 {
+    ALLOCS.load(Ordering::SeqCst)
+}
+
+fn service_style_graph() -> Graph {
+    let mut rng = Rng::new(90);
+    let (n, k) = (500, 4);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = if rng.f64() < 0.05 { -1 } else { rng.below(k) as i32 };
+    }
+    for _ in 0..4_000 {
+        g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+    }
+    g.add_edge(7, 7, 2.0); // self loop
+    g
+}
+
+#[test]
+fn steady_state_pooled_embeds_allocate_nothing() {
+    let g = service_style_graph();
+    let combos = GeeOptions::table_order();
+    const REPS: usize = 25;
+
+    // ---- prepared lane (the amortized serving hot path)
+    let prepared = SparseGee::prepare(&g);
+    let mut ws = EmbedWorkspace::new();
+    for o in &combos {
+        prepared.embed_into(o, &mut ws); // warm every combo's buffers
+    }
+    let before = allocations();
+    for _ in 0..REPS {
+        for o in &combos {
+            prepared.embed_into(o, &mut ws);
+            std::hint::black_box(ws.z.data.as_ptr());
+        }
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "prepared embed_into allocated {leaked} times over {REPS}x{} embeds",
+        combos.len()
+    );
+
+    // ---- one-shot fused lane (prepare + embed per request, all pooled)
+    let mut ws_fused = EmbedWorkspace::new();
+    for o in &combos {
+        embed_fused_into(&g, o, &mut ws_fused);
+    }
+    let before = allocations();
+    for _ in 0..REPS {
+        for o in &combos {
+            embed_fused_into(&g, o, &mut ws_fused);
+            std::hint::black_box(ws_fused.z.data.as_ptr());
+        }
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "fused embed_fused_into allocated {leaked} times in steady state"
+    );
+
+    // ---- edge-list lane
+    let mut ws_el = EmbedWorkspace::new();
+    for o in &combos {
+        EdgeListGee.embed_into(&g, o, &mut ws_el);
+    }
+    let before = allocations();
+    for _ in 0..REPS {
+        for o in &combos {
+            EdgeListGee.embed_into(&g, o, &mut ws_el);
+            std::hint::black_box(ws_el.z.data.as_ptr());
+        }
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "edge-list embed_into allocated {leaked} times in steady state"
+    );
+
+    // sanity: the pooled lanes still produce the right numbers after the
+    // allocation-counted loops
+    let expect = SparseGee::fast().embed(&g, combos.last().unwrap());
+    assert_eq!(ws_fused.z.data, expect.data);
+}

@@ -1,0 +1,182 @@
+//! Cross-engine parity property suite — pins the determinism contract
+//! across every embedding lane (ISSUE 2 satellite):
+//!
+//! * random SBM and Chung-Lu graphs, mutated with self loops and
+//!   unlabeled (-1) vertices;
+//! * × the full lap/diag/cor option grid (8 combos);
+//! * × all engines: edge-list, published sparse, fused sparse,
+//!   row-parallel sparse, edge-parallel edge-list, and the pooled
+//!   workspace lanes of each;
+//! * agreement: **≤1e-12** against the published sparse pipeline, and
+//!   **bitwise** wherever the engine's contract promises it (fused vs
+//!   row-parallel at any thread count; every pooled lane vs its
+//!   allocating twin; `spmm_dense_par` vs `spmm_dense`).
+
+use gee_sparse::gee::edgelist_gee::EdgeListGee;
+use gee_sparse::gee::edgelist_par::EdgeListParGee;
+use gee_sparse::gee::parallel::{prepare_par, ParallelGee};
+use gee_sparse::gee::sparse_gee::{embed_fused_into, SparseGee};
+use gee_sparse::gee::{EmbedWorkspace, Engine, GeeOptions};
+use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::sparse::{Coo, Csr, Dense};
+use gee_sparse::util::rng::Rng;
+
+const TOL: f64 = 1e-12;
+
+/// Add self loops and unlabel a slice of vertices — the awkward cases
+/// every engine must agree on.
+fn mutate(g: &mut Graph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..5 {
+        let v = rng.below(g.n) as u32;
+        g.add_edge(v, v, rng.f64() + 0.5);
+    }
+    for _ in 0..g.n / 12 {
+        let v = rng.below(g.n);
+        g.labels[v] = -1;
+    }
+}
+
+/// Every lane against the published sparse pipeline, all 8 combos.
+fn assert_parity(name: &str, g: &Graph) {
+    let mut ws = EmbedWorkspace::new();
+    for opts in GeeOptions::table_order() {
+        let reference = Engine::Sparse.embed(g, &opts).unwrap();
+
+        // tolerance lanes (different summation orders)
+        let lanes: [(&str, Dense); 4] = [
+            ("edgelist", EdgeListGee.embed(g, &opts)),
+            ("edgelist-par:3", EdgeListParGee::new(3).embed(g, &opts)),
+            ("sparse-fast", SparseGee::fast().embed(g, &opts)),
+            ("sparse-par:3", ParallelGee::new(3).embed(g, &opts)),
+        ];
+        for (lane, z) in &lanes {
+            let d = reference.max_abs_diff(z);
+            assert!(
+                d <= TOL,
+                "{name}: {lane} diff {d} > {TOL} at {opts:?} \
+                 (n={}, edges={})",
+                g.n,
+                g.num_edges()
+            );
+        }
+
+        // bitwise contracts
+        let fused = &lanes[2].1;
+        for t in [1usize, 2, 5] {
+            let par = prepare_par(g, t).embed_par(&opts, t);
+            assert_eq!(
+                par.data, fused.data,
+                "{name}: row-parallel t={t} not bitwise vs fused at {opts:?}"
+            );
+        }
+        embed_fused_into(g, &opts, &mut ws);
+        assert_eq!(
+            ws.z.data, fused.data,
+            "{name}: pooled fused lane not bitwise at {opts:?}"
+        );
+        EdgeListGee.embed_into(g, &opts, &mut ws);
+        assert_eq!(
+            ws.z.data, lanes[0].1.data,
+            "{name}: pooled edge-list lane not bitwise at {opts:?}"
+        );
+        let epar_fixed_a = EdgeListParGee::new(3).embed(g, &opts);
+        assert_eq!(
+            epar_fixed_a.data, lanes[1].1.data,
+            "{name}: edge-parallel not reproducible at fixed t at {opts:?}"
+        );
+    }
+}
+
+#[test]
+fn sbm_graphs_all_engines_agree() {
+    for (i, n) in [300usize, 700].into_iter().enumerate() {
+        let mut g = generate_sbm(&SbmParams::paper(n), 21 + i as u64);
+        mutate(&mut g, 31 + i as u64);
+        assert_parity("sbm", &g);
+    }
+}
+
+#[test]
+fn chung_lu_graphs_all_engines_agree() {
+    for (i, gamma) in [1.6f64, 2.4].into_iter().enumerate() {
+        let mut g = generate_chung_lu(
+            &ChungLuParams { n: 1_200, edges: 6_000, gamma, k: 4 },
+            41 + i as u64,
+        );
+        mutate(&mut g, 51 + i as u64);
+        assert_parity("chung-lu", &g);
+    }
+}
+
+#[test]
+fn sparse_random_graphs_all_engines_agree() {
+    // uniform random graphs with weighted edges (no generator structure)
+    let mut rng = Rng::new(61);
+    for _ in 0..3 {
+        let n = 50 + rng.below(300);
+        let k = 2 + rng.below(5);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..4 * n {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        mutate(&mut g, rng.next_u64());
+        assert_parity("uniform", &g);
+    }
+}
+
+#[test]
+fn spmm_dense_par_bitwise_across_shapes_and_threads() {
+    let mut rng = Rng::new(71);
+    for _ in 0..4 {
+        let nrows = 1 + rng.below(300);
+        let ncols = 1 + rng.below(200);
+        let k = 1 + rng.below(8);
+        let mut coo = Coo::new(nrows, ncols);
+        for _ in 0..rng.below(6 * nrows + 1) {
+            coo.push(
+                rng.below(nrows) as u32,
+                rng.below(ncols) as u32,
+                rng.f64() - 0.5,
+            );
+        }
+        let a = Csr::from_coo(&coo);
+        let b = Dense::from_vec(
+            ncols,
+            k,
+            (0..ncols * k).map(|i| (i as f64 * 0.37).cos()).collect(),
+        );
+        let serial = a.spmm_dense(&b);
+        for t in [1usize, 2, 4, 16] {
+            let par = a.spmm_dense_par(&b, t);
+            assert_eq!(par.data, serial.data, "spmm t={t} not bitwise");
+        }
+    }
+}
+
+#[test]
+fn pooled_front_end_matches_for_every_engine() {
+    let mut g = generate_sbm(&SbmParams::paper(240), 81);
+    mutate(&mut g, 91);
+    let mut ws = EmbedWorkspace::new();
+    for e in Engine::ALL {
+        if *e == Engine::Dense {
+            continue; // quadratic strawman is budgeted for tiny graphs
+        }
+        for opts in GeeOptions::table_order() {
+            let fresh = e.embed(&g, &opts).unwrap();
+            let pooled = e.embed_pooled(&g, &opts, &mut ws).unwrap();
+            assert_eq!(
+                pooled.data,
+                fresh.data,
+                "pooled {} drifted at {opts:?}",
+                e.name()
+            );
+        }
+    }
+}
