@@ -83,6 +83,8 @@ fn main() -> anyhow::Result<()> {
         // row-parallel engine instead of pinning one worker
         intra_op_threads: 4,
         intra_op_min_edges: 20_000,
+        // past the u32 budget the sharded lane takes over (default)
+        ..ServiceConfig::default()
     });
 
     let requests = if quick { 200 } else { 800 };

@@ -1,0 +1,141 @@
+//! Bench: shard-count scaling of the vertex-range-sharded GEE engine on
+//! SBM and Chung-Lu graphs — the sharded lane's perf trajectory next to
+//! the in-core fused baseline, plus the out-of-core spill lane so the
+//! disk-residency overhead is on the record too.
+//!
+//! Per shard count: the in-process sharded embed (phase 1 + bucket +
+//! shard pass) and its speedup over the serial fused engine. One
+//! out-of-core row per graph (spill + per-shard streaming embed from
+//! disk). Determinism gates first: every sharded configuration must be
+//! bitwise-identical to the serial fused engine.
+//!
+//! Results are appended to `BENCH_gee.json` (see `util::benchlog`).
+//! `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) trims sizes for CI smoke.
+
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::shard::{
+    embed_out_of_core, spill::spill_from_graph, ShardedGee, SpillConfig,
+};
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::timing::{bench_runs, secs, Stats};
+
+const SHARDS: &[usize] = &[1, 2, 4, 8];
+
+fn record(
+    out: &mut Vec<BenchRecord>,
+    engine: &str,
+    g: &Graph,
+    shards: usize,
+    st: &Stats,
+    base_ns: u128,
+) {
+    let ns = st.median.as_nanos();
+    out.push(BenchRecord {
+        bench: "shard_scale".into(),
+        engine: engine.into(),
+        n: g.n,
+        m: g.num_directed(),
+        k: g.k,
+        threads: shards,
+        median_ns: ns,
+        speedup: base_ns as f64 / (ns.max(1) as f64),
+    });
+}
+
+fn sweep(name: &str, g: &Graph, reps: usize, records: &mut Vec<BenchRecord>) {
+    let opts = GeeOptions::ALL;
+    println!(
+        "-- {name}: n={} edges={} ({} directed), k={}",
+        g.n,
+        g.num_edges(),
+        g.num_directed(),
+        g.k
+    );
+
+    // determinism gate: bitwise vs the serial fused engine at every count
+    let serial = SparseGee::fast().embed(g, &opts);
+    for &s in SHARDS {
+        let z = ShardedGee::new(s).embed(g, &opts);
+        assert_eq!(
+            z.data, serial.data,
+            "{name}: sharded s={s} not bitwise-identical to fused"
+        );
+    }
+    println!("   sharded bitwise vs fused ✓ at all shard counts");
+
+    // baseline row: the serial fused engine
+    let fused_engine = SparseGee::fast();
+    let fused = Stats::from_runs(&bench_runs(1, reps, || {
+        std::hint::black_box(fused_engine.embed(g, &opts));
+    }));
+    let base_ns = fused.median.as_nanos();
+    record(records, "sparse-fast", g, 1, &fused, base_ns);
+    println!("   {:>10} {:>12} {:>9}", "config", "embed (s)", "speedup");
+    println!("   {:>10} {:>12} {:>8.2}x", "fused", secs(fused.median), 1.0);
+
+    for &s in SHARDS {
+        let engine = ShardedGee::new(s);
+        let st = Stats::from_runs(&bench_runs(1, reps, || {
+            std::hint::black_box(engine.embed(g, &opts));
+        }));
+        record(records, "sharded", g, s, &st, base_ns);
+        let label = format!("sharded:{s}");
+        println!(
+            "   {:>10} {:>12} {:>8.2}x",
+            label,
+            secs(st.median),
+            base_ns as f64 / st.median.as_nanos().max(1) as f64
+        );
+    }
+
+    // out-of-core: spill once, embed per rep from disk (4 shards)
+    let dir = std::env::temp_dir().join(format!(
+        "gee_shard_bench_{}_{}",
+        std::process::id(),
+        g.n
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let sp = spill_from_graph(g, &SpillConfig { shards: 4, ..SpillConfig::new(&dir) })
+        .expect("spill");
+    let st = Stats::from_runs(&bench_runs(1, reps, || {
+        std::hint::black_box(embed_out_of_core(&sp, &opts).expect("ooc embed"));
+    }));
+    record(records, "sharded-ooc", g, 4, &st, base_ns);
+    println!(
+        "   {:>10} {:>12} {:>8.2}x   (spill + stream from disk)",
+        "ooc:4",
+        secs(st.median),
+        base_ns as f64 / st.median.as_nanos().max(1) as f64
+    );
+    drop(sp);
+    let _ = std::fs::remove_dir_all(&dir);
+    println!();
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    println!(
+        "== bench shard_scale (reps={reps}, cores available: {}) ==\n",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    let mut records = Vec::new();
+
+    let sbm_n = if quick { 2_000 } else { 10_000 };
+    let sbm = generate_sbm(&SbmParams::paper(sbm_n), 7);
+    sweep("SBM (paper params)", &sbm, reps, &mut records);
+
+    let cl_edges = if quick { 100_000 } else { 1_000_000 };
+    let cl_n = if quick { 10_000 } else { 50_000 };
+    let cl = generate_chung_lu(
+        &ChungLuParams { n: cl_n, edges: cl_edges, gamma: 1.8, k: 5 },
+        11,
+    );
+    sweep("Chung-Lu (gamma=1.8)", &cl, reps, &mut records);
+
+    write_records("shard_scale", &records);
+}

@@ -17,6 +17,8 @@
 //! per-graph embedding is tested for every option combo below and for the
 //! PJRT path in `rust/tests/coordinator_integration.rs`.
 
+use std::sync::{Arc, Mutex};
+
 use crate::graph::Graph;
 use crate::sparse::Dense;
 
@@ -60,63 +62,123 @@ pub struct PackedBatch {
     pub placements: Vec<Placement>,
 }
 
-/// Greedily pack graphs (in arrival order, first-fit into the current
-/// batch) under `cap`. Returns batches with the indices of the member
-/// graphs. Graphs that individually exceed `cap` are returned in
-/// `oversize` for the caller to route to a solo lane.
+/// Plan batch membership under `cap` with bounded look-ahead (no unions
+/// built — callers with a reusable [`PackedBatch`] buffer follow up with
+/// [`build_union_into`] per plan). Each batch starts at the earliest
+/// unplaced graph and scans subsequent unplaced graphs, examining at most
+/// `max_requests` candidates (the look-ahead window that bounds both
+/// batch size and reordering distance), adding every one that fits the
+/// remaining capacity. This removes the old head-of-line blocking where a
+/// single non-fitting arrival flushed a half-empty batch even though
+/// later queued graphs would have filled it. Members keep arrival order
+/// within a batch and batches are ordered by their first member, so
+/// per-member result routing is unchanged. Graphs that individually
+/// exceed `cap` land in `oversize` for the solo lane.
+pub fn plan_batches(
+    graphs: &[&Graph],
+    cap: &BatchCapacity,
+) -> (Vec<Vec<usize>>, Vec<usize>) {
+    let mut oversize = Vec::new();
+    let mut pending = Vec::new();
+    // (nodes, directed edges, classes) per graph, computed once up front:
+    // num_directed() is an O(E) scan, and the window below may examine a
+    // graph once per batch attempt
+    let mut needs = Vec::with_capacity(graphs.len());
+    for (i, g) in graphs.iter().enumerate() {
+        let need = (g.n, g.num_directed(), g.k);
+        needs.push(need);
+        let admitted = need.0 <= cap.max_nodes
+            && need.1 <= cap.max_directed_edges
+            && need.2 <= cap.max_classes;
+        if admitted {
+            pending.push(i);
+        } else {
+            oversize.push(i);
+        }
+    }
+    let mut placed = vec![false; graphs.len()];
+    let mut batches: Vec<Vec<usize>> = Vec::new();
+    let mut start = 0usize; // position in `pending` of the first unplaced
+    while start < pending.len() {
+        let mut members = Vec::new();
+        let mut used = (0usize, 0usize, 0usize); // nodes, edges, classes
+        let mut examined = 0usize;
+        for &idx in &pending[start..] {
+            if placed[idx] {
+                continue;
+            }
+            if examined >= cap.max_requests || members.len() >= cap.max_requests {
+                break;
+            }
+            examined += 1;
+            let need = needs[idx];
+            if used.0 + need.0 <= cap.max_nodes
+                && used.1 + need.1 <= cap.max_directed_edges
+                && used.2 + need.2 <= cap.max_classes
+            {
+                members.push(idx);
+                placed[idx] = true;
+                used = (used.0 + need.0, used.1 + need.1, used.2 + need.2);
+            }
+        }
+        if members.is_empty() {
+            // degenerate `max_requests == 0` config: take one graph anyway
+            // so every batch makes progress (matches the old packer, which
+            // treated the cap as at-least-one)
+            let idx = pending[start];
+            members.push(idx);
+            placed[idx] = true;
+        }
+        batches.push(members);
+        while start < pending.len() && placed[pending[start]] {
+            start += 1;
+        }
+    }
+    (batches, oversize)
+}
+
+/// Plan + build in one call — the allocating convenience wrapper over
+/// [`plan_batches`] + [`build_union_into`] (benches, tests, one-shot
+/// callers; the service workers use the pooled pieces directly).
 pub fn pack_graphs(
     graphs: &[&Graph],
     cap: &BatchCapacity,
 ) -> (Vec<(PackedBatch, Vec<usize>)>, Vec<usize>) {
-    let mut batches: Vec<(PackedBatch, Vec<usize>)> = Vec::new();
-    let mut oversize = Vec::new();
-    let mut current: Vec<usize> = Vec::new();
-    let mut used = (0usize, 0usize, 0usize); // nodes, edges, classes
-
-    let flush = |current: &mut Vec<usize>,
-                 batches: &mut Vec<(PackedBatch, Vec<usize>)>| {
-        if !current.is_empty() {
-            let members: Vec<&Graph> = current.iter().map(|&i| graphs[i]).collect();
-            batches.push((build_union(&members), std::mem::take(current)));
-        }
-    };
-
-    for (i, g) in graphs.iter().enumerate() {
-        if !cap.admits(g) {
-            oversize.push(i);
-            continue;
-        }
-        let need = (g.n, g.num_directed(), g.k);
-        let fits = current.len() < cap.max_requests
-            && used.0 + need.0 <= cap.max_nodes
-            && used.1 + need.1 <= cap.max_directed_edges
-            && used.2 + need.2 <= cap.max_classes;
-        if !fits {
-            flush(&mut current, &mut batches);
-            used = (0, 0, 0);
-        }
-        current.push(i);
-        used = (used.0 + need.0, used.1 + need.1, used.2 + need.2);
-    }
-    flush(&mut current, &mut batches);
+    let (plans, oversize) = plan_batches(graphs, cap);
+    let batches = plans
+        .into_iter()
+        .map(|members| {
+            let refs: Vec<&Graph> = members.iter().map(|&i| graphs[i]).collect();
+            (build_union(&refs), members)
+        })
+        .collect();
     (batches, oversize)
 }
 
-/// Build the disjoint union with node/class offsets.
-pub fn build_union(members: &[&Graph]) -> PackedBatch {
+/// Build the disjoint union with node/class offsets into `out`, reusing
+/// every buffer's capacity (edge arrays, labels, placements). After one
+/// warm-up batch at a given shape, steady-state union construction
+/// performs **zero heap allocations** (pinned in `tests/alloc_zero.rs`)
+/// — the ROADMAP "pool build_union" item.
+pub fn build_union_into(members: &[&Graph], out: &mut PackedBatch) {
     let total_n: usize = members.iter().map(|g| g.n).sum();
     let total_k: usize = members.iter().map(|g| g.k).sum();
-    let mut union = Graph::new(total_n, total_k);
-    let mut placements = Vec::with_capacity(members.len());
+    let union = &mut out.union;
+    union.n = total_n;
+    union.k = total_k;
+    union.src.clear();
+    union.dst.clear();
+    union.w.clear();
+    union.labels.clear();
+    union.labels.resize(total_n, -1);
+    out.placements.clear();
     let mut node_off = 0usize;
     let mut class_off = 0usize;
     for g in members {
         for v in 0..g.n {
-            union.labels[node_off + v] = if g.labels[v] >= 0 {
-                g.labels[v] + class_off as i32
-            } else {
-                -1
-            };
+            if g.labels[v] >= 0 {
+                union.labels[node_off + v] = g.labels[v] + class_off as i32;
+            }
         }
         for e in 0..g.num_edges() {
             union.add_edge(
@@ -125,11 +187,88 @@ pub fn build_union(members: &[&Graph]) -> PackedBatch {
                 g.w[e],
             );
         }
-        placements.push(Placement { node_offset: node_off, class_offset: class_off, n: g.n, k: g.k });
+        out.placements.push(Placement {
+            node_offset: node_off,
+            class_offset: class_off,
+            n: g.n,
+            k: g.k,
+        });
         node_off += g.n;
         class_off += g.k;
     }
-    PackedBatch { union, placements }
+}
+
+/// Build the disjoint union with node/class offsets (fresh allocation;
+/// see [`build_union_into`] for the pooled lane).
+pub fn build_union(members: &[&Graph]) -> PackedBatch {
+    let mut out = PackedBatch { union: Graph::new(0, 0), placements: Vec::new() };
+    build_union_into(members, &mut out);
+    out
+}
+
+/// A shared pool of warmed union buffers — the batching twin of the embed
+/// path's `WorkspacePool`: each coordinator worker checks one out for its
+/// lifetime, and the capacity returns to the pool on drop.
+#[derive(Debug, Default)]
+pub struct UnionPool {
+    free: Mutex<Vec<PackedBatch>>,
+}
+
+impl UnionPool {
+    pub fn new() -> Arc<UnionPool> {
+        Arc::new(UnionPool::default())
+    }
+
+    /// Borrow a union buffer; it returns to the pool when the guard drops.
+    pub fn checkout(self: &Arc<Self>) -> PooledUnion {
+        let buf = self
+            .free
+            .lock()
+            .expect("union pool lock poisoned")
+            .pop()
+            .unwrap_or_else(|| PackedBatch {
+                union: Graph::new(0, 0),
+                placements: Vec::new(),
+            });
+        PooledUnion { buf: Some(buf), pool: Arc::clone(self) }
+    }
+
+    /// Number of idle buffers currently pooled.
+    pub fn idle(&self) -> usize {
+        self.free.lock().expect("union pool lock poisoned").len()
+    }
+}
+
+/// RAII guard over a checked-out union buffer.
+#[derive(Debug)]
+pub struct PooledUnion {
+    buf: Option<PackedBatch>,
+    pool: Arc<UnionPool>,
+}
+
+impl std::ops::Deref for PooledUnion {
+    type Target = PackedBatch;
+    fn deref(&self) -> &PackedBatch {
+        self.buf.as_ref().expect("union buffer present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PooledUnion {
+    fn deref_mut(&mut self) -> &mut PackedBatch {
+        self.buf.as_mut().expect("union buffer present until drop")
+    }
+}
+
+impl Drop for PooledUnion {
+    fn drop(&mut self) {
+        if let Some(buf) = self.buf.take() {
+            self.pool
+                .free
+                .lock()
+                .expect("union pool lock poisoned")
+                .push(buf);
+        }
+    }
 }
 
 /// Slice one member's embedding block out of the union's Z.
@@ -235,6 +374,99 @@ mod tests {
         let (batches, oversize) = pack_graphs(&refs, &cap);
         assert_eq!(batches.len(), 1);
         assert_eq!(oversize, vec![1]);
+    }
+
+    #[test]
+    fn scan_ahead_fixes_head_of_line_blocking() {
+        // regression (ISSUE 3): arrival order 60, 60, 40, 40 under a
+        // 100-node cap used to flush [60] half-empty when the second 60
+        // arrived, producing 3 batches; scanning ahead packs 2 full ones
+        let g60a = random_graph(240, 60, 30, 2);
+        let g60b = random_graph(241, 60, 30, 2);
+        let g40a = random_graph(242, 40, 20, 2);
+        let g40b = random_graph(243, 40, 20, 2);
+        let refs: Vec<&Graph> = vec![&g60a, &g60b, &g40a, &g40b];
+        let cap = BatchCapacity {
+            max_nodes: 100,
+            max_directed_edges: 100_000,
+            max_classes: 64,
+            max_requests: 64,
+        };
+        let (plans, oversize) = plan_batches(&refs, &cap);
+        assert!(oversize.is_empty());
+        assert_eq!(plans.len(), 2, "scan-ahead must fill both batches");
+        assert_eq!(plans[0], vec![0, 2], "members keep arrival order");
+        assert_eq!(plans[1], vec![1, 3]);
+        // fill rate: every batch at the node cap
+        let (batches, _) = pack_graphs(&refs, &cap);
+        for (b, _) in &batches {
+            assert_eq!(b.union.n, 100);
+        }
+        // every member appears exactly once
+        let mut all: Vec<usize> = plans.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn scan_ahead_window_is_bounded_by_max_requests() {
+        // a non-fitting graph parked at the front must not let the scan
+        // run arbitrarily far: with max_requests=2 the window examines at
+        // most 2 candidates per batch, so the fitting graph 3 slots away
+        // stays out of the first batch
+        let big = random_graph(245, 90, 30, 2);
+        let mid = random_graph(246, 60, 30, 2);
+        let mid2 = random_graph(247, 60, 30, 2);
+        let tiny = random_graph(248, 10, 5, 2);
+        let refs: Vec<&Graph> = vec![&big, &mid, &mid2, &tiny];
+        let cap = BatchCapacity {
+            max_nodes: 100,
+            max_directed_edges: 100_000,
+            max_classes: 64,
+            max_requests: 2,
+        };
+        let (plans, _) = plan_batches(&refs, &cap);
+        // batch 0 examines big (fits) then mid (90+60 > 100, skip) and
+        // stops at the window: tiny would fit but is outside it
+        assert_eq!(plans[0], vec![0]);
+        let mut all: Vec<usize> = plans.iter().flatten().copied().collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3], "window skips must still be packed later");
+    }
+
+    #[test]
+    fn union_buffer_reuses_capacity() {
+        let g1 = random_graph(250, 30, 80, 3);
+        let g2 = random_graph(251, 45, 120, 4);
+        let pool = UnionPool::new();
+        let mut buf = pool.checkout();
+        build_union_into(&[&g1, &g2], &mut buf);
+        let expect = build_union(&[&g1, &g2]);
+        assert_eq!(buf.union.src, expect.union.src);
+        assert_eq!(buf.union.labels, expect.union.labels);
+        assert_eq!(buf.placements, expect.placements);
+        let caps = (
+            buf.union.src.capacity(),
+            buf.union.labels.capacity(),
+            buf.placements.capacity(),
+        );
+        for _ in 0..5 {
+            build_union_into(&[&g1, &g2], &mut buf);
+        }
+        assert_eq!(
+            (
+                buf.union.src.capacity(),
+                buf.union.labels.capacity(),
+                buf.placements.capacity(),
+            ),
+            caps,
+            "steady-state unions must not grow any buffer"
+        );
+        assert_eq!(buf.union.labels, expect.union.labels, "rebuild stays exact");
+        drop(buf);
+        assert_eq!(pool.idle(), 1, "drop must return the buffer");
+        let warm = pool.checkout();
+        assert!(warm.union.src.capacity() >= caps.0, "warm capacity survives");
     }
 
     #[test]

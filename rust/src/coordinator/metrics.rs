@@ -6,7 +6,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 /// Number of log-spaced latency buckets: bucket i covers
-/// [2^i, 2^(i+1)) microseconds; 40 buckets ≈ 18 minutes max.
+/// [2^i, 2^(i+1)) microseconds. The top bucket (i = 39) additionally
+/// absorbs everything ≥ 2^39 µs ≈ 6.4 days, so `latency_quantile` can
+/// report at most its upper bound 2^40 µs ≈ 12.7 days — far beyond any
+/// real request, which is the point: no observable latency overflows the
+/// histogram.
 const BUCKETS: usize = 40;
 
 /// Thread-safe metrics sink.
@@ -154,6 +158,22 @@ mod tests {
         let m = Metrics::new();
         assert_eq!(m.latency_quantile(0.99), Duration::ZERO);
         assert_eq!(m.latency_mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn overflow_bucket_absorbs_absurd_latencies() {
+        // the top bucket starts at 2^39 µs ≈ 6.4 days; anything beyond
+        // (here 20 days) must land there, and the quantile must report the
+        // bucket's upper bound 2^40 µs ≈ 12.7 days rather than panic or
+        // wrap (the old module comment claimed "≈ 18 minutes max")
+        let m = Metrics::new();
+        m.observe_latency(Duration::from_secs(20 * 86_400));
+        m.observe_latency(Duration::from_micros(u64::MAX));
+        assert_eq!(Metrics::bucket(20 * 86_400 * 1_000_000), BUCKETS - 1);
+        let top = m.latency_quantile(0.99);
+        assert_eq!(top, Duration::from_micros(1u64 << BUCKETS));
+        assert!(top > Duration::from_secs(12 * 86_400));
+        assert!(top < Duration::from_secs(13 * 86_400));
     }
 
     #[test]

@@ -23,7 +23,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{pack_graphs, split_member, BatchCapacity};
+use super::batcher::{
+    build_union_into, plan_batches, split_member, BatchCapacity, PackedBatch, UnionPool,
+};
 use super::metrics::Metrics;
 use super::queue::{BoundedQueue, PushError};
 use crate::gee::workspace::WorkspacePool;
@@ -67,6 +69,16 @@ pub struct ServiceConfig {
     pub intra_op_threads: usize,
     /// Directed-edge threshold for the intra-op routing above.
     pub intra_op_min_edges: usize,
+    /// Directed-edge count above which an oversize solo graph routes to
+    /// the vertex-range-sharded engine (`Engine::Sharded`) instead of the
+    /// in-core lanes. Defaults to the u32 index budget: graphs the
+    /// in-core engines would *reject* with `IndexOverflow` now embed via
+    /// the sharded lane (each shard's structure fits u32 even when the
+    /// whole graph does not). Lower it to shard earlier, e.g. for memory
+    /// headroom.
+    pub shard_min_directed_edges: usize,
+    /// Shard count for the sharded lane (0 = auto: one per core).
+    pub shard_count: usize,
 }
 
 impl Default for ServiceConfig {
@@ -80,6 +92,8 @@ impl Default for ServiceConfig {
             batch_linger: Duration::from_millis(2),
             intra_op_threads: 0,
             intra_op_min_edges: 500_000,
+            shard_min_directed_edges: crate::sparse::MAX_INDEX,
+            shard_count: 0,
         }
     }
 }
@@ -117,6 +131,10 @@ pub struct EmbedService {
     /// for its lifetime, so steady-state serving performs no per-request
     /// scratch allocation (only the response Z buffer is fresh).
     pool: Arc<WorkspacePool>,
+    /// Shared pool of warmed union buffers — the batching twin of `pool`
+    /// (ROADMAP "pool build_union"): workers hold one for their lifetime
+    /// so steady-state batch packing reuses union-graph capacity.
+    unions: Arc<UnionPool>,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -126,6 +144,7 @@ impl EmbedService {
         let queue = Arc::new(BoundedQueue::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::new());
         let pool = WorkspacePool::new();
+        let unions = UnionPool::new();
         let mut handles = Vec::new();
 
         match &cfg.lane {
@@ -135,9 +154,10 @@ impl EmbedService {
                     let m = metrics.clone();
                     let cfg = cfg.clone();
                     let p = pool.clone();
+                    let u = unions.clone();
                     let engine = *engine;
                     handles.push(std::thread::spawn(move || {
-                        native_worker(&q, &m, &cfg, engine, &p);
+                        native_worker(&q, &m, &cfg, engine, &p, &u);
                     }));
                 }
             }
@@ -147,9 +167,10 @@ impl EmbedService {
                 let cfg_pjrt = cfg.clone();
                 let dir = artifact_dir.clone();
                 let p = pool.clone();
+                let u = unions.clone();
                 let fallback = *fallback;
                 handles.push(std::thread::spawn(move || {
-                    pjrt_worker(&q, &m, &cfg_pjrt, &dir, fallback, &p);
+                    pjrt_worker(&q, &m, &cfg_pjrt, &dir, fallback, &p, &u);
                 }));
                 // extra native workers drain overflow alongside
                 for _ in 1..cfg.workers {
@@ -157,13 +178,14 @@ impl EmbedService {
                     let m = metrics.clone();
                     let cfg = cfg.clone();
                     let p = pool.clone();
+                    let u = unions.clone();
                     handles.push(std::thread::spawn(move || {
-                        native_worker(&q, &m, &cfg, fallback, &p);
+                        native_worker(&q, &m, &cfg, fallback, &p, &u);
                     }));
                 }
             }
         }
-        EmbedService { queue, metrics, pool, handles }
+        EmbedService { queue, metrics, pool, unions, handles }
     }
 
     /// Submit with backpressure: `Err` means the queue is full/closed and
@@ -225,6 +247,12 @@ impl EmbedService {
         self.pool.clone()
     }
 
+    /// Handle to the shared union-buffer pool (same lifecycle contract as
+    /// [`workspace_pool`](Self::workspace_pool)).
+    pub fn union_pool(&self) -> Arc<UnionPool> {
+        self.unions.clone()
+    }
+
     /// Drain queued work, stop workers, return final metrics.
     pub fn shutdown(self) -> Arc<Metrics> {
         self.queue.close();
@@ -255,9 +283,15 @@ fn gather(q: &BoundedQueue<Job>, cfg: &ServiceConfig, first: Job) -> Vec<Job> {
     jobs
 }
 
-/// Group → pack → run → reply, for one drained set of jobs.
-fn process_jobs<F>(jobs: Vec<Job>, cfg: &ServiceConfig, metrics: &Metrics, mut run: F)
-where
+/// Group → plan → pack into the worker's pooled union buffer → run →
+/// reply, for one drained set of jobs.
+fn process_jobs<F>(
+    jobs: Vec<Job>,
+    cfg: &ServiceConfig,
+    metrics: &Metrics,
+    union_buf: &mut PackedBatch,
+    mut run: F,
+) where
     F: FnMut(&Graph, &GeeOptions) -> (Result<Dense>, &'static str),
 {
     // group by option combo (batches must share the transform)
@@ -268,21 +302,23 @@ where
     }
     for (opts, group) in groups {
         let graphs: Vec<&Graph> = group.iter().map(|j| &j.req.graph).collect();
-        let (batches, oversize) = if cfg.batching {
-            pack_graphs(&graphs, &cfg.batch_capacity)
+        let (plans, oversize) = if cfg.batching {
+            plan_batches(&graphs, &cfg.batch_capacity)
         } else {
             (Vec::new(), (0..graphs.len()).collect())
         };
 
-        for (packed, member_idx) in &batches {
+        for member_idx in &plans {
             let size = member_idx.len();
             metrics.batches.fetch_add(1, Ordering::Relaxed);
             metrics.batched_requests.fetch_add(size as u64, Ordering::Relaxed);
-            let (result, via) = run(&packed.union, &opts);
+            let members: Vec<&Graph> = member_idx.iter().map(|&mi| graphs[mi]).collect();
+            build_union_into(&members, union_buf);
+            let (result, via) = run(&union_buf.union, &opts);
             match result {
                 Ok(zu) => {
                     for (slot, &mi) in member_idx.iter().enumerate() {
-                        let z = split_member(&zu, &packed.placements[slot]);
+                        let z = split_member(&zu, &union_buf.placements[slot]);
                         finish(&group[mi], z, via, size, metrics);
                     }
                 }
@@ -296,10 +332,20 @@ where
         for &mi in &oversize {
             let job = &group[mi];
             let g = &job.req.graph;
-            // large solo graphs go to the row-parallel engine so the
-            // embed uses the whole machine instead of one worker thread
-            let (result, via) = if cfg.intra_op_threads > 1
-                && g.num_directed() >= cfg.intra_op_min_edges
+            // routing ladder for solo graphs: past the u32/memory budget
+            // the vertex-range-sharded engine takes it (the in-core lanes
+            // would reject it with IndexOverflow); past the intra-op
+            // threshold the row-parallel engine uses the whole machine
+            // instead of pinning one worker; otherwise the worker's lane.
+            // num_directed is an O(E) scan — compute it once per job.
+            let directed = g.num_directed();
+            let (result, via) = if directed > cfg.shard_min_directed_edges {
+                (
+                    Engine::Sharded(cfg.shard_count).embed(g, &opts),
+                    "native-shard",
+                )
+            } else if cfg.intra_op_threads > 1
+                && directed >= cfg.intra_op_min_edges
             {
                 (
                     Engine::SparsePar(cfg.intra_op_threads).embed(g, &opts),
@@ -338,13 +384,15 @@ fn native_worker(
     cfg: &ServiceConfig,
     engine: Engine,
     pool: &Arc<WorkspacePool>,
+    unions: &Arc<UnionPool>,
 ) {
-    // one warmed workspace for this worker's lifetime; returns to the
-    // pool (capacity intact) when the worker exits
+    // one warmed workspace + union buffer for this worker's lifetime;
+    // both return to their pools (capacity intact) when the worker exits
     let mut ws = pool.checkout();
+    let mut ub = unions.checkout();
     while let Some(first) = q.pop() {
         let jobs = gather(q, cfg, first);
-        process_jobs(jobs, cfg, metrics, |g, opts| {
+        process_jobs(jobs, cfg, metrics, &mut ub, |g, opts| {
             (engine.embed_pooled(g, opts, &mut ws), "native")
         });
     }
@@ -357,6 +405,7 @@ fn pjrt_worker(
     artifact_dir: &std::path::Path,
     fallback: Engine,
     pool: &Arc<WorkspacePool>,
+    unions: &Arc<UnionPool>,
 ) {
     let runtime = match Runtime::new(artifact_dir) {
         Ok(rt) => rt,
@@ -370,9 +419,10 @@ fn pjrt_worker(
         }
     };
     let mut ws = pool.checkout();
+    let mut ub = unions.checkout();
     while let Some(first) = q.pop() {
         let jobs = gather(q, cfg, first);
-        process_jobs(jobs, cfg, metrics, |g, opts| {
+        process_jobs(jobs, cfg, metrics, &mut ub, |g, opts| {
             if runtime.fits(g, opts) {
                 (runtime.embed(g, opts), "pjrt")
             } else {
@@ -551,6 +601,73 @@ mod tests {
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.via, "native");
         svc.shutdown();
+    }
+
+    #[test]
+    fn oversize_graphs_route_to_sharded_lane() {
+        // tiny batch capacity makes the graph oversize; a lowered shard
+        // threshold stands in for the u32 budget (a real >4B-edge graph
+        // is not buildable in a test) — the lane and numerics must match
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            shard_min_directed_edges: 100,
+            shard_count: 3,
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(480, 60, 200, 3);
+        assert!(g.num_directed() > 100);
+        let opts = GeeOptions::ALL;
+        let rx = svc.submit(EmbedRequest { graph: g.clone(), options: opts }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "native-shard");
+        let expect = Engine::Sparse.embed(&g, &opts).unwrap();
+        assert!(expect.max_abs_diff(&resp.z) < 1e-10);
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn shard_routing_takes_priority_over_intra_op() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            intra_op_threads: 2,
+            intra_op_min_edges: 1,
+            shard_min_directed_edges: 1,
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(481, 40, 120, 3);
+        let rx = svc
+            .submit(EmbedRequest { graph: g, options: GeeOptions::NONE })
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "native-shard");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn workers_return_union_buffers_to_pool_on_shutdown() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 2,
+            batch_linger: Duration::from_millis(20),
+            ..ServiceConfig::default()
+        });
+        let unions = svc.union_pool();
+        assert_eq!(unions.idle(), 0, "workers hold their buffers while running");
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let g = random_graph(490 + i, 20, 40, 2);
+                svc.submit(EmbedRequest { graph: g, options: GeeOptions::NONE })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        svc.shutdown();
+        assert_eq!(unions.idle(), 2, "each worker must return its union buffer");
     }
 
     #[test]

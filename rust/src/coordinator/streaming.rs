@@ -92,7 +92,12 @@ impl StreamingGee {
     }
 
     /// Append a vertex with the given label (or -1). O(K). Returns its id.
+    /// Any negative label is normalized to the canonical `-1` sentinel:
+    /// the engines' `l >= 0` checks would already *treat* a `-7` as
+    /// unlabeled, but storing it verbatim would leak out of
+    /// [`to_graph`](Self::to_graph) and desync snapshot/batch round-trips.
     pub fn add_vertex(&mut self, label: i32) -> u32 {
+        let label = label.max(-1);
         assert!(label < self.k as i32);
         let id = self.n() as u32;
         self.labels.push(label);
@@ -106,8 +111,10 @@ impl StreamingGee {
     }
 
     /// Change a vertex's label. O(deg(v)): moves v's contribution from the
-    /// old class column to the new one at every neighbor.
+    /// old class column to the new one at every neighbor. Negative labels
+    /// normalize to `-1` (same rationale as [`add_vertex`](Self::add_vertex)).
     pub fn relabel(&mut self, v: u32, new_label: i32) {
+        let new_label = new_label.max(-1);
         let vi = v as usize;
         assert!(vi < self.n() && new_label < self.k as i32);
         let old = self.labels[vi];
@@ -285,6 +292,29 @@ mod tests {
             let new = (rng.below(5) as i32) - 1; // includes -1
             s.relabel(v, new);
         }
+        check_all_combos(&s);
+    }
+
+    #[test]
+    fn arbitrary_negative_labels_normalize_to_unlabeled() {
+        // regression (ISSUE 3): `-7` used to be stored verbatim, leaking a
+        // non-canonical unlabeled sentinel into to_graph()
+        let mut g = Graph::new(4, 3);
+        g.labels = vec![0, 1, 2, 0];
+        g.add_edge(0, 1, 1.0);
+        let mut s = StreamingGee::new(&g);
+        let v = s.add_vertex(-7);
+        s.add_edge(v, 0, 2.0);
+        s.relabel(1, -9);
+        let out = s.to_graph();
+        assert_eq!(out.labels[v as usize], -1, "add_vertex(-7) must store -1");
+        assert_eq!(out.labels[1], -1, "relabel(-9) must store -1");
+        assert!(out.validate().is_ok());
+        // n_k bookkeeping stayed consistent: snapshot == batch everywhere
+        check_all_combos(&s);
+        // and relabeling back from the normalized sentinel still works
+        s.relabel(v, 2);
+        assert_eq!(s.to_graph().labels[v as usize], 2);
         check_all_combos(&s);
     }
 

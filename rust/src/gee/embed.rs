@@ -38,6 +38,12 @@ pub enum Engine {
     /// Row-parallel sparse GEE (std threads; 0 = auto). Bitwise-identical
     /// output to `SparseFast` for any thread count.
     SparsePar(usize),
+    /// Vertex-range-sharded GEE (S shards; 0 = auto). Bitwise-identical
+    /// to `SparseFast` for any shard count, and the only in-process lane
+    /// that accepts graphs whose *global* directed-edge count overflows
+    /// the u32 index space (each shard's structure is local, so only the
+    /// per-shard slice must fit).
+    Sharded(usize),
 }
 
 impl Engine {
@@ -48,6 +54,7 @@ impl Engine {
         Engine::Sparse,
         Engine::SparseFast,
         Engine::SparsePar(0),
+        Engine::Sharded(0),
     ];
 
     pub fn name(&self) -> &'static str {
@@ -58,17 +65,21 @@ impl Engine {
             Engine::Sparse => "sparse",
             Engine::SparseFast => "sparse-fast",
             Engine::SparsePar(_) => "sparse-par",
+            Engine::Sharded(_) => "sharded",
         }
     }
 
     pub fn from_name(s: &str) -> Option<Engine> {
-        // "sparse-par:T" / "edgelist-par:T" pin the thread count; the
-        // bare names mean auto
+        // "sparse-par:T" / "edgelist-par:T" / "sharded:S" pin the thread
+        // or shard count; the bare names mean auto
         if let Some(t) = s.strip_prefix("sparse-par:") {
             return t.parse().ok().map(Engine::SparsePar);
         }
         if let Some(t) = s.strip_prefix("edgelist-par:") {
             return t.parse().ok().map(Engine::EdgeListPar);
+        }
+        if let Some(t) = s.strip_prefix("sharded:") {
+            return t.parse().ok().map(Engine::Sharded);
         }
         match s {
             "dense" => Some(Engine::Dense),
@@ -77,6 +88,7 @@ impl Engine {
             "sparse" => Some(Engine::Sparse),
             "sparse-fast" | "fast" => Some(Engine::SparseFast),
             "sparse-par" | "par" => Some(Engine::SparsePar(0)),
+            "sharded" | "shard" => Some(Engine::Sharded(0)),
             _ => None,
         }
     }
@@ -85,7 +97,10 @@ impl Engine {
     /// (engines past this point may assume 32-bit indexability). The
     /// common path is O(1): the directed expansion is at most 2·E, so the
     /// exact (O(E)) self-loop count is only taken when the cheap bound
-    /// does not already prove fit.
+    /// does not already prove fit. The sharded engine only needs the
+    /// vertex check — its edge structures are per-shard, so the *global*
+    /// directed-edge count may exceed the budget (that is the lane the
+    /// coordinator routes such graphs to instead of erroring).
     fn check_index_width(g: &Graph) -> Result<()> {
         // anyhow::Error::new keeps IndexOverflow downcastable, so callers
         // can tell capacity rejection apart from other embed failures
@@ -99,6 +114,10 @@ impl Engine {
     /// Run the embedding. All engines produce identical numerics (tested);
     /// they differ in data structures and therefore speed/space.
     pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Result<Dense> {
+        if let Engine::Sharded(s) = self {
+            try_index(g.n, "vertices").map_err(anyhow::Error::new)?;
+            return Ok(crate::shard::ShardedGee::new(*s).embed(g, opts));
+        }
         Self::check_index_width(g)?;
         match self {
             Engine::Dense => DenseGee::default().embed(g, opts),
@@ -107,6 +126,7 @@ impl Engine {
             Engine::Sparse => Ok(SparseGee::default().embed(g, opts)),
             Engine::SparseFast => Ok(SparseGee::fast().embed(g, opts)),
             Engine::SparsePar(t) => Ok(ParallelGee::new(*t).embed(g, opts)),
+            Engine::Sharded(_) => unreachable!("handled above"),
         }
     }
 
@@ -122,6 +142,11 @@ impl Engine {
         opts: &GeeOptions,
         ws: &mut EmbedWorkspace,
     ) -> Result<Dense> {
+        if matches!(self, Engine::Sharded(_)) {
+            // sharded accepts >u32 global directed edges; its embed path
+            // applies the vertices-only check
+            return self.embed(g, opts);
+        }
         Self::check_index_width(g)?;
         match self {
             Engine::EdgeList => {
@@ -140,7 +165,10 @@ impl Engine {
                 ParallelGee::new(*t).embed_with(g, opts, ws);
                 Ok(ws.take_z())
             }
-            Engine::Dense | Engine::Sparse => self.embed(g, opts),
+            // the sharded engine pools one workspace per worker thread
+            // internally; the reference configurations keep their
+            // allocating paths for fidelity to the published pipeline
+            Engine::Dense | Engine::Sparse | Engine::Sharded(_) => self.embed(g, opts),
         }
     }
 }
@@ -177,7 +205,10 @@ mod tests {
             Engine::from_name("edgelist-par:3"),
             Some(Engine::EdgeListPar(3))
         );
+        assert_eq!(Engine::from_name("sharded"), Some(Engine::Sharded(0)));
+        assert_eq!(Engine::from_name("sharded:5"), Some(Engine::Sharded(5)));
         assert_eq!(Engine::from_name("sparse-par:zap"), None);
+        assert_eq!(Engine::from_name("sharded:x"), None);
         assert_eq!(Engine::from_name("bogus"), None);
     }
 

@@ -255,6 +255,11 @@ pub(crate) fn prepare_into(
 /// [`PreparedGraph`] or an [`EmbedWorkspace`].
 pub(crate) struct AccumCtx<'a> {
     pub indptr: &'a [u32],
+    /// Global row id of `indptr[0]`: row `r` reads `indptr[r - row_base]`.
+    /// 0 for whole-graph structures; the sharded engine passes its shard's
+    /// first vertex so a shard-local indptr serves global row ids (labels,
+    /// weights and scale stay globally indexed either way).
+    pub row_base: usize,
     pub cols: &'a [u32],
     pub vals: &'a [f64],
     pub labels: &'a [i32],
@@ -279,7 +284,10 @@ pub(crate) fn accumulate_rows(
     let k = ctx.k;
     debug_assert_eq!(out.len(), (r1 - r0) * k);
     for r in r0..r1 {
-        let (lo, hi) = (ctx.indptr[r] as usize, ctx.indptr[r + 1] as usize);
+        let (lo, hi) = (
+            ctx.indptr[r - ctx.row_base] as usize,
+            ctx.indptr[r - ctx.row_base + 1] as usize,
+        );
         let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
         match scale {
             Some(s) => {
@@ -354,6 +362,7 @@ pub fn embed_fused_into(g: &Graph, opts: &GeeOptions, ws: &mut EmbedWorkspace) {
     }
     let ctx = AccumCtx {
         indptr: &indptr[..],
+        row_base: 0,
         cols: &cols[..],
         vals: &vals[..],
         labels: &g.labels[..],
@@ -437,6 +446,7 @@ impl PreparedGraph {
     ) {
         let ctx = AccumCtx {
             indptr: &self.indptr[..],
+            row_base: 0,
             cols: &self.cols[..],
             vals: &self.vals[..],
             labels: &self.labels[..],

@@ -13,15 +13,31 @@ use anyhow::{bail, Context, Result};
 
 use super::edgelist::Graph;
 
-/// Parse an edge-list file into a graph. `n` is inferred as max id + 1
-/// unless `min_n` raises it; labels start unlabeled (use
-/// [`read_labels`] to fill them).
-pub fn read_edges(path: &Path, min_n: usize) -> Result<Graph> {
+/// Stream an edge-list file, invoking `f(src, dst, weight)` per edge in
+/// file order without materializing the list — the out-of-core spine:
+/// the sharded engine's global pass and shard spilling both run over
+/// this, so only O(vertices) state is ever held for a file of any size.
+/// Returns the number of edges visited.
+pub fn for_each_edge(
+    path: &Path,
+    mut f: impl FnMut(u32, u32, f64),
+) -> Result<usize> {
+    try_for_each_edge(path, |a, b, w| {
+        f(a, b, w);
+        std::ops::ControlFlow::Continue(())
+    })
+}
+
+/// [`for_each_edge`] with early exit: the callback returns
+/// `ControlFlow::Break(())` to stop the stream (the visit count so far is
+/// still returned). Validation passes over huge files use this so the
+/// first fatal line does not cost a full read to EOF.
+pub fn try_for_each_edge(
+    path: &Path,
+    mut f: impl FnMut(u32, u32, f64) -> std::ops::ControlFlow<()>,
+) -> Result<usize> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut src = Vec::new();
-    let mut dst = Vec::new();
-    let mut w = Vec::new();
-    let mut max_id = 0u32;
+    let mut edges = 0usize;
     for (lineno, line) in BufReader::new(file).lines().enumerate() {
         let line = line?;
         let t = line.trim();
@@ -45,12 +61,30 @@ pub fn read_edges(path: &Path, min_n: usize) -> Result<Graph> {
                 .with_context(|| format!("{}:{}: bad weight", path.display(), lineno + 1))?,
             None => 1.0,
         };
+        let flow = f(a, b, weight);
+        edges += 1;
+        if flow.is_break() {
+            break;
+        }
+    }
+    Ok(edges)
+}
+
+/// Parse an edge-list file into a graph. `n` is inferred as max id + 1
+/// unless `min_n` raises it; labels start unlabeled (use
+/// [`read_labels`] to fill them).
+pub fn read_edges(path: &Path, min_n: usize) -> Result<Graph> {
+    let mut src = Vec::new();
+    let mut dst = Vec::new();
+    let mut w = Vec::new();
+    let mut max_id = 0u32;
+    let edges = for_each_edge(path, |a, b, weight| {
         max_id = max_id.max(a).max(b);
         src.push(a);
         dst.push(b);
         w.push(weight);
-    }
-    let n = (max_id as usize + 1).max(min_n);
+    })?;
+    let n = if edges == 0 { min_n } else { (max_id as usize + 1).max(min_n) };
     let mut g = Graph::new(n, 0);
     g.src = src;
     g.dst = dst;
@@ -59,24 +93,81 @@ pub fn read_edges(path: &Path, min_n: usize) -> Result<Graph> {
     Ok(g)
 }
 
-/// Read one label per line into an existing graph; sets `k` = max + 1.
-pub fn read_labels(path: &Path, g: &mut Graph) -> Result<()> {
+/// Read a labels file (one integer per non-comment line) into a vector.
+/// Labels below -1 are rejected: -1 is the only unlabeled sentinel the
+/// engines' `l >= 0` checks and `n_k` bookkeeping understand, so an
+/// arbitrary negative would silently mean "unlabeled" here and break
+/// round-trips elsewhere.
+pub fn read_label_vec(path: &Path) -> Result<Vec<i32>> {
     let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut labels = Vec::with_capacity(g.n);
-    for line in BufReader::new(file).lines() {
+    let mut labels = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
         }
-        labels.push(t.parse::<i32>().context("bad label")?);
+        let l: i32 = t
+            .parse()
+            .with_context(|| format!("{}:{}: bad label", path.display(), lineno + 1))?;
+        if l < -1 {
+            bail!(
+                "{}:{}: label {} < -1 (use -1 for unlabeled)",
+                path.display(),
+                lineno + 1,
+                l
+            );
+        }
+        labels.push(l);
     }
+    Ok(labels)
+}
+
+/// Read one label per line into an existing graph. `k` becomes
+/// `max(declared k, max label + 1)`: a labels file must never *shrink*
+/// the class space the graph already declares (an all-`-1` file used to
+/// set `k = 0`, making every engine emit zero-width embeddings).
+pub fn read_labels(path: &Path, g: &mut Graph) -> Result<()> {
+    let labels = read_label_vec(path)?;
     if labels.len() != g.n {
         bail!("label count {} != vertex count {}", labels.len(), g.n);
     }
-    g.k = labels.iter().copied().max().unwrap_or(-1).max(-1) as usize + 1;
+    let max_label = labels.iter().copied().max().unwrap_or(-1).max(-1);
+    g.k = g.k.max(max_label as usize + 1);
     g.labels = labels;
     Ok(())
+}
+
+/// Write one f64 per line in shortest-roundtrip form (Rust's `Display`
+/// for f64 is exact under re-parse) — the sharded engine ships global
+/// degree vectors to worker processes through this.
+pub fn write_f64_vec(path: &Path, values: &[f64]) -> Result<()> {
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    for v in values {
+        writeln!(f, "{v}")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a file of one f64 per line (inverse of [`write_f64_vec`]).
+pub fn read_f64_vec(path: &Path) -> Result<Vec<f64>> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut out = Vec::new();
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(
+            t.parse::<f64>()
+                .with_context(|| format!("{}:{}: bad value", path.display(), lineno + 1))?,
+        );
+    }
+    Ok(out)
 }
 
 /// Write a graph to `<stem>.edges` + `<stem>.labels`.
@@ -151,6 +242,75 @@ mod tests {
         std::fs::write(&p, "0 1\n").unwrap();
         let g = read_edges(&p, 10).unwrap();
         assert_eq!(g.n, 10);
+    }
+
+    #[test]
+    fn labels_never_shrink_declared_k() {
+        // regression (ISSUE 3): a labels file whose max label is below the
+        // graph's declared k must not clobber k downward
+        let d = tmpdir();
+        std::fs::write(d.join("shrink.edges"), "0 1\n1 2\n").unwrap();
+        std::fs::write(d.join("shrink.labels"), "0\n0\n1\n").unwrap();
+        let mut g = read_edges(&d.join("shrink.edges"), 0).unwrap();
+        g.k = 5; // declared wider than the observed labels
+        read_labels(&d.join("shrink.labels"), &mut g).unwrap();
+        assert_eq!(g.k, 5, "declared k must survive a narrower labels file");
+
+        // all-unlabeled file: k stays declared instead of collapsing to 0
+        std::fs::write(d.join("unlab.labels"), "-1\n-1\n-1\n").unwrap();
+        let mut g2 = read_edges(&d.join("shrink.edges"), 0).unwrap();
+        g2.k = 3;
+        read_labels(&d.join("unlab.labels"), &mut g2).unwrap();
+        assert_eq!(g2.k, 3);
+        assert_eq!(g2.labels, vec![-1, -1, -1]);
+
+        // and the file can still widen k
+        std::fs::write(d.join("wide.labels"), "0\n6\n1\n").unwrap();
+        let mut g3 = read_edges(&d.join("shrink.edges"), 0).unwrap();
+        g3.k = 2;
+        read_labels(&d.join("wide.labels"), &mut g3).unwrap();
+        assert_eq!(g3.k, 7);
+    }
+
+    #[test]
+    fn labels_below_minus_one_are_rejected() {
+        let d = tmpdir();
+        std::fs::write(d.join("neg.edges"), "0 1\n").unwrap();
+        std::fs::write(d.join("neg.labels"), "0\n-7\n").unwrap();
+        let mut g = read_edges(&d.join("neg.edges"), 0).unwrap();
+        let err = read_labels(&d.join("neg.labels"), &mut g).unwrap_err();
+        assert!(err.to_string().contains("-7"), "error names the label: {err}");
+    }
+
+    #[test]
+    fn f64_vec_roundtrips_bitwise() {
+        let d = tmpdir();
+        let p = d.join("deg.f64");
+        let vals = vec![
+            0.0,
+            1.0,
+            0.1 + 0.2, // not exactly representable as a short decimal
+            f64::MIN_POSITIVE,
+            1.234567890123456e300,
+            (2.0f64).sqrt(),
+        ];
+        write_f64_vec(&p, &vals).unwrap();
+        let back = read_f64_vec(&p).unwrap();
+        assert_eq!(back.len(), vals.len());
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} did not roundtrip");
+        }
+    }
+
+    #[test]
+    fn for_each_edge_streams_in_file_order() {
+        let d = tmpdir();
+        let p = d.join("stream.edges");
+        std::fs::write(&p, "# c\n0 1\n2 3 0.5\n1 1\n").unwrap();
+        let mut seen = Vec::new();
+        let count = for_each_edge(&p, |a, b, w| seen.push((a, b, w))).unwrap();
+        assert_eq!(count, 3);
+        assert_eq!(seen, vec![(0, 1, 1.0), (2, 3, 0.5), (1, 1, 1.0)]);
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //! * [`runtime`] — PJRT client, artifact manifest, padded execution
 //! * [`coordinator`] — embedding service: queue, batcher, streaming
 //!   updates, metrics
+//! * [`shard`] — vertex-range-sharded GEE: in-process, multi-process and
+//!   out-of-core backends for graphs past one process's memory
 //! * [`util`] — PRNG, JSON, property-test harness, timing
 
 pub mod coordinator;
@@ -24,6 +26,7 @@ pub mod gee;
 pub mod graph;
 pub mod harness;
 pub mod runtime;
+pub mod shard;
 pub mod sparse;
 pub mod tasks;
 pub mod util;

@@ -1,11 +1,15 @@
 //! `gee` — command-line front end for the sparse-GEE stack.
 //!
 //! Subcommands:
-//! * `info`        — Table 2 twins + artifact manifest summary
-//! * `generate`    — write a dataset twin / SBM graph to .edges/.labels
-//! * `embed`       — embed a graph with any engine (native or PJRT)
-//! * `bench-table` — regenerate a paper table/figure (2, 3, 4, fig3)
-//! * `serve`       — run the embedding service demo under synthetic load
+//! * `info`         — Table 2 twins + artifact manifest summary
+//! * `generate`     — write a dataset twin / SBM graph to .edges/.labels
+//! * `embed`        — embed a graph with any engine (native or PJRT)
+//! * `shard-embed`  — out-of-core sharded embed straight from files,
+//!                    optionally across worker processes
+//! * `shard-worker` — one shard's worker process (spawned by
+//!                    `shard-embed --workers P`; not for direct use)
+//! * `bench-table`  — regenerate a paper table/figure (2, 3, 4, fig3)
+//! * `serve`        — run the embedding service demo under synthetic load
 //!
 //! Arg parsing is hand-rolled (`--key value` / `--flag`) because the
 //! offline crate set has no clap; see `Args` below.
@@ -24,6 +28,10 @@ use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::{io, Graph};
 use gee_sparse::harness;
 use gee_sparse::runtime::{Manifest, Runtime};
+use gee_sparse::shard::{
+    embed_multiprocess, embed_out_of_core, run_worker, spill::spill_from_files,
+    ProcessConfig, SpillConfig, WorkerArgs,
+};
 use gee_sparse::tasks::kmeans::{kmeans, KMeansConfig};
 use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
 use gee_sparse::util::rng::Rng;
@@ -149,7 +157,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     } else {
         let engine = Engine::from_name(args.get("engine").unwrap_or("sparse"))
             .context(
-                "--engine must be dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]",
+                "--engine must be dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]",
             )?;
         engine.embed(&g, &opts)?
     };
@@ -170,14 +178,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
         println!("k-means ARI vs labels: {:.4}", adjusted_rand_index(&a, &b));
     }
     if let Some(out) = args.get("out") {
-        let mut text = String::new();
-        for r in 0..z.nrows {
-            let row: Vec<String> = z.row(r).iter().map(|v| format!("{v:.6}")).collect();
-            text.push_str(&row.join("\t"));
-            text.push('\n');
-        }
-        std::fs::write(out, text)?;
-        println!("embedding written to {out}");
+        write_embedding(out, &z)?;
     }
     Ok(())
 }
@@ -211,6 +212,108 @@ fn cmd_bench_table(args: &Args) -> Result<()> {
         other => bail!("unknown table '{other}' (use 2, 3, 4 or fig3)"),
     }
     Ok(())
+}
+
+/// Write an embedding as one TSV row per vertex (shared by `embed` and
+/// `shard-embed`).
+fn write_embedding(path: &str, z: &gee_sparse::sparse::Dense) -> Result<()> {
+    let mut text = String::new();
+    for r in 0..z.nrows {
+        let row: Vec<String> = z.row(r).iter().map(|v| format!("{v:.6}")).collect();
+        text.push_str(&row.join("\t"));
+        text.push('\n');
+    }
+    std::fs::write(path, text)?;
+    println!("embedding written to {path}");
+    Ok(())
+}
+
+fn cmd_shard_embed(args: &Args) -> Result<()> {
+    let (edges, labels) = if let Some(stem) = args.get("input") {
+        let stem = Path::new(stem);
+        (stem.with_extension("edges"), stem.with_extension("labels"))
+    } else {
+        let e = args.get("edges").context(
+            "specify a graph: --input STEM | --edges FILE --labels FILE",
+        )?;
+        let l = args.get("labels").context("--labels FILE required with --edges")?;
+        (PathBuf::from(e), PathBuf::from(l))
+    };
+    let opts = GeeOptions::from_code(args.get("options").unwrap_or("---"))
+        .context("--options takes a 3-char code like ldc, l-c, ---")?;
+    let spill_dir = args
+        .get("spill-dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("gee_shard_{}", std::process::id()))
+        });
+    let cfg = SpillConfig {
+        shards: args.get_usize("shards", 0)?,
+        mem_budget_edges: args.get_usize("mem-budget-edges", 0)?,
+        dir: spill_dir,
+        keep: args.has("keep-spill"),
+    };
+    let workers = args.get_usize("workers", 1)?;
+
+    let t0 = Instant::now();
+    let sp = spill_from_files(&edges, &labels, &cfg)?;
+    let spill_dt = t0.elapsed();
+    println!(
+        "spilled n={} directed={} k={} into {} shards under {} ({:.3}s)",
+        sp.plan.n,
+        sp.plan.directed,
+        sp.plan.k,
+        sp.plan.shards(),
+        sp.dir.display(),
+        spill_dt.as_secs_f64()
+    );
+    let t1 = Instant::now();
+    let z = if workers > 1 {
+        let worker_bin = std::env::current_exe().context("locate own binary")?;
+        embed_multiprocess(
+            &sp,
+            &opts,
+            &ProcessConfig { workers, worker_bin },
+        )?
+    } else {
+        embed_out_of_core(&sp, &opts)?
+    };
+    let dt = t1.elapsed();
+    println!(
+        "sharded embed ({}) of {} directed edges with {} in {:.3}s ({:.0} edges/s)",
+        if workers > 1 { "multi-process" } else { "out-of-core" },
+        sp.plan.directed,
+        opts.label(),
+        dt.as_secs_f64(),
+        sp.plan.directed as f64 / dt.as_secs_f64().max(1e-9)
+    );
+    if let Some(out) = args.get("out") {
+        write_embedding(out, &z)?;
+    }
+    Ok(())
+}
+
+fn cmd_shard_worker(args: &Args) -> Result<()> {
+    let get_path = |key: &str| -> Result<PathBuf> {
+        Ok(PathBuf::from(
+            args.get(key).with_context(|| format!("--{key} required"))?,
+        ))
+    };
+    let get_bool = |key: &str| -> bool {
+        matches!(args.get(key), Some("1") | Some("true"))
+    };
+    let wargs = WorkerArgs {
+        edges: get_path("edges")?,
+        labels: get_path("labels")?,
+        deg: get_path("deg")?,
+        n: args.get_usize("n", 0)?,
+        k: args.get_usize("k", 0)?,
+        row0: args.get_usize("row0", 0)?,
+        row1: args.get_usize("row1", 0)?,
+        options: GeeOptions::new(get_bool("lap"), get_bool("diag"), get_bool("cor")),
+        out: get_path("out")?,
+    };
+    run_worker(&wargs)
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -285,8 +388,13 @@ fn usage() -> &'static str {
        info         [--artifacts DIR]\n\
        generate     --dataset NAME | --sbm N   --out STEM [--seed S]\n\
        embed        --dataset NAME | --sbm N | --input STEM\n\
-                    [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]]\n\
+                    [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]]\n\
                     [--options ldc] [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
+       shard-embed  --input STEM | --edges FILE --labels FILE\n\
+                    [--shards S] [--mem-budget-edges B] [--workers P]\n\
+                    [--options ldc] [--spill-dir D] [--keep-spill] [--out FILE]\n\
+                    (out-of-core: streams edges from disk per shard;\n\
+                     --workers P > 1 embeds shards in P worker processes)\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
                     [--intra-op T]   (row-parallel threads for oversize graphs)\n\
@@ -304,6 +412,8 @@ fn main() -> Result<()> {
         "info" => cmd_info(&args),
         "generate" => cmd_generate(&args),
         "embed" => cmd_embed(&args),
+        "shard-embed" => cmd_shard_embed(&args),
+        "shard-worker" => cmd_shard_worker(&args),
         "bench-table" => cmd_bench_table(&args),
         "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {

@@ -1,0 +1,223 @@
+//! Phase 2 of the sharded pipeline: embed one shard's rows from its
+//! incident edge arrays plus the phase-1 globals.
+//!
+//! The shard builds the same row-grouped structure the fused engine
+//! builds globally (`prepare_into`), just restricted to its vertex range
+//! — and because the incident edges arrive in global storage order, each
+//! row's entries land in exactly the order the whole-graph counting sort
+//! would produce. The accumulation then *is*
+//! [`accumulate_rows`](crate::gee::sparse_gee::accumulate_rows) — the
+//! crate's single per-row kernel — viewing the shard-local `indptr`
+//! through its `row_base` offset. Net effect: shard outputs are
+//! **bitwise-identical** to `SparseGee::fast()`, not merely close.
+
+use crate::gee::options::GeeOptions;
+use crate::gee::sparse_gee::{accumulate_rows, AccumCtx};
+use crate::gee::workspace::{reset_f64, reset_u32, EmbedWorkspace};
+use crate::sparse::index::to_index;
+
+/// Embed rows `[v0, v1)` into `out` (length `(v1 - v0) * k`).
+///
+/// * `src`/`dst`/`w` — the shard's incident stored edges, global vertex
+///   ids, global storage order. Every stored edge with an endpoint in
+///   range must appear exactly once (an edge with *both* endpoints in
+///   range still appears once — both rows are recovered from the one
+///   copy, mirroring the undirected storage convention).
+/// * `labels`/`wv`/`scale` — the global (length-n) vectors from the
+///   [`ShardPlan`](super::plan::ShardPlan).
+/// * `ws` — scratch; the prepared-structure buffers are borrowed from it,
+///   so a warm workspace makes repeated shard embeds allocation-free.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn embed_shard(
+    src: &[u32],
+    dst: &[u32],
+    w: &[f64],
+    v0: usize,
+    v1: usize,
+    labels: &[i32],
+    wv: &[f64],
+    scale: Option<&[f64]>,
+    k: usize,
+    opts: &GeeOptions,
+    ws: &mut EmbedWorkspace,
+    out: &mut [f64],
+) {
+    let rows = v1 - v0;
+    debug_assert_eq!(out.len(), rows * k);
+    debug_assert_eq!(src.len(), dst.len());
+    debug_assert_eq!(src.len(), w.len());
+
+    let EmbedWorkspace { indptr, next, cols, vals, .. } = ws;
+
+    // counting pass over the shard's incident edges. `slots` tracks the
+    // exact in-range directed-slot total in u64 so the u32 fit check
+    // below is exact, not a 2x-conservative bound: the plan's headroom
+    // (resolve_shards) keeps this far under u32::MAX, and the check only
+    // fires for a genuinely unshardable range (a single vertex whose
+    // incident slots alone approach u32::MAX).
+    let range = v0..v1;
+    reset_u32(indptr, rows + 1);
+    let mut slots = 0u64;
+    for i in 0..src.len() {
+        let (a, b) = (src[i] as usize, dst[i] as usize);
+        if range.contains(&a) {
+            indptr[a - v0 + 1] = indptr[a - v0 + 1].wrapping_add(1);
+            slots += 1;
+        }
+        if a != b && range.contains(&b) {
+            indptr[b - v0 + 1] = indptr[b - v0 + 1].wrapping_add(1);
+            slots += 1;
+        }
+    }
+    // must precede any use of the (possibly wrapped) counts
+    to_index(usize::try_from(slots).unwrap_or(usize::MAX), "shard directed slots");
+    for r in 0..rows {
+        indptr[r + 1] += indptr[r];
+    }
+    let local_m = indptr[rows] as usize;
+
+    // fill pass, in the same order the global counting sort would
+    reset_u32(cols, local_m);
+    reset_f64(vals, local_m);
+    next.clear();
+    next.extend_from_slice(indptr);
+    for i in 0..src.len() {
+        let (a, b) = (src[i] as usize, dst[i] as usize);
+        if range.contains(&a) {
+            let p = next[a - v0] as usize;
+            cols[p] = dst[i];
+            vals[p] = w[i];
+            next[a - v0] += 1;
+        }
+        if a != b && range.contains(&b) {
+            let p = next[b - v0] as usize;
+            cols[p] = src[i];
+            vals[p] = w[i];
+            next[b - v0] += 1;
+        }
+    }
+
+    let ctx = AccumCtx {
+        indptr: &indptr[..],
+        row_base: v0,
+        cols: &cols[..],
+        vals: &vals[..],
+        labels,
+        wv,
+        k,
+    };
+    accumulate_rows(&ctx, opts, v0, v1, scale, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::gee::GeeOptions;
+    use crate::graph::Graph;
+    use crate::shard::plan::ShardPlan;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(0, 0, 1.5);
+        g.add_edge((n - 1) as u32, (n - 1) as u32, 0.25);
+        g
+    }
+
+    /// Gather the incident stored edges of `[v0, v1)` in storage order —
+    /// the reference gather the engine and spill lanes must both match.
+    fn gather(g: &Graph, v0: usize, v1: usize) -> (Vec<u32>, Vec<u32>, Vec<f64>) {
+        let (mut s, mut d, mut w) = (Vec::new(), Vec::new(), Vec::new());
+        let range = v0..v1;
+        for i in 0..g.num_edges() {
+            let (a, b) = (g.src[i] as usize, g.dst[i] as usize);
+            if range.contains(&a) || range.contains(&b) {
+                s.push(g.src[i]);
+                d.push(g.dst[i]);
+                w.push(g.w[i]);
+            }
+        }
+        (s, d, w)
+    }
+
+    #[test]
+    fn shard_rows_bitwise_match_fused_engine() {
+        let g = random_graph(511, 90, 500, 4);
+        let plan = ShardPlan::from_graph(&g, 4);
+        let mut ws = EmbedWorkspace::new();
+        for opts in GeeOptions::table_order() {
+            let whole = SparseGee::fast().embed(&g, &opts);
+            let scale = plan.scale_for(&opts);
+            for s in 0..plan.shards() {
+                let (v0, v1) = plan.shard_range(s);
+                let (src, dst, w) = gather(&g, v0, v1);
+                let mut out = vec![0.0; (v1 - v0) * g.k];
+                embed_shard(
+                    &src,
+                    &dst,
+                    &w,
+                    v0,
+                    v1,
+                    &g.labels,
+                    &plan.wv,
+                    scale.as_deref(),
+                    g.k,
+                    &opts,
+                    &mut ws,
+                    &mut out,
+                );
+                assert_eq!(
+                    out,
+                    whole.data[v0 * g.k..v1 * g.k],
+                    "shard {s} rows drifted at {opts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shard_and_empty_range() {
+        let g = random_graph(512, 10, 0, 2);
+        let wv = vec![0.0; g.n];
+        let mut ws = EmbedWorkspace::new();
+        let mut out = vec![0.0; 5 * g.k];
+        embed_shard(
+            &[],
+            &[],
+            &[],
+            0,
+            5,
+            &g.labels,
+            &wv,
+            None,
+            g.k,
+            &GeeOptions::ALL,
+            &mut ws,
+            &mut out,
+        );
+        assert!(out.iter().all(|&x| x == 0.0));
+        let mut none: Vec<f64> = Vec::new();
+        embed_shard(
+            &[],
+            &[],
+            &[],
+            3,
+            3,
+            &g.labels,
+            &wv,
+            None,
+            g.k,
+            &GeeOptions::NONE,
+            &mut ws,
+            &mut none,
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! Vertex-range-sharded GEE — scale-out past one process's memory and
+//! threads (ROADMAP "sharding / multi-process" item; the scale framing of
+//! One-Hot GEE, arXiv:2109.13098, and the row-independence observation of
+//! Edge-Parallel GEE, arXiv:2402.04403, made concrete).
+//!
+//! Two phases, exact by construction:
+//!
+//! 1. **Global pass** ([`plan::GlobalPass`]) — one streaming sweep over
+//!    the edge list computes class counts (via labels → `1/n_k` weights),
+//!    weighted degrees, and per-vertex directed-slot counts; vertices are
+//!    then split into contiguous nnz-balanced shards
+//!    ([`crate::sparse::partition::nnz_chunks_u64`]).
+//! 2. **Shard pass** ([`local`]) — each shard embeds its own rows from
+//!    its incident edges plus the phase-1 globals, through the crate's
+//!    single per-row accumulation kernel. Rows are disjoint, so outputs
+//!    concatenate with no merge; every row is produced in the same op
+//!    order as the fused serial engine, so the result is
+//!    **bitwise-identical** to `SparseGee::fast()`.
+//!
+//! Three execution backends:
+//! * **in-process** ([`ShardedGee`], `Engine::Sharded`) — shards run on
+//!   scoped threads, each worker thread holding one pooled
+//!   [`EmbedWorkspace`] reused across its shards. Because each shard's
+//!   index structure is local, graphs whose *global* directed-edge count
+//!   overflows the u32 index space embed here instead of erroring.
+//! * **out-of-core** ([`spill::embed_out_of_core`]) — edges stream from
+//!   disk: one pass spills each shard's incident edges to its own file,
+//!   then shards load one at a time, so peak residency is one shard's
+//!   slice (+ O(n) vectors) no matter how large the edge list is.
+//! * **multi-process** ([`process::embed_multiprocess`]) — worker
+//!   processes (`gee shard-worker`) each embed one spilled shard,
+//!   exchanging data via the `graph::io` text formats (exact: f64 writes
+//!   use shortest-roundtrip form).
+
+pub mod local;
+pub mod plan;
+pub mod process;
+pub mod spill;
+pub mod worker;
+
+pub use plan::{resolve_shards, GlobalPass, ShardPlan};
+pub use process::{embed_multiprocess, ProcessConfig};
+pub use spill::{embed_out_of_core, SpillConfig, SpilledShards};
+pub use worker::{run_worker, WorkerArgs};
+
+use crate::gee::options::GeeOptions;
+use crate::gee::workspace::EmbedWorkspace;
+use crate::graph::Graph;
+use crate::sparse::partition::resolve_threads;
+use crate::sparse::Dense;
+
+/// In-process sharded engine: phase 1, bucket incident edges per shard,
+/// embed shards on scoped threads.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardedGee {
+    /// Shard count; 0 = auto (one per core, raised for u32 safety).
+    pub shards: usize,
+    /// Worker threads; 0 = auto (capped at the shard count).
+    pub threads: usize,
+}
+
+impl ShardedGee {
+    pub fn new(shards: usize) -> ShardedGee {
+        ShardedGee { shards, threads: 0 }
+    }
+
+    pub fn with_threads(shards: usize, threads: usize) -> ShardedGee {
+        ShardedGee { shards, threads }
+    }
+
+    /// Embed the graph. Bitwise-identical to `SparseGee::fast()` for any
+    /// shard count and thread count.
+    ///
+    /// Memory note: the in-process lane stages a second copy of the edge
+    /// list in per-shard buckets (~16 bytes per stored edge, plus one
+    /// duplicate per shard-crossing edge) — the price of embedding a
+    /// graph whose *index structures* overflow u32 without touching
+    /// disk. When the edge list itself is the memory constraint, use the
+    /// spill lanes ([`spill::embed_out_of_core`] /
+    /// [`process::embed_multiprocess`]), which keep one shard resident
+    /// at a time.
+    pub fn embed(&self, g: &Graph, opts: &GeeOptions) -> Dense {
+        let plan = ShardPlan::from_graph(g, self.shards);
+        let s_count = plan.shards();
+        let (k, n) = (g.k, g.n);
+
+        // bucket incident stored edges per shard (counted first so each
+        // bucket is one exact allocation); an edge crossing two shards is
+        // copied into both, mirroring the on-disk spill format
+        let mut copies = vec![0usize; s_count];
+        for i in 0..g.num_edges() {
+            let sa = plan.shard_of(g.src[i] as usize);
+            let sb = plan.shard_of(g.dst[i] as usize);
+            copies[sa] += 1;
+            if sb != sa {
+                copies[sb] += 1;
+            }
+        }
+        let mut shard_src: Vec<Vec<u32>> =
+            copies.iter().map(|&c| Vec::with_capacity(c)).collect();
+        let mut shard_dst: Vec<Vec<u32>> =
+            copies.iter().map(|&c| Vec::with_capacity(c)).collect();
+        let mut shard_w: Vec<Vec<f64>> =
+            copies.iter().map(|&c| Vec::with_capacity(c)).collect();
+        for i in 0..g.num_edges() {
+            let (a, b, w) = (g.src[i], g.dst[i], g.w[i]);
+            let sa = plan.shard_of(a as usize);
+            let sb = plan.shard_of(b as usize);
+            shard_src[sa].push(a);
+            shard_dst[sa].push(b);
+            shard_w[sa].push(w);
+            if sb != sa {
+                shard_src[sb].push(a);
+                shard_dst[sb].push(b);
+                shard_w[sb].push(w);
+            }
+        }
+
+        let scale = plan.scale_for(opts);
+        let mut z = Dense::zeros(n, k);
+
+        // hand each worker thread its shards' disjoint Z row blocks
+        let t = resolve_threads(self.threads).min(s_count.max(1));
+        let mut assignments: Vec<Vec<(usize, &mut [f64])>> =
+            (0..t).map(|_| Vec::new()).collect();
+        {
+            let mut rest: &mut [f64] = &mut z.data;
+            for s in 0..s_count {
+                let (v0, v1) = plan.shard_range(s);
+                let (here, next) =
+                    std::mem::take(&mut rest).split_at_mut((v1 - v0) * k);
+                rest = next;
+                assignments[s % t].push((s, here));
+            }
+        }
+
+        let plan_ref = &plan;
+        let scale_ref = scale.as_deref();
+        let (src_ref, dst_ref, w_ref) = (&shard_src, &shard_dst, &shard_w);
+        let labels_ref = &g.labels;
+        std::thread::scope(|sc| {
+            for work in assignments {
+                sc.spawn(move || {
+                    // one pooled workspace per worker thread, reused
+                    // across all of its shards
+                    let mut ws = EmbedWorkspace::new();
+                    for (s, out) in work {
+                        let (v0, v1) = plan_ref.shard_range(s);
+                        local::embed_shard(
+                            &src_ref[s],
+                            &dst_ref[s],
+                            &w_ref[s],
+                            v0,
+                            v1,
+                            labels_ref,
+                            &plan_ref.wv,
+                            scale_ref,
+                            k,
+                            opts,
+                            &mut ws,
+                            out,
+                        );
+                    }
+                });
+            }
+        });
+        z
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::gee::Engine;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.08 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(2, 2, 2.5);
+        g
+    }
+
+    #[test]
+    fn sharded_bitwise_matches_fused_any_shard_count() {
+        let g = random_graph(521, 150, 900, 4);
+        for opts in GeeOptions::table_order() {
+            let fused = SparseGee::fast().embed(&g, &opts);
+            for s in [1usize, 2, 3, 7, 16] {
+                let z = ShardedGee::new(s).embed(&g, &opts);
+                assert_eq!(
+                    z.data, fused.data,
+                    "sharded s={s} not bitwise vs fused at {opts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_matches_published_sparse_engine() {
+        let g = random_graph(522, 100, 600, 3);
+        for opts in GeeOptions::table_order() {
+            let reference = Engine::Sparse.embed(&g, &opts).unwrap();
+            let z = ShardedGee::with_threads(4, 2).embed(&g, &opts);
+            assert!(
+                reference.max_abs_diff(&z) <= 1e-12,
+                "sharded vs sparse at {opts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_output() {
+        let g = random_graph(523, 80, 400, 3);
+        let opts = GeeOptions::ALL;
+        let base = ShardedGee::with_threads(5, 1).embed(&g, &opts);
+        for t in [2usize, 3, 8] {
+            let z = ShardedGee::with_threads(5, t).embed(&g, &opts);
+            assert_eq!(z.data, base.data, "t={t} changed sharded output");
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        // empty graph
+        let g0 = Graph::new(4, 2);
+        let z = ShardedGee::new(3).embed(&g0, &GeeOptions::ALL);
+        assert_eq!((z.nrows, z.ncols), (4, 2));
+        assert!(z.data.iter().all(|&x| x == 0.0));
+        // zero vertices
+        let ge = Graph::new(0, 0);
+        let z = ShardedGee::new(2).embed(&ge, &GeeOptions::NONE);
+        assert_eq!(z.data.len(), 0);
+        // single vertex, self loop
+        let mut g1 = Graph::new(1, 1);
+        g1.labels[0] = 0;
+        g1.add_edge(0, 0, 2.0);
+        let expect = SparseGee::fast().embed(&g1, &GeeOptions::ALL);
+        let z = ShardedGee::new(8).embed(&g1, &GeeOptions::ALL);
+        assert_eq!(z.data, expect.data);
+        // more shards than vertices
+        let g2 = random_graph(524, 3, 5, 2);
+        let expect = SparseGee::fast().embed(&g2, &GeeOptions::NONE);
+        let z = ShardedGee::new(64).embed(&g2, &GeeOptions::NONE);
+        assert_eq!(z.data, expect.data);
+    }
+}

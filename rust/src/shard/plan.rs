@@ -1,0 +1,236 @@
+//! Phase 1 of the sharded pipeline: one streaming pass over the edge
+//! list computes every *global* quantity a shard needs — weighted
+//! degrees, per-vertex directed-slot counts, and (from the labels) the
+//! `1/n_k` weight vector — then vertices are partitioned into contiguous
+//! nnz-balanced ranges. This is what makes sharding **exact**: a GEE row
+//! depends only on these globals plus the row's incident edges, so shard
+//! outputs concatenate into the whole-graph answer with no correction
+//! pass (cf. One-Hot GEE, arXiv:2109.13098, whose billions-of-edges
+//! claim rests on the same per-row independence).
+//!
+//! The accumulator is streaming on purpose: [`GlobalPass::observe`] holds
+//! O(vertices) state, never the edges, so the same phase 1 serves the
+//! in-memory engine and the out-of-core lane reading a file larger than
+//! RAM.
+
+use crate::gee::options::GeeOptions;
+use crate::gee::weights::weight_values;
+use crate::graph::Graph;
+use crate::sparse::ops::safe_recip_sqrt;
+use crate::sparse::partition::{nnz_chunks_u64, resolve_threads};
+use crate::sparse::MAX_INDEX;
+
+/// Everything phase 2 needs, computed once in phase 1.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub n: usize,
+    pub k: usize,
+    /// Shard vertex boundaries (length shards + 1, non-decreasing,
+    /// `bounds[0] == 0`, `bounds[last] == n`), balanced by directed
+    /// incident-slot count so hub-heavy ranges stay narrow.
+    pub bounds: Vec<usize>,
+    /// Global weighted degrees (length n), accumulated in edge order —
+    /// bitwise-identical to `Graph::degrees` / `prepare_into`.
+    pub deg: Vec<f64>,
+    /// Global per-vertex `1/n_{y_j}` weights (length n).
+    pub wv: Vec<f64>,
+    /// Total directed slots (2·proper + self loops) as u64 — allowed to
+    /// exceed the u32 index space; only per-shard slices must fit.
+    pub directed: u64,
+}
+
+impl ShardPlan {
+    /// Phase 1 over an in-memory graph.
+    pub fn from_graph(g: &Graph, shards: usize) -> ShardPlan {
+        let mut pass = GlobalPass::new(g.n);
+        for i in 0..g.num_edges() {
+            pass.observe(g.src[i], g.dst[i], g.w[i]);
+        }
+        pass.finish(&g.labels, g.k, shards)
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Vertex range `[v0, v1)` of shard `s`.
+    pub fn shard_range(&self, s: usize) -> (usize, usize) {
+        (self.bounds[s], self.bounds[s + 1])
+    }
+
+    /// Which shard owns vertex `v` (binary search over the boundaries;
+    /// empty shards are skipped by construction).
+    pub fn shard_of(&self, v: usize) -> usize {
+        self.bounds.partition_point(|&b| b <= v) - 1
+    }
+
+    /// The Laplacian scale vector `(deg + diag)^-1/2` for these options,
+    /// or `None` when laplacian is off. Element-wise over the global
+    /// degrees, so bitwise-identical to the fused engine's scale.
+    pub fn scale_for(&self, opts: &GeeOptions) -> Option<Vec<f64>> {
+        scale_from_deg(&self.deg, opts)
+    }
+}
+
+/// The Laplacian scale formula, standalone: the shard-worker process
+/// recomputes the scale from the shipped degree file through this same
+/// function, so the cross-process bitwise contract rests on exactly one
+/// implementation.
+pub fn scale_from_deg(deg: &[f64], opts: &GeeOptions) -> Option<Vec<f64>> {
+    if !opts.laplacian {
+        return None;
+    }
+    let bump = if opts.diagonal { 1.0 } else { 0.0 };
+    Some(deg.iter().map(|&d| safe_recip_sqrt(d + bump)).collect())
+}
+
+/// Resolve a requested shard count: `0` means one per available core
+/// (the in-process sweet spot); any request is raised to keep every
+/// shard's directed-slot count safely inside the u32 index space (the
+/// *reason* oversize graphs route here), and capped at one shard per
+/// vertex.
+pub fn resolve_shards(requested: usize, n: usize, directed: u64) -> usize {
+    let base = if requested == 0 { resolve_threads(0) } else { requested };
+    // headroom factor 4 over perfect balance: nnz_chunks cannot split a
+    // single vertex's slots, so a hub can push one shard past the ideal
+    // share — target MAX_INDEX/4 per shard so even a shard that doubles
+    // its share stays within the exact u32 check in `local::embed_shard`
+    let quarter = (MAX_INDEX / 4).max(1) as u64;
+    let min_for_u32 = ((directed + quarter - 1) / quarter) as usize;
+    base.max(min_for_u32).max(1).min(n.max(1))
+}
+
+/// Streaming phase-1 accumulator: O(n) state, one `observe` per stored
+/// (undirected) edge, in storage order.
+#[derive(Clone, Debug)]
+pub struct GlobalPass {
+    deg: Vec<f64>,
+    /// Directed incident slots per vertex (self loops count once).
+    counts: Vec<u64>,
+    directed: u64,
+    edges: u64,
+}
+
+impl GlobalPass {
+    pub fn new(n: usize) -> GlobalPass {
+        GlobalPass { deg: vec![0.0; n], counts: vec![0; n], directed: 0, edges: 0 }
+    }
+
+    /// Account one stored (undirected) edge. Must be called in storage
+    /// order for the degree accumulation to stay bitwise-identical to
+    /// the in-core engines.
+    #[inline]
+    pub fn observe(&mut self, a: u32, b: u32, w: f64) {
+        let (ai, bi) = (a as usize, b as usize);
+        self.deg[ai] += w;
+        self.counts[ai] += 1;
+        self.directed += 1;
+        if ai != bi {
+            self.deg[bi] += w;
+            self.counts[bi] += 1;
+            self.directed += 1;
+        }
+        self.edges += 1;
+    }
+
+    /// Stored (undirected) edges observed so far.
+    pub fn edges_seen(&self) -> u64 {
+        self.edges
+    }
+
+    /// Directed slots observed so far.
+    pub fn directed(&self) -> u64 {
+        self.directed
+    }
+
+    /// Close the pass: balance the shard boundaries over the observed
+    /// slot counts and derive the weight vector from the labels.
+    pub fn finish(self, labels: &[i32], k: usize, shards: usize) -> ShardPlan {
+        let n = self.deg.len();
+        assert_eq!(labels.len(), n, "labels length must match vertex count");
+        let shards = resolve_shards(shards, n, self.directed);
+        let mut prefix = Vec::with_capacity(n + 1);
+        prefix.push(0u64);
+        let mut run = 0u64;
+        for &c in &self.counts {
+            run += c;
+            prefix.push(run);
+        }
+        let bounds = nnz_chunks_u64(&prefix, shards);
+        ShardPlan {
+            n,
+            k,
+            bounds,
+            deg: self.deg,
+            wv: weight_values(labels, k),
+            directed: self.directed,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(3, 3, 2.0);
+        g
+    }
+
+    #[test]
+    fn plan_globals_match_graph_accessors() {
+        let g = random_graph(501, 120, 700, 4);
+        let plan = ShardPlan::from_graph(&g, 4);
+        assert_eq!(plan.deg, g.degrees(), "degrees must be bitwise identical");
+        assert_eq!(plan.wv, weight_values(&g.labels, g.k));
+        assert_eq!(plan.directed as usize, g.num_directed());
+        assert_eq!(plan.bounds.first(), Some(&0));
+        assert_eq!(plan.bounds.last(), Some(&g.n));
+        assert!(plan.bounds.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn shard_of_inverts_ranges() {
+        let g = random_graph(502, 200, 1_000, 3);
+        let plan = ShardPlan::from_graph(&g, 5);
+        for v in 0..g.n {
+            let s = plan.shard_of(v);
+            let (v0, v1) = plan.shard_range(s);
+            assert!(v0 <= v && v < v1, "vertex {v} outside shard {s} [{v0},{v1})");
+        }
+    }
+
+    #[test]
+    fn resolve_shards_policy() {
+        assert!(resolve_shards(0, 100, 1_000) >= 1);
+        assert_eq!(resolve_shards(3, 100, 1_000), 3);
+        // capped at vertex count
+        assert_eq!(resolve_shards(64, 5, 100), 5);
+        assert_eq!(resolve_shards(4, 0, 0), 1);
+        // raised so each shard's slice fits u32 (with 4x headroom)
+        let huge = 3 * (MAX_INDEX as u64); // ~12.9B directed slots
+        assert!(resolve_shards(1, usize::MAX >> 8, huge) >= 12);
+    }
+
+    #[test]
+    fn scale_matches_fused_formula() {
+        let g = random_graph(503, 60, 300, 3);
+        let plan = ShardPlan::from_graph(&g, 2);
+        assert!(plan.scale_for(&GeeOptions::NONE).is_none());
+        let s = plan
+            .scale_for(&GeeOptions::new(true, true, false))
+            .unwrap();
+        for (v, &d) in plan.deg.iter().enumerate() {
+            assert_eq!(s[v].to_bits(), safe_recip_sqrt(d + 1.0).to_bits());
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Multi-process backend: each spilled shard is embedded by a separate
+//! worker process running this binary's `shard-worker` subcommand, so
+//! the shard pass scales past one process's memory and (on a fleet
+//! launcher) one machine.
+//!
+//! The exchange is entirely through the `graph::io` text formats — shard
+//! edge files from the spill, a shared labels file, a shared degree file
+//! (shortest-roundtrip f64, so the worker's Laplacian scale is
+//! bitwise-identical to the in-process one), and one Z-rows file back per
+//! shard. Workers run in waves of `workers` concurrent processes; a
+//! failed worker surfaces its stderr.
+
+use std::fs::{self, File};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+
+use anyhow::{bail, Context, Result};
+
+use super::spill::SpilledShards;
+use crate::gee::options::GeeOptions;
+use crate::graph::io::write_f64_vec;
+use crate::sparse::Dense;
+
+/// Multi-process execution settings.
+#[derive(Clone, Debug)]
+pub struct ProcessConfig {
+    /// Concurrent worker processes (1–4 is the tested range; waves of
+    /// this size run until every shard is done).
+    pub workers: usize,
+    /// Binary exposing the `shard-worker` subcommand — the `gee` CLI
+    /// itself in production; tests pass `env!("CARGO_BIN_EXE_gee")`.
+    pub worker_bin: PathBuf,
+}
+
+impl ProcessConfig {
+    pub fn new(worker_bin: impl Into<PathBuf>) -> ProcessConfig {
+        ProcessConfig { workers: 2, worker_bin: worker_bin.into() }
+    }
+}
+
+/// Embed a spilled graph with worker processes, one shard per worker
+/// invocation. Output is bitwise-identical to the in-process lanes.
+pub fn embed_multiprocess(
+    sp: &SpilledShards,
+    opts: &GeeOptions,
+    cfg: &ProcessConfig,
+) -> Result<Dense> {
+    let plan = &sp.plan;
+    // ship the phase-1 globals once
+    let labels_path = sp.dir.join("global.labels");
+    {
+        let mut f = BufWriter::new(
+            File::create(&labels_path)
+                .with_context(|| format!("create {}", labels_path.display()))?,
+        );
+        for &l in &sp.labels {
+            writeln!(f, "{l}")?;
+        }
+        f.flush()?;
+    }
+    let deg_path = sp.dir.join("global.deg");
+    write_f64_vec(&deg_path, &plan.deg)?;
+
+    let mut z = Dense::zeros(plan.n, plan.k);
+    let wave = cfg.workers.max(1);
+    let mut next_shard = 0usize;
+    while next_shard < plan.shards() {
+        let hi = (next_shard + wave).min(plan.shards());
+        let mut children = Vec::with_capacity(hi - next_shard);
+        for s in next_shard..hi {
+            let (v0, v1) = plan.shard_range(s);
+            let out_path = sp.dir.join(format!("z_{s}.tsv"));
+            let child = Command::new(&cfg.worker_bin)
+                .arg("shard-worker")
+                .arg("--edges")
+                .arg(&sp.files[s])
+                .arg("--labels")
+                .arg(&labels_path)
+                .arg("--deg")
+                .arg(&deg_path)
+                .arg("--n")
+                .arg(plan.n.to_string())
+                .arg("--k")
+                .arg(plan.k.to_string())
+                .arg("--row0")
+                .arg(v0.to_string())
+                .arg("--row1")
+                .arg(v1.to_string())
+                // lap/diag/cor as 0/1 values (the compact "--c"-style
+                // code would be eaten as a flag by the CLI arg parser)
+                .arg("--lap")
+                .arg(if opts.laplacian { "1" } else { "0" })
+                .arg("--diag")
+                .arg(if opts.diagonal { "1" } else { "0" })
+                .arg("--cor")
+                .arg(if opts.correlation { "1" } else { "0" })
+                .arg("--out")
+                .arg(&out_path)
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::piped())
+                .spawn()
+                .with_context(|| {
+                    format!("spawn shard-worker via {}", cfg.worker_bin.display())
+                })?;
+            children.push((s, v0, v1, out_path, child));
+        }
+        // wait the whole wave before acting on any failure: an early bail
+        // must not leave running children (or zombies) and their output
+        // files behind
+        let mut outputs = Vec::with_capacity(children.len());
+        for (s, v0, v1, out_path, child) in children {
+            let res = child
+                .wait_with_output()
+                .with_context(|| format!("wait for shard-worker {s}"));
+            outputs.push((s, v0, v1, out_path, res));
+        }
+        let mut first_err: Option<anyhow::Error> = None;
+        for (s, v0, v1, out_path, res) in outputs {
+            let step = (|| -> Result<()> {
+                let out = res?;
+                if !out.status.success() {
+                    bail!(
+                        "shard-worker {s} failed ({}): {}",
+                        out.status,
+                        String::from_utf8_lossy(&out.stderr).trim()
+                    );
+                }
+                let rows = read_z_rows(
+                    &out_path,
+                    plan.k,
+                    &mut z.data[v0 * plan.k..v1 * plan.k],
+                )?;
+                if rows != v1 - v0 {
+                    bail!(
+                        "shard-worker {s} wrote {rows} rows, expected {}",
+                        v1 - v0
+                    );
+                }
+                Ok(())
+            })();
+            let _ = fs::remove_file(&out_path);
+            if let Err(e) = step {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            if !sp.keep {
+                let _ = fs::remove_file(&labels_path);
+                let _ = fs::remove_file(&deg_path);
+            }
+            return Err(e);
+        }
+        next_shard = hi;
+    }
+    if !sp.keep {
+        let _ = fs::remove_file(&labels_path);
+        let _ = fs::remove_file(&deg_path);
+    }
+    Ok(z)
+}
+
+/// Parse a worker's Z-rows file (one whitespace-separated row per line)
+/// into `out`; returns the row count.
+fn read_z_rows(path: &Path, k: usize, out: &mut [f64]) -> Result<usize> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut row = 0usize;
+    for line in BufReader::new(f).lines() {
+        let line = line?;
+        if k > 0 && row * k >= out.len() {
+            bail!("{}: more rows than the shard range", path.display());
+        }
+        let mut col = 0usize;
+        for tok in line.split_whitespace() {
+            if col >= k {
+                bail!("{}:{}: more than {k} columns", path.display(), row + 1);
+            }
+            out[row * k + col] = tok.parse::<f64>().with_context(|| {
+                format!("{}:{}: bad value", path.display(), row + 1)
+            })?;
+            col += 1;
+        }
+        if col != k {
+            bail!(
+                "{}:{}: {col} columns, expected {k}",
+                path.display(),
+                row + 1
+            );
+        }
+        row += 1;
+    }
+    Ok(row)
+}

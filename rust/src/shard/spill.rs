@@ -1,0 +1,391 @@
+//! On-disk shard exchange — the out-of-core backend.
+//!
+//! Spilling uses the `graph::io` edge-list text format (one
+//! `src dst weight` line, weights in shortest-roundtrip form so they
+//! re-parse bitwise): one streaming pass writes every stored edge into
+//! the spill file of each endpoint's shard (once, when both endpoints
+//! share a shard). Each shard file therefore holds exactly the shard's
+//! incident edges in global storage order — the invariant
+//! [`local::embed_shard`](super::local::embed_shard) needs for
+//! bitwise-identical rows.
+//!
+//! [`embed_out_of_core`] then loads one shard at a time, so peak edge
+//! residency is a single shard's slice (bounded by
+//! [`SpillConfig::mem_budget_edges`], which raises the shard count until
+//! the ideal per-shard share fits) plus the O(n) global vectors — a graph
+//! whose edge list dwarfs RAM still embeds.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::local::embed_shard;
+use super::plan::{GlobalPass, ShardPlan};
+use crate::gee::options::GeeOptions;
+use crate::gee::workspace::EmbedWorkspace;
+use crate::graph::io::{for_each_edge, read_label_vec, try_for_each_edge};
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// How to spill.
+#[derive(Clone, Debug)]
+pub struct SpillConfig {
+    /// Requested shard count; 0 = auto. Raised by the memory budget and
+    /// the u32-per-shard rule regardless.
+    pub shards: usize,
+    /// Target cap on stored-edge copies resident per shard load; 0 = no
+    /// budget. The shard count is raised to `ceil(directed / budget)`,
+    /// so the cap is exact under perfect balance and approximate when a
+    /// hub vertex makes one range heavy (a single vertex's edges cannot
+    /// be split across shards).
+    pub mem_budget_edges: usize,
+    /// Directory for spill files (created if absent).
+    pub dir: PathBuf,
+    /// Keep spill files on drop (debugging / inspection).
+    pub keep: bool,
+}
+
+impl SpillConfig {
+    pub fn new(dir: impl Into<PathBuf>) -> SpillConfig {
+        SpillConfig { shards: 0, mem_budget_edges: 0, dir: dir.into(), keep: false }
+    }
+}
+
+/// A spilled graph: the phase-1 plan, the global labels, and one
+/// incident-edge file per shard. Spill files are removed on drop unless
+/// the config said `keep`.
+#[derive(Debug)]
+pub struct SpilledShards {
+    pub plan: ShardPlan,
+    pub labels: Vec<i32>,
+    pub files: Vec<PathBuf>,
+    pub dir: PathBuf,
+    pub keep: bool,
+}
+
+impl Drop for SpilledShards {
+    fn drop(&mut self) {
+        if !self.keep {
+            for f in &self.files {
+                let _ = fs::remove_file(f);
+            }
+        }
+    }
+}
+
+/// Shard count request after applying the memory budget.
+fn requested_shards(cfg: &SpillConfig, directed: u64) -> usize {
+    let mut req = cfg.shards;
+    if cfg.mem_budget_edges > 0 {
+        let b = cfg.mem_budget_edges as u64;
+        let need = ((directed + b - 1) / b) as usize;
+        req = req.max(need);
+    }
+    req
+}
+
+fn open_writers(
+    dir: &Path,
+    shards: usize,
+) -> Result<(Vec<PathBuf>, Vec<BufWriter<File>>)> {
+    fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+    let mut files = Vec::with_capacity(shards);
+    let mut writers = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let path = dir.join(format!("shard_{s}.edges"));
+        let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
+        files.push(path);
+        writers.push(BufWriter::new(f));
+    }
+    Ok((files, writers))
+}
+
+/// Spill an in-memory graph (the multi-process lane's entry point when
+/// the graph is already resident).
+pub fn spill_from_graph(g: &Graph, cfg: &SpillConfig) -> Result<SpilledShards> {
+    let mut pass = GlobalPass::new(g.n);
+    for i in 0..g.num_edges() {
+        pass.observe(g.src[i], g.dst[i], g.w[i]);
+    }
+    let req = requested_shards(cfg, pass.directed());
+    let plan = pass.finish(&g.labels, g.k, req);
+    let (files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
+    for i in 0..g.num_edges() {
+        let (a, b, w) = (g.src[i], g.dst[i], g.w[i]);
+        let sa = plan.shard_of(a as usize);
+        let sb = plan.shard_of(b as usize);
+        writeln!(writers[sa], "{a} {b} {w}")?;
+        if sb != sa {
+            writeln!(writers[sb], "{a} {b} {w}")?;
+        }
+    }
+    for wtr in &mut writers {
+        wtr.flush()?;
+    }
+    Ok(SpilledShards {
+        plan,
+        labels: g.labels.clone(),
+        files,
+        dir: cfg.dir.clone(),
+        keep: cfg.keep,
+    })
+}
+
+/// Spill straight from on-disk `.edges` + `.labels` files without ever
+/// materializing the graph: pass 1 streams the globals, pass 2 streams
+/// again routing each line to its shard file(s). O(n) memory.
+/// `k` is `max label + 1` from the labels file.
+pub fn spill_from_files(
+    edges: &Path,
+    labels_path: &Path,
+    cfg: &SpillConfig,
+) -> Result<SpilledShards> {
+    let labels = read_label_vec(labels_path)?;
+    let n = labels.len();
+    let k = (labels.iter().copied().max().unwrap_or(-1).max(-1) + 1) as usize;
+
+    let mut pass = GlobalPass::new(n);
+    let mut oob: Option<(u32, u32)> = None;
+    try_for_each_edge(edges, |a, b, w| {
+        if (a as usize) < n && (b as usize) < n {
+            pass.observe(a, b, w);
+            std::ops::ControlFlow::Continue(())
+        } else {
+            // stop the stream: validating the rest of a file that may be
+            // larger than RAM buys nothing once one edge is fatal
+            oob = Some((a, b));
+            std::ops::ControlFlow::Break(())
+        }
+    })?;
+    if let Some((a, b)) = oob {
+        bail!(
+            "edge ({a}, {b}) out of range: {} declares {n} vertices",
+            labels_path.display()
+        );
+    }
+
+    let req = requested_shards(cfg, pass.directed());
+    let plan = pass.finish(&labels, k, req);
+    let (files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
+    let mut io_err: Option<std::io::Error> = None;
+    for_each_edge(edges, |a, b, w| {
+        if io_err.is_some() {
+            return;
+        }
+        let sa = plan.shard_of(a as usize);
+        let sb = plan.shard_of(b as usize);
+        if let Err(e) = writeln!(writers[sa], "{a} {b} {w}") {
+            io_err = Some(e);
+            return;
+        }
+        if sb != sa {
+            if let Err(e) = writeln!(writers[sb], "{a} {b} {w}") {
+                io_err = Some(e);
+            }
+        }
+    })?;
+    if let Some(e) = io_err {
+        return Err(anyhow::Error::new(e).context("write spill files"));
+    }
+    for wtr in &mut writers {
+        wtr.flush()?;
+    }
+    Ok(SpilledShards { plan, labels, files, dir: cfg.dir.clone(), keep: cfg.keep })
+}
+
+/// Embed a spilled graph shard-by-shard, in-process: only one shard's
+/// edges are resident at a time (buffers reused across shards), so a
+/// graph whose edge list exceeds RAM embeds within the spill budget.
+/// Bitwise-identical to the in-core engines.
+pub fn embed_out_of_core(sp: &SpilledShards, opts: &GeeOptions) -> Result<Dense> {
+    let plan = &sp.plan;
+    let scale = plan.scale_for(opts);
+    let mut z = Dense::zeros(plan.n, plan.k);
+    let (mut src, mut dst, mut w) = (Vec::new(), Vec::new(), Vec::new());
+    let mut ws = EmbedWorkspace::new();
+    for s in 0..plan.shards() {
+        let (v0, v1) = plan.shard_range(s);
+        src.clear();
+        dst.clear();
+        w.clear();
+        for_each_edge(&sp.files[s], |a, b, ww| {
+            src.push(a);
+            dst.push(b);
+            w.push(ww);
+        })?;
+        embed_shard(
+            &src,
+            &dst,
+            &w,
+            v0,
+            v1,
+            &sp.labels,
+            &plan.wv,
+            scale.as_deref(),
+            plan.k,
+            opts,
+            &mut ws,
+            &mut z.data[v0 * plan.k..v1 * plan.k],
+        );
+    }
+    Ok(z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::gee::GeeOptions;
+    use crate::graph::io::write_graph;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("gee_spill_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for c in 0..k {
+            g.labels[c] = c as i32; // every class occupied: file-derived
+                                    // k (max label + 1) matches declared k
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(1, 1, 2.0);
+        g
+    }
+
+    #[test]
+    fn spilled_graph_embeds_bitwise_from_disk() {
+        let d = tmpdir("mem");
+        let g = random_graph(531, 80, 450, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 4, ..SpillConfig::new(&d) },
+        )
+        .unwrap();
+        assert_eq!(sp.files.len(), sp.plan.shards());
+        for opts in GeeOptions::table_order() {
+            let expect = SparseGee::fast().embed(&g, &opts);
+            let z = embed_out_of_core(&sp, &opts).unwrap();
+            assert_eq!(z.data, expect.data, "ooc drifted at {opts:?}");
+        }
+    }
+
+    #[test]
+    fn memory_budget_bounds_resident_edges() {
+        let d = tmpdir("budget");
+        let g = random_graph(532, 120, 800, 4);
+        let total = g.num_edges();
+        let budget = total / 5;
+        let stem = d.join("big");
+        write_graph(&stem, &g).unwrap();
+        let sp = spill_from_files(
+            &stem.with_extension("edges"),
+            &stem.with_extension("labels"),
+            &SpillConfig {
+                mem_budget_edges: budget,
+                keep: true,
+                ..SpillConfig::new(&d)
+            },
+        )
+        .unwrap();
+        assert!(
+            sp.plan.shards() >= 5,
+            "budget {budget} of {total} edges must raise the shard count"
+        );
+        // the resident set per shard load is that shard's line count:
+        // within 2x of the budget even with hubs (the balance headroom)
+        for f in &sp.files {
+            let lines = fs::read_to_string(f).unwrap().lines().count();
+            assert!(
+                lines <= 2 * budget,
+                "shard file {} holds {lines} edges, budget {budget}",
+                f.display()
+            );
+        }
+        // and the embed is still exact — while every shard's slice was
+        // smaller than the whole edge list
+        let expect = SparseGee::fast().embed(&g, &GeeOptions::ALL);
+        let z = embed_out_of_core(&sp, &GeeOptions::ALL).unwrap();
+        assert_eq!(z.data, expect.data);
+    }
+
+    #[test]
+    fn spill_from_files_matches_spill_from_graph() {
+        let d1 = tmpdir("files");
+        let d2 = tmpdir("graph");
+        let g = random_graph(533, 60, 300, 3);
+        let stem = d1.join("g");
+        write_graph(&stem, &g).unwrap();
+        let spf = spill_from_files(
+            &stem.with_extension("edges"),
+            &stem.with_extension("labels"),
+            &SpillConfig { shards: 3, ..SpillConfig::new(&d1) },
+        )
+        .unwrap();
+        let spg = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 3, ..SpillConfig::new(&d2) },
+        )
+        .unwrap();
+        assert_eq!(spf.plan.k, spg.plan.k);
+        assert_eq!(spf.plan.bounds, spg.plan.bounds);
+        assert_eq!(spf.labels, spg.labels);
+        let opts = GeeOptions::new(true, false, true);
+        let zf = embed_out_of_core(&spf, &opts).unwrap();
+        let zg = embed_out_of_core(&spg, &opts).unwrap();
+        assert_eq!(zf.data, zg.data);
+    }
+
+    #[test]
+    fn out_of_range_edge_is_rejected() {
+        let d = tmpdir("oob");
+        fs::write(d.join("bad.edges"), "0 9\n").unwrap();
+        fs::write(d.join("bad.labels"), "0\n1\n").unwrap();
+        let err = spill_from_files(
+            &d.join("bad.edges"),
+            &d.join("bad.labels"),
+            &SpillConfig::new(&d),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn spill_files_removed_on_drop_unless_kept() {
+        let d = tmpdir("drop");
+        let g = random_graph(534, 20, 60, 2);
+        let files = {
+            let sp =
+                spill_from_graph(&g, &SpillConfig { shards: 2, ..SpillConfig::new(&d) })
+                    .unwrap();
+            sp.files.clone()
+        };
+        for f in &files {
+            assert!(!f.exists(), "{} must be cleaned up", f.display());
+        }
+        let kept = {
+            let sp = spill_from_graph(
+                &g,
+                &SpillConfig { shards: 2, keep: true, ..SpillConfig::new(&d) },
+            )
+            .unwrap();
+            sp.files.clone()
+        };
+        for f in &kept {
+            assert!(f.exists(), "{} must be kept", f.display());
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The shard-worker process body — what runs behind the CLI's
+//! `shard-worker` subcommand. Kept in the library so the multi-process
+//! protocol (read globals → embed shard rows → write Z rows) is unit- and
+//! integration-testable without spawning, and so the CLI stays a thin
+//! argument shim.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::local::embed_shard;
+use crate::gee::options::GeeOptions;
+use crate::gee::weights::weight_values;
+use crate::gee::workspace::EmbedWorkspace;
+use crate::graph::io::{for_each_edge, read_f64_vec, read_label_vec};
+
+/// One worker invocation: embed rows `[row0, row1)` of an `n × k`
+/// embedding from a shard's incident-edge file plus the shared globals.
+#[derive(Clone, Debug)]
+pub struct WorkerArgs {
+    /// The shard's incident edges (spill format, global ids).
+    pub edges: PathBuf,
+    /// Shared global labels (one per vertex line).
+    pub labels: PathBuf,
+    /// Shared global weighted degrees (one f64 per line).
+    pub deg: PathBuf,
+    pub n: usize,
+    pub k: usize,
+    pub row0: usize,
+    pub row1: usize,
+    pub options: GeeOptions,
+    /// Where to write the shard's Z rows (one row per line).
+    pub out: PathBuf,
+}
+
+/// Run the worker: everything global is *re-derived from the shipped
+/// files* with the same formulas the in-process engine uses, and every
+/// f64 crossed the process boundary in shortest-roundtrip text — so the
+/// rows written here are bitwise-identical to the in-process shard pass.
+pub fn run_worker(args: &WorkerArgs) -> Result<()> {
+    if args.row0 > args.row1 || args.row1 > args.n {
+        bail!("bad row range [{}, {}) for n={}", args.row0, args.row1, args.n);
+    }
+    let labels = read_label_vec(&args.labels)?;
+    if labels.len() != args.n {
+        bail!("labels file has {} entries, expected n={}", labels.len(), args.n);
+    }
+    if let Some(&l) = labels.iter().find(|&&l| l >= args.k as i32) {
+        bail!("label {l} >= k {}", args.k);
+    }
+    let deg = read_f64_vec(&args.deg)?;
+    if deg.len() != args.n {
+        bail!("degree file has {} entries, expected n={}", deg.len(), args.n);
+    }
+
+    let wv = weight_values(&labels, args.k);
+    let scale = super::plan::scale_from_deg(&deg, &args.options);
+
+    let (mut src, mut dst, mut w) = (Vec::new(), Vec::new(), Vec::new());
+    for_each_edge(&args.edges, |a, b, ww| {
+        src.push(a);
+        dst.push(b);
+        w.push(ww);
+    })?;
+    if let Some(&v) = src.iter().chain(dst.iter()).find(|&&v| v as usize >= args.n) {
+        bail!("shard edge endpoint {v} out of range for n={}", args.n);
+    }
+
+    let rows = args.row1 - args.row0;
+    let mut out = vec![0.0f64; rows * args.k];
+    let mut ws = EmbedWorkspace::new();
+    embed_shard(
+        &src,
+        &dst,
+        &w,
+        args.row0,
+        args.row1,
+        &labels,
+        &wv,
+        scale.as_deref(),
+        args.k,
+        &args.options,
+        &mut ws,
+        &mut out,
+    );
+
+    let mut f = BufWriter::new(
+        File::create(&args.out)
+            .with_context(|| format!("create {}", args.out.display()))?,
+    );
+    for r in 0..rows {
+        for (i, v) in out[r * args.k..(r + 1) * args.k].iter().enumerate() {
+            if i > 0 {
+                f.write_all(b"\t")?;
+            }
+            write!(f, "{v}")?;
+        }
+        f.write_all(b"\n")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::graph::io::write_f64_vec;
+    use crate::graph::Graph;
+    use crate::shard::plan::ShardPlan;
+    use crate::shard::spill::{spill_from_graph, SpillConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn worker_rows_roundtrip_bitwise_through_files() {
+        // drive run_worker in-process over real spill files and parse its
+        // output exactly as the parent does
+        let dir = std::env::temp_dir()
+            .join(format!("gee_worker_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut rng = Rng::new(541);
+        let (n, k) = (70, 3);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for c in 0..k {
+            g.labels[c] = c as i32;
+        }
+        for _ in 0..350 {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(5, 5, 1.25);
+
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 3, keep: true, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+        let plan: &ShardPlan = &sp.plan;
+        let labels_path = dir.join("w.labels");
+        std::fs::write(
+            &labels_path,
+            g.labels
+                .iter()
+                .map(|l| l.to_string())
+                .collect::<Vec<_>>()
+                .join("\n"),
+        )
+        .unwrap();
+        let deg_path = dir.join("w.deg");
+        write_f64_vec(&deg_path, &plan.deg).unwrap();
+
+        for opts in crate::gee::GeeOptions::table_order() {
+            let whole = SparseGee::fast().embed(&g, &opts);
+            for s in 0..plan.shards() {
+                let (v0, v1) = plan.shard_range(s);
+                let out_path = dir.join(format!("w_z_{s}.tsv"));
+                run_worker(&WorkerArgs {
+                    edges: sp.files[s].clone(),
+                    labels: labels_path.clone(),
+                    deg: deg_path.clone(),
+                    n,
+                    k,
+                    row0: v0,
+                    row1: v1,
+                    options: opts,
+                    out: out_path.clone(),
+                })
+                .unwrap();
+                let text = std::fs::read_to_string(&out_path).unwrap();
+                let got: Vec<f64> = text
+                    .lines()
+                    .flat_map(|l| l.split_whitespace())
+                    .map(|t| t.parse().unwrap())
+                    .collect();
+                assert_eq!(
+                    got,
+                    whole.data[v0 * k..v1 * k].to_vec(),
+                    "worker shard {s} rows drifted at {opts:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn worker_rejects_inconsistent_inputs() {
+        let dir = std::env::temp_dir()
+            .join(format!("gee_worker_bad_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("e.edges"), "0 1\n").unwrap();
+        std::fs::write(dir.join("l.labels"), "0\n1\n").unwrap();
+        write_f64_vec(&dir.join("d.deg"), &[1.0, 1.0]).unwrap();
+        let base = WorkerArgs {
+            edges: dir.join("e.edges"),
+            labels: dir.join("l.labels"),
+            deg: dir.join("d.deg"),
+            n: 2,
+            k: 2,
+            row0: 0,
+            row1: 2,
+            options: crate::gee::GeeOptions::NONE,
+            out: dir.join("z.tsv"),
+        };
+        assert!(run_worker(&base).is_ok());
+        assert!(run_worker(&WorkerArgs { n: 3, ..base.clone() }).is_err());
+        assert!(run_worker(&WorkerArgs { k: 1, ..base.clone() }).is_err());
+        assert!(run_worker(&WorkerArgs { row1: 5, ..base.clone() }).is_err());
+    }
+}

@@ -41,6 +41,28 @@ pub fn nnz_chunks(indptr: &[u32], chunks: usize) -> Vec<usize> {
     bounds
 }
 
+/// u64 twin of [`nnz_chunks`] for cost prefixes that may exceed the u32
+/// index space — the sharded engine plans vertex-range shards over the
+/// *global* directed-edge counts, which are allowed to overflow u32 (the
+/// whole point of sharding is that only each shard's slice must fit).
+pub fn nnz_chunks_u64(prefix: &[u64], chunks: usize) -> Vec<usize> {
+    let n = prefix.len() - 1;
+    let total = prefix[n];
+    let chunks = chunks.max(1).min(n.max(1));
+    let mut bounds = Vec::with_capacity(chunks + 1);
+    bounds.push(0usize);
+    for i in 1..chunks {
+        let target = (total as u128 * i as u128 / chunks as u128) as u64;
+        let mut r = *bounds.last().unwrap();
+        while r < n && prefix[r] < target {
+            r += 1;
+        }
+        bounds.push(r);
+    }
+    bounds.push(n);
+    bounds
+}
+
 /// Split `0..n` into `chunks` contiguous ranges of near-equal length.
 /// Returns `chunks + 1` boundaries (used for vertex-range splits where
 /// every element costs the same, e.g. the parallel count-merge).
@@ -88,6 +110,18 @@ mod tests {
     fn nnz_chunks_empty_matrix() {
         let indptr: Vec<u32> = vec![0];
         assert_eq!(nnz_chunks(&indptr, 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn nnz_chunks_u64_matches_u32_twin_and_handles_big_totals() {
+        let indptr32: Vec<u32> = vec![0, 0, 10, 10, 11, 12, 12];
+        let prefix: Vec<u64> = indptr32.iter().map(|&x| x as u64).collect();
+        assert_eq!(nnz_chunks_u64(&prefix, 3), nnz_chunks(&indptr32, 3));
+        // totals beyond u32: two vertices each carrying 3B directed edges
+        let big: Vec<u64> = vec![0, 3_000_000_000, 6_000_000_000];
+        let b = nnz_chunks_u64(&big, 2);
+        assert_eq!(b, vec![0, 1, 2]);
+        assert_eq!(nnz_chunks_u64(&[0], 4), vec![0, 0]);
     }
 
     #[test]

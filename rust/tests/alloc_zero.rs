@@ -3,7 +3,9 @@
 //! repeated-embed (service-style) workload over a warm
 //! [`EmbedWorkspace`] must perform **zero** heap allocations per
 //! request — across the prepared lane, the one-shot fused lane and the
-//! edge-list lane, for every option combo.
+//! edge-list lane, for every option combo — and (ISSUE 3) steady-state
+//! disjoint-union construction over a warm union buffer must allocate
+//! nothing either.
 //!
 //! This file intentionally contains a single `#[test]`: the counter is
 //! process-global, so sibling tests running on other threads would
@@ -12,6 +14,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use gee_sparse::coordinator::batcher::{build_union, build_union_into, PackedBatch};
 use gee_sparse::gee::edgelist_gee::EdgeListGee;
 use gee_sparse::gee::sparse_gee::{embed_fused_into, SparseGee};
 use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
@@ -125,6 +128,39 @@ fn steady_state_pooled_embeds_allocate_nothing() {
         leaked, 0,
         "edge-list embed_into allocated {leaked} times in steady state"
     );
+
+    // ---- pooled union construction (the batcher's ISSUE 3 satellite:
+    // coordinator workers reuse one union buffer instead of allocating a
+    // fresh union Graph per batch)
+    let g2 = {
+        let mut rng = Rng::new(91);
+        let (n, k) = (120, 3);
+        let mut m = Graph::new(n, k);
+        for l in m.labels.iter_mut() {
+            *l = rng.below(k) as i32;
+        }
+        for _ in 0..600 {
+            m.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        m
+    };
+    let members: Vec<&Graph> = vec![&g, &g2, &g2];
+    let mut ub = PackedBatch { union: Graph::new(0, 0), placements: Vec::new() };
+    build_union_into(&members, &mut ub); // warm
+    let before = allocations();
+    for _ in 0..REPS {
+        build_union_into(&members, &mut ub);
+        std::hint::black_box(ub.union.src.as_ptr());
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "build_union_into allocated {leaked} times in steady state"
+    );
+    let fresh = build_union(&members);
+    assert_eq!(ub.union.labels, fresh.union.labels);
+    assert_eq!(ub.union.src, fresh.union.src);
+    assert_eq!(ub.placements, fresh.placements);
 
     // sanity: the pooled lanes still produce the right numbers after the
     // allocation-counted loops

@@ -23,7 +23,7 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let text = run_ok(&["help"]);
-    for cmd in ["info", "generate", "embed", "bench-table", "serve"] {
+    for cmd in ["info", "generate", "embed", "shard-embed", "bench-table", "serve"] {
         assert!(text.contains(cmd), "help missing {cmd}");
     }
 }
@@ -92,7 +92,7 @@ fn engines_agree_through_cli_files() {
     let stem = dir.join("g");
     run_ok(&["generate", "--sbm", "200", "--seed", "9", "--out", stem.to_str().unwrap()]);
     let mut outputs = Vec::new();
-    for engine in ["edgelist", "sparse", "sparse-fast", "sparse-par:4"] {
+    for engine in ["edgelist", "sparse", "sparse-fast", "sparse-par:4", "sharded:3"] {
         let zp = dir.join(format!("z_{engine}.tsv"));
         run_ok(&[
             "embed",

@@ -5,12 +5,13 @@
 //!   unlabeled (-1) vertices;
 //! * × the full lap/diag/cor option grid (8 combos);
 //! * × all engines: edge-list, published sparse, fused sparse,
-//!   row-parallel sparse, edge-parallel edge-list, and the pooled
-//!   workspace lanes of each;
+//!   row-parallel sparse, edge-parallel edge-list, vertex-range-sharded,
+//!   and the pooled workspace lanes of each;
 //! * agreement: **≤1e-12** against the published sparse pipeline, and
 //!   **bitwise** wherever the engine's contract promises it (fused vs
-//!   row-parallel at any thread count; every pooled lane vs its
-//!   allocating twin; `spmm_dense_par` vs `spmm_dense`).
+//!   row-parallel at any thread count; fused vs sharded at any shard
+//!   count; every pooled lane vs its allocating twin; `spmm_dense_par`
+//!   vs `spmm_dense`).
 
 use gee_sparse::gee::edgelist_gee::EdgeListGee;
 use gee_sparse::gee::edgelist_par::EdgeListParGee;
@@ -20,6 +21,7 @@ use gee_sparse::gee::{EmbedWorkspace, Engine, GeeOptions};
 use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::Graph;
+use gee_sparse::shard::ShardedGee;
 use gee_sparse::sparse::{Coo, Csr, Dense};
 use gee_sparse::util::rng::Rng;
 
@@ -46,11 +48,12 @@ fn assert_parity(name: &str, g: &Graph) {
         let reference = Engine::Sparse.embed(g, &opts).unwrap();
 
         // tolerance lanes (different summation orders)
-        let lanes: [(&str, Dense); 4] = [
+        let lanes: [(&str, Dense); 5] = [
             ("edgelist", EdgeListGee.embed(g, &opts)),
             ("edgelist-par:3", EdgeListParGee::new(3).embed(g, &opts)),
             ("sparse-fast", SparseGee::fast().embed(g, &opts)),
             ("sparse-par:3", ParallelGee::new(3).embed(g, &opts)),
+            ("sharded:3", Engine::Sharded(3).embed(g, &opts).unwrap()),
         ];
         for (lane, z) in &lanes {
             let d = reference.max_abs_diff(z);
@@ -70,6 +73,13 @@ fn assert_parity(name: &str, g: &Graph) {
             assert_eq!(
                 par.data, fused.data,
                 "{name}: row-parallel t={t} not bitwise vs fused at {opts:?}"
+            );
+        }
+        for s in [1usize, 2, 6] {
+            let shard = ShardedGee::new(s).embed(g, &opts);
+            assert_eq!(
+                shard.data, fused.data,
+                "{name}: sharded s={s} not bitwise vs fused at {opts:?}"
             );
         }
         embed_fused_into(g, &opts, &mut ws);
