@@ -6,11 +6,16 @@
 //! Per shard count: the in-process sharded embed (phase 1 + bucket +
 //! shard pass) and its speedup over the serial fused engine. One
 //! out-of-core row per graph (spill + per-shard streaming embed from
-//! disk). Determinism gates first: every sharded configuration must be
-//! bitwise-identical to the serial fused engine.
+//! disk), and one distributed row (`sharded-remote`: two local
+//! `gee shard-serve` daemons, shards dispatched over TCP — localhost
+//! loopback, so the row records protocol + placement overhead, the
+//! floor of what a real fleet pays). Determinism gates first: every
+//! configuration must be bitwise-identical to the serial fused engine.
 //!
 //! Results are appended to `BENCH_gee.json` (see `util::benchlog`).
 //! `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) trims sizes for CI smoke.
+
+use std::io::BufRead;
 
 use gee_sparse::gee::sparse_gee::SparseGee;
 use gee_sparse::gee::GeeOptions;
@@ -18,12 +23,30 @@ use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::Graph;
 use gee_sparse::shard::{
-    embed_out_of_core, spill::spill_from_graph, ShardedGee, SpillConfig,
+    embed_out_of_core, embed_remote, spill::spill_from_graph, DispatchConfig,
+    ShardedGee, SpillConfig,
 };
 use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
 use gee_sparse::util::timing::{bench_runs, secs, Stats};
 
 const SHARDS: &[usize] = &[1, 2, 4, 8];
+
+/// Spawn a `gee shard-serve` daemon on an ephemeral port and return
+/// (child, bound address) parsed from its announcement line.
+fn spawn_daemon() -> (std::process::Child, String) {
+    let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_gee"))
+        .args(["shard-serve", "--listen", "127.0.0.1:0"])
+        .stdin(std::process::Stdio::null())
+        .stdout(std::process::Stdio::piped())
+        .stderr(std::process::Stdio::null())
+        .spawn()
+        .expect("spawn gee shard-serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut line = String::new();
+    std::io::BufReader::new(stdout).read_line(&mut line).unwrap();
+    let addr = line.trim().rsplit(' ').next().unwrap().to_string();
+    (child, addr)
+}
 
 fn record(
     out: &mut Vec<BenchRecord>,
@@ -111,6 +134,34 @@ fn sweep(name: &str, g: &Graph, reps: usize, records: &mut Vec<BenchRecord>) {
         secs(st.median),
         base_ns as f64 / st.median.as_nanos().max(1) as f64
     );
+
+    // distributed: the same spill dispatched to two local daemons over
+    // TCP — the `sharded-remote` lane the acceptance criteria records
+    let daemons: Vec<(std::process::Child, String)> =
+        (0..2).map(|_| spawn_daemon()).collect();
+    let dcfg = DispatchConfig::new(
+        daemons.iter().map(|(_, addr)| addr.clone()).collect(),
+    );
+    let zr = embed_remote(&sp, &opts, &dcfg).expect("remote embed");
+    assert_eq!(
+        zr.data, serial.data,
+        "{name}: sharded-remote not bitwise-identical to fused"
+    );
+    let st = Stats::from_runs(&bench_runs(1, reps, || {
+        std::hint::black_box(embed_remote(&sp, &opts, &dcfg).expect("remote embed"));
+    }));
+    record(records, "sharded-remote", g, 2, &st, base_ns);
+    println!(
+        "   {:>10} {:>12} {:>8.2}x   (2 daemons over loopback TCP)",
+        "remote:2",
+        secs(st.median),
+        base_ns as f64 / st.median.as_nanos().max(1) as f64
+    );
+    for (mut child, _) in daemons {
+        let _ = child.kill();
+        let _ = child.wait();
+    }
+
     drop(sp);
     let _ = std::fs::remove_dir_all(&dir);
     println!();

@@ -25,6 +25,10 @@ pub struct Metrics {
     /// Total vertices and directed edges processed (throughput numerators).
     pub vertices: AtomicU64,
     pub edges: AtomicU64,
+    /// Oversize jobs meant for the remote shard fleet that fell back to
+    /// the local sharded engine because the whole fleet was unreachable —
+    /// a nonzero value is the "fleet is down" alarm.
+    pub remote_fallbacks: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -40,6 +44,7 @@ impl Default for Metrics {
             batched_requests: AtomicU64::new(0),
             vertices: AtomicU64::new(0),
             edges: AtomicU64::new(0),
+            remote_fallbacks: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
         }
@@ -98,9 +103,11 @@ impl Metrics {
         Duration::from_micros(self.latency_sum_us.load(Ordering::Relaxed) / n)
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs. `remote_fallbacks` only appears when
+    /// nonzero — it is the "shard fleet is down" alarm, so it must be
+    /// visible in the log line operators actually read, not only in code.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "submitted={} completed={} failed={} rejected={} batches={} (avg fill {:.2}) p50={:?} p95={:?} p99={:?} mean={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
@@ -112,7 +119,12 @@ impl Metrics {
             self.latency_quantile(0.95),
             self.latency_quantile(0.99),
             self.latency_mean(),
-        )
+        );
+        let fallbacks = self.remote_fallbacks.load(Ordering::Relaxed);
+        if fallbacks > 0 {
+            s.push_str(&format!(" remote_fallbacks={fallbacks} (shard fleet unreachable)"));
+        }
+        s
     }
 
     pub fn avg_batch_fill(&self) -> f64 {

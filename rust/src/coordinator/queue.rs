@@ -178,6 +178,66 @@ mod tests {
     }
 
     #[test]
+    fn pop_timeout_delivers_item_arriving_during_wait() {
+        // an item pushed while the consumer is parked inside the wait
+        // must be delivered, not swallowed by the flush tick
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(4));
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.try_push(42).unwrap();
+        });
+        assert_eq!(q.pop_timeout(Duration::from_secs(5)), Ok(Some(42)));
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn pop_timeout_err_only_after_full_deadline() {
+        // Err(()) means "the deadline passed with nothing to hand out" —
+        // it must never fire early (a short tick would make the batcher
+        // flush before its linger window closed)
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        let timeout = Duration::from_millis(40);
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(timeout), Err(()));
+        assert!(
+            t0.elapsed() >= timeout,
+            "timed out after {:?}, before the {timeout:?} deadline",
+            t0.elapsed()
+        );
+    }
+
+    #[test]
+    fn pop_timeout_arrival_racing_deadline_never_loses_items() {
+        // hammer the exact race the deadline logic guards: a producer
+        // pushing right around the consumer's timeout instant. Every
+        // push must end up either in a pop_timeout result or still
+        // queued — Err(()) with an item silently dropped is the bug
+        // class this pins down.
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(64));
+        let rounds = 200u32;
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..rounds {
+                // jitter around the consumer's 1ms deadline
+                std::thread::sleep(Duration::from_micros((i % 7) as u64 * 300));
+                q2.push(i).unwrap();
+            }
+        });
+        let mut delivered = 0u32;
+        while delivered < rounds {
+            match q.pop_timeout(Duration::from_millis(1)) {
+                Ok(Some(_)) => delivered += 1,
+                Ok(None) => panic!("queue closed unexpectedly"),
+                Err(()) => {} // timed out with the queue open: retry
+            }
+        }
+        producer.join().unwrap();
+        assert_eq!(delivered, rounds);
+        assert!(q.is_empty(), "every push must be delivered exactly once");
+    }
+
+    #[test]
     fn blocking_push_wakes_on_pop() {
         let q = Arc::new(BoundedQueue::new(1));
         q.try_push(1).unwrap();

@@ -121,6 +121,39 @@ fn handle_connection(stream: TcpStream, service: &EmbedService) -> Result<()> {
     }
 }
 
+/// Admission bounds for the wire protocol: a header (or a stream of edge
+/// tokens) must prove the request small enough *before* anything
+/// proportional to its claimed size is allocated. Without these, a
+/// one-line `EMBED n=<huge>` header made the per-connection thread
+/// allocate the whole claimed graph — a remote OOM for the price of a
+/// few bytes.
+pub const MAX_WIRE_VERTICES: usize = 1 << 26;
+pub const MAX_WIRE_CLASSES: usize = 1 << 20;
+/// Cap on `n * k` — the embedding the service must materialize per reply.
+pub const MAX_WIRE_CELLS: usize = 1 << 28;
+/// Cap on stored edges accepted per request, enforced as tokens stream
+/// in (edge storage grows with data actually received, so this bounds
+/// the worst case at data-sent, not at header-claimed).
+pub const MAX_WIRE_EDGES: usize = 1 << 31;
+
+/// Reject an `EMBED` header whose dimensions exceed the admission
+/// bounds. Called before `Graph::new`, so the error is O(1).
+fn validate_wire_dims(n: usize, k: usize) -> Result<()> {
+    if n == 0 || k == 0 {
+        bail!("EMBED requires n=<vertices> k=<classes>");
+    }
+    if n > MAX_WIRE_VERTICES {
+        bail!("n={n} exceeds the wire limit {MAX_WIRE_VERTICES}");
+    }
+    if k > MAX_WIRE_CLASSES {
+        bail!("k={k} exceeds the wire limit {MAX_WIRE_CLASSES}");
+    }
+    match n.checked_mul(k) {
+        Some(cells) if cells <= MAX_WIRE_CELLS => Ok(()),
+        _ => bail!("n*k = {n}*{k} exceeds the wire limit {MAX_WIRE_CELLS} cells"),
+    }
+}
+
 fn parse_and_embed(
     header: &str,
     reader: &mut impl BufRead,
@@ -143,9 +176,7 @@ fn parse_and_embed(
         }
     }
     let options = GeeOptions::from_code(&code).context("bad options code")?;
-    if n == 0 || k == 0 {
-        bail!("EMBED requires n=<vertices> k=<classes>");
-    }
+    validate_wire_dims(n, k)?;
 
     let mut g = Graph::new(n, k);
     loop {
@@ -177,6 +208,9 @@ fn parse_and_embed(
                 };
                 if a as usize >= n || b as usize >= n {
                     bail!("edge {a}:{b} out of range (n={n})");
+                }
+                if g.num_edges() >= MAX_WIRE_EDGES {
+                    bail!("request exceeds the wire limit of {MAX_WIRE_EDGES} edges");
                 }
                 g.add_edge(a, b, w);
             }
@@ -323,6 +357,53 @@ mod tests {
         let (server, _svc) = start_server();
         let err = client_embed(server.addr(), "---", &[0, 1], &[(0, 9, 1.0)], 2);
         assert!(err.is_err());
+        server.stop();
+    }
+
+    #[test]
+    fn wire_dims_admission_bounds() {
+        // the O(1) gate itself: every oversize shape is refused
+        assert!(validate_wire_dims(100, 3).is_ok());
+        assert!(validate_wire_dims(MAX_WIRE_VERTICES, 1).is_ok());
+        assert!(validate_wire_dims(0, 3).is_err());
+        assert!(validate_wire_dims(3, 0).is_err());
+        assert!(validate_wire_dims(MAX_WIRE_VERTICES + 1, 1).is_err());
+        assert!(validate_wire_dims(2, MAX_WIRE_CLASSES + 1).is_err());
+        // n and k individually legal but the embedding matrix is not
+        assert!(validate_wire_dims(MAX_WIRE_VERTICES, MAX_WIRE_CLASSES).is_err());
+        assert!(validate_wire_dims(usize::MAX / 2, 3).is_err());
+    }
+
+    #[test]
+    fn oversized_headers_get_bounded_err_before_allocation() {
+        let (server, _svc) = start_server();
+        // each hostile header must produce a prompt ERR line — the
+        // deadline is how the test distinguishes "rejected at the
+        // header" from "tried to allocate the claimed graph"
+        for header in [
+            format!("EMBED code=--- k=2 n={}", MAX_WIRE_VERTICES + 1),
+            format!("EMBED code=--- k={} n=3", MAX_WIRE_CLASSES + 1),
+            format!("EMBED code=--- k={} n={}", MAX_WIRE_CLASSES, MAX_WIRE_VERTICES),
+            // u64::MAX: parse rejects it before the bounds even apply
+            "EMBED code=--- k=2 n=18446744073709551616".to_string(),
+        ] {
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            stream
+                .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+                .unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            writeln!(writer, "{header}").unwrap();
+            writer.flush().unwrap();
+            let t0 = std::time::Instant::now();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert!(line.starts_with("ERR"), "header '{header}' got: {line}");
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(5),
+                "rejection of '{header}' was not prompt"
+            );
+        }
         server.stop();
     }
 }

@@ -79,6 +79,15 @@ pub struct ServiceConfig {
     pub shard_min_directed_edges: usize,
     /// Shard count for the sharded lane (0 = auto: one per core).
     pub shard_count: usize,
+    /// Remote shard-fleet endpoints (`host:port` of `gee shard-serve`
+    /// daemons). When non-empty, a job past `shard_min_directed_edges`
+    /// is spilled and dispatched across the fleet (`via =
+    /// "sharded-remote"`, bitwise-identical to the local lanes) instead
+    /// of embedding on this machine; if the *whole* fleet is
+    /// unreachable the job falls back to the local sharded engine and
+    /// `Metrics::remote_fallbacks` is incremented. Empty = keep
+    /// everything local.
+    pub shard_remote_workers: Vec<String>,
 }
 
 impl Default for ServiceConfig {
@@ -94,6 +103,7 @@ impl Default for ServiceConfig {
             intra_op_min_edges: 500_000,
             shard_min_directed_edges: crate::sparse::MAX_INDEX,
             shard_count: 0,
+            shard_remote_workers: Vec::new(),
         }
     }
 }
@@ -340,10 +350,47 @@ fn process_jobs<F>(
             // num_directed is an O(E) scan — compute it once per job.
             let directed = g.num_directed();
             let (result, via) = if directed > cfg.shard_min_directed_edges {
-                (
-                    Engine::Sharded(cfg.shard_count).embed(g, &opts),
-                    "native-shard",
-                )
+                if cfg.shard_remote_workers.is_empty() {
+                    (
+                        Engine::Sharded(cfg.shard_count).embed(g, &opts),
+                        "native-shard",
+                    )
+                } else {
+                    match remote_shard_embed(g, &opts, cfg) {
+                        Ok(z) => (Ok(z), "sharded-remote"),
+                        Err(RemoteError::Fleet(e)) => {
+                            // whole fleet unreachable: degrade to the
+                            // local sharded engine (same numerics),
+                            // raise the alarm counter, and keep the
+                            // per-endpoint failure detail in the log —
+                            // the error names every dead endpoint
+                            metrics
+                                .remote_fallbacks
+                                .fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "shard fleet unreachable, falling back to local sharded engine: {e:#}"
+                            );
+                            (
+                                Engine::Sharded(cfg.shard_count).embed(g, &opts),
+                                "native-shard",
+                            )
+                        }
+                        Err(RemoteError::Spill(e)) => {
+                            // the *local* spill failed (disk full, bad
+                            // temp dir) — the fleet was never contacted,
+                            // so this must not trip the fleet-down
+                            // alarm; the in-memory sharded engine needs
+                            // no disk, so the job still completes
+                            eprintln!(
+                                "remote spill failed, using local sharded engine: {e:#}"
+                            );
+                            (
+                                Engine::Sharded(cfg.shard_count).embed(g, &opts),
+                                "native-shard",
+                            )
+                        }
+                    }
+                }
             } else if cfg.intra_op_threads > 1
                 && directed >= cfg.intra_op_min_edges
             {
@@ -360,6 +407,41 @@ fn process_jobs<F>(
             }
         }
     }
+}
+
+/// Why a remote shard embed failed — the caller's degradation policy
+/// (and the `remote_fallbacks` alarm) depends on whether the fleet was
+/// even reached.
+enum RemoteError {
+    /// The local spill failed; no endpoint was contacted.
+    Spill(anyhow::Error),
+    /// The spill succeeded but the fleet could not finish the work.
+    Fleet(anyhow::Error),
+}
+
+/// Spill an oversize in-memory graph and dispatch it across the remote
+/// shard fleet. The spill lands in a unique per-spill subdirectory of
+/// the system temp dir and is removed when the dispatch finishes.
+fn remote_shard_embed(
+    g: &Graph,
+    opts: &GeeOptions,
+    cfg: &ServiceConfig,
+) -> Result<Dense, RemoteError> {
+    let parent = std::env::temp_dir().join("gee_service_remote");
+    let sp = crate::shard::spill::spill_from_graph(
+        g,
+        &crate::shard::SpillConfig {
+            shards: cfg.shard_count,
+            ..crate::shard::SpillConfig::new(parent)
+        },
+    )
+    .map_err(RemoteError::Spill)?;
+    crate::shard::dispatch::embed_remote(
+        &sp,
+        opts,
+        &crate::shard::DispatchConfig::new(cfg.shard_remote_workers.clone()),
+    )
+    .map_err(RemoteError::Fleet)
 }
 
 fn finish(job: &Job, z: Dense, via: &'static str, batch_size: usize, metrics: &Metrics) {
@@ -625,6 +707,61 @@ mod tests {
         assert!(expect.max_abs_diff(&resp.z) < 1e-10);
         let m = svc.shutdown();
         assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn oversize_graphs_route_to_remote_fleet_when_configured() {
+        // two in-process fleet daemons; a lowered shard threshold stands
+        // in for the u32 budget, as in the local-shard routing test
+        let s1 = crate::shard::ShardServer::start("127.0.0.1:0").unwrap();
+        let s2 = crate::shard::ShardServer::start("127.0.0.1:0").unwrap();
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            shard_min_directed_edges: 100,
+            shard_count: 4,
+            shard_remote_workers: vec![
+                s1.addr().to_string(),
+                s2.addr().to_string(),
+            ],
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(482, 70, 250, 3);
+        assert!(g.num_directed() > 100);
+        let opts = GeeOptions::ALL;
+        let rx = svc.submit(EmbedRequest { graph: g.clone(), options: opts }).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "sharded-remote");
+        let expect = Engine::SparseFast.embed(&g, &opts).unwrap();
+        assert_eq!(resp.z.data, expect.data, "remote lane must stay bitwise");
+        let m = svc.shutdown();
+        assert_eq!(m.remote_fallbacks.load(Ordering::Relaxed), 0);
+        s1.stop();
+        s2.stop();
+    }
+
+    #[test]
+    fn dead_fleet_falls_back_to_local_sharded_lane() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            shard_min_directed_edges: 50,
+            shard_count: 2,
+            // reserved ports: nothing listens, every connect fails
+            shard_remote_workers: vec!["127.0.0.1:1".into(), "127.0.0.1:2".into()],
+            batch_capacity: BatchCapacity::from_bucket(8, 16, 2),
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(483, 50, 160, 3);
+        let rx = svc
+            .submit(EmbedRequest { graph: g.clone(), options: GeeOptions::NONE })
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.via, "native-shard", "dead fleet must degrade locally");
+        let expect = Engine::SparseFast.embed(&g, &GeeOptions::NONE).unwrap();
+        assert_eq!(resp.z.data, expect.data);
+        let m = svc.shutdown();
+        assert_eq!(m.remote_fallbacks.load(Ordering::Relaxed), 1);
         assert_eq!(m.failed.load(Ordering::Relaxed), 0);
     }
 

@@ -13,6 +13,31 @@ use anyhow::{bail, Context, Result};
 
 use super::edgelist::Graph;
 
+/// Parse one edge line (`src dst [weight]`, separators: any run of
+/// spaces/tabs/commas). Returns `None` for blank and `#`/`%` comment
+/// lines. This is the single edge-line grammar: edge files, spill files,
+/// and the shard-fleet wire protocol all parse through it, so a weight
+/// written in shortest-roundtrip form re-parses bitwise everywhere.
+pub fn parse_edge_fields(line: &str) -> Result<Option<(u32, u32, f64)>> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        return Ok(None);
+    }
+    let mut parts =
+        t.split(|c: char| c.is_whitespace() || c == ',').filter(|s| !s.is_empty());
+    let a: u32 = parts
+        .next()
+        .context("missing src")?
+        .parse()
+        .context("bad src")?;
+    let b: u32 = parts.next().context("missing dst")?.parse().context("bad dst")?;
+    let weight: f64 = match parts.next() {
+        Some(s) => s.parse().context("bad weight")?,
+        None => 1.0,
+    };
+    Ok(Some((a, b, weight)))
+}
+
 /// Stream an edge-list file, invoking `f(src, dst, weight)` per edge in
 /// file order without materializing the list — the out-of-core spine:
 /// the sharded engine's global pass and shard spilling both run over
@@ -40,26 +65,10 @@ pub fn try_for_each_edge(
     let mut edges = 0usize;
     for (lineno, line) in BufReader::new(file).lines().enumerate() {
         let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        let Some((a, b, weight)) = parse_edge_fields(&line)
+            .with_context(|| format!("{}:{}", path.display(), lineno + 1))?
+        else {
             continue;
-        }
-        let mut parts = t.split(|c: char| c.is_whitespace() || c == ',').filter(|s| !s.is_empty());
-        let a: u32 = parts
-            .next()
-            .with_context(|| format!("{}:{}: missing src", path.display(), lineno + 1))?
-            .parse()
-            .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
-        let b: u32 = parts
-            .next()
-            .with_context(|| format!("{}:{}: missing dst", path.display(), lineno + 1))?
-            .parse()
-            .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
-        let weight: f64 = match parts.next() {
-            Some(s) => s
-                .parse()
-                .with_context(|| format!("{}:{}: bad weight", path.display(), lineno + 1))?,
-            None => 1.0,
         };
         let flow = f(a, b, weight);
         edges += 1;
@@ -300,6 +309,18 @@ mod tests {
         for (a, b) in vals.iter().zip(&back) {
             assert_eq!(a.to_bits(), b.to_bits(), "{a} did not roundtrip");
         }
+    }
+
+    #[test]
+    fn parse_edge_fields_grammar() {
+        assert_eq!(parse_edge_fields("0 1").unwrap(), Some((0, 1, 1.0)));
+        assert_eq!(parse_edge_fields("2,3,0.5").unwrap(), Some((2, 3, 0.5)));
+        assert_eq!(parse_edge_fields("  ").unwrap(), None);
+        assert_eq!(parse_edge_fields("# comment").unwrap(), None);
+        assert_eq!(parse_edge_fields("% comment").unwrap(), None);
+        assert!(parse_edge_fields("7").is_err());
+        assert!(parse_edge_fields("a b").is_err());
+        assert!(parse_edge_fields("0 1 zap").is_err());
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! * `bench-table`  — regenerate a paper table/figure (2, 3, 4, fig3)
 //! * `serve`        — run the embedding service demo under synthetic load
 //!
-//! Arg parsing is hand-rolled (`--key value` / `--flag`) because the
-//! offline crate set has no clap; see `Args` below.
+//! Arg parsing is hand-rolled (`--key value` / `--key=value` /
+//! `--flag`) because the offline crate set has no clap; see `Args`
+//! below.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -29,40 +30,77 @@ use gee_sparse::graph::{io, Graph};
 use gee_sparse::harness;
 use gee_sparse::runtime::{Manifest, Runtime};
 use gee_sparse::shard::{
-    embed_multiprocess, embed_out_of_core, run_worker, spill::spill_from_files,
-    ProcessConfig, SpillConfig, WorkerArgs,
+    embed_multiprocess, embed_out_of_core, embed_remote, run_worker,
+    spill::spill_from_files, DispatchConfig, ProcessConfig, ShardServer,
+    SpillConfig, WorkerArgs,
 };
 use gee_sparse::tasks::kmeans::{kmeans, KMeansConfig};
 use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
 use gee_sparse::util::rng::Rng;
 
-/// Minimal `--key value` / `--flag` parser.
+/// Flags that take no value. Declaring them is what lets every *other*
+/// `--key` consume its next token as a value unconditionally — including
+/// values that begin with `-` or `--` (an options code like `--c`, a
+/// negative number, a file named `-`). The old parser guessed by
+/// sniffing the next token for a `--` prefix, which silently swallowed
+/// such values as flags and forced workarounds like spelling booleans
+/// `--lap 1`.
+const BOOL_FLAGS: &[&str] = &[
+    "pjrt",
+    "cluster",
+    "quick",
+    "keep-spill",
+    "no-batching",
+    // shard-worker engine options (presence = on; `--lap 1` / `--lap 0`
+    // still parse for back-compat with older drivers)
+    "lap",
+    "diag",
+    "cor",
+];
+
+/// Minimal `--key value` / `--key=value` / `--flag` parser.
 struct Args {
     values: HashMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
-    fn parse(argv: &[String]) -> Args {
+    fn parse(argv: &[String]) -> Result<Args> {
         let mut values = HashMap::new();
         let mut flags = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    values.insert(key.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
-                    flags.push(key.to_string());
+                if let Some((key, val)) = key.split_once('=') {
+                    // --key=value always binds, boolean or not
+                    values.insert(key.to_string(), val.to_string());
                     i += 1;
+                } else if BOOL_FLAGS.contains(&key) {
+                    // back-compat: the old 0/1 value form still parses
+                    match argv.get(i + 1).map(|s| s.as_str()) {
+                        Some(v @ ("0" | "1" | "true" | "false")) => {
+                            values.insert(key.to_string(), v.to_string());
+                            i += 2;
+                        }
+                        _ => {
+                            flags.push(key.to_string());
+                            i += 1;
+                        }
+                    }
+                } else {
+                    let val = argv
+                        .get(i + 1)
+                        .with_context(|| format!("--{key} requires a value"))?;
+                    values.insert(key.to_string(), val.clone());
+                    i += 2;
                 }
             } else {
                 flags.push(a.clone());
                 i += 1;
             }
         }
-        Args { values, flags }
+        Ok(Args { values, flags })
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -78,6 +116,7 @@ impl Args {
 
     fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
+            || matches!(self.get(flag), Some("1") | Some("true"))
     }
 }
 
@@ -253,7 +292,21 @@ fn cmd_shard_embed(args: &Args) -> Result<()> {
         dir: spill_dir,
         keep: args.has("keep-spill"),
     };
-    let workers = args.get_usize("workers", 1)?;
+    // --workers N        -> N local worker processes
+    // --workers h:p,h:p  -> remote fleet of `gee shard-serve` daemons
+    enum Workers {
+        Local(usize),
+        Remote(Vec<String>),
+    }
+    let workers = match args.get("workers") {
+        None => Workers::Local(1),
+        Some(v) if v.contains(':') => {
+            Workers::Remote(v.split(',').map(|s| s.trim().to_string()).collect())
+        }
+        Some(v) => Workers::Local(
+            v.parse().context("--workers takes a count or host:port,...")?,
+        ),
+    };
 
     let t0 = Instant::now();
     let sp = spill_from_files(&edges, &labels, &cfg)?;
@@ -268,20 +321,28 @@ fn cmd_shard_embed(args: &Args) -> Result<()> {
         spill_dt.as_secs_f64()
     );
     let t1 = Instant::now();
-    let z = if workers > 1 {
-        let worker_bin = std::env::current_exe().context("locate own binary")?;
-        embed_multiprocess(
-            &sp,
-            &opts,
-            &ProcessConfig { workers, worker_bin },
-        )?
-    } else {
-        embed_out_of_core(&sp, &opts)?
+    let (z, lane) = match &workers {
+        Workers::Remote(endpoints) => {
+            let mut dcfg = DispatchConfig::new(endpoints.clone());
+            dcfg.slots_per_worker = args.get_usize("slots", 1)?;
+            (embed_remote(&sp, &opts, &dcfg)?, "remote fleet")
+        }
+        Workers::Local(w) if *w > 1 => {
+            let worker_bin = std::env::current_exe().context("locate own binary")?;
+            (
+                embed_multiprocess(
+                    &sp,
+                    &opts,
+                    &ProcessConfig { workers: *w, worker_bin },
+                )?,
+                "multi-process",
+            )
+        }
+        Workers::Local(_) => (embed_out_of_core(&sp, &opts)?, "out-of-core"),
     };
     let dt = t1.elapsed();
     println!(
-        "sharded embed ({}) of {} directed edges with {} in {:.3}s ({:.0} edges/s)",
-        if workers > 1 { "multi-process" } else { "out-of-core" },
+        "sharded embed ({lane}) of {} directed edges with {} in {:.3}s ({:.0} edges/s)",
         sp.plan.directed,
         opts.label(),
         dt.as_secs_f64(),
@@ -299,9 +360,6 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
             args.get(key).with_context(|| format!("--{key} required"))?,
         ))
     };
-    let get_bool = |key: &str| -> bool {
-        matches!(args.get(key), Some("1") | Some("true"))
-    };
     let wargs = WorkerArgs {
         edges: get_path("edges")?,
         labels: get_path("labels")?,
@@ -310,20 +368,40 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
         k: args.get_usize("k", 0)?,
         row0: args.get_usize("row0", 0)?,
         row1: args.get_usize("row1", 0)?,
-        options: GeeOptions::new(get_bool("lap"), get_bool("diag"), get_bool("cor")),
+        // real boolean flags; `has` also honors the legacy 0/1 form
+        options: GeeOptions::new(args.has("lap"), args.has("diag"), args.has("cor")),
         out: get_path("out")?,
     };
     run_worker(&wargs)
 }
 
+fn cmd_shard_serve(args: &Args) -> Result<()> {
+    let bind = args.get("listen").unwrap_or("127.0.0.1:0");
+    let server = ShardServer::start(bind)?;
+    // the bound address is the contract with launchers: with port 0 this
+    // line is how they learn the ephemeral port, so flush it eagerly
+    // (stdout is block-buffered under a pipe)
+    println!("shard-serve listening on {}", server.addr());
+    std::io::Write::flush(&mut std::io::stdout())?;
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
+    // remote shard fleet for oversize jobs (gee shard-serve daemons)
+    let shard_remote_workers: Vec<String> = args
+        .get("shard-workers")
+        .map(|v| v.split(',').map(|s| s.trim().to_string()).collect())
+        .unwrap_or_default();
     // network mode: expose the service over TCP and block
     if let Some(bind) = args.get("listen") {
         let svc = std::sync::Arc::new(EmbedService::start(ServiceConfig {
             workers,
             intra_op_threads: args.get_usize("intra-op", 0)?,
+            shard_remote_workers,
             ..ServiceConfig::default()
         }));
         let server = gee_sparse::coordinator::TcpServer::start(bind, svc)?;
@@ -346,6 +424,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         batch_linger: Duration::from_millis(2),
         queue_depth: 512,
         intra_op_threads: args.get_usize("intra-op", 0)?,
+        shard_remote_workers,
         ..ServiceConfig::default()
     });
 
@@ -391,13 +470,21 @@ fn usage() -> &'static str {
                     [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]]\n\
                     [--options ldc] [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
        shard-embed  --input STEM | --edges FILE --labels FILE\n\
-                    [--shards S] [--mem-budget-edges B] [--workers P]\n\
+                    [--shards S] [--mem-budget-edges B]\n\
+                    [--workers P | --workers HOST:PORT,... [--slots N]]\n\
                     [--options ldc] [--spill-dir D] [--keep-spill] [--out FILE]\n\
                     (out-of-core: streams edges from disk per shard;\n\
-                     --workers P > 1 embeds shards in P worker processes)\n\
+                     --workers P > 1 embeds shards in P worker processes;\n\
+                     --workers HOST:PORT,... dispatches shards to remote\n\
+                     `gee shard-serve` daemons over TCP, N in-flight\n\
+                     shards per daemon)\n\
+       shard-serve  [--listen ADDR:PORT]   (shard-fleet worker daemon;\n\
+                    port 0 = ephemeral, the bound address is printed)\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
                     [--intra-op T]   (row-parallel threads for oversize graphs)\n\
+                    [--shard-workers HOST:PORT,...]   (remote fleet for\n\
+                    oversize jobs)\n\
                     [--listen ADDR:PORT]   (network mode: TCP line protocol)\n"
 }
 
@@ -407,12 +494,13 @@ fn main() -> Result<()> {
         print!("{}", usage());
         return Ok(());
     };
-    let args = Args::parse(&argv[1..]);
+    let args = Args::parse(&argv[1..])?;
     match cmd.as_str() {
         "info" => cmd_info(&args),
         "generate" => cmd_generate(&args),
         "embed" => cmd_embed(&args),
         "shard-embed" => cmd_shard_embed(&args),
+        "shard-serve" => cmd_shard_serve(&args),
         "shard-worker" => cmd_shard_worker(&args),
         "bench-table" => cmd_bench_table(&args),
         "serve" => cmd_serve(&args),
@@ -421,5 +509,65 @@ fn main() -> Result<()> {
             Ok(())
         }
         other => bail!("unknown command '{other}'\n{}", usage()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        let v: Vec<String> = tokens.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v).unwrap()
+    }
+
+    #[test]
+    fn values_starting_with_dashes_are_not_swallowed() {
+        // regression: the old parser sniffed the next token for a `--`
+        // prefix, so an options code like `--c` became a stray flag and
+        // `--options` lost its value
+        let a = parse(&["--options", "--c", "--out", "-"]);
+        assert_eq!(a.get("options"), Some("--c"));
+        assert_eq!(a.get("out"), Some("-"));
+        assert!(!a.has("c"));
+    }
+
+    #[test]
+    fn key_equals_value_form() {
+        let a = parse(&["--options=ldc", "--workers=a:1,b:2", "--quick=1"]);
+        assert_eq!(a.get("options"), Some("ldc"));
+        assert_eq!(a.get("workers"), Some("a:1,b:2"));
+        assert!(a.has("quick"));
+    }
+
+    #[test]
+    fn boolean_flags_bare_and_legacy_forms() {
+        // bare presence
+        let a = parse(&["--lap", "--cor", "--n", "5"]);
+        assert!(a.has("lap") && a.has("cor") && !a.has("diag"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        // legacy 0/1 values still parse (old drivers spawn workers so)
+        let a = parse(&["--lap", "1", "--diag", "0", "--cor", "true"]);
+        assert!(a.has("lap") && !a.has("diag") && a.has("cor"));
+        // a boolean flag directly followed by another option
+        let a = parse(&["--quick", "--reps", "3"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("reps", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn missing_value_is_an_error_not_a_flag() {
+        let v = vec!["--options".to_string()];
+        let err = Args::parse(&v).unwrap_err();
+        assert!(err.to_string().contains("--options requires a value"), "{err}");
+    }
+
+    #[test]
+    fn positionals_and_unknown_numbers() {
+        let a = parse(&["run-this", "--seed", "7"]);
+        assert!(a.has("run-this"));
+        assert_eq!(a.get_usize("seed", 0).unwrap(), 7);
+        assert!(a.get_usize("seed", 0).is_ok());
+        assert!(parse(&["--seed", "x"]).get_usize("seed", 0).is_err());
     }
 }

@@ -1,0 +1,391 @@
+//! Placement and dispatch for the TCP shard fleet — which daemon embeds
+//! which shard, and what happens when one dies.
+//!
+//! The model is a work queue over a pool of **slots**: each configured
+//! endpoint contributes `slots_per_worker` independent connections, and
+//! every slot pulls the next pending shard the moment it finishes the
+//! previous one (rolling — no waves, no head-of-line blocking; the same
+//! scheduling fix [`super::process`] got for local children). Failure
+//! semantics mirror the multi-process reaper:
+//!
+//! * a slot that fails (connect refused, connection dropped mid-stream,
+//!   `ERR` reply) pushes its shard back onto the queue and retires — the
+//!   failed endpoint is excluded from all further placement, exactly like
+//!   a reaped dead child;
+//! * surviving slots drain the requeued shards, so a daemon killed
+//!   mid-run costs only the retries of its in-flight shard;
+//! * the driver returns an error only when the *whole* fleet is dead with
+//!   shards still pending, and the error names every endpoint failure.
+//!
+//! Because each shard's rows are recomputed from the same spill bytes by
+//! whichever daemon ends up serving it, retries cannot change the result:
+//! output stays bitwise-identical to `SparseGee::fast()` through any
+//! sequence of worker deaths that leaves one worker alive.
+
+use std::collections::VecDeque;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::mpsc::Sender;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::remote::request_shard;
+use super::spill::SpilledShards;
+use crate::gee::options::GeeOptions;
+use crate::sparse::Dense;
+
+/// Fleet shape.
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    /// Worker daemon endpoints (`host:port`). An endpoint may be listed
+    /// more than once to weight placement toward a bigger machine.
+    pub endpoints: Vec<String>,
+    /// Concurrent in-flight shards per endpoint (each slot holds its own
+    /// connection; a daemon embeds its slots on parallel threads).
+    pub slots_per_worker: usize,
+    /// TCP connect timeout per endpoint.
+    pub connect_timeout: Duration,
+    /// Per-syscall read/write timeout on worker connections. A *hung*
+    /// worker (silent network partition — no RST, so reads block
+    /// forever) would otherwise stall the whole dispatch with its
+    /// in-flight shard never requeued; with the timeout the slot fails
+    /// like a dead one and survivors take over. The clock only runs
+    /// while a single read/write makes no progress, not across a whole
+    /// shard, so the default is safe for long embeds; `None` disables.
+    pub io_timeout: Option<Duration>,
+}
+
+impl DispatchConfig {
+    pub fn new(endpoints: Vec<String>) -> DispatchConfig {
+        DispatchConfig {
+            endpoints,
+            slots_per_worker: 1,
+            connect_timeout: Duration::from_secs(5),
+            io_timeout: Some(Duration::from_secs(600)),
+        }
+    }
+}
+
+/// Shared scheduler state. Invariant: `total == done + pending.len() +
+/// in_flight` — which is what makes the wait condition below sound: a
+/// slot waiting on an empty queue is always woken by either a completion
+/// (possibly the last) or a requeue.
+struct FleetState {
+    pending: VecDeque<usize>,
+    in_flight: usize,
+    done: usize,
+    total: usize,
+    /// Endpoint indices excluded from further placement. One slot's
+    /// failure condemns the whole endpoint: its sibling slots retire at
+    /// their next queue visit instead of feeding more shards to a node
+    /// already known bad.
+    dead: std::collections::HashSet<usize>,
+    failures: Vec<String>,
+}
+
+/// Embed a spilled graph over the fleet. Bitwise-identical to the
+/// in-process lanes for any endpoint count, slot count, and placement
+/// order (rows are disjoint; each is produced by the shared shard
+/// kernel from the same spill bytes).
+pub fn embed_remote(
+    sp: &SpilledShards,
+    opts: &GeeOptions,
+    cfg: &DispatchConfig,
+) -> Result<Dense> {
+    if cfg.endpoints.is_empty() {
+        bail!("remote dispatch needs at least one worker endpoint");
+    }
+    let plan = &sp.plan;
+    let total = plan.shards();
+    let slots = cfg.slots_per_worker.max(1);
+    let state = Mutex::new(FleetState {
+        pending: (0..total).collect(),
+        in_flight: 0,
+        done: 0,
+        total,
+        dead: std::collections::HashSet::new(),
+        failures: Vec::new(),
+    });
+    let cond = Condvar::new();
+    let mut z = Dense::zeros(plan.n, plan.k);
+
+    let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f64>)>();
+    std::thread::scope(|sc| {
+        for (ep_idx, ep) in cfg.endpoints.iter().enumerate() {
+            for _ in 0..slots {
+                let tx = tx.clone();
+                let (state, cond) = (&state, &cond);
+                sc.spawn(move || {
+                    slot_loop(ep, ep_idx, sp, opts, cfg, state, cond, tx)
+                });
+            }
+        }
+        drop(tx);
+        // the collector is this thread: place rows as slots finish; the
+        // channel closes when every slot has retired or the work is done
+        while let Ok((s, rows)) = rx.recv() {
+            let (v0, v1) = plan.shard_range(s);
+            z.data[v0 * plan.k..v1 * plan.k].copy_from_slice(&rows);
+        }
+    });
+
+    let st = state.into_inner().unwrap();
+    if st.done != total {
+        bail!(
+            "remote fleet incomplete: {}/{} shards embedded, all endpoints dead: {}",
+            st.done,
+            total,
+            st.failures.join("; ")
+        );
+    }
+    Ok(z)
+}
+
+/// One slot: connect, then pull shards until the work is done or this
+/// endpoint fails. A failure (on this slot *or* a sibling slot of the
+/// same endpoint) requeues the in-flight shard for survivors, marks the
+/// endpoint dead, and retires the slot — the endpoint-exclusion rule.
+#[allow(clippy::too_many_arguments)]
+fn slot_loop(
+    endpoint: &str,
+    ep_idx: usize,
+    sp: &SpilledShards,
+    opts: &GeeOptions,
+    cfg: &DispatchConfig,
+    state: &Mutex<FleetState>,
+    cond: &Condvar,
+    tx: Sender<(usize, Vec<f64>)>,
+) {
+    let (mut reader, mut writer) = match connect(endpoint, cfg) {
+        Ok(c) => c,
+        Err(e) => {
+            let mut g = state.lock().unwrap();
+            g.dead.insert(ep_idx);
+            g.failures.push(format!("{endpoint}: {e:#}"));
+            // no shard was held, so nothing to requeue; wake any waiter
+            // in case this was the last live slot
+            cond.notify_all();
+            return;
+        }
+    };
+    loop {
+        let s = {
+            let mut g = state.lock().unwrap();
+            while g.pending.is_empty()
+                && g.done < g.total
+                && !g.dead.contains(&ep_idx)
+            {
+                g = cond.wait(g).unwrap();
+            }
+            if g.dead.contains(&ep_idx) {
+                // a sibling slot condemned this endpoint: retire without
+                // taking work (our connection is to the same bad node)
+                return;
+            }
+            if g.done >= g.total {
+                break;
+            }
+            let s = g.pending.pop_front().unwrap();
+            g.in_flight += 1;
+            s
+        };
+        match request_shard(&mut reader, &mut writer, sp, opts, s) {
+            Ok(rows) => {
+                // send before decrementing in_flight: the collector must
+                // never observe "all done" with a row block still in a
+                // slot's hands
+                let _ = tx.send((s, rows));
+                let mut g = state.lock().unwrap();
+                g.in_flight -= 1;
+                g.done += 1;
+                cond.notify_all();
+            }
+            Err(e) => {
+                let mut g = state.lock().unwrap();
+                g.in_flight -= 1;
+                g.pending.push_back(s);
+                g.dead.insert(ep_idx);
+                g.failures.push(format!("{endpoint}: shard {s}: {e:#}"));
+                cond.notify_all();
+                return;
+            }
+        }
+    }
+    let _ = writeln!(writer, "QUIT");
+    let _ = writer.flush();
+}
+
+/// Resolve and connect with a timeout; the returned pair shares one
+/// stream.
+fn connect(
+    endpoint: &str,
+    cfg: &DispatchConfig,
+) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>)> {
+    let addr = endpoint
+        .to_socket_addrs()
+        .with_context(|| format!("resolve {endpoint}"))?
+        .next()
+        .with_context(|| format!("{endpoint} resolved to no address"))?;
+    let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout)
+        .with_context(|| format!("connect {endpoint}"))?;
+    stream.set_read_timeout(cfg.io_timeout)?;
+    stream.set_write_timeout(cfg.io_timeout)?;
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    Ok((reader, BufWriter::new(stream)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::graph::Graph;
+    use crate::shard::remote::ShardServer;
+    use crate::shard::spill::{spill_from_graph, SpillConfig};
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(3, 3, 2.0);
+        g
+    }
+
+    fn spill(g: &Graph, tag: &str, shards: usize) -> SpilledShards {
+        let dir = std::env::temp_dir()
+            .join(format!("gee_dispatch_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        spill_from_graph(g, &SpillConfig { shards, ..SpillConfig::new(&dir) })
+            .unwrap()
+    }
+
+    #[test]
+    fn fleet_of_in_process_daemons_is_bitwise() {
+        let g = random_graph(561, 120, 700, 4);
+        let sp = spill(&g, "fleet", 5);
+        let s1 = ShardServer::start("127.0.0.1:0").unwrap();
+        let s2 = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig::new(vec![
+            s1.addr().to_string(),
+            s2.addr().to_string(),
+        ]);
+        for opts in crate::gee::GeeOptions::table_order() {
+            let expect = SparseGee::fast().embed(&g, &opts);
+            let z = embed_remote(&sp, &opts, &cfg).unwrap();
+            assert_eq!(z.data, expect.data, "remote fleet drifted at {opts:?}");
+        }
+        s1.stop();
+        s2.stop();
+    }
+
+    #[test]
+    fn dead_endpoint_is_excluded_and_survivor_finishes() {
+        let g = random_graph(562, 90, 500, 3);
+        let sp = spill(&g, "dead", 6);
+        let live = ShardServer::start("127.0.0.1:0").unwrap();
+        // 127.0.0.1:1 — reserved port, nothing listens: connect fails,
+        // every shard lands on the survivor
+        let cfg = DispatchConfig {
+            connect_timeout: Duration::from_millis(500),
+            ..DispatchConfig::new(vec![
+                "127.0.0.1:1".to_string(),
+                live.addr().to_string(),
+            ])
+        };
+        let opts = crate::gee::GeeOptions::ALL;
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, expect.data);
+        live.stop();
+    }
+
+    #[test]
+    fn err_replying_endpoint_is_condemned_with_all_its_slots() {
+        // a server that accepts connections but answers every line with
+        // ERR: the first slot to hit it condemns the endpoint, sibling
+        // slots retire instead of feeding it more shards, and the real
+        // daemon finishes everything — bitwise
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let bad_addr = listener.local_addr().unwrap().to_string();
+        let bad_server = std::thread::spawn(move || {
+            use std::io::{BufRead, BufReader, Write};
+            // serve a handful of connections, then quit
+            for stream in listener.incoming().take(4) {
+                let Ok(stream) = stream else { break };
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                if reader.read_line(&mut line).is_ok() {
+                    let mut w = stream;
+                    let _ = writeln!(w, "ERR boom");
+                    let _ = w.flush();
+                }
+            }
+        });
+        let g = random_graph(566, 100, 600, 3);
+        let sp = spill(&g, "errnode", 6);
+        let live = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig {
+            slots_per_worker: 3,
+            ..DispatchConfig::new(vec![bad_addr, live.addr().to_string()])
+        };
+        let opts = crate::gee::GeeOptions::ALL;
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, expect.data);
+        live.stop();
+        drop(bad_server); // detach; it exits after its accept budget
+    }
+
+    #[test]
+    fn whole_fleet_dead_reports_every_endpoint() {
+        let g = random_graph(563, 30, 90, 2);
+        let sp = spill(&g, "allgone", 2);
+        let cfg = DispatchConfig {
+            connect_timeout: Duration::from_millis(300),
+            ..DispatchConfig::new(vec![
+                "127.0.0.1:1".to_string(),
+                "127.0.0.1:2".to_string(),
+            ])
+        };
+        let err = embed_remote(&sp, &crate::gee::GeeOptions::NONE, &cfg).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("0/2 shards"), "{msg}");
+        assert!(msg.contains("127.0.0.1:1") && msg.contains("127.0.0.1:2"), "{msg}");
+    }
+
+    #[test]
+    fn no_endpoints_is_an_error() {
+        let g = random_graph(564, 10, 20, 2);
+        let sp = spill(&g, "none", 2);
+        assert!(embed_remote(
+            &sp,
+            &crate::gee::GeeOptions::NONE,
+            &DispatchConfig::new(Vec::new())
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn multiple_slots_per_worker_stay_bitwise() {
+        let g = random_graph(565, 150, 900, 4);
+        let sp = spill(&g, "slots", 8);
+        let s1 = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig {
+            slots_per_worker: 3,
+            ..DispatchConfig::new(vec![s1.addr().to_string()])
+        };
+        let opts = crate::gee::GeeOptions::new(true, false, true);
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, expect.data);
+        s1.stop();
+    }
+}

@@ -30,16 +30,26 @@
 //! * **multi-process** ([`process::embed_multiprocess`]) — worker
 //!   processes (`gee shard-worker`) each embed one spilled shard,
 //!   exchanging data via the `graph::io` text formats (exact: f64 writes
-//!   use shortest-roundtrip form).
+//!   use shortest-roundtrip form), scheduled by a rolling slot pool.
+//! * **distributed** ([`dispatch::embed_remote`]) — shard workers are
+//!   `gee shard-serve` daemons on other machines; the driver streams
+//!   each shard's edges plus the globals over TCP ([`remote`]'s line
+//!   protocol, same shortest-roundtrip f64 contract) and a placement
+//!   layer with rolling slots requeues a dead worker's shards onto
+//!   survivors.
 
+pub mod dispatch;
 pub mod local;
 pub mod plan;
 pub mod process;
+pub mod remote;
 pub mod spill;
 pub mod worker;
 
+pub use dispatch::{embed_remote, DispatchConfig};
 pub use plan::{resolve_shards, GlobalPass, ShardPlan};
 pub use process::{embed_multiprocess, ProcessConfig};
+pub use remote::ShardServer;
 pub use spill::{embed_out_of_core, SpillConfig, SpilledShards};
 pub use worker::{run_worker, WorkerArgs};
 

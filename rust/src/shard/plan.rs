@@ -11,7 +11,11 @@
 //! The accumulator is streaming on purpose: [`GlobalPass::observe`] holds
 //! O(vertices) state, never the edges, so the same phase 1 serves the
 //! in-memory engine and the out-of-core lane reading a file larger than
-//! RAM.
+//! RAM. The distributed fleet rests on the same split: the driver runs
+//! phase 1 once and ships `deg` (shortest-roundtrip text) with each
+//! shard, and a remote worker re-derives the scale through
+//! [`scale_from_deg`] — one formula, one implementation, whichever
+//! machine runs it.
 
 use crate::gee::options::GeeOptions;
 use crate::gee::weights::weight_values;

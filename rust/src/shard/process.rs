@@ -7,13 +7,17 @@
 //! edge files from the spill, a shared labels file, a shared degree file
 //! (shortest-roundtrip f64, so the worker's Laplacian scale is
 //! bitwise-identical to the in-process one), and one Z-rows file back per
-//! shard. Workers run in waves of `workers` concurrent processes; a
-//! failed worker surfaces its stderr.
+//! shard. Scheduling is a rolling slot pool: up to `workers` children run
+//! at once and a new shard launches the moment any slot frees, so one
+//! slow shard delays only its own slot, never a whole wave. A failure
+//! stops new launches, but every already-running child is reaped (no
+//! zombies, no orphaned output files) before the error propagates.
 
 use std::fs::{self, File};
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::{Path, PathBuf};
-use std::process::{Command, Stdio};
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,8 +29,9 @@ use crate::sparse::Dense;
 /// Multi-process execution settings.
 #[derive(Clone, Debug)]
 pub struct ProcessConfig {
-    /// Concurrent worker processes (1–4 is the tested range; waves of
-    /// this size run until every shard is done).
+    /// Concurrent worker-process slots (1–4 is the tested range; the
+    /// rolling pool keeps this many children running until every shard
+    /// is done).
     pub workers: usize,
     /// Binary exposing the `shard-worker` subcommand — the `gee` CLI
     /// itself in production; tests pass `env!("CARGO_BIN_EXE_gee")`.
@@ -37,6 +42,19 @@ impl ProcessConfig {
     pub fn new(worker_bin: impl Into<PathBuf>) -> ProcessConfig {
         ProcessConfig { workers: 2, worker_bin: worker_bin.into() }
     }
+}
+
+/// One in-flight worker child and where its rows go. `stderr_drain`
+/// reads the child's stderr pipe concurrently — without it a child that
+/// fills the pipe (long panic backtrace) would block on write(2) and
+/// never exit, and the try_wait poll would spin forever.
+struct Slot {
+    shard: usize,
+    v0: usize,
+    v1: usize,
+    out_path: PathBuf,
+    child: Child,
+    stderr_drain: std::thread::JoinHandle<String>,
 }
 
 /// Embed a spilled graph with worker processes, one shard per worker
@@ -63,104 +81,158 @@ pub fn embed_multiprocess(
     write_f64_vec(&deg_path, &plan.deg)?;
 
     let mut z = Dense::zeros(plan.n, plan.k);
-    let wave = cfg.workers.max(1);
+    let slots = cfg.workers.max(1);
+    let mut running: Vec<Slot> = Vec::with_capacity(slots);
     let mut next_shard = 0usize;
-    while next_shard < plan.shards() {
-        let hi = (next_shard + wave).min(plan.shards());
-        let mut children = Vec::with_capacity(hi - next_shard);
-        for s in next_shard..hi {
-            let (v0, v1) = plan.shard_range(s);
-            let out_path = sp.dir.join(format!("z_{s}.tsv"));
-            let child = Command::new(&cfg.worker_bin)
-                .arg("shard-worker")
-                .arg("--edges")
-                .arg(&sp.files[s])
-                .arg("--labels")
-                .arg(&labels_path)
-                .arg("--deg")
-                .arg(&deg_path)
-                .arg("--n")
-                .arg(plan.n.to_string())
-                .arg("--k")
-                .arg(plan.k.to_string())
-                .arg("--row0")
-                .arg(v0.to_string())
-                .arg("--row1")
-                .arg(v1.to_string())
-                // lap/diag/cor as 0/1 values (the compact "--c"-style
-                // code would be eaten as a flag by the CLI arg parser)
-                .arg("--lap")
-                .arg(if opts.laplacian { "1" } else { "0" })
-                .arg("--diag")
-                .arg(if opts.diagonal { "1" } else { "0" })
-                .arg("--cor")
-                .arg(if opts.correlation { "1" } else { "0" })
-                .arg("--out")
-                .arg(&out_path)
-                .stdin(Stdio::null())
-                .stdout(Stdio::null())
-                .stderr(Stdio::piped())
-                .spawn()
-                .with_context(|| {
-                    format!("spawn shard-worker via {}", cfg.worker_bin.display())
-                })?;
-            children.push((s, v0, v1, out_path, child));
-        }
-        // wait the whole wave before acting on any failure: an early bail
-        // must not leave running children (or zombies) and their output
-        // files behind
-        let mut outputs = Vec::with_capacity(children.len());
-        for (s, v0, v1, out_path, child) in children {
-            let res = child
-                .wait_with_output()
-                .with_context(|| format!("wait for shard-worker {s}"));
-            outputs.push((s, v0, v1, out_path, res));
-        }
-        let mut first_err: Option<anyhow::Error> = None;
-        for (s, v0, v1, out_path, res) in outputs {
-            let step = (|| -> Result<()> {
-                let out = res?;
-                if !out.status.success() {
-                    bail!(
-                        "shard-worker {s} failed ({}): {}",
-                        out.status,
-                        String::from_utf8_lossy(&out.stderr).trim()
-                    );
-                }
-                let rows = read_z_rows(
-                    &out_path,
-                    plan.k,
-                    &mut z.data[v0 * plan.k..v1 * plan.k],
-                )?;
-                if rows != v1 - v0 {
-                    bail!(
-                        "shard-worker {s} wrote {rows} rows, expected {}",
-                        v1 - v0
-                    );
-                }
-                Ok(())
-            })();
-            let _ = fs::remove_file(&out_path);
-            if let Err(e) = step {
-                if first_err.is_none() {
+    let mut first_err: Option<anyhow::Error> = None;
+
+    // rolling slot pool: refill free slots, reap whichever child exits
+    // first, repeat. Once a failure is recorded nothing new launches, but
+    // the loop keeps draining `running` — the reap-everything-before-
+    // propagating-failure invariant the old wave scheduler had.
+    while !running.is_empty() || (first_err.is_none() && next_shard < plan.shards()) {
+        while first_err.is_none()
+            && next_shard < plan.shards()
+            && running.len() < slots
+        {
+            let s = next_shard;
+            next_shard += 1;
+            match spawn_worker(sp, opts, cfg, &labels_path, &deg_path, s) {
+                Ok(slot) => running.push(slot),
+                Err(e) => {
                     first_err = Some(e);
+                    break;
                 }
             }
         }
-        if let Some(e) = first_err {
-            if !sp.keep {
-                let _ = fs::remove_file(&labels_path);
-                let _ = fs::remove_file(&deg_path);
-            }
-            return Err(e);
+        if running.is_empty() {
+            break;
         }
-        next_shard = hi;
+        // reap any exited child; poll with a short sleep (std has no
+        // portable wait-for-any)
+        let mut reaped = false;
+        let mut i = 0;
+        while i < running.len() {
+            match running[i].child.try_wait() {
+                Ok(Some(_)) => {
+                    let slot = running.swap_remove(i);
+                    reaped = true;
+                    if let Err(e) = finish_slot(slot, plan.k, &mut z) {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+                Ok(None) => i += 1,
+                Err(e) => {
+                    let mut slot = running.swap_remove(i);
+                    reaped = true;
+                    let _ = slot.child.kill();
+                    let _ = slot.child.wait();
+                    let _ = fs::remove_file(&slot.out_path);
+                    if first_err.is_none() {
+                        first_err = Some(
+                            anyhow::Error::new(e)
+                                .context(format!("poll shard-worker {}", slot.shard)),
+                        );
+                    }
+                }
+            }
+        }
+        if !reaped && !running.is_empty() {
+            std::thread::sleep(Duration::from_millis(2));
+        }
     }
-    if !sp.keep {
-        let _ = fs::remove_file(&labels_path);
-        let _ = fs::remove_file(&deg_path);
+    if let Some(e) = first_err {
+        return Err(e);
     }
     Ok(z)
+}
+
+/// Launch one shard's worker child.
+fn spawn_worker(
+    sp: &SpilledShards,
+    opts: &GeeOptions,
+    cfg: &ProcessConfig,
+    labels_path: &Path,
+    deg_path: &Path,
+    s: usize,
+) -> Result<Slot> {
+    let plan = &sp.plan;
+    let (v0, v1) = plan.shard_range(s);
+    let out_path = sp.dir.join(format!("z_{s}.tsv"));
+    let mut cmd = Command::new(&cfg.worker_bin);
+    cmd.arg("shard-worker")
+        .arg("--edges")
+        .arg(&sp.files[s])
+        .arg("--labels")
+        .arg(labels_path)
+        .arg("--deg")
+        .arg(deg_path)
+        .arg("--n")
+        .arg(plan.n.to_string())
+        .arg("--k")
+        .arg(plan.k.to_string())
+        .arg("--row0")
+        .arg(v0.to_string())
+        .arg("--row1")
+        .arg(v1.to_string());
+    // real boolean flags (presence = on). Note the compatibility
+    // direction: the *worker* still accepts the legacy `--lap 1` 0/1
+    // form, so old drivers can spawn this binary — but this driver's
+    // bare flags require a worker from this revision (in practice the
+    // two are always the same binary: current_exe / CARGO_BIN_EXE).
+    if opts.laplacian {
+        cmd.arg("--lap");
+    }
+    if opts.diagonal {
+        cmd.arg("--diag");
+    }
+    if opts.correlation {
+        cmd.arg("--cor");
+    }
+    let mut child = cmd
+        .arg("--out")
+        .arg(&out_path)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        .stderr(Stdio::piped())
+        .spawn()
+        .with_context(|| {
+            format!("spawn shard-worker via {}", cfg.worker_bin.display())
+        })?;
+    let stderr = child.stderr.take();
+    let stderr_drain = std::thread::spawn(move || {
+        let mut buf = String::new();
+        if let Some(mut pipe) = stderr {
+            use std::io::Read;
+            let _ = pipe.read_to_string(&mut buf);
+        }
+        buf
+    });
+    Ok(Slot { shard: s, v0, v1, out_path, child, stderr_drain })
+}
+
+/// Collect one exited child: check status, parse its Z rows into place,
+/// remove its output file.
+fn finish_slot(slot: Slot, k: usize, z: &mut Dense) -> Result<()> {
+    let Slot { shard: s, v0, v1, out_path, mut child, stderr_drain } = slot;
+    let step = (|| -> Result<()> {
+        let status = child
+            .wait()
+            .with_context(|| format!("wait for shard-worker {s}"))?;
+        let stderr = stderr_drain.join().unwrap_or_default();
+        if !status.success() {
+            bail!("shard-worker {s} failed ({status}): {}", stderr.trim());
+        }
+        let rows = read_z_rows(&out_path, k, &mut z.data[v0 * k..v1 * k])?;
+        if rows != v1 - v0 {
+            bail!("shard-worker {s} wrote {rows} rows, expected {}", v1 - v0);
+        }
+        Ok(())
+    })();
+    let _ = fs::remove_file(&out_path);
+    step
 }
 
 /// Parse a worker's Z-rows file (one whitespace-separated row per line)
@@ -173,23 +245,8 @@ fn read_z_rows(path: &Path, k: usize, out: &mut [f64]) -> Result<usize> {
         if k > 0 && row * k >= out.len() {
             bail!("{}: more rows than the shard range", path.display());
         }
-        let mut col = 0usize;
-        for tok in line.split_whitespace() {
-            if col >= k {
-                bail!("{}:{}: more than {k} columns", path.display(), row + 1);
-            }
-            out[row * k + col] = tok.parse::<f64>().with_context(|| {
-                format!("{}:{}: bad value", path.display(), row + 1)
-            })?;
-            col += 1;
-        }
-        if col != k {
-            bail!(
-                "{}:{}: {col} columns, expected {k}",
-                path.display(),
-                row + 1
-            );
-        }
+        super::worker::parse_z_row(&line, k, &mut out[row * k..row * k + k])
+            .with_context(|| format!("{}:{}", path.display(), row + 1))?;
         row += 1;
     }
     Ok(row)

@@ -1,0 +1,539 @@
+//! TCP transport for the sharded engine — shard workers on other
+//! machines, no shared filesystem (the ROADMAP "distribute the sharded
+//! lane" item: the worker protocol was already file/process-based; this
+//! is the transport half, [`super::dispatch`] is the placement half).
+//!
+//! Style follows `coordinator/server.rs`: a minimal line-oriented text
+//! exchange over stdlib `TcpListener`, one thread per connection, no new
+//! dependencies. Every f64 crosses the wire in shortest-roundtrip form
+//! (Rust's `Display` re-parses bitwise), and the worker re-derives the
+//! weight vector and Laplacian scale from the shipped globals through
+//! the same single implementations the in-process engines use
+//! ([`weight_values`], [`scale_from_deg`](super::plan::scale_from_deg)) —
+//! so remote rows are **bitwise-identical** to `SparseGee::fast()`, the
+//! same contract `shard/worker.rs` gives the multi-process lane.
+//!
+//! ## Protocol
+//!
+//! One request (pipelined sequentially per connection):
+//!
+//! ```text
+//! -> SHARD n=<n> k=<k> row0=<v0> row1=<v1> lap=<0|1> diag=<0|1> cor=<0|1>
+//! -> <n lines: one global label each>
+//! -> <n lines: one global weighted degree each (shortest-roundtrip f64)>
+//! -> <the shard's incident edges, one "src dst weight" line each>
+//! -> END
+//! <- OK rows=<v1 - v0>
+//! <- <v1 - v0 lines: k tab-separated shortest-roundtrip f64 each>
+//! <- DONE
+//! ```
+//!
+//! or `ERR <message>` (after which the daemon closes the connection — a
+//! half-consumed body has no well-defined resync point). `PING` → `PONG`
+//! for health checks and placement probes; `QUIT` closes. Admission is
+//! bounded: headers are rejected against the `MAX_FRAME_*` caps before
+//! anything is allocated from them, the label / degree / edge vectors
+//! grow only as data actually arrives (edge lines additionally capped),
+//! and the one header-driven allocation — the `rows × k` output block,
+//! sized after the body is fully read — is capped at [`MAX_FRAME_CELLS`]
+//! (2 GiB), the same worst-case the coordinator wire protocol admits.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Context, Result};
+
+use super::local::embed_shard;
+use super::plan::scale_from_deg;
+use crate::gee::options::GeeOptions;
+use crate::gee::weights::weight_values;
+use crate::gee::workspace::EmbedWorkspace;
+use crate::graph::io::parse_edge_fields;
+
+/// Vertex ids travel as u32, so no header may claim more vertices.
+pub const MAX_FRAME_VERTICES: usize = u32::MAX as usize;
+/// Class-count sanity bound (the weight pass allocates O(k)).
+pub const MAX_FRAME_CLASSES: usize = 1 << 24;
+/// Cap on `rows * k` output cells per request — the one allocation
+/// driven by header values alone rather than by received data (2 GiB of
+/// f64 at the cap, the same worst-case the coordinator's
+/// `MAX_WIRE_CELLS` admits). A legitimate fleet driver that trips this
+/// has very wide embeddings on very large shards: raise the shard count
+/// so each shard's row block shrinks.
+pub const MAX_FRAME_CELLS: usize = 1 << 28;
+/// Cap on edge lines accepted per request, enforced as the stream
+/// arrives. A legitimate shard is far below this (`resolve_shards`
+/// targets ≤ `MAX_INDEX/4` directed slots per shard); without the cap a
+/// driver that never sends `END` grows the daemon's edge buffers until
+/// it OOMs — the same exhaustion `coordinator/server.rs` guards with
+/// `MAX_WIRE_EDGES`.
+pub const MAX_FRAME_EDGES: usize = 1 << 31;
+
+/// A `SHARD` request header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub n: usize,
+    pub k: usize,
+    pub row0: usize,
+    pub row1: usize,
+    pub options: GeeOptions,
+}
+
+impl ShardHeader {
+    /// Parse the key=val fields after the `SHARD` verb.
+    pub fn parse(header: &str) -> Result<ShardHeader> {
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("SHARD") {
+            bail!("expected SHARD, got '{header}'");
+        }
+        let (mut n, mut k, mut row0, mut row1) = (None, None, None, None);
+        let (mut lap, mut diag, mut cor) = (false, false, false);
+        let mut parse_bool = |val: &str, key: &str| -> Result<bool> {
+            match val {
+                "0" => Ok(false),
+                "1" => Ok(true),
+                other => bail!("bad {key}={other} (use 0 or 1)"),
+            }
+        };
+        for p in parts {
+            let (key, val) = p.split_once('=').context("SHARD args are key=val")?;
+            match key {
+                "n" => n = Some(val.parse::<usize>().context("bad n")?),
+                "k" => k = Some(val.parse::<usize>().context("bad k")?),
+                "row0" => row0 = Some(val.parse::<usize>().context("bad row0")?),
+                "row1" => row1 = Some(val.parse::<usize>().context("bad row1")?),
+                "lap" => lap = parse_bool(val, "lap")?,
+                "diag" => diag = parse_bool(val, "diag")?,
+                "cor" => cor = parse_bool(val, "cor")?,
+                other => bail!("unknown SHARD arg '{other}'"),
+            }
+        }
+        let h = ShardHeader {
+            n: n.context("SHARD requires n=")?,
+            k: k.context("SHARD requires k=")?,
+            row0: row0.context("SHARD requires row0=")?,
+            row1: row1.context("SHARD requires row1=")?,
+            options: GeeOptions::new(lap, diag, cor),
+        };
+        h.validate()?;
+        Ok(h)
+    }
+
+    /// Bounds gate, applied before anything is allocated from the header.
+    pub fn validate(&self) -> Result<()> {
+        if self.n == 0 {
+            bail!("SHARD requires n >= 1");
+        }
+        if self.n > MAX_FRAME_VERTICES {
+            bail!("n={} exceeds the wire limit {MAX_FRAME_VERTICES}", self.n);
+        }
+        if self.k > MAX_FRAME_CLASSES {
+            bail!("k={} exceeds the wire limit {MAX_FRAME_CLASSES}", self.k);
+        }
+        if self.row0 > self.row1 || self.row1 > self.n {
+            bail!("bad row range [{}, {}) for n={}", self.row0, self.row1, self.n);
+        }
+        let rows = self.row1 - self.row0;
+        match rows.checked_mul(self.k) {
+            Some(cells) if cells <= MAX_FRAME_CELLS => Ok(()),
+            _ => bail!(
+                "rows*k = {rows}*{} exceeds the wire limit {MAX_FRAME_CELLS}",
+                self.k
+            ),
+        }
+    }
+}
+
+/// Per-connection scratch: every buffer is reused across the pipelined
+/// requests of one connection, so a fleet daemon serving a long driver
+/// session settles into zero steady-state allocation growth.
+struct ConnState {
+    labels: Vec<i32>,
+    deg: Vec<f64>,
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    w: Vec<f64>,
+    out: Vec<f64>,
+    ws: EmbedWorkspace,
+    line: String,
+}
+
+impl ConnState {
+    fn new() -> ConnState {
+        ConnState {
+            labels: Vec::new(),
+            deg: Vec::new(),
+            src: Vec::new(),
+            dst: Vec::new(),
+            w: Vec::new(),
+            out: Vec::new(),
+            ws: EmbedWorkspace::new(),
+            line: String::new(),
+        }
+    }
+}
+
+/// A running shard-worker daemon bound to `addr()`.
+pub struct ShardServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl ShardServer {
+    /// Bind (port 0 for ephemeral) and serve shard requests. One thread
+    /// per connection; a driver keeps one connection per dispatch slot,
+    /// so connection count equals fleet slot count.
+    pub fn start(bind: &str) -> Result<ShardServer> {
+        let listener =
+            TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        std::thread::spawn(move || {
+                            let _ = handle_connection(stream);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(ShardServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting; in-flight connections finish on their own threads.
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    let mut st = ConnState::new();
+    loop {
+        st.line.clear();
+        if reader.read_line(&mut st.line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let line = st.line.trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line == "PING" {
+            writeln!(writer, "PONG")?;
+            writer.flush()?;
+            continue;
+        }
+        if line == "QUIT" {
+            return Ok(());
+        }
+        match serve_shard(&line, &mut reader, &mut writer, &mut st) {
+            Ok(()) => writer.flush()?,
+            Err(e) => {
+                // after a failed request the body position is undefined —
+                // report and drop the connection rather than resync-guess
+                writeln!(writer, "ERR {e:#}")?;
+                writer.flush()?;
+                return Err(e);
+            }
+        }
+    }
+}
+
+/// Serve one `SHARD` request: header → globals → edges → embed → rows.
+fn serve_shard(
+    header: &str,
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    st: &mut ConnState,
+) -> Result<()> {
+    let h = ShardHeader::parse(header)?;
+    let (n, k) = (h.n, h.k);
+
+    // globals: n labels, then n degrees — allocation tracks received data
+    st.labels.clear();
+    for i in 0..n {
+        let t = read_trimmed(reader, &mut st.line)
+            .with_context(|| format!("label line {}", i + 1))?;
+        let l: i32 = t.parse().with_context(|| format!("bad label '{t}'"))?;
+        if l < -1 {
+            bail!("label {l} < -1 (use -1 for unlabeled)");
+        }
+        if l >= k as i32 {
+            bail!("label {l} >= k {k}");
+        }
+        st.labels.push(l);
+    }
+    st.deg.clear();
+    for i in 0..n {
+        let t = read_trimmed(reader, &mut st.line)
+            .with_context(|| format!("degree line {}", i + 1))?;
+        st.deg
+            .push(t.parse::<f64>().with_context(|| format!("bad degree '{t}'"))?);
+    }
+
+    // the shard's incident edges, until END
+    st.src.clear();
+    st.dst.clear();
+    st.w.clear();
+    loop {
+        let t = read_trimmed(reader, &mut st.line).context("edge line")?;
+        if t == "END" {
+            break;
+        }
+        let Some((a, b, w)) = parse_edge_fields(t)? else {
+            continue;
+        };
+        if a as usize >= n || b as usize >= n {
+            bail!("shard edge endpoint {} out of range for n={n}", a.max(b));
+        }
+        if st.src.len() >= MAX_FRAME_EDGES {
+            bail!("request exceeds the wire limit of {MAX_FRAME_EDGES} edges");
+        }
+        st.src.push(a);
+        st.dst.push(b);
+        st.w.push(w);
+    }
+
+    // re-derive the globals' derived vectors through the shared formulas
+    let wv = weight_values(&st.labels, k);
+    let scale = scale_from_deg(&st.deg, &h.options);
+
+    let rows = h.row1 - h.row0;
+    st.out.clear();
+    st.out.resize(rows * k, 0.0);
+    embed_shard(
+        &st.src,
+        &st.dst,
+        &st.w,
+        h.row0,
+        h.row1,
+        &st.labels,
+        &wv,
+        scale.as_deref(),
+        k,
+        &h.options,
+        &mut st.ws,
+        &mut st.out,
+    );
+
+    writeln!(writer, "OK rows={rows}")?;
+    super::worker::write_z_rows(writer, &st.out, rows, k)?;
+    writeln!(writer, "DONE")?;
+    Ok(())
+}
+
+/// Read one line into `buf`, returning its trimmed contents; EOF is an
+/// error (a framed body must be complete).
+fn read_trimmed<'a>(reader: &mut impl BufRead, buf: &'a mut String) -> Result<&'a str> {
+    buf.clear();
+    if reader.read_line(buf)? == 0 {
+        bail!("connection closed mid-request");
+    }
+    Ok(buf.trim())
+}
+
+/// Client side of one `SHARD` round trip: stream shard `s` of `sp` to an
+/// open daemon connection and return its `(row1-row0) * k` Z cells.
+/// Bitwise contract: the spill file's weight text is forwarded verbatim
+/// and the reply is parsed with the shared row grammar, so the result is
+/// byte-for-byte what the in-process shard pass produces.
+pub(crate) fn request_shard(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    sp: &super::spill::SpilledShards,
+    opts: &GeeOptions,
+    s: usize,
+) -> Result<Vec<f64>> {
+    let plan = &sp.plan;
+    let (v0, v1) = plan.shard_range(s);
+    let b = |v: bool| if v { "1" } else { "0" };
+    writeln!(
+        writer,
+        "SHARD n={} k={} row0={v0} row1={v1} lap={} diag={} cor={}",
+        plan.n,
+        plan.k,
+        b(opts.laplacian),
+        b(opts.diagonal),
+        b(opts.correlation)
+    )?;
+    for &l in &sp.labels {
+        writeln!(writer, "{l}")?;
+    }
+    for &d in &plan.deg {
+        writeln!(writer, "{d}")?;
+    }
+    // forward the spill file's lines untouched (already shortest-roundtrip)
+    let f = std::fs::File::open(&sp.files[s])
+        .with_context(|| format!("open {}", sp.files[s].display()))?;
+    let mut file_line = String::new();
+    let mut fr = BufReader::new(f);
+    loop {
+        file_line.clear();
+        if fr.read_line(&mut file_line)? == 0 {
+            break;
+        }
+        let t = file_line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        writer.write_all(t.as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    writeln!(writer, "END")?;
+    writer.flush()?;
+
+    let mut line = String::new();
+    let t = read_trimmed(reader, &mut line).context("shard reply header")?;
+    let rows_claim: usize = t
+        .strip_prefix("OK rows=")
+        .with_context(|| format!("worker said: {t}"))?
+        .parse()
+        .context("bad rows count")?;
+    let rows = v1 - v0;
+    if rows_claim != rows {
+        bail!("worker replied {rows_claim} rows, expected {rows}");
+    }
+    let k = plan.k;
+    let mut out = vec![0.0f64; rows * k];
+    for r in 0..rows {
+        let t = read_trimmed(reader, &mut line)
+            .with_context(|| format!("Z row {}", r + 1))?;
+        super::worker::parse_z_row(t, k, &mut out[r * k..(r + 1) * k])
+            .with_context(|| format!("Z row {}", r + 1))?;
+    }
+    let t = read_trimmed(reader, &mut line)?;
+    if t != "DONE" {
+        bail!("missing DONE trailer, got '{t}'");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::graph::Graph;
+    use crate::shard::spill::{spill_from_graph, SpillConfig};
+    use crate::util::rng::Rng;
+
+    fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+        let mut rng = Rng::new(seed);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for _ in 0..m {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        g.add_edge(4, 4, 1.75);
+        g
+    }
+
+    #[test]
+    fn header_parse_and_bounds() {
+        let h = ShardHeader::parse("SHARD n=10 k=3 row0=2 row1=7 lap=1 diag=0 cor=1")
+            .unwrap();
+        assert_eq!((h.n, h.k, h.row0, h.row1), (10, 3, 2, 7));
+        assert_eq!(h.options, GeeOptions::new(true, false, true));
+
+        // oversized / inconsistent headers are rejected before allocation
+        assert!(ShardHeader::parse("SHARD n=0 k=1 row0=0 row1=0").is_err());
+        assert!(ShardHeader::parse(&format!(
+            "SHARD n={} k=1 row0=0 row1=1",
+            MAX_FRAME_VERTICES + 1
+        ))
+        .is_err());
+        assert!(ShardHeader::parse(&format!(
+            "SHARD n=10 k={} row0=0 row1=1",
+            MAX_FRAME_CLASSES + 1
+        ))
+        .is_err());
+        // rows*k product overflow / cap
+        assert!(ShardHeader::parse(&format!(
+            "SHARD n={0} k=16777216 row0=0 row1={0}",
+            u32::MAX
+        ))
+        .is_err());
+        assert!(ShardHeader::parse("SHARD n=5 k=2 row0=4 row1=2").is_err());
+        assert!(ShardHeader::parse("SHARD n=5 k=2 row0=0 row1=9").is_err());
+        assert!(ShardHeader::parse("SHARD n=5 k=2 row0=0 row1=5 lap=x").is_err());
+        assert!(ShardHeader::parse("SHARD n=5 row0=0 row1=5").is_err());
+        assert!(ShardHeader::parse("PING").is_err());
+    }
+
+    #[test]
+    fn round_trip_over_localhost_is_bitwise() {
+        let dir = std::env::temp_dir()
+            .join(format!("gee_remote_unit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = random_graph(551, 80, 450, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 3, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+
+        for opts in GeeOptions::table_order() {
+            let whole = SparseGee::fast().embed(&g, &opts);
+            for s in 0..sp.plan.shards() {
+                let (v0, v1) = sp.plan.shard_range(s);
+                let rows =
+                    request_shard(&mut reader, &mut writer, &sp, &opts, s).unwrap();
+                assert_eq!(
+                    rows,
+                    whole.data[v0 * g.k..v1 * g.k].to_vec(),
+                    "remote shard {s} drifted at {opts:?}"
+                );
+            }
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn ping_and_error_paths() {
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "PING").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "PONG");
+
+        // hostile header: huge n rejected with a bounded error, instantly
+        writeln!(writer, "SHARD n=99999999999999 k=2 row0=0 row1=1").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR"), "{line}");
+        server.stop();
+    }
+}

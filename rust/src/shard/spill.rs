@@ -18,6 +18,7 @@
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
@@ -41,7 +42,10 @@ pub struct SpillConfig {
     /// hub vertex makes one range heavy (a single vertex's edges cannot
     /// be split across shards).
     pub mem_budget_edges: usize,
-    /// Directory for spill files (created if absent).
+    /// Parent directory for spill files (created if absent). Each spill
+    /// writes into its own unique subdirectory of this path — two
+    /// concurrent spills sharing one config never see each other's
+    /// `shard_N.edges` (they used to clobber silently).
     pub dir: PathBuf,
     /// Keep spill files on drop (debugging / inspection).
     pub keep: bool,
@@ -54,8 +58,10 @@ impl SpillConfig {
 }
 
 /// A spilled graph: the phase-1 plan, the global labels, and one
-/// incident-edge file per shard. Spill files are removed on drop unless
-/// the config said `keep`.
+/// incident-edge file per shard. `dir` is this spill's own unique
+/// subdirectory (under [`SpillConfig::dir`]); the whole subdirectory —
+/// shard files plus anything a backend staged next to them — is removed
+/// on drop unless the config said `keep`.
 #[derive(Debug)]
 pub struct SpilledShards {
     pub plan: ShardPlan,
@@ -68,11 +74,21 @@ pub struct SpilledShards {
 impl Drop for SpilledShards {
     fn drop(&mut self) {
         if !self.keep {
-            for f in &self.files {
-                let _ = fs::remove_file(f);
-            }
+            let _ = fs::remove_dir_all(&self.dir);
         }
     }
+}
+
+/// Distinguishes concurrent spills within one process; the pid in the
+/// directory name distinguishes processes.
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn unique_spill_dir(parent: &Path) -> PathBuf {
+    parent.join(format!(
+        "spill_{}_{}",
+        std::process::id(),
+        SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+    ))
 }
 
 /// Shard count request after applying the memory budget.
@@ -87,10 +103,11 @@ fn requested_shards(cfg: &SpillConfig, directed: u64) -> usize {
 }
 
 fn open_writers(
-    dir: &Path,
+    parent: &Path,
     shards: usize,
-) -> Result<(Vec<PathBuf>, Vec<BufWriter<File>>)> {
-    fs::create_dir_all(dir).with_context(|| format!("create {}", dir.display()))?;
+) -> Result<(PathBuf, Vec<PathBuf>, Vec<BufWriter<File>>)> {
+    let dir = unique_spill_dir(parent);
+    fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
     let mut files = Vec::with_capacity(shards);
     let mut writers = Vec::with_capacity(shards);
     for s in 0..shards {
@@ -99,7 +116,7 @@ fn open_writers(
         files.push(path);
         writers.push(BufWriter::new(f));
     }
-    Ok((files, writers))
+    Ok((dir, files, writers))
 }
 
 /// Spill an in-memory graph (the multi-process lane's entry point when
@@ -111,24 +128,26 @@ pub fn spill_from_graph(g: &Graph, cfg: &SpillConfig) -> Result<SpilledShards> {
     }
     let req = requested_shards(cfg, pass.directed());
     let plan = pass.finish(&g.labels, g.k, req);
-    let (files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
+    let (dir, files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
     for i in 0..g.num_edges() {
         let (a, b, w) = (g.src[i], g.dst[i], g.w[i]);
         let sa = plan.shard_of(a as usize);
         let sb = plan.shard_of(b as usize);
-        writeln!(writers[sa], "{a} {b} {w}")?;
+        writeln!(writers[sa], "{a} {b} {w}")
+            .with_context(|| format!("write {}", files[sa].display()))?;
         if sb != sa {
-            writeln!(writers[sb], "{a} {b} {w}")?;
+            writeln!(writers[sb], "{a} {b} {w}")
+                .with_context(|| format!("write {}", files[sb].display()))?;
         }
     }
-    for wtr in &mut writers {
-        wtr.flush()?;
+    for (s, wtr) in writers.iter_mut().enumerate() {
+        wtr.flush().with_context(|| format!("flush {}", files[s].display()))?;
     }
     Ok(SpilledShards {
         plan,
         labels: g.labels.clone(),
         files,
-        dir: cfg.dir.clone(),
+        dir,
         keep: cfg.keep,
     })
 }
@@ -168,8 +187,10 @@ pub fn spill_from_files(
 
     let req = requested_shards(cfg, pass.directed());
     let plan = pass.finish(&labels, k, req);
-    let (files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
-    let mut io_err: Option<std::io::Error> = None;
+    let (dir, files, mut writers) = open_writers(&cfg.dir, plan.shards())?;
+    // a mid-spill IO failure (disk full, quota, yanked mount) must name
+    // the shard file it hit, not just "write spill files"
+    let mut io_err: Option<(std::io::Error, usize)> = None;
     for_each_edge(edges, |a, b, w| {
         if io_err.is_some() {
             return;
@@ -177,22 +198,23 @@ pub fn spill_from_files(
         let sa = plan.shard_of(a as usize);
         let sb = plan.shard_of(b as usize);
         if let Err(e) = writeln!(writers[sa], "{a} {b} {w}") {
-            io_err = Some(e);
+            io_err = Some((e, sa));
             return;
         }
         if sb != sa {
             if let Err(e) = writeln!(writers[sb], "{a} {b} {w}") {
-                io_err = Some(e);
+                io_err = Some((e, sb));
             }
         }
     })?;
-    if let Some(e) = io_err {
-        return Err(anyhow::Error::new(e).context("write spill files"));
+    if let Some((e, s)) = io_err {
+        return Err(anyhow::Error::new(e)
+            .context(format!("write spill shard file {}", files[s].display())));
     }
-    for wtr in &mut writers {
-        wtr.flush()?;
+    for (s, wtr) in writers.iter_mut().enumerate() {
+        wtr.flush().with_context(|| format!("flush {}", files[s].display()))?;
     }
-    Ok(SpilledShards { plan, labels, files, dir: cfg.dir.clone(), keep: cfg.keep })
+    Ok(SpilledShards { plan, labels, files, dir, keep: cfg.keep })
 }
 
 /// Embed a spilled graph shard-by-shard, in-process: only one shard's
@@ -347,6 +369,35 @@ mod tests {
         let zf = embed_out_of_core(&spf, &opts).unwrap();
         let zg = embed_out_of_core(&spg, &opts).unwrap();
         assert_eq!(zf.data, zg.data);
+    }
+
+    #[test]
+    fn concurrent_spills_into_one_config_dir_never_collide() {
+        // regression: two spills sharing one SpillConfig::dir used to
+        // write the same shard_N.edges paths and silently clobber each
+        // other — each spill now gets its own subdirectory
+        let d = tmpdir("collide");
+        let cfg = SpillConfig { shards: 3, ..SpillConfig::new(&d) };
+        let g1 = random_graph(536, 70, 400, 3);
+        let g2 = random_graph(537, 90, 500, 3);
+        let sp1 = spill_from_graph(&g1, &cfg).unwrap();
+        let sp2 = spill_from_graph(&g2, &cfg).unwrap();
+        assert_ne!(sp1.dir, sp2.dir, "each spill must own a unique directory");
+        for (f1, f2) in sp1.files.iter().zip(&sp2.files) {
+            assert_ne!(f1, f2);
+        }
+        // both embed bitwise even though they coexisted
+        for (g, sp) in [(&g1, &sp1), (&g2, &sp2)] {
+            let expect = SparseGee::fast().embed(g, &GeeOptions::ALL);
+            let z = embed_out_of_core(sp, &GeeOptions::ALL).unwrap();
+            assert_eq!(z.data, expect.data);
+        }
+        // drop removes each spill's whole subdirectory, not the parent
+        let (d1, d2) = (sp1.dir.clone(), sp2.dir.clone());
+        drop(sp1);
+        drop(sp2);
+        assert!(!d1.exists() && !d2.exists());
+        assert!(d.exists(), "the shared parent dir must survive");
     }
 
     #[test]

@@ -10,6 +10,47 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+/// Parse one Z row (whitespace-separated, exactly `k` values) into
+/// `out_row`. Shared by every consumer of worker output — the
+/// multi-process file exchange and the TCP fleet client — so the row
+/// grammar has exactly one implementation.
+pub(crate) fn parse_z_row(line: &str, k: usize, out_row: &mut [f64]) -> Result<()> {
+    debug_assert_eq!(out_row.len(), k);
+    let mut col = 0usize;
+    for tok in line.split_whitespace() {
+        if col >= k {
+            bail!("more than {k} columns");
+        }
+        out_row[col] = tok.parse::<f64>().context("bad value")?;
+        col += 1;
+    }
+    if col != k {
+        bail!("{col} columns, expected {k}");
+    }
+    Ok(())
+}
+
+/// Write Z rows (`rows × k`, row-major) as tab-separated
+/// shortest-roundtrip text, one row per line — the inverse of
+/// [`parse_z_row`], bitwise under re-parse.
+pub(crate) fn write_z_rows(
+    f: &mut impl Write,
+    out: &[f64],
+    rows: usize,
+    k: usize,
+) -> std::io::Result<()> {
+    for r in 0..rows {
+        for (i, v) in out[r * k..(r + 1) * k].iter().enumerate() {
+            if i > 0 {
+                f.write_all(b"\t")?;
+            }
+            write!(f, "{v}")?;
+        }
+        f.write_all(b"\n")?;
+    }
+    Ok(())
+}
+
 use super::local::embed_shard;
 use crate::gee::options::GeeOptions;
 use crate::gee::weights::weight_values;
@@ -90,15 +131,8 @@ pub fn run_worker(args: &WorkerArgs) -> Result<()> {
         File::create(&args.out)
             .with_context(|| format!("create {}", args.out.display()))?,
     );
-    for r in 0..rows {
-        for (i, v) in out[r * args.k..(r + 1) * args.k].iter().enumerate() {
-            if i > 0 {
-                f.write_all(b"\t")?;
-            }
-            write!(f, "{v}")?;
-        }
-        f.write_all(b"\n")?;
-    }
+    write_z_rows(&mut f, &out, rows, args.k)
+        .with_context(|| format!("write {}", args.out.display()))?;
     f.flush()?;
     Ok(())
 }

@@ -1,16 +1,23 @@
-//! Sharded-engine acceptance suite (ISSUE 3):
+//! Sharded-engine acceptance suite (ISSUEs 3 + 4):
 //!
 //! * `Engine::Sharded` vs `Engine::Sparse` to ≤1e-12 on SBM + Chung-Lu
 //!   across the full `GeeOptions` grid, at several shard counts;
 //! * the multi-process backend (real `gee shard-worker` child processes,
-//!   1–4 workers) bitwise-matches the in-process lanes;
+//!   1–4 workers, rolling slot pool) bitwise-matches the in-process
+//!   lanes, including on badly unbalanced shards, and reaps every child
+//!   before propagating a failure;
 //! * out-of-core: a spilled graph embeds exactly while every shard's
 //!   resident slice is smaller than the whole edge list (memory budget
 //!   below the edge count);
-//! * the `shard-embed` CLI drives the same path end to end.
+//! * the distributed fleet: real `gee shard-serve` daemons on localhost
+//!   (≥2), bitwise vs `sparse-fast` on the SBM + Chung-Lu parity grid,
+//!   surviving a daemon killed mid-run with its shards requeued;
+//! * the `shard-embed` CLI drives both the multi-process and the remote
+//!   path end to end.
 
+use std::io::{BufRead, BufReader};
 use std::path::PathBuf;
-use std::process::Command;
+use std::process::{Child, Command, Stdio};
 
 use gee_sparse::gee::sparse_gee::SparseGee;
 use gee_sparse::gee::{Engine, GeeOptions};
@@ -19,12 +26,57 @@ use gee_sparse::graph::io::write_graph;
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::Graph;
 use gee_sparse::shard::{
-    embed_multiprocess, embed_out_of_core, spill::spill_from_graph, ProcessConfig,
-    ShardedGee, SpillConfig,
+    embed_multiprocess, embed_out_of_core, embed_remote,
+    spill::spill_from_graph, DispatchConfig, ProcessConfig, ShardedGee,
+    SpillConfig,
 };
 use gee_sparse::util::rng::Rng;
 
 const TOL: f64 = 1e-12;
+
+/// A `gee shard-serve` daemon child; killed on drop so a panicking test
+/// cannot leak listeners.
+struct Daemon {
+    child: Child,
+    addr: String,
+}
+
+impl Daemon {
+    /// Spawn on an ephemeral port and parse the bound address from the
+    /// daemon's announcement line.
+    fn spawn() -> Daemon {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_gee"))
+            .args(["shard-serve", "--listen", "127.0.0.1:0"])
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn gee shard-serve");
+        let stdout = child.stdout.take().unwrap();
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).unwrap();
+        let addr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .expect("daemon announcement line")
+            .to_string();
+        assert!(addr.contains(':'), "unexpected announcement: {line}");
+        Daemon { child, addr }
+    }
+
+    fn kill(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+    }
+}
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!(
@@ -122,6 +174,89 @@ fn multiprocess_workers_match_in_process_lanes() {
 }
 
 #[test]
+fn multiprocess_rolling_pool_handles_uneven_shards() {
+    // a star graph: vertex 0 holds ~40% of all directed slots, and the
+    // planner cannot split one vertex's slots, so its shard's file
+    // dwarfs the others — under the old wave scheduler that shard
+    // stalled its whole wave; the rolling pool must stay bitwise-correct
+    // while slots refill independently around it
+    let mut g = Graph::new(240, 3);
+    for (v, l) in g.labels.iter_mut().enumerate() {
+        *l = if v % 11 == 0 { -1 } else { (v % 3) as i32 };
+    }
+    for v in 1..240u32 {
+        g.add_edge(0, v, 1.0 + v as f64 / 64.0);
+    }
+    for v in (1..235).step_by(5) {
+        g.add_edge(v as u32, v as u32 + 1, 0.5);
+    }
+    g.add_edge(7, 7, 2.0);
+    let dir = tmpdir("uneven");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 6, ..SpillConfig::new(&dir) },
+    )
+    .unwrap();
+    let sizes: Vec<usize> = sp
+        .files
+        .iter()
+        .map(|f| std::fs::read_to_string(f).unwrap().lines().count())
+        .collect();
+    let heaviest = *sizes.iter().max().unwrap();
+    let lightest = (*sizes.iter().min().unwrap()).max(1);
+    assert!(
+        heaviest > 2 * lightest,
+        "shards must be unbalanced for this regression: {sizes:?}"
+    );
+    let worker_bin = PathBuf::from(env!("CARGO_BIN_EXE_gee"));
+    let fused = SparseGee::fast().embed(&g, &GeeOptions::ALL);
+    for workers in [2usize, 3] {
+        let z = embed_multiprocess(
+            &sp,
+            &GeeOptions::ALL,
+            &ProcessConfig { workers, worker_bin: worker_bin.clone() },
+        )
+        .unwrap();
+        assert_eq!(
+            z.data, fused.data,
+            "rolling pool with {workers} slots drifted on uneven shards"
+        );
+    }
+}
+
+#[test]
+fn multiprocess_failure_reaps_children_and_cleans_outputs() {
+    let mut g = generate_sbm(&SbmParams::paper(200), 83);
+    mutate(&mut g, 84);
+    let dir = tmpdir("mpfail");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 4, keep: true, ..SpillConfig::new(&dir) },
+    )
+    .unwrap();
+    // corrupt one shard file so its worker exits nonzero
+    std::fs::write(&sp.files[2], "this is not an edge list\n").unwrap();
+    let err = embed_multiprocess(
+        &sp,
+        &GeeOptions::ALL,
+        &ProcessConfig {
+            workers: 2,
+            worker_bin: PathBuf::from(env!("CARGO_BIN_EXE_gee")),
+        },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("shard-worker 2"), "{err}");
+    // the reap-before-propagate invariant: no orphaned Z output files
+    for entry in std::fs::read_dir(&sp.dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().to_string();
+        assert!(
+            !name.starts_with("z_"),
+            "orphaned worker output {name} left behind"
+        );
+    }
+}
+
+#[test]
 fn out_of_core_embeds_under_memory_budget() {
     // a graph whose edge list would not "fit": the per-shard budget is a
     // fifth of the stored edges, so no single resident slice ever holds
@@ -165,6 +300,139 @@ fn sharded_engine_front_end_smoke() {
     let via_engine = Engine::Sharded(4).embed(&g, &opts).unwrap();
     let via_struct = ShardedGee::with_threads(4, 2).embed(&g, &opts);
     assert_eq!(via_engine.data, via_struct.data);
+}
+
+#[test]
+fn remote_fleet_matches_sparse_fast_on_parity_grid() {
+    // the acceptance gate: ≥2 real `gee shard-serve` daemons on
+    // localhost, bitwise vs sparse-fast on SBM + Chung-Lu across the
+    // full options grid
+    let d1 = Daemon::spawn();
+    let d2 = Daemon::spawn();
+    let cfg = DispatchConfig::new(vec![d1.addr.clone(), d2.addr.clone()]);
+
+    let mut sbm = generate_sbm(&SbmParams::paper(500), 85);
+    mutate(&mut sbm, 86);
+    let mut cl = generate_chung_lu(
+        &ChungLuParams { n: 800, edges: 4_000, gamma: 1.8, k: 4 },
+        87,
+    );
+    mutate(&mut cl, 88);
+
+    for (name, g) in [("sbm", &sbm), ("chung-lu", &cl)] {
+        let dir = tmpdir(&format!("fleet_{name}"));
+        let sp = spill_from_graph(
+            g,
+            &SpillConfig { shards: 5, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+        for opts in GeeOptions::table_order() {
+            let fused = SparseGee::fast().embed(g, &opts);
+            let sparse = Engine::Sparse.embed(g, &opts).unwrap();
+            let z = embed_remote(&sp, &opts, &cfg).unwrap();
+            assert_eq!(
+                z.data, fused.data,
+                "{name}: remote fleet not bitwise vs fused at {opts:?}"
+            );
+            let diff = sparse.max_abs_diff(&z);
+            assert!(diff <= TOL, "{name}: fleet diff {diff} vs sparse at {opts:?}");
+        }
+    }
+    d1.kill();
+    d2.kill();
+}
+
+#[test]
+fn remote_fleet_survives_worker_killed_mid_run() {
+    // kill one of two daemons while the dispatch is running: its shards
+    // must be requeued onto the survivor and the result must still be
+    // bitwise-identical. The assertion holds in every interleaving —
+    // kill landing before, during, or after the daemon's last shard —
+    // so the test is timing-perturbed but not timing-dependent.
+    let mut g = generate_chung_lu(
+        &ChungLuParams { n: 1_200, edges: 8_000, gamma: 1.9, k: 4 },
+        89,
+    );
+    mutate(&mut g, 90);
+    let dir = tmpdir("fleet_kill");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 12, ..SpillConfig::new(&dir) },
+    )
+    .unwrap();
+    let opts = GeeOptions::ALL;
+    let expect = SparseGee::fast().embed(&g, &opts);
+
+    let survivor = Daemon::spawn();
+    let victim = Daemon::spawn();
+    let cfg = DispatchConfig::new(vec![survivor.addr.clone(), victim.addr.clone()]);
+    let z = std::thread::scope(|sc| {
+        let handle = sc.spawn(|| embed_remote(&sp, &opts, &cfg));
+        // let the fleet take a few shards, then kill the victim
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        victim.kill();
+        handle.join().expect("dispatch thread panicked")
+    })
+    .expect("fleet with one survivor must still complete");
+    assert_eq!(
+        z.data, expect.data,
+        "result after mid-run worker kill must stay bitwise-identical"
+    );
+    survivor.kill();
+}
+
+#[test]
+fn shard_embed_cli_remote_fleet_end_to_end() {
+    // the CLI speaks to real daemons: --workers host:port,host:port
+    let d1 = Daemon::spawn();
+    let d2 = Daemon::spawn();
+    let dir = tmpdir("cli_remote");
+    let g = generate_sbm(&SbmParams::paper(300), 91);
+    let stem = dir.join("g");
+    write_graph(&stem, &g).unwrap();
+    let out = dir.join("z_remote.tsv");
+    let status = Command::new(env!("CARGO_BIN_EXE_gee"))
+        .arg("shard-embed")
+        .arg("--input")
+        .arg(&stem)
+        .args(["--shards", "4", "--options", "ldc"])
+        .args(["--workers", &format!("{},{}", d1.addr, d2.addr)])
+        .arg("--spill-dir")
+        .arg(dir.join("spill"))
+        .arg("--out")
+        .arg(&out)
+        .output()
+        .expect("spawn gee shard-embed");
+    assert!(
+        status.status.success(),
+        "remote shard-embed failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&status.stdout),
+        String::from_utf8_lossy(&status.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&status.stdout).contains("remote fleet"),
+        "CLI must report the remote lane"
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), g.n, "one TSV row per vertex");
+    // spot-check numerics (CLI rounds to 6dp)
+    let expect = Engine::SparseFast.embed(&g, &GeeOptions::ALL).unwrap();
+    let first: Vec<f64> = text
+        .lines()
+        .next()
+        .unwrap()
+        .split('\t')
+        .map(|t| t.parse().unwrap())
+        .collect();
+    for (c, v) in first.iter().enumerate() {
+        assert!(
+            (v - expect.get(0, c)).abs() < 1e-5,
+            "row 0 col {c}: cli {v} vs engine {}",
+            expect.get(0, c)
+        );
+    }
+    d1.kill();
+    d2.kill();
 }
 
 #[test]
