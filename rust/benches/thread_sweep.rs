@@ -44,6 +44,7 @@ fn record(
         threads,
         median_ns: ns,
         speedup: base_ns as f64 / (ns.max(1) as f64),
+        ..BenchRecord::default()
     });
 }
 

@@ -29,6 +29,12 @@ pub struct Metrics {
     /// the local sharded engine because the whole fleet was unreachable —
     /// a nonzero value is the "fleet is down" alarm.
     pub remote_fallbacks: AtomicU64,
+    /// Total bytes moved over the shard-fleet wire (sent + received,
+    /// across all fleet jobs). The binary wire's traffic win is a number
+    /// here, not an anecdote — and a regression back toward text-sized
+    /// volumes (or toward O(shards·n) global resends) shows up as this
+    /// counter growing out of proportion to `edges`.
+    pub remote_bytes: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
 }
@@ -45,6 +51,7 @@ impl Default for Metrics {
             vertices: AtomicU64::new(0),
             edges: AtomicU64::new(0),
             remote_fallbacks: AtomicU64::new(0),
+            remote_bytes: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
         }
@@ -124,6 +131,10 @@ impl Metrics {
         if fallbacks > 0 {
             s.push_str(&format!(" remote_fallbacks={fallbacks} (shard fleet unreachable)"));
         }
+        let remote_bytes = self.remote_bytes.load(Ordering::Relaxed);
+        if remote_bytes > 0 {
+            s.push_str(&format!(" remote_bytes={remote_bytes}"));
+        }
         s
     }
 
@@ -186,6 +197,14 @@ mod tests {
         assert_eq!(top, Duration::from_micros(1u64 << BUCKETS));
         assert!(top > Duration::from_secs(12 * 86_400));
         assert!(top < Duration::from_secs(13 * 86_400));
+    }
+
+    #[test]
+    fn remote_bytes_surface_in_summary_only_when_nonzero() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("remote_bytes"));
+        m.remote_bytes.fetch_add(12_345, Ordering::Relaxed);
+        assert!(m.summary().contains("remote_bytes=12345"), "{}", m.summary());
     }
 
     #[test]

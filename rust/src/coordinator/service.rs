@@ -88,6 +88,12 @@ pub struct ServiceConfig {
     /// `Metrics::remote_fallbacks` is incremented. Empty = keep
     /// everything local.
     pub shard_remote_workers: Vec<String>,
+    /// Force the v1 *text* wire to the shard fleet instead of letting
+    /// each connection negotiate the binary protocol (`HELLO2`) — the
+    /// ops escape hatch while a protocol regression is diagnosed.
+    /// Numerics are identical either way; only bytes moved differ
+    /// (compare `Metrics::remote_bytes` across the two settings).
+    pub shard_wire_text: bool,
 }
 
 impl Default for ServiceConfig {
@@ -104,6 +110,7 @@ impl Default for ServiceConfig {
             shard_min_directed_edges: crate::sparse::MAX_INDEX,
             shard_count: 0,
             shard_remote_workers: Vec::new(),
+            shard_wire_text: false,
         }
     }
 }
@@ -356,7 +363,7 @@ fn process_jobs<F>(
                         "native-shard",
                     )
                 } else {
-                    match remote_shard_embed(g, &opts, cfg) {
+                    match remote_shard_embed(g, &opts, cfg, metrics) {
                         Ok(z) => (Ok(z), "sharded-remote"),
                         Err(RemoteError::Fleet(e)) => {
                             // whole fleet unreachable: degrade to the
@@ -421,11 +428,16 @@ enum RemoteError {
 
 /// Spill an oversize in-memory graph and dispatch it across the remote
 /// shard fleet. The spill lands in a unique per-spill subdirectory of
-/// the system temp dir and is removed when the dispatch finishes.
+/// the system temp dir and is removed when the dispatch finishes. Every
+/// byte moved over the fleet wire — in either direction, whether the
+/// dispatch succeeds or not — lands in `Metrics::remote_bytes`, so the
+/// binary wire's traffic (and a regression back toward text volumes)
+/// shows up on the dashboard, not just in benches.
 fn remote_shard_embed(
     g: &Graph,
     opts: &GeeOptions,
     cfg: &ServiceConfig,
+    metrics: &Metrics,
 ) -> Result<Dense, RemoteError> {
     let parent = std::env::temp_dir().join("gee_service_remote");
     let sp = crate::shard::spill::spill_from_graph(
@@ -436,12 +448,19 @@ fn remote_shard_embed(
         },
     )
     .map_err(RemoteError::Spill)?;
-    crate::shard::dispatch::embed_remote(
+    let counters = std::sync::Arc::new(crate::shard::codec::ByteCounters::default());
+    let result = crate::shard::dispatch::embed_remote(
         &sp,
         opts,
-        &crate::shard::DispatchConfig::new(cfg.shard_remote_workers.clone()),
+        &crate::shard::DispatchConfig {
+            force_text: cfg.shard_wire_text,
+            counters: Some(counters.clone()),
+            ..crate::shard::DispatchConfig::new(cfg.shard_remote_workers.clone())
+        },
     )
-    .map_err(RemoteError::Fleet)
+    .map_err(RemoteError::Fleet);
+    metrics.remote_bytes.fetch_add(counters.total(), Ordering::Relaxed);
+    result
 }
 
 fn finish(job: &Job, z: Dense, via: &'static str, batch_size: usize, metrics: &Metrics) {
@@ -737,6 +756,10 @@ mod tests {
         assert_eq!(resp.z.data, expect.data, "remote lane must stay bitwise");
         let m = svc.shutdown();
         assert_eq!(m.remote_fallbacks.load(Ordering::Relaxed), 0);
+        assert!(
+            m.remote_bytes.load(Ordering::Relaxed) > 0,
+            "fleet traffic must land in the remote_bytes counter"
+        );
         s1.stop();
         s2.stop();
     }

@@ -15,9 +15,13 @@ use super::edgelist::Graph;
 
 /// Parse one edge line (`src dst [weight]`, separators: any run of
 /// spaces/tabs/commas). Returns `None` for blank and `#`/`%` comment
-/// lines. This is the single edge-line grammar: edge files, spill files,
-/// and the shard-fleet wire protocol all parse through it, so a weight
-/// written in shortest-roundtrip form re-parses bitwise everywhere.
+/// lines. This is the single *text* edge grammar: edge files and the
+/// legacy (v1) shard-fleet wire protocol parse through it, so a weight
+/// written in shortest-roundtrip form re-parses bitwise everywhere. The
+/// shard lanes' hot paths (spill files, worker pipes, wire v2) use the
+/// binary twin in `crate::shard::codec` instead — raw bit patterns, no
+/// decimal grammar — and dispatch between the two by file extension
+/// (`.bin` = binary).
 pub fn parse_edge_fields(line: &str) -> Result<Option<(u32, u32, f64)>> {
     let t = line.trim();
     if t.is_empty() || t.starts_with('#') || t.starts_with('%') {

@@ -56,6 +56,12 @@ const BOOL_FLAGS: &[&str] = &[
     "lap",
     "diag",
     "cor",
+    // wire-protocol overrides: serve only the v1 text protocol
+    // (shard-serve — emulates a legacy daemon), or force the v1 text
+    // wire as a client (shard-embed / serve) instead of negotiating the
+    // binary protocol
+    "text-only",
+    "text-wire",
 ];
 
 /// Minimal `--key value` / `--key=value` / `--flag` parser.
@@ -325,7 +331,11 @@ fn cmd_shard_embed(args: &Args) -> Result<()> {
         Workers::Remote(endpoints) => {
             let mut dcfg = DispatchConfig::new(endpoints.clone());
             dcfg.slots_per_worker = args.get_usize("slots", 1)?;
-            (embed_remote(&sp, &opts, &dcfg)?, "remote fleet")
+            dcfg.force_text = args.has("text-wire");
+            (
+                embed_remote(&sp, &opts, &dcfg)?,
+                if dcfg.force_text { "remote fleet (text wire)" } else { "remote fleet" },
+            )
         }
         Workers::Local(w) if *w > 1 => {
             let worker_bin = std::env::current_exe().context("locate own binary")?;
@@ -377,7 +387,13 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
 
 fn cmd_shard_serve(args: &Args) -> Result<()> {
     let bind = args.get("listen").unwrap_or("127.0.0.1:0");
-    let server = ShardServer::start(bind)?;
+    // --text-only serves just the v1 text protocol — a stand-in for a
+    // legacy daemon when testing mixed-fleet negotiation
+    let server = if args.has("text-only") {
+        ShardServer::start_text_only(bind)?
+    } else {
+        ShardServer::start(bind)?
+    };
     // the bound address is the contract with launchers: with port 0 this
     // line is how they learn the ephemeral port, so flush it eagerly
     // (stdout is block-buffered under a pipe)
@@ -402,6 +418,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             workers,
             intra_op_threads: args.get_usize("intra-op", 0)?,
             shard_remote_workers,
+            shard_wire_text: args.has("text-wire"),
             ..ServiceConfig::default()
         }));
         let server = gee_sparse::coordinator::TcpServer::start(bind, svc)?;
@@ -425,6 +442,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: 512,
         intra_op_threads: args.get_usize("intra-op", 0)?,
         shard_remote_workers,
+        shard_wire_text: args.has("text-wire"),
         ..ServiceConfig::default()
     });
 
@@ -473,18 +491,21 @@ fn usage() -> &'static str {
                     [--shards S] [--mem-budget-edges B]\n\
                     [--workers P | --workers HOST:PORT,... [--slots N]]\n\
                     [--options ldc] [--spill-dir D] [--keep-spill] [--out FILE]\n\
+                    [--text-wire]   (force the v1 text protocol instead of\n\
+                    negotiating the binary wire per connection)\n\
                     (out-of-core: streams edges from disk per shard;\n\
                      --workers P > 1 embeds shards in P worker processes;\n\
                      --workers HOST:PORT,... dispatches shards to remote\n\
                      `gee shard-serve` daemons over TCP, N in-flight\n\
                      shards per daemon)\n\
-       shard-serve  [--listen ADDR:PORT]   (shard-fleet worker daemon;\n\
-                    port 0 = ephemeral, the bound address is printed)\n\
+       shard-serve  [--listen ADDR:PORT] [--text-only]   (shard-fleet worker\n\
+                    daemon; port 0 = ephemeral, the bound address is printed;\n\
+                    --text-only serves just the legacy v1 text protocol)\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
                     [--intra-op T]   (row-parallel threads for oversize graphs)\n\
                     [--shard-workers HOST:PORT,...]   (remote fleet for\n\
-                    oversize jobs)\n\
+                    oversize jobs)  [--text-wire]\n\
                     [--listen ADDR:PORT]   (network mode: TCP line protocol)\n"
 }
 

@@ -1,0 +1,617 @@
+//! The shard fleet's binary data plane — one codec for spill files,
+//! worker pipes, and the TCP wire.
+//!
+//! Everything the distributed lanes exchange reduces to three record
+//! shapes, all little-endian, all fixed width:
+//!
+//! * **edge record** — `u32 src | u32 dst | f64 weight` (16 bytes);
+//! * **label record** — one `i32` (4 bytes);
+//! * **value record** — one `f64` raw bit pattern (8 bytes).
+//!
+//! f64s travel as raw bit patterns, so parity with `sparse-fast` is
+//! bitwise *by construction* — no shortest-roundtrip format/re-parse
+//! dance, no decimal grammar on any hot path. On the wire, records are
+//! grouped into **frames**: a `u64` little-endian byte-length prefix
+//! followed by exactly that many payload bytes. A reader validates the
+//! prefix (record alignment, a hard byte cap, and — when the protocol
+//! fixes the size — the exact expected length) *before* allocating
+//! anything from it, then consumes the body in bounded chunks, so a
+//! hostile or truncated peer costs at most one chunk of memory and a
+//! typed error, never a panic or an unbounded allocation (the same
+//! admission discipline as the `MAX_FRAME_*` header caps in
+//! [`super::remote`]).
+//!
+//! Spill files are headerless runs of edge records (`len % 16 == 0`
+//! always), which is what lets [`super::dispatch`] stream a shard's
+//! spill file to a remote worker as raw bytes with zero re-parse: the
+//! file *is* the frame body, the frame length *is* the file length.
+//!
+//! [`globals_hash`] fingerprints a job's global label + degree vectors
+//! (FNV-1a 64 over their serialized bytes); the wire-v2 `GLOBALS` verb
+//! ships the vectors once per connection under that key and every
+//! subsequent `SHARD2` request references them by hash — per-job fleet
+//! traffic drops from O(S·n + E) to O(W·n + E).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+/// Bytes per wire/spill edge record: `u32 src | u32 dst | f64 weight`.
+pub const EDGE_RECORD_BYTES: usize = 16;
+/// Bytes per label record (`i32`).
+pub const LABEL_RECORD_BYTES: usize = 4;
+/// Bytes per f64 value record (degrees, Z cells).
+pub const F64_RECORD_BYTES: usize = 8;
+/// Frame bodies are consumed in chunks of at most this many bytes, so a
+/// declared-huge frame never translates into one huge allocation. A
+/// multiple of every record size, so chunk boundaries never split a
+/// record.
+pub const FRAME_CHUNK_BYTES: usize = 1 << 20;
+
+const _: () = assert!(FRAME_CHUNK_BYTES % EDGE_RECORD_BYTES == 0);
+const _: () = assert!(EDGE_RECORD_BYTES % F64_RECORD_BYTES == 0);
+const _: () = assert!(F64_RECORD_BYTES % LABEL_RECORD_BYTES == 0);
+
+/// Extension marking a file as binary records; everything else is the
+/// legacy text format. Explicit-by-name beats content sniffing: a spill
+/// file has no magic header (its byte length must be exactly
+/// `records × 16`), so the name is the only place the format can live.
+pub const BINARY_EXT: &str = "bin";
+
+/// Does `path` name a binary-record file?
+pub fn is_binary_path(path: &Path) -> bool {
+    path.extension().and_then(|e| e.to_str()) == Some(BINARY_EXT)
+}
+
+// ---------------------------------------------------------------- records
+
+/// Encode one edge record.
+#[inline]
+pub fn encode_edge(a: u32, b: u32, w: f64) -> [u8; EDGE_RECORD_BYTES] {
+    let mut rec = [0u8; EDGE_RECORD_BYTES];
+    rec[0..4].copy_from_slice(&a.to_le_bytes());
+    rec[4..8].copy_from_slice(&b.to_le_bytes());
+    rec[8..16].copy_from_slice(&w.to_le_bytes());
+    rec
+}
+
+/// Decode one edge record (inverse of [`encode_edge`], bitwise).
+#[inline]
+pub fn decode_edge(rec: &[u8]) -> (u32, u32, f64) {
+    debug_assert_eq!(rec.len(), EDGE_RECORD_BYTES);
+    let a = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+    let b = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+    let w = f64::from_le_bytes(rec[8..16].try_into().unwrap());
+    (a, b, w)
+}
+
+/// Append one edge record to a writer (spill writers' per-edge call).
+#[inline]
+pub fn write_edge_record(w: &mut impl Write, a: u32, b: u32, wt: f64) -> std::io::Result<()> {
+    w.write_all(&encode_edge(a, b, wt))
+}
+
+// ------------------------------------------------------------ record files
+
+/// Stream a binary edge-record file in file order. The file length must
+/// be an exact multiple of the record size — anything else means
+/// truncation (or a text file got in), and half a record silently
+/// dropped would corrupt an embed, so it is a hard error.
+pub fn for_each_edge_binary(path: &Path, mut f: impl FnMut(u32, u32, f64)) -> Result<usize> {
+    try_for_each_edge_binary(path, |a, b, w| {
+        f(a, b, w);
+        std::ops::ControlFlow::Continue(())
+    })
+}
+
+/// [`for_each_edge_binary`] with early exit (the binary twin of
+/// `graph::io::try_for_each_edge`): the callback returns
+/// `ControlFlow::Break(())` to stop the stream; the visit count so far
+/// is still returned.
+pub fn try_for_each_edge_binary(
+    path: &Path,
+    mut f: impl FnMut(u32, u32, f64) -> std::ops::ControlFlow<()>,
+) -> Result<usize> {
+    let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let len = file.metadata()?.len();
+    if len % EDGE_RECORD_BYTES as u64 != 0 {
+        bail!(
+            "{}: {len} bytes is not a whole number of {EDGE_RECORD_BYTES}-byte edge records (truncated?)",
+            path.display()
+        );
+    }
+    let mut reader = BufReader::new(file);
+    let mut rec = [0u8; EDGE_RECORD_BYTES];
+    let total = (len / EDGE_RECORD_BYTES as u64) as usize;
+    for i in 0..total {
+        reader
+            .read_exact(&mut rec)
+            .with_context(|| format!("{}: edge record {}", path.display(), i + 1))?;
+        let (a, b, w) = decode_edge(&rec);
+        if f(a, b, w).is_break() {
+            return Ok(i + 1);
+        }
+    }
+    Ok(total)
+}
+
+/// Stream an edge file of either format: binary records when the path
+/// says [`BINARY_EXT`], the `graph::io` text grammar otherwise — so the
+/// shard lanes read old text spills and new binary spills through one
+/// call.
+pub fn for_each_edge_auto(path: &Path, f: impl FnMut(u32, u32, f64)) -> Result<usize> {
+    if is_binary_path(path) {
+        for_each_edge_binary(path, f)
+    } else {
+        crate::graph::io::for_each_edge(path, f)
+    }
+}
+
+/// Format-dispatching twin of [`try_for_each_edge_binary`] /
+/// `graph::io::try_for_each_edge`.
+pub fn try_for_each_edge_auto(
+    path: &Path,
+    f: impl FnMut(u32, u32, f64) -> std::ops::ControlFlow<()>,
+) -> Result<usize> {
+    if is_binary_path(path) {
+        try_for_each_edge_binary(path, f)
+    } else {
+        crate::graph::io::try_for_each_edge(path, f)
+    }
+}
+
+/// Write a headerless run of `i32` records (the binary labels file).
+pub fn write_i32s_file(path: &Path, vals: &[i32]) -> Result<()> {
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    for v in vals {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush().with_context(|| format!("flush {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a headerless run of `i32` records; byte length must be exact.
+pub fn read_i32s_file(path: &Path) -> Result<Vec<i32>> {
+    let bytes = record_file_bytes(path, LABEL_RECORD_BYTES)?;
+    Ok(bytes
+        .chunks_exact(LABEL_RECORD_BYTES)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Write a headerless run of raw-bit f64 records (degrees, Z rows).
+pub fn write_f64s_file(path: &Path, vals: &[f64]) -> Result<()> {
+    let mut f = BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    for v in vals {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush().with_context(|| format!("flush {}", path.display()))?;
+    Ok(())
+}
+
+/// Read a headerless run of raw-bit f64 records; byte length must be
+/// exact (bitwise inverse of [`write_f64s_file`]).
+pub fn read_f64s_file(path: &Path) -> Result<Vec<f64>> {
+    let bytes = record_file_bytes(path, F64_RECORD_BYTES)?;
+    Ok(bytes
+        .chunks_exact(F64_RECORD_BYTES)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn record_file_bytes(path: &Path, record: usize) -> Result<Vec<u8>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("read {}", path.display()))?;
+    if bytes.len() % record != 0 {
+        bail!(
+            "{}: {} bytes is not a whole number of {record}-byte records (truncated?)",
+            path.display(),
+            bytes.len()
+        );
+    }
+    Ok(bytes)
+}
+
+// --------------------------------------------------------------- wire frames
+
+/// Write a frame's length prefix.
+pub fn write_frame_len(w: &mut impl Write, len: u64) -> std::io::Result<()> {
+    w.write_all(&len.to_le_bytes())
+}
+
+/// Read a frame's length prefix. EOF here is a typed error naming the
+/// frame — a framed body must be complete.
+pub fn read_frame_len(r: &mut impl Read, what: &str) -> Result<u64> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf)
+        .with_context(|| format!("{what}: connection closed before frame length"))?;
+    Ok(u64::from_le_bytes(buf))
+}
+
+/// Validate a frame length prefix *before* anything is allocated from
+/// it: record alignment, the hard byte cap, and (when the protocol fixes
+/// the size) the exact expected length.
+pub fn check_frame_len(
+    len: u64,
+    record: usize,
+    max_bytes: u64,
+    expected: Option<u64>,
+    what: &str,
+) -> Result<()> {
+    if len > max_bytes {
+        bail!("{what}: frame of {len} bytes exceeds the wire limit {max_bytes}");
+    }
+    if len % record as u64 != 0 {
+        bail!("{what}: frame of {len} bytes is not a whole number of {record}-byte records");
+    }
+    if let Some(exp) = expected {
+        if len != exp {
+            bail!("{what}: frame of {len} bytes, expected exactly {exp}");
+        }
+    }
+    Ok(())
+}
+
+/// Consume a frame body of `len` bytes in bounded chunks, invoking
+/// `sink` per chunk. `scratch` is the reused chunk buffer (grows to at
+/// most [`FRAME_CHUNK_BYTES`]); every chunk's length is a multiple of
+/// every record size, so sinks can `chunks_exact` without carry-over.
+/// Mid-frame EOF is a typed error naming the frame.
+pub fn read_frame_body(
+    r: &mut impl Read,
+    len: u64,
+    scratch: &mut Vec<u8>,
+    what: &str,
+    mut sink: impl FnMut(&[u8]) -> Result<()>,
+) -> Result<()> {
+    let mut remaining = len;
+    while remaining > 0 {
+        let take = remaining.min(FRAME_CHUNK_BYTES as u64) as usize;
+        scratch.resize(take, 0);
+        r.read_exact(&mut scratch[..take]).with_context(|| {
+            format!("{what}: connection closed mid-frame ({remaining} of {len} bytes unread)")
+        })?;
+        sink(&scratch[..take])?;
+        remaining -= take as u64;
+    }
+    Ok(())
+}
+
+/// Write one frame of `i32` records.
+pub fn write_frame_i32s(w: &mut impl Write, vals: &[i32]) -> std::io::Result<()> {
+    write_frame_len(w, (vals.len() * LABEL_RECORD_BYTES) as u64)?;
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Write one frame of raw-bit f64 records.
+pub fn write_frame_f64s(w: &mut impl Write, vals: &[f64]) -> std::io::Result<()> {
+    write_frame_len(w, (vals.len() * F64_RECORD_BYTES) as u64)?;
+    for v in vals {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// The label contract every transport enforces on ingest, in one place:
+/// `-1` is the only negative (the unlabeled sentinel the engines'
+/// `l >= 0` checks understand), and labels must stay below `k`. Shared
+/// by the v1 text wire, the v2 `GLOBALS` decode, and the worker's
+/// binary label files, so the lanes cannot drift apart on what a valid
+/// label is.
+#[inline]
+pub fn validate_label(l: i32, k: usize) -> Result<()> {
+    if l < -1 {
+        bail!("label {l} < -1 (use -1 for unlabeled)");
+    }
+    if l >= k as i32 {
+        bail!("label {l} >= k {k}");
+    }
+    Ok(())
+}
+
+// ------------------------------------------------------------- content hash
+
+/// Incremental FNV-1a (64-bit) — the GLOBALS content fingerprint. Not
+/// cryptographic (the fleet is a trusted tier; see the README's TLS/auth
+/// note): it exists to catch mismatched or re-ordered global vectors,
+/// not adversarial collisions.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv64(u64);
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv64 {
+    pub fn new() -> Fnv64 {
+        Fnv64::default()
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// Fingerprint a job's global vectors: FNV-1a over the labels' LE bytes
+/// then the degrees' LE bytes — exactly the byte stream the `GLOBALS`
+/// frames carry, so the daemon can re-hash what it receives and reject a
+/// mismatch.
+pub fn globals_hash(labels: &[i32], deg: &[f64]) -> u64 {
+    let mut h = Fnv64::new();
+    for l in labels {
+        h.update(&l.to_le_bytes());
+    }
+    for d in deg {
+        h.update(&d.to_le_bytes());
+    }
+    h.finish()
+}
+
+// ---------------------------------------------------------- byte accounting
+
+/// Shared per-lane byte counters — how the text→binary win is measured
+/// instead of asserted ([`super::dispatch`] threads these through every
+/// slot connection; `benches/shard_scale.rs` records them and
+/// `Metrics::remote_bytes` aggregates them in the coordinator).
+#[derive(Debug, Default)]
+pub struct ByteCounters {
+    pub sent: AtomicU64,
+    pub received: AtomicU64,
+}
+
+impl ByteCounters {
+    pub fn total(&self) -> u64 {
+        self.sent.load(Ordering::Relaxed) + self.received.load(Ordering::Relaxed)
+    }
+}
+
+/// A reader that counts bytes into [`ByteCounters::received`].
+pub struct CountingReader<R> {
+    inner: R,
+    counters: Arc<ByteCounters>,
+}
+
+impl<R: Read> CountingReader<R> {
+    pub fn new(inner: R, counters: Arc<ByteCounters>) -> Self {
+        CountingReader { inner, counters }
+    }
+}
+
+impl<R: Read> Read for CountingReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.counters.received.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+}
+
+/// A writer that counts bytes into [`ByteCounters::sent`].
+pub struct CountingWriter<W> {
+    inner: W,
+    counters: Arc<ByteCounters>,
+}
+
+impl<W: Write> CountingWriter<W> {
+    pub fn new(inner: W, counters: Arc<ByteCounters>) -> Self {
+        CountingWriter { inner, counters }
+    }
+}
+
+impl<W: Write> Write for CountingWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.counters.sent.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn edge_record_roundtrips_bitwise() {
+        for (a, b, w) in [
+            (0u32, 0u32, 0.0f64),
+            (7, 3, 0.1 + 0.2),
+            (u32::MAX, u32::MAX - 1, f64::MIN_POSITIVE),
+            (1, 2, -0.0),
+            (9, 9, f64::NAN),
+        ] {
+            let rec = encode_edge(a, b, w);
+            let (a2, b2, w2) = decode_edge(&rec);
+            assert_eq!((a, b), (a2, b2));
+            assert_eq!(w.to_bits(), w2.to_bits(), "weight bits drifted");
+        }
+    }
+
+    #[test]
+    fn edge_file_roundtrips_and_pins_exact_size() {
+        let d = std::env::temp_dir().join(format!("gee_codec_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("edges.bin");
+        let edges = [(1u32, 2u32, 0.5f64), (3, 3, 2.0_f64.sqrt()), (0, 7, 1.0)];
+        {
+            let mut f = BufWriter::new(File::create(&p).unwrap());
+            for &(a, b, w) in &edges {
+                write_edge_record(&mut f, a, b, w).unwrap();
+            }
+            f.flush().unwrap();
+        }
+        assert_eq!(
+            std::fs::metadata(&p).unwrap().len(),
+            (edges.len() * EDGE_RECORD_BYTES) as u64,
+            "binary edge files are exactly records x record_size"
+        );
+        let mut seen = Vec::new();
+        let count = for_each_edge_binary(&p, |a, b, w| seen.push((a, b, w.to_bits()))).unwrap();
+        assert_eq!(count, edges.len());
+        let expect: Vec<_> = edges.iter().map(|&(a, b, w)| (a, b, w.to_bits())).collect();
+        assert_eq!(seen, expect);
+        // auto dispatch: same file through the extension router
+        assert!(is_binary_path(&p));
+        let n = for_each_edge_auto(&p, |_, _, _| {}).unwrap();
+        assert_eq!(n, edges.len());
+    }
+
+    #[test]
+    fn truncated_edge_file_is_a_typed_error() {
+        let d = std::env::temp_dir().join(format!("gee_codec_tr_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("torn.bin");
+        std::fs::write(&p, [0u8; EDGE_RECORD_BYTES + 5]).unwrap();
+        let err = for_each_edge_binary(&p, |_, _, _| {}).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn i32_and_f64_files_roundtrip_bitwise() {
+        let d = std::env::temp_dir().join(format!("gee_codec_v_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        let lp = d.join("l.bin");
+        let labels = vec![-1, 0, 3, i32::MAX, i32::MIN];
+        write_i32s_file(&lp, &labels).unwrap();
+        assert_eq!(read_i32s_file(&lp).unwrap(), labels);
+
+        let vp = d.join("v.bin");
+        let vals = vec![0.0, -0.0, 0.1 + 0.2, f64::INFINITY, 2.0_f64.sqrt()];
+        write_f64s_file(&vp, &vals).unwrap();
+        let back = read_f64s_file(&vp).unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // ragged byte counts are rejected, not rounded down
+        std::fs::write(&vp, [0u8; 13]).unwrap();
+        assert!(read_f64s_file(&vp).is_err());
+        std::fs::write(&lp, [0u8; 6]).unwrap();
+        assert!(read_i32s_file(&lp).is_err());
+    }
+
+    #[test]
+    fn frame_roundtrip_and_length_validation() {
+        let vals = vec![1.5f64, -2.25, 0.1 + 0.2];
+        let mut wire = Vec::new();
+        write_frame_f64s(&mut wire, &vals).unwrap();
+        let mut r = Cursor::new(&wire);
+        let len = read_frame_len(&mut r, "test frame").unwrap();
+        check_frame_len(len, F64_RECORD_BYTES, 1 << 20, Some(24), "test frame").unwrap();
+        let mut scratch = Vec::new();
+        let mut back = Vec::new();
+        read_frame_body(&mut r, len, &mut scratch, "test frame", |chunk| {
+            for c in chunk.chunks_exact(F64_RECORD_BYTES) {
+                back.push(f64::from_le_bytes(c.try_into().unwrap()));
+            }
+            Ok(())
+        })
+        .unwrap();
+        for (a, b) in vals.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+
+        // oversized prefix: rejected before any body read or allocation
+        assert!(check_frame_len(1 << 40, 8, 1 << 30, None, "x").is_err());
+        // misaligned prefix
+        assert!(check_frame_len(12, 8, 1 << 30, None, "x").is_err());
+        // exact-size mismatch
+        assert!(check_frame_len(16, 8, 1 << 30, Some(24), "x").is_err());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_a_typed_error_with_bounded_allocation() {
+        // a peer declares 1 GiB then hangs up after 16 bytes: the reader
+        // must fail with a typed error having allocated at most one chunk
+        let mut wire = Vec::new();
+        write_frame_len(&mut wire, 1 << 30).unwrap();
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut r = Cursor::new(&wire);
+        let len = read_frame_len(&mut r, "hostile frame").unwrap();
+        check_frame_len(len, 8, 1 << 35, None, "hostile frame").unwrap();
+        let mut scratch = Vec::new();
+        let err = read_frame_body(&mut r, len, &mut scratch, "hostile frame", |_| Ok(()))
+            .unwrap_err();
+        assert!(err.to_string().contains("mid-frame"), "{err}");
+        assert!(
+            scratch.capacity() <= FRAME_CHUNK_BYTES,
+            "allocation must be bounded by the chunk size, got {}",
+            scratch.capacity()
+        );
+    }
+
+    #[test]
+    fn eof_before_frame_length_is_typed() {
+        let mut r = Cursor::new(&[1u8, 2, 3][..]);
+        let err = read_frame_len(&mut r, "short frame").unwrap_err();
+        assert!(err.to_string().contains("frame length"), "{err}");
+    }
+
+    #[test]
+    fn label_contract_is_shared_and_exact() {
+        assert!(validate_label(-1, 2).is_ok());
+        assert!(validate_label(0, 2).is_ok());
+        assert!(validate_label(1, 2).is_ok());
+        assert!(validate_label(-2, 2).is_err());
+        assert!(validate_label(2, 2).is_err());
+        assert!(validate_label(0, 0).is_err(), "k=0 admits only -1");
+        assert!(validate_label(-1, 0).is_ok());
+    }
+
+    #[test]
+    fn globals_hash_is_stable_and_order_sensitive() {
+        let labels = vec![0, 1, -1, 2];
+        let deg = vec![1.5, 0.0, 2.25];
+        let h = globals_hash(&labels, &deg);
+        assert_eq!(h, globals_hash(&labels, &deg), "hash must be deterministic");
+        assert_ne!(h, globals_hash(&labels, &[2.25, 0.0, 1.5]));
+        assert_ne!(h, globals_hash(&[1, 0, -1, 2], &deg));
+        // matches an incremental hash over the same byte stream (what the
+        // daemon computes while receiving the frames)
+        let mut inc = Fnv64::new();
+        for l in &labels {
+            inc.update(&l.to_le_bytes());
+        }
+        for d in &deg {
+            inc.update(&d.to_le_bytes());
+        }
+        assert_eq!(h, inc.finish());
+    }
+
+    #[test]
+    fn counting_streams_count() {
+        let counters = Arc::new(ByteCounters::default());
+        let mut w = CountingWriter::new(Vec::new(), counters.clone());
+        w.write_all(b"hello fleet").unwrap();
+        let data = b"0123456789".to_vec();
+        let mut r = CountingReader::new(Cursor::new(data), counters.clone());
+        let mut buf = Vec::new();
+        r.read_to_end(&mut buf).unwrap();
+        assert_eq!(counters.sent.load(Ordering::Relaxed), 11);
+        assert_eq!(counters.received.load(Ordering::Relaxed), 10);
+        assert_eq!(counters.total(), 21);
+    }
+}

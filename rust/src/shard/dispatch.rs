@@ -21,17 +21,27 @@
 //! whichever daemon ends up serving it, retries cannot change the result:
 //! output stays bitwise-identical to `SparseGee::fast()` through any
 //! sequence of worker deaths that leaves one worker alive.
+//!
+//! Each slot connection opens with a `PING` health probe (a dead worker
+//! is condemned before any shard payload is streamed at it) and then
+//! negotiates the wire version: v2 slots stream binary spill bytes
+//! ([`super::codec`]) and ship the job's global vectors **once per
+//! connection** under a content hash — O(W·n + E) fleet traffic instead
+//! of O(S·n + E) — while legacy daemons are served the v1 text protocol
+//! unchanged. Mixed fleets are fine: the version is per connection, and
+//! both wires produce bit-identical rows.
 
 use std::collections::VecDeque;
-use std::io::{BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::Sender;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::remote::request_shard;
+use super::codec::{globals_hash, ByteCounters, CountingReader, CountingWriter};
+use super::remote::{request_shard, request_shard_v2, send_globals};
 use super::spill::SpilledShards;
 use crate::gee::options::GeeOptions;
 use crate::sparse::Dense;
@@ -55,6 +65,15 @@ pub struct DispatchConfig {
     /// while a single read/write makes no progress, not across a whole
     /// shard, so the default is safe for long embeds; `None` disables.
     pub io_timeout: Option<Duration>,
+    /// Skip the `HELLO2` upgrade and speak the v1 text protocol even to
+    /// daemons that could do better — the ops escape hatch (and what the
+    /// bench uses to put the text lane's byte count on the record next
+    /// to the binary lane's).
+    pub force_text: bool,
+    /// When set, every slot connection counts its wire bytes here
+    /// (`benches/shard_scale.rs` records them; the coordinator feeds
+    /// them into `Metrics::remote_bytes`).
+    pub counters: Option<Arc<ByteCounters>>,
 }
 
 impl DispatchConfig {
@@ -64,6 +83,8 @@ impl DispatchConfig {
             slots_per_worker: 1,
             connect_timeout: Duration::from_secs(5),
             io_timeout: Some(Duration::from_secs(600)),
+            force_text: false,
+            counters: None,
         }
     }
 }
@@ -110,6 +131,9 @@ pub fn embed_remote(
     });
     let cond = Condvar::new();
     let mut z = Dense::zeros(plan.n, plan.k);
+    // one fingerprint per job: v2 slots ship the global vectors once per
+    // connection under this hash and reference them per shard
+    let ghash = globals_hash(&sp.labels, &plan.deg);
 
     let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f64>)>();
     std::thread::scope(|sc| {
@@ -118,7 +142,7 @@ pub fn embed_remote(
                 let tx = tx.clone();
                 let (state, cond) = (&state, &cond);
                 sc.spawn(move || {
-                    slot_loop(ep, ep_idx, sp, opts, cfg, state, cond, tx)
+                    slot_loop(ep, ep_idx, sp, opts, cfg, ghash, state, cond, tx)
                 });
             }
         }
@@ -143,10 +167,65 @@ pub fn embed_remote(
     Ok(z)
 }
 
-/// One slot: connect, then pull shards until the work is done or this
-/// endpoint fails. A failure (on this slot *or* a sibling slot of the
-/// same endpoint) requeues the in-flight shard for survivors, marks the
-/// endpoint dead, and retires the slot — the endpoint-exclusion rule.
+/// One negotiated slot connection. `v2` is decided once per connection
+/// (the `HELLO2` exchange); `globals_sent` tracks whether this
+/// connection has shipped the job's global vectors yet — the per-
+/// (connection, job) cache key is the content hash computed in
+/// [`embed_remote`].
+struct SlotConn {
+    reader: BufReader<CountingReader<TcpStream>>,
+    writer: BufWriter<CountingWriter<TcpStream>>,
+    /// Frame-chunk scratch reused across every shard this slot serves
+    /// (bounded by `codec::FRAME_CHUNK_BYTES`) — the driver-side twin of
+    /// the daemon's `ConnState::chunk`.
+    scratch: Vec<u8>,
+    v2: bool,
+    globals_sent: bool,
+}
+
+impl SlotConn {
+    fn new(
+        reader: BufReader<CountingReader<TcpStream>>,
+        writer: BufWriter<CountingWriter<TcpStream>>,
+        v2: bool,
+    ) -> SlotConn {
+        SlotConn { reader, writer, scratch: Vec::new(), v2, globals_sent: false }
+    }
+
+    /// Run one shard through whichever wire the connection negotiated.
+    fn request(
+        &mut self,
+        sp: &SpilledShards,
+        opts: &GeeOptions,
+        s: usize,
+        ghash: u64,
+    ) -> Result<Vec<f64>> {
+        if self.v2 {
+            if !self.globals_sent {
+                send_globals(&mut self.reader, &mut self.writer, sp, ghash)
+                    .context("send GLOBALS")?;
+                self.globals_sent = true;
+            }
+            request_shard_v2(
+                &mut self.reader,
+                &mut self.writer,
+                sp,
+                opts,
+                s,
+                ghash,
+                &mut self.scratch,
+            )
+        } else {
+            request_shard(&mut self.reader, &mut self.writer, sp, opts, s)
+        }
+    }
+}
+
+/// One slot: connect + probe + negotiate, then pull shards until the
+/// work is done or this endpoint fails. A failure (on this slot *or* a
+/// sibling slot of the same endpoint) requeues the in-flight shard for
+/// survivors, marks the endpoint dead, and retires the slot — the
+/// endpoint-exclusion rule.
 #[allow(clippy::too_many_arguments)]
 fn slot_loop(
     endpoint: &str,
@@ -154,11 +233,12 @@ fn slot_loop(
     sp: &SpilledShards,
     opts: &GeeOptions,
     cfg: &DispatchConfig,
+    ghash: u64,
     state: &Mutex<FleetState>,
     cond: &Condvar,
     tx: Sender<(usize, Vec<f64>)>,
 ) {
-    let (mut reader, mut writer) = match connect(endpoint, cfg) {
+    let mut conn = match connect(endpoint, cfg) {
         Ok(c) => c,
         Err(e) => {
             let mut g = state.lock().unwrap();
@@ -191,7 +271,7 @@ fn slot_loop(
             g.in_flight += 1;
             s
         };
-        match request_shard(&mut reader, &mut writer, sp, opts, s) {
+        match conn.request(sp, opts, s, ghash) {
             Ok(rows) => {
                 // send before decrementing in_flight: the collector must
                 // never observe "all done" with a row block still in a
@@ -213,16 +293,16 @@ fn slot_loop(
             }
         }
     }
-    let _ = writeln!(writer, "QUIT");
-    let _ = writer.flush();
+    let _ = writeln!(conn.writer, "QUIT");
+    let _ = conn.writer.flush();
 }
 
-/// Resolve and connect with a timeout; the returned pair shares one
-/// stream.
-fn connect(
+/// Raw TCP connect with timeouts; byte-counted reader/writer over one
+/// shared stream.
+fn tcp_connect(
     endpoint: &str,
     cfg: &DispatchConfig,
-) -> Result<(BufReader<TcpStream>, BufWriter<TcpStream>)> {
+) -> Result<(BufReader<CountingReader<TcpStream>>, BufWriter<CountingWriter<TcpStream>>)> {
     let addr = endpoint
         .to_socket_addrs()
         .with_context(|| format!("resolve {endpoint}"))?
@@ -233,8 +313,83 @@ fn connect(
     stream.set_read_timeout(cfg.io_timeout)?;
     stream.set_write_timeout(cfg.io_timeout)?;
     stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
-    Ok((reader, BufWriter::new(stream)))
+    let counters = cfg
+        .counters
+        .clone()
+        .unwrap_or_else(|| Arc::new(ByteCounters::default()));
+    let reader = BufReader::new(CountingReader::new(stream.try_clone()?, counters.clone()));
+    Ok((reader, BufWriter::new(CountingWriter::new(stream, counters))))
+}
+
+fn read_reply_line(
+    reader: &mut impl BufRead,
+    line: &mut String,
+) -> std::io::Result<Option<String>> {
+    line.clear();
+    if reader.read_line(line)? == 0 {
+        return Ok(None); // peer closed
+    }
+    Ok(Some(line.trim().to_string()))
+}
+
+/// Consume one reply line that must be the `PONG` health-probe answer.
+fn expect_pong(reader: &mut impl BufRead, line: &mut String, what: &str) -> Result<()> {
+    match read_reply_line(reader, line).with_context(|| format!("{what}: read reply"))? {
+        Some(t) if t == "PONG" => Ok(()),
+        other => bail!("{what}: expected PONG, got {other:?}"),
+    }
+}
+
+/// Connect, health-probe, and negotiate the wire version.
+///
+/// The slot always opens with a cheap `PING` — so a long-dead worker is
+/// condemned right here, before a multi-MB shard payload is streamed at
+/// it (the first evidence of death used to be a failed bulk write).
+/// Unless `force_text`, a `HELLO2` is pipelined behind the `PING`: a v2
+/// daemon answers `PONG` + `HELLO2`; a legacy daemon answers `PONG`,
+/// then `ERR` for the unknown verb and closes — in which case the slot
+/// reconnects (the endpoint is known alive from the `PONG`) and speaks
+/// v1 text. One extra round trip per connection, only against legacy
+/// daemons.
+fn connect(endpoint: &str, cfg: &DispatchConfig) -> Result<SlotConn> {
+    let (mut reader, mut writer) = tcp_connect(endpoint, cfg)?;
+    let mut line = String::new();
+    if cfg.force_text {
+        writeln!(writer, "PING")?;
+        writer.flush()?;
+        expect_pong(&mut reader, &mut line, "health probe")?;
+        return Ok(SlotConn::new(reader, writer, false));
+    }
+    writeln!(writer, "PING\nHELLO2")?;
+    writer.flush()?;
+    expect_pong(&mut reader, &mut line, "health probe")?;
+    match read_reply_line(&mut reader, &mut line) {
+        Ok(Some(t)) if t == "HELLO2" => {
+            return Ok(SlotConn::new(reader, writer, true));
+        }
+        // an ERR line, a clean close, or a teardown-class error while the
+        // legacy daemon drops the connection — "no v2 here", fall back
+        Ok(_) => {}
+        Err(e) if matches!(
+            e.kind(),
+            std::io::ErrorKind::ConnectionReset
+                | std::io::ErrorKind::ConnectionAborted
+                | std::io::ErrorKind::BrokenPipe
+                | std::io::ErrorKind::UnexpectedEof
+        ) => {}
+        // a timeout or transient read fault on a PONG-answering daemon is
+        // a sick endpoint, not a legacy one: fail the slot instead of
+        // silently downgrading a healthy v2 fleet to the text wire
+        Err(e) => {
+            return Err(anyhow::Error::new(e)
+                .context("reading HELLO2 reply (endpoint answered PONG, then wedged)"));
+        }
+    }
+    let (mut reader, mut writer) = tcp_connect(endpoint, cfg)?;
+    writeln!(writer, "PING")?;
+    writer.flush()?;
+    expect_pong(&mut reader, &mut line, "health probe (text fallback)")?;
+    Ok(SlotConn::new(reader, writer, false))
 }
 
 #[cfg(test)]
@@ -342,6 +497,146 @@ mod tests {
         assert_eq!(z.data, expect.data);
         live.stop();
         drop(bad_server); // detach; it exits after its accept budget
+    }
+
+    #[test]
+    fn mixed_fleet_v2_and_legacy_text_daemon_is_bitwise() {
+        // one binary-capable daemon + one legacy text-only daemon: the
+        // driver negotiates per connection (HELLO2 vs reconnect-as-text)
+        // and both serve shards of the same job — rows must still be
+        // bitwise-identical to the fused engine
+        let g = random_graph(567, 130, 800, 4);
+        let sp = spill(&g, "mixed", 6);
+        let v2 = ShardServer::start("127.0.0.1:0").unwrap();
+        let legacy = ShardServer::start_text_only("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig::new(vec![
+            v2.addr().to_string(),
+            legacy.addr().to_string(),
+        ]);
+        for opts in crate::gee::GeeOptions::table_order() {
+            let expect = SparseGee::fast().embed(&g, &opts);
+            let z = embed_remote(&sp, &opts, &cfg).unwrap();
+            assert_eq!(z.data, expect.data, "mixed fleet drifted at {opts:?}");
+        }
+        v2.stop();
+        legacy.stop();
+    }
+
+    #[test]
+    fn forced_text_wire_is_bitwise_and_moves_more_bytes() {
+        let g = random_graph(568, 110, 650, 3);
+        let sp = spill(&g, "forcetext", 5);
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let opts = crate::gee::GeeOptions::ALL;
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let mut totals = Vec::new();
+        for force_text in [false, true] {
+            let counters = Arc::new(super::ByteCounters::default());
+            let cfg = DispatchConfig {
+                force_text,
+                counters: Some(counters.clone()),
+                ..DispatchConfig::new(vec![server.addr().to_string()])
+            };
+            let z = embed_remote(&sp, &opts, &cfg).unwrap();
+            assert_eq!(z.data, expect.data, "force_text={force_text} drifted");
+            assert!(counters.total() > 0, "counters must observe traffic");
+            totals.push(counters.total());
+        }
+        assert!(
+            totals[0] < totals[1],
+            "binary wire ({}) must move strictly fewer bytes than text ({})",
+            totals[0],
+            totals[1]
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn globals_ship_once_per_connection_not_per_shard() {
+        // the GLOBALS-cache contract, measured: the same job over 1
+        // connection with many shards must send far less than shards x
+        // globals — the per-shard cost is the edge payload + a header,
+        // not O(n)
+        let g = random_graph(569, 400, 1_500, 3);
+        let shards = 8;
+        let sp = spill(&g, "amortize", shards);
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let counters = Arc::new(super::ByteCounters::default());
+        let cfg = DispatchConfig {
+            counters: Some(counters.clone()),
+            ..DispatchConfig::new(vec![server.addr().to_string()])
+        };
+        let opts = crate::gee::GeeOptions::ALL;
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, SparseGee::fast().embed(&g, &opts).data);
+        let globals_bytes = (g.n * (4 + 8)) as u64; // labels + degrees
+        let spill_bytes: u64 = sp
+            .files
+            .iter()
+            .map(|f| std::fs::metadata(f).unwrap().len())
+            .sum();
+        // one connection: globals once (+frames/headers/Z slack), never
+        // once per shard
+        let sent = counters.sent.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(
+            sent < spill_bytes + 2 * globals_bytes + 1024 * shards as u64,
+            "sent {sent} bytes — globals must not be resent per shard \
+             (spill={spill_bytes}, globals={globals_bytes}, shards={shards})"
+        );
+        server.stop();
+    }
+
+    #[test]
+    fn garbage_probe_reply_condemns_endpoint_before_any_shard_is_streamed() {
+        // an endpoint that accepts but answers the PING probe with
+        // garbage: the slot must condemn it at bind time — before a
+        // multi-MB shard payload is streamed at it — and the survivor
+        // must finish everything
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let bad_addr = listener.local_addr().unwrap().to_string();
+        let received_payload = std::sync::Arc::new(
+            std::sync::atomic::AtomicBool::new(false),
+        );
+        let received_clone = received_payload.clone();
+        let bad_server = std::thread::spawn(move || {
+            use std::io::{BufRead, BufReader, Write};
+            for stream in listener.incoming().take(2) {
+                let Ok(stream) = stream else { break };
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut line = String::new();
+                if reader.read_line(&mut line).is_ok() {
+                    let mut w = stream;
+                    let _ = writeln!(w, "WAT");
+                    let _ = w.flush();
+                    // if the driver streams anything beyond its probe
+                    // verbs at us, the probe failed to protect it
+                    let mut rest = String::new();
+                    while reader.read_line(&mut rest).map(|n| n > 0).unwrap_or(false) {
+                        let t = rest.trim();
+                        if !t.is_empty() && t != "HELLO2" && t != "PING" && t != "QUIT" {
+                            received_clone
+                                .store(true, std::sync::atomic::Ordering::Relaxed);
+                        }
+                        rest.clear();
+                    }
+                }
+            }
+        });
+        let g = random_graph(570, 80, 400, 3);
+        let sp = spill(&g, "probe", 4);
+        let live = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg =
+            DispatchConfig::new(vec![bad_addr, live.addr().to_string()]);
+        let opts = crate::gee::GeeOptions::NONE;
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, expect.data);
+        assert!(
+            !received_payload.load(std::sync::atomic::Ordering::Relaxed),
+            "a shard payload reached an endpoint that failed its health probe"
+        );
+        live.stop();
+        drop(bad_server);
     }
 
     #[test]

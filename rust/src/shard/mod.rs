@@ -29,15 +29,20 @@
 //!   slice (+ O(n) vectors) no matter how large the edge list is.
 //! * **multi-process** ([`process::embed_multiprocess`]) — worker
 //!   processes (`gee shard-worker`) each embed one spilled shard,
-//!   exchanging data via the `graph::io` text formats (exact: f64 writes
-//!   use shortest-roundtrip form), scheduled by a rolling slot pool.
+//!   exchanging data via the [`codec`] binary record files (raw LE bit
+//!   patterns — exact by construction; the worker still reads the
+//!   legacy text formats for old drivers), scheduled by a rolling slot
+//!   pool.
 //! * **distributed** ([`dispatch::embed_remote`]) — shard workers are
 //!   `gee shard-serve` daemons on other machines; the driver streams
-//!   each shard's edges plus the globals over TCP ([`remote`]'s line
-//!   protocol, same shortest-roundtrip f64 contract) and a placement
-//!   layer with rolling slots requeues a dead worker's shards onto
-//!   survivors.
+//!   each shard's spill file over TCP as one raw binary frame and ships
+//!   the global vectors once per connection under a content hash
+//!   ([`remote`]'s wire v2; legacy daemons get the v1 text protocol via
+//!   per-connection negotiation), and a placement layer with rolling
+//!   slots health-probes endpoints and requeues a dead worker's shards
+//!   onto survivors.
 
+pub mod codec;
 pub mod dispatch;
 pub mod local;
 pub mod plan;

@@ -3,27 +3,30 @@
 //! the shard pass scales past one process's memory and (on a fleet
 //! launcher) one machine.
 //!
-//! The exchange is entirely through the `graph::io` text formats — shard
-//! edge files from the spill, a shared labels file, a shared degree file
-//! (shortest-roundtrip f64, so the worker's Laplacian scale is
-//! bitwise-identical to the in-process one), and one Z-rows file back per
-//! shard. Scheduling is a rolling slot pool: up to `workers` children run
-//! at once and a new shard launches the moment any slot frees, so one
-//! slow shard delays only its own slot, never a whole wave. A failure
-//! stops new launches, but every already-running child is reaped (no
-//! zombies, no orphaned output files) before the error propagates.
+//! The exchange is entirely through the [`super::codec`] binary record
+//! formats — binary shard edge files from the spill, a shared raw-i32
+//! labels file, a shared raw-f64 degree file (exact bit patterns, so the
+//! worker's Laplacian scale is bitwise-identical to the in-process one),
+//! and one raw-f64 Z-rows file back per shard whose byte count the
+//! parent validates exactly (a torn write cannot pass silently). The
+//! worker binary still accepts the legacy text formats, so old drivers
+//! can spawn it — but this driver ships `.bin` everywhere. Scheduling is
+//! a rolling slot pool: up to `workers` children run at once and a new
+//! shard launches the moment any slot frees, so one slow shard delays
+//! only its own slot, never a whole wave. A failure stops new launches,
+//! but every already-running child is reaped (no zombies, no orphaned
+//! output files) before the error propagates.
 
-use std::fs::{self, File};
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use super::codec;
 use super::spill::SpilledShards;
 use crate::gee::options::GeeOptions;
-use crate::graph::io::write_f64_vec;
 use crate::sparse::Dense;
 
 /// Multi-process execution settings.
@@ -65,20 +68,11 @@ pub fn embed_multiprocess(
     cfg: &ProcessConfig,
 ) -> Result<Dense> {
     let plan = &sp.plan;
-    // ship the phase-1 globals once
-    let labels_path = sp.dir.join("global.labels");
-    {
-        let mut f = BufWriter::new(
-            File::create(&labels_path)
-                .with_context(|| format!("create {}", labels_path.display()))?,
-        );
-        for &l in &sp.labels {
-            writeln!(f, "{l}")?;
-        }
-        f.flush()?;
-    }
-    let deg_path = sp.dir.join("global.deg");
-    write_f64_vec(&deg_path, &plan.deg)?;
+    // ship the phase-1 globals once, as raw binary records
+    let labels_path = sp.dir.join("global.labels.bin");
+    codec::write_i32s_file(&labels_path, &sp.labels)?;
+    let deg_path = sp.dir.join("global.deg.bin");
+    codec::write_f64s_file(&deg_path, &plan.deg)?;
 
     let mut z = Dense::zeros(plan.n, plan.k);
     let slots = cfg.workers.max(1);
@@ -160,7 +154,7 @@ fn spawn_worker(
 ) -> Result<Slot> {
     let plan = &sp.plan;
     let (v0, v1) = plan.shard_range(s);
-    let out_path = sp.dir.join(format!("z_{s}.tsv"));
+    let out_path = sp.dir.join(format!("z_{s}.bin"));
     let mut cmd = Command::new(&cfg.worker_bin);
     cmd.arg("shard-worker")
         .arg("--edges")
@@ -213,8 +207,8 @@ fn spawn_worker(
     Ok(Slot { shard: s, v0, v1, out_path, child, stderr_drain })
 }
 
-/// Collect one exited child: check status, parse its Z rows into place,
-/// remove its output file.
+/// Collect one exited child: check status, load its binary Z records
+/// into place (byte count validated exactly), remove its output file.
 fn finish_slot(slot: Slot, k: usize, z: &mut Dense) -> Result<()> {
     let Slot { shard: s, v0, v1, out_path, mut child, stderr_drain } = slot;
     let step = (|| -> Result<()> {
@@ -225,29 +219,17 @@ fn finish_slot(slot: Slot, k: usize, z: &mut Dense) -> Result<()> {
         if !status.success() {
             bail!("shard-worker {s} failed ({status}): {}", stderr.trim());
         }
-        let rows = read_z_rows(&out_path, k, &mut z.data[v0 * k..v1 * k])?;
-        if rows != v1 - v0 {
-            bail!("shard-worker {s} wrote {rows} rows, expected {}", v1 - v0);
+        let cells = codec::read_f64s_file(&out_path)?;
+        let expect = (v1 - v0) * k;
+        if cells.len() != expect {
+            bail!(
+                "shard-worker {s} wrote {} Z cells, expected {expect}",
+                cells.len()
+            );
         }
+        z.data[v0 * k..v1 * k].copy_from_slice(&cells);
         Ok(())
     })();
     let _ = fs::remove_file(&out_path);
     step
-}
-
-/// Parse a worker's Z-rows file (one whitespace-separated row per line)
-/// into `out`; returns the row count.
-fn read_z_rows(path: &Path, k: usize, out: &mut [f64]) -> Result<usize> {
-    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
-    let mut row = 0usize;
-    for line in BufReader::new(f).lines() {
-        let line = line?;
-        if k > 0 && row * k >= out.len() {
-            bail!("{}: more rows than the shard range", path.display());
-        }
-        super::worker::parse_z_row(&line, k, &mut out[row * k..row * k + k])
-            .with_context(|| format!("{}:{}", path.display(), row + 1))?;
-        row += 1;
-    }
-    Ok(row)
 }

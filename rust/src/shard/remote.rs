@@ -3,42 +3,68 @@
 //! lane" item: the worker protocol was already file/process-based; this
 //! is the transport half, [`super::dispatch`] is the placement half).
 //!
-//! Style follows `coordinator/server.rs`: a minimal line-oriented text
-//! exchange over stdlib `TcpListener`, one thread per connection, no new
-//! dependencies. Every f64 crosses the wire in shortest-roundtrip form
-//! (Rust's `Display` re-parses bitwise), and the worker re-derives the
-//! weight vector and Laplacian scale from the shipped globals through
-//! the same single implementations the in-process engines use
-//! ([`weight_values`], [`scale_from_deg`](super::plan::scale_from_deg)) —
-//! so remote rows are **bitwise-identical** to `SparseGee::fast()`, the
-//! same contract `shard/worker.rs` gives the multi-process lane.
+//! Style follows `coordinator/server.rs`: verb lines over stdlib
+//! `TcpListener`, one thread per connection, no new dependencies. The
+//! worker re-derives the weight vector and Laplacian scale from the
+//! shipped globals through the same single implementations the
+//! in-process engines use ([`weight_values`],
+//! [`scale_from_deg`](super::plan::scale_from_deg)) — so remote rows are
+//! **bitwise-identical** to `SparseGee::fast()`, the same contract
+//! `shard/worker.rs` gives the multi-process lane.
 //!
-//! ## Protocol
+//! ## Protocol v2 (binary) — the default
 //!
-//! One request (pipelined sequentially per connection):
+//! Verb lines stay text; bodies are [`super::codec`] binary frames
+//! (`u64` LE length prefix + fixed-width LE records), so every f64
+//! crosses the wire as its raw bit pattern — parity is bitwise **by
+//! construction**, no shortest-roundtrip dance. A driver negotiates
+//! once per connection, ships the global vectors once per connection
+//! under a content hash, then references them per shard:
 //!
 //! ```text
-//! -> SHARD n=<n> k=<k> row0=<v0> row1=<v1> lap=<0|1> diag=<0|1> cor=<0|1>
-//! -> <n lines: one global label each>
-//! -> <n lines: one global weighted degree each (shortest-roundtrip f64)>
-//! -> <the shard's incident edges, one "src dst weight" line each>
-//! -> END
+//! -> HELLO2
+//! <- HELLO2                          (a legacy daemon answers ERR and
+//!                                     closes; the driver reconnects in
+//!                                     text mode — see the README matrix)
+//! -> GLOBALS g=<fnv64 hex> n=<n> k=<k>
+//! -> <labels frame: n i32 records>
+//! -> <degrees frame: n f64 records>
+//! <- OK
+//! -> SHARD2 g=<hash> n= k= row0= row1= lap= diag= cor=
+//! -> <edges frame: 16-byte edge records — a spill file streamed raw>
 //! <- OK rows=<v1 - v0>
-//! <- <v1 - v0 lines: k tab-separated shortest-roundtrip f64 each>
-//! <- DONE
+//! <- <Z frame: rows*k f64 records>
+//! -> SHARD2 ... (same hash, no globals resent)   ...
 //! ```
 //!
-//! or `ERR <message>` (after which the daemon closes the connection — a
-//! half-consumed body has no well-defined resync point). `PING` → `PONG`
-//! for health checks and placement probes; `QUIT` closes. Admission is
-//! bounded: headers are rejected against the `MAX_FRAME_*` caps before
-//! anything is allocated from them, the label / degree / edge vectors
-//! grow only as data actually arrives (edge lines additionally capped),
-//! and the one header-driven allocation — the `rows × k` output block,
-//! sized after the body is fully read — is capped at [`MAX_FRAME_CELLS`]
-//! (2 GiB), the same worst-case the coordinator wire protocol admits.
+//! The daemon caches the `GLOBALS` vectors (and the derived weight
+//! vector) per connection under the declared hash, re-hashes the bytes
+//! it actually received and rejects a mismatch, so per-job fleet traffic
+//! is O(W·n + E) instead of O(S·n + E). A `GLOBALS` with a new hash
+//! simply replaces the cached entry (one per connection — a connection
+//! serves one job at a time, and the hash pins the job epoch).
+//!
+//! ## Protocol v1 (text) — kept for mixed fleets
+//!
+//! The original line exchange (`SHARD` header → n label lines → n
+//! degree lines → edge lines → `END`, answered by `OK rows=` + text Z
+//! rows + `DONE`), every f64 in shortest-roundtrip form. Old drivers
+//! against this daemon, and new drivers against old daemons, both keep
+//! working; `ShardServer::start_text_only` serves only v1, emulating a
+//! legacy daemon for negotiation tests.
+//!
+//! Either way: `ERR <message>` (after which the daemon closes the
+//! connection — a half-consumed body has no well-defined resync point),
+//! `PING` → `PONG` for health checks and placement probes, `QUIT`
+//! closes. Admission is bounded: headers and frame length prefixes are
+//! rejected against the `MAX_FRAME_*` caps *before* anything is
+//! allocated from them, bodies are consumed in bounded chunks
+//! ([`codec::FRAME_CHUNK_BYTES`]) with buffers growing only as data
+//! actually arrives, and the one header-driven allocation — the
+//! `rows × k` output block — is capped at [`MAX_FRAME_CELLS`] (2 GiB),
+//! the same worst-case the coordinator wire protocol admits.
 
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -46,6 +72,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
+use super::codec;
 use super::local::embed_shard;
 use super::plan::scale_from_deg;
 use crate::gee::options::GeeOptions;
@@ -85,41 +112,14 @@ pub struct ShardHeader {
 impl ShardHeader {
     /// Parse the key=val fields after the `SHARD` verb.
     pub fn parse(header: &str) -> Result<ShardHeader> {
-        let mut parts = header.split_whitespace();
-        if parts.next() != Some("SHARD") {
-            bail!("expected SHARD, got '{header}'");
-        }
-        let (mut n, mut k, mut row0, mut row1) = (None, None, None, None);
-        let (mut lap, mut diag, mut cor) = (false, false, false);
-        let mut parse_bool = |val: &str, key: &str| -> Result<bool> {
-            match val {
-                "0" => Ok(false),
-                "1" => Ok(true),
-                other => bail!("bad {key}={other} (use 0 or 1)"),
-            }
-        };
-        for p in parts {
-            let (key, val) = p.split_once('=').context("SHARD args are key=val")?;
-            match key {
-                "n" => n = Some(val.parse::<usize>().context("bad n")?),
-                "k" => k = Some(val.parse::<usize>().context("bad k")?),
-                "row0" => row0 = Some(val.parse::<usize>().context("bad row0")?),
-                "row1" => row1 = Some(val.parse::<usize>().context("bad row1")?),
-                "lap" => lap = parse_bool(val, "lap")?,
-                "diag" => diag = parse_bool(val, "diag")?,
-                "cor" => cor = parse_bool(val, "cor")?,
-                other => bail!("unknown SHARD arg '{other}'"),
-            }
-        }
-        let h = ShardHeader {
-            n: n.context("SHARD requires n=")?,
-            k: k.context("SHARD requires k=")?,
-            row0: row0.context("SHARD requires row0=")?,
-            row1: row1.context("SHARD requires row1=")?,
-            options: GeeOptions::new(lap, diag, cor),
-        };
-        h.validate()?;
-        Ok(h)
+        Ok(parse_shard_header(header, "SHARD")?.0)
+    }
+
+    /// Parse a `SHARD2` header: same fields plus the required `g=`
+    /// GLOBALS content hash this shard references.
+    pub fn parse_v2(header: &str) -> Result<(ShardHeader, u64)> {
+        let (h, hash) = parse_shard_header(header, "SHARD2")?;
+        Ok((h, hash.context("SHARD2 requires g= (the GLOBALS content hash)")?))
     }
 
     /// Bounds gate, applied before anything is allocated from the header.
@@ -147,9 +147,107 @@ impl ShardHeader {
     }
 }
 
+/// The shared `SHARD`/`SHARD2` key=val grammar. The `g=` hash key is
+/// accepted only for `SHARD2` (an unknown-arg error for v1, so old
+/// daemons keep rejecting headers they cannot honor).
+fn parse_shard_header(header: &str, verb: &str) -> Result<(ShardHeader, Option<u64>)> {
+    let mut parts = header.split_whitespace();
+    if parts.next() != Some(verb) {
+        bail!("expected {verb}, got '{header}'");
+    }
+    let (mut n, mut k, mut row0, mut row1) = (None, None, None, None);
+    let (mut lap, mut diag, mut cor) = (false, false, false);
+    let mut hash = None;
+    let mut parse_bool = |val: &str, key: &str| -> Result<bool> {
+        match val {
+            "0" => Ok(false),
+            "1" => Ok(true),
+            other => bail!("bad {key}={other} (use 0 or 1)"),
+        }
+    };
+    for p in parts {
+        let (key, val) = p.split_once('=').with_context(|| format!("{verb} args are key=val"))?;
+        match key {
+            "n" => n = Some(val.parse::<usize>().context("bad n")?),
+            "k" => k = Some(val.parse::<usize>().context("bad k")?),
+            "row0" => row0 = Some(val.parse::<usize>().context("bad row0")?),
+            "row1" => row1 = Some(val.parse::<usize>().context("bad row1")?),
+            "lap" => lap = parse_bool(val, "lap")?,
+            "diag" => diag = parse_bool(val, "diag")?,
+            "cor" => cor = parse_bool(val, "cor")?,
+            "g" if verb == "SHARD2" => {
+                hash = Some(parse_hash(val)?);
+            }
+            other => bail!("unknown {verb} arg '{other}'"),
+        }
+    }
+    let h = ShardHeader {
+        n: n.with_context(|| format!("{verb} requires n="))?,
+        k: k.with_context(|| format!("{verb} requires k="))?,
+        row0: row0.with_context(|| format!("{verb} requires row0="))?,
+        row1: row1.with_context(|| format!("{verb} requires row1="))?,
+        options: GeeOptions::new(lap, diag, cor),
+    };
+    h.validate()?;
+    Ok((h, hash))
+}
+
+fn parse_hash(val: &str) -> Result<u64> {
+    u64::from_str_radix(val, 16).with_context(|| format!("bad content hash '{val}'"))
+}
+
+/// A `GLOBALS` header: declared content hash + vector dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GlobalsHeader {
+    pub hash: u64,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GlobalsHeader {
+    /// Parse and bounds-gate a `GLOBALS g=<hex> n=<n> k=<k>` line —
+    /// nothing is allocated from the header before this passes.
+    pub fn parse(header: &str) -> Result<GlobalsHeader> {
+        let mut parts = header.split_whitespace();
+        if parts.next() != Some("GLOBALS") {
+            bail!("expected GLOBALS, got '{header}'");
+        }
+        let (mut hash, mut n, mut k) = (None, None, None);
+        for p in parts {
+            let (key, val) = p.split_once('=').context("GLOBALS args are key=val")?;
+            match key {
+                "g" => hash = Some(parse_hash(val)?),
+                "n" => n = Some(val.parse::<usize>().context("bad n")?),
+                "k" => k = Some(val.parse::<usize>().context("bad k")?),
+                other => bail!("unknown GLOBALS arg '{other}'"),
+            }
+        }
+        let h = GlobalsHeader {
+            hash: hash.context("GLOBALS requires g=")?,
+            n: n.context("GLOBALS requires n=")?,
+            k: k.context("GLOBALS requires k=")?,
+        };
+        if h.n == 0 {
+            bail!("GLOBALS requires n >= 1");
+        }
+        if h.n > MAX_FRAME_VERTICES {
+            bail!("n={} exceeds the wire limit {MAX_FRAME_VERTICES}", h.n);
+        }
+        if h.k > MAX_FRAME_CLASSES {
+            bail!("k={} exceeds the wire limit {MAX_FRAME_CLASSES}", h.k);
+        }
+        Ok(h)
+    }
+}
+
 /// Per-connection scratch: every buffer is reused across the pipelined
 /// requests of one connection, so a fleet daemon serving a long driver
-/// session settles into zero steady-state allocation growth.
+/// session settles into zero steady-state allocation growth. The same
+/// label/degree buffers double as the wire-v2 GLOBALS cache: when
+/// `g_hash` is set they hold the vectors (and derived weights) shipped
+/// once by `GLOBALS`, and `SHARD2` requests reference them by hash. A
+/// v1 `SHARD` request overwrites the buffers, so it invalidates the
+/// cache.
 struct ConnState {
     labels: Vec<i32>,
     deg: Vec<f64>,
@@ -159,6 +257,15 @@ struct ConnState {
     out: Vec<f64>,
     ws: EmbedWorkspace,
     line: String,
+    /// Cached GLOBALS fingerprint (with its dimensions and the derived
+    /// weight vector) — `None` until a GLOBALS lands, and after any v1
+    /// request clobbers the buffers.
+    g_hash: Option<u64>,
+    g_n: usize,
+    g_k: usize,
+    wv: Vec<f64>,
+    /// Frame chunk scratch (bounded by [`codec::FRAME_CHUNK_BYTES`]).
+    chunk: Vec<u8>,
 }
 
 impl ConnState {
@@ -172,6 +279,11 @@ impl ConnState {
             out: Vec::new(),
             ws: EmbedWorkspace::new(),
             line: String::new(),
+            g_hash: None,
+            g_n: 0,
+            g_k: 0,
+            wv: Vec::new(),
+            chunk: Vec::new(),
         }
     }
 }
@@ -184,10 +296,23 @@ pub struct ShardServer {
 }
 
 impl ShardServer {
-    /// Bind (port 0 for ephemeral) and serve shard requests. One thread
-    /// per connection; a driver keeps one connection per dispatch slot,
-    /// so connection count equals fleet slot count.
+    /// Bind (port 0 for ephemeral) and serve shard requests — wire v2
+    /// plus the v1 text fallback. One thread per connection; a driver
+    /// keeps one connection per dispatch slot, so connection count
+    /// equals fleet slot count.
     pub fn start(bind: &str) -> Result<ShardServer> {
+        Self::start_with(bind, false)
+    }
+
+    /// Serve only the v1 text protocol — `HELLO2`/`GLOBALS`/`SHARD2`
+    /// draw the same `ERR` + close a pre-v2 daemon gives, so this is the
+    /// stand-in for a legacy daemon in negotiation tests and the CI
+    /// mixed-fleet smoke (CLI: `gee shard-serve --text-only`).
+    pub fn start_text_only(bind: &str) -> Result<ShardServer> {
+        Self::start_with(bind, true)
+    }
+
+    fn start_with(bind: &str, text_only: bool) -> Result<ShardServer> {
         let listener =
             TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
@@ -199,7 +324,7 @@ impl ShardServer {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream);
+                            let _ = handle_connection(stream, text_only);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -225,7 +350,7 @@ impl ShardServer {
     }
 }
 
-fn handle_connection(stream: TcpStream) -> Result<()> {
+fn handle_connection(stream: TcpStream, text_only: bool) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
@@ -247,7 +372,24 @@ fn handle_connection(stream: TcpStream) -> Result<()> {
         if line == "QUIT" {
             return Ok(());
         }
-        match serve_shard(&line, &mut reader, &mut writer, &mut st) {
+        if !text_only && line == "HELLO2" {
+            // version negotiation: echoing the verb advertises wire v2
+            writeln!(writer, "HELLO2")?;
+            writer.flush()?;
+            continue;
+        }
+        let served = if !text_only && line.starts_with("GLOBALS") {
+            serve_globals(&line, &mut reader, &mut writer, &mut st)
+        } else if !text_only && line.starts_with("SHARD2") {
+            serve_shard2(&line, &mut reader, &mut writer, &mut st)
+        } else {
+            // v1 text request — or, in text-only mode, *any* v2 verb,
+            // which fails here exactly as a pre-v2 daemon fails it
+            // ("expected SHARD, got 'HELLO2'"), driving the driver's
+            // reconnect-as-text fallback
+            serve_shard(&line, &mut reader, &mut writer, &mut st)
+        };
+        match served {
             Ok(()) => writer.flush()?,
             Err(e) => {
                 // after a failed request the body position is undefined —
@@ -270,18 +412,18 @@ fn serve_shard(
     let h = ShardHeader::parse(header)?;
     let (n, k) = (h.n, h.k);
 
+    // a v1 request refills the label/degree buffers, clobbering any
+    // cached GLOBALS — drop the fingerprint so a later SHARD2 cannot
+    // reference vectors that are no longer there
+    st.g_hash = None;
+
     // globals: n labels, then n degrees — allocation tracks received data
     st.labels.clear();
     for i in 0..n {
         let t = read_trimmed(reader, &mut st.line)
             .with_context(|| format!("label line {}", i + 1))?;
         let l: i32 = t.parse().with_context(|| format!("bad label '{t}'"))?;
-        if l < -1 {
-            bail!("label {l} < -1 (use -1 for unlabeled)");
-        }
-        if l >= k as i32 {
-            bail!("label {l} >= k {k}");
-        }
+        codec::validate_label(l, k)?;
         st.labels.push(l);
     }
     st.deg.clear();
@@ -343,6 +485,160 @@ fn serve_shard(
     Ok(())
 }
 
+/// Serve a `GLOBALS` upload: validate the header, stream the label and
+/// degree frames into the connection cache in bounded chunks (hashing
+/// the bytes as they arrive), and refuse a content-hash mismatch.
+fn serve_globals(
+    header: &str,
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    st: &mut ConnState,
+) -> Result<()> {
+    let h = GlobalsHeader::parse(header)?;
+    // invalidate while loading: a failure mid-upload must not leave a
+    // stale fingerprint over half-replaced buffers
+    st.g_hash = None;
+    let mut hasher = codec::Fnv64::new();
+
+    let len = codec::read_frame_len(reader, "GLOBALS labels frame")?;
+    codec::check_frame_len(
+        len,
+        codec::LABEL_RECORD_BYTES,
+        (MAX_FRAME_VERTICES * codec::LABEL_RECORD_BYTES) as u64,
+        Some((h.n * codec::LABEL_RECORD_BYTES) as u64),
+        "GLOBALS labels frame",
+    )?;
+    st.labels.clear();
+    let (labels, chunk) = (&mut st.labels, &mut st.chunk);
+    let k = h.k;
+    codec::read_frame_body(reader, len, chunk, "GLOBALS labels frame", |bytes| {
+        hasher.update(bytes);
+        for rec in bytes.chunks_exact(codec::LABEL_RECORD_BYTES) {
+            let l = i32::from_le_bytes(rec.try_into().unwrap());
+            codec::validate_label(l, k)?;
+            labels.push(l);
+        }
+        Ok(())
+    })?;
+
+    let len = codec::read_frame_len(reader, "GLOBALS degrees frame")?;
+    codec::check_frame_len(
+        len,
+        codec::F64_RECORD_BYTES,
+        (MAX_FRAME_VERTICES * codec::F64_RECORD_BYTES) as u64,
+        Some((h.n * codec::F64_RECORD_BYTES) as u64),
+        "GLOBALS degrees frame",
+    )?;
+    st.deg.clear();
+    let (deg, chunk) = (&mut st.deg, &mut st.chunk);
+    codec::read_frame_body(reader, len, chunk, "GLOBALS degrees frame", |bytes| {
+        hasher.update(bytes);
+        for rec in bytes.chunks_exact(codec::F64_RECORD_BYTES) {
+            deg.push(f64::from_le_bytes(rec.try_into().unwrap()));
+        }
+        Ok(())
+    })?;
+
+    let got = hasher.finish();
+    if got != h.hash {
+        bail!(
+            "GLOBALS hash mismatch: header declared {:016x} but the received \
+             vectors hash to {got:016x}",
+            h.hash
+        );
+    }
+    // derive + cache the weight vector once per upload, not per shard
+    st.wv = weight_values(&st.labels, h.k);
+    st.g_hash = Some(h.hash);
+    st.g_n = h.n;
+    st.g_k = h.k;
+    writeln!(writer, "OK")?;
+    Ok(())
+}
+
+/// Serve one `SHARD2` request against the connection's cached GLOBALS:
+/// header → edge frame → embed → `OK rows=` + Z frame.
+fn serve_shard2(
+    header: &str,
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    st: &mut ConnState,
+) -> Result<()> {
+    let (h, hash) = ShardHeader::parse_v2(header)?;
+    match st.g_hash {
+        Some(g) if g == hash => {}
+        Some(g) => bail!(
+            "SHARD2 references GLOBALS {hash:016x} but this connection cached \
+             {g:016x} — resend GLOBALS"
+        ),
+        None => bail!(
+            "SHARD2 before GLOBALS: no global vectors cached on this connection"
+        ),
+    }
+    if h.n != st.g_n || h.k != st.g_k {
+        bail!(
+            "SHARD2 n={} k={} disagrees with cached GLOBALS n={} k={}",
+            h.n,
+            h.k,
+            st.g_n,
+            st.g_k
+        );
+    }
+    let (n, k) = (h.n, h.k);
+
+    let len = codec::read_frame_len(reader, "SHARD2 edge frame")?;
+    codec::check_frame_len(
+        len,
+        codec::EDGE_RECORD_BYTES,
+        (MAX_FRAME_EDGES * codec::EDGE_RECORD_BYTES) as u64,
+        None,
+        "SHARD2 edge frame",
+    )?;
+    st.src.clear();
+    st.dst.clear();
+    st.w.clear();
+    let (src, dst, w, chunk) = (&mut st.src, &mut st.dst, &mut st.w, &mut st.chunk);
+    codec::read_frame_body(reader, len, chunk, "SHARD2 edge frame", |bytes| {
+        for rec in bytes.chunks_exact(codec::EDGE_RECORD_BYTES) {
+            let (a, b, wt) = codec::decode_edge(rec);
+            if a as usize >= n || b as usize >= n {
+                bail!("shard edge endpoint {} out of range for n={n}", a.max(b));
+            }
+            src.push(a);
+            dst.push(b);
+            w.push(wt);
+        }
+        Ok(())
+    })?;
+
+    // the weight vector is cached with the globals; the Laplacian scale
+    // depends on the per-request options, so it is derived here — same
+    // single implementation as every other lane
+    let scale = scale_from_deg(&st.deg, &h.options);
+
+    let rows = h.row1 - h.row0;
+    st.out.clear();
+    st.out.resize(rows * k, 0.0);
+    embed_shard(
+        &st.src,
+        &st.dst,
+        &st.w,
+        h.row0,
+        h.row1,
+        &st.labels,
+        &st.wv,
+        scale.as_deref(),
+        k,
+        &h.options,
+        &mut st.ws,
+        &mut st.out,
+    );
+
+    writeln!(writer, "OK rows={rows}")?;
+    codec::write_frame_f64s(writer, &st.out)?;
+    Ok(())
+}
+
 /// Read one line into `buf`, returning its trimmed contents; EOF is an
 /// error (a framed body must be complete).
 fn read_trimmed<'a>(reader: &mut impl BufRead, buf: &'a mut String) -> Result<&'a str> {
@@ -353,11 +649,13 @@ fn read_trimmed<'a>(reader: &mut impl BufRead, buf: &'a mut String) -> Result<&'
     Ok(buf.trim())
 }
 
-/// Client side of one `SHARD` round trip: stream shard `s` of `sp` to an
-/// open daemon connection and return its `(row1-row0) * k` Z cells.
-/// Bitwise contract: the spill file's weight text is forwarded verbatim
-/// and the reply is parsed with the shared row grammar, so the result is
-/// byte-for-byte what the in-process shard pass produces.
+/// Client side of one v1 `SHARD` round trip: stream shard `s` of `sp`
+/// to an open daemon connection and return its `(row1-row0) * k` Z
+/// cells. This is the **fallback lane** for legacy daemons: the binary
+/// spill records are formatted as shortest-roundtrip text (exact under
+/// re-parse) and the reply is parsed with the shared row grammar, so
+/// the result is still byte-for-byte what the in-process shard pass
+/// produces — it just pays the decimal formatting the v2 lane deleted.
 pub(crate) fn request_shard(
     reader: &mut impl BufRead,
     writer: &mut impl Write,
@@ -383,22 +681,19 @@ pub(crate) fn request_shard(
     for &d in &plan.deg {
         writeln!(writer, "{d}")?;
     }
-    // forward the spill file's lines untouched (already shortest-roundtrip)
-    let f = std::fs::File::open(&sp.files[s])
-        .with_context(|| format!("open {}", sp.files[s].display()))?;
-    let mut file_line = String::new();
-    let mut fr = BufReader::new(f);
-    loop {
-        file_line.clear();
-        if fr.read_line(&mut file_line)? == 0 {
-            break;
+    // stop decoding the spill the moment the socket dies: a dead daemon
+    // must fail the slot (and requeue the shard) without a full wasted
+    // scan of a potentially huge spill file
+    let mut io_err: Option<std::io::Error> = None;
+    codec::try_for_each_edge_auto(&sp.files[s], |a, b, w| {
+        if let Err(e) = writeln!(writer, "{a} {b} {w}") {
+            io_err = Some(e);
+            return std::ops::ControlFlow::Break(());
         }
-        let t = file_line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
-        }
-        writer.write_all(t.as_bytes())?;
-        writer.write_all(b"\n")?;
+        std::ops::ControlFlow::Continue(())
+    })?;
+    if let Some(e) = io_err {
+        return Err(anyhow::Error::new(e).context("stream shard edges"));
     }
     writeln!(writer, "END")?;
     writer.flush()?;
@@ -426,6 +721,111 @@ pub(crate) fn request_shard(
     if t != "DONE" {
         bail!("missing DONE trailer, got '{t}'");
     }
+    Ok(out)
+}
+
+/// Ship a job's global vectors to a v2 daemon under their content hash
+/// — once per connection; every subsequent [`request_shard_v2`] on the
+/// connection references them by `hash`.
+pub(crate) fn send_globals(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    sp: &super::spill::SpilledShards,
+    hash: u64,
+) -> Result<()> {
+    let plan = &sp.plan;
+    writeln!(writer, "GLOBALS g={hash:016x} n={} k={}", plan.n, plan.k)?;
+    codec::write_frame_i32s(writer, &sp.labels)?;
+    codec::write_frame_f64s(writer, &plan.deg)?;
+    writer.flush()?;
+    let mut line = String::new();
+    let t = read_trimmed(reader, &mut line).context("GLOBALS reply")?;
+    if t != "OK" {
+        bail!("worker rejected GLOBALS: {t}");
+    }
+    Ok(())
+}
+
+/// Client side of one `SHARD2` round trip: the spill file is streamed to
+/// the daemon as one raw edge frame (the file *is* the frame body —
+/// zero re-parse, zero formatting) and the Z rows come back as raw f64
+/// bit patterns. Requires [`send_globals`] to have shipped `hash` on
+/// this connection already. `scratch` is the caller's reused frame-chunk
+/// buffer (a slot holds one for its lifetime, so per-shard calls do not
+/// re-allocate it).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn request_shard_v2(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    sp: &super::spill::SpilledShards,
+    opts: &GeeOptions,
+    s: usize,
+    hash: u64,
+    scratch: &mut Vec<u8>,
+) -> Result<Vec<f64>> {
+    let plan = &sp.plan;
+    let (v0, v1) = plan.shard_range(s);
+
+    // open + size the spill file *before* the header line goes out: a
+    // local file problem must not leave the connection mid-request
+    let path = &sp.files[s];
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let flen = f.metadata()?.len();
+    if flen % codec::EDGE_RECORD_BYTES as u64 != 0 {
+        bail!(
+            "{}: {flen} bytes is not a whole number of edge records (truncated?)",
+            path.display()
+        );
+    }
+
+    let b = |v: bool| if v { "1" } else { "0" };
+    writeln!(
+        writer,
+        "SHARD2 g={hash:016x} n={} k={} row0={v0} row1={v1} lap={} diag={} cor={}",
+        plan.n,
+        plan.k,
+        b(opts.laplacian),
+        b(opts.diagonal),
+        b(opts.correlation)
+    )?;
+    codec::write_frame_len(writer, flen)?;
+    // take() pins the copy to the declared frame length: a file that
+    // grows mid-stream cannot push stray bytes past the frame boundary
+    // (desyncing the protocol), and one that shrinks under-fills the
+    // frame and fails the length check below immediately
+    let copied = std::io::copy(&mut f.take(flen), writer)
+        .with_context(|| format!("stream {}", path.display()))?;
+    if copied != flen {
+        bail!(
+            "{}: streamed {copied} of {flen} bytes (file changed mid-stream?)",
+            path.display()
+        );
+    }
+    writer.flush()?;
+
+    let mut line = String::new();
+    let t = read_trimmed(reader, &mut line).context("shard reply header")?;
+    let rows_claim: usize = t
+        .strip_prefix("OK rows=")
+        .with_context(|| format!("worker said: {t}"))?
+        .parse()
+        .context("bad rows count")?;
+    let rows = v1 - v0;
+    if rows_claim != rows {
+        bail!("worker replied {rows_claim} rows, expected {rows}");
+    }
+    let k = plan.k;
+    let expect = (rows * k * codec::F64_RECORD_BYTES) as u64;
+    let len = codec::read_frame_len(reader, "Z frame")?;
+    codec::check_frame_len(len, codec::F64_RECORD_BYTES, expect, Some(expect), "Z frame")?;
+    let mut out = Vec::with_capacity(rows * k);
+    codec::read_frame_body(reader, len, scratch, "Z frame", |bytes| {
+        for rec in bytes.chunks_exact(codec::F64_RECORD_BYTES) {
+            out.push(f64::from_le_bytes(rec.try_into().unwrap()));
+        }
+        Ok(())
+    })?;
     Ok(out)
 }
 
@@ -514,6 +914,253 @@ mod tests {
             }
         }
         server.stop();
+    }
+
+    #[test]
+    fn v2_round_trip_over_localhost_is_bitwise() {
+        // the binary wire end to end: HELLO2, GLOBALS once, SHARD2 per
+        // shard — rows bitwise vs the fused engine for the whole grid
+        let dir = std::env::temp_dir()
+            .join(format!("gee_remote_v2_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = random_graph(552, 90, 500, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 3, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+
+        // negotiate
+        writeln!(writer, "HELLO2").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "HELLO2");
+
+        // one GLOBALS for the whole connection, every shard x option
+        // served against the cache
+        let hash = codec::globals_hash(&sp.labels, &sp.plan.deg);
+        send_globals(&mut reader, &mut writer, &sp, hash).unwrap();
+        let mut scratch = Vec::new();
+        for opts in GeeOptions::table_order() {
+            let whole = SparseGee::fast().embed(&g, &opts);
+            for s in 0..sp.plan.shards() {
+                let (v0, v1) = sp.plan.shard_range(s);
+                let rows = request_shard_v2(
+                    &mut reader,
+                    &mut writer,
+                    &sp,
+                    &opts,
+                    s,
+                    hash,
+                    &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(
+                    rows,
+                    whole.data[v0 * g.k..v1 * g.k].to_vec(),
+                    "v2 shard {s} drifted at {opts:?}"
+                );
+            }
+        }
+        server.stop();
+    }
+
+    /// Open a raw client connection to a fresh v2 daemon.
+    fn raw_conn(
+        server: &ShardServer,
+    ) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        (
+            BufReader::new(stream.try_clone().unwrap()),
+            BufWriter::new(stream),
+        )
+    }
+
+    fn read_reply(reader: &mut BufReader<TcpStream>) -> String {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        line.trim().to_string()
+    }
+
+    #[test]
+    fn hostile_v2_bodies_get_bounded_typed_errors() {
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+
+        // oversized GLOBALS frame length prefix: rejected from the
+        // prefix alone (n*4 expected), before any body bytes exist
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "GLOBALS g=00000000deadbeef n=10 k=2").unwrap();
+            codec::write_frame_len(&mut writer, 1 << 40).unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("labels frame"), "{t}");
+        }
+
+        // GLOBALS content-hash mismatch: vectors arrive intact but under
+        // the wrong fingerprint — typed rejection, nothing cached
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "GLOBALS g=0123456789abcdef n=3 k=2").unwrap();
+            codec::write_frame_i32s(&mut writer, &[0, 1, -1]).unwrap();
+            codec::write_frame_f64s(&mut writer, &[1.0, 2.0, 0.5]).unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("hash mismatch"), "{t}");
+        }
+
+        // SHARD2 with no GLOBALS cached on the connection
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(
+                writer,
+                "SHARD2 g=0123456789abcdef n=3 k=2 row0=0 row1=1"
+            )
+            .unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("before GLOBALS"), "{t}");
+        }
+
+        // SHARD2 referencing a different hash than the cached one
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            let (labels, deg) = (vec![0, 1, -1], vec![1.0, 2.0, 0.5]);
+            let hash = codec::globals_hash(&labels, &deg);
+            writeln!(writer, "GLOBALS g={hash:016x} n=3 k=2").unwrap();
+            codec::write_frame_i32s(&mut writer, &labels).unwrap();
+            codec::write_frame_f64s(&mut writer, &deg).unwrap();
+            writer.flush().unwrap();
+            assert_eq!(read_reply(&mut reader), "OK");
+            writeln!(
+                writer,
+                "SHARD2 g={:016x} n=3 k=2 row0=0 row1=1",
+                hash ^ 1
+            )
+            .unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("resend GLOBALS"), "{t}");
+        }
+
+        // misaligned SHARD2 edge frame (not a whole number of records)
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            let (labels, deg) = (vec![0, 1, -1], vec![1.0, 2.0, 0.5]);
+            let hash = codec::globals_hash(&labels, &deg);
+            writeln!(writer, "GLOBALS g={hash:016x} n=3 k=2").unwrap();
+            codec::write_frame_i32s(&mut writer, &labels).unwrap();
+            codec::write_frame_f64s(&mut writer, &deg).unwrap();
+            writer.flush().unwrap();
+            assert_eq!(read_reply(&mut reader), "OK");
+            writeln!(writer, "SHARD2 g={hash:016x} n=3 k=2 row0=0 row1=1")
+                .unwrap();
+            codec::write_frame_len(&mut writer, 15).unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+        }
+
+        // mid-frame EOF: a client that declares a body then hangs up must
+        // not wedge or crash the daemon — a fresh connection still works
+        {
+            let (_reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "GLOBALS g=0000000000000001 n=10 k=2").unwrap();
+            codec::write_frame_len(&mut writer, 40).unwrap();
+            writer.write_all(&[0u8; 8]).unwrap(); // 8 of 40 bytes, then gone
+            writer.flush().unwrap();
+        }
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "PING").unwrap();
+            writer.flush().unwrap();
+            assert_eq!(read_reply(&mut reader), "PONG");
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn text_only_server_rejects_v2_verbs_like_a_legacy_daemon() {
+        let server = ShardServer::start_text_only("127.0.0.1:0").unwrap();
+        // HELLO2 draws ERR + close — exactly what a pre-v2 daemon does —
+        // so driver negotiation falls back to text against it
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "HELLO2").unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("expected SHARD"), "{t}");
+            let mut rest = String::new();
+            assert_eq!(
+                reader.read_line(&mut rest).unwrap(),
+                0,
+                "legacy-emulating daemon must close after ERR"
+            );
+        }
+        // and it still serves the v1 text protocol
+        {
+            let dir = std::env::temp_dir()
+                .join(format!("gee_remote_textonly_{}", std::process::id()));
+            let _ = std::fs::remove_dir_all(&dir);
+            std::fs::create_dir_all(&dir).unwrap();
+            let g = random_graph(553, 50, 250, 3);
+            let sp = spill_from_graph(
+                &g,
+                &SpillConfig { shards: 2, ..SpillConfig::new(&dir) },
+            )
+            .unwrap();
+            let (mut reader, mut writer) = raw_conn(&server);
+            let opts = crate::gee::GeeOptions::ALL;
+            let whole = SparseGee::fast().embed(&g, &opts);
+            for s in 0..sp.plan.shards() {
+                let (v0, v1) = sp.plan.shard_range(s);
+                let rows =
+                    request_shard(&mut reader, &mut writer, &sp, &opts, s).unwrap();
+                assert_eq!(rows, whole.data[v0 * g.k..v1 * g.k].to_vec());
+            }
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn globals_header_parse_and_bounds() {
+        let h = GlobalsHeader::parse("GLOBALS g=00ff00ff00ff00ff n=10 k=3").unwrap();
+        assert_eq!(h.hash, 0x00ff_00ff_00ff_00ff);
+        assert_eq!((h.n, h.k), (10, 3));
+        assert!(GlobalsHeader::parse("GLOBALS n=10 k=3").is_err());
+        assert!(GlobalsHeader::parse("GLOBALS g=zz n=10 k=3").is_err());
+        assert!(GlobalsHeader::parse("GLOBALS g=1 n=0 k=3").is_err());
+        assert!(GlobalsHeader::parse(&format!(
+            "GLOBALS g=1 n={} k=3",
+            MAX_FRAME_VERTICES + 1
+        ))
+        .is_err());
+        assert!(GlobalsHeader::parse(&format!(
+            "GLOBALS g=1 n=10 k={}",
+            MAX_FRAME_CLASSES + 1
+        ))
+        .is_err());
+        // v1 SHARD headers must keep rejecting the v2-only g= key
+        assert!(ShardHeader::parse("SHARD g=1 n=5 k=2 row0=0 row1=5").is_err());
+        // and SHARD2 requires it
+        assert!(ShardHeader::parse_v2("SHARD2 n=5 k=2 row0=0 row1=5").is_err());
+        let (h2, hash) =
+            ShardHeader::parse_v2("SHARD2 g=ab n=5 k=2 row0=0 row1=5 lap=1").unwrap();
+        assert_eq!(hash, 0xab);
+        assert_eq!((h2.n, h2.k, h2.row0, h2.row1), (5, 2, 0, 5));
+        assert!(h2.options.laplacian);
     }
 
     #[test]

@@ -1,13 +1,18 @@
 //! On-disk shard exchange — the out-of-core backend.
 //!
-//! Spilling uses the `graph::io` edge-list text format (one
-//! `src dst weight` line, weights in shortest-roundtrip form so they
-//! re-parse bitwise): one streaming pass writes every stored edge into
-//! the spill file of each endpoint's shard (once, when both endpoints
-//! share a shard). Each shard file therefore holds exactly the shard's
-//! incident edges in global storage order — the invariant
-//! [`local::embed_shard`](super::local::embed_shard) needs for
-//! bitwise-identical rows.
+//! Spilling uses the [`super::codec`] binary edge-record format (16
+//! fixed-width bytes per record: `u32 src | u32 dst | f64 weight`, raw
+//! little-endian bit patterns, so weights round-trip bitwise with no
+//! decimal formatting on any path): one streaming pass writes every
+//! stored edge into the spill file of each endpoint's shard (once, when
+//! both endpoints share a shard). Each shard file therefore holds
+//! exactly the shard's incident edges in global storage order — the
+//! invariant [`local::embed_shard`](super::local::embed_shard) needs for
+//! bitwise-identical rows — and its byte length is exactly
+//! `records × 16`, headerless, which is what lets the TCP dispatcher
+//! stream a spill file to a remote worker as one raw frame with zero
+//! re-parse. Legacy text spill files (any extension but `.bin`) still
+//! load through the same entry points.
 //!
 //! [`embed_out_of_core`] then loads one shard at a time, so peak edge
 //! residency is a single shard's slice (bounded by
@@ -22,11 +27,12 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Context, Result};
 
+use super::codec::{for_each_edge_auto, try_for_each_edge_auto, write_edge_record};
 use super::local::embed_shard;
 use super::plan::{GlobalPass, ShardPlan};
 use crate::gee::options::GeeOptions;
 use crate::gee::workspace::EmbedWorkspace;
-use crate::graph::io::{for_each_edge, read_label_vec, try_for_each_edge};
+use crate::graph::io::read_label_vec;
 use crate::graph::Graph;
 use crate::sparse::Dense;
 
@@ -45,7 +51,7 @@ pub struct SpillConfig {
     /// Parent directory for spill files (created if absent). Each spill
     /// writes into its own unique subdirectory of this path — two
     /// concurrent spills sharing one config never see each other's
-    /// `shard_N.edges` (they used to clobber silently).
+    /// `shard_N.bin` (they used to clobber silently).
     pub dir: PathBuf,
     /// Keep spill files on drop (debugging / inspection).
     pub keep: bool,
@@ -111,7 +117,7 @@ fn open_writers(
     let mut files = Vec::with_capacity(shards);
     let mut writers = Vec::with_capacity(shards);
     for s in 0..shards {
-        let path = dir.join(format!("shard_{s}.edges"));
+        let path = dir.join(format!("shard_{s}.bin"));
         let f = File::create(&path).with_context(|| format!("create {}", path.display()))?;
         files.push(path);
         writers.push(BufWriter::new(f));
@@ -133,10 +139,10 @@ pub fn spill_from_graph(g: &Graph, cfg: &SpillConfig) -> Result<SpilledShards> {
         let (a, b, w) = (g.src[i], g.dst[i], g.w[i]);
         let sa = plan.shard_of(a as usize);
         let sb = plan.shard_of(b as usize);
-        writeln!(writers[sa], "{a} {b} {w}")
+        write_edge_record(&mut writers[sa], a, b, w)
             .with_context(|| format!("write {}", files[sa].display()))?;
         if sb != sa {
-            writeln!(writers[sb], "{a} {b} {w}")
+            write_edge_record(&mut writers[sb], a, b, w)
                 .with_context(|| format!("write {}", files[sb].display()))?;
         }
     }
@@ -167,7 +173,7 @@ pub fn spill_from_files(
 
     let mut pass = GlobalPass::new(n);
     let mut oob: Option<(u32, u32)> = None;
-    try_for_each_edge(edges, |a, b, w| {
+    try_for_each_edge_auto(edges, |a, b, w| {
         if (a as usize) < n && (b as usize) < n {
             pass.observe(a, b, w);
             std::ops::ControlFlow::Continue(())
@@ -191,18 +197,18 @@ pub fn spill_from_files(
     // a mid-spill IO failure (disk full, quota, yanked mount) must name
     // the shard file it hit, not just "write spill files"
     let mut io_err: Option<(std::io::Error, usize)> = None;
-    for_each_edge(edges, |a, b, w| {
+    for_each_edge_auto(edges, |a, b, w| {
         if io_err.is_some() {
             return;
         }
         let sa = plan.shard_of(a as usize);
         let sb = plan.shard_of(b as usize);
-        if let Err(e) = writeln!(writers[sa], "{a} {b} {w}") {
+        if let Err(e) = write_edge_record(&mut writers[sa], a, b, w) {
             io_err = Some((e, sa));
             return;
         }
         if sb != sa {
-            if let Err(e) = writeln!(writers[sb], "{a} {b} {w}") {
+            if let Err(e) = write_edge_record(&mut writers[sb], a, b, w) {
                 io_err = Some((e, sb));
             }
         }
@@ -232,7 +238,7 @@ pub fn embed_out_of_core(sp: &SpilledShards, opts: &GeeOptions) -> Result<Dense>
         src.clear();
         dst.clear();
         w.clear();
-        for_each_edge(&sp.files[s], |a, b, ww| {
+        for_each_edge_auto(&sp.files[s], |a, b, ww| {
             src.push(a);
             dst.push(b);
             w.push(ww);
@@ -269,6 +275,18 @@ mod tests {
         let _ = fs::remove_dir_all(&d);
         fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    /// Edge records in a binary spill file, via its exact byte length.
+    fn spill_records(f: &Path) -> usize {
+        let bytes = fs::metadata(f).unwrap().len();
+        assert_eq!(
+            bytes % super::super::codec::EDGE_RECORD_BYTES as u64,
+            0,
+            "{}: spill files must be whole records",
+            f.display()
+        );
+        (bytes / super::super::codec::EDGE_RECORD_BYTES as u64) as usize
     }
 
     fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
@@ -327,13 +345,13 @@ mod tests {
             sp.plan.shards() >= 5,
             "budget {budget} of {total} edges must raise the shard count"
         );
-        // the resident set per shard load is that shard's line count:
+        // the resident set per shard load is that shard's record count:
         // within 2x of the budget even with hubs (the balance headroom)
         for f in &sp.files {
-            let lines = fs::read_to_string(f).unwrap().lines().count();
+            let records = spill_records(f);
             assert!(
-                lines <= 2 * budget,
-                "shard file {} holds {lines} edges, budget {budget}",
+                records <= 2 * budget,
+                "shard file {} holds {records} edges, budget {budget}",
                 f.display()
             );
         }
@@ -398,6 +416,49 @@ mod tests {
         drop(sp2);
         assert!(!d1.exists() && !d2.exists());
         assert!(d.exists(), "the shared parent dir must survive");
+    }
+
+    #[test]
+    fn spill_file_size_is_exactly_records_times_record_size() {
+        // regression guard for the binary data plane: a spill writer that
+        // silently falls back to text (or grows any per-record framing)
+        // changes the file length, and the remote dispatcher streams
+        // spill files as raw frames whose length must be the byte count
+        // of `records x 16` — so the size is pinned exactly, per shard
+        let d = tmpdir("exact");
+        let g = random_graph(535, 90, 520, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 4, keep: true, ..SpillConfig::new(&d) },
+        )
+        .unwrap();
+        // independently count each shard's expected record copies from
+        // the plan (an edge lands in both endpoints' shards when they
+        // differ, once when they share one)
+        let mut expect = vec![0u64; sp.plan.shards()];
+        for i in 0..g.num_edges() {
+            let sa = sp.plan.shard_of(g.src[i] as usize);
+            let sb = sp.plan.shard_of(g.dst[i] as usize);
+            expect[sa] += 1;
+            if sb != sa {
+                expect[sb] += 1;
+            }
+        }
+        for (s, f) in sp.files.iter().enumerate() {
+            let bytes = fs::metadata(f).unwrap().len();
+            assert_eq!(
+                bytes,
+                expect[s] * super::super::codec::EDGE_RECORD_BYTES as u64,
+                "{}: spill bytes must be exactly records x record_size",
+                f.display()
+            );
+        }
+        // and the binary records decode back to the graph's exact edges
+        let mut total = 0usize;
+        for f in &sp.files {
+            total += spill_records(f);
+        }
+        assert_eq!(total as u64, expect.iter().sum::<u64>());
     }
 
     #[test]

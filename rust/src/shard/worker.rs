@@ -51,11 +51,12 @@ pub(crate) fn write_z_rows(
     Ok(())
 }
 
+use super::codec;
 use super::local::embed_shard;
 use crate::gee::options::GeeOptions;
 use crate::gee::weights::weight_values;
 use crate::gee::workspace::EmbedWorkspace;
-use crate::graph::io::{for_each_edge, read_f64_vec, read_label_vec};
+use crate::graph::io::{read_f64_vec, read_label_vec};
 
 /// One worker invocation: embed rows `[row0, row1)` of an `n × k`
 /// embedding from a shard's incident-edge file plus the shared globals.
@@ -78,20 +79,33 @@ pub struct WorkerArgs {
 
 /// Run the worker: everything global is *re-derived from the shipped
 /// files* with the same formulas the in-process engine uses, and every
-/// f64 crossed the process boundary in shortest-roundtrip text — so the
-/// rows written here are bitwise-identical to the in-process shard pass.
+/// f64 crossed the process boundary either as a raw little-endian bit
+/// pattern (`.bin` files, the [`codec`] record formats the current
+/// driver ships) or as shortest-roundtrip text (the legacy formats, so
+/// old drivers can still spawn this binary) — both exact, so the rows
+/// written here are bitwise-identical to the in-process shard pass.
 pub fn run_worker(args: &WorkerArgs) -> Result<()> {
     if args.row0 > args.row1 || args.row1 > args.n {
         bail!("bad row range [{}, {}) for n={}", args.row0, args.row1, args.n);
     }
-    let labels = read_label_vec(&args.labels)?;
+    let labels = if codec::is_binary_path(&args.labels) {
+        codec::read_i32s_file(&args.labels)?
+    } else {
+        read_label_vec(&args.labels)?
+    };
     if labels.len() != args.n {
         bail!("labels file has {} entries, expected n={}", labels.len(), args.n);
     }
-    if let Some(&l) = labels.iter().find(|&&l| l >= args.k as i32) {
-        bail!("label {l} >= k {}", args.k);
+    // one label contract for both file formats (the text reader already
+    // rejects < -1 at parse time; re-checking is harmless)
+    for &l in &labels {
+        codec::validate_label(l, args.k)?;
     }
-    let deg = read_f64_vec(&args.deg)?;
+    let deg = if codec::is_binary_path(&args.deg) {
+        codec::read_f64s_file(&args.deg)?
+    } else {
+        read_f64_vec(&args.deg)?
+    };
     if deg.len() != args.n {
         bail!("degree file has {} entries, expected n={}", deg.len(), args.n);
     }
@@ -100,7 +114,7 @@ pub fn run_worker(args: &WorkerArgs) -> Result<()> {
     let scale = super::plan::scale_from_deg(&deg, &args.options);
 
     let (mut src, mut dst, mut w) = (Vec::new(), Vec::new(), Vec::new());
-    for_each_edge(&args.edges, |a, b, ww| {
+    codec::for_each_edge_auto(&args.edges, |a, b, ww| {
         src.push(a);
         dst.push(b);
         w.push(ww);
@@ -127,13 +141,19 @@ pub fn run_worker(args: &WorkerArgs) -> Result<()> {
         &mut out,
     );
 
-    let mut f = BufWriter::new(
-        File::create(&args.out)
-            .with_context(|| format!("create {}", args.out.display()))?,
-    );
-    write_z_rows(&mut f, &out, rows, args.k)
-        .with_context(|| format!("write {}", args.out.display()))?;
-    f.flush()?;
+    if codec::is_binary_path(&args.out) {
+        // raw f64 records, rows*k of them — the parent validates the
+        // exact byte count, so a torn write cannot pass silently
+        codec::write_f64s_file(&args.out, &out)?;
+    } else {
+        let mut f = BufWriter::new(
+            File::create(&args.out)
+                .with_context(|| format!("create {}", args.out.display()))?,
+        );
+        write_z_rows(&mut f, &out, rows, args.k)
+            .with_context(|| format!("write {}", args.out.display()))?;
+        f.flush()?;
+    }
     Ok(())
 }
 
@@ -219,6 +239,81 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn worker_binary_exchange_is_bitwise() {
+        // the current driver's exchange: binary spill edges, binary
+        // labels/degree files, binary Z output — raw bit patterns end to
+        // end, asserted bitwise against the in-core engine
+        let dir = std::env::temp_dir()
+            .join(format!("gee_worker_bin_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let mut rng = Rng::new(543);
+        let (n, k) = (60, 3);
+        let mut g = Graph::new(n, k);
+        for l in g.labels.iter_mut() {
+            *l = if rng.f64() < 0.1 { -1 } else { rng.below(k) as i32 };
+        }
+        for c in 0..k {
+            g.labels[c] = c as i32;
+        }
+        for _ in 0..300 {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 2, keep: true, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+        let labels_path = dir.join("g.labels.bin");
+        crate::shard::codec::write_i32s_file(&labels_path, &g.labels).unwrap();
+        let deg_path = dir.join("g.deg.bin");
+        crate::shard::codec::write_f64s_file(&deg_path, &sp.plan.deg).unwrap();
+
+        let opts = crate::gee::GeeOptions::ALL;
+        let whole = SparseGee::fast().embed(&g, &opts);
+        for s in 0..sp.plan.shards() {
+            let (v0, v1) = sp.plan.shard_range(s);
+            let out_path = dir.join(format!("z_{s}.bin"));
+            run_worker(&WorkerArgs {
+                edges: sp.files[s].clone(),
+                labels: labels_path.clone(),
+                deg: deg_path.clone(),
+                n,
+                k,
+                row0: v0,
+                row1: v1,
+                options: opts,
+                out: out_path.clone(),
+            })
+            .unwrap();
+            let got = crate::shard::codec::read_f64s_file(&out_path).unwrap();
+            assert_eq!(
+                got,
+                whole.data[v0 * k..v1 * k].to_vec(),
+                "binary worker shard {s} rows drifted"
+            );
+        }
+        // binary labels must obey the same sentinel contract as text
+        let bad = dir.join("bad.labels.bin");
+        let bad_labels = vec![-5i32; n];
+        crate::shard::codec::write_i32s_file(&bad, &bad_labels).unwrap();
+        let err = run_worker(&WorkerArgs {
+            edges: sp.files[0].clone(),
+            labels: bad,
+            deg: deg_path.clone(),
+            n,
+            k,
+            row0: 0,
+            row1: 1,
+            options: opts,
+            out: dir.join("z_bad.bin"),
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("< -1"), "{err}");
     }
 
     #[test]

@@ -17,7 +17,7 @@ use std::path::PathBuf;
 use super::json::Json;
 
 /// One measurement row.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct BenchRecord {
     /// Which bench produced it ("thread_sweep", "ablation", ...).
     pub bench: String,
@@ -35,6 +35,12 @@ pub struct BenchRecord {
     pub median_ns: u128,
     /// Speedup vs that bench's stated baseline (1.0 = the baseline row).
     pub speedup: f64,
+    /// Wire bytes one run sent / received (distributed lanes; 0 for
+    /// in-process configurations). This is how the shard fleet's
+    /// text→binary and GLOBALS-cache wins live in the perf trajectory
+    /// instead of anecdote.
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
 }
 
 impl BenchRecord {
@@ -42,7 +48,8 @@ impl BenchRecord {
         // engine/bench labels are ASCII identifiers; escape minimally
         format!(
             "{{\"bench\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"m\": {}, \
-             \"k\": {}, \"threads\": {}, \"median_ns\": {}, \"speedup\": {:.4}}}",
+             \"k\": {}, \"threads\": {}, \"median_ns\": {}, \"speedup\": {:.4}, \
+             \"bytes_sent\": {}, \"bytes_received\": {}}}",
             escape(&self.bench),
             escape(&self.engine),
             self.n,
@@ -50,7 +57,9 @@ impl BenchRecord {
             self.k,
             self.threads,
             self.median_ns,
-            self.speedup
+            self.speedup,
+            self.bytes_sent,
+            self.bytes_received
         )
     }
 }
@@ -114,6 +123,8 @@ fn render_record(rec: &Json) -> String {
         threads: u("threads") as usize,
         median_ns: u("median_ns") as u128,
         speedup: u("speedup"),
+        bytes_sent: u("bytes_sent") as u64,
+        bytes_received: u("bytes_received") as u64,
     }
     .to_json()
 }
@@ -154,6 +165,8 @@ mod tests {
             threads: 4,
             median_ns: 123_456_789,
             speedup: 2.5,
+            bytes_sent: 42,
+            bytes_received: 7,
         };
         let doc = Json::parse(&r.to_json()).unwrap();
         assert_eq!(doc.get("engine").unwrap().as_str(), Some("sparse-par"));
@@ -161,6 +174,8 @@ mod tests {
         assert_eq!(doc.get("threads").unwrap().as_usize(), Some(4));
         assert_eq!(doc.get("median_ns").unwrap().as_usize(), Some(123_456_789));
         assert!((doc.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
+        assert_eq!(doc.get("bytes_sent").unwrap().as_usize(), Some(42));
+        assert_eq!(doc.get("bytes_received").unwrap().as_usize(), Some(7));
     }
 
     #[test]
@@ -175,6 +190,7 @@ mod tests {
                 threads: 1,
                 median_ns: 10,
                 speedup: 1.0,
+                ..BenchRecord::default()
             },
             BenchRecord {
                 bench: "a".into(),
@@ -185,6 +201,7 @@ mod tests {
                 threads: 2,
                 median_ns: 5,
                 speedup: 2.0,
+                ..BenchRecord::default()
             },
         ];
         let mut out = String::from("{\"records\": [\n");

@@ -12,6 +12,9 @@
 //! * the distributed fleet: real `gee shard-serve` daemons on localhost
 //!   (≥2), bitwise vs `sparse-fast` on the SBM + Chung-Lu parity grid,
 //!   surviving a daemon killed mid-run with its shards requeued;
+//! * wire negotiation: a mixed fleet (binary-v2 daemon + `--text-only`
+//!   legacy daemon) stays bitwise, and `--text-wire` forces v1 end to
+//!   end;
 //! * the `shard-embed` CLI drives both the multi-process and the remote
 //!   path end to end.
 
@@ -45,8 +48,13 @@ impl Daemon {
     /// Spawn on an ephemeral port and parse the bound address from the
     /// daemon's announcement line.
     fn spawn() -> Daemon {
+        Daemon::spawn_with(&[])
+    }
+
+    fn spawn_with(extra: &[&str]) -> Daemon {
         let mut child = Command::new(env!("CARGO_BIN_EXE_gee"))
             .args(["shard-serve", "--listen", "127.0.0.1:0"])
+            .args(extra)
             .stdin(Stdio::null())
             .stdout(Stdio::piped())
             .stderr(Stdio::null())
@@ -86,6 +94,14 @@ fn tmpdir(tag: &str) -> PathBuf {
     let _ = std::fs::remove_dir_all(&d);
     std::fs::create_dir_all(&d).unwrap();
     d
+}
+
+/// Records in a binary spill file, from its exact byte length.
+fn spill_records(f: &std::path::Path) -> usize {
+    let bytes = std::fs::metadata(f).unwrap().len();
+    let rec = gee_sparse::shard::codec::EDGE_RECORD_BYTES as u64;
+    assert_eq!(bytes % rec, 0, "{}: spill must be whole records", f.display());
+    (bytes / rec) as usize
 }
 
 /// Self loops + unlabeled vertices, as in the engine-parity suite.
@@ -197,11 +213,7 @@ fn multiprocess_rolling_pool_handles_uneven_shards() {
         &SpillConfig { shards: 6, ..SpillConfig::new(&dir) },
     )
     .unwrap();
-    let sizes: Vec<usize> = sp
-        .files
-        .iter()
-        .map(|f| std::fs::read_to_string(f).unwrap().lines().count())
-        .collect();
+    let sizes: Vec<usize> = sp.files.iter().map(|f| spill_records(f)).collect();
     let heaviest = *sizes.iter().max().unwrap();
     let lightest = (*sizes.iter().min().unwrap()).max(1);
     assert!(
@@ -279,9 +291,9 @@ fn out_of_core_embeds_under_memory_budget() {
     .unwrap();
     assert!(sp.plan.shards() >= 5, "budget must raise the shard count");
     for f in &sp.files {
-        let lines = std::fs::read_to_string(f).unwrap().lines().count();
+        let records = spill_records(f);
         assert!(
-            lines < g.num_edges(),
+            records < g.num_edges(),
             "every resident slice must be smaller than the edge list"
         );
     }
@@ -340,6 +352,73 @@ fn remote_fleet_matches_sparse_fast_on_parity_grid() {
     }
     d1.kill();
     d2.kill();
+}
+
+#[test]
+fn mixed_fleet_with_real_legacy_daemon_negotiates_and_stays_bitwise() {
+    // one real v2 daemon + one real daemon serving only the legacy text
+    // protocol (`--text-only`): the driver's per-connection negotiation
+    // must fall back cleanly on the legacy endpoint while the v2
+    // endpoint runs binary — and the merged rows must stay bitwise
+    let v2 = Daemon::spawn();
+    let legacy = Daemon::spawn_with(&["--text-only"]);
+    let cfg = DispatchConfig::new(vec![v2.addr.clone(), legacy.addr.clone()]);
+
+    let mut g = generate_sbm(&SbmParams::paper(400), 93);
+    mutate(&mut g, 94);
+    let dir = tmpdir("fleet_mixed");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 6, ..SpillConfig::new(&dir) },
+    )
+    .unwrap();
+    for opts in [GeeOptions::NONE, GeeOptions::ALL] {
+        let fused = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(
+            z.data, fused.data,
+            "mixed v2/legacy fleet not bitwise at {opts:?}"
+        );
+    }
+    v2.kill();
+    legacy.kill();
+}
+
+#[test]
+fn shard_embed_cli_text_wire_flag_forces_v1() {
+    // --text-wire end to end against a real daemon: same rows, and the
+    // CLI reports the text lane so operators can see which wire ran
+    let d1 = Daemon::spawn();
+    let dir = tmpdir("cli_textwire");
+    let g = generate_sbm(&SbmParams::paper(200), 95);
+    let stem = dir.join("g");
+    write_graph(&stem, &g).unwrap();
+    let out = dir.join("z_text.tsv");
+    let status = Command::new(env!("CARGO_BIN_EXE_gee"))
+        .arg("shard-embed")
+        .arg("--input")
+        .arg(&stem)
+        .args(["--shards", "3", "--options", "ldc", "--text-wire"])
+        .args(["--workers", &d1.addr])
+        .arg("--spill-dir")
+        .arg(dir.join("spill"))
+        .arg("--out")
+        .arg(&out)
+        .output()
+        .expect("spawn gee shard-embed");
+    assert!(
+        status.status.success(),
+        "text-wire shard-embed failed:\nstdout: {}\nstderr: {}",
+        String::from_utf8_lossy(&status.stdout),
+        String::from_utf8_lossy(&status.stderr)
+    );
+    assert!(
+        String::from_utf8_lossy(&status.stdout).contains("text wire"),
+        "CLI must report the forced text wire"
+    );
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), g.n);
+    d1.kill();
 }
 
 #[test]
