@@ -1,0 +1,197 @@
+//! Bench: the serving data plane's client wire — v1 text vs v2 binary
+//! vs v2 binary pipelined, against an in-process loopback server.
+//!
+//! Three lanes embed the same weighted SBM graph over one connection
+//! each: `client-text` (lockstep v1 decimals), `client-binary`
+//! (lockstep v2 frames), and `client-binary-pipelined` (the whole burst
+//! in flight, replies collected out of order). Each row records req/s
+//! (median over reps) and the wire bytes one full burst moves, measured
+//! with the same [`ByteCounters`] the shard fleet uses. Two gates run
+//! before timing: every lane's Z must be bitwise-identical to the text
+//! lane's, and the binary wire must move strictly fewer bytes than
+//! text.
+//!
+//! Results are appended to `BENCH_gee.json` (see `util::benchlog`).
+//! `QUICK=1` (or the legacy `GEE_BENCH_QUICK`) trims sizes for CI smoke.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use gee_sparse::coordinator::server::TcpServer;
+use gee_sparse::coordinator::{
+    ClientConfig, ClientReply, EmbedClient, EmbedService, ServiceConfig,
+};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::shard::codec::ByteCounters;
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::rng::Rng;
+use gee_sparse::util::timing::{bench_runs, secs, Stats};
+
+const CODE: &str = "ldc";
+
+/// Real fleet graphs are weighted; an all-`1.0` generator graph would
+/// let the text lane print each weight as one character and make the
+/// byte comparison meaningless (same reasoning as shard_scale).
+fn reweight(g: &mut Graph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for w in g.w.iter_mut() {
+        *w = rng.f64() + 0.1;
+    }
+}
+
+fn connect(addr: std::net::SocketAddr, force_text: bool) -> EmbedClient {
+    connect_counted(addr, force_text, None)
+}
+
+fn connect_counted(
+    addr: std::net::SocketAddr,
+    force_text: bool,
+    counters: Option<Arc<ByteCounters>>,
+) -> EmbedClient {
+    let cfg = ClientConfig { force_text, counters, ..ClientConfig::default() };
+    let c = EmbedClient::connect(addr, &cfg).expect("connect");
+    assert_eq!(c.is_binary(), !force_text, "negotiation mismatch");
+    c
+}
+
+/// One pipelined burst: everything in flight, replies in completion
+/// order. The generous server quota below keeps BUSY out of the lane —
+/// this measures the wire, not admission.
+fn run_pipelined(
+    client: &mut EmbedClient,
+    requests: usize,
+    labels: &[i32],
+    edges: &[(u32, u32, f64)],
+    k: usize,
+) {
+    let mut pending = std::collections::HashSet::new();
+    for _ in 0..requests {
+        pending.insert(client.submit(CODE, labels, edges, k).expect("submit"));
+    }
+    for _ in 0..requests {
+        let (id, reply) = client.recv_any().expect("recv");
+        assert!(pending.remove(&id), "id {id} answered twice");
+        match reply {
+            ClientReply::Z(z) => {
+                std::hint::black_box(z.data.as_ptr());
+            }
+            other => panic!("id {id}: unexpected {other:?}"),
+        }
+    }
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let requests = if quick { 16 } else { 64 };
+    let n = if quick { 500 } else { 2_000 };
+    println!("== bench client_wire (reps={reps}, {requests} requests per burst) ==\n");
+
+    let mut g = generate_sbm(&SbmParams::paper(n), 7);
+    reweight(&mut g, 1_013);
+    let labels = g.labels.clone();
+    let edges: Vec<(u32, u32, f64)> =
+        (0..g.num_edges()).map(|i| (g.src[i], g.dst[i], g.w[i])).collect();
+    println!("-- SBM (weighted): n={} edges={} k={}", g.n, g.num_edges(), g.k);
+
+    // quota and queue sized so the pipelined burst is never refused
+    let svc = Arc::new(EmbedService::start(ServiceConfig {
+        tenant_tokens: 4 * requests,
+        queue_depth: 4 * requests,
+        ..ServiceConfig::default()
+    }));
+    let server = TcpServer::start("127.0.0.1:0", svc.clone()).expect("server");
+    let addr = server.addr();
+
+    // parity gate: both wires return the same bits
+    let z_text = connect(addr, true).embed(CODE, &labels, &edges, g.k).expect("text embed");
+    let z_bin = connect(addr, false).embed(CODE, &labels, &edges, g.k).expect("binary embed");
+    assert_eq!(z_text.data.len(), z_bin.data.len());
+    for (a, b) in z_text.data.iter().zip(&z_bin.data) {
+        assert_eq!(a.to_bits(), b.to_bits(), "wire lanes disagree");
+    }
+    println!("   binary Z bitwise vs text ✓");
+
+    // byte gate: one full burst per lane, counted outside the timing
+    // loops (deterministic per run)
+    let mut lane_bytes = [(0u64, 0u64); 2]; // [(sent, received)] for [text, binary]
+    for (i, force_text) in [true, false].into_iter().enumerate() {
+        let counters = Arc::new(ByteCounters::default());
+        let mut c = connect_counted(addr, force_text, Some(counters.clone()));
+        for _ in 0..requests {
+            std::hint::black_box(c.embed(CODE, &labels, &edges, g.k).expect("embed"));
+        }
+        lane_bytes[i] =
+            (counters.sent.load(Ordering::Relaxed), counters.received.load(Ordering::Relaxed));
+    }
+    let text_total = lane_bytes[0].0 + lane_bytes[0].1;
+    let bin_total = lane_bytes[1].0 + lane_bytes[1].1;
+    assert!(
+        bin_total < text_total,
+        "binary wire must move strictly fewer bytes than text ({bin_total} vs {text_total})"
+    );
+    println!(
+        "   binary wire moves {:.1}% of the text lane's bytes ✓",
+        100.0 * bin_total as f64 / text_total as f64
+    );
+
+    let mut records = Vec::new();
+    let mut results: Vec<(String, Stats, usize, (u64, u64))> = Vec::new();
+
+    let mut text_client = connect(addr, true);
+    let st = Stats::from_runs(&bench_runs(1, reps, || {
+        for _ in 0..requests {
+            std::hint::black_box(
+                text_client.embed(CODE, &labels, &edges, g.k).expect("text embed"),
+            );
+        }
+    }));
+    results.push(("client-text".into(), st, 1, lane_bytes[0]));
+
+    let mut bin_client = connect(addr, false);
+    let st = Stats::from_runs(&bench_runs(1, reps, || {
+        for _ in 0..requests {
+            std::hint::black_box(
+                bin_client.embed(CODE, &labels, &edges, g.k).expect("binary embed"),
+            );
+        }
+    }));
+    results.push(("client-binary".into(), st, 1, lane_bytes[1]));
+
+    let mut pipe_client = connect(addr, false);
+    let st = Stats::from_runs(&bench_runs(1, reps, || {
+        run_pipelined(&mut pipe_client, requests, &labels, &edges, g.k);
+    }));
+    // pipelined traffic is byte-identical to lockstep binary — same
+    // requests, same frames — so it reuses the binary lane's count
+    results.push(("client-binary-pipelined".into(), st, requests, lane_bytes[1]));
+
+    let base_ns = results[0].1.median.as_nanos();
+    println!("   {:>24} {:>12} {:>10} {:>9}", "lane", "burst (s)", "req/s", "speedup");
+    for (engine, st, depth, (sent, received)) in results {
+        let ns = st.median.as_nanos();
+        println!(
+            "   {:>24} {:>12} {:>10.0} {:>8.2}x",
+            engine,
+            secs(st.median),
+            requests as f64 / st.median.as_secs_f64().max(1e-9),
+            base_ns as f64 / ns.max(1) as f64
+        );
+        records.push(BenchRecord {
+            bench: "client_wire".into(),
+            engine,
+            n: g.n,
+            m: g.num_directed(),
+            k: g.k,
+            threads: depth,
+            median_ns: ns,
+            speedup: base_ns as f64 / (ns.max(1) as f64),
+            bytes_sent: sent,
+            bytes_received: received,
+        });
+    }
+
+    server.stop();
+    write_records("client_wire", &records);
+}

@@ -1,0 +1,256 @@
+//! Client for the embedding server — negotiates the v2 binary wire
+//! ([`super::wire`]) and falls back to the v1 text protocol when the
+//! server refuses the upgrade.
+//!
+//! Two usage shapes:
+//!
+//! * [`EmbedClient::embed`] — one lockstep round trip (both wires).
+//! * [`EmbedClient::submit`] + [`EmbedClient::recv_any`] — pipelining:
+//!   queue any number of requests, then collect replies in whatever
+//!   order the server finishes them, matched by request id (v2 only).
+//!
+//! All connection bytes flow through [`ByteCounters`], so benches can
+//! compare the two wires' traffic with the same instrument the shard
+//! fleet uses.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::server::MAX_WIRE_CELLS;
+use super::wire::{self, Reply, RequestHeader};
+use crate::gee::GeeOptions;
+use crate::shard::codec::{self, ByteCounters, CountingReader, CountingWriter, F64_RECORD_BYTES};
+use crate::sparse::Dense;
+
+/// Connection options for [`EmbedClient::connect`].
+#[derive(Debug, Default, Clone)]
+pub struct ClientConfig {
+    /// Tenant declared in `HELLO2` (quota bucket + metrics key). `None`
+    /// bills to `"default"`. Text connections cannot declare a tenant.
+    pub tenant: Option<String>,
+    /// Skip negotiation and speak v1 text — the escape hatch, and the
+    /// reference lane the parity test compares against.
+    pub force_text: bool,
+    /// Share a caller-owned byte counter (benches aggregate across
+    /// connections this way); a private one is created when `None`.
+    pub counters: Option<Arc<ByteCounters>>,
+}
+
+/// One pipelined reply from [`EmbedClient::recv_any`].
+#[derive(Debug)]
+pub enum ClientReply {
+    /// The embedding.
+    Z(Dense),
+    /// Admission refused the request; retry after roughly this long.
+    Busy { retry_ms: u64 },
+    /// This request failed server-side; the connection is still usable.
+    Err(String),
+}
+
+pub struct EmbedClient {
+    reader: BufReader<CountingReader<TcpStream>>,
+    writer: BufWriter<CountingWriter<TcpStream>>,
+    binary: bool,
+    next_id: u64,
+    scratch: Vec<u8>,
+}
+
+impl EmbedClient {
+    /// Connect and negotiate. Tries `HELLO2` first (unless
+    /// `force_text`); any refusal — a text-only server, a pre-v2 server
+    /// that doesn't know the verb, a closed socket — reconnects fresh as
+    /// v1 text rather than guessing at the old connection's state.
+    pub fn connect(addr: SocketAddr, cfg: &ClientConfig) -> Result<EmbedClient> {
+        let counters = cfg.counters.clone().unwrap_or_default();
+        if !cfg.force_text {
+            let (mut reader, mut writer) = open(addr, &counters)?;
+            writeln!(writer, "{}", wire::format_hello(cfg.tenant.as_deref()))?;
+            writer.flush()?;
+            let mut line = String::new();
+            if reader.read_line(&mut line)? > 0 && line.trim() == "HELLO2" {
+                return Ok(EmbedClient {
+                    reader,
+                    writer,
+                    binary: true,
+                    next_id: 1,
+                    scratch: Vec::new(),
+                });
+            }
+        }
+        let (reader, writer) = open(addr, &counters)?;
+        Ok(EmbedClient { reader, writer, binary: false, next_id: 1, scratch: Vec::new() })
+    }
+
+    /// True when the connection negotiated the v2 binary wire.
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// One embed round trip. On the binary wire a `BUSY` or `ERR id=`
+    /// reply becomes this call's error; pipelined callers who want to
+    /// retry use [`submit`](Self::submit)/[`recv_any`](Self::recv_any)
+    /// and see [`ClientReply::Busy`] instead.
+    pub fn embed(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+    ) -> Result<Dense> {
+        if !self.binary {
+            return self.embed_text(code, labels, edges, k);
+        }
+        let want = self.submit(code, labels, edges, k)?;
+        loop {
+            let (id, reply) = self.recv_any()?;
+            if id != want {
+                bail!("reply for unexpected id {id} (awaiting {want})");
+            }
+            match reply {
+                ClientReply::Z(z) => return Ok(z),
+                ClientReply::Busy { retry_ms } => {
+                    bail!("server busy (retry after {retry_ms}ms)")
+                }
+                ClientReply::Err(msg) => bail!("server error: {msg}"),
+            }
+        }
+    }
+
+    /// Queue one request on the binary wire and return its id. Replies
+    /// arrive via [`recv_any`](Self::recv_any), possibly out of order.
+    pub fn submit(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+    ) -> Result<u64> {
+        if !self.binary {
+            bail!("pipelining requires the binary wire (server negotiated text)");
+        }
+        let options = GeeOptions::from_code(code).context("bad options code")?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let h = RequestHeader { id, options, n: labels.len(), k };
+        writeln!(self.writer, "{}", wire::format_request_header(&h))?;
+        wire::write_request_body(&mut self.writer, labels, edges)?;
+        self.writer.flush()?;
+        Ok(id)
+    }
+
+    /// Block for the next reply on the binary wire, whichever request it
+    /// answers. Fails on connection-fatal errors (bare `ERR`, EOF, a
+    /// malformed frame) — per-request failures come back as
+    /// [`ClientReply::Err`]/[`ClientReply::Busy`] with their id.
+    pub fn recv_any(&mut self) -> Result<(u64, ClientReply)> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("server closed the connection");
+            }
+            match wire::parse_reply(&line)? {
+                Reply::Ok { id, rows, cols } => {
+                    let z = self.read_z_frame(rows, cols)?;
+                    return Ok((id, ClientReply::Z(z)));
+                }
+                Reply::Busy { id, retry_ms } => return Ok((id, ClientReply::Busy { retry_ms })),
+                Reply::Err { id, msg } => return Ok((id, ClientReply::Err(msg))),
+                Reply::Pong => continue,
+                Reply::Fatal(msg) => bail!("server error: {msg}"),
+            }
+        }
+    }
+
+    fn read_z_frame(&mut self, rows: usize, cols: usize) -> Result<Dense> {
+        let cells = rows
+            .checked_mul(cols)
+            .filter(|&c| c <= MAX_WIRE_CELLS)
+            .with_context(|| format!("Z frame {rows}x{cols} exceeds the wire limit"))?;
+        let len = codec::read_frame_len(&mut self.reader, "Z frame")?;
+        codec::check_frame_len(
+            len,
+            F64_RECORD_BYTES,
+            (MAX_WIRE_CELLS * F64_RECORD_BYTES) as u64,
+            Some((cells * F64_RECORD_BYTES) as u64),
+            "Z frame",
+        )?;
+        let mut z = Dense::zeros(rows, cols);
+        let data = &mut z.data;
+        let mut pos = 0usize;
+        codec::read_frame_body(&mut self.reader, len, &mut self.scratch, "Z frame", |chunk| {
+            for rec in chunk.chunks_exact(F64_RECORD_BYTES) {
+                // raw bits over the wire: bitwise-exact by construction
+                data[pos] = f64::from_le_bytes(rec.try_into().unwrap());
+                pos += 1;
+            }
+            Ok(())
+        })?;
+        Ok(z)
+    }
+
+    /// The v1 text exchange, kept verb-for-verb compatible with pre-v2
+    /// servers. Weights and returned floats are shortest-roundtrip
+    /// decimals, so the recovered Z matches the binary wire bit for bit.
+    fn embed_text(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+    ) -> Result<Dense> {
+        writeln!(self.writer, "EMBED code={code} k={k} n={}", labels.len())?;
+        let labs: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
+        writeln!(self.writer, "LABELS {}", labs.join(" "))?;
+        for chunk in edges.chunks(512) {
+            let toks: Vec<String> =
+                chunk.iter().map(|(a, b, w)| format!("{a}:{b}:{w}")).collect();
+            writeln!(self.writer, "EDGES {}", toks.join(" "))?;
+        }
+        writeln!(self.writer, "END")?;
+        self.writer.flush()?;
+
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let t = line.trim();
+        if let Some(rest) = t.strip_prefix("BUSY ") {
+            let retry_ms: u64 = rest.trim().parse().unwrap_or(wire::RETRY_AFTER_MS);
+            bail!("server busy (retry after {retry_ms}ms)");
+        }
+        let dims = t.strip_prefix("OK ").with_context(|| format!("server error: {t}"))?;
+        let mut it = dims.split_whitespace();
+        let nrows: usize = it.next().context("bad OK line")?.parse()?;
+        let ncols: usize = it.next().context("bad OK line")?.parse()?;
+        let mut z = Dense::zeros(nrows, ncols);
+        for r in 0..nrows {
+            line.clear();
+            self.reader.read_line(&mut line)?;
+            let row = z.row_mut(r);
+            for (i, tok) in line.split_whitespace().enumerate() {
+                if i >= ncols {
+                    bail!("row {r} has more than {ncols} values");
+                }
+                row[i] = tok.parse()?;
+            }
+        }
+        line.clear();
+        self.reader.read_line(&mut line)?;
+        if line.trim() != "DONE" {
+            bail!("expected DONE, got '{}'", line.trim());
+        }
+        Ok(z)
+    }
+}
+
+fn open(
+    addr: SocketAddr,
+    counters: &Arc<ByteCounters>,
+) -> Result<(BufReader<CountingReader<TcpStream>>, BufWriter<CountingWriter<TcpStream>>)> {
+    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(CountingReader::new(stream.try_clone()?, counters.clone()));
+    let writer = BufWriter::new(CountingWriter::new(stream, counters.clone()));
+    Ok((reader, writer))
+}

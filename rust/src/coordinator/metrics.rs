@@ -2,8 +2,12 @@
 //! with p50/p95/p99 extraction — what `serve_embeddings` reports and
 //! EXPERIMENTS.md records.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::shard::codec::ByteCounters;
 
 /// Number of log-spaced latency buckets: bucket i covers
 /// [2^i, 2^(i+1)) microseconds. The top bucket (i = 39) additionally
@@ -37,6 +41,23 @@ pub struct Metrics {
     pub remote_bytes: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
+    /// Per-tenant admission counters, created lazily on first touch
+    /// (tenants are declared on the wire in HELLO; v1 text clients land
+    /// in the "default" bucket).
+    tenants: Mutex<HashMap<String, Arc<TenantCounters>>>,
+}
+
+/// Admission-control counters for one tenant. `bytes` is shared with the
+/// connection's [`CountingReader`](crate::shard::codec::CountingReader)/
+/// [`CountingWriter`](crate::shard::codec::CountingWriter) wrappers, so
+/// wire traffic is attributed per tenant without any per-write locking.
+#[derive(Debug, Default)]
+pub struct TenantCounters {
+    pub admitted: AtomicU64,
+    pub rejected_quota: AtomicU64,
+    pub rejected_backpressure: AtomicU64,
+    /// Cloned into each connection's counting stream wrappers.
+    pub bytes: Arc<ByteCounters>,
 }
 
 impl Default for Metrics {
@@ -54,6 +75,7 @@ impl Default for Metrics {
             remote_bytes: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
+            tenants: Mutex::new(HashMap::new()),
         }
     }
 }
@@ -135,7 +157,39 @@ impl Metrics {
         if remote_bytes > 0 {
             s.push_str(&format!(" remote_bytes={remote_bytes}"));
         }
+        for (name, tc) in self.tenant_snapshot() {
+            s.push_str(&format!(
+                "\n  tenant {name}: admitted={} rejected_quota={} rejected_backpressure={} bytes_in={} bytes_out={}",
+                tc.admitted.load(Ordering::Relaxed),
+                tc.rejected_quota.load(Ordering::Relaxed),
+                tc.rejected_backpressure.load(Ordering::Relaxed),
+                tc.bytes.received.load(Ordering::Relaxed),
+                tc.bytes.sent.load(Ordering::Relaxed),
+            ));
+        }
         s
+    }
+
+    /// This tenant's counters, created on first touch. The returned Arc
+    /// is stable for the tenant's lifetime, so connections hold it
+    /// directly instead of re-locking the map per request.
+    pub fn tenant(&self, name: &str) -> Arc<TenantCounters> {
+        let mut map = self.tenants.lock().unwrap();
+        if let Some(tc) = map.get(name) {
+            return tc.clone();
+        }
+        let tc = Arc::new(TenantCounters::default());
+        map.insert(name.to_string(), tc.clone());
+        tc
+    }
+
+    /// Snapshot of all tenants seen so far, sorted by name (stable output
+    /// for logs and tests).
+    pub fn tenant_snapshot(&self) -> Vec<(String, Arc<TenantCounters>)> {
+        let map = self.tenants.lock().unwrap();
+        let mut rows: Vec<_> = map.iter().map(|(k, v)| (k.clone(), v.clone())).collect();
+        rows.sort_by(|a, b| a.0.cmp(&b.0));
+        rows
     }
 
     pub fn avg_batch_fill(&self) -> f64 {
@@ -205,6 +259,29 @@ mod tests {
         assert!(!m.summary().contains("remote_bytes"));
         m.remote_bytes.fetch_add(12_345, Ordering::Relaxed);
         assert!(m.summary().contains("remote_bytes=12345"), "{}", m.summary());
+    }
+
+    #[test]
+    fn tenant_counters_lazy_stable_and_in_summary() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("tenant "));
+        let acme = m.tenant("acme");
+        acme.admitted.fetch_add(3, Ordering::Relaxed);
+        acme.rejected_quota.fetch_add(1, Ordering::Relaxed);
+        acme.bytes.received.fetch_add(100, Ordering::Relaxed);
+        acme.bytes.sent.fetch_add(250, Ordering::Relaxed);
+        // second lookup returns the same counters, not a fresh bucket
+        assert_eq!(m.tenant("acme").admitted.load(Ordering::Relaxed), 3);
+        m.tenant("zeta").rejected_backpressure.fetch_add(2, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(
+            s.contains("tenant acme: admitted=3 rejected_quota=1 rejected_backpressure=0 bytes_in=100 bytes_out=250"),
+            "{s}"
+        );
+        assert!(s.contains("tenant zeta:"), "{s}");
+        // snapshot is name-sorted
+        let names: Vec<String> = m.tenant_snapshot().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["acme".to_string(), "zeta".to_string()]);
     }
 
     #[test]

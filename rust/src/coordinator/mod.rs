@@ -6,15 +6,21 @@
 //! * [`service`] — worker lanes (native pool / dedicated PJRT thread),
 //!   request lifecycle, graceful shutdown
 //! * [`streaming`] — incremental GEE under edge/vertex/label updates
-//! * [`metrics`] — counters + latency histogram (p50/p95/p99)
+//! * [`metrics`] — counters + latency histogram (p50/p95/p99), per-tenant
+//!   admission/byte counters
+//! * [`server`] / [`wire`] / [`client`] — TCP front-end: v1 text lockstep
+//!   and the v2 binary multiplexed wire with per-tenant admission
 
 pub mod batcher;
+pub mod client;
 pub mod metrics;
 pub mod queue;
 pub mod server;
 pub mod service;
 pub mod streaming;
+pub mod wire;
 
+pub use client::{ClientConfig, ClientReply, EmbedClient};
 pub use server::TcpServer;
-pub use service::{EmbedRequest, EmbedResponse, EmbedService, Lane, ServiceConfig};
+pub use service::{EmbedRequest, EmbedResponse, EmbedService, Lane, ReplySink, ServiceConfig};
 pub use streaming::StreamingGee;

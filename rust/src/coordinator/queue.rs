@@ -3,8 +3,8 @@
 //! (The offline crate set has no tokio/crossbeam-channel; Mutex+Condvar
 //! is entirely adequate for graph-sized work items.)
 
-use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 /// Why a push was refused.
@@ -26,6 +26,11 @@ pub struct BoundedQueue<T> {
 
 struct Inner<T> {
     items: VecDeque<T>,
+    /// Slots promised to admitted-but-not-yet-pushed requests. The wire
+    /// admission path reserves a slot from the request *header* alone so
+    /// backpressure fires before any edge buffer is allocated; the slot
+    /// is consumed by `push_reserved` or returned by `cancel_reservation`.
+    reserved: usize,
     closed: bool,
 }
 
@@ -33,7 +38,7 @@ impl<T> BoundedQueue<T> {
     pub fn new(capacity: usize) -> Self {
         assert!(capacity > 0);
         BoundedQueue {
-            inner: Mutex::new(Inner { items: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner { items: VecDeque::new(), reserved: 0, closed: false }),
             not_empty: Condvar::new(),
             not_full: Condvar::new(),
             capacity,
@@ -46,7 +51,7 @@ impl<T> BoundedQueue<T> {
         if g.closed {
             return Err((item, PushError::Closed));
         }
-        if g.items.len() >= self.capacity {
+        if g.items.len() + g.reserved >= self.capacity {
             return Err((item, PushError::Full));
         }
         g.items.push_back(item);
@@ -62,7 +67,7 @@ impl<T> BoundedQueue<T> {
             if g.closed {
                 return Err((item, PushError::Closed));
             }
-            if g.items.len() < self.capacity {
+            if g.items.len() + g.reserved < self.capacity {
                 g.items.push_back(item);
                 drop(g);
                 self.not_empty.notify_one();
@@ -130,6 +135,148 @@ impl<T> BoundedQueue<T> {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Reserve one queue slot without an item. Returns `Err(Full)` when
+    /// queued items plus outstanding reservations already fill the queue,
+    /// `Err(Closed)` once closed. A successful reservation must be
+    /// resolved by exactly one of [`push_reserved`](Self::push_reserved)
+    /// or [`cancel_reservation`](Self::cancel_reservation).
+    pub fn try_reserve(&self) -> Result<(), PushError> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed);
+        }
+        if g.items.len() + g.reserved >= self.capacity {
+            return Err(PushError::Full);
+        }
+        g.reserved += 1;
+        Ok(())
+    }
+
+    /// Consume a previously acquired reservation by pushing its item.
+    /// Never reports `Full` (the slot was promised); errors only when
+    /// the queue closed between reserve and push, in which case the
+    /// reservation is released.
+    pub fn push_reserved(&self, item: T) -> Result<(), (T, PushError)> {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.reserved > 0, "push_reserved without a reservation");
+        g.reserved = g.reserved.saturating_sub(1);
+        if g.closed {
+            drop(g);
+            self.not_full.notify_one();
+            return Err((item, PushError::Closed));
+        }
+        g.items.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Return an unused reservation's slot to the queue.
+    pub fn cancel_reservation(&self) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.reserved > 0, "cancel_reservation without a reservation");
+        g.reserved = g.reserved.saturating_sub(1);
+        drop(g);
+        self.not_full.notify_one();
+    }
+}
+
+/// Why a tenant's request was refused admission.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The tenant is at its in-flight token quota.
+    OverQuota,
+    /// The service queue (items + reservations) is full.
+    Backpressure,
+    /// The service is shutting down.
+    Closed,
+}
+
+/// Per-tenant in-flight token quotas. Each admitted request holds one
+/// token from HELLO-declared tenant's bucket until its reply is sent;
+/// a tenant at quota is refused from the request *header* alone, before
+/// any edge frame is read or allocated. Tenants are created lazily on
+/// first admission; all buckets share `default_tokens` unless an
+/// explicit override is set.
+pub struct TenantGovernor {
+    default_tokens: usize,
+    state: Mutex<TenantState>,
+}
+
+#[derive(Default)]
+struct TenantState {
+    limits: HashMap<String, usize>,
+    in_flight: HashMap<String, usize>,
+}
+
+/// RAII token held by one admitted request; dropping it returns the
+/// token to the tenant's bucket.
+pub struct TenantPermit {
+    governor: Arc<TenantGovernor>,
+    tenant: String,
+}
+
+impl TenantGovernor {
+    pub fn new(default_tokens: usize) -> Arc<Self> {
+        assert!(default_tokens > 0);
+        Arc::new(TenantGovernor { default_tokens, state: Mutex::new(TenantState::default()) })
+    }
+
+    /// Override one tenant's token budget (0 bans the tenant outright).
+    pub fn set_limit(&self, tenant: &str, tokens: usize) {
+        self.state.lock().unwrap().limits.insert(tenant.to_string(), tokens);
+    }
+
+    /// Tokens the named tenant may hold concurrently.
+    pub fn limit(&self, tenant: &str) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .limits
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.default_tokens)
+    }
+
+    /// Admit one request for `tenant`, or refuse with `OverQuota`.
+    pub fn try_admit(self: &Arc<Self>, tenant: &str) -> Result<TenantPermit, AdmitError> {
+        let mut st = self.state.lock().unwrap();
+        let limit = st.limits.get(tenant).copied().unwrap_or(self.default_tokens);
+        let used = st.in_flight.get(tenant).copied().unwrap_or(0);
+        if used >= limit {
+            return Err(AdmitError::OverQuota);
+        }
+        *st.in_flight.entry(tenant.to_string()).or_insert(0) += 1;
+        drop(st);
+        Ok(TenantPermit { governor: self.clone(), tenant: tenant.to_string() })
+    }
+
+    /// Tokens currently held by `tenant` (observability / tests).
+    pub fn in_flight(&self, tenant: &str) -> usize {
+        self.state
+            .lock()
+            .unwrap()
+            .in_flight
+            .get(tenant)
+            .copied()
+            .unwrap_or(0)
+    }
+}
+
+impl TenantPermit {
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+}
+
+impl Drop for TenantPermit {
+    fn drop(&mut self) {
+        let mut st = self.governor.state.lock().unwrap();
+        if let Some(used) = st.in_flight.get_mut(&self.tenant) {
+            *used = used.saturating_sub(1);
+        }
     }
 }
 
@@ -287,5 +434,83 @@ mod tests {
             (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
         expect.sort_unstable();
         assert_eq!(all, expect);
+    }
+
+    #[test]
+    fn reservations_count_against_capacity() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        q.try_reserve().unwrap();
+        q.try_push(1).unwrap();
+        // 1 item + 1 reservation = capacity: both lanes must refuse
+        assert_eq!(q.try_push(2).unwrap_err().1, PushError::Full);
+        assert_eq!(q.try_reserve(), Err(PushError::Full));
+        // consuming the reservation fills the promised slot
+        q.push_reserved(3).unwrap();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(3));
+    }
+
+    #[test]
+    fn cancel_reservation_releases_slot() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.try_reserve().unwrap();
+        assert_eq!(q.try_push(1).unwrap_err().1, PushError::Full);
+        q.cancel_reservation();
+        q.try_push(1).unwrap();
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn cancel_reservation_wakes_blocked_push() {
+        let q: Arc<BoundedQueue<u32>> = Arc::new(BoundedQueue::new(1));
+        q.try_reserve().unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(9).is_ok());
+        std::thread::sleep(Duration::from_millis(20));
+        q.cancel_reservation();
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(9));
+    }
+
+    #[test]
+    fn push_reserved_after_close_reports_closed() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(1);
+        q.try_reserve().unwrap();
+        q.close();
+        assert_eq!(q.push_reserved(1).unwrap_err().1, PushError::Closed);
+        // the reservation was released — no slot leaks
+        assert_eq!(q.len(), 0);
+    }
+
+    #[test]
+    fn governor_enforces_default_quota() {
+        let gov = TenantGovernor::new(2);
+        let a = gov.try_admit("acme").unwrap();
+        let _b = gov.try_admit("acme").unwrap();
+        match gov.try_admit("acme") {
+            Err(AdmitError::OverQuota) => {}
+            Err(other) => panic!("expected OverQuota, got {other:?}"),
+            Ok(_) => panic!("expected OverQuota, got a permit"),
+        }
+        // another tenant has its own bucket
+        let _c = gov.try_admit("umbrella").unwrap();
+        assert_eq!(gov.in_flight("acme"), 2);
+        drop(a);
+        assert_eq!(gov.in_flight("acme"), 1);
+        let _d = gov.try_admit("acme").unwrap();
+    }
+
+    #[test]
+    fn governor_per_tenant_override_and_ban() {
+        let gov = TenantGovernor::new(8);
+        gov.set_limit("noisy", 1);
+        gov.set_limit("banned", 0);
+        assert_eq!(gov.limit("noisy"), 1);
+        assert_eq!(gov.limit("anyone-else"), 8);
+        let held = gov.try_admit("noisy").unwrap();
+        assert!(gov.try_admit("noisy").is_err());
+        assert!(gov.try_admit("banned").is_err());
+        assert_eq!(held.tenant(), "noisy");
     }
 }

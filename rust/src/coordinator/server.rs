@@ -1,10 +1,11 @@
 //! TCP front-end for the embedding service — the network-facing launcher
-//! (std::net; the offline crate set has no HTTP stack, so the protocol is
-//! a minimal line-oriented text exchange that any language can speak).
+//! (std::net; the offline crate set has no HTTP stack).
 //!
-//! ## Protocol
+//! Two protocols share the port, negotiated per connection:
 //!
-//! One request per connection (or pipelined sequentially):
+//! ## v1 (text, lockstep)
+//!
+//! One request at a time:
 //!
 //! ```text
 //! -> EMBED code=ldc k=3 n=5
@@ -17,21 +18,40 @@
 //! <- DONE
 //! ```
 //!
-//! or `ERR <message>` on any failure. `PING` → `PONG` for health checks.
-//! Requests are forwarded to an [`EmbedService`], so batching,
-//! backpressure and metrics apply unchanged.
+//! or `ERR <message>` on failure, or `BUSY <retry-after-ms>` when
+//! admission (tenant quota / queue backpressure) refuses the request.
+//! Rows are shortest-roundtrip decimals, so a text client re-parsing
+//! them recovers the exact bits. `PING` → `PONG` for health checks.
+//!
+//! ## v2 (binary frames, multiplexed)
+//!
+//! A client that opens with `HELLO2 [tenant=<name>]` (echoed back)
+//! switches the connection to the [`super::wire`] protocol: binary
+//! request/response bodies and request-id pipelining. The connection
+//! splits into this reader thread (validate header → admit → decode
+//! frames → submit) and one writer thread streaming replies out of
+//! order as jobs complete. Z frames are serialized straight out of the
+//! response buffer the worker's pooled workspace produced — no decimal
+//! formatting, no intermediate copy.
+//!
+//! Either way requests are forwarded to an [`EmbedService`], so
+//! batching, backpressure and metrics apply unchanged; per-connection
+//! byte counts land on the declared tenant's counters.
 
+use std::collections::HashSet;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
-use super::service::{EmbedRequest, EmbedService};
+use super::service::{EmbedRequest, EmbedResponse, EmbedService, ReplySink};
+use super::wire;
 use crate::gee::GeeOptions;
 use crate::graph::Graph;
+use crate::shard::codec::{self, ByteCounters, CountingReader, CountingWriter};
 
 /// A running TCP server bound to `addr()`.
 pub struct TcpServer {
@@ -42,9 +62,20 @@ pub struct TcpServer {
 
 impl TcpServer {
     /// Bind (use port 0 for an ephemeral port) and start serving requests
-    /// against `service`. One thread per connection; connections are
-    /// short-lived embed exchanges so this is plenty.
+    /// against `service`. One reader thread per connection (a v2
+    /// connection adds one writer thread); pipelining happens *within* a
+    /// connection, so this stays plenty.
     pub fn start(bind: &str, service: Arc<EmbedService>) -> Result<TcpServer> {
+        Self::start_with(bind, service, false)
+    }
+
+    /// [`start`](Self::start) with the v2 upgrade refused (`text_only`) —
+    /// the ops escape hatch mirroring the shard fleet's `--text-only`.
+    pub fn start_text_only(bind: &str, service: Arc<EmbedService>) -> Result<TcpServer> {
+        Self::start_with(bind, service, true)
+    }
+
+    fn start_with(bind: &str, service: Arc<EmbedService>, text_only: bool) -> Result<TcpServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -56,7 +87,7 @@ impl TcpServer {
                     Ok((stream, _)) => {
                         let svc = service.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &svc);
+                            let _ = handle_connection(stream, &svc, text_only);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -82,36 +113,93 @@ impl TcpServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, service: &EmbedService) -> Result<()> {
+type ConnReader = BufReader<CountingReader<TcpStream>>;
+type ConnWriter = BufWriter<CountingWriter<TcpStream>>;
+
+fn handle_connection(stream: TcpStream, service: &EmbedService, text_only: bool) -> Result<()> {
     stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
+    // every byte of the connection flows through these counters; they
+    // are attributed to the declared tenant when the connection ends
+    // (the tenant is only known after HELLO)
+    let conn_bytes = Arc::new(ByteCounters::default());
+    let mut reader =
+        BufReader::new(CountingReader::new(stream.try_clone()?, conn_bytes.clone()));
+    let writer = BufWriter::new(CountingWriter::new(stream, conn_bytes.clone()));
+    let mut tenant = wire::DEFAULT_TENANT.to_string();
+    let result = serve_connection(&mut reader, writer, service, &mut tenant, text_only);
+    let tc = service.metrics().tenant(&tenant);
+    tc.bytes
+        .sent
+        .fetch_add(conn_bytes.sent.load(Ordering::Relaxed), Ordering::Relaxed);
+    tc.bytes
+        .received
+        .fetch_add(conn_bytes.received.load(Ordering::Relaxed), Ordering::Relaxed);
+    result
+}
+
+/// The v1 lockstep loop; a `HELLO2` greeting hands the connection to
+/// [`serve_v2`].
+fn serve_connection(
+    reader: &mut ConnReader,
+    mut writer: ConnWriter,
+    service: &EmbedService,
+    tenant: &mut String,
+    text_only: bool,
+) -> Result<()> {
+    let mut line = String::new();
     loop {
-        let mut line = String::new();
+        line.clear();
         if reader.read_line(&mut line)? == 0 {
             return Ok(()); // client closed
         }
-        let line = line.trim();
-        if line.is_empty() {
+        let t = line.trim();
+        if t.is_empty() {
             continue;
         }
-        if line == "PING" {
+        if t == "PING" {
             writeln!(writer, "PONG")?;
             writer.flush()?;
             continue;
         }
-        if line == "QUIT" {
+        if t == "QUIT" {
             return Ok(());
         }
-        match parse_and_embed(line, &mut reader, service) {
-            Ok(z) => {
+        if t.starts_with("HELLO2") {
+            if text_only {
+                // refuse the upgrade the way a legacy server would: the
+                // client's fallback path reconnects as text
+                writeln!(writer, "{}", wire::format_fatal("binary wire disabled (text-only)"))?;
+                writer.flush()?;
+                continue;
+            }
+            match wire::parse_hello(t) {
+                Ok(name) => {
+                    *tenant = name;
+                    writeln!(writer, "HELLO2")?;
+                    writer.flush()?;
+                    return serve_v2(reader, writer, service, tenant);
+                }
+                Err(e) => {
+                    writeln!(writer, "{}", wire::format_fatal(&format!("{e:#}")))?;
+                    writer.flush()?;
+                    return Err(e);
+                }
+            }
+        }
+        match parse_and_embed(t, reader, service, tenant) {
+            Ok(V1Outcome::Z(z)) => {
                 writeln!(writer, "OK {} {}", z.nrows, z.ncols)?;
                 for r in 0..z.nrows {
-                    let row: Vec<String> =
-                        z.row(r).iter().map(|v| format!("{v:.9}")).collect();
+                    // shortest-roundtrip decimals: a client that re-parses
+                    // recovers the exact bits, so the text lane stays
+                    // bitwise-comparable to the binary lane
+                    let row: Vec<String> = z.row(r).iter().map(|v| format!("{v}")).collect();
                     writeln!(writer, "{}", row.join(" "))?;
                 }
                 writeln!(writer, "DONE")?;
+            }
+            Ok(V1Outcome::Busy(retry_ms)) => {
+                writeln!(writer, "BUSY {retry_ms}")?;
             }
             Err(e) => {
                 writeln!(writer, "ERR {e:#}")?;
@@ -131,14 +219,15 @@ pub const MAX_WIRE_VERTICES: usize = 1 << 26;
 pub const MAX_WIRE_CLASSES: usize = 1 << 20;
 /// Cap on `n * k` — the embedding the service must materialize per reply.
 pub const MAX_WIRE_CELLS: usize = 1 << 28;
-/// Cap on stored edges accepted per request, enforced as tokens stream
-/// in (edge storage grows with data actually received, so this bounds
-/// the worst case at data-sent, not at header-claimed).
+/// Cap on stored edges accepted per request. On the text lane it is
+/// enforced as tokens stream in; on the binary lane it caps the edge
+/// frame's length prefix — either way the bound applies at data-sent,
+/// not at header-claimed.
 pub const MAX_WIRE_EDGES: usize = 1 << 31;
 
-/// Reject an `EMBED` header whose dimensions exceed the admission
+/// Reject a request header whose dimensions exceed the admission
 /// bounds. Called before `Graph::new`, so the error is O(1).
-fn validate_wire_dims(n: usize, k: usize) -> Result<()> {
+pub(crate) fn validate_wire_dims(n: usize, k: usize) -> Result<()> {
     if n == 0 || k == 0 {
         bail!("EMBED requires n=<vertices> k=<classes>");
     }
@@ -154,11 +243,32 @@ fn validate_wire_dims(n: usize, k: usize) -> Result<()> {
     }
 }
 
+enum V1Outcome {
+    Z(crate::sparse::Dense),
+    Busy(u64),
+}
+
+/// Discard a refused v1 request's body lines up to `END`, so the
+/// connection stays usable for a retry.
+fn drain_v1_body(reader: &mut impl BufRead) -> Result<()> {
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed mid-request");
+        }
+        if line.trim() == "END" {
+            return Ok(());
+        }
+    }
+}
+
 fn parse_and_embed(
     header: &str,
     reader: &mut impl BufRead,
     service: &EmbedService,
-) -> Result<crate::sparse::Dense> {
+    tenant: &str,
+) -> Result<V1Outcome> {
     let mut parts = header.split_whitespace();
     if parts.next() != Some("EMBED") {
         bail!("expected EMBED, got '{header}'");
@@ -178,6 +288,17 @@ fn parse_and_embed(
     let options = GeeOptions::from_code(&code).context("bad options code")?;
     validate_wire_dims(n, k)?;
 
+    // admission from the header alone — nothing proportional to the
+    // request exists yet; a refused request's body is drained, not built
+    let admission = match service.try_admit(tenant) {
+        Ok(a) => a,
+        Err(super::queue::AdmitError::Closed) => bail!("service is shutting down"),
+        Err(_) => {
+            drain_v1_body(reader)?;
+            return Ok(V1Outcome::Busy(wire::RETRY_AFTER_MS));
+        }
+    };
+
     let mut g = Graph::new(n, k);
     loop {
         let mut line = String::new();
@@ -196,16 +317,15 @@ fn parse_and_embed(
             if labels.len() != n {
                 bail!("LABELS has {} entries, expected {n}", labels.len());
             }
+            for &l in &labels {
+                codec::validate_label(l, k)?;
+            }
             g.labels = labels;
         } else if let Some(rest) = line.strip_prefix("EDGES") {
             for tok in rest.split_whitespace() {
-                let mut it = tok.split(':');
-                let a: u32 = it.next().context("edge src")?.parse().context("bad src")?;
-                let b: u32 = it.next().context("edge dst")?.parse().context("bad dst")?;
-                let w: f64 = match it.next() {
-                    Some(s) => s.parse().context("bad weight")?,
-                    None => 1.0,
-                };
+                // one grammar for files, fleet wire, and client wire
+                let (a, b, w) = crate::graph::io::parse_edge_fields(tok)?
+                    .context("empty edge token")?;
                 if a as usize >= n || b as usize >= n {
                     bail!("edge {a}:{b} out of range (n={n})");
                 }
@@ -220,14 +340,205 @@ fn parse_and_embed(
     }
     g.validate().map_err(|e| anyhow::anyhow!(e))?;
 
-    let rx = service
-        .submit(EmbedRequest { graph: g, options })
+    let (reply, rx) = ReplySink::channel();
+    service
+        .submit_admitted(admission, EmbedRequest { graph: g, options }, reply)
         .map_err(|e| anyhow::anyhow!("service rejected request: {e:?}"))?;
     let resp = rx.recv().context("service dropped reply")??;
-    Ok(resp.z)
+    Ok(V1Outcome::Z(resp.z))
 }
 
-/// Minimal client for tests / examples: one embed round trip.
+// ------------------------------------------------------------------ wire v2
+
+/// One message from the reader (or a job callback) to the connection's
+/// writer thread.
+enum Out {
+    /// A finished job's reply, tagged with its request id.
+    Reply { id: u64, result: Result<EmbedResponse> },
+    /// Admission refused this request.
+    Busy { id: u64, retry_ms: u64 },
+    /// This request failed before it reached the service.
+    Failed { id: u64, msg: String },
+    Pong,
+    /// Protocol violation: announce and hang up.
+    Fatal(String),
+}
+
+/// Send the fatal line through the writer and return the error that
+/// ends the reader loop.
+fn fatal(tx: &mpsc::Sender<Out>, msg: String) -> anyhow::Error {
+    let _ = tx.send(Out::Fatal(msg.clone()));
+    anyhow::anyhow!(msg)
+}
+
+/// The v2 connection: this thread keeps reading (validate → admit →
+/// decode → submit); a spawned writer thread owns the socket's write
+/// half and streams replies in completion order.
+fn serve_v2(
+    reader: &mut ConnReader,
+    writer: ConnWriter,
+    service: &EmbedService,
+    tenant: &str,
+) -> Result<()> {
+    let (tx, rx) = mpsc::channel::<Out>();
+    let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let inflight_w = inflight.clone();
+    let writer_thread = std::thread::spawn(move || writer_loop(writer, rx, &inflight_w));
+    let read_result = v2_read_loop(reader, service, tenant, &tx, &inflight);
+    // drop our sender; the writer drains replies for jobs still in the
+    // service (their callbacks hold clones) and exits when the last one
+    // resolves — queued work is answered even after the client stops
+    // sending
+    drop(tx);
+    let write_result = writer_thread
+        .join()
+        .map_err(|_| anyhow::anyhow!("v2 writer thread panicked"))?;
+    read_result.and(write_result)
+}
+
+fn writer_loop(
+    mut writer: ConnWriter,
+    rx: mpsc::Receiver<Out>,
+    inflight: &Mutex<HashSet<u64>>,
+) -> Result<()> {
+    while let Ok(out) = rx.recv() {
+        match out {
+            Out::Reply { id, result } => {
+                inflight.lock().unwrap().remove(&id);
+                match result {
+                    Ok(resp) => {
+                        writeln!(writer, "{}", wire::format_ok(id, resp.z.nrows, resp.z.ncols))?;
+                        // straight from the response buffer (the pooled
+                        // workspace's Z hand-off) through the counting
+                        // writer — raw bits, no intermediate copy
+                        codec::write_frame_f64s(&mut writer, &resp.z.data)?;
+                    }
+                    Err(e) => {
+                        writeln!(writer, "{}", wire::format_err(id, &format!("{e:#}")))?;
+                    }
+                }
+                writer.flush()?;
+            }
+            Out::Busy { id, retry_ms } => {
+                inflight.lock().unwrap().remove(&id);
+                writeln!(writer, "{}", wire::format_busy(id, retry_ms))?;
+                writer.flush()?;
+            }
+            Out::Failed { id, msg } => {
+                inflight.lock().unwrap().remove(&id);
+                writeln!(writer, "{}", wire::format_err(id, &msg))?;
+                writer.flush()?;
+            }
+            Out::Pong => {
+                writeln!(writer, "PONG")?;
+                writer.flush()?;
+            }
+            Out::Fatal(msg) => {
+                writeln!(writer, "{}", wire::format_fatal(&msg))?;
+                writer.flush()?;
+                bail!("connection-fatal: {msg}");
+            }
+        }
+    }
+    writer.flush()?;
+    Ok(())
+}
+
+fn v2_read_loop(
+    reader: &mut ConnReader,
+    service: &EmbedService,
+    tenant: &str,
+    tx: &mpsc::Sender<Out>,
+    inflight: &Mutex<HashSet<u64>>,
+) -> Result<()> {
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if t == "PING" {
+            let _ = tx.send(Out::Pong);
+            continue;
+        }
+        if t == "QUIT" {
+            return Ok(());
+        }
+        if !t.starts_with("EMBED2") {
+            // a v1 EMBED (or anything else) after v2 negotiation has no
+            // framing we can trust — ERR-then-close
+            return Err(fatal(tx, format!("expected EMBED2 after v2 negotiation, got '{t}'")));
+        }
+        let h = match wire::parse_request_header(t) {
+            Ok(h) => h,
+            // an unparseable header means we cannot know whether body
+            // frames follow: connection-fatal
+            Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+        };
+        if !inflight.lock().unwrap().insert(h.id) {
+            return Err(fatal(tx, format!("duplicate in-flight request id {}", h.id)));
+        }
+        if let Err(e) = validate_wire_dims(h.n, h.k) {
+            // dims refused, but the two body frames still follow and the
+            // codec caps bound the drain — request-scoped error
+            if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
+                return Err(fatal(tx, format!("{de:#}")));
+            }
+            let _ = tx.send(Out::Failed { id: h.id, msg: format!("{e:#}") });
+            continue;
+        }
+        match service.try_admit(tenant) {
+            Ok(admission) => {
+                let mut g = Graph::new(h.n, h.k);
+                if let Err(e) = wire::read_request_body_into(reader, &h, &mut g, &mut scratch) {
+                    // mid-frame failure: the stream has no resync point
+                    return Err(fatal(tx, format!("{e:#}")));
+                }
+                if let Err(e) = g.validate() {
+                    let _ = tx.send(Out::Failed { id: h.id, msg: e });
+                    continue; // dropping the admission returns its slot
+                }
+                let txc = tx.clone();
+                let id = h.id;
+                let sink = ReplySink::callback(move |result| {
+                    let _ = txc.send(Out::Reply { id, result });
+                });
+                if service
+                    .submit_admitted(admission, EmbedRequest { graph: g, options: h.options }, sink)
+                    .is_err()
+                {
+                    let _ = tx.send(Out::Failed {
+                        id: h.id,
+                        msg: "service is shutting down".into(),
+                    });
+                }
+            }
+            Err(super::queue::AdmitError::Closed) => {
+                if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
+                    return Err(fatal(tx, format!("{de:#}")));
+                }
+                let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
+            }
+            Err(_) => {
+                // over quota / backpressure: drain within the codec caps,
+                // never allocate the request
+                if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
+                    return Err(fatal(tx, format!("{de:#}")));
+                }
+                let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
+            }
+        }
+    }
+}
+
+/// Minimal client for tests / examples: one embed round trip, preferring
+/// the binary wire (see [`super::client::EmbedClient`] for the
+/// pipelined / tenant-aware API).
 pub fn client_embed(
     addr: SocketAddr,
     code: &str,
@@ -235,41 +546,8 @@ pub fn client_embed(
     edges: &[(u32, u32, f64)],
     k: usize,
 ) -> Result<crate::sparse::Dense> {
-    let stream = TcpStream::connect(addr)?;
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    writeln!(writer, "EMBED code={code} k={k} n={}", labels.len())?;
-    let labels_s: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
-    writeln!(writer, "LABELS {}", labels_s.join(" "))?;
-    let edges_s: Vec<String> =
-        edges.iter().map(|(a, b, w)| format!("{a}:{b}:{w}")).collect();
-    writeln!(writer, "EDGES {}", edges_s.join(" "))?;
-    writeln!(writer, "END")?;
-    writer.flush()?;
-
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
-    let line = line.trim();
-    let Some(rest) = line.strip_prefix("OK ") else {
-        bail!("server said: {line}");
-    };
-    let mut it = rest.split_whitespace();
-    let nrows: usize = it.next().context("rows")?.parse()?;
-    let ncols: usize = it.next().context("cols")?.parse()?;
-    let mut z = crate::sparse::Dense::zeros(nrows, ncols);
-    for r in 0..nrows {
-        let mut row = String::new();
-        reader.read_line(&mut row)?;
-        for (c, tok) in row.split_whitespace().enumerate() {
-            *z.get_mut(r, c) = tok.parse()?;
-        }
-    }
-    let mut done = String::new();
-    reader.read_line(&mut done)?;
-    if done.trim() != "DONE" {
-        bail!("missing DONE trailer");
-    }
-    Ok(z)
+    let mut client = super::client::EmbedClient::connect(addr, &Default::default())?;
+    client.embed(code, labels, edges, k)
 }
 
 #[cfg(test)]
@@ -404,6 +682,55 @@ mod tests {
                 "rejection of '{header}' was not prompt"
             );
         }
+        server.stop();
+    }
+
+    #[test]
+    fn text_only_server_refuses_hello2_but_serves_text() {
+        let svc = Arc::new(EmbedService::start(ServiceConfig::default()));
+        let server = TcpServer::start_text_only("127.0.0.1:0", svc.clone()).unwrap();
+        // client_embed negotiates, gets refused, falls back to text
+        let z = client_embed(server.addr(), "---", &[0, 1, 1], &[(0, 1, 1.0), (1, 2, 2.0)], 2)
+            .unwrap();
+        assert_eq!(z.nrows, 3);
+        server.stop();
+    }
+
+    #[test]
+    fn v1_busy_replaces_silent_blocking() {
+        // tenant quota 1 and a held token: the header alone must earn
+        // BUSY, with the body drained so the connection stays usable
+        let svc = Arc::new(EmbedService::start(ServiceConfig {
+            tenant_tokens: 1,
+            ..ServiceConfig::default()
+        }));
+        let server = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+        let _held = svc.try_admit(wire::DEFAULT_TENANT).unwrap();
+
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        writeln!(writer, "EMBED code=--- k=2 n=2").unwrap();
+        writeln!(writer, "LABELS 0 1").unwrap();
+        writeln!(writer, "EDGES 0:1:1.0").unwrap();
+        writeln!(writer, "END").unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let rest = line.trim().strip_prefix("BUSY ").expect(&line);
+        let retry_ms: u64 = rest.parse().unwrap();
+        assert!(retry_ms > 0);
+
+        // release the token: the same connection can retry successfully
+        drop(_held);
+        writeln!(writer, "EMBED code=--- k=2 n=2").unwrap();
+        writeln!(writer, "LABELS 0 1").unwrap();
+        writeln!(writer, "EDGES 0:1:1.0").unwrap();
+        writeln!(writer, "END").unwrap();
+        writer.flush().unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK"), "{line}");
         server.stop();
     }
 }

@@ -27,7 +27,7 @@ use super::batcher::{
     build_union_into, plan_batches, split_member, BatchCapacity, PackedBatch, UnionPool,
 };
 use super::metrics::Metrics;
-use super::queue::{BoundedQueue, PushError};
+use super::queue::{AdmitError, BoundedQueue, PushError, TenantGovernor, TenantPermit};
 use crate::gee::workspace::WorkspacePool;
 use crate::gee::{Engine, GeeOptions};
 use crate::graph::Graph;
@@ -94,6 +94,12 @@ pub struct ServiceConfig {
     /// Numerics are identical either way; only bytes moved differ
     /// (compare `Metrics::remote_bytes` across the two settings).
     pub shard_wire_text: bool,
+    /// Per-tenant in-flight token budget for wire admission
+    /// ([`EmbedService::try_admit`]). Each admitted request holds one of
+    /// its tenant's tokens until the reply is sent; a tenant at quota
+    /// gets `BUSY` from the request header alone. v1 text clients share
+    /// the "default" tenant bucket.
+    pub tenant_tokens: usize,
 }
 
 impl Default for ServiceConfig {
@@ -111,6 +117,7 @@ impl Default for ServiceConfig {
             shard_count: 0,
             shard_remote_workers: Vec::new(),
             shard_wire_text: false,
+            tenant_tokens: 64,
         }
     }
 }
@@ -134,10 +141,53 @@ pub struct EmbedResponse {
     pub batch_size: usize,
 }
 
+/// Where a job's reply goes. The blocking `submit` API hands back an
+/// mpsc receiver (one reply per channel); the multiplexed wire instead
+/// registers a callback that forwards the reply — tagged with its
+/// request id — to the connection's writer thread, so many in-flight
+/// requests share one socket without a thread parked per request.
+#[derive(Clone)]
+pub enum ReplySink {
+    Channel(mpsc::Sender<Result<EmbedResponse>>),
+    Callback(Arc<dyn Fn(Result<EmbedResponse>) + Send + Sync>),
+}
+
+impl ReplySink {
+    /// A sink/receiver pair for one-shot request/response callers.
+    pub fn channel() -> (ReplySink, mpsc::Receiver<Result<EmbedResponse>>) {
+        let (tx, rx) = mpsc::channel();
+        (ReplySink::Channel(tx), rx)
+    }
+
+    /// A sink that invokes `f` on the worker thread when the reply is
+    /// ready. `f` must be cheap and non-blocking (typically an mpsc send
+    /// to a writer thread).
+    pub fn callback<F>(f: F) -> ReplySink
+    where
+        F: Fn(Result<EmbedResponse>) + Send + Sync + 'static,
+    {
+        ReplySink::Callback(Arc::new(f))
+    }
+
+    fn send(&self, r: Result<EmbedResponse>) {
+        match self {
+            // receiver may have hung up; dropping the reply is correct
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplySink::Callback(f) => f(r),
+        }
+    }
+}
+
 struct Job {
     req: EmbedRequest,
     submitted: Instant,
-    reply: mpsc::Sender<Result<EmbedResponse>>,
+    reply: ReplySink,
+    /// Tenant quota token held until the job (and thus its reply) is
+    /// done; `None` for the legacy in-process submit APIs. Never read —
+    /// it exists for its Drop.
+    _permit: Option<TenantPermit>,
 }
 
 /// Handle to a running service.
@@ -152,7 +202,29 @@ pub struct EmbedService {
     /// (ROADMAP "pool build_union"): workers hold one for their lifetime
     /// so steady-state batch packing reuses union-graph capacity.
     unions: Arc<UnionPool>,
+    /// Per-tenant token quotas for the wire admission path.
+    governor: Arc<TenantGovernor>,
     handles: Vec<JoinHandle<()>>,
+}
+
+/// A granted admission: one reserved queue slot plus (for wire callers)
+/// one tenant token. Dropping it unconsumed returns the slot; passing it
+/// to [`EmbedService::submit_admitted`] converts it into a queued job.
+/// Holding an `Admission` performs no allocation proportional to the
+/// request body — that is the point: it is acquired from the request
+/// *header*, before any edge buffer exists.
+pub struct Admission {
+    queue: Arc<BoundedQueue<Job>>,
+    permit: Option<TenantPermit>,
+    consumed: bool,
+}
+
+impl Drop for Admission {
+    fn drop(&mut self) {
+        if !self.consumed {
+            self.queue.cancel_reservation();
+        }
+    }
 }
 
 impl EmbedService {
@@ -162,6 +234,7 @@ impl EmbedService {
         let metrics = Arc::new(Metrics::new());
         let pool = WorkspacePool::new();
         let unions = UnionPool::new();
+        let governor = TenantGovernor::new(cfg.tenant_tokens.max(1));
         let mut handles = Vec::new();
 
         match &cfg.lane {
@@ -202,7 +275,7 @@ impl EmbedService {
                 }
             }
         }
-        EmbedService { queue, metrics, pool, unions, handles }
+        EmbedService { queue, metrics, pool, unions, governor, handles }
     }
 
     /// Submit with backpressure: `Err` means the queue is full/closed and
@@ -211,8 +284,8 @@ impl EmbedService {
         &self,
         req: EmbedRequest,
     ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
-        let (tx, rx) = mpsc::channel();
-        let job = Job { req, submitted: Instant::now(), reply: tx };
+        let (reply, rx) = ReplySink::channel();
+        let job = Job { req, submitted: Instant::now(), reply, _permit: None };
         match self.queue.try_push(job) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -230,8 +303,8 @@ impl EmbedService {
         &self,
         req: EmbedRequest,
     ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
-        let (tx, rx) = mpsc::channel();
-        let job = Job { req, submitted: Instant::now(), reply: tx };
+        let (reply, rx) = ReplySink::channel();
+        let job = Job { req, submitted: Instant::now(), reply, _permit: None };
         match self.queue.push(job) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -242,6 +315,68 @@ impl EmbedService {
                 Err(e)
             }
         }
+    }
+
+    /// Wire-path admission from the request *header* alone: take one of
+    /// `tenant`'s quota tokens and reserve one queue slot, before any
+    /// request body is read or allocated. Rejections are counted against
+    /// the tenant ([`super::metrics::TenantCounters`]) and the global
+    /// `rejected` gauge; the caller turns them into `BUSY` on the wire.
+    pub fn try_admit(&self, tenant: &str) -> Result<Admission, AdmitError> {
+        let tc = self.metrics.tenant(tenant);
+        let permit = match self.governor.try_admit(tenant) {
+            Ok(p) => p,
+            Err(e) => {
+                tc.rejected_quota.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
+        };
+        match self.queue.try_reserve() {
+            Ok(()) => {
+                tc.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Admission { queue: self.queue.clone(), permit: Some(permit), consumed: false })
+            }
+            Err(PushError::Full) => {
+                tc.rejected_backpressure.fetch_add(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(AdmitError::Backpressure)
+            }
+            Err(PushError::Closed) => Err(AdmitError::Closed),
+        }
+    }
+
+    /// Queue a request under a previously granted [`Admission`]. Cannot
+    /// hit backpressure (the slot was reserved); fails only if the
+    /// service shut down in between.
+    pub fn submit_admitted(
+        &self,
+        mut admission: Admission,
+        req: EmbedRequest,
+        reply: ReplySink,
+    ) -> Result<(), PushError> {
+        admission.consumed = true;
+        let job = Job {
+            req,
+            submitted: Instant::now(),
+            reply,
+            _permit: admission.permit.take(),
+        };
+        match self.queue.push_reserved(job) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err((_, e)) => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Per-tenant token quotas (set per-tenant overrides here).
+    pub fn governor(&self) -> &Arc<TenantGovernor> {
+        &self.governor
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -469,14 +604,12 @@ fn finish(job: &Job, z: Dense, via: &'static str, batch_size: usize, metrics: &M
     metrics.vertices.fetch_add(job.req.graph.n as u64, Ordering::Relaxed);
     metrics.edges.fetch_add(job.req.graph.num_directed() as u64, Ordering::Relaxed);
     metrics.observe_latency(latency);
-    let _ = job
-        .reply
-        .send(Ok(EmbedResponse { z, latency, via, batch_size }));
+    job.reply.send(Ok(EmbedResponse { z, latency, via, batch_size }));
 }
 
 fn fail(job: &Job, msg: String, metrics: &Metrics) {
     metrics.failed.fetch_add(1, Ordering::Relaxed);
-    let _ = job.reply.send(Err(anyhow::anyhow!(msg)));
+    job.reply.send(Err(anyhow::anyhow!(msg)));
 }
 
 fn native_worker(
@@ -864,5 +997,84 @@ mod tests {
             assert!(rx.recv().unwrap().is_ok());
         }
         assert_eq!(m.completed.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn admitted_requests_complete_and_release_tokens() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            tenant_tokens: 1,
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(500, 30, 80, 3);
+        let adm = svc.try_admit("acme").unwrap();
+        // one token: a second concurrent admission must be refused
+        match svc.try_admit("acme") {
+            Err(AdmitError::OverQuota) => {}
+            other => panic!("expected OverQuota, got {:?}", other.err()),
+        }
+        let (reply, rx) = ReplySink::channel();
+        svc.submit_admitted(adm, EmbedRequest { graph: g.clone(), options: GeeOptions::NONE }, reply)
+            .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        let expect = Engine::SparseFast.embed(&g, &GeeOptions::NONE).unwrap();
+        assert_eq!(resp.z.data, expect.data);
+        // the token comes back when the worker drops the job (just after
+        // the reply) — poll briefly rather than race it
+        let adm2 = loop {
+            match svc.try_admit("acme") {
+                Ok(a) => break a,
+                Err(AdmitError::OverQuota) => std::thread::sleep(Duration::from_millis(1)),
+                Err(e) => panic!("unexpected {e:?}"),
+            }
+        };
+        drop(adm2);
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        let tenants = m.tenant_snapshot();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].0, "acme");
+        assert!(tenants[0].1.admitted.load(Ordering::Relaxed) >= 2);
+        assert!(tenants[0].1.rejected_quota.load(Ordering::Relaxed) >= 1);
+    }
+
+    #[test]
+    fn dropped_admission_returns_its_queue_slot() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            queue_depth: 1,
+            ..ServiceConfig::default()
+        });
+        let adm = svc.try_admit("t").unwrap();
+        // the reservation occupies the only slot
+        match svc.try_admit("t") {
+            Err(AdmitError::Backpressure) => {}
+            other => panic!("expected Backpressure, got {:?}", other.err()),
+        }
+        drop(adm);
+        let adm2 = svc.try_admit("t").unwrap();
+        drop(adm2);
+        let m = svc.shutdown();
+        assert_eq!(
+            m.tenant("t").rejected_backpressure.load(Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn callback_sink_delivers_reply() {
+        let svc = EmbedService::start(ServiceConfig::default());
+        let g = random_graph(501, 25, 60, 2);
+        let (tx, rx) = mpsc::channel();
+        let adm = svc.try_admit("cb").unwrap();
+        let sink = ReplySink::callback(move |r| {
+            let _ = tx.send(r.map(|resp| resp.z));
+        });
+        svc.submit_admitted(adm, EmbedRequest { graph: g.clone(), options: GeeOptions::ALL }, sink)
+            .unwrap();
+        let z = rx.recv().unwrap().unwrap();
+        let expect = Engine::SparseFast.embed(&g, &GeeOptions::ALL).unwrap();
+        assert_eq!(z.data, expect.data);
+        svc.shutdown();
     }
 }

@@ -1,0 +1,419 @@
+//! Client wire protocol v2 — the grammar shared by the server's
+//! reader/writer threads, [`super::client::EmbedClient`], and the
+//! hostile-input tests.
+//!
+//! Verb lines stay text (debuggable with netcat); request/response
+//! bodies are [`crate::shard::codec`] binary frames, so f64 transport is
+//! bitwise by construction:
+//!
+//! ```text
+//! -> HELLO2 tenant=acme          (once per connection; server echoes HELLO2)
+//! -> EMBED2 id=7 code=ldc n=5 k=3
+//! -> <labels frame: n i32 records>
+//! -> <edges frame: 16-byte edge records>
+//! <- OK id=7 rows=5 cols=3
+//! <- <Z frame: rows*cols raw-bit f64 records>
+//! ```
+//!
+//! Requests are pipelined: any number of `EMBED2` exchanges may be in
+//! flight per connection and responses stream back **out of order**,
+//! matched by `id`. Per-request failures are `ERR id=<id> <msg>`;
+//! admission refusals are `BUSY id=<id> retry=<ms>` and arrive from the
+//! request *header* alone — the body frames are drained within the
+//! codec caps but never decoded into a graph. A protocol violation
+//! (unparseable verb, duplicate in-flight id, mid-frame EOF) is
+//! connection-fatal: a bare `ERR <msg>` (no id) and close, the
+//! ERR-then-close discipline of `shard::remote` — after a framing error
+//! there is no resync point.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use super::server::{MAX_WIRE_EDGES, MAX_WIRE_VERTICES};
+use crate::gee::GeeOptions;
+use crate::graph::Graph;
+use crate::shard::codec::{self, EDGE_RECORD_BYTES, LABEL_RECORD_BYTES};
+
+/// The tenant v1 text connections (and HELLO2 without `tenant=`) bill to.
+pub const DEFAULT_TENANT: &str = "default";
+
+/// What `BUSY` tells the client to wait before retrying.
+pub const RETRY_AFTER_MS: u64 = 50;
+
+/// Format the connection greeting.
+pub fn format_hello(tenant: Option<&str>) -> String {
+    match tenant {
+        Some(t) => format!("HELLO2 tenant={t}"),
+        None => "HELLO2".to_string(),
+    }
+}
+
+/// Parse a `HELLO2 [tenant=<name>]` line into the declared tenant.
+/// Tenant names are bare ASCII-ish tokens (no whitespace, no `=`); they
+/// key quota buckets and metrics, so junk is refused rather than binned.
+pub fn parse_hello(line: &str) -> Result<String> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("HELLO2") {
+        bail!("expected HELLO2, got '{line}'");
+    }
+    let mut tenant = DEFAULT_TENANT.to_string();
+    for p in parts {
+        let (key, val) = p.split_once('=').context("HELLO2 args are key=val")?;
+        match key {
+            "tenant" => {
+                if val.is_empty() || !val.chars().all(|c| c.is_ascii_graphic() && c != '=') {
+                    bail!("bad tenant name '{val}'");
+                }
+                tenant = val.to_string();
+            }
+            other => bail!("unknown HELLO2 arg '{other}'"),
+        }
+    }
+    Ok(tenant)
+}
+
+/// One `EMBED2` request header — everything admission needs, no body.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RequestHeader {
+    pub id: u64,
+    pub options: GeeOptions,
+    pub n: usize,
+    pub k: usize,
+}
+
+pub fn format_request_header(h: &RequestHeader) -> String {
+    format!("EMBED2 id={} code={} n={} k={}", h.id, h.options.code(), h.n, h.k)
+}
+
+/// Parse an `EMBED2` header. Dimension *bounds* are the server's call
+/// (`validate_wire_dims` in its read loop) — a parse failure here is
+/// connection-fatal because the body frames can no longer be trusted,
+/// while an out-of-bounds-but-parseable header earns a request-scoped
+/// `ERR id=` with the body drained.
+pub fn parse_request_header(line: &str) -> Result<RequestHeader> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("EMBED2") {
+        bail!("expected EMBED2, got '{line}'");
+    }
+    let mut id: Option<u64> = None;
+    let mut code = "---".to_string();
+    let mut n = 0usize;
+    let mut k = 0usize;
+    for p in parts {
+        let (key, val) = p.split_once('=').context("EMBED2 args are key=val")?;
+        match key {
+            "id" => id = Some(val.parse().context("bad id")?),
+            "code" => code = val.to_string(),
+            "n" => n = val.parse().context("bad n")?,
+            "k" => k = val.parse().context("bad k")?,
+            other => bail!("unknown EMBED2 arg '{other}'"),
+        }
+    }
+    let id = id.context("EMBED2 requires id=<u64>")?;
+    let options = GeeOptions::from_code(&code).context("bad options code")?;
+    Ok(RequestHeader { id, options, n, k })
+}
+
+/// Byte caps for the two request body frames, derived from the same
+/// admission constants the v1 header gate enforces.
+pub fn max_labels_frame_bytes() -> u64 {
+    (MAX_WIRE_VERTICES * LABEL_RECORD_BYTES) as u64
+}
+
+pub fn max_edges_frame_bytes() -> u64 {
+    MAX_WIRE_EDGES as u64 * EDGE_RECORD_BYTES as u64
+}
+
+/// Client side: the two body frames that follow an `EMBED2` header.
+pub fn write_request_body(
+    w: &mut impl Write,
+    labels: &[i32],
+    edges: &[(u32, u32, f64)],
+) -> std::io::Result<()> {
+    codec::write_frame_i32s(w, labels)?;
+    codec::write_frame_len(w, (edges.len() * EDGE_RECORD_BYTES) as u64)?;
+    for &(a, b, wt) in edges {
+        codec::write_edge_record(w, a, b, wt)?;
+    }
+    Ok(())
+}
+
+/// Reset `g` to an `n`-vertex, `k`-class graph with no edges, keeping
+/// every buffer's capacity — the decode target is reusable, so a warm
+/// graph costs the steady state nothing.
+pub fn reset_graph(g: &mut Graph, n: usize, k: usize) {
+    g.n = n;
+    g.k = k;
+    g.src.clear();
+    g.dst.clear();
+    g.w.clear();
+    g.labels.clear();
+}
+
+/// Server side: decode the two body frames into `g` (reset first). The
+/// labels frame must be exactly `n` records; every label is validated on
+/// ingest ([`codec::validate_label`]) and every edge endpoint
+/// range-checked, mirroring the v1 text lane's checks record for record.
+pub fn read_request_body_into(
+    r: &mut impl Read,
+    h: &RequestHeader,
+    g: &mut Graph,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    reset_graph(g, h.n, h.k);
+    let len = codec::read_frame_len(r, "labels frame")?;
+    codec::check_frame_len(
+        len,
+        LABEL_RECORD_BYTES,
+        max_labels_frame_bytes(),
+        Some((h.n * LABEL_RECORD_BYTES) as u64),
+        "labels frame",
+    )?;
+    let k = h.k;
+    let labels = &mut g.labels;
+    codec::read_frame_body(r, len, scratch, "labels frame", |chunk| {
+        for rec in chunk.chunks_exact(LABEL_RECORD_BYTES) {
+            let l = i32::from_le_bytes(rec.try_into().unwrap());
+            codec::validate_label(l, k)?;
+            labels.push(l);
+        }
+        Ok(())
+    })?;
+
+    let len = codec::read_frame_len(r, "edges frame")?;
+    codec::check_frame_len(len, EDGE_RECORD_BYTES, max_edges_frame_bytes(), None, "edges frame")?;
+    let n = h.n;
+    let (src, dst, w) = (&mut g.src, &mut g.dst, &mut g.w);
+    codec::read_frame_body(r, len, scratch, "edges frame", |chunk| {
+        for rec in chunk.chunks_exact(EDGE_RECORD_BYTES) {
+            let (a, b, wt) = codec::decode_edge(rec);
+            if a as usize >= n || b as usize >= n {
+                bail!("edge {a}:{b} out of range (n={n})");
+            }
+            src.push(a);
+            dst.push(b);
+            w.push(wt);
+        }
+        Ok(())
+    })?;
+    Ok(())
+}
+
+/// Reject path: consume a refused request's two body frames — length
+/// prefixes still validated against the codec caps, bodies read through
+/// the reused chunk scratch and discarded. Nothing proportional to the
+/// request is allocated, which is exactly what the counting-allocator
+/// test pins.
+pub fn drain_request_body(r: &mut impl Read, scratch: &mut Vec<u8>) -> Result<()> {
+    let len = codec::read_frame_len(r, "labels frame")?;
+    codec::check_frame_len(len, LABEL_RECORD_BYTES, max_labels_frame_bytes(), None, "labels frame")?;
+    codec::read_frame_body(r, len, scratch, "labels frame", |_| Ok(()))?;
+    let len = codec::read_frame_len(r, "edges frame")?;
+    codec::check_frame_len(len, EDGE_RECORD_BYTES, max_edges_frame_bytes(), None, "edges frame")?;
+    codec::read_frame_body(r, len, scratch, "edges frame", |_| Ok(()))
+}
+
+/// One server→client line of the v2 protocol.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// `OK id=<id> rows=<r> cols=<c>`, followed by the Z frame.
+    Ok { id: u64, rows: usize, cols: usize },
+    /// `ERR id=<id> <msg>` — this request failed; the connection lives.
+    Err { id: u64, msg: String },
+    /// `BUSY id=<id> retry=<ms>` — admission refused; retry later.
+    Busy { id: u64, retry_ms: u64 },
+    /// `PONG` (health check).
+    Pong,
+    /// `ERR <msg>` with no id — connection-fatal; the server closes.
+    Fatal(String),
+}
+
+pub fn format_ok(id: u64, rows: usize, cols: usize) -> String {
+    format!("OK id={id} rows={rows} cols={cols}")
+}
+
+pub fn format_err(id: u64, msg: &str) -> String {
+    format!("ERR id={id} {}", sanitize(msg))
+}
+
+pub fn format_busy(id: u64, retry_ms: u64) -> String {
+    format!("BUSY id={id} retry={retry_ms}")
+}
+
+pub fn format_fatal(msg: &str) -> String {
+    format!("ERR {}", sanitize(msg))
+}
+
+/// Error messages travel on a protocol line; embedded newlines would
+/// desynchronize the stream.
+fn sanitize(msg: &str) -> String {
+    msg.replace(['\n', '\r'], " ")
+}
+
+fn parse_kv<T: std::str::FromStr>(tok: Option<&str>, key: &str, line: &str) -> Result<T> {
+    let tok = tok.with_context(|| format!("reply '{line}' missing {key}=<v>"))?;
+    let (k, v) = tok.split_once('=').with_context(|| format!("reply '{line}': bad {key} token"))?;
+    if k != key {
+        bail!("reply '{line}': expected {key}=, got {k}=");
+    }
+    v.parse().map_err(|_| anyhow::anyhow!("reply '{line}': bad {key} value"))
+}
+
+/// Parse one server reply line.
+pub fn parse_reply(line: &str) -> Result<Reply> {
+    let line = line.trim();
+    if line == "PONG" {
+        return Ok(Reply::Pong);
+    }
+    if let Some(rest) = line.strip_prefix("OK ") {
+        let mut it = rest.split_whitespace();
+        let id = parse_kv(it.next(), "id", line)?;
+        let rows = parse_kv(it.next(), "rows", line)?;
+        let cols = parse_kv(it.next(), "cols", line)?;
+        return Ok(Reply::Ok { id, rows, cols });
+    }
+    if let Some(rest) = line.strip_prefix("BUSY ") {
+        let mut it = rest.split_whitespace();
+        let id = parse_kv(it.next(), "id", line)?;
+        let retry_ms = parse_kv(it.next(), "retry", line)?;
+        return Ok(Reply::Busy { id, retry_ms });
+    }
+    if let Some(rest) = line.strip_prefix("ERR ") {
+        if let Some(idpart) = rest.split_whitespace().next() {
+            if let Some(v) = idpart.strip_prefix("id=") {
+                if let Ok(id) = v.parse::<u64>() {
+                    let msg = rest[idpart.len()..].trim_start().to_string();
+                    return Ok(Reply::Err { id, msg });
+                }
+            }
+        }
+        return Ok(Reply::Fatal(rest.to_string()));
+    }
+    bail!("unparseable reply line '{line}'");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn hello_round_trip() {
+        assert_eq!(parse_hello(&format_hello(None)).unwrap(), DEFAULT_TENANT);
+        assert_eq!(parse_hello(&format_hello(Some("acme"))).unwrap(), "acme");
+        assert!(parse_hello("HELLO2 tenant=").is_err());
+        assert!(parse_hello("HELLO2 tenant=two words").is_err());
+        assert!(parse_hello("HELLO2 color=red").is_err());
+        assert!(parse_hello("HELLO").is_err());
+    }
+
+    #[test]
+    fn request_header_round_trip_and_bounds() {
+        let h = RequestHeader { id: 42, options: GeeOptions::ALL, n: 30, k: 3 };
+        let parsed = parse_request_header(&format_request_header(&h)).unwrap();
+        assert_eq!(parsed, h);
+        assert!(parse_request_header("EMBED2 code=ldc n=3 k=2").is_err(), "id is mandatory");
+        assert!(parse_request_header("EMBED2 id=1 code=ldc n=3 k=2 zap=1").is_err());
+        assert!(parse_request_header("EMBED code=ldc n=3 k=2").is_err());
+        // oversize dims still *parse* — the server's read loop bounds
+        // them, so it can drain the body and fail just that request
+        let huge = format!("EMBED2 id=1 code=--- n={} k=2", MAX_WIRE_VERTICES + 1);
+        assert_eq!(parse_request_header(&huge).unwrap().n, MAX_WIRE_VERTICES + 1);
+    }
+
+    #[test]
+    fn body_round_trip_into_warm_graph() {
+        let labels = vec![0, 1, -1, 2];
+        let edges = vec![(0u32, 1u32, 1.5f64), (2, 3, 0.25), (3, 3, 2.0)];
+        let mut buf = Vec::new();
+        write_request_body(&mut buf, &labels, &edges).unwrap();
+        let h = RequestHeader { id: 1, options: GeeOptions::NONE, n: 4, k: 3 };
+        let mut g = Graph::new(0, 0);
+        let mut scratch = Vec::new();
+        read_request_body_into(&mut Cursor::new(&buf), &h, &mut g, &mut scratch).unwrap();
+        assert_eq!((g.n, g.k), (4, 3));
+        assert_eq!(g.labels, labels);
+        assert_eq!(g.src, vec![0, 2, 3]);
+        assert_eq!(g.dst, vec![1, 3, 3]);
+        assert_eq!(g.w, vec![1.5, 0.25, 2.0]);
+        // decode again into the same graph: same result, buffers reused
+        read_request_body_into(&mut Cursor::new(&buf), &h, &mut g, &mut scratch).unwrap();
+        assert_eq!(g.labels, labels);
+        assert_eq!(g.w, vec![1.5, 0.25, 2.0]);
+    }
+
+    #[test]
+    fn body_rejects_bad_records() {
+        let h = RequestHeader { id: 1, options: GeeOptions::NONE, n: 2, k: 2 };
+        let mut g = Graph::new(0, 0);
+        let mut scratch = Vec::new();
+        // wrong label count (frame length != n records)
+        let mut buf = Vec::new();
+        write_request_body(&mut buf, &[0, 1, 0], &[]).unwrap();
+        assert!(read_request_body_into(&mut Cursor::new(&buf), &h, &mut g, &mut scratch).is_err());
+        // label out of range
+        let mut buf = Vec::new();
+        write_request_body(&mut buf, &[0, 5], &[]).unwrap();
+        assert!(read_request_body_into(&mut Cursor::new(&buf), &h, &mut g, &mut scratch).is_err());
+        // edge endpoint out of range
+        let mut buf = Vec::new();
+        write_request_body(&mut buf, &[0, 1], &[(0, 9, 1.0)]).unwrap();
+        assert!(read_request_body_into(&mut Cursor::new(&buf), &h, &mut g, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn drain_consumes_exactly_one_body() {
+        let mut buf = Vec::new();
+        write_request_body(&mut buf, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+        write_request_body(&mut buf, &[1, 0], &[(1, 0, 2.0)]).unwrap();
+        let mut cur = Cursor::new(&buf);
+        let mut scratch = Vec::new();
+        drain_request_body(&mut cur, &mut scratch).unwrap();
+        // the second body is intact after the first is drained
+        let h = RequestHeader { id: 2, options: GeeOptions::NONE, n: 2, k: 2 };
+        let mut g = Graph::new(0, 0);
+        read_request_body_into(&mut cur, &h, &mut g, &mut scratch).unwrap();
+        assert_eq!(g.labels, vec![1, 0]);
+        assert_eq!(g.w, vec![2.0]);
+    }
+
+    #[test]
+    fn reply_lines_round_trip() {
+        assert_eq!(
+            parse_reply(&format_ok(7, 30, 3)).unwrap(),
+            Reply::Ok { id: 7, rows: 30, cols: 3 }
+        );
+        assert_eq!(
+            parse_reply(&format_err(9, "bad label\nline two")).unwrap(),
+            Reply::Err { id: 9, msg: "bad label line two".into() }
+        );
+        assert_eq!(
+            parse_reply(&format_busy(3, 50)).unwrap(),
+            Reply::Busy { id: 3, retry_ms: 50 }
+        );
+        assert_eq!(parse_reply("PONG").unwrap(), Reply::Pong);
+        assert_eq!(
+            parse_reply(&format_fatal("duplicate in-flight id 4")).unwrap(),
+            Reply::Fatal("duplicate in-flight id 4".into())
+        );
+        // an ERR whose message merely *starts* with id-like text but has
+        // no parseable id stays fatal
+        assert_eq!(
+            parse_reply("ERR id=x broken").unwrap(),
+            Reply::Fatal("id=x broken".into())
+        );
+        assert!(parse_reply("WAT 1 2").is_err());
+    }
+
+    #[test]
+    fn oversized_frame_prefix_is_rejected_before_read() {
+        // a drained body must still honor the codec caps: a declared-huge
+        // labels frame fails at the prefix, no body bytes consumed
+        let mut buf = Vec::new();
+        codec::write_frame_len(&mut buf, max_labels_frame_bytes() + 4).unwrap();
+        let mut scratch = Vec::new();
+        let err = drain_request_body(&mut Cursor::new(&buf), &mut scratch).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds the wire limit"), "{err:#}");
+    }
+}

@@ -14,21 +14,23 @@ use anyhow::{bail, Context, Result};
 use super::edgelist::Graph;
 
 /// Parse one edge line (`src dst [weight]`, separators: any run of
-/// spaces/tabs/commas). Returns `None` for blank and `#`/`%` comment
-/// lines. This is the single *text* edge grammar: edge files and the
-/// legacy (v1) shard-fleet wire protocol parse through it, so a weight
-/// written in shortest-roundtrip form re-parses bitwise everywhere. The
-/// shard lanes' hot paths (spill files, worker pipes, wire v2) use the
-/// binary twin in `crate::shard::codec` instead — raw bit patterns, no
-/// decimal grammar — and dispatch between the two by file extension
+/// spaces/tabs/commas/colons). Returns `None` for blank and `#`/`%`
+/// comment lines. This is the single *text* edge grammar: edge files,
+/// the legacy (v1) shard-fleet wire protocol, and the client wire's v1
+/// `EDGES a:b:w` tokens all parse through it, so a weight written in
+/// shortest-roundtrip form re-parses bitwise everywhere. The shard
+/// lanes' hot paths (spill files, worker pipes, wire v2) use the binary
+/// twin in `crate::shard::codec` instead — raw bit patterns, no decimal
+/// grammar — and dispatch between the two by file extension
 /// (`.bin` = binary).
 pub fn parse_edge_fields(line: &str) -> Result<Option<(u32, u32, f64)>> {
     let t = line.trim();
     if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
         return Ok(None);
     }
-    let mut parts =
-        t.split(|c: char| c.is_whitespace() || c == ',').filter(|s| !s.is_empty());
+    let mut parts = t
+        .split(|c: char| c.is_whitespace() || c == ',' || c == ':')
+        .filter(|s| !s.is_empty());
     let a: u32 = parts
         .next()
         .context("missing src")?
@@ -319,6 +321,10 @@ mod tests {
     fn parse_edge_fields_grammar() {
         assert_eq!(parse_edge_fields("0 1").unwrap(), Some((0, 1, 1.0)));
         assert_eq!(parse_edge_fields("2,3,0.5").unwrap(), Some((2, 3, 0.5)));
+        // the client wire's v1 EDGES tokens use ':' separators — same
+        // grammar, same parser
+        assert_eq!(parse_edge_fields("4:5:2.5").unwrap(), Some((4, 5, 2.5)));
+        assert_eq!(parse_edge_fields("4:5").unwrap(), Some((4, 5, 1.0)));
         assert_eq!(parse_edge_fields("  ").unwrap(), None);
         assert_eq!(parse_edge_fields("# comment").unwrap(), None);
         assert_eq!(parse_edge_fields("% comment").unwrap(), None);

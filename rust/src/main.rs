@@ -10,6 +10,8 @@
 //!                    `shard-embed --workers P`; not for direct use)
 //! * `bench-table`  — regenerate a paper table/figure (2, 3, 4, fig3)
 //! * `serve`        — run the embedding service demo under synthetic load
+//! * `client-embed` — embed a graph against a running `serve --listen`
+//!                    daemon (binary v2 wire, `--text-wire` for v1)
 //!
 //! Arg parsing is hand-rolled (`--key value` / `--key=value` /
 //! `--flag`) because the offline crate set has no clap; see `Args`
@@ -22,7 +24,9 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use gee_sparse::coordinator::batcher::BatchCapacity;
-use gee_sparse::coordinator::{EmbedRequest, EmbedService, Lane, ServiceConfig};
+use gee_sparse::coordinator::{
+    ClientConfig, EmbedClient, EmbedRequest, EmbedService, Lane, ServiceConfig,
+};
 use gee_sparse::gee::{Engine, GeeOptions};
 use gee_sparse::graph::datasets::by_name;
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
@@ -404,6 +408,53 @@ fn cmd_shard_serve(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_client_embed(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args
+        .get("addr")
+        .context("--addr HOST:PORT required (a running `gee serve --listen` daemon)")?
+        .parse()
+        .context("--addr must be HOST:PORT")?;
+    let g = load_graph(args)?;
+    let code = args.get("options").unwrap_or("---");
+    GeeOptions::from_code(code).context("--options takes a 3-char code like ldc, l-c, ---")?;
+    let edges: Vec<(u32, u32, f64)> =
+        (0..g.num_edges()).map(|i| (g.src[i], g.dst[i], g.w[i])).collect();
+    let counters = std::sync::Arc::new(gee_sparse::shard::codec::ByteCounters::default());
+    let cfg = ClientConfig {
+        tenant: args.get("tenant").map(|s| s.to_string()),
+        force_text: args.has("text-wire"),
+        counters: Some(counters.clone()),
+    };
+    let t0 = Instant::now();
+    let mut client = EmbedClient::connect(addr, &cfg)?;
+    let wire = if client.is_binary() { "binary v2" } else { "text v1" };
+    let z = client.embed(code, &g.labels, &edges, g.k)?;
+    let dt = t0.elapsed();
+    use std::sync::atomic::Ordering;
+    println!(
+        "embedded n={} edges={} k={} over the {wire} wire in {:.3}s ({} B sent, {} B received)",
+        g.n,
+        g.num_edges(),
+        g.k,
+        dt.as_secs_f64(),
+        counters.sent.load(Ordering::Relaxed),
+        counters.received.load(Ordering::Relaxed),
+    );
+    if let Some(out) = args.get("out") {
+        // full-precision rows: CI compares the v1 and v2 lanes' outputs
+        // byte for byte, and rounding would hide wire bugs
+        let mut text = String::new();
+        for r in 0..z.nrows {
+            let row: Vec<String> = z.row(r).iter().map(|v| format!("{v}")).collect();
+            text.push_str(&row.join("\t"));
+            text.push('\n');
+        }
+        std::fs::write(out, text)?;
+        println!("embedding written to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
@@ -419,10 +470,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
             intra_op_threads: args.get_usize("intra-op", 0)?,
             shard_remote_workers,
             shard_wire_text: args.has("text-wire"),
+            tenant_tokens: args.get_usize("tenant-tokens", 64)?,
             ..ServiceConfig::default()
         }));
-        let server = gee_sparse::coordinator::TcpServer::start(bind, svc)?;
-        println!("listening on {} (line protocol; PING/EMBED; ctrl-c to stop)", server.addr());
+        // --text-only refuses the HELLO2 upgrade — emulates a pre-v2
+        // daemon for mixed-version testing
+        let server = if args.has("text-only") {
+            gee_sparse::coordinator::TcpServer::start_text_only(bind, svc)?
+        } else {
+            gee_sparse::coordinator::TcpServer::start(bind, svc)?
+        };
+        println!(
+            "listening on {} (v1 text + v2 binary wire; PING/EMBED/HELLO2; ctrl-c to stop)",
+            server.addr()
+        );
+        std::io::Write::flush(&mut std::io::stdout())?;
         loop {
             std::thread::sleep(Duration::from_secs(3600));
         }
@@ -506,7 +568,14 @@ fn usage() -> &'static str {
                     [--intra-op T]   (row-parallel threads for oversize graphs)\n\
                     [--shard-workers HOST:PORT,...]   (remote fleet for\n\
                     oversize jobs)  [--text-wire]\n\
-                    [--listen ADDR:PORT]   (network mode: TCP line protocol)\n"
+                    [--listen ADDR:PORT]   (network mode: v1 text + v2\n\
+                    binary client wire)  [--text-only]   (refuse the v2\n\
+                    upgrade)  [--tenant-tokens N]   (per-tenant in-flight\n\
+                    quota, default 64)\n\
+       client-embed --addr HOST:PORT   --dataset NAME | --sbm N | --input STEM\n\
+                    [--options ldc] [--tenant NAME] [--text-wire] [--out FILE]\n\
+                    (one embed against a running `serve --listen` daemon;\n\
+                    negotiates the binary v2 wire, --text-wire forces v1)\n"
 }
 
 fn main() -> Result<()> {
@@ -525,6 +594,7 @@ fn main() -> Result<()> {
         "shard-worker" => cmd_shard_worker(&args),
         "bench-table" => cmd_bench_table(&args),
         "serve" => cmd_serve(&args),
+        "client-embed" => cmd_client_embed(&args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(())

@@ -15,7 +15,9 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use gee_sparse::coordinator::batcher::{build_union, build_union_into, PackedBatch};
+use gee_sparse::coordinator::wire::{self, RequestHeader};
 use gee_sparse::gee::edgelist_gee::EdgeListGee;
+use gee_sparse::shard::codec;
 use gee_sparse::gee::sparse_gee::{embed_fused_into, SparseGee};
 use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
 use gee_sparse::graph::Graph;
@@ -162,8 +164,59 @@ fn steady_state_pooled_embeds_allocate_nothing() {
     assert_eq!(ub.union.src, fresh.union.src);
     assert_eq!(ub.placements, fresh.placements);
 
+    // ---- client wire v2 request→response cycle (ISSUE 6): decoding the
+    // binary body into a warm Graph, embedding from the pooled
+    // workspace, and framing the raw-bit Z response must all ride warm
+    // buffers — the serving loop's per-request heap traffic is zero
+    let edges: Vec<(u32, u32, f64)> =
+        (0..g.num_edges()).map(|i| (g.src[i], g.dst[i], g.w[i])).collect();
+    let mut req: Vec<u8> = Vec::new();
+    wire::write_request_body(&mut req, &g.labels, &edges).unwrap();
+    let h = RequestHeader { id: 1, options: combos[0], n: g.n, k: g.k };
+    let mut wg = Graph::new(0, 0);
+    let mut scratch: Vec<u8> = Vec::new();
+    let mut ws_wire = EmbedWorkspace::new();
+    let mut resp: Vec<u8> = Vec::new();
+    {
+        // warm decode target, chunk scratch, workspace, response buffer
+        let mut cur = std::io::Cursor::new(&req[..]);
+        wire::read_request_body_into(&mut cur, &h, &mut wg, &mut scratch).unwrap();
+        embed_fused_into(&wg, &combos[0], &mut ws_wire);
+        codec::write_frame_f64s(&mut resp, &ws_wire.z.data).unwrap();
+    }
+    let before = allocations();
+    for _ in 0..REPS {
+        let mut cur = std::io::Cursor::new(&req[..]);
+        wire::read_request_body_into(&mut cur, &h, &mut wg, &mut scratch).unwrap();
+        embed_fused_into(&wg, &combos[0], &mut ws_wire);
+        resp.clear();
+        codec::write_frame_f64s(&mut resp, &ws_wire.z.data).unwrap();
+        std::hint::black_box(resp.as_ptr());
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "wire request→response cycle allocated {leaked} times in steady state"
+    );
+
+    // ---- over-quota reject path: draining a refused request's body
+    // must not allocate — BUSY is O(1) no matter how big the request
+    // claimed to be (the edge buffers are never built)
+    let before = allocations();
+    for _ in 0..REPS {
+        let mut cur = std::io::Cursor::new(&req[..]);
+        wire::drain_request_body(&mut cur, &mut scratch).unwrap();
+    }
+    let leaked = allocations() - before;
+    assert_eq!(
+        leaked, 0,
+        "over-quota body drain allocated {leaked} times in steady state"
+    );
+
     // sanity: the pooled lanes still produce the right numbers after the
     // allocation-counted loops
     let expect = SparseGee::fast().embed(&g, combos.last().unwrap());
     assert_eq!(ws_fused.z.data, expect.data);
+    let expect_wire = SparseGee::fast().embed(&g, &combos[0]);
+    assert_eq!(ws_wire.z.data, expect_wire.data);
 }

@@ -1,0 +1,300 @@
+//! End-to-end tests for the client wire: v1/v2 parity, pipelining,
+//! admission, and hostile inputs against a live loopback server.
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use gee_sparse::coordinator::server::{MAX_WIRE_VERTICES, TcpServer};
+use gee_sparse::coordinator::wire;
+use gee_sparse::coordinator::{
+    ClientConfig, ClientReply, EmbedClient, EmbedService, ServiceConfig,
+};
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::shard::codec;
+use gee_sparse::util::rng::Rng;
+
+fn start(cfg: ServiceConfig) -> (TcpServer, Arc<EmbedService>) {
+    let svc = Arc::new(EmbedService::start(cfg));
+    let server = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    (server, svc)
+}
+
+/// A reproducible weighted graph with one unlabeled vertex — weights are
+/// "ugly" floats so parity checks exercise real mantissas, not integers.
+fn random_graph(seed: u64, n: usize, k: usize, m: usize) -> (Vec<i32>, Vec<(u32, u32, f64)>) {
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<i32> = (0..n).map(|_| rng.below(k) as i32).collect();
+    labels[0] = -1;
+    let edges: Vec<(u32, u32, f64)> = (0..m)
+        .map(|_| (rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1))
+        .collect();
+    (labels, edges)
+}
+
+fn text_config() -> ClientConfig {
+    ClientConfig { force_text: true, ..ClientConfig::default() }
+}
+
+/// Tentpole acceptance: the binary wire returns the same bits as the v1
+/// text wire for every cell, across the full option grid.
+#[test]
+fn binary_wire_matches_text_bit_for_bit() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (labels, edges) = random_graph(5, 40, 3, 120);
+    let mut bin = EmbedClient::connect(server.addr(), &ClientConfig::default()).unwrap();
+    assert!(bin.is_binary());
+    let mut txt = EmbedClient::connect(server.addr(), &text_config()).unwrap();
+    assert!(!txt.is_binary());
+    for opts in GeeOptions::table_order() {
+        let code = opts.code();
+        let zb = bin.embed(&code, &labels, &edges, 3).unwrap();
+        let zt = txt.embed(&code, &labels, &edges, 3).unwrap();
+        assert_eq!((zb.nrows, zb.ncols), (zt.nrows, zt.ncols), "{code}");
+        for (i, (a, b)) in zb.data.iter().zip(&zt.data).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{code} cell {i}: {a} vs {b}");
+        }
+    }
+    server.stop();
+}
+
+/// Acceptance: two pipelined connections, each with a burst of requests
+/// in flight, every id answered exactly once — and each answer carries
+/// *that* request's embedding (a distinct graph per id), which is what
+/// pins out-of-order delivery as correct rather than coincidental.
+#[test]
+fn pipelined_requests_answered_exactly_once() {
+    // batching off: batched-vs-solo is only guaranteed to 1e-10, and
+    // this test matches each pipelined reply bitwise against a solo
+    // reference — the pin is the wire's delivery, not the batcher
+    let (server, _svc) = start(ServiceConfig { batching: false, ..ServiceConfig::default() });
+    let addr = server.addr();
+    let per_conn = 8usize;
+    let handles: Vec<_> = (0..2)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = EmbedClient::connect(addr, &ClientConfig::default()).unwrap();
+                assert!(client.is_binary());
+                let mut expected = std::collections::HashMap::new();
+                for i in 0..per_conn {
+                    let seed = 1000 + 100 * c + i as u64;
+                    // sizes vary 10x so completion order churns
+                    let (labels, edges) = random_graph(seed, 20 + 40 * i, 3, 60 + 120 * i);
+                    let id = client.submit("ldc", &labels, &edges, 3).unwrap();
+                    expected.insert(id, (labels, edges));
+                }
+                // a reference lane answering one request at a time
+                let mut reference = EmbedClient::connect(addr, &ClientConfig::default()).unwrap();
+                for _ in 0..per_conn {
+                    let (id, reply) = client.recv_any().unwrap();
+                    let (labels, edges) = expected
+                        .remove(&id)
+                        .unwrap_or_else(|| panic!("id {id} answered twice or never asked"));
+                    let z = match reply {
+                        ClientReply::Z(z) => z,
+                        other => panic!("id {id}: {other:?}"),
+                    };
+                    let want = reference.embed("ldc", &labels, &edges, 3).unwrap();
+                    assert_eq!(z.nrows, want.nrows);
+                    for (a, b) in z.data.iter().zip(&want.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "id {id}");
+                    }
+                }
+                assert!(expected.is_empty());
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    server.stop();
+}
+
+/// Acceptance: an over-quota tenant gets `BUSY id=<id> retry=<ms>` from
+/// the header alone, the body is drained, and the same connection
+/// succeeds once the quota frees up. An unrelated tenant is unaffected.
+#[test]
+fn over_quota_tenant_gets_busy_then_recovers() {
+    let (server, svc) = start(ServiceConfig { tenant_tokens: 1, ..ServiceConfig::default() });
+    let held = svc.try_admit("acme").unwrap();
+
+    let cfg = ClientConfig { tenant: Some("acme".into()), ..ClientConfig::default() };
+    let mut client = EmbedClient::connect(server.addr(), &cfg).unwrap();
+    let (labels, edges) = random_graph(9, 20, 2, 40);
+    let id = client.submit("---", &labels, &edges, 2).unwrap();
+    match client.recv_any().unwrap() {
+        (rid, ClientReply::Busy { retry_ms }) => {
+            assert_eq!(rid, id);
+            assert!(retry_ms > 0);
+        }
+        other => panic!("expected BUSY, got {other:?}"),
+    }
+
+    // a different tenant is admitted while acme is throttled
+    let other_cfg = ClientConfig { tenant: Some("zeta".into()), ..ClientConfig::default() };
+    let mut other = EmbedClient::connect(server.addr(), &other_cfg).unwrap();
+    other.embed("---", &labels, &edges, 2).unwrap();
+
+    drop(held);
+    // same connection, post-release: admitted and answered
+    let id2 = client.submit("---", &labels, &edges, 2).unwrap();
+    match client.recv_any().unwrap() {
+        (rid, ClientReply::Z(z)) => {
+            assert_eq!(rid, id2);
+            assert_eq!(z.nrows, 20);
+        }
+        other => panic!("expected Z, got {other:?}"),
+    }
+
+    drop(client);
+    drop(other);
+    server.stop();
+    let tenants = svc.metrics().tenant_snapshot();
+    let acme = &tenants.iter().find(|(n, _)| n == "acme").unwrap().1;
+    use std::sync::atomic::Ordering;
+    assert!(acme.rejected_quota.load(Ordering::Relaxed) >= 1);
+    assert!(acme.admitted.load(Ordering::Relaxed) >= 1);
+}
+
+/// Raw-socket helper: negotiate v2 and hand back buffered halves.
+fn raw_v2(addr: std::net::SocketAddr) -> (BufReader<TcpStream>, BufWriter<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut writer = BufWriter::new(stream);
+    writeln!(writer, "HELLO2").unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "HELLO2");
+    (reader, writer)
+}
+
+/// Read the server's last words: a bare `ERR` (no id=) then close.
+fn expect_fatal(reader: &mut BufReader<TcpStream>, context: &str) {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR "), "{context}: {line}");
+    assert!(
+        !line.starts_with("ERR id="),
+        "{context}: fatal errors carry no id: {line}"
+    );
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap(), 0, "{context}: server must close");
+}
+
+#[test]
+fn hostile_oversized_length_prefix_is_fatal_before_allocation() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    writeln!(writer, "EMBED2 id=1 code=--- n=2 k=2").unwrap();
+    // labels frame claiming more bytes than the wire's vertex cap allows
+    codec::write_frame_len(&mut writer, (MAX_WIRE_VERTICES as u64 + 1) * 4).unwrap();
+    writer.flush().unwrap();
+    expect_fatal(&mut reader, "oversized prefix");
+    server.stop();
+}
+
+#[test]
+fn hostile_mid_frame_eof_is_fatal() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, writer) = raw_v2(server.addr());
+    let mut writer = writer;
+    writeln!(writer, "EMBED2 id=1 code=--- n=2 k=2").unwrap();
+    codec::write_frame_len(&mut writer, 8).unwrap(); // promises 2 labels
+    writer.write_all(&0i32.to_le_bytes()).unwrap(); // delivers 1
+    writer.flush().unwrap();
+    writer.get_ref().shutdown(std::net::Shutdown::Write).unwrap();
+    let mut line = String::new();
+    // ERR-then-close, or just close if the write half died first —
+    // either way the connection must end rather than hang
+    if reader.read_line(&mut line).unwrap() > 0 {
+        assert!(line.starts_with("ERR "), "{line}");
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0);
+    }
+    server.stop();
+}
+
+#[test]
+fn hostile_misaligned_edge_frame_is_fatal() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    writeln!(writer, "EMBED2 id=1 code=--- n=2 k=2").unwrap();
+    codec::write_frame_i32s(&mut writer, &[0, 1]).unwrap();
+    // edge frame of 20 bytes: not a multiple of the 16-byte record
+    codec::write_frame_len(&mut writer, 20).unwrap();
+    writer.write_all(&[0u8; 20]).unwrap();
+    writer.flush().unwrap();
+    expect_fatal(&mut reader, "misaligned edge frame");
+    server.stop();
+}
+
+#[test]
+fn hostile_duplicate_in_flight_id_is_fatal() {
+    // one worker + a heavyweight first request keeps id=7 in flight
+    // while the duplicate arrives
+    let (server, _svc) = start(ServiceConfig { workers: 1, ..ServiceConfig::default() });
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    let (big_labels, big_edges) = random_graph(3, 20_000, 4, 120_000);
+    writeln!(writer, "EMBED2 id=7 code=ldc n={} k=4", big_labels.len()).unwrap();
+    wire::write_request_body(&mut writer, &big_labels, &big_edges).unwrap();
+    writeln!(writer, "EMBED2 id=7 code=--- n=2 k=2").unwrap();
+    wire::write_request_body(&mut writer, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+    writer.flush().unwrap();
+    // the first reply may be id=7's OK + Z frame (if the embed won the
+    // race) but the connection must end with a bare fatal ERR
+    let mut saw_fatal = false;
+    let mut line = String::new();
+    while reader.read_line(&mut line).unwrap() > 0 {
+        if line.starts_with("OK id=7") {
+            // skip the Z frame to stay in sync with the line protocol
+            let len = codec::read_frame_len(&mut reader, "Z frame").unwrap();
+            std::io::copy(
+                &mut std::io::Read::take(&mut reader, len),
+                &mut std::io::sink(),
+            )
+            .unwrap();
+        } else {
+            assert!(line.starts_with("ERR "), "{line}");
+            assert!(!line.starts_with("ERR id="), "{line}");
+            saw_fatal = true;
+        }
+        line.clear();
+    }
+    assert!(saw_fatal, "duplicate id must kill the connection");
+    server.stop();
+}
+
+#[test]
+fn hostile_v1_verb_after_v2_negotiation_is_fatal() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    writeln!(writer, "EMBED code=--- k=2 n=2").unwrap();
+    writer.flush().unwrap();
+    expect_fatal(&mut reader, "v1 verb on v2 connection");
+    server.stop();
+}
+
+/// Dimension bounds on a parseable v2 header are request-scoped: the
+/// body is drained and the *same connection* serves the next request.
+#[test]
+fn oversize_dims_fail_the_request_not_the_connection() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    writeln!(writer, "EMBED2 id=1 code=--- n={} k=2", MAX_WIRE_VERTICES + 1).unwrap();
+    // an in-bounds body (the header lies about n; the drain just eats it)
+    wire::write_request_body(&mut writer, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+    writeln!(writer, "EMBED2 id=2 code=--- n=2 k=2").unwrap();
+    wire::write_request_body(&mut writer, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=1 "), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK id=2 "), "{line}");
+    server.stop();
+}
