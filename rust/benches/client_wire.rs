@@ -189,6 +189,7 @@ fn main() {
             speedup: base_ns as f64 / (ns.max(1) as f64),
             bytes_sent: sent,
             bytes_received: received,
+            ..BenchRecord::default()
         });
     }
 

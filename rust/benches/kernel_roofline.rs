@@ -1,0 +1,267 @@
+//! Bench: kernel roofline — how close each accumulation lane sits to the
+//! machine's memory-bandwidth ceiling.
+//!
+//! Measures a stream baseline (memcpy + triad over kernel-sized f64
+//! buffers), then times every dispatched small-K lane against the
+//! generic reference on the same prepared graph, reporting estimated
+//! bytes moved per nanosecond and that figure as a percentage of the
+//! triad bandwidth. Also times the hub-splitting parallel plan on a
+//! star graph whose center row exceeds the segmentation threshold.
+//!
+//! Each lane is gated bitwise against the generic kernel before timing —
+//! dispatch must never change results, only speed.
+//!
+//! Rows land in `BENCH_gee.json` (`bytes_per_ns`, `pct_of_stream`,
+//! speedup-vs-generic). `QUICK=1` trims sizes for CI smoke.
+
+use gee_sparse::gee::kernel::{
+    bytes_moved_estimate, counters_snapshot, force_kernel, reset_counters, KernelId,
+};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
+use gee_sparse::graph::Graph;
+use gee_sparse::sparse::partition::HUB_SEGMENT_NNZ;
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::rng::Rng;
+use gee_sparse::util::timing::{bench_runs, Stats};
+
+/// Class counts swept: every fixed lane plus two chunked-lane points.
+const KS: &[usize] = &[1, 2, 3, 4, 5, 6, 7, 8, 16, 32];
+
+fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(k) as i32;
+    }
+    for _ in 0..m {
+        g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+    }
+    g
+}
+
+/// Measured stream bandwidth over `len` f64s: (copy bytes/ns, triad
+/// bytes/ns). Copy counts read+write; triad counts two reads + a write —
+/// the classic upper bounds the kernels are compared against.
+fn stream_bw(len: usize, reps: usize) -> (f64, f64) {
+    let src: Vec<f64> = (0..len).map(|i| i as f64 * 0.5).collect();
+    let mut dst = vec![0.0f64; len];
+    let copy = Stats::from_runs(&bench_runs(1, reps, || {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(dst.as_ptr());
+    }));
+    let b: Vec<f64> = (0..len).map(|i| (i % 9) as f64).collect();
+    let c: Vec<f64> = (0..len).map(|i| (i % 7) as f64).collect();
+    let mut a = vec![0.0f64; len];
+    let triad = Stats::from_runs(&bench_runs(1, reps, || {
+        for i in 0..len {
+            a[i] = b[i] + 2.5 * c[i];
+        }
+        std::hint::black_box(a.as_ptr());
+    }));
+    let copy_bpn = (2 * len * 8) as f64 / copy.median.as_nanos().max(1) as f64;
+    let triad_bpn = (3 * len * 8) as f64 / triad.median.as_nanos().max(1) as f64;
+    (copy_bpn, triad_bpn)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    records: &mut Vec<BenchRecord>,
+    engine: String,
+    g: &Graph,
+    threads: usize,
+    median_ns: u128,
+    speedup: f64,
+    bytes: u64,
+    triad_bpn: f64,
+) {
+    let bpn = bytes as f64 / median_ns.max(1) as f64;
+    records.push(BenchRecord {
+        bench: "kernel_roofline".into(),
+        engine,
+        n: g.n,
+        m: g.num_directed(),
+        k: g.k,
+        threads,
+        median_ns,
+        speedup,
+        bytes_per_ns: bpn,
+        pct_of_stream: 100.0 * bpn / triad_bpn.max(1e-12),
+        ..BenchRecord::default()
+    });
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 5 };
+    let (n, m) = if quick { (2_000, 40_000) } else { (10_000, 1_000_000) };
+    println!("== bench kernel_roofline (reps={reps}, n={n}, m={m} undirected) ==\n");
+    reset_counters();
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    // ---- stream baseline over a buffer comparable to the edge arrays
+    let stream_len = (2 * m).max(1 << 16);
+    let (copy_bpn, triad_bpn) = stream_bw(stream_len, reps);
+    println!(
+        "stream baseline over {stream_len} f64s: copy {copy_bpn:.3} bytes/ns, triad {triad_bpn:.3} bytes/ns\n"
+    );
+    records.push(BenchRecord {
+        bench: "kernel_roofline".into(),
+        engine: "stream-copy".into(),
+        n: stream_len,
+        threads: 1,
+        median_ns: ((2 * stream_len * 8) as f64 / copy_bpn.max(1e-12)) as u128,
+        speedup: 1.0,
+        bytes_per_ns: copy_bpn,
+        pct_of_stream: 100.0 * copy_bpn / triad_bpn.max(1e-12),
+        ..BenchRecord::default()
+    });
+    records.push(BenchRecord {
+        bench: "kernel_roofline".into(),
+        engine: "stream-triad".into(),
+        n: stream_len,
+        threads: 1,
+        median_ns: ((3 * stream_len * 8) as f64 / triad_bpn.max(1e-12)) as u128,
+        speedup: 1.0,
+        bytes_per_ns: triad_bpn,
+        pct_of_stream: 100.0,
+        ..BenchRecord::default()
+    });
+
+    // ---- per-K lanes: dispatched vs forced-generic on the same graph.
+    // GeeOptions::NONE isolates the accumulation loop itself — the part
+    // the lanes specialize; options only add identical epilogue work.
+    let opts = GeeOptions::NONE;
+    println!(
+        "{:>4} {:>8} {:>13} {:>13} {:>8} {:>10} {:>8}",
+        "k", "lane", "dispatch(ms)", "generic(ms)", "speedup", "bytes/ns", "%stream"
+    );
+    for (ki, &k) in KS.iter().enumerate() {
+        let g = random_graph(101 + ki as u64, n, m, k);
+        let prepared = SparseGee::prepare(&g);
+        let mut ws = EmbedWorkspace::new();
+        let mut ws_gen = EmbedWorkspace::new();
+
+        // bitwise gate before any timing
+        prepared.embed_into(&opts, &mut ws);
+        force_kernel(Some(KernelId::Generic));
+        prepared.embed_into(&opts, &mut ws_gen);
+        force_kernel(None);
+        assert_eq!(
+            ws.z.data, ws_gen.z.data,
+            "k={k}: dispatched lane not bitwise-identical to generic"
+        );
+
+        let disp = Stats::from_runs(&bench_runs(1, reps, || {
+            prepared.embed_into(&opts, &mut ws);
+            std::hint::black_box(ws.z.data.as_ptr());
+        }));
+        force_kernel(Some(KernelId::Generic));
+        let gene = Stats::from_runs(&bench_runs(1, reps, || {
+            prepared.embed_into(&opts, &mut ws_gen);
+            std::hint::black_box(ws_gen.z.data.as_ptr());
+        }));
+        force_kernel(None);
+
+        let bytes = bytes_moved_estimate(g.n, g.num_directed(), k, &opts);
+        let dns = disp.median.as_nanos();
+        let gns = gene.median.as_nanos();
+        let speedup = gns as f64 / dns.max(1) as f64;
+        let lane = KernelId::for_k(k).name();
+        let bpn = bytes as f64 / dns.max(1) as f64;
+        let verdict = if k <= 8 && speedup < 1.3 { "  WARN <1.3x" } else { "" };
+        println!(
+            "{:>4} {:>8} {:>13.3} {:>13.3} {:>7.2}x {:>10.3} {:>7.1}%{verdict}",
+            k,
+            lane,
+            disp.median.as_secs_f64() * 1e3,
+            gene.median.as_secs_f64() * 1e3,
+            speedup,
+            bpn,
+            100.0 * bpn / triad_bpn.max(1e-12),
+        );
+        push_row(
+            &mut records,
+            format!("kernel-{lane}-dispatch"),
+            &g,
+            1,
+            dns,
+            speedup,
+            bytes,
+            triad_bpn,
+        );
+        push_row(
+            &mut records,
+            format!("kernel-{lane}-generic"),
+            &g,
+            1,
+            gns,
+            1.0,
+            bytes,
+            triad_bpn,
+        );
+    }
+
+    // ---- hub splitting: a star center far past the segmentation
+    // threshold, parallel segment fan-out vs the serial segmented path
+    let hub_n = if quick { 1_000 } else { 4_000 };
+    let hub_edges = 3 * HUB_SEGMENT_NNZ + 500;
+    let mut rng = Rng::new(909);
+    let mut g = Graph::new(hub_n, 4);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(4) as i32;
+    }
+    for i in 0..hub_edges {
+        g.add_edge(0, (1 + (i % (hub_n - 1))) as u32, rng.f64() + 0.1);
+    }
+    for _ in 0..hub_n {
+        g.add_edge(rng.below(hub_n) as u32, rng.below(hub_n) as u32, rng.f64() + 0.1);
+    }
+    let prepared = SparseGee::prepare(&g);
+    let hopts = GeeOptions::ALL;
+    let serial = prepared.embed(&hopts);
+    let avail = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    let t = avail.clamp(2, 8);
+    let par = prepared.embed_par(&hopts, t);
+    assert_eq!(par.data, serial.data, "hub split not bitwise at t={t}");
+    let mut ws = EmbedWorkspace::new();
+    let ser_st = Stats::from_runs(&bench_runs(1, reps, || {
+        prepared.embed_into(&hopts, &mut ws);
+        std::hint::black_box(ws.z.data.as_ptr());
+    }));
+    let mut wsp = EmbedWorkspace::new();
+    let par_st = Stats::from_runs(&bench_runs(1, reps, || {
+        prepared.embed_par_into(&hopts, t, &mut wsp);
+        std::hint::black_box(wsp.z.data.as_ptr());
+    }));
+    let bytes = bytes_moved_estimate(g.n, g.num_directed(), g.k, &hopts);
+    let sp = ser_st.median.as_nanos() as f64 / par_st.median.as_nanos().max(1) as f64;
+    println!(
+        "\nhub star (center nnz {hub_edges}): serial {:.3} ms, split t={t} {:.3} ms ({sp:.2}x), bitwise ✓",
+        ser_st.median.as_secs_f64() * 1e3,
+        par_st.median.as_secs_f64() * 1e3,
+    );
+    push_row(
+        &mut records,
+        "hub-split-serial".into(),
+        &g,
+        1,
+        ser_st.median.as_nanos(),
+        1.0,
+        bytes,
+        triad_bpn,
+    );
+    push_row(
+        &mut records,
+        "hub-split-par".into(),
+        &g,
+        t,
+        par_st.median.as_nanos(),
+        sp,
+        bytes,
+        triad_bpn,
+    );
+
+    println!("\nkernel dispatches this run: {}", counters_snapshot().nonzero_line());
+    write_records("kernel_roofline", &records);
+}

@@ -89,6 +89,7 @@ fn record_bytes(
         speedup: base_ns as f64 / (ns.max(1) as f64),
         bytes_sent,
         bytes_received,
+        ..BenchRecord::default()
     });
 }
 

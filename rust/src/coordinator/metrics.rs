@@ -167,6 +167,13 @@ impl Metrics {
                 tc.bytes.sent.load(Ordering::Relaxed),
             ));
         }
+        // which accumulation lanes this process's traffic actually hit
+        // (process-global dispatch counters — `serve` and `shard-serve`
+        // both report through here)
+        let kernels = crate::gee::kernel::counters_snapshot().nonzero_line();
+        if !kernels.is_empty() {
+            s.push_str(&format!("\n  kernels: {kernels}"));
+        }
         s
     }
 
@@ -282,6 +289,25 @@ mod tests {
         // snapshot is name-sorted
         let names: Vec<String> = m.tenant_snapshot().into_iter().map(|(n, _)| n).collect();
         assert_eq!(names, vec!["acme".to_string(), "zeta".to_string()]);
+    }
+
+    #[test]
+    fn kernel_lanes_surface_in_summary_after_dispatch() {
+        // drive at least one dispatch through the kernel layer so the
+        // process-global counters are nonzero regardless of test order
+        let mut g = crate::graph::Graph::new(4, 2);
+        g.labels[0] = 0;
+        g.labels[1] = 1;
+        g.labels[2] = 0;
+        g.labels[3] = 1;
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 1.0);
+        let _ = crate::gee::sparse_gee::SparseGee::fast()
+            .embed(&g, &crate::gee::GeeOptions::ALL);
+        let m = Metrics::new();
+        let s = m.summary();
+        assert!(s.contains("kernels: "), "{s}");
+        assert!(s.contains("k2="), "{s}");
     }
 
     #[test]

@@ -20,6 +20,13 @@
 //! Memory: T−1 extra N×K partials (borrowed from the workspace and
 //! reused across calls). For very large N prefer the row-parallel
 //! engine, whose footprint is independent of thread count.
+//!
+//! Kernel note: this lane scatters in *edge order* into whole-Z
+//! partials, so there is no per-row accumulator for
+//! [`super::kernel`]'s register lanes to specialize — it deliberately
+//! stays off the dispatch layer. The roofline bench uses it as the
+//! scatter-bound contrast to the row-grouped kernels; its counter
+//! surface is the absence of kernel dispatches for edge-list jobs.
 
 use std::thread;
 

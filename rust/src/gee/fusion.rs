@@ -5,6 +5,11 @@
 //! an N × (M·K) matrix. Downstream tasks (classification, clustering)
 //! then see every modality at once; the reference shows this is
 //! synergistic (fused accuracy ≥ best single graph).
+//!
+//! Each member graph embeds through the pooled fused engine, i.e.
+//! through [`super::kernel`]'s runtime-dispatched accumulation lanes —
+//! fusion jobs (typically small K per modality) hit the unrolled
+//! small-K kernels with no code here knowing about them.
 
 use anyhow::{bail, Result};
 
@@ -134,6 +139,16 @@ mod tests {
             let pooled = gee_fuse_with(&[&g1, &g2], &opts, &mut ws).unwrap();
             assert_eq!(pooled.data, fresh.data, "pooled fusion at {opts:?}");
         }
+    }
+
+    #[test]
+    fn fusion_rides_the_kernel_dispatch() {
+        use crate::gee::kernel::{counters_snapshot, KernelId};
+        let (g1, g2) = two_views(15);
+        let before = counters_snapshot().count(KernelId::K2);
+        gee_fuse(&[&g1, &g2], &GeeOptions::ALL).unwrap();
+        let after = counters_snapshot().count(KernelId::K2);
+        assert!(after > before, "fusion (k=2) must dispatch the k2 lane");
     }
 
     #[test]

@@ -1,0 +1,706 @@
+//! Runtime-dispatched accumulation kernels — the roofline layer.
+//!
+//! GEE's entire compute is one memory-bound inner loop: a K-wide f64
+//! multiply-add per directed edge into the vertex's Z row. K is small
+//! and fixed per job (it is the class count), so the loop specializes:
+//!
+//! * **k1..k8** — unrolled small-K lanes. The Z row lives in named f64
+//!   locals (registers), so the per-edge read-modify-write never
+//!   round-trips through memory. This removes the store-to-load forward
+//!   on `zrow[y]` that serializes consecutive same-class edges — on SBM
+//!   graphs, most of a row's neighbors share one class, so the generic
+//!   loop's critical path is store → load → add per edge while the
+//!   register lane pays only the FP add.
+//! * **chunked** — for K > 8 the row no longer fits registers; the lane
+//!   processes edges four at a time, batching the column/label gathers
+//!   so several loads are in flight per iteration (SIMD-friendly: the
+//!   compiler may vectorize the gathers; the adds stay scalar and in
+//!   edge order).
+//! * **generic** — byte-for-byte the historical `accumulate_rows` inner
+//!   loop, kept as the reference every other lane must match bitwise
+//!   (pinned by `tests/kernel_parity.rs`, which forces it via
+//!   [`force_kernel`] and compares).
+//!
+//! Dispatch happens once per [`accumulate_rows`] call from one
+//! [`KernelPlan`], so every caller — serial prepared, row-parallel
+//! chunks, fused pooled, and `shard/local.rs` — gets the specialized
+//! lanes for free.
+//!
+//! **Bitwise contract.** Every lane performs the identical sequence of
+//! floating-point operations per row: the same products in the same
+//! association, added to the same accumulator in edge order. Register
+//! accumulation and load batching reorder *loads*, never FP ops, so the
+//! engine-identity contract (row-parallel ≡ sharded ≡ fused serial,
+//! bitwise) is preserved — now also across kernels.
+//!
+//! **Hub rows.** A row with more than
+//! [`HUB_SEGMENT_NNZ`](crate::sparse::partition::HUB_SEGMENT_NNZ) stored
+//! entries is accumulated as fixed-order *segments*: each segment sums
+//! into a zeroed k-vector, and the partials merge into the Z row in
+//! segment order. The segment grid is a pure function of the row's nnz
+//! (never the thread count), and the serial kernel applies it too — so a
+//! parallel lane may compute the segments on different threads
+//! ([`crate::gee::parallel::accumulate_rows_par`]) and merge in order,
+//! bitwise-identical to serial. Per-kernel dispatch and split-row
+//! counters ([`counters_snapshot`]) surface which lanes production
+//! traffic hits in the serve summary.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+use super::options::GeeOptions;
+use crate::sparse::ops::safe_recip;
+use crate::sparse::partition::{hub_segments, segment_range};
+
+/// Borrowed view of a prepared row-grouped structure — the accumulation
+/// kernels run over it whether the buffers live in a
+/// [`PreparedGraph`](super::sparse_gee::PreparedGraph) or an
+/// [`EmbedWorkspace`](super::workspace::EmbedWorkspace).
+pub(crate) struct AccumCtx<'a> {
+    pub indptr: &'a [u32],
+    /// Global row id of `indptr[0]`: row `r` reads `indptr[r - row_base]`.
+    /// 0 for whole-graph structures; the sharded engine passes its shard's
+    /// first vertex so a shard-local indptr serves global row ids (labels,
+    /// weights and scale stay globally indexed either way).
+    pub row_base: usize,
+    pub cols: &'a [u32],
+    pub vals: &'a [f64],
+    pub labels: &'a [i32],
+    pub wv: &'a [f64],
+    pub k: usize,
+}
+
+/// Identity of one accumulation lane. Ordered so `id as usize` indexes
+/// the dispatch-counter array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelId {
+    K1,
+    K2,
+    K3,
+    K4,
+    K5,
+    K6,
+    K7,
+    K8,
+    /// 4-wide load-batched lane for K > 8.
+    Chunked,
+    /// The historical loop — the bitwise reference.
+    Generic,
+}
+
+/// Number of [`KernelId`] variants (dispatch-counter array length).
+pub const N_KERNELS: usize = 10;
+
+impl KernelId {
+    /// The lane the dispatcher picks for a job with `k` classes.
+    pub fn for_k(k: usize) -> KernelId {
+        match k {
+            1 => KernelId::K1,
+            2 => KernelId::K2,
+            3 => KernelId::K3,
+            4 => KernelId::K4,
+            5 => KernelId::K5,
+            6 => KernelId::K6,
+            7 => KernelId::K7,
+            8 => KernelId::K8,
+            _ => KernelId::Chunked,
+        }
+    }
+
+    /// Whether this lane can run a job with `k` classes (the fixed lanes
+    /// are exact-K; chunked and generic take any K).
+    pub fn supports(self, k: usize) -> bool {
+        match self {
+            KernelId::K1 => k == 1,
+            KernelId::K2 => k == 2,
+            KernelId::K3 => k == 3,
+            KernelId::K4 => k == 4,
+            KernelId::K5 => k == 5,
+            KernelId::K6 => k == 6,
+            KernelId::K7 => k == 7,
+            KernelId::K8 => k == 8,
+            KernelId::Chunked | KernelId::Generic => true,
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelId::K1 => "k1",
+            KernelId::K2 => "k2",
+            KernelId::K3 => "k3",
+            KernelId::K4 => "k4",
+            KernelId::K5 => "k5",
+            KernelId::K6 => "k6",
+            KernelId::K7 => "k7",
+            KernelId::K8 => "k8",
+            KernelId::Chunked => "chunked",
+            KernelId::Generic => "generic",
+        }
+    }
+
+    /// All lanes, in counter order.
+    pub fn all() -> [KernelId; N_KERNELS] {
+        [
+            KernelId::K1,
+            KernelId::K2,
+            KernelId::K3,
+            KernelId::K4,
+            KernelId::K5,
+            KernelId::K6,
+            KernelId::K7,
+            KernelId::K8,
+            KernelId::Chunked,
+            KernelId::Generic,
+        ]
+    }
+}
+
+/// The per-job dispatch decision: which lane runs a job with `k`
+/// classes, resolved once per `accumulate_rows` call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelPlan {
+    pub id: KernelId,
+    pub k: usize,
+    /// True when a [`force_kernel`] override (parity tests, the roofline
+    /// bench) picked the lane instead of the K heuristic.
+    pub forced: bool,
+}
+
+impl KernelPlan {
+    pub fn for_job(k: usize) -> KernelPlan {
+        if let Some(id) = forced_kernel() {
+            if id.supports(k) {
+                return KernelPlan { id, k, forced: true };
+            }
+        }
+        KernelPlan { id: KernelId::for_k(k), k, forced: false }
+    }
+}
+
+/// Forced-lane override: `usize::MAX` = none, else the lane's index.
+static FORCED: AtomicUsize = AtomicUsize::new(usize::MAX);
+
+/// Force every subsequent dispatch onto one lane (`None` restores the K
+/// heuristic). Process-global — used by the parity test (compare a lane
+/// against the generic reference through identical call paths) and the
+/// roofline bench (time generic vs dispatched). A forced lane that does
+/// not support a job's K is ignored for that job.
+pub fn force_kernel(id: Option<KernelId>) {
+    FORCED.store(id.map(KernelId::index).unwrap_or(usize::MAX), Ordering::SeqCst);
+}
+
+/// The currently forced lane, if any.
+pub fn forced_kernel() -> Option<KernelId> {
+    match FORCED.load(Ordering::SeqCst) {
+        usize::MAX => None,
+        i => Some(KernelId::all()[i]),
+    }
+}
+
+struct KernelCounters {
+    dispatches: [AtomicU64; N_KERNELS],
+    split_rows: AtomicU64,
+}
+
+static COUNTERS: KernelCounters = KernelCounters {
+    dispatches: [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ],
+    split_rows: AtomicU64::new(0),
+};
+
+/// Point-in-time copy of the process-global kernel counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct KernelSnapshot {
+    /// `(lane name, dispatch count)` for every lane, in counter order.
+    pub dispatches: Vec<(&'static str, u64)>,
+    /// Hub rows computed as split segments (serial or parallel).
+    pub split_rows: u64,
+}
+
+impl KernelSnapshot {
+    /// Dispatch count for one lane.
+    pub fn count(&self, id: KernelId) -> u64 {
+        self.dispatches[id.index()].1
+    }
+
+    /// `"k3=12 chunked=4 split_rows=2"` — nonzero entries only; empty
+    /// when nothing has dispatched yet. This is the serve-summary line.
+    pub fn nonzero_line(&self) -> String {
+        let mut parts: Vec<String> = self
+            .dispatches
+            .iter()
+            .filter(|(_, c)| *c > 0)
+            .map(|(name, c)| format!("{name}={c}"))
+            .collect();
+        if self.split_rows > 0 {
+            parts.push(format!("split_rows={}", self.split_rows));
+        }
+        parts.join(" ")
+    }
+}
+
+/// Snapshot the process-global dispatch / split-row counters.
+pub fn counters_snapshot() -> KernelSnapshot {
+    KernelSnapshot {
+        dispatches: KernelId::all()
+            .iter()
+            .map(|&id| (id.name(), COUNTERS.dispatches[id.index()].load(Ordering::Relaxed)))
+            .collect(),
+        split_rows: COUNTERS.split_rows.load(Ordering::Relaxed),
+    }
+}
+
+/// Zero all counters (bench isolation; tests prefer before/after deltas
+/// since the counters are process-global).
+pub fn reset_counters() {
+    for c in &COUNTERS.dispatches {
+        c.store(0, Ordering::Relaxed);
+    }
+    COUNTERS.split_rows.store(0, Ordering::Relaxed);
+}
+
+/// Record `count` hub rows computed as split segments. Crate-internal:
+/// the serial segmented path and the parallel hub plan both report here.
+pub(crate) fn note_split_rows(count: u64) {
+    COUNTERS.split_rows.fetch_add(count, Ordering::Relaxed);
+}
+
+/// Estimated bytes one accumulation pass moves for a job of `n` rows,
+/// `m` directed edges and `k` classes: per edge one u32 column id, one
+/// f64 value, one i32 label gather and one f64 weight gather (plus one
+/// f64 scale gather under laplacian); per row a k-wide f64 write of the
+/// Z row plus its read-modify cycle (doubled again when correlation
+/// re-reads the row to normalize). Compulsory traffic only — the
+/// roofline bench divides it by measured ns for a bytes/ns figure
+/// comparable against the stream baseline.
+pub fn bytes_moved_estimate(n: usize, m: usize, k: usize, opts: &GeeOptions) -> u64 {
+    let per_edge: u64 = 4 + 8 + 4 + 8 + if opts.laplacian { 8 } else { 0 };
+    let mut per_row: u64 = 2 * 8 * k as u64;
+    if opts.correlation {
+        per_row += 2 * 8 * k as u64;
+    }
+    m as u64 * per_edge + n as u64 * per_row
+}
+
+/// Accumulate rows `r0..r1` of Z into `out` (their contiguous slice of
+/// the output buffer), with the lap/diag/cor options folded analytically.
+/// This is the single source of truth for the per-row accumulation: the
+/// serial prepared path runs it over `0..n`, the row-parallel engine per
+/// chunk, the pooled fused path over workspace buffers, and the sharded
+/// engine per shard — so the bitwise-identity contract between them
+/// cannot drift. Dispatches once per call to the lane
+/// [`KernelPlan::for_job`] picks for `ctx.k`.
+pub(crate) fn accumulate_rows(
+    ctx: &AccumCtx<'_>,
+    opts: &GeeOptions,
+    r0: usize,
+    r1: usize,
+    scale: Option<&[f64]>,
+    out: &mut [f64],
+) {
+    let plan = KernelPlan::for_job(ctx.k);
+    COUNTERS.dispatches[plan.id.index()].fetch_add(1, Ordering::Relaxed);
+    match plan.id {
+        KernelId::K1 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k1),
+        KernelId::K2 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k2),
+        KernelId::K3 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k3),
+        KernelId::K4 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k4),
+        KernelId::K5 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k5),
+        KernelId::K6 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k6),
+        KernelId::K7 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k7),
+        KernelId::K8 => rows_loop(ctx, opts, r0, r1, scale, out, seg_k8),
+        KernelId::Chunked => rows_loop(ctx, opts, r0, r1, scale, out, seg_chunked),
+        KernelId::Generic => rows_loop(ctx, opts, r0, r1, scale, out, seg_generic),
+    }
+}
+
+/// Accumulate one *segment* of row `r` — the edge contributions of
+/// `cols[lo..hi]` — into `out` (a zeroed k-vector), through the same
+/// dispatched lane `accumulate_rows` would use. No diag/cor epilogue and
+/// no segmentation: this is the parallel hub plan's phase-B primitive;
+/// the caller merges partials in segment order and runs
+/// [`row_epilogue`] itself.
+pub(crate) fn accumulate_segment(
+    ctx: &AccumCtx<'_>,
+    r: usize,
+    lo: usize,
+    hi: usize,
+    scale: Option<&[f64]>,
+    out: &mut [f64],
+) {
+    match KernelPlan::for_job(ctx.k).id {
+        KernelId::K1 => seg_k1(ctx, lo, hi, scale, r, out),
+        KernelId::K2 => seg_k2(ctx, lo, hi, scale, r, out),
+        KernelId::K3 => seg_k3(ctx, lo, hi, scale, r, out),
+        KernelId::K4 => seg_k4(ctx, lo, hi, scale, r, out),
+        KernelId::K5 => seg_k5(ctx, lo, hi, scale, r, out),
+        KernelId::K6 => seg_k6(ctx, lo, hi, scale, r, out),
+        KernelId::K7 => seg_k7(ctx, lo, hi, scale, r, out),
+        KernelId::K8 => seg_k8(ctx, lo, hi, scale, r, out),
+        KernelId::Chunked => seg_chunked(ctx, lo, hi, scale, r, out),
+        KernelId::Generic => seg_generic(ctx, lo, hi, scale, r, out),
+    }
+}
+
+/// The per-row diag/cor epilogue, shared by the straight path, the
+/// serial segmented path, and the parallel hub plan's merge — one
+/// implementation so the op order cannot drift between them.
+pub(crate) fn row_epilogue(
+    ctx: &AccumCtx<'_>,
+    opts: &GeeOptions,
+    r: usize,
+    scale: Option<&[f64]>,
+    zrow: &mut [f64],
+) {
+    if opts.diagonal {
+        let y = ctx.labels[r];
+        if y >= 0 {
+            let s2 = scale.map(|s| s[r] * s[r]).unwrap_or(1.0);
+            zrow[y as usize] += s2 * ctx.wv[r];
+        }
+    }
+    if opts.correlation {
+        // row-local, same op order as ops::normalize_rows
+        let norm: f64 = zrow.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let s = safe_recip(norm);
+        if s != 0.0 {
+            for x in zrow.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+}
+
+/// Row loop shared by every lane: straight accumulation for normal rows,
+/// fixed-order segmentation for hub rows, then the diag/cor epilogue.
+/// Monomorphized per lane (`seg` is a function item), so the inner loop
+/// inlines with no per-edge dispatch.
+fn rows_loop<F>(
+    ctx: &AccumCtx<'_>,
+    opts: &GeeOptions,
+    r0: usize,
+    r1: usize,
+    scale: Option<&[f64]>,
+    out: &mut [f64],
+    seg: F,
+) where
+    F: Fn(&AccumCtx<'_>, usize, usize, Option<&[f64]>, usize, &mut [f64]),
+{
+    let k = ctx.k;
+    debug_assert_eq!(out.len(), (r1 - r0) * k);
+    for r in r0..r1 {
+        let lo = ctx.indptr[r - ctx.row_base] as usize;
+        let hi = ctx.indptr[r - ctx.row_base + 1] as usize;
+        let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
+        let segs = hub_segments(hi - lo);
+        if segs == 1 {
+            seg(ctx, lo, hi, scale, r, zrow);
+        } else {
+            note_split_rows(1);
+            segmented_row(ctx, lo, hi, segs, scale, r, zrow, &seg);
+        }
+        row_epilogue(ctx, opts, r, scale, zrow);
+    }
+}
+
+/// Hub-row k-vectors up to this K live on the stack; larger K falls back
+/// to a per-row heap temp (hub rows are rare and huge, so the allocation
+/// amortizes; the zero-alloc serving contract covers k ≤ 64 regardless).
+const SEG_STACK_K: usize = 64;
+
+/// Serial hub row: each fixed-order segment sums into a zeroed k-vector,
+/// partials merge into the Z row lane-wise in segment order. Exactly the
+/// op sequence the parallel hub plan produces when its threads compute
+/// the same segments — bitwise-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn segmented_row<F>(
+    ctx: &AccumCtx<'_>,
+    lo: usize,
+    hi: usize,
+    segs: usize,
+    scale: Option<&[f64]>,
+    r: usize,
+    zrow: &mut [f64],
+    seg: &F,
+) where
+    F: Fn(&AccumCtx<'_>, usize, usize, Option<&[f64]>, usize, &mut [f64]),
+{
+    let k = ctx.k;
+    let nnz = hi - lo;
+    let mut stack = [0.0f64; SEG_STACK_K];
+    let mut heap: Vec<f64> = Vec::new();
+    let tmp: &mut [f64] = if k <= SEG_STACK_K {
+        &mut stack[..k]
+    } else {
+        heap.resize(k, 0.0);
+        &mut heap[..]
+    };
+    for si in 0..segs {
+        let (e0, e1) = segment_range(nnz, segs, si);
+        for x in tmp.iter_mut() {
+            *x = 0.0;
+        }
+        seg(ctx, lo + e0, lo + e1, scale, r, &mut tmp[..]);
+        for (z, &p) in zrow.iter_mut().zip(tmp.iter()) {
+            *z += p;
+        }
+    }
+}
+
+#[cold]
+#[inline(never)]
+fn bad_label(y: i32, k: usize) -> ! {
+    panic!("label {y} out of range for k={k} classes");
+}
+
+/// The reference lane — byte-for-byte the historical `accumulate_rows`
+/// inner loop. Every other lane must match it bitwise.
+fn seg_generic(
+    ctx: &AccumCtx<'_>,
+    lo: usize,
+    hi: usize,
+    scale: Option<&[f64]>,
+    r: usize,
+    zrow: &mut [f64],
+) {
+    match scale {
+        Some(s) => {
+            let sr = s[r];
+            for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
+                let c = c as usize;
+                let y = ctx.labels[c];
+                if y >= 0 {
+                    zrow[y as usize] += v * sr * s[c] * ctx.wv[c];
+                }
+            }
+        }
+        None => {
+            for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
+                let c = c as usize;
+                let y = ctx.labels[c];
+                if y >= 0 {
+                    zrow[y as usize] += v * ctx.wv[c];
+                }
+            }
+        }
+    }
+}
+
+/// K > 8 lane: edges four at a time, column ids and label gathers
+/// batched per group so several loads are in flight; each edge's
+/// product and add stay in edge order (same FP sequence as generic).
+fn seg_chunked(
+    ctx: &AccumCtx<'_>,
+    lo: usize,
+    hi: usize,
+    scale: Option<&[f64]>,
+    r: usize,
+    zrow: &mut [f64],
+) {
+    let cols = &ctx.cols[lo..hi];
+    let vals = &ctx.vals[lo..hi];
+    let labels = ctx.labels;
+    let wv = ctx.wv;
+    let mut c4 = cols.chunks_exact(4);
+    let mut v4 = vals.chunks_exact(4);
+    match scale {
+        Some(s) => {
+            let sr = s[r];
+            for (cc, vv) in (&mut c4).zip(&mut v4) {
+                let (c0, c1, c2, c3) =
+                    (cc[0] as usize, cc[1] as usize, cc[2] as usize, cc[3] as usize);
+                let (y0, y1, y2, y3) = (labels[c0], labels[c1], labels[c2], labels[c3]);
+                if y0 >= 0 {
+                    zrow[y0 as usize] += vv[0] * sr * s[c0] * wv[c0];
+                }
+                if y1 >= 0 {
+                    zrow[y1 as usize] += vv[1] * sr * s[c1] * wv[c1];
+                }
+                if y2 >= 0 {
+                    zrow[y2 as usize] += vv[2] * sr * s[c2] * wv[c2];
+                }
+                if y3 >= 0 {
+                    zrow[y3 as usize] += vv[3] * sr * s[c3] * wv[c3];
+                }
+            }
+            for (&c, &v) in c4.remainder().iter().zip(v4.remainder()) {
+                let c = c as usize;
+                let y = labels[c];
+                if y >= 0 {
+                    zrow[y as usize] += v * sr * s[c] * wv[c];
+                }
+            }
+        }
+        None => {
+            for (cc, vv) in (&mut c4).zip(&mut v4) {
+                let (c0, c1, c2, c3) =
+                    (cc[0] as usize, cc[1] as usize, cc[2] as usize, cc[3] as usize);
+                let (y0, y1, y2, y3) = (labels[c0], labels[c1], labels[c2], labels[c3]);
+                if y0 >= 0 {
+                    zrow[y0 as usize] += vv[0] * wv[c0];
+                }
+                if y1 >= 0 {
+                    zrow[y1 as usize] += vv[1] * wv[c1];
+                }
+                if y2 >= 0 {
+                    zrow[y2 as usize] += vv[2] * wv[c2];
+                }
+                if y3 >= 0 {
+                    zrow[y3 as usize] += vv[3] * wv[c3];
+                }
+            }
+            for (&c, &v) in c4.remainder().iter().zip(v4.remainder()) {
+                let c = c as usize;
+                let y = labels[c];
+                if y >= 0 {
+                    zrow[y as usize] += v * wv[c];
+                }
+            }
+        }
+    }
+}
+
+/// Generates one unrolled fixed-K lane: the Z row is held in named f64
+/// locals for the whole segment, loaded once on entry and stored once on
+/// exit, with a K-arm match steering each edge's add. Same products,
+/// same association, same add order as `seg_generic` — only the *memory
+/// traffic* changes, so the lanes are bitwise-identical.
+macro_rules! fixed_kernel {
+    ($fname:ident, $K:literal, [$(($acc:ident, $lane:literal)),+]) => {
+        fn $fname(
+            ctx: &AccumCtx<'_>,
+            lo: usize,
+            hi: usize,
+            scale: Option<&[f64]>,
+            r: usize,
+            zrow: &mut [f64],
+        ) {
+            debug_assert_eq!(zrow.len(), $K);
+            let cols = &ctx.cols[lo..hi];
+            let vals = &ctx.vals[lo..hi];
+            let labels = ctx.labels;
+            let wv = ctx.wv;
+            $(let mut $acc = zrow[$lane];)+
+            match scale {
+                Some(s) => {
+                    let sr = s[r];
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        let c = c as usize;
+                        let y = labels[c];
+                        if y >= 0 {
+                            let t = v * sr * s[c] * wv[c];
+                            match y {
+                                $($lane => $acc += t,)+
+                                _ => bad_label(y, $K),
+                            }
+                        }
+                    }
+                }
+                None => {
+                    for (&c, &v) in cols.iter().zip(vals) {
+                        let c = c as usize;
+                        let y = labels[c];
+                        if y >= 0 {
+                            let t = v * wv[c];
+                            match y {
+                                $($lane => $acc += t,)+
+                                _ => bad_label(y, $K),
+                            }
+                        }
+                    }
+                }
+            }
+            $(zrow[$lane] = $acc;)+
+        }
+    };
+}
+
+fixed_kernel!(seg_k1, 1, [(a0, 0)]);
+fixed_kernel!(seg_k2, 2, [(a0, 0), (a1, 1)]);
+fixed_kernel!(seg_k3, 3, [(a0, 0), (a1, 1), (a2, 2)]);
+fixed_kernel!(seg_k4, 4, [(a0, 0), (a1, 1), (a2, 2), (a3, 3)]);
+fixed_kernel!(seg_k5, 5, [(a0, 0), (a1, 1), (a2, 2), (a3, 3), (a4, 4)]);
+fixed_kernel!(seg_k6, 6, [(a0, 0), (a1, 1), (a2, 2), (a3, 3), (a4, 4), (a5, 5)]);
+fixed_kernel!(
+    seg_k7,
+    7,
+    [(a0, 0), (a1, 1), (a2, 2), (a3, 3), (a4, 4), (a5, 5), (a6, 6)]
+);
+fixed_kernel!(
+    seg_k8,
+    8,
+    [(a0, 0), (a1, 1), (a2, 2), (a3, 3), (a4, 4), (a5, 5), (a6, 6), (a7, 7)]
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_picks_fixed_lanes_then_chunked() {
+        assert_eq!(KernelId::for_k(1), KernelId::K1);
+        assert_eq!(KernelId::for_k(8), KernelId::K8);
+        assert_eq!(KernelId::for_k(9), KernelId::Chunked);
+        assert_eq!(KernelId::for_k(0), KernelId::Chunked);
+        assert_eq!(KernelId::for_k(100), KernelId::Chunked);
+        for (i, id) in KernelId::all().iter().enumerate() {
+            assert_eq!(id.index(), i, "counter order must match enum order");
+        }
+    }
+
+    #[test]
+    fn supports_gates_forced_lanes() {
+        assert!(KernelId::K3.supports(3));
+        assert!(!KernelId::K3.supports(4));
+        assert!(KernelId::Chunked.supports(3));
+        assert!(KernelId::Generic.supports(100));
+        // an incompatible forced lane is ignored for that job
+        force_kernel(Some(KernelId::K2));
+        let plan = KernelPlan::for_job(5);
+        assert_eq!(plan.id, KernelId::K5);
+        assert!(!plan.forced);
+        let plan2 = KernelPlan::for_job(2);
+        assert_eq!(plan2.id, KernelId::K2);
+        assert!(plan2.forced);
+        force_kernel(None);
+        assert_eq!(forced_kernel(), None);
+    }
+
+    #[test]
+    fn snapshot_line_formats_nonzero_lanes() {
+        let snap = KernelSnapshot {
+            dispatches: KernelId::all().iter().map(|&id| (id.name(), 0)).collect(),
+            split_rows: 0,
+        };
+        assert_eq!(snap.nonzero_line(), "");
+        let mut snap2 = snap.clone();
+        snap2.dispatches[KernelId::K3.index()].1 = 12;
+        snap2.dispatches[KernelId::Chunked.index()].1 = 4;
+        snap2.split_rows = 2;
+        assert_eq!(snap2.nonzero_line(), "k3=12 chunked=4 split_rows=2");
+        assert_eq!(snap2.count(KernelId::K3), 12);
+    }
+
+    #[test]
+    fn bytes_estimate_scales_with_options() {
+        let none = bytes_moved_estimate(100, 1000, 4, &GeeOptions::NONE);
+        let lap = bytes_moved_estimate(100, 1000, 4, &GeeOptions::new(true, false, false));
+        let all = bytes_moved_estimate(100, 1000, 4, &GeeOptions::ALL);
+        assert_eq!(none, 1000 * 24 + 100 * 64);
+        assert_eq!(lap, none + 1000 * 8);
+        assert_eq!(all, lap + 100 * 64);
+    }
+}

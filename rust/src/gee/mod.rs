@@ -7,6 +7,9 @@
 //! * [`edgelist_par::EdgeListParGee`] — edge-parallel edge-list GEE
 //!   (per-thread Z partials, deterministic merge)
 //! * [`sparse_gee::SparseGee`] — the paper's sparse pipeline (DOK→CSR)
+//! * [`kernel`] — runtime-dispatched accumulation lanes (unrolled
+//!   K∈{1..8} register kernels, chunked K>8, generic reference) shared
+//!   by every sparse-family engine; dispatch/split-row counters
 //! * [`parallel::ParallelGee`] — row-parallel sparse GEE (std threads,
 //!   bitwise-deterministic for any thread count)
 //! * [`workspace::EmbedWorkspace`] — pooled scratch buffers; every engine
@@ -20,6 +23,7 @@ pub mod edgelist_gee;
 pub mod edgelist_par;
 pub mod embed;
 pub mod fusion;
+pub mod kernel;
 pub mod options;
 pub mod parallel;
 pub mod sparse_gee;

@@ -34,6 +34,15 @@
 //!   the output is bitwise-deterministic regardless of thread count, and
 //!   bitwise-equal to the serial fused engine. The lap/diag/cor options
 //!   fold analytically exactly as the fused path does.
+//! * **hub rows** — a row whose nnz exceeds
+//!   [`HUB_SEGMENT_NNZ`](crate::sparse::partition::HUB_SEGMENT_NNZ) would
+//!   serialize its chunk no matter how the boundaries fall, so
+//!   [`accumulate_rows_par`] excises hub rows from the chunk plan and fans
+//!   their fixed-order column segments across *all* threads, then merges
+//!   the partials serially in segment order. The segment grid is the same
+//!   one the serial kernel uses (a pure function of nnz — see
+//!   [`super::kernel`]), so the result stays bitwise-identical to serial
+//!   at any thread count.
 //!
 //! No dependencies beyond std. Exposed through
 //! [`Engine::SparsePar`](super::embed::Engine) and the coordinator's
@@ -42,14 +51,19 @@
 
 use std::thread;
 
+use super::kernel::{
+    accumulate_rows, accumulate_segment, note_split_rows, row_epilogue, AccumCtx,
+};
 use super::options::GeeOptions;
 use super::sparse_gee::PreparedGraph;
 use super::weights::weight_values;
-use super::workspace::EmbedWorkspace;
+use super::workspace::{reset_f64, EmbedWorkspace};
 use crate::graph::Graph;
 use crate::sparse::index::to_index;
 use crate::sparse::ops::safe_recip_sqrt;
-use crate::sparse::partition::{even_chunks, nnz_chunks};
+use crate::sparse::partition::{
+    even_chunks, hub_segments, nnz_chunks, segment_range, HUB_SEGMENT_NNZ,
+};
 use crate::sparse::Dense;
 
 /// Below this many undirected edges `ParallelGee::embed` stays serial —
@@ -292,6 +306,171 @@ pub fn prepare_par(g: &Graph, threads: usize) -> PreparedGraph {
     }
 }
 
+/// Row-parallel accumulation over any prepared row-grouped structure —
+/// the one parallel work plan shared by the row-parallel engine
+/// ([`PreparedGraph::embed_par_into`]) and the sharded engine's hub
+/// shards ([`crate::shard::local::embed_shard_par`]).
+///
+/// Non-hub rows run in nnz-balanced contiguous chunks, one thread per
+/// chunk, exactly as before. Rows whose nnz exceeds
+/// [`HUB_SEGMENT_NNZ`] are *excised* from the chunks and computed as
+/// their fixed-order column segments fanned across all threads (phase
+/// B), each segment accumulating into its own zeroed k-vector in
+/// `seg_scratch`; the partials then merge into Z serially in segment
+/// order (phase C) followed by the shared per-row epilogue. Because the
+/// serial kernel computes hub rows as the *same* ordered segment
+/// partials ([`super::kernel`]'s `segmented_row`), the result is
+/// bitwise-identical to [`accumulate_rows`] for any thread count.
+///
+/// `out` must hold `(indptr.len() - 1) * k` zeros for the structure's
+/// rows; `seg_scratch` is caller-pooled scratch (sized here, zeroed per
+/// call) so steady-state embeds allocate nothing once warm.
+pub(crate) fn accumulate_rows_par(
+    ctx: &AccumCtx<'_>,
+    opts: &GeeOptions,
+    scale: Option<&[f64]>,
+    out: &mut [f64],
+    threads: usize,
+    seg_scratch: &mut Vec<f64>,
+) {
+    let rows = ctx.indptr.len() - 1;
+    let r0 = ctx.row_base;
+    let k = ctx.k;
+    debug_assert_eq!(out.len(), rows * k);
+    let t = threads.max(1).min(rows.max(1));
+    if t <= 1 {
+        accumulate_rows(ctx, opts, r0, r0 + rows, scale, out);
+        return;
+    }
+    // local (0-based) indices of rows that must be split
+    let hubs: Vec<usize> = (0..rows)
+        .filter(|&r| (ctx.indptr[r + 1] - ctx.indptr[r]) as usize > HUB_SEGMENT_NNZ)
+        .collect();
+    let bounds = nnz_chunks(ctx.indptr, t);
+
+    if hubs.is_empty() {
+        thread::scope(|s| {
+            let mut rest: &mut [f64] = out;
+            for w in bounds.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                let (chunk, next) = std::mem::take(&mut rest).split_at_mut((b - a) * k);
+                rest = next;
+                if a == b {
+                    continue;
+                }
+                s.spawn(move || accumulate_rows(ctx, opts, r0 + a, r0 + b, scale, chunk));
+            }
+        });
+        return;
+    }
+
+    // ---- phase A (parallel): non-hub rows in nnz-balanced chunks, hub
+    // rows skipped (their Z slots stay zero until phase C merges into them)
+    thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut *out;
+        let hubs = &hubs;
+        for w in bounds.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let (chunk, next) = std::mem::take(&mut rest).split_at_mut((b - a) * k);
+            rest = next;
+            if a == b {
+                continue;
+            }
+            s.spawn(move || {
+                let mut start = a;
+                let mut i = hubs.partition_point(|&h| h < a);
+                while i < hubs.len() && hubs[i] < b {
+                    let h = hubs[i];
+                    if h > start {
+                        accumulate_rows(
+                            ctx,
+                            opts,
+                            r0 + start,
+                            r0 + h,
+                            scale,
+                            &mut chunk[(start - a) * k..(h - a) * k],
+                        );
+                    }
+                    start = h + 1;
+                    i += 1;
+                }
+                if start < b {
+                    accumulate_rows(
+                        ctx,
+                        opts,
+                        r0 + start,
+                        r0 + b,
+                        scale,
+                        &mut chunk[(start - a) * k..(b - a) * k],
+                    );
+                }
+            });
+        }
+    });
+
+    // ---- phase B (parallel): every hub segment, fanned across all
+    // threads regardless of which row it belongs to. seg_offsets[i] is
+    // the first global segment index of hub i.
+    let mut seg_offsets: Vec<usize> = Vec::with_capacity(hubs.len() + 1);
+    seg_offsets.push(0);
+    for &h in &hubs {
+        let nnz = (ctx.indptr[h + 1] - ctx.indptr[h]) as usize;
+        let last = *seg_offsets.last().unwrap();
+        seg_offsets.push(last + hub_segments(nnz));
+    }
+    let total_segs = *seg_offsets.last().unwrap();
+    reset_f64(seg_scratch, total_segs * k);
+    let sbounds = even_chunks(total_segs, t);
+    thread::scope(|s| {
+        let mut rest: &mut [f64] = &mut seg_scratch[..];
+        let hubs = &hubs;
+        let seg_offsets = &seg_offsets;
+        for w in sbounds.windows(2) {
+            let (s0, s1) = (w[0], w[1]);
+            let (here, next) = std::mem::take(&mut rest).split_at_mut((s1 - s0) * k);
+            rest = next;
+            if s0 == s1 {
+                continue;
+            }
+            s.spawn(move || {
+                for gs in s0..s1 {
+                    let hi_idx = seg_offsets.partition_point(|&o| o <= gs) - 1;
+                    let h = hubs[hi_idx];
+                    let lo = ctx.indptr[h] as usize;
+                    let hi = ctx.indptr[h + 1] as usize;
+                    let nnz = hi - lo;
+                    let segs = hub_segments(nnz);
+                    let si = gs - seg_offsets[hi_idx];
+                    let (e0, e1) = segment_range(nnz, segs, si);
+                    accumulate_segment(
+                        ctx,
+                        r0 + h,
+                        lo + e0,
+                        lo + e1,
+                        scale,
+                        &mut here[(gs - s0) * k..(gs - s0 + 1) * k],
+                    );
+                }
+            });
+        }
+    });
+
+    // ---- phase C (serial): merge each hub's partials in segment order —
+    // the exact op sequence the serial segmented path performs — then the
+    // shared diag/cor epilogue.
+    note_split_rows(hubs.len() as u64);
+    for (hi_idx, &h) in hubs.iter().enumerate() {
+        let zrow = &mut out[h * k..(h + 1) * k];
+        for gs in seg_offsets[hi_idx]..seg_offsets[hi_idx + 1] {
+            let part = &seg_scratch[gs * k..(gs + 1) * k];
+            for (z, &p) in zrow.iter_mut().zip(part.iter()) {
+                *z += p;
+            }
+        }
+        row_epilogue(ctx, opts, r0 + h, scale, zrow);
+    }
+}
+
 impl PreparedGraph {
     /// Row-parallel embed: identical numerics to [`PreparedGraph::embed`]
     /// (bitwise — each row is one thread's sequential accumulation in the
@@ -321,23 +500,9 @@ impl PreparedGraph {
                 .extend(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
         }
         ws.reset_z(n, k);
-        let EmbedWorkspace { z, scale, .. } = ws;
+        let EmbedWorkspace { z, scale, seg_partials, .. } = ws;
         let sc_opt: Option<&[f64]> = if use_scale { Some(&scale[..]) } else { None };
-        let bounds = nnz_chunks(&self.indptr, t);
-        thread::scope(|s| {
-            let mut rest: &mut [f64] = &mut z.data;
-            for w in bounds.windows(2) {
-                let (r0, r1) = (w[0], w[1]);
-                let (chunk, next) =
-                    std::mem::take(&mut rest).split_at_mut((r1 - r0) * k);
-                rest = next;
-                if r0 == r1 {
-                    continue;
-                }
-                let sc = sc_opt;
-                s.spawn(move || self.embed_rows(opts, r0, r1, sc, chunk));
-            }
-        });
+        accumulate_rows_par(&self.ctx(), opts, sc_opt, &mut z.data, t, seg_partials);
     }
 }
 

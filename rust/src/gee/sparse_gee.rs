@@ -17,12 +17,13 @@
 //! (CSR×CSR, as published, vs CSR×dense which exploits K ≪ N). Defaults
 //! match the published pipeline; the §Perf pass benchmarks the knobs.
 
+use super::kernel::{accumulate_rows, AccumCtx};
 use super::options::GeeOptions;
 use super::weights::{weight_matrix_csr_direct, weight_matrix_dok, weight_values_into};
 use super::workspace::{reset_f64, reset_u32, EmbedWorkspace};
 use crate::graph::Graph;
 use crate::sparse::index::to_index;
-use crate::sparse::ops::{inv_sqrt_vec, normalize_rows, safe_recip, safe_recip_sqrt};
+use crate::sparse::ops::{inv_sqrt_vec, normalize_rows, safe_recip_sqrt};
 use crate::sparse::{Csr, Dense};
 
 /// How W_s is constructed.
@@ -250,86 +251,6 @@ pub(crate) fn prepare_into(
     }
 }
 
-/// Borrowed view of a prepared row-grouped structure — the single
-/// accumulation routine below runs over it whether the buffers live in a
-/// [`PreparedGraph`] or an [`EmbedWorkspace`].
-pub(crate) struct AccumCtx<'a> {
-    pub indptr: &'a [u32],
-    /// Global row id of `indptr[0]`: row `r` reads `indptr[r - row_base]`.
-    /// 0 for whole-graph structures; the sharded engine passes its shard's
-    /// first vertex so a shard-local indptr serves global row ids (labels,
-    /// weights and scale stay globally indexed either way).
-    pub row_base: usize,
-    pub cols: &'a [u32],
-    pub vals: &'a [f64],
-    pub labels: &'a [i32],
-    pub wv: &'a [f64],
-    pub k: usize,
-}
-
-/// Accumulate rows `r0..r1` of Z into `out` (their contiguous slice of
-/// the output buffer), with the lap/diag/cor options folded analytically.
-/// This is the single source of truth for the per-row accumulation: the
-/// serial prepared path runs it over `0..n`, the row-parallel engine per
-/// chunk, and the pooled fused path over workspace buffers — so the
-/// bitwise-identity contract between them cannot drift.
-pub(crate) fn accumulate_rows(
-    ctx: &AccumCtx<'_>,
-    opts: &GeeOptions,
-    r0: usize,
-    r1: usize,
-    scale: Option<&[f64]>,
-    out: &mut [f64],
-) {
-    let k = ctx.k;
-    debug_assert_eq!(out.len(), (r1 - r0) * k);
-    for r in r0..r1 {
-        let (lo, hi) = (
-            ctx.indptr[r - ctx.row_base] as usize,
-            ctx.indptr[r - ctx.row_base + 1] as usize,
-        );
-        let zrow = &mut out[(r - r0) * k..(r - r0 + 1) * k];
-        match scale {
-            Some(s) => {
-                let sr = s[r];
-                for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
-                    let c = c as usize;
-                    let y = ctx.labels[c];
-                    if y >= 0 {
-                        zrow[y as usize] += v * sr * s[c] * ctx.wv[c];
-                    }
-                }
-            }
-            None => {
-                for (&c, &v) in ctx.cols[lo..hi].iter().zip(&ctx.vals[lo..hi]) {
-                    let c = c as usize;
-                    let y = ctx.labels[c];
-                    if y >= 0 {
-                        zrow[y as usize] += v * ctx.wv[c];
-                    }
-                }
-            }
-        }
-        if opts.diagonal {
-            let y = ctx.labels[r];
-            if y >= 0 {
-                let s2 = scale.map(|s| s[r] * s[r]).unwrap_or(1.0);
-                zrow[y as usize] += s2 * ctx.wv[r];
-            }
-        }
-        if opts.correlation {
-            // row-local, same op order as ops::normalize_rows
-            let norm: f64 = zrow.iter().map(|x| x * x).sum::<f64>().sqrt();
-            let s = safe_recip(norm);
-            if s != 0.0 {
-                for x in zrow.iter_mut() {
-                    *x *= s;
-                }
-            }
-        }
-    }
-}
-
 /// The §Perf fused pipeline with every buffer borrowed from `ws`: one
 /// counting sort into the workspace's prepared-structure buffers, then
 /// one accumulation pass into `ws.z`. **Zero heap allocations** once the
@@ -444,7 +365,12 @@ impl PreparedGraph {
         scale: Option<&[f64]>,
         out: &mut [f64],
     ) {
-        let ctx = AccumCtx {
+        accumulate_rows(&self.ctx(), opts, r0, r1, scale, out);
+    }
+
+    /// Kernel view of the prepared structure (whole-graph: `row_base` 0).
+    pub(crate) fn ctx(&self) -> AccumCtx<'_> {
+        AccumCtx {
             indptr: &self.indptr[..],
             row_base: 0,
             cols: &self.cols[..],
@@ -452,8 +378,7 @@ impl PreparedGraph {
             labels: &self.labels[..],
             wv: &self.wv[..],
             k: self.k,
-        };
-        accumulate_rows(&ctx, opts, r0, r1, scale, out);
+        }
     }
 }
 

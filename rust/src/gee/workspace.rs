@@ -43,6 +43,9 @@ pub struct EmbedWorkspace {
     pub(crate) vals: Vec<f64>,
     /// Per-thread partial Z buffers for the edge-parallel engine.
     pub(crate) partials: Vec<Vec<f64>>,
+    /// Hub-segment partial rows (total_segments × k) for the parallel
+    /// hub plan in `gee::parallel::accumulate_rows_par`.
+    pub(crate) seg_partials: Vec<f64>,
 }
 
 impl EmbedWorkspace {
@@ -60,6 +63,7 @@ impl EmbedWorkspace {
             cols: Vec::new(),
             vals: Vec::new(),
             partials: Vec::new(),
+            seg_partials: Vec::new(),
         }
     }
 
@@ -83,7 +87,7 @@ impl EmbedWorkspace {
     pub fn capacity_bytes(&self) -> usize {
         self.z.data.capacity() * 8
             + (self.scale.capacity() + self.deg.capacity() + self.wv.capacity()) * 8
-            + (self.nk.capacity() + self.vals.capacity()) * 8
+            + (self.nk.capacity() + self.vals.capacity() + self.seg_partials.capacity()) * 8
             + (self.indptr.capacity() + self.next.capacity() + self.cols.capacity()) * 4
             + self.partials.iter().map(|p| p.capacity() * 8).sum::<usize>()
     }

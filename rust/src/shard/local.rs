@@ -6,13 +6,18 @@
 //! — and because the incident edges arrive in global storage order, each
 //! row's entries land in exactly the order the whole-graph counting sort
 //! would produce. The accumulation then *is*
-//! [`accumulate_rows`](crate::gee::sparse_gee::accumulate_rows) — the
-//! crate's single per-row kernel — viewing the shard-local `indptr`
-//! through its `row_base` offset. Net effect: shard outputs are
-//! **bitwise-identical** to `SparseGee::fast()`, not merely close.
+//! [`accumulate_rows`](crate::gee::kernel::accumulate_rows) — the
+//! crate's single per-row kernel (runtime-dispatched small-K lanes and
+//! all) — viewing the shard-local `indptr` through its `row_base`
+//! offset. Net effect: shard outputs are **bitwise-identical** to
+//! `SparseGee::fast()`, not merely close. Hub shards (flagged by the
+//! planner) additionally get [`embed_shard_par`], which fans hub-row
+//! segments across threads through the same fixed-order plan the serial
+//! kernel uses — still bitwise-identical.
 
+use crate::gee::kernel::{accumulate_rows, AccumCtx};
 use crate::gee::options::GeeOptions;
-use crate::gee::sparse_gee::{accumulate_rows, AccumCtx};
+use crate::gee::parallel::accumulate_rows_par;
 use crate::gee::workspace::{reset_f64, reset_u32, EmbedWorkspace};
 use crate::sparse::index::to_index;
 
@@ -42,12 +47,76 @@ pub(crate) fn embed_shard(
     ws: &mut EmbedWorkspace,
     out: &mut [f64],
 ) {
+    debug_assert_eq!(out.len(), (v1 - v0) * k);
+    let EmbedWorkspace { indptr, next, cols, vals, .. } = ws;
+    build_local_structure(src, dst, w, v0, v1, indptr, next, cols, vals);
+    let ctx = AccumCtx {
+        indptr: &indptr[..],
+        row_base: v0,
+        cols: &cols[..],
+        vals: &vals[..],
+        labels,
+        wv,
+        k,
+    };
+    accumulate_rows(&ctx, opts, v0, v1, scale, out);
+}
+
+/// Thread-parallel twin of [`embed_shard`] for hub shards: same local
+/// structure build, then [`accumulate_rows_par`] — non-hub rows in
+/// nnz-balanced chunks, hub rows split into fixed-order segments fanned
+/// across `threads`. Bitwise-identical to `embed_shard` (the serial
+/// kernel computes hub rows through the same segment grid).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn embed_shard_par(
+    src: &[u32],
+    dst: &[u32],
+    w: &[f64],
+    v0: usize,
+    v1: usize,
+    labels: &[i32],
+    wv: &[f64],
+    scale: Option<&[f64]>,
+    k: usize,
+    opts: &GeeOptions,
+    threads: usize,
+    ws: &mut EmbedWorkspace,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(out.len(), (v1 - v0) * k);
+    let EmbedWorkspace { indptr, next, cols, vals, seg_partials, .. } = ws;
+    build_local_structure(src, dst, w, v0, v1, indptr, next, cols, vals);
+    let ctx = AccumCtx {
+        indptr: &indptr[..],
+        row_base: v0,
+        cols: &cols[..],
+        vals: &vals[..],
+        labels,
+        wv,
+        k,
+    };
+    accumulate_rows_par(&ctx, opts, scale, out, threads, seg_partials);
+}
+
+/// Counting-sort the shard's incident edges into the row-grouped local
+/// structure (`indptr` row pointers over `[v0, v1)`, `cols`/`vals` in
+/// global storage order per row) — shared by the serial and parallel
+/// shard embeds so the structure cannot drift between them.
+#[allow(clippy::too_many_arguments)]
+fn build_local_structure(
+    src: &[u32],
+    dst: &[u32],
+    w: &[f64],
+    v0: usize,
+    v1: usize,
+    indptr: &mut Vec<u32>,
+    next: &mut Vec<u32>,
+    cols: &mut Vec<u32>,
+    vals: &mut Vec<f64>,
+) {
     let rows = v1 - v0;
-    debug_assert_eq!(out.len(), rows * k);
     debug_assert_eq!(src.len(), dst.len());
     debug_assert_eq!(src.len(), w.len());
-
-    let EmbedWorkspace { indptr, next, cols, vals, .. } = ws;
 
     // counting pass over the shard's incident edges. `slots` tracks the
     // exact in-range directed-slot total in u64 so the u32 fit check
@@ -96,17 +165,6 @@ pub(crate) fn embed_shard(
             next[b - v0] += 1;
         }
     }
-
-    let ctx = AccumCtx {
-        indptr: &indptr[..],
-        row_base: v0,
-        cols: &cols[..],
-        vals: &vals[..],
-        labels,
-        wv,
-        k,
-    };
-    accumulate_rows(&ctx, opts, v0, v1, scale, out);
 }
 
 #[cfg(test)]
@@ -179,6 +237,55 @@ mod tests {
                     whole.data[v0 * g.k..v1 * g.k],
                     "shard {s} rows drifted at {opts:?}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn embed_shard_par_bitwise_matches_serial() {
+        let g = random_graph(513, 80, 600, 3);
+        let plan = ShardPlan::from_graph(&g, 3);
+        let mut ws = EmbedWorkspace::new();
+        let mut ws_par = EmbedWorkspace::new();
+        for opts in GeeOptions::table_order() {
+            let scale = plan.scale_for(&opts);
+            for s in 0..plan.shards() {
+                let (v0, v1) = plan.shard_range(s);
+                let (src, dst, w) = gather(&g, v0, v1);
+                let mut serial = vec![0.0; (v1 - v0) * g.k];
+                embed_shard(
+                    &src,
+                    &dst,
+                    &w,
+                    v0,
+                    v1,
+                    &g.labels,
+                    &plan.wv,
+                    scale.as_deref(),
+                    g.k,
+                    &opts,
+                    &mut ws,
+                    &mut serial,
+                );
+                for t in [1usize, 2, 4] {
+                    let mut par = vec![0.0; (v1 - v0) * g.k];
+                    embed_shard_par(
+                        &src,
+                        &dst,
+                        &w,
+                        v0,
+                        v1,
+                        &g.labels,
+                        &plan.wv,
+                        scale.as_deref(),
+                        g.k,
+                        &opts,
+                        t,
+                        &mut ws_par,
+                        &mut par,
+                    );
+                    assert_eq!(par, serial, "shard {s} par t={t} drifted at {opts:?}");
+                }
             }
         }
     }

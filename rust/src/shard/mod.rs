@@ -134,10 +134,15 @@ impl ShardedGee {
         let scale = plan.scale_for(opts);
         let mut z = Dense::zeros(n, k);
 
-        // hand each worker thread its shards' disjoint Z row blocks
+        // hand each worker thread its shards' disjoint Z row blocks.
+        // Hub shards (one mega-vertex dominates the shard's work —
+        // see ShardPlan::hub_shards) are held back and run one at a
+        // time with *all* threads fanning the hub's fixed-order
+        // segments, instead of serializing one round-robin worker.
         let t = resolve_threads(self.threads).min(s_count.max(1));
         let mut assignments: Vec<Vec<(usize, &mut [f64])>> =
             (0..t).map(|_| Vec::new()).collect();
+        let mut hub_work: Vec<(usize, &mut [f64])> = Vec::new();
         {
             let mut rest: &mut [f64] = &mut z.data;
             for s in 0..s_count {
@@ -145,7 +150,11 @@ impl ShardedGee {
                 let (here, next) =
                     std::mem::take(&mut rest).split_at_mut((v1 - v0) * k);
                 rest = next;
-                assignments[s % t].push((s, here));
+                if t > 1 && plan.hub_shards.binary_search(&s).is_ok() {
+                    hub_work.push((s, here));
+                } else {
+                    assignments[s % t].push((s, here));
+                }
             }
         }
 
@@ -179,6 +188,29 @@ impl ShardedGee {
                 });
             }
         });
+
+        // hub shards, one at a time, all threads on each
+        if !hub_work.is_empty() {
+            let mut ws = EmbedWorkspace::new();
+            for (s, out) in hub_work {
+                let (v0, v1) = plan.shard_range(s);
+                local::embed_shard_par(
+                    &shard_src[s],
+                    &shard_dst[s],
+                    &shard_w[s],
+                    v0,
+                    v1,
+                    &g.labels,
+                    &plan.wv,
+                    scale.as_deref(),
+                    k,
+                    opts,
+                    t,
+                    &mut ws,
+                    out,
+                );
+            }
+        }
         z
     }
 }
@@ -239,6 +271,33 @@ mod tests {
         for t in [2usize, 3, 8] {
             let z = ShardedGee::with_threads(5, t).embed(&g, &opts);
             assert_eq!(z.data, base.data, "t={t} changed sharded output");
+        }
+    }
+
+    #[test]
+    fn hub_shard_splitting_stays_bitwise() {
+        use crate::sparse::partition::HUB_SEGMENT_NNZ;
+        let n = 64usize;
+        let mut rng = Rng::new(525);
+        let mut g = Graph::new(n, 3);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        // hub vertex 0: well past the segmentation threshold
+        for i in 0..(HUB_SEGMENT_NNZ + 500) {
+            g.add_edge(0, (1 + (i % (n - 1))) as u32, rng.f64() + 0.1);
+        }
+        for _ in 0..300 {
+            g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        let plan = ShardPlan::from_graph(&g, 4);
+        assert!(!plan.hub_shards.is_empty(), "hub vertex must be flagged");
+        for opts in GeeOptions::table_order() {
+            let fused = SparseGee::fast().embed(&g, &opts);
+            for t in [1usize, 2, 4] {
+                let z = ShardedGee::with_threads(4, t).embed(&g, &opts);
+                assert_eq!(z.data, fused.data, "hub shard t={t} at {opts:?}");
+            }
         }
     }
 

@@ -21,7 +21,7 @@ use crate::gee::options::GeeOptions;
 use crate::gee::weights::weight_values;
 use crate::graph::Graph;
 use crate::sparse::ops::safe_recip_sqrt;
-use crate::sparse::partition::{nnz_chunks_u64, resolve_threads};
+use crate::sparse::partition::{nnz_chunks_u64, resolve_threads, HUB_SEGMENT_NNZ};
 use crate::sparse::MAX_INDEX;
 
 /// Everything phase 2 needs, computed once in phase 1.
@@ -41,6 +41,14 @@ pub struct ShardPlan {
     /// Total directed slots (2·proper + self loops) as u64 — allowed to
     /// exceed the u32 index space; only per-shard slices must fit.
     pub directed: u64,
+    /// Shards (ascending indices) containing at least one hub vertex —
+    /// one whose directed-slot count exceeds
+    /// [`HUB_SEGMENT_NNZ`]. `nnz_chunks_u64` can only *isolate* such a
+    /// vertex, never split it, so these shards are the ones whose wall
+    /// clock one mega-vertex dominates; the in-process engine runs them
+    /// thread-parallel through `local::embed_shard_par` instead of
+    /// packing them into the round-robin shard assignment.
+    pub hub_shards: Vec<usize>,
 }
 
 impl ShardPlan {
@@ -161,6 +169,16 @@ impl GlobalPass {
             prefix.push(run);
         }
         let bounds = nnz_chunks_u64(&prefix, shards);
+        let hub_shards: Vec<usize> = bounds
+            .windows(2)
+            .enumerate()
+            .filter(|(_, w)| {
+                self.counts[w[0]..w[1]]
+                    .iter()
+                    .any(|&c| c > HUB_SEGMENT_NNZ as u64)
+            })
+            .map(|(s, _)| s)
+            .collect();
         ShardPlan {
             n,
             k,
@@ -168,6 +186,7 @@ impl GlobalPass {
             deg: self.deg,
             wv: weight_values(labels, k),
             directed: self.directed,
+            hub_shards,
         }
     }
 }
@@ -223,6 +242,24 @@ mod tests {
         // raised so each shard's slice fits u32 (with 4x headroom)
         let huge = 3 * (MAX_INDEX as u64); // ~12.9B directed slots
         assert!(resolve_shards(1, usize::MAX >> 8, huge) >= 12);
+    }
+
+    #[test]
+    fn hub_shards_flag_mega_vertices() {
+        let n = 50usize;
+        let mut g = Graph::new(n, 2);
+        for l in g.labels.iter_mut() {
+            *l = 0;
+        }
+        // center 0 accumulates > HUB_SEGMENT_NNZ directed slots
+        for i in 0..(HUB_SEGMENT_NNZ + 10) {
+            g.add_edge(0, (1 + (i % (n - 1))) as u32, 1.0);
+        }
+        let plan = ShardPlan::from_graph(&g, 4);
+        assert_eq!(plan.hub_shards, vec![plan.shard_of(0)]);
+        // hub-free graphs flag nothing
+        let g2 = random_graph(504, 100, 400, 3);
+        assert!(ShardPlan::from_graph(&g2, 4).hub_shards.is_empty());
     }
 
     #[test]

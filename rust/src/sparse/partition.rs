@@ -3,7 +3,17 @@
 //! engine (`gee::parallel`), reused by `Csr::spmm_dense_par` and the
 //! parallel count-merge. Balancing by nonzero count (not row count)
 //! keeps skewed-degree graphs (Chung-Lu hubs) from serializing on one
-//! thread; a hub row cannot be split, only isolated in its own chunk.
+//! thread.
+//!
+//! Hub rows get a second mechanism: a row whose nnz exceeds
+//! [`HUB_SEGMENT_NNZ`] is *split* into fixed-order column segments
+//! ([`hub_segments`]/[`segment_range`]). The segment grid depends only on
+//! the row's nnz — never on the thread count — so every engine (serial
+//! included) computes a hub row as the same ordered sequence of segment
+//! partials, and a parallel lane may fan the segments across threads
+//! while staying bitwise-identical to the serial kernel (Edge-Parallel
+//! GEE, arXiv:2402.04403, is the motivating workload: one mega-vertex
+//! must not serialize a chunk or a shard).
 
 /// Resolve a requested worker-thread count against the machine: `0`
 /// means "use all available parallelism", explicit requests are capped
@@ -21,7 +31,12 @@ pub fn resolve_threads(requested: usize) -> usize {
 }
 
 /// Pick `chunks` contiguous row ranges with roughly equal nonzero counts.
-/// Returns `chunks + 1` non-decreasing boundaries from 0 to n.
+/// Returns `chunks + 1` strictly increasing boundaries from 0 to n (no
+/// chunk is ever empty once `chunks <= n`): when one hub row's nnz spans
+/// several balance targets, the scan used to park consecutive boundaries
+/// on the same row — one chunk held nearly all work while its neighbors
+/// held none. Each boundary now advances at least one row past the
+/// previous one and leaves at least one row for every remaining chunk.
 /// `indptr` is a CSR row-pointer array (length n+1, u32-compacted).
 pub fn nnz_chunks(indptr: &[u32], chunks: usize) -> Vec<usize> {
     let n = indptr.len() - 1;
@@ -31,11 +46,11 @@ pub fn nnz_chunks(indptr: &[u32], chunks: usize) -> Vec<usize> {
     bounds.push(0usize);
     for i in 1..chunks {
         let target = (total as u128 * i as u128 / chunks as u128) as usize;
-        let mut r = *bounds.last().unwrap();
+        let mut r = *bounds.last().unwrap() + 1;
         while r < n && (indptr[r] as usize) < target {
             r += 1;
         }
-        bounds.push(r);
+        bounds.push(r.min(n - (chunks - i)));
     }
     bounds.push(n);
     bounds
@@ -53,14 +68,40 @@ pub fn nnz_chunks_u64(prefix: &[u64], chunks: usize) -> Vec<usize> {
     bounds.push(0usize);
     for i in 1..chunks {
         let target = (total as u128 * i as u128 / chunks as u128) as u64;
-        let mut r = *bounds.last().unwrap();
+        let mut r = *bounds.last().unwrap() + 1;
         while r < n && prefix[r] < target {
             r += 1;
         }
-        bounds.push(r);
+        bounds.push(r.min(n - (chunks - i)));
     }
     bounds.push(n);
     bounds
+}
+
+/// Nonzeros per hub-row segment. A row with more than this many stored
+/// entries is accumulated as a fixed sequence of segment partials merged
+/// in order (see the module docs); rows at or under it take the straight
+/// single-pass path. The value is a *numerics contract*, not a tuning
+/// knob: changing it changes which rows are segmented and therefore the
+/// exact floating-point sums every engine produces.
+pub const HUB_SEGMENT_NNZ: usize = 8_192;
+
+/// Number of fixed-order segments a row of `nnz` stored entries is
+/// computed in: 1 below the hub threshold, `ceil(nnz / HUB_SEGMENT_NNZ)`
+/// above it. A pure function of nnz so serial and parallel lanes agree.
+pub fn hub_segments(nnz: usize) -> usize {
+    if nnz <= HUB_SEGMENT_NNZ {
+        1
+    } else {
+        (nnz + HUB_SEGMENT_NNZ - 1) / HUB_SEGMENT_NNZ
+    }
+}
+
+/// Half-open sub-range (relative to the row's nonzero slice) covered by
+/// segment `i` of `segs` — near-equal sizes, deterministic in
+/// `(nnz, segs)` alone.
+pub fn segment_range(nnz: usize, segs: usize, i: usize) -> (usize, usize) {
+    (nnz * i / segs, nnz * (i + 1) / segs)
 }
 
 /// Split `0..n` into `chunks` contiguous ranges of near-equal length.
@@ -122,6 +163,55 @@ mod tests {
         let b = nnz_chunks_u64(&big, 2);
         assert_eq!(b, vec![0, 1, 2]);
         assert_eq!(nnz_chunks_u64(&[0], 4), vec![0, 0]);
+    }
+
+    #[test]
+    fn nnz_chunks_skewed_hub_prefix_has_no_empty_chunks() {
+        // 5 rows, one hub carrying ~92% of the nnz. The old scan parked
+        // boundaries 2 and 3 on the hub's end row, leaving empty chunks
+        // ([0, 2, 2, 2, 5]); boundaries must now be strictly increasing.
+        let indptr: Vec<u32> = vec![0, 1, 101, 104, 107, 110];
+        let b = nnz_chunks(&indptr, 4);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&5));
+        assert!(b.windows(2).all(|w| w[0] < w[1]), "empty chunk in {b:?}");
+        let prefix: Vec<u64> = indptr.iter().map(|&x| x as u64).collect();
+        assert_eq!(nnz_chunks_u64(&prefix, 4), b, "u64 twin drifted");
+        // a hub that spans every balance target, at each chunk count
+        let hubby: Vec<u32> = vec![0, 0, 1000, 1000, 1001, 1002, 1002];
+        for chunks in 2..=6 {
+            let b = nnz_chunks(&hubby, chunks);
+            assert_eq!(b.len(), chunks + 1, "chunks={chunks}: {b:?}");
+            assert!(
+                b.windows(2).all(|w| w[0] < w[1]),
+                "chunks={chunks}: empty chunk in {b:?}"
+            );
+            assert_eq!(b.last(), Some(&6));
+        }
+    }
+
+    #[test]
+    fn hub_segments_and_ranges_cover_exactly() {
+        assert_eq!(hub_segments(0), 1);
+        assert_eq!(hub_segments(HUB_SEGMENT_NNZ), 1);
+        assert_eq!(hub_segments(HUB_SEGMENT_NNZ + 1), 2);
+        assert_eq!(hub_segments(3 * HUB_SEGMENT_NNZ), 3);
+        for nnz in [
+            HUB_SEGMENT_NNZ + 1,
+            2 * HUB_SEGMENT_NNZ + 77,
+            5 * HUB_SEGMENT_NNZ,
+        ] {
+            let segs = hub_segments(nnz);
+            let mut prev = 0usize;
+            for i in 0..segs {
+                let (a, b) = segment_range(nnz, segs, i);
+                assert_eq!(a, prev, "gap at segment {i} of {segs} (nnz={nnz})");
+                assert!(b > a, "empty segment {i} of {segs} (nnz={nnz})");
+                assert!(b - a <= HUB_SEGMENT_NNZ + segs, "oversized segment");
+                prev = b;
+            }
+            assert_eq!(prev, nnz, "segments must cover the row");
+        }
     }
 
     #[test]

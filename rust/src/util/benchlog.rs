@@ -41,6 +41,13 @@ pub struct BenchRecord {
     /// instead of anecdote.
     pub bytes_sent: u64,
     pub bytes_received: u64,
+    /// Roofline accounting (kernel benches; 0.0 elsewhere): estimated
+    /// compulsory bytes moved per nanosecond of median wall time...
+    pub bytes_per_ns: f64,
+    /// ...and that figure as a percentage of the measured stream
+    /// (triad) bandwidth over comparable buffer sizes — how close the
+    /// lane sits to the memory-bandwidth ceiling.
+    pub pct_of_stream: f64,
 }
 
 impl BenchRecord {
@@ -49,7 +56,8 @@ impl BenchRecord {
         format!(
             "{{\"bench\": \"{}\", \"engine\": \"{}\", \"n\": {}, \"m\": {}, \
              \"k\": {}, \"threads\": {}, \"median_ns\": {}, \"speedup\": {:.4}, \
-             \"bytes_sent\": {}, \"bytes_received\": {}}}",
+             \"bytes_sent\": {}, \"bytes_received\": {}, \
+             \"bytes_per_ns\": {:.4}, \"pct_of_stream\": {:.2}}}",
             escape(&self.bench),
             escape(&self.engine),
             self.n,
@@ -59,7 +67,9 @@ impl BenchRecord {
             self.median_ns,
             self.speedup,
             self.bytes_sent,
-            self.bytes_received
+            self.bytes_received,
+            self.bytes_per_ns,
+            self.pct_of_stream
         )
     }
 }
@@ -125,6 +135,8 @@ fn render_record(rec: &Json) -> String {
         speedup: u("speedup"),
         bytes_sent: u("bytes_sent") as u64,
         bytes_received: u("bytes_received") as u64,
+        bytes_per_ns: u("bytes_per_ns"),
+        pct_of_stream: u("pct_of_stream"),
     }
     .to_json()
 }
@@ -167,6 +179,8 @@ mod tests {
             speedup: 2.5,
             bytes_sent: 42,
             bytes_received: 7,
+            bytes_per_ns: 3.25,
+            pct_of_stream: 41.5,
         };
         let doc = Json::parse(&r.to_json()).unwrap();
         assert_eq!(doc.get("engine").unwrap().as_str(), Some("sparse-par"));
@@ -176,6 +190,8 @@ mod tests {
         assert!((doc.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-9);
         assert_eq!(doc.get("bytes_sent").unwrap().as_usize(), Some(42));
         assert_eq!(doc.get("bytes_received").unwrap().as_usize(), Some(7));
+        assert!((doc.get("bytes_per_ns").unwrap().as_f64().unwrap() - 3.25).abs() < 1e-9);
+        assert!((doc.get("pct_of_stream").unwrap().as_f64().unwrap() - 41.5).abs() < 1e-9);
     }
 
     #[test]

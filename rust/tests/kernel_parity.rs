@@ -1,0 +1,216 @@
+//! Kernel-dispatch parity suite — pins the ISSUE 7 contract: runtime
+//! lane selection must never change a result, only its speed.
+//!
+//! * K ∈ {1..8} (fixed register lanes), {16, 32} (chunked lane)
+//!   × the full lap/diag/cor option grid
+//!   × SBM, Chung-Lu and uniform-random graphs (self loops, unlabeled
+//!   vertices) plus a star graph whose center row exceeds
+//!   [`HUB_SEGMENT_NNZ`] — the split-hub merge path;
+//! * every dispatched lane is compared **bitwise** against the generic
+//!   kernel forced through the identical call path;
+//! * the row-parallel and sharded engines stay bitwise at 1–8 threads /
+//!   shards on hub graphs, so segment fan-out composes with dispatch.
+//!
+//! `force_kernel` is process-global, so every test here serializes on
+//! one mutex and restores the heuristic through an RAII guard — a
+//! panicking assertion must not leak a forced lane into other tests.
+
+use std::sync::Mutex;
+
+use gee_sparse::gee::kernel::{counters_snapshot, force_kernel, KernelId};
+use gee_sparse::gee::parallel::{prepare_par, ParallelGee};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::{EmbedWorkspace, GeeOptions};
+use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::shard::ShardedGee;
+use gee_sparse::sparse::partition::HUB_SEGMENT_NNZ;
+use gee_sparse::sparse::Dense;
+use gee_sparse::util::rng::Rng;
+
+/// Serializes every test that reads or writes the forced-lane override.
+static FORCE_LOCK: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    // a poisoned lock just means another parity test's assert fired;
+    // the guard below already restored the heuristic
+    FORCE_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Restores the K heuristic even when an assertion unwinds.
+struct ForceGuard;
+
+impl ForceGuard {
+    fn force(id: KernelId) -> ForceGuard {
+        force_kernel(Some(id));
+        ForceGuard
+    }
+}
+
+impl Drop for ForceGuard {
+    fn drop(&mut self) {
+        force_kernel(None);
+    }
+}
+
+/// Uniform random graph with self loops and ~8% unlabeled vertices.
+fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = if rng.f64() < 0.08 { -1 } else { rng.below(k) as i32 };
+    }
+    for _ in 0..m {
+        g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+    }
+    g.add_edge(2, 2, 1.5);
+    g
+}
+
+/// Star graph: vertex 0's row exceeds the hub-segmentation threshold,
+/// plus random background edges so other rows are ordinary.
+fn hub_graph(seed: u64, n: usize, k: usize, center_extra: usize) -> Graph {
+    let mut rng = Rng::new(seed);
+    let mut g = Graph::new(n, k);
+    for l in g.labels.iter_mut() {
+        *l = rng.below(k) as i32;
+    }
+    for i in 0..HUB_SEGMENT_NNZ + center_extra {
+        g.add_edge(0, (1 + (i % (n - 1))) as u32, rng.f64() + 0.1);
+    }
+    for _ in 0..n {
+        g.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+    }
+    g
+}
+
+/// The generic kernel's answer through the same fused call path.
+fn generic_oracle(g: &Graph, opts: &GeeOptions) -> Dense {
+    let _guard = ForceGuard::force(KernelId::Generic);
+    SparseGee::fast().embed(g, opts)
+}
+
+/// Dispatched result == forced-generic result, bitwise, through the
+/// fused, prepared, pooled-prepared, row-parallel and sharded lanes.
+fn assert_dispatch_invariant(name: &str, g: &Graph) {
+    let prepared = SparseGee::prepare(g);
+    let mut ws = EmbedWorkspace::new();
+    for opts in GeeOptions::table_order() {
+        let oracle = generic_oracle(g, &opts);
+
+        let fused = SparseGee::fast().embed(g, &opts);
+        assert_eq!(fused.data, oracle.data, "{name}: fused lane drifted at {opts:?}");
+
+        let prep = prepared.embed(&opts);
+        assert_eq!(prep.data, oracle.data, "{name}: prepared lane drifted at {opts:?}");
+
+        prepared.embed_into(&opts, &mut ws);
+        assert_eq!(ws.z.data, oracle.data, "{name}: pooled lane drifted at {opts:?}");
+
+        for t in [1usize, 2, 4, 8] {
+            let par = prepared.embed_par(&opts, t);
+            assert_eq!(
+                par.data, oracle.data,
+                "{name}: row-parallel t={t} drifted at {opts:?}"
+            );
+        }
+
+        for s in [1usize, 3] {
+            let shard = ShardedGee::new(s).embed(g, &opts);
+            assert_eq!(
+                shard.data, oracle.data,
+                "{name}: sharded s={s} drifted at {opts:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fixed_lanes_bitwise_match_generic_k1_to_k8() {
+    let _l = lock();
+    for k in 1usize..=8 {
+        let g = random_graph(100 + k as u64, 260, 1_600, k);
+        // the dispatched run really uses the fixed lane, not a fallback
+        let before = counters_snapshot();
+        assert_dispatch_invariant(&format!("uniform k={k}"), &g);
+        let after = counters_snapshot();
+        assert!(
+            after.count(KernelId::for_k(k)) > before.count(KernelId::for_k(k)),
+            "k={k}: fixed lane was never dispatched"
+        );
+    }
+}
+
+#[test]
+fn chunked_lane_bitwise_matches_generic_k16_k32() {
+    let _l = lock();
+    for k in [16usize, 32] {
+        let g = random_graph(200 + k as u64, 300, 2_000, k);
+        let before = counters_snapshot();
+        assert_dispatch_invariant(&format!("uniform k={k}"), &g);
+        let after = counters_snapshot();
+        assert!(
+            after.count(KernelId::Chunked) > before.count(KernelId::Chunked),
+            "k={k}: chunked lane was never dispatched"
+        );
+    }
+}
+
+#[test]
+fn generator_graphs_are_dispatch_invariant() {
+    let _l = lock();
+    let mut sbm = generate_sbm(&SbmParams::paper(500), 17);
+    let mut rng = Rng::new(18);
+    for _ in 0..sbm.n / 12 {
+        let v = rng.below(sbm.n);
+        sbm.labels[v] = -1;
+    }
+    assert_dispatch_invariant("sbm", &sbm);
+
+    let cl = generate_chung_lu(&ChungLuParams { n: 900, edges: 5_000, gamma: 1.8, k: 7 }, 19);
+    assert_dispatch_invariant("chung-lu", &cl);
+}
+
+#[test]
+fn hub_graphs_split_and_merge_bitwise() {
+    let _l = lock();
+    let before = counters_snapshot();
+    for (k, extra) in [(3usize, 700usize), (6, 2 * HUB_SEGMENT_NNZ)] {
+        let g = hub_graph(300 + k as u64, 512, k, extra);
+        assert_dispatch_invariant(&format!("hub k={k}"), &g);
+    }
+    let after = counters_snapshot();
+    assert!(
+        after.split_rows > before.split_rows,
+        "hub rows never took the segmented path"
+    );
+}
+
+#[test]
+fn unsupported_forced_lane_falls_back_to_heuristic() {
+    let _l = lock();
+    let g = random_graph(400, 200, 1_200, 5);
+    let plain = SparseGee::fast().embed(&g, &GeeOptions::ALL);
+    // K3 cannot run a k=5 job: the dispatcher must ignore the override
+    let _guard = ForceGuard::force(KernelId::K3);
+    let forced = SparseGee::fast().embed(&g, &GeeOptions::ALL);
+    assert_eq!(forced.data, plain.data, "incompatible forced lane changed the result");
+}
+
+#[test]
+fn parallel_engine_front_end_is_dispatch_invariant() {
+    let _l = lock();
+    // the user-facing ParallelGee + prepare_par front ends, on a hub
+    // graph, against the forced-generic serial oracle
+    let g = hub_graph(500, 400, 4, 900);
+    for opts in [GeeOptions::NONE, GeeOptions::ALL] {
+        let oracle = generic_oracle(&g, &opts);
+        for t in [2usize, 5] {
+            let a = ParallelGee::new(t).embed(&g, &opts);
+            assert_eq!(a.data, oracle.data, "ParallelGee t={t} drifted at {opts:?}");
+            let b = prepare_par(&g, t).embed_par(&opts, t);
+            assert_eq!(b.data, oracle.data, "prepare_par t={t} drifted at {opts:?}");
+        }
+    }
+}
