@@ -1,0 +1,166 @@
+//! Bench: delta_stream — the resident-session O(Δ) lane vs from-scratch
+//! embedding under edge churn.
+//!
+//! Opens a [`GeeSession`] over a Chung-Lu graph (the paper's CL-100K
+//! shape: n=100k, m=1M undirected, 1% churn), streams edge deltas
+//! through `apply` + `refresh`, and compares the per-delta refresh cost
+//! against the median from-scratch `sparse-fast` embed of the same
+//! graph. A batched lane (apply 256 deltas, refresh once) shows the
+//! coalescing win the serving fast-lane workers get.
+//!
+//! The session Z is gated bitwise against the from-scratch embed before
+//! and after the churn stream — the lane must never trade exactness for
+//! speed. Rows land in `BENCH_gee.json` (`median_ns` is per-delta for
+//! the session lanes; `speedup` is full-embed-median / per-delta).
+//! `QUICK=1` trims sizes for CI smoke.
+
+use std::time::Instant;
+
+use gee_sparse::coordinator::session::{Delta, GeeSession, SessionConfig};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::rng::Rng;
+use gee_sparse::util::timing::{bench_runs, Stats};
+
+/// Edge-churn stream: alternating deletes of live edges and inserts of
+/// fresh random pairs, so the edge count stays roughly constant.
+fn churn_stream(g: &Graph, count: usize, seed: u64) -> Vec<Delta> {
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<(u32, u32)> =
+        (0..g.num_edges()).map(|i| (g.src[i], g.dst[i])).collect();
+    let n = g.n;
+    let mut out = Vec::with_capacity(count);
+    for i in 0..count {
+        if i % 2 == 0 && !live.is_empty() {
+            let (a, b) = live.swap_remove(rng.below(live.len()));
+            out.push(Delta::Delete { a, b });
+        } else {
+            let (a, b) = (rng.below(n) as u32, rng.below(n) as u32);
+            live.push((a, b));
+            out.push(Delta::Insert { a, b, w: 1.0 + rng.f64() });
+        }
+    }
+    out
+}
+
+fn parity_gate(s: &GeeSession, what: &str) {
+    let fresh = SparseGee::fast().embed(&s.to_graph(), s.opts());
+    assert_eq!(s.z().data, fresh.data, "{what}: session Z not bitwise");
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let (n, m) = if quick { (5_000, 50_000) } else { (100_000, 1_000_000) };
+    let churn = m / 100; // 1% of the edge set
+    let k = 10;
+    println!("== bench delta_stream (n={n}, m={m} undirected, churn={churn}) ==\n");
+    let g = generate_chung_lu(&ChungLuParams { n, edges: m, gamma: 1.8, k }, 42);
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    println!(
+        "{:>6} {:>14} {:>14} {:>12} {:>10}",
+        "opts", "full(ms)", "per-delta(us)", "deltas/sec", "speedup"
+    );
+    for opts in [GeeOptions::NONE, GeeOptions::ALL] {
+        // ---- from-scratch baseline on the starting graph
+        let engine = SparseGee::fast();
+        let full = Stats::from_runs(&bench_runs(1, reps, || {
+            std::hint::black_box(engine.embed(&g, &opts).data.as_ptr());
+        }));
+        let full_ns = full.median.as_nanos();
+
+        // ---- per-delta lane: apply one delta, refresh immediately
+        let cfg = SessionConfig { opts, rescale_threshold: 0.25 };
+        let mut s = GeeSession::from_graph(&g, &cfg);
+        parity_gate(&s, "pre-churn");
+        let stream = churn_stream(&g, churn, 7 + opts.code().len() as u64);
+        let t0 = Instant::now();
+        for d in &stream {
+            s.apply(d).expect("churn delta");
+            s.refresh();
+        }
+        let per_delta_ns = (t0.elapsed().as_nanos() / stream.len() as u128).max(1);
+        parity_gate(&s, "post-churn per-delta");
+
+        // ---- batched lane: the fast-lane worker shape (coalesced dirty
+        // rows, one refresh per batch of 256)
+        let mut sb = GeeSession::from_graph(&g, &cfg);
+        let stream_b = churn_stream(&g, churn, 11 + opts.code().len() as u64);
+        let t0 = Instant::now();
+        for chunk in stream_b.chunks(256) {
+            let (applied, res) = sb.apply_all(chunk);
+            assert_eq!((applied, res.is_ok()), (chunk.len(), true), "batched churn");
+            sb.refresh();
+        }
+        let per_delta_batched_ns =
+            (t0.elapsed().as_nanos() / stream_b.len() as u128).max(1);
+        parity_gate(&sb, "post-churn batched");
+
+        let speedup = full_ns as f64 / per_delta_ns as f64;
+        let dps = 1e9 / per_delta_ns as f64;
+        let dps_b = 1e9 / per_delta_batched_ns as f64;
+        println!(
+            "{:>6} {:>14.3} {:>14.3} {:>12.0} {:>9.1}x",
+            opts.code(),
+            full.median.as_secs_f64() * 1e3,
+            per_delta_ns as f64 / 1e3,
+            dps,
+            speedup,
+        );
+        println!(
+            "{:>6} {:>14} {:>14.3} {:>12.0} {:>9.1}x  (batch 256)",
+            "",
+            "",
+            per_delta_batched_ns as f64 / 1e3,
+            dps_b,
+            full_ns as f64 / per_delta_batched_ns as f64,
+        );
+        if !quick {
+            assert!(
+                speedup >= 10.0,
+                "per-delta refresh must beat a full embed 10x at 1% churn, got {speedup:.1}x"
+            );
+        }
+
+        let dm = g.num_directed();
+        records.push(BenchRecord {
+            bench: "delta_stream".into(),
+            engine: format!("full-embed-{}", opts.code()),
+            n,
+            m: dm,
+            k,
+            threads: 1,
+            median_ns: full_ns,
+            speedup: 1.0,
+            ..BenchRecord::default()
+        });
+        records.push(BenchRecord {
+            bench: "delta_stream".into(),
+            engine: format!("session-delta-{}", opts.code()),
+            n,
+            m: dm,
+            k,
+            threads: 1,
+            median_ns: per_delta_ns,
+            speedup,
+            ..BenchRecord::default()
+        });
+        records.push(BenchRecord {
+            bench: "delta_stream".into(),
+            engine: format!("session-batch256-{}", opts.code()),
+            n,
+            m: dm,
+            k,
+            threads: 1,
+            median_ns: per_delta_batched_ns,
+            speedup: full_ns as f64 / per_delta_batched_ns as f64,
+            ..BenchRecord::default()
+        });
+    }
+
+    write_records("delta_stream", &records);
+}

@@ -8,6 +8,11 @@
 //! * [`EmbedClient::submit`] + [`EmbedClient::recv_any`] — pipelining:
 //!   queue any number of requests, then collect replies in whatever
 //!   order the server finishes them, matched by request id (v2 only).
+//! * [`EmbedClient::open_session`] / [`send_deltas`](EmbedClient::send_deltas)
+//!   / [`fetch_rows`](EmbedClient::fetch_rows) /
+//!   [`close_session`](EmbedClient::close_session) — the resident-session
+//!   delta lane (v2 only, lockstep; do not interleave with outstanding
+//!   pipelined embeds).
 //!
 //! All connection bytes flow through [`ByteCounters`], so benches can
 //! compare the two wires' traffic with the same instrument the shard
@@ -20,7 +25,8 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use super::server::MAX_WIRE_CELLS;
-use super::wire::{self, Reply, RequestHeader};
+use super::session::Delta;
+use super::wire::{self, Reply, RequestHeader, SessionHeader, SessionOpHeader};
 use crate::gee::GeeOptions;
 use crate::shard::codec::{self, ByteCounters, CountingReader, CountingWriter, F64_RECORD_BYTES};
 use crate::sparse::Dense;
@@ -164,6 +170,149 @@ impl EmbedClient {
         }
     }
 
+    // ------------------------------------------------- session lane (v2)
+
+    /// Open a resident session over the graph (`SESS2`; same body shape
+    /// as an embed). Returns the server's session id. `rescale_threshold`
+    /// `None` accepts the server default.
+    pub fn open_session(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+        rescale_threshold: Option<f64>,
+    ) -> Result<u64> {
+        if !self.binary {
+            bail!("sessions require the binary wire (server negotiated text)");
+        }
+        let options = GeeOptions::from_code(code).context("bad options code")?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let h = SessionHeader { id, options, n: labels.len(), k, rescale_threshold };
+        writeln!(self.writer, "{}", wire::format_session_header(&h))?;
+        wire::write_request_body(&mut self.writer, labels, edges)?;
+        self.writer.flush()?;
+        let line = self.session_reply_line()?;
+        match wire::parse_sess_ok(&line) {
+            Ok((rid, sess, rows, cols)) => {
+                if rid != id {
+                    bail!("SESS reply for unexpected id {rid} (awaiting {id})");
+                }
+                if rows != labels.len() || cols != k {
+                    bail!("SESS reply dims {rows}x{cols} do not match the request");
+                }
+                Ok(sess)
+            }
+            Err(_) => Err(session_err(&line)),
+        }
+    }
+
+    /// Stream one delta batch (`DELTA2`) and return the session's
+    /// `(applied, stale)` watermark from the `DACK`. An empty batch is a
+    /// pure watermark poll.
+    pub fn send_deltas(&mut self, sess: u64, deltas: &[Delta]) -> Result<(u64, u64)> {
+        if !self.binary {
+            bail!("sessions require the binary wire (server negotiated text)");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let h = SessionOpHeader { id, sess, count: deltas.len() as u64 };
+        writeln!(self.writer, "{}", wire::format_delta_header(&h))?;
+        wire::write_delta_frame(&mut self.writer, deltas)?;
+        self.writer.flush()?;
+        let line = self.session_reply_line()?;
+        match wire::parse_dack(&line) {
+            Ok((rid, applied, stale)) => {
+                if rid != id {
+                    bail!("DACK reply for unexpected id {rid} (awaiting {id})");
+                }
+                Ok((applied, stale))
+            }
+            Err(_) => Err(session_err(&line)),
+        }
+    }
+
+    /// Fetch chosen Z rows (`ROWS2`) and the `(applied, clean)`
+    /// watermark they were read under. Row `r` of the returned matrix is
+    /// session row `ids[r]`.
+    pub fn fetch_rows(&mut self, sess: u64, ids: &[u32]) -> Result<(Dense, u64, u64)> {
+        if !self.binary {
+            bail!("sessions require the binary wire (server negotiated text)");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let h = SessionOpHeader { id, sess, count: ids.len() as u64 };
+        writeln!(self.writer, "{}", wire::format_rows_header(&h))?;
+        wire::write_rows_frame(&mut self.writer, ids)?;
+        self.writer.flush()?;
+        let line = self.session_reply_line()?;
+        match wire::parse_rows_ok(&line) {
+            Ok((rid, rows, cols, applied, clean)) => {
+                if rid != id {
+                    bail!("ROWS reply for unexpected id {rid} (awaiting {id})");
+                }
+                if rows != ids.len() {
+                    bail!("ROWS reply has {rows} rows, requested {}", ids.len());
+                }
+                let z = self.read_z_frame(rows, cols)?;
+                Ok((z, applied, clean))
+            }
+            Err(_) => Err(session_err(&line)),
+        }
+    }
+
+    /// Poll the staleness watermark (zero-delta `DELTA2` round trips)
+    /// until the fast lane has drained; returns the applied watermark.
+    pub fn wait_clean(&mut self, sess: u64, timeout: std::time::Duration) -> Result<u64> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let (applied, stale) = self.send_deltas(sess, &[])?;
+            if stale == 0 {
+                return Ok(applied);
+            }
+            if std::time::Instant::now() >= deadline {
+                bail!("session {sess} still {stale} deltas stale after {timeout:?}");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+    }
+
+    /// Close a session (`CLOSE2`), releasing its tenant quota slot.
+    pub fn close_session(&mut self, sess: u64) -> Result<()> {
+        if !self.binary {
+            bail!("sessions require the binary wire (server negotiated text)");
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        writeln!(self.writer, "{}", wire::format_close_header(id, sess))?;
+        self.writer.flush()?;
+        let line = self.session_reply_line()?;
+        match wire::parse_closed(&line) {
+            Ok(rid) => {
+                if rid != id {
+                    bail!("CLOSED reply for unexpected id {rid} (awaiting {id})");
+                }
+                Ok(())
+            }
+            Err(_) => Err(session_err(&line)),
+        }
+    }
+
+    /// Next non-PONG reply line for the lockstep session exchanges.
+    fn session_reply_line(&mut self) -> Result<String> {
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("server closed the connection");
+            }
+            if line.trim() == "PONG" {
+                continue;
+            }
+            return Ok(line);
+        }
+    }
+
     fn read_z_frame(&mut self, rows: usize, cols: usize) -> Result<Dense> {
         let cells = rows
             .checked_mul(cols)
@@ -241,6 +390,21 @@ impl EmbedClient {
             bail!("expected DONE, got '{}'", line.trim());
         }
         Ok(z)
+    }
+}
+
+/// Turn a non-matching session reply line into the call's error: the
+/// server's request-scoped `ERR id=`/`BUSY` (or a bare fatal `ERR`)
+/// with the connection left usable where the taxonomy says it is.
+fn session_err(line: &str) -> anyhow::Error {
+    match wire::parse_reply(line) {
+        Ok(Reply::Busy { retry_ms, .. }) => {
+            anyhow::anyhow!("server busy (retry after {retry_ms}ms)")
+        }
+        Ok(Reply::Err { msg, .. }) | Ok(Reply::Fatal(msg)) => {
+            anyhow::anyhow!("server error: {msg}")
+        }
+        _ => anyhow::anyhow!("unexpected reply '{}'", line.trim()),
     }
 }
 

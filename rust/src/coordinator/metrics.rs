@@ -39,6 +39,17 @@ pub struct Metrics {
     /// volumes (or toward O(shards·n) global resends) shows up as this
     /// counter growing out of proportion to `edges`.
     pub remote_bytes: AtomicU64,
+    /// Resident-session lane: sessions opened/closed over the process
+    /// lifetime, deltas applied, fast-lane refresh passes and the rows
+    /// they recomputed, and how many passes escalated to a full rescale
+    /// (per-delta cost regressing toward full re-embeds shows up as
+    /// `session_full_rescales` tracking `session_refreshes`).
+    pub sessions_opened: AtomicU64,
+    pub sessions_closed: AtomicU64,
+    pub session_deltas: AtomicU64,
+    pub session_refreshes: AtomicU64,
+    pub session_rows_refreshed: AtomicU64,
+    pub session_full_rescales: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     /// Per-tenant admission counters, created lazily on first touch
@@ -73,6 +84,12 @@ impl Default for Metrics {
             edges: AtomicU64::new(0),
             remote_fallbacks: AtomicU64::new(0),
             remote_bytes: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            sessions_closed: AtomicU64::new(0),
+            session_deltas: AtomicU64::new(0),
+            session_refreshes: AtomicU64::new(0),
+            session_rows_refreshed: AtomicU64::new(0),
+            session_full_rescales: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
@@ -156,6 +173,17 @@ impl Metrics {
         let remote_bytes = self.remote_bytes.load(Ordering::Relaxed);
         if remote_bytes > 0 {
             s.push_str(&format!(" remote_bytes={remote_bytes}"));
+        }
+        let opened = self.sessions_opened.load(Ordering::Relaxed);
+        if opened > 0 {
+            s.push_str(&format!(
+                "\n  sessions: opened={opened} closed={} deltas={} refreshes={} rows_refreshed={} full_rescales={}",
+                self.sessions_closed.load(Ordering::Relaxed),
+                self.session_deltas.load(Ordering::Relaxed),
+                self.session_refreshes.load(Ordering::Relaxed),
+                self.session_rows_refreshed.load(Ordering::Relaxed),
+                self.session_full_rescales.load(Ordering::Relaxed),
+            ));
         }
         for (name, tc) in self.tenant_snapshot() {
             s.push_str(&format!(
@@ -266,6 +294,17 @@ mod tests {
         assert!(!m.summary().contains("remote_bytes"));
         m.remote_bytes.fetch_add(12_345, Ordering::Relaxed);
         assert!(m.summary().contains("remote_bytes=12345"), "{}", m.summary());
+    }
+
+    #[test]
+    fn session_counters_surface_in_summary_only_when_active() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("sessions:"));
+        m.sessions_opened.fetch_add(2, Ordering::Relaxed);
+        m.session_deltas.fetch_add(10, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("sessions: opened=2"), "{s}");
+        assert!(s.contains("deltas=10"), "{s}");
     }
 
     #[test]

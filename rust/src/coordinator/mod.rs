@@ -6,6 +6,9 @@
 //! * [`service`] — worker lanes (native pool / dedicated PJRT thread),
 //!   request lifecycle, graceful shutdown
 //! * [`streaming`] — incremental GEE under edge/vertex/label updates
+//! * [`session`] — resident [`session::GeeSession`]s: O(Δ) dirty-row
+//!   refresh through the shared kernel dispatch, session registry with
+//!   per-tenant quotas, background fast-lane refresh workers
 //! * [`metrics`] — counters + latency histogram (p50/p95/p99), per-tenant
 //!   admission/byte counters
 //! * [`server`] / [`wire`] / [`client`] — TCP front-end: v1 text lockstep
@@ -17,10 +20,12 @@ pub mod metrics;
 pub mod queue;
 pub mod server;
 pub mod service;
+pub mod session;
 pub mod streaming;
 pub mod wire;
 
 pub use client::{ClientConfig, ClientReply, EmbedClient};
 pub use server::TcpServer;
 pub use service::{EmbedRequest, EmbedResponse, EmbedService, Lane, ReplySink, ServiceConfig};
+pub use session::{Delta, GeeSession, SessionConfig, SessionRegistry};
 pub use streaming::StreamingGee;

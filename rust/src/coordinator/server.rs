@@ -37,6 +37,15 @@
 //! Either way requests are forwarded to an [`EmbedService`], so
 //! batching, backpressure and metrics apply unchanged; per-connection
 //! byte counts land on the declared tenant's counters.
+//!
+//! When the service runs with session workers (`serve --sessions`), the
+//! v2 lane additionally speaks the session verbs (`SESS2` / `DELTA2` /
+//! `ROWS2` / `CLOSE2`, see [`super::wire`]): resident
+//! [`super::session::GeeSession`]s absorb delta batches O(Δ) instead of
+//! re-shipping the graph per embed. Session replies follow the same
+//! error taxonomy as embeds — content errors (unknown session, bad
+//! vertex, quota) are request-scoped `ERR id=`/`BUSY` with the body
+//! consumed, framing violations are ERR-then-close.
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -48,6 +57,7 @@ use std::thread::JoinHandle;
 use anyhow::{bail, Context, Result};
 
 use super::service::{EmbedRequest, EmbedResponse, EmbedService, ReplySink};
+use super::session::{Delta, OpenError, SessionConfig};
 use super::wire;
 use crate::gee::GeeOptions;
 use crate::graph::Graph;
@@ -359,6 +369,14 @@ enum Out {
     Busy { id: u64, retry_ms: u64 },
     /// This request failed before it reached the service.
     Failed { id: u64, msg: String },
+    /// A session opened: `SESS id= sess= rows= cols=`.
+    Sess { id: u64, sess: u64, rows: usize, cols: usize },
+    /// A delta batch landed: `DACK id= applied= stale=`.
+    Dack { id: u64, applied: u64, stale: u64 },
+    /// Fetched Z rows: the reply line, then one f64 frame of `data`.
+    Rows { id: u64, rows: usize, cols: usize, applied: u64, clean: u64, data: Vec<f64> },
+    /// A session closed: `CLOSED id=`.
+    Closed { id: u64 },
     Pong,
     /// Protocol violation: announce and hang up.
     Fatal(String),
@@ -429,6 +447,23 @@ fn writer_loop(
                 writeln!(writer, "{}", wire::format_err(id, &msg))?;
                 writer.flush()?;
             }
+            Out::Sess { id, sess, rows, cols } => {
+                writeln!(writer, "{}", wire::format_sess_ok(id, sess, rows, cols))?;
+                writer.flush()?;
+            }
+            Out::Dack { id, applied, stale } => {
+                writeln!(writer, "{}", wire::format_dack(id, applied, stale))?;
+                writer.flush()?;
+            }
+            Out::Rows { id, rows, cols, applied, clean, data } => {
+                writeln!(writer, "{}", wire::format_rows_ok(id, rows, cols, applied, clean))?;
+                codec::write_frame_f64s(&mut writer, &data)?;
+                writer.flush()?;
+            }
+            Out::Closed { id } => {
+                writeln!(writer, "{}", wire::format_closed(id))?;
+                writer.flush()?;
+            }
             Out::Pong => {
                 writeln!(writer, "PONG")?;
                 writer.flush()?;
@@ -452,6 +487,8 @@ fn v2_read_loop(
     inflight: &Mutex<HashSet<u64>>,
 ) -> Result<()> {
     let mut scratch: Vec<u8> = Vec::new();
+    let mut deltas: Vec<Delta> = Vec::new();
+    let mut row_ids: Vec<u32> = Vec::new();
     let mut line = String::new();
     loop {
         line.clear();
@@ -469,10 +506,29 @@ fn v2_read_loop(
         if t == "QUIT" {
             return Ok(());
         }
+        if t.starts_with("SESS2") {
+            handle_sess2(t, reader, service, tenant, tx, &mut scratch)?;
+            continue;
+        }
+        if t.starts_with("DELTA2") {
+            handle_delta2(t, reader, service, tx, &mut scratch, &mut deltas)?;
+            continue;
+        }
+        if t.starts_with("ROWS2") {
+            handle_rows2(t, reader, service, tx, &mut scratch, &mut row_ids)?;
+            continue;
+        }
+        if t.starts_with("CLOSE2") {
+            handle_close2(t, service, tx)?;
+            continue;
+        }
         if !t.starts_with("EMBED2") {
             // a v1 EMBED (or anything else) after v2 negotiation has no
             // framing we can trust — ERR-then-close
-            return Err(fatal(tx, format!("expected EMBED2 after v2 negotiation, got '{t}'")));
+            return Err(fatal(
+                tx,
+                format!("expected EMBED2/SESS2/DELTA2/ROWS2/CLOSE2 after v2 negotiation, got '{t}'"),
+            ));
         }
         let h = match wire::parse_request_header(t) {
             Ok(h) => h,
@@ -532,6 +588,220 @@ fn v2_read_loop(
                 }
                 let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
             }
+        }
+    }
+}
+
+/// `SESS2`: an `EMBED2`-shaped open (the same two body frames follow)
+/// that leaves a resident session behind instead of replying with Z.
+fn handle_sess2(
+    line: &str,
+    reader: &mut ConnReader,
+    service: &EmbedService,
+    tenant: &str,
+    tx: &mpsc::Sender<Out>,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    let h = match wire::parse_session_header(line) {
+        Ok(h) => h,
+        Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+    };
+    let Some(registry) = service.sessions() else {
+        // the body frames still follow; consume them within the codec
+        // caps so the connection stays usable
+        if let Err(de) = wire::drain_request_body(reader, scratch) {
+            return Err(fatal(tx, format!("{de:#}")));
+        }
+        let _ = tx.send(Out::Failed {
+            id: h.id,
+            msg: "sessions are disabled on this server (serve --sessions)".into(),
+        });
+        return Ok(());
+    };
+    if let Err(e) = validate_wire_dims(h.n, h.k) {
+        if let Err(de) = wire::drain_request_body(reader, scratch) {
+            return Err(fatal(tx, format!("{de:#}")));
+        }
+        let _ = tx.send(Out::Failed { id: h.id, msg: format!("{e:#}") });
+        return Ok(());
+    }
+    let rh = wire::RequestHeader { id: h.id, options: h.options, n: h.n, k: h.k };
+    let mut g = Graph::new(h.n, h.k);
+    if let Err(e) = wire::read_request_body_into(reader, &rh, &mut g, scratch) {
+        return Err(fatal(tx, format!("{e:#}")));
+    }
+    let cfg = SessionConfig {
+        opts: h.options,
+        rescale_threshold: h
+            .rescale_threshold
+            .unwrap_or_else(|| service.session_rescale_threshold()),
+    };
+    match registry.open(tenant, &g, &cfg) {
+        Ok(entry) => {
+            let _ = tx.send(Out::Sess { id: h.id, sess: entry.id, rows: h.n, cols: h.k });
+        }
+        Err(OpenError::Admission(super::queue::AdmitError::Closed)) => {
+            let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
+        }
+        Err(OpenError::Admission(_)) => {
+            // session quota: same retry contract as embed admission
+            let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
+        }
+        Err(OpenError::Invalid(msg)) => {
+            let _ = tx.send(Out::Failed { id: h.id, msg });
+        }
+    }
+    Ok(())
+}
+
+/// `DELTA2`: decode the delta frame (always — the body must be consumed
+/// whatever the session lookup says), apply under the session lock, and
+/// hand the dirty session to the fast lane.
+fn handle_delta2(
+    line: &str,
+    reader: &mut ConnReader,
+    service: &EmbedService,
+    tx: &mpsc::Sender<Out>,
+    scratch: &mut Vec<u8>,
+    deltas: &mut Vec<Delta>,
+) -> Result<()> {
+    let h = match wire::parse_session_op(line, "DELTA2") {
+        Ok(h) => h,
+        Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+    };
+    if let Err(e) = wire::read_delta_frame(reader, h.count, scratch, deltas) {
+        let msg = format!("{e:#}");
+        // an unknown op code arrives inside a well-formed, fully
+        // consumed frame (see `wire::read_delta_frame`) — request-scoped;
+        // anything else is a framing violation
+        if msg.starts_with("unknown delta op") {
+            let _ = tx.send(Out::Failed { id: h.id, msg });
+            return Ok(());
+        }
+        return Err(fatal(tx, msg));
+    }
+    let Some(entry) = session_target(service, h.sess, h.id, tx) else {
+        return Ok(());
+    };
+    let registry = service.sessions().expect("session_target checked the registry");
+    let (applied_count, res, applied, stale) = {
+        let mut s = entry.session.lock().unwrap();
+        let (count, res) = s.apply_all(deltas);
+        let (applied, _clean) = s.watermark();
+        (count, res, applied, s.stale())
+    };
+    registry.note_deltas(applied_count as u64);
+    if applied_count > 0 {
+        registry.enqueue_refresh(&entry);
+    }
+    match res {
+        Ok(()) => {
+            let _ = tx.send(Out::Dack { id: h.id, applied, stale });
+        }
+        // the prefix before the bad delta sticks (and is already queued
+        // for refresh); the error names the failing index
+        Err(msg) => {
+            let _ = tx.send(Out::Failed {
+                id: h.id,
+                msg: format!("{msg} ({applied_count} deltas applied)"),
+            });
+        }
+    }
+    Ok(())
+}
+
+/// `ROWS2`: fetch chosen Z rows plus the staleness watermark.
+fn handle_rows2(
+    line: &str,
+    reader: &mut ConnReader,
+    service: &EmbedService,
+    tx: &mpsc::Sender<Out>,
+    scratch: &mut Vec<u8>,
+    row_ids: &mut Vec<u32>,
+) -> Result<()> {
+    let h = match wire::parse_session_op(line, "ROWS2") {
+        Ok(h) => h,
+        Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+    };
+    if let Err(e) = wire::read_rows_frame(reader, h.count, scratch, row_ids) {
+        return Err(fatal(tx, format!("{e:#}")));
+    }
+    let Some(entry) = session_target(service, h.sess, h.id, tx) else {
+        return Ok(());
+    };
+    let s = entry.session.lock().unwrap();
+    let (n, k) = (s.n(), s.k());
+    // ids may repeat, so the reply is bounded by the request, not by the
+    // session: apply the same cell cap the embed header gate enforces
+    if row_ids.len().saturating_mul(k) > MAX_WIRE_CELLS {
+        drop(s);
+        let _ = tx.send(Out::Failed {
+            id: h.id,
+            msg: format!(
+                "{} rows x {k} cols exceeds the wire limit {MAX_WIRE_CELLS} cells",
+                row_ids.len()
+            ),
+        });
+        return Ok(());
+    }
+    if let Some(&bad) = row_ids.iter().find(|&&r| r as usize >= n) {
+        drop(s);
+        let _ = tx.send(Out::Failed { id: h.id, msg: format!("row {bad} out of range (n={n})") });
+        return Ok(());
+    }
+    let mut data = Vec::with_capacity(row_ids.len() * k);
+    for &r in row_ids.iter() {
+        data.extend_from_slice(s.z().row(r as usize));
+    }
+    let (applied, clean) = s.watermark();
+    drop(s);
+    let _ = tx.send(Out::Rows { id: h.id, rows: row_ids.len(), cols: k, applied, clean, data });
+    Ok(())
+}
+
+/// `CLOSE2`: unregister the session (its quota slot frees once the last
+/// in-flight reference drops).
+fn handle_close2(line: &str, service: &EmbedService, tx: &mpsc::Sender<Out>) -> Result<()> {
+    let h = match wire::parse_session_op(line, "CLOSE2") {
+        Ok(h) => h,
+        Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+    };
+    let Some(registry) = service.sessions() else {
+        let _ = tx.send(Out::Failed {
+            id: h.id,
+            msg: "sessions are disabled on this server (serve --sessions)".into(),
+        });
+        return Ok(());
+    };
+    if registry.close(h.sess) {
+        let _ = tx.send(Out::Closed { id: h.id });
+    } else {
+        let _ = tx.send(Out::Failed { id: h.id, msg: format!("unknown session {}", h.sess) });
+    }
+    Ok(())
+}
+
+/// Resolve a `DELTA2`/`ROWS2` target session; on failure the
+/// request-scoped error is already sent (the caller must have consumed
+/// the request body first — these errors never abandon frames).
+fn session_target(
+    service: &EmbedService,
+    sess: u64,
+    id: u64,
+    tx: &mpsc::Sender<Out>,
+) -> Option<Arc<super::session::SessionEntry>> {
+    let Some(registry) = service.sessions() else {
+        let _ = tx.send(Out::Failed {
+            id,
+            msg: "sessions are disabled on this server (serve --sessions)".into(),
+        });
+        return None;
+    };
+    match registry.get(sess) {
+        Some(entry) => Some(entry),
+        None => {
+            let _ = tx.send(Out::Failed { id, msg: format!("unknown session {sess}") });
+            None
         }
     }
 }

@@ -28,6 +28,7 @@ use super::batcher::{
 };
 use super::metrics::Metrics;
 use super::queue::{AdmitError, BoundedQueue, PushError, TenantGovernor, TenantPermit};
+use super::session::SessionRegistry;
 use crate::gee::workspace::WorkspacePool;
 use crate::gee::{Engine, GeeOptions};
 use crate::graph::Graph;
@@ -100,6 +101,19 @@ pub struct ServiceConfig {
     /// gets `BUSY` from the request header alone. v1 text clients share
     /// the "default" tenant bucket.
     pub tenant_tokens: usize,
+    /// Background fast-lane threads draining dirty resident sessions
+    /// ([`super::session::SessionRegistry`]). 0 disables the session
+    /// lane entirely: `SESS2`/`DELTA2`/`ROWS2`/`CLOSE2` earn a
+    /// request-scoped `ERR` instead of a registry.
+    pub session_workers: usize,
+    /// Per-tenant cap on concurrently open sessions (each held for the
+    /// session's lifetime — long-lived, so separate from the per-request
+    /// `tenant_tokens` budget).
+    pub session_quota: usize,
+    /// Default affected-row fraction above which a session delta
+    /// escalates to a full rescale pass; a `SESS2 thresh=` overrides it
+    /// per session.
+    pub session_rescale_threshold: f64,
 }
 
 impl Default for ServiceConfig {
@@ -118,6 +132,9 @@ impl Default for ServiceConfig {
             shard_remote_workers: Vec::new(),
             shard_wire_text: false,
             tenant_tokens: 64,
+            session_workers: 0,
+            session_quota: 4,
+            session_rescale_threshold: 0.25,
         }
     }
 }
@@ -204,6 +221,11 @@ pub struct EmbedService {
     unions: Arc<UnionPool>,
     /// Per-tenant token quotas for the wire admission path.
     governor: Arc<TenantGovernor>,
+    /// Resident-session registry + fast-lane refresh workers; `None`
+    /// when the config asked for zero session workers.
+    sessions: Option<Arc<SessionRegistry>>,
+    /// Default rescale threshold for sessions opened without `thresh=`.
+    session_rescale_threshold: f64,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -235,6 +257,12 @@ impl EmbedService {
         let pool = WorkspacePool::new();
         let unions = UnionPool::new();
         let governor = TenantGovernor::new(cfg.tenant_tokens.max(1));
+        let sessions = if cfg.session_workers > 0 {
+            Some(SessionRegistry::start(cfg.session_workers, cfg.session_quota, metrics.clone()))
+        } else {
+            None
+        };
+        let session_rescale_threshold = cfg.session_rescale_threshold.clamp(0.0, 1.0);
         let mut handles = Vec::new();
 
         match &cfg.lane {
@@ -275,7 +303,16 @@ impl EmbedService {
                 }
             }
         }
-        EmbedService { queue, metrics, pool, unions, governor, handles }
+        EmbedService {
+            queue,
+            metrics,
+            pool,
+            unions,
+            governor,
+            sessions,
+            session_rescale_threshold,
+            handles,
+        }
     }
 
     /// Submit with backpressure: `Err` means the queue is full/closed and
@@ -379,6 +416,17 @@ impl EmbedService {
         &self.governor
     }
 
+    /// The resident-session registry, when the session lane is enabled
+    /// (`session_workers > 0`).
+    pub fn sessions(&self) -> Option<&Arc<SessionRegistry>> {
+        self.sessions.as_ref()
+    }
+
+    /// Default rescale threshold for sessions opened without `thresh=`.
+    pub fn session_rescale_threshold(&self) -> f64 {
+        self.session_rescale_threshold
+    }
+
     pub fn metrics(&self) -> &Metrics {
         &self.metrics
     }
@@ -407,6 +455,9 @@ impl EmbedService {
 
     /// Drain queued work, stop workers, return final metrics.
     pub fn shutdown(self) -> Arc<Metrics> {
+        if let Some(sessions) = &self.sessions {
+            sessions.shutdown();
+        }
         self.queue.close();
         for h in self.handles {
             let _ = h.join();

@@ -1,0 +1,759 @@
+//! Resident embedding sessions: O(Δ) incremental GEE.
+//!
+//! The batch lanes build a [`Graph`], embed once, and drop everything.
+//! A [`GeeSession`] instead stays resident: it owns a mutable adjacency
+//! ([`RowStore`]), incrementally-maintained globals
+//! ([`Globals`]: `n_k` + degrees), the embedding matrix `Z`, and a
+//! coalescing [`DirtySet`] of rows whose stored inputs changed. Applying
+//! an edge insert/delete dirties exactly the two endpoint rows (plus
+//! their neighbors under the laplacian option, whose scale entries
+//! shifted); a relabel dirties the members of the two affected classes
+//! and their neighbors — or escalates to a full rescale pass when the
+//! affected fraction crosses the configurable threshold, because at that
+//! point one sweep is cheaper than chasing per-row invalidation.
+//!
+//! [`GeeSession::refresh`] recomputes only the dirty rows, each through
+//! the same [`AccumCtx`]/[`accumulate_rows`] kernel dispatch the batch
+//! engines ride (hub rows still segment-split inside `rows_loop`), with
+//! a one-row CSR window over the stored row. Because the row store
+//! preserves the batch CSR accumulation order ([`RowStore`] docs), the
+//! maintained class counts are exact whole numbers, and degrees are
+//! re-summed in row order, a refreshed row is **bitwise identical** to
+//! the same row of a from-scratch `sparse-fast` embed of the final graph
+//! — pinned by the drift tests below and `tests/session_churn.rs`.
+//!
+//! [`SessionRegistry`] is the serving shell: sessions live under ids,
+//! per-tenant session quotas ride a dedicated
+//! [`TenantGovernor`], and a background fast-lane worker pool drains a
+//! queue of dirty session ids so wire threads only apply deltas and
+//! enqueue — reads see a bounded-staleness watermark instead of a stall.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::queue::{AdmitError, BoundedQueue, TenantGovernor, TenantPermit};
+use crate::gee::globals::{DirtySet, Globals};
+use crate::gee::kernel::{accumulate_rows, AccumCtx};
+use crate::gee::GeeOptions;
+use crate::graph::rowstore::RowStore;
+use crate::graph::Graph;
+use crate::sparse::Dense;
+
+/// How a session embeds and when it abandons per-row refresh.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionConfig {
+    /// Option grid point the resident `Z` is maintained under.
+    pub opts: GeeOptions,
+    /// When one delta's affected-row fraction exceeds this, the session
+    /// escalates to a full rescale pass instead of per-row invalidation
+    /// (relabel storms; large classes). 0.0 forces every relabel to a
+    /// full pass, 1.0 never escalates.
+    pub rescale_threshold: f64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig { opts: GeeOptions::NONE, rescale_threshold: 0.25 }
+    }
+}
+
+/// One incremental mutation of a session's graph.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Delta {
+    /// Add an undirected edge (self-loops allowed).
+    Insert { a: u32, b: u32, w: f64 },
+    /// Remove the oldest stored edge between the endpoints.
+    Delete { a: u32, b: u32 },
+    /// Reassign vertex `v` to `label` (-1 = unlabeled).
+    Relabel { v: u32, label: i32 },
+}
+
+/// What one [`GeeSession::refresh`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RefreshOutcome {
+    /// Rows recomputed through the kernel.
+    pub rows: usize,
+    /// Whether this was a full rescale pass rather than per-row refresh.
+    pub full: bool,
+}
+
+/// A resident embedding: mutable adjacency + incremental globals + `Z`.
+#[derive(Debug)]
+pub struct GeeSession {
+    store: RowStore,
+    labels: Vec<i32>,
+    k: usize,
+    globals: Globals,
+    opts: GeeOptions,
+    rescale_threshold: f64,
+    /// Per-vertex weight values `1/n_k[y]`; rebuilt lazily after relabels.
+    wv: Vec<f64>,
+    wv_stale: bool,
+    /// Laplacian scale vector, maintained eagerly (empty when !lap).
+    scale: Vec<f64>,
+    z: Dense,
+    dirty: DirtySet,
+    /// Deltas applied since open.
+    applied: u64,
+    /// Watermark: `applied` as of the last completed refresh.
+    clean: u64,
+    // refresh scratch (kept warm across refreshes)
+    scratch_cols: Vec<u32>,
+    scratch_vals: Vec<f64>,
+    csr_indptr: Vec<u32>,
+    csr_cols: Vec<u32>,
+    csr_vals: Vec<f64>,
+}
+
+impl GeeSession {
+    /// Open a session over `g` (the session replays `g`'s edge list, so
+    /// its canonical order is the graph's) and compute the initial `Z`.
+    pub fn from_graph(g: &Graph, cfg: &SessionConfig) -> Self {
+        let store = RowStore::from_graph(g);
+        let mut globals = Globals::new(g.n, g.k);
+        globals.recount_labels(&g.labels, g.k);
+        for (v, d) in globals.deg.iter_mut().enumerate() {
+            *d = store.resum_degree(v);
+        }
+        let mut s = GeeSession {
+            store,
+            labels: g.labels.clone(),
+            k: g.k,
+            globals,
+            opts: cfg.opts,
+            rescale_threshold: cfg.rescale_threshold.clamp(0.0, 1.0),
+            wv: Vec::new(),
+            wv_stale: true,
+            scale: Vec::new(),
+            z: Dense::zeros(g.n, g.k),
+            dirty: DirtySet::new(g.n),
+            applied: 0,
+            clean: 0,
+            scratch_cols: Vec::new(),
+            scratch_vals: Vec::new(),
+            csr_indptr: Vec::new(),
+            csr_cols: Vec::new(),
+            csr_vals: Vec::new(),
+        };
+        s.dirty.mark_all();
+        s.refresh();
+        s
+    }
+
+    /// Vertex count.
+    pub fn n(&self) -> usize {
+        self.store.n()
+    }
+
+    /// Class count.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Undirected stored-edge count.
+    pub fn num_edges(&self) -> usize {
+        self.store.num_edges()
+    }
+
+    /// The option grid point this session maintains `Z` under.
+    pub fn opts(&self) -> &GeeOptions {
+        &self.opts
+    }
+
+    /// The resident embedding. Rows marked dirty since the last
+    /// [`refresh`](Self::refresh) are stale; check [`stale`](Self::stale).
+    pub fn z(&self) -> &Dense {
+        &self.z
+    }
+
+    /// `(applied, clean)` delta watermarks: `clean` is the value of
+    /// `applied` as of the last completed refresh.
+    pub fn watermark(&self) -> (u64, u64) {
+        (self.applied, self.clean)
+    }
+
+    /// Deltas applied but not yet reflected in `Z`.
+    pub fn stale(&self) -> u64 {
+        self.applied - self.clean
+    }
+
+    /// Individually-dirty row count (0 when a full pass is pending).
+    pub fn dirty_rows(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// Materialize the current graph — the parity-oracle bridge: a
+    /// from-scratch `sparse-fast` embed of this graph is bitwise what
+    /// [`refresh`](Self::refresh) maintains.
+    pub fn to_graph(&self) -> Graph {
+        self.store.to_graph(&self.labels, self.k)
+    }
+
+    /// Apply one delta. On error the session state is unchanged.
+    pub fn apply(&mut self, d: &Delta) -> Result<(), String> {
+        match *d {
+            Delta::Insert { a, b, w } => {
+                self.check_vertex(a)?;
+                self.check_vertex(b)?;
+                if !w.is_finite() {
+                    return Err(format!("edge weight {w} is not finite"));
+                }
+                self.store.insert(a, b, w);
+                self.touch_endpoint(a);
+                self.touch_endpoint(b);
+            }
+            Delta::Delete { a, b } => {
+                self.check_vertex(a)?;
+                self.check_vertex(b)?;
+                if self.store.remove(a, b).is_none() {
+                    return Err(format!("no stored edge ({a}, {b})"));
+                }
+                self.touch_endpoint(a);
+                self.touch_endpoint(b);
+            }
+            Delta::Relabel { v, label } => {
+                self.check_vertex(v)?;
+                if label < -1 || label >= self.k as i32 {
+                    return Err(format!("label {label} out of range for k={}", self.k));
+                }
+                let old = self.labels[v as usize];
+                if old != label {
+                    self.globals.relabel(old, label);
+                    self.labels[v as usize] = label;
+                    self.wv_stale = true;
+                    self.dirty_after_relabel(v, old, label);
+                }
+            }
+        }
+        self.applied += 1;
+        Ok(())
+    }
+
+    /// Apply deltas in order, stopping at the first failure; returns how
+    /// many applied either way (the prefix before the failure sticks).
+    pub fn apply_all(&mut self, ds: &[Delta]) -> (usize, Result<(), String>) {
+        for (i, d) in ds.iter().enumerate() {
+            if let Err(e) = self.apply(d) {
+                return (i, Err(format!("delta {i}: {e}")));
+            }
+        }
+        (ds.len(), Ok(()))
+    }
+
+    fn check_vertex(&self, v: u32) -> Result<(), String> {
+        if (v as usize) < self.store.n() {
+            Ok(())
+        } else {
+            Err(format!("vertex {v} out of range (n={})", self.store.n()))
+        }
+    }
+
+    /// Degree bookkeeping + dirty marks after an edge touched `v`. The
+    /// degree is *re-summed* in row order, not adjusted: a mid-sequence
+    /// removal changes the FP fold, so only a resum stays bitwise equal
+    /// to a fresh prepare.
+    fn touch_endpoint(&mut self, v: u32) {
+        self.globals.deg[v as usize] = self.store.resum_degree(v as usize);
+        if self.opts.laplacian {
+            if !self.scale.is_empty() {
+                self.scale[v as usize] = self.globals.scale_at(v as usize, &self.opts);
+            }
+            // neighbors read s[v] in their own rows
+            self.mark_neighbors(v);
+        }
+        self.dirty.mark(v);
+    }
+
+    fn mark_neighbors(&mut self, v: u32) {
+        for e in self.store.row(v as usize) {
+            self.dirty.mark(e.nbr);
+        }
+    }
+
+    /// Dirty propagation for a relabel: `wv` changed for every member of
+    /// the two affected classes, so every row with such a member as a
+    /// neighbor must refresh. Escalate to a full pass when the affected
+    /// classes cover more than `rescale_threshold` of the graph.
+    fn dirty_after_relabel(&mut self, v: u32, old: i32, new: i32) {
+        let mut affected = 1.0;
+        if old >= 0 {
+            affected += self.globals.n_k[old as usize];
+        }
+        if new >= 0 {
+            affected += self.globals.n_k[new as usize];
+        }
+        if affected > self.rescale_threshold * self.store.n() as f64 {
+            self.dirty.mark_all();
+            return;
+        }
+        self.dirty.mark(v);
+        self.mark_neighbors(v);
+        for u in 0..self.labels.len() {
+            let l = self.labels[u];
+            if (l == old || l == new) && l >= 0 {
+                self.dirty.mark(u as u32);
+                self.mark_neighbors(u as u32);
+            }
+        }
+    }
+
+    /// Recompute every stale row and advance the clean watermark. Falls
+    /// back to one full rescale pass when a delta escalated (or when the
+    /// dirty set alone crosses the threshold — at that point one sweep
+    /// beats per-row bookkeeping).
+    pub fn refresh(&mut self) -> RefreshOutcome {
+        if self.dirty.is_empty() {
+            self.clean = self.applied;
+            return RefreshOutcome::default();
+        }
+        let n = self.store.n();
+        let full =
+            self.dirty.is_all() || self.dirty.len() as f64 > self.rescale_threshold * n as f64;
+        let outcome = if full {
+            self.refresh_full();
+            RefreshOutcome { rows: n, full: true }
+        } else {
+            if self.wv_stale {
+                self.globals.weight_values_into(&self.labels, &mut self.wv);
+                self.wv_stale = false;
+            }
+            if self.opts.laplacian && self.scale.is_empty() {
+                self.globals.scale_into(&self.opts, &mut self.scale);
+            }
+            let rows = self.dirty.len();
+            for i in 0..rows {
+                let r = self.dirty.rows()[i];
+                self.refresh_row(r as usize);
+            }
+            RefreshOutcome { rows, full: false }
+        };
+        self.dirty.clear();
+        self.clean = self.applied;
+        outcome
+    }
+
+    /// One full rescale pass: export the CSR snapshot, rebuild weights
+    /// and scale from the maintained globals, and run the whole-graph
+    /// kernel — the exact `embed_fused_into` sequence, so the result is
+    /// bitwise a from-scratch `sparse-fast` embed.
+    fn refresh_full(&mut self) {
+        let n = self.store.n();
+        self.store.export_csr(&mut self.csr_indptr, &mut self.csr_cols, &mut self.csr_vals);
+        for (v, d) in self.globals.deg.iter_mut().enumerate() {
+            *d = self.store.resum_degree(v);
+        }
+        self.globals.weight_values_into(&self.labels, &mut self.wv);
+        self.wv_stale = false;
+        if self.opts.laplacian {
+            self.globals.scale_into(&self.opts, &mut self.scale);
+        }
+        self.z.nrows = n;
+        self.z.ncols = self.k;
+        crate::gee::workspace::reset_f64(&mut self.z.data, n * self.k);
+        let ctx = AccumCtx {
+            indptr: &self.csr_indptr,
+            row_base: 0,
+            cols: &self.csr_cols,
+            vals: &self.csr_vals,
+            labels: &self.labels,
+            wv: &self.wv,
+            k: self.k,
+        };
+        let scale = if self.opts.laplacian { Some(self.scale.as_slice()) } else { None };
+        accumulate_rows(&ctx, &self.opts, 0, n, scale, &mut self.z.data);
+    }
+
+    /// Recompute one row through the kernel dispatch with a one-row CSR
+    /// window: `indptr = [0, len]`, `row_base = r`, cols/vals sliced to
+    /// the stored row. Globals (labels, wv, scale) stay globally indexed,
+    /// so the kernel runs the identical FP sequence the full pass would
+    /// for this row — including hub segment-splitting and the
+    /// diag/cor epilogue, which live inside `rows_loop`.
+    fn refresh_row(&mut self, r: usize) {
+        self.scratch_cols.clear();
+        self.scratch_vals.clear();
+        for e in self.store.row(r) {
+            self.scratch_cols.push(e.nbr);
+            self.scratch_vals.push(e.w);
+        }
+        let indptr = [0u32, self.scratch_cols.len() as u32];
+        let ctx = AccumCtx {
+            indptr: &indptr,
+            row_base: r,
+            cols: &self.scratch_cols,
+            vals: &self.scratch_vals,
+            labels: &self.labels,
+            wv: &self.wv,
+            k: self.k,
+        };
+        let scale = if self.opts.laplacian { Some(self.scale.as_slice()) } else { None };
+        let zrow = &mut self.z.data[r * self.k..(r + 1) * self.k];
+        zrow.fill(0.0);
+        accumulate_rows(&ctx, &self.opts, r, r + 1, scale, zrow);
+    }
+}
+
+// ------------------------------------------------------------- registry
+
+/// Why a session could not be opened.
+#[derive(Debug)]
+pub enum OpenError {
+    /// Per-tenant session quota or registry shutdown.
+    Admission(AdmitError),
+    /// The offered graph was invalid.
+    Invalid(String),
+}
+
+/// One registered session: the lock-guarded state plus its queue flag
+/// and the tenant quota permit held for the session's lifetime.
+pub struct SessionEntry {
+    /// Registry-unique session id (wire `sess=`).
+    pub id: u64,
+    /// Owning tenant.
+    pub tenant: String,
+    /// The resident session; wire threads apply deltas and read rows
+    /// under this lock, the fast-lane workers refresh under it.
+    pub session: Mutex<GeeSession>,
+    queued: AtomicBool,
+    _permit: TenantPermit,
+}
+
+/// Session registry + background fast-lane refresh workers.
+///
+/// Wire threads apply deltas under the session lock, then
+/// [`enqueue_refresh`](Self::enqueue_refresh): the `queued` flag
+/// coalesces enqueues, so a session appears in the drain queue at most
+/// once no matter how many delta batches land before a worker gets to
+/// it (the Mira pending-embeddings shape: pending work queued, batched
+/// by a background worker, stored for query).
+pub struct SessionRegistry {
+    next_id: AtomicU64,
+    sessions: Mutex<HashMap<u64, Arc<SessionEntry>>>,
+    governor: Arc<TenantGovernor>,
+    queue: Arc<BoundedQueue<u64>>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionRegistry {
+    /// Start the registry with `workers` fast-lane threads and a
+    /// per-tenant open-session quota.
+    pub fn start(workers: usize, session_quota: usize, metrics: Arc<Metrics>) -> Arc<Self> {
+        let reg = Arc::new(SessionRegistry {
+            next_id: AtomicU64::new(1),
+            sessions: Mutex::new(HashMap::new()),
+            governor: TenantGovernor::new(session_quota.max(1)),
+            queue: Arc::new(BoundedQueue::new(4096)),
+            workers: Mutex::new(Vec::new()),
+            metrics,
+        });
+        let mut handles = reg.workers.lock().unwrap();
+        for i in 0..workers.max(1) {
+            let r = Arc::clone(&reg);
+            handles.push(
+                thread::Builder::new()
+                    .name(format!("gee-session-{i}"))
+                    .spawn(move || r.worker_loop())
+                    .expect("spawn session worker"),
+            );
+        }
+        drop(handles);
+        reg
+    }
+
+    fn worker_loop(&self) {
+        while let Some(sid) = self.queue.pop() {
+            let entry = self.sessions.lock().unwrap().get(&sid).cloned();
+            let Some(entry) = entry else { continue };
+            // clear before refreshing: deltas landing mid-refresh re-enqueue
+            entry.queued.store(false, Ordering::SeqCst);
+            let outcome = entry.session.lock().unwrap().refresh();
+            self.metrics.session_refreshes.fetch_add(1, Ordering::Relaxed);
+            self.metrics.session_rows_refreshed.fetch_add(outcome.rows as u64, Ordering::Relaxed);
+            if outcome.full {
+                self.metrics.session_full_rescales.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Open a session for `tenant` over `g`, charging its session quota
+    /// for the session's lifetime.
+    pub fn open(
+        &self,
+        tenant: &str,
+        g: &Graph,
+        cfg: &SessionConfig,
+    ) -> Result<Arc<SessionEntry>, OpenError> {
+        g.validate().map_err(OpenError::Invalid)?;
+        let permit = self.governor.try_admit(tenant).map_err(OpenError::Admission)?;
+        let session = GeeSession::from_graph(g, cfg);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let entry = Arc::new(SessionEntry {
+            id,
+            tenant: tenant.to_string(),
+            session: Mutex::new(session),
+            queued: AtomicBool::new(false),
+            _permit: permit,
+        });
+        self.sessions.lock().unwrap().insert(id, Arc::clone(&entry));
+        self.metrics.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        Ok(entry)
+    }
+
+    /// Look up a live session.
+    pub fn get(&self, id: u64) -> Option<Arc<SessionEntry>> {
+        self.sessions.lock().unwrap().get(&id).cloned()
+    }
+
+    /// Close (unregister) a session; its quota permit releases once the
+    /// last in-flight reference drops. Returns whether it existed.
+    pub fn close(&self, id: u64) -> bool {
+        let removed = self.sessions.lock().unwrap().remove(&id).is_some();
+        if removed {
+            self.metrics.sessions_closed.fetch_add(1, Ordering::Relaxed);
+        }
+        removed
+    }
+
+    /// Queue `entry` for a fast-lane refresh (coalesced: at most one
+    /// pending drain per session).
+    pub fn enqueue_refresh(&self, entry: &SessionEntry) {
+        if !entry.queued.swap(true, Ordering::SeqCst)
+            && self.queue.push(entry.id).is_err()
+        {
+            // registry shutting down; leave the session readable as-is
+            entry.queued.store(false, Ordering::SeqCst);
+        }
+    }
+
+    /// Count deltas toward the serve summary.
+    pub fn note_deltas(&self, count: u64) {
+        self.metrics.session_deltas.fetch_add(count, Ordering::Relaxed);
+    }
+
+    /// Live session count.
+    pub fn len(&self) -> usize {
+        self.sessions.lock().unwrap().len()
+    }
+
+    /// No live sessions?
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stop the fast-lane workers (idempotent). Live sessions stay
+    /// readable; pending refreshes after close are abandoned.
+    pub fn shutdown(&self) {
+        self.queue.close();
+        let handles: Vec<_> = self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::sparse_gee::SparseGee;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+    use crate::util::rng::Rng;
+
+    fn assert_bitwise(a: &Dense, b: &Dense, what: &str) {
+        assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols), "{what}: shape");
+        for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{what}: cell {i} differs: {x:e} vs {y:e}"
+            );
+        }
+    }
+
+    fn oracle(s: &GeeSession) -> Dense {
+        SparseGee::fast().embed(&s.to_graph(), s.opts())
+    }
+
+    fn random_delta(rng: &mut Rng, n: u32, k: usize, live: &mut Vec<(u32, u32)>) -> Delta {
+        let roll = rng.f64();
+        if roll < 0.45 || live.is_empty() {
+            let (a, b) = (rng.below(n as usize) as u32, rng.below(n as usize) as u32);
+            live.push((a, b));
+            Delta::Insert { a, b, w: 1.0 + rng.f64() }
+        } else if roll < 0.8 {
+            let (a, b) = live.swap_remove(rng.below(live.len()));
+            Delta::Delete { a, b }
+        } else {
+            Delta::Relabel {
+                v: rng.below(n as usize) as u32,
+                label: rng.below(k + 1) as i32 - 1,
+            }
+        }
+    }
+
+    #[test]
+    fn drift_refresh_is_bitwise_across_option_grid() {
+        let g = generate_sbm(&SbmParams::paper(220), 97);
+        for opts in GeeOptions::table_order() {
+            let cfg = SessionConfig { opts, rescale_threshold: 0.25 };
+            let mut s = GeeSession::from_graph(&g, &cfg);
+            assert_bitwise(s.z(), &SparseGee::fast().embed(&g, &opts), "initial");
+            let mut rng = Rng::new(5 + opts.code().len() as u64);
+            let mut live: Vec<(u32, u32)> =
+                (0..g.src.len()).map(|i| (g.src[i], g.dst[i])).collect();
+            for round in 0..12 {
+                for _ in 0..20 {
+                    let d = random_delta(&mut rng, g.n as u32, g.k, &mut live);
+                    s.apply(&d).unwrap();
+                }
+                s.refresh();
+                assert_eq!(s.stale(), 0);
+                assert_bitwise(s.z(), &oracle(&s), &format!("{} round {round}", opts.code()));
+            }
+        }
+    }
+
+    #[test]
+    fn rescale_threshold_governs_escalation_and_stays_bitwise() {
+        let g = generate_sbm(&SbmParams::paper(150), 3);
+        // threshold 0: every delta escalates to a full rescale pass
+        let cfg = SessionConfig { opts: GeeOptions::ALL, rescale_threshold: 0.0 };
+        let mut s = GeeSession::from_graph(&g, &cfg);
+        s.apply(&Delta::Relabel { v: 3, label: 0 }).unwrap();
+        let out = s.refresh();
+        assert!(out.full, "threshold 0 must escalate to a full pass");
+        assert_bitwise(s.z(), &oracle(&s), "post full rescale");
+        // threshold 1: nothing escalates — even relabels refresh per-row
+        let cfg = SessionConfig { opts: GeeOptions::ALL, rescale_threshold: 1.0 };
+        let mut s = GeeSession::from_graph(&g, &cfg);
+        s.apply(&Delta::Insert { a: 1, b: 2, w: 1.5 }).unwrap();
+        let out = s.refresh();
+        assert!(!out.full && out.rows >= 2, "edge delta must stay per-row: {out:?}");
+        assert_bitwise(s.z(), &oracle(&s), "post per-row insert");
+        s.apply(&Delta::Relabel { v: 3, label: 1 }).unwrap();
+        let out = s.refresh();
+        assert!(!out.full, "threshold 1 never escalates");
+        assert_bitwise(s.z(), &oracle(&s), "post per-row relabel");
+    }
+
+    #[test]
+    fn apply_errors_leave_state_unchanged() {
+        let mut g = Graph::new(5, 2);
+        g.labels = vec![0, 0, 1, 1, -1];
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(1, 2, 2.0);
+        g.add_edge(3, 3, 0.5);
+        let mut s = GeeSession::from_graph(&g, &SessionConfig::default());
+        let before = s.z().data.clone();
+        let (applied, _) = s.watermark();
+        let n = s.n() as u32;
+        for bad in [
+            Delta::Insert { a: n, b: 0, w: 1.0 },
+            Delta::Insert { a: 0, b: n + 7, w: 1.0 },
+            Delta::Insert { a: 0, b: 1, w: f64::NAN },
+            Delta::Insert { a: 0, b: 1, w: f64::INFINITY },
+            Delta::Delete { a: 0, b: n },
+            Delta::Delete { a: 0, b: 3 }, // in range, but no such edge
+            Delta::Relabel { v: n, label: 0 },
+            Delta::Relabel { v: 0, label: g.k as i32 },
+            Delta::Relabel { v: 0, label: -2 },
+        ] {
+            assert!(s.apply(&bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert_eq!(s.watermark().0, applied, "failed deltas must not advance the watermark");
+        assert_eq!(s.num_edges(), 3);
+        s.refresh();
+        assert!(s.z().data.iter().zip(&before).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+
+    #[test]
+    fn apply_all_keeps_prefix_and_reports_index() {
+        let g = generate_sbm(&SbmParams::paper(50), 13);
+        let mut s = GeeSession::from_graph(&g, &SessionConfig::default());
+        let n = s.n() as u32;
+        let ds = [
+            Delta::Insert { a: 0, b: 1, w: 1.0 },
+            Delta::Insert { a: n, b: 1, w: 1.0 },
+            Delta::Insert { a: 2, b: 3, w: 1.0 },
+        ];
+        let (applied, res) = s.apply_all(&ds);
+        assert_eq!(applied, 1);
+        assert!(res.unwrap_err().starts_with("delta 1:"));
+        assert_eq!(s.stale(), 1);
+        s.refresh();
+        assert_bitwise(s.z(), &oracle(&s), "after partial batch");
+    }
+
+    #[test]
+    fn watermarks_track_refresh() {
+        let g = generate_sbm(&SbmParams::paper(40), 17);
+        let mut s = GeeSession::from_graph(&g, &SessionConfig::default());
+        assert_eq!(s.watermark(), (0, 0));
+        s.apply(&Delta::Insert { a: 0, b: 1, w: 1.0 }).unwrap();
+        s.apply(&Delta::Delete { a: 0, b: 1 }).unwrap();
+        assert_eq!(s.watermark(), (2, 0));
+        assert_eq!(s.stale(), 2);
+        s.refresh();
+        assert_eq!(s.watermark(), (2, 2));
+    }
+
+    #[test]
+    fn registry_fast_lane_drains_to_bitwise_clean() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = SessionRegistry::start(2, 4, Arc::clone(&metrics));
+        let g = generate_sbm(&SbmParams::paper(120), 29);
+        let entry = reg
+            .open("default", &g, &SessionConfig { opts: GeeOptions::ALL, rescale_threshold: 0.25 })
+            .unwrap();
+        let mut rng = Rng::new(31);
+        let mut live: Vec<(u32, u32)> = (0..g.src.len()).map(|i| (g.src[i], g.dst[i])).collect();
+        for _ in 0..40 {
+            let d = random_delta(&mut rng, g.n as u32, g.k, &mut live);
+            entry.session.lock().unwrap().apply(&d).unwrap();
+            reg.enqueue_refresh(&entry);
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(20);
+        loop {
+            let stale = entry.session.lock().unwrap().stale();
+            if stale == 0 {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "fast lane never drained");
+            thread::sleep(std::time::Duration::from_millis(5));
+        }
+        {
+            let s = entry.session.lock().unwrap();
+            assert_bitwise(s.z(), &oracle(&s), "registry drain");
+        }
+        assert!(metrics.session_refreshes.load(Ordering::Relaxed) > 0);
+        assert_eq!(reg.len(), 1);
+        assert!(reg.close(entry.id));
+        assert!(!reg.close(entry.id));
+        assert!(reg.get(entry.id).is_none());
+        reg.shutdown();
+    }
+
+    #[test]
+    fn session_quota_rides_the_governor() {
+        let metrics = Arc::new(Metrics::default());
+        let reg = SessionRegistry::start(1, 2, metrics);
+        let g = generate_sbm(&SbmParams::paper(30), 41);
+        let cfg = SessionConfig::default();
+        let a = reg.open("t1", &g, &cfg).unwrap();
+        let _b = reg.open("t1", &g, &cfg).unwrap();
+        match reg.open("t1", &g, &cfg) {
+            Err(OpenError::Admission(AdmitError::OverQuota)) => {}
+            Err(e) => panic!("expected quota refusal, got {e:?}"),
+            Ok(_) => panic!("expected quota refusal, got a session"),
+        }
+        // other tenants unaffected; closing frees the slot
+        let _c = reg.open("t2", &g, &cfg).unwrap();
+        let id = a.id;
+        drop(a);
+        assert!(reg.close(id));
+        let _d = reg.open("t1", &g, &cfg).unwrap();
+        reg.shutdown();
+    }
+}

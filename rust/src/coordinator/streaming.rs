@@ -8,18 +8,30 @@
 //! Because the `1/n_k` normalization is applied at snapshot time,
 //! every mutation is O(1) or O(deg):
 //!
-//! * `add_edge`      O(1)
+//! * `add_edge`      O(1) bookkeeping (plus O(deg) dirty marks when a
+//!                   Laplacian snapshot is cached — see below)
 //! * `add_vertex`    O(K)
 //! * `relabel`       O(deg(v))   (moves v's contribution column at its
 //!                                neighbors)
-//! * `snapshot`      O(N·K) for plain/diag/cor — exact;
-//!                   O(E + N·K) when Laplacian is on (degree-dependent
-//!                   scaling breaks O(1) incrementality; recomputed from
-//!                   the adjacency list, still one pass).
+//! * `snapshot`      O(Δ·K) between edits: the last snapshot is cached
+//!                   together with a [`DirtySet`] of rows whose inputs
+//!                   changed, and only those rows are recomputed (each in
+//!                   O(deg·K)). Falls back to the full pass on an option
+//!                   change, on global invalidation (label churn moves
+//!                   `n_k`, which touches every row), or on first call.
+//!
+//! The full pass survives as [`snapshot_full`](StreamingGee::snapshot_full),
+//! the parity oracle: the cached path is required to be **bitwise**
+//! identical to it, which the tests enforce with `f64::to_bits`. That
+//! works because the per-row recompute replays the exact same
+//! floating-point sequence as the full pass (same accumulation order over
+//! the adjacency list, same `safe_recip_sqrt` scale factors, same row
+//! normalization as [`normalize_rows`]).
 //!
 //! Every snapshot is *exact*: equality with the batch `SparseGee` is
 //! property-tested across all 8 option combos after random edit scripts.
 
+use crate::gee::globals::DirtySet;
 use crate::gee::options::GeeOptions;
 use crate::gee::weights::class_counts;
 use crate::graph::Graph;
@@ -39,6 +51,12 @@ pub struct StreamingGee {
     n_k: Vec<f64>,
     /// Adjacency list (neighbor, weight); self loops stored once.
     adj: Vec<Vec<(u32, f64)>>,
+    /// Rows whose cached embedding is stale. Only maintained while a
+    /// snapshot is cached (`snap.is_some()`); before the first snapshot
+    /// every mutation is absorbed for free.
+    dirty: DirtySet,
+    /// Last materialized snapshot and the options it was taken under.
+    snap: Option<(GeeOptions, Dense)>,
     /// Edges processed (for metrics).
     pub edges_seen: usize,
 }
@@ -53,6 +71,8 @@ impl StreamingGee {
             degrees: vec![0.0; g.n],
             n_k: class_counts(&g.labels, g.k),
             adj: vec![Vec::new(); g.n],
+            dirty: DirtySet::new(g.n),
+            snap: None,
             edges_seen: 0,
         };
         for i in 0..g.num_edges() {
@@ -69,10 +89,42 @@ impl StreamingGee {
         self.k
     }
 
-    /// Insert an undirected edge. O(1).
+    /// Insert an undirected edge. O(1). Panics on an out-of-range endpoint
+    /// or a non-finite weight; see [`try_add_edge`](Self::try_add_edge)
+    /// for the validating form.
     pub fn add_edge(&mut self, a: u32, b: u32, w: f64) {
+        self.try_add_edge(a, b, w).expect("StreamingGee::add_edge");
+    }
+
+    /// Validating [`add_edge`](Self::add_edge): rejects out-of-range
+    /// endpoints and non-finite weights, leaving the state untouched.
+    pub fn try_add_edge(&mut self, a: u32, b: u32, w: f64) -> Result<(), String> {
         let (ai, bi) = (a as usize, b as usize);
-        assert!(ai < self.n() && bi < self.n());
+        let n = self.n();
+        if ai >= n || bi >= n {
+            return Err(format!("edge ({a}, {b}) out of range (n={n})"));
+        }
+        if !w.is_finite() {
+            return Err(format!("edge ({a}, {b}) has non-finite weight {w}"));
+        }
+        if self.snap.is_some() {
+            // The endpoints' rows change under every option combo. Under
+            // Laplacian scaling their degrees feed every incident row, so
+            // current neighbors go stale too; edges inserted *later* mark
+            // their own endpoints, so marking the pre-insert lists is
+            // enough.
+            self.dirty.mark(a);
+            self.dirty.mark(b);
+            let lap = self.snap.as_ref().is_some_and(|(o, _)| o.laplacian);
+            if lap {
+                for &(u, _) in &self.adj[ai] {
+                    self.dirty.mark(u);
+                }
+                for &(u, _) in &self.adj[bi] {
+                    self.dirty.mark(u);
+                }
+            }
+        }
         let (la, lb) = (self.labels[ai], self.labels[bi]);
         if lb >= 0 {
             self.counts[ai * self.k + lb as usize] += w;
@@ -89,6 +141,7 @@ impl StreamingGee {
             self.adj[bi].push((a, w));
         }
         self.edges_seen += 1;
+        Ok(())
     }
 
     /// Append a vertex with the given label (or -1). O(K). Returns its id.
@@ -96,30 +149,60 @@ impl StreamingGee {
     /// the engines' `l >= 0` checks would already *treat* a `-7` as
     /// unlabeled, but storing it verbatim would leak out of
     /// [`to_graph`](Self::to_graph) and desync snapshot/batch round-trips.
+    /// Panics on `label >= k`; see [`try_add_vertex`](Self::try_add_vertex).
     pub fn add_vertex(&mut self, label: i32) -> u32 {
+        self.try_add_vertex(label).expect("StreamingGee::add_vertex")
+    }
+
+    /// Validating [`add_vertex`](Self::add_vertex): rejects `label >= k`,
+    /// leaving the state untouched.
+    pub fn try_add_vertex(&mut self, label: i32) -> Result<u32, String> {
         let label = label.max(-1);
-        assert!(label < self.k as i32);
+        if label >= self.k as i32 {
+            return Err(format!("label {label} out of range (k={})", self.k));
+        }
         let id = self.n() as u32;
         self.labels.push(label);
         self.counts.extend(std::iter::repeat(0.0).take(self.k));
         self.degrees.push(0.0);
         self.adj.push(Vec::new());
+        self.dirty.grow(self.n());
         if label >= 0 {
             self.n_k[label as usize] += 1.0;
+            // n_k moved: 1/n_k feeds every row of the cached snapshot.
+            if self.snap.is_some() {
+                self.dirty.mark_all();
+            }
+        } else if self.snap.is_some() {
+            // Unlabeled vertex: n_k untouched, only the (all-zero) new row
+            // needs materializing.
+            self.dirty.mark(id);
         }
-        id
+        Ok(id)
     }
 
     /// Change a vertex's label. O(deg(v)): moves v's contribution from the
     /// old class column to the new one at every neighbor. Negative labels
     /// normalize to `-1` (same rationale as [`add_vertex`](Self::add_vertex)).
+    /// Panics on out-of-range input; see [`try_relabel`](Self::try_relabel).
     pub fn relabel(&mut self, v: u32, new_label: i32) {
+        self.try_relabel(v, new_label).expect("StreamingGee::relabel");
+    }
+
+    /// Validating [`relabel`](Self::relabel): rejects an out-of-range
+    /// vertex or `new_label >= k`, leaving the state untouched.
+    pub fn try_relabel(&mut self, v: u32, new_label: i32) -> Result<(), String> {
         let new_label = new_label.max(-1);
         let vi = v as usize;
-        assert!(vi < self.n() && new_label < self.k as i32);
+        if vi >= self.n() {
+            return Err(format!("vertex {v} out of range (n={})", self.n()));
+        }
+        if new_label >= self.k as i32 {
+            return Err(format!("label {new_label} out of range (k={})", self.k));
+        }
         let old = self.labels[vi];
         if old == new_label {
-            return;
+            return Ok(());
         }
         if old >= 0 {
             self.n_k[old as usize] -= 1.0;
@@ -139,10 +222,107 @@ impl StreamingGee {
             }
         }
         self.labels[vi] = new_label;
+        // A relabel moves n_k (and hence 1/n_k) whenever either side is a
+        // real class, which is always the case past the old == new check:
+        // every cached row goes stale.
+        if self.snap.is_some() {
+            self.dirty.mark_all();
+        }
+        Ok(())
     }
 
-    /// Exact embedding snapshot under the given options.
-    pub fn snapshot(&self, opts: &GeeOptions) -> Dense {
+    /// Exact embedding snapshot under the given options. Served from the
+    /// row cache in O(dirty·deg·K) when the previous snapshot used the
+    /// same options; otherwise falls back to
+    /// [`snapshot_full`](Self::snapshot_full). Either way the result is
+    /// bitwise identical to the full pass.
+    pub fn snapshot(&mut self, opts: &GeeOptions) -> Dense {
+        self.refresh(opts);
+        match &self.snap {
+            Some((_, z)) => z.clone(),
+            None => unreachable!("refresh always materializes a snapshot"),
+        }
+    }
+
+    /// Bring the cached snapshot up to date under `opts`.
+    fn refresh(&mut self, opts: &GeeOptions) {
+        let n = self.n();
+        let hit = matches!(&self.snap,
+            Some((cached, _)) if cached == opts && !self.dirty.is_all());
+        if !hit {
+            let z = self.snapshot_full(opts);
+            self.snap = Some((*opts, z));
+            self.dirty.clear();
+            return;
+        }
+        let (_, mut z) = self.snap.take().expect("hit implies a cached snapshot");
+        if z.nrows < n {
+            // vertices appended since the cache was taken; their rows are
+            // in the dirty set
+            z.data.resize(n * self.k, 0.0);
+            z.nrows = n;
+        }
+        let inv_nk: Vec<f64> = self.n_k.iter().map(|&c| safe_recip(c)).collect();
+        for &r in self.dirty.rows() {
+            self.recompute_row(opts, &inv_nk, &mut z, r as usize);
+        }
+        self.dirty.clear();
+        self.snap = Some((*opts, z));
+    }
+
+    /// Recompute one row of the embedding in place — the O(deg·K) unit of
+    /// the incremental path. Must replay the exact floating-point sequence
+    /// of [`snapshot_full`](Self::snapshot_full) for that row (accumulation
+    /// order, scale factors, normalization) so the two stay bitwise equal.
+    fn recompute_row(&self, opts: &GeeOptions, inv_nk: &[f64], z: &mut Dense, v: usize) {
+        let row = z.row_mut(v);
+        row.fill(0.0);
+        if opts.laplacian {
+            let dv = if opts.diagonal { self.degrees[v] + 1.0 } else { self.degrees[v] };
+            let sv = safe_recip_sqrt(dv);
+            for &(u, w) in &self.adj[v] {
+                let ui = u as usize;
+                let lu = self.labels[ui];
+                if lu >= 0 {
+                    let du = if opts.diagonal { self.degrees[ui] + 1.0 } else { self.degrees[ui] };
+                    let su = safe_recip_sqrt(du);
+                    row[lu as usize] += w * sv * su * inv_nk[lu as usize];
+                }
+            }
+            if opts.diagonal {
+                let l = self.labels[v];
+                if l >= 0 {
+                    row[l as usize] += sv * sv * inv_nk[l as usize];
+                }
+            }
+        } else {
+            let base = v * self.k;
+            for (c, x) in row.iter_mut().enumerate() {
+                *x = self.counts[base + c] * inv_nk[c];
+            }
+            if opts.diagonal {
+                let l = self.labels[v];
+                if l >= 0 {
+                    row[l as usize] += inv_nk[l as usize];
+                }
+            }
+        }
+        if opts.correlation {
+            // same per-row math as normalize_rows (bitwise)
+            let norm: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+            let s = safe_recip(norm);
+            if s != 0.0 {
+                for x in row.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+    }
+
+    /// Exact embedding snapshot computed from scratch — the parity oracle
+    /// for the cached path. O(N·K) for plain/diag/cor; O(E + N·K) with
+    /// Laplacian on.
+    pub fn snapshot_full(&self, opts: &GeeOptions) -> Dense {
         let n = self.n();
         let k = self.k;
         let inv_nk: Vec<f64> = self.n_k.iter().map(|&c| safe_recip(c)).collect();
@@ -229,7 +409,17 @@ mod tests {
     use crate::gee::Engine;
     use crate::util::rng::Rng;
 
-    fn check_all_combos(s: &StreamingGee) {
+    fn assert_bitwise(a: &Dense, b: &Dense, ctx: &str) {
+        assert_eq!((a.nrows, a.ncols), (b.nrows, b.ncols), "{ctx}: shape");
+        for (i, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+            assert!(
+                x.to_bits() == y.to_bits(),
+                "{ctx}: cell {i} differs: {x:e} vs {y:e}"
+            );
+        }
+    }
+
+    fn check_all_combos(s: &mut StreamingGee) {
         let g = s.to_graph();
         for opts in GeeOptions::table_order() {
             let batch = Engine::Sparse.embed(&g, &opts).unwrap();
@@ -240,6 +430,7 @@ mod tests {
                 opts,
                 batch.max_abs_diff(&stream)
             );
+            assert_bitwise(&stream, &s.snapshot_full(&opts), &format!("{opts:?}"));
         }
     }
 
@@ -254,7 +445,7 @@ mod tests {
         for _ in 0..150 {
             s.add_edge(rng.below(30) as u32, rng.below(30) as u32, rng.f64() + 0.1);
         }
-        check_all_combos(&s);
+        check_all_combos(&mut s);
     }
 
     #[test]
@@ -273,7 +464,7 @@ mod tests {
             let n = s.n();
             s.add_edge(rng.below(n) as u32, rng.below(n) as u32, 1.0);
         }
-        check_all_combos(&s);
+        check_all_combos(&mut s);
     }
 
     #[test]
@@ -292,7 +483,95 @@ mod tests {
             let new = (rng.below(5) as i32) - 1; // includes -1
             s.relabel(v, new);
         }
-        check_all_combos(&s);
+        check_all_combos(&mut s);
+    }
+
+    #[test]
+    fn dirty_refresh_bitwise_matches_full() {
+        // the cached O(Δ) path: prime the cache, mutate, snapshot again —
+        // every snapshot must be bitwise equal to the from-scratch pass
+        for (oi, opts) in GeeOptions::table_order().into_iter().enumerate() {
+            let mut g = Graph::new(40, 4);
+            let mut rng = Rng::new(0xD117 ^ oi as u64);
+            for l in g.labels.iter_mut() {
+                *l = rng.below(4) as i32;
+            }
+            for _ in 0..100 {
+                g.add_edge(rng.below(40) as u32, rng.below(40) as u32, rng.f64() + 0.1);
+            }
+            let mut s = StreamingGee::new(&g);
+            s.snapshot(&opts); // prime the cache
+            for round in 0..12 {
+                for _ in 0..10 {
+                    let n = s.n();
+                    s.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+                }
+                if round % 4 == 1 {
+                    s.add_vertex(-1); // cache grows in place
+                }
+                if round % 4 == 3 {
+                    // forces mark_all and a full fallback next snapshot
+                    let v = rng.below(s.n()) as u32;
+                    s.relabel(v, (rng.below(5) as i32) - 1);
+                }
+                let cached = s.snapshot(&opts);
+                let full = s.snapshot_full(&opts);
+                assert_bitwise(&cached, &full, &format!("{opts:?} round {round}"));
+            }
+        }
+    }
+
+    #[test]
+    fn option_switch_invalidates_cache() {
+        let mut g = Graph::new(20, 3);
+        let mut rng = Rng::new(305);
+        for l in g.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        let mut s = StreamingGee::new(&g);
+        for _ in 0..60 {
+            s.add_edge(rng.below(20) as u32, rng.below(20) as u32, 1.0);
+        }
+        // alternate between two option sets with edits in between; each
+        // switch is a cache miss and must still be exact
+        let a = GeeOptions { laplacian: true, diagonal: true, correlation: false };
+        let b = GeeOptions { laplacian: false, diagonal: false, correlation: true };
+        for i in 0..6 {
+            s.add_edge(rng.below(20) as u32, rng.below(20) as u32, rng.f64() + 0.1);
+            let opts = if i % 2 == 0 { a } else { b };
+            assert_bitwise(&s.snapshot(&opts), &s.snapshot_full(&opts), "switch");
+        }
+    }
+
+    #[test]
+    fn try_apis_reject_and_leave_state_unchanged() {
+        let mut g = Graph::new(6, 2);
+        g.labels = vec![0, 1, 0, 1, 0, 1];
+        g.add_edge(0, 1, 1.0);
+        g.add_edge(2, 3, 2.0);
+        let mut s = StreamingGee::new(&g);
+        let before = s.snapshot(&GeeOptions::ALL);
+        let edges_before = s.edges_seen;
+
+        assert!(s.try_add_edge(0, 6, 1.0).is_err(), "endpoint out of range");
+        assert!(s.try_add_edge(9, 0, 1.0).is_err(), "endpoint out of range");
+        assert!(s.try_add_edge(0, 1, f64::NAN).is_err(), "NaN weight");
+        assert!(s.try_add_edge(0, 1, f64::INFINITY).is_err(), "inf weight");
+        assert!(s.try_add_vertex(2).is_err(), "label >= k");
+        assert!(s.try_relabel(6, 0).is_err(), "vertex out of range");
+        assert!(s.try_relabel(0, 2).is_err(), "label >= k");
+
+        assert_eq!(s.n(), 6, "rejected ops must not change n");
+        assert_eq!(s.edges_seen, edges_before, "rejected ops must not count");
+        let after = s.snapshot(&GeeOptions::ALL);
+        assert_bitwise(&before, &after, "state after rejected ops");
+        check_all_combos(&mut s);
+
+        // the valid forms still work through the same entry points
+        assert!(s.try_add_edge(0, 5, 0.5).is_ok());
+        assert_eq!(s.try_add_vertex(-3), Ok(6), "negative labels normalize");
+        assert!(s.try_relabel(0, -1).is_ok());
+        check_all_combos(&mut s);
     }
 
     #[test]
@@ -311,11 +590,11 @@ mod tests {
         assert_eq!(out.labels[1], -1, "relabel(-9) must store -1");
         assert!(out.validate().is_ok());
         // n_k bookkeeping stayed consistent: snapshot == batch everywhere
-        check_all_combos(&s);
+        check_all_combos(&mut s);
         // and relabeling back from the normalized sentinel still works
         s.relabel(v, 2);
         assert_eq!(s.to_graph().labels[v as usize], 2);
-        check_all_combos(&s);
+        check_all_combos(&mut s);
     }
 
     #[test]
@@ -326,7 +605,7 @@ mod tests {
         s.add_edge(3, 3, 2.5);
         s.add_edge(0, 3, 1.0);
         s.add_edge(3, 3, 0.5);
-        check_all_combos(&s);
+        check_all_combos(&mut s);
     }
 
     #[test]

@@ -26,14 +26,24 @@
 //! ERR-then-close discipline of `shard::remote` — after a framing error
 //! there is no resync point.
 
+//! The session lane adds four more verbs over the same framing (see
+//! [`SessionHeader`] and friends): `SESS2` opens a resident session from
+//! an `EMBED2`-shaped body, `DELTA2` streams batched edge
+//! insert/delete/relabel records, `ROWS2` fetches chosen Z rows plus the
+//! `applied`/`clean` staleness watermark, `CLOSE2` unregisters.
+
 use std::io::{Read, Write};
 
 use anyhow::{bail, Context, Result};
 
 use super::server::{MAX_WIRE_EDGES, MAX_WIRE_VERTICES};
+use super::session::Delta;
 use crate::gee::GeeOptions;
 use crate::graph::Graph;
-use crate::shard::codec::{self, EDGE_RECORD_BYTES, LABEL_RECORD_BYTES};
+use crate::shard::codec::{
+    self, DELTA_OP_DELETE, DELTA_OP_INSERT, DELTA_OP_RELABEL, DELTA_RECORD_BYTES,
+    EDGE_RECORD_BYTES, LABEL_RECORD_BYTES,
+};
 
 /// The tenant v1 text connections (and HELLO2 without `tenant=`) bill to.
 pub const DEFAULT_TENANT: &str = "default";
@@ -293,6 +303,275 @@ pub fn parse_reply(line: &str) -> Result<Reply> {
     bail!("unparseable reply line '{line}'");
 }
 
+// ---------------------------------------------------------- session verbs
+
+/// Row-id records in a `ROWS2` request body are bare `u32`s.
+pub const ROW_ID_RECORD_BYTES: usize = 4;
+
+/// Hard cap on deltas per `DELTA2` frame — far above any sane batch, it
+/// exists so a hostile count can't translate into an unbounded decode.
+pub const MAX_FRAME_DELTAS: u64 = 1 << 22;
+
+/// `SESS2` header: an `EMBED2`-shaped open (same body frames follow)
+/// plus the optional per-session rescale threshold.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionHeader {
+    pub id: u64,
+    pub options: GeeOptions,
+    pub n: usize,
+    pub k: usize,
+    /// `thresh=` — affected-row fraction above which a delta escalates
+    /// to a full rescale pass; server default when absent.
+    pub rescale_threshold: Option<f64>,
+}
+
+pub fn format_session_header(h: &SessionHeader) -> String {
+    let mut s = format!("SESS2 id={} code={} n={} k={}", h.id, h.options.code(), h.n, h.k);
+    if let Some(t) = h.rescale_threshold {
+        s.push_str(&format!(" thresh={t}"));
+    }
+    s
+}
+
+/// Parse a `SESS2` header (same fatality contract as
+/// [`parse_request_header`]: a parse failure is connection-fatal,
+/// out-of-bounds dims are the server's to refuse request-scoped).
+pub fn parse_session_header(line: &str) -> Result<SessionHeader> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("SESS2") {
+        bail!("expected SESS2, got '{line}'");
+    }
+    let mut id: Option<u64> = None;
+    let mut code = "---".to_string();
+    let mut n = 0usize;
+    let mut k = 0usize;
+    let mut thresh: Option<f64> = None;
+    for p in parts {
+        let (key, val) = p.split_once('=').context("SESS2 args are key=val")?;
+        match key {
+            "id" => id = Some(val.parse().context("bad id")?),
+            "code" => code = val.to_string(),
+            "n" => n = val.parse().context("bad n")?,
+            "k" => k = val.parse().context("bad k")?,
+            "thresh" => {
+                let t: f64 = val.parse().context("bad thresh")?;
+                if !(0.0..=1.0).contains(&t) {
+                    bail!("thresh {t} outside 0..=1");
+                }
+                thresh = Some(t);
+            }
+            other => bail!("unknown SESS2 arg '{other}'"),
+        }
+    }
+    let id = id.context("SESS2 requires id=<u64>")?;
+    let options = GeeOptions::from_code(&code).context("bad options code")?;
+    Ok(SessionHeader { id, options, n, k, rescale_threshold: thresh })
+}
+
+/// `DELTA2` / `ROWS2` / `CLOSE2` headers share one shape: request id,
+/// target session, and a body record count (0 for `CLOSE2`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionOpHeader {
+    pub id: u64,
+    pub sess: u64,
+    pub count: u64,
+}
+
+pub fn format_delta_header(h: &SessionOpHeader) -> String {
+    format!("DELTA2 id={} sess={} count={}", h.id, h.sess, h.count)
+}
+
+pub fn format_rows_header(h: &SessionOpHeader) -> String {
+    format!("ROWS2 id={} sess={} count={}", h.id, h.sess, h.count)
+}
+
+pub fn format_close_header(id: u64, sess: u64) -> String {
+    format!("CLOSE2 id={id} sess={sess}")
+}
+
+/// Parse a `DELTA2`/`ROWS2`/`CLOSE2` line (pass the expected verb).
+/// `CLOSE2` takes no `count=`.
+pub fn parse_session_op(line: &str, verb: &str) -> Result<SessionOpHeader> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some(verb) {
+        bail!("expected {verb}, got '{line}'");
+    }
+    let mut id: Option<u64> = None;
+    let mut sess: Option<u64> = None;
+    let mut count = 0u64;
+    for p in parts {
+        let (key, val) = p.split_once('=').with_context(|| format!("{verb} args are key=val"))?;
+        match key {
+            "id" => id = Some(val.parse().context("bad id")?),
+            "sess" => sess = Some(val.parse().context("bad sess")?),
+            "count" if verb != "CLOSE2" => count = val.parse().context("bad count")?,
+            other => bail!("unknown {verb} arg '{other}'"),
+        }
+    }
+    Ok(SessionOpHeader {
+        id: id.with_context(|| format!("{verb} requires id=<u64>"))?,
+        sess: sess.with_context(|| format!("{verb} requires sess=<u64>"))?,
+        count,
+    })
+}
+
+/// The wire fields of one delta record (op code, endpoints/label, weight).
+pub fn delta_fields(d: &Delta) -> (u32, u32, u32, f64) {
+    match *d {
+        Delta::Insert { a, b, w } => (DELTA_OP_INSERT, a, b, w),
+        Delta::Delete { a, b } => (DELTA_OP_DELETE, a, b, 0.0),
+        Delta::Relabel { v, label } => (DELTA_OP_RELABEL, v, label as u32, 0.0),
+    }
+}
+
+/// Decode one delta record's fields; unknown op codes are refused here,
+/// semantic validity (vertex range, label range) is the session's call.
+pub fn delta_from_fields(op: u32, a: u32, b: u32, w: f64) -> Result<Delta> {
+    match op {
+        DELTA_OP_INSERT => Ok(Delta::Insert { a, b, w }),
+        DELTA_OP_DELETE => Ok(Delta::Delete { a, b }),
+        DELTA_OP_RELABEL => Ok(Delta::Relabel { v: a, label: b as i32 }),
+        other => bail!("unknown delta op {other}"),
+    }
+}
+
+/// Client side: one `DELTA2` body frame.
+pub fn write_delta_frame(w: &mut impl Write, deltas: &[Delta]) -> std::io::Result<()> {
+    codec::write_frame_len(w, (deltas.len() * DELTA_RECORD_BYTES) as u64)?;
+    for d in deltas {
+        let (op, a, b, wt) = delta_fields(d);
+        codec::write_delta_record(w, op, a, b, wt)?;
+    }
+    Ok(())
+}
+
+/// Server side: decode a `DELTA2` body of exactly `count` records into
+/// `out` (cleared first). Frame-length mismatches are framing errors
+/// (connection-fatal at the call site); an unknown op code arrives
+/// inside a well-formed frame, so it surfaces as a normal error after
+/// the body is fully consumed.
+pub fn read_delta_frame(
+    r: &mut impl Read,
+    count: u64,
+    scratch: &mut Vec<u8>,
+    out: &mut Vec<Delta>,
+) -> Result<()> {
+    if count > MAX_FRAME_DELTAS {
+        bail!("delta frame of {count} records exceeds the cap {MAX_FRAME_DELTAS}");
+    }
+    out.clear();
+    let len = codec::read_frame_len(r, "delta frame")?;
+    codec::check_frame_len(
+        len,
+        DELTA_RECORD_BYTES,
+        MAX_FRAME_DELTAS * DELTA_RECORD_BYTES as u64,
+        Some(count * DELTA_RECORD_BYTES as u64),
+        "delta frame",
+    )?;
+    let mut bad: Option<String> = None;
+    codec::read_frame_body(r, len, scratch, "delta frame", |chunk| {
+        for rec in chunk.chunks_exact(DELTA_RECORD_BYTES) {
+            let (op, a, b, w) = codec::decode_delta(rec);
+            match delta_from_fields(op, a, b, w) {
+                Ok(d) => out.push(d),
+                Err(e) => bad = bad.take().or(Some(e.to_string())),
+            }
+        }
+        Ok(())
+    })?;
+    if let Some(msg) = bad {
+        bail!("{msg}");
+    }
+    Ok(())
+}
+
+/// Client side: one `ROWS2` body frame of row ids.
+pub fn write_rows_frame(w: &mut impl Write, ids: &[u32]) -> std::io::Result<()> {
+    codec::write_frame_len(w, (ids.len() * ROW_ID_RECORD_BYTES) as u64)?;
+    for v in ids {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Server side: decode a `ROWS2` body of exactly `count` row ids.
+pub fn read_rows_frame(
+    r: &mut impl Read,
+    count: u64,
+    scratch: &mut Vec<u8>,
+    out: &mut Vec<u32>,
+) -> Result<()> {
+    out.clear();
+    let len = codec::read_frame_len(r, "row-ids frame")?;
+    codec::check_frame_len(
+        len,
+        ROW_ID_RECORD_BYTES,
+        (MAX_WIRE_VERTICES * ROW_ID_RECORD_BYTES) as u64,
+        Some(count * ROW_ID_RECORD_BYTES as u64),
+        "row-ids frame",
+    )?;
+    codec::read_frame_body(r, len, scratch, "row-ids frame", |chunk| {
+        for rec in chunk.chunks_exact(ROW_ID_RECORD_BYTES) {
+            out.push(u32::from_le_bytes(rec.try_into().unwrap()));
+        }
+        Ok(())
+    })
+}
+
+/// Session reply lines (the session twins of [`Reply`]'s `OK`):
+/// `SESS id= sess= rows= cols=`, `DACK id= applied= stale=`,
+/// `ROWS id= rows= cols= applied= clean=` (+ Z frame), `CLOSED id=`.
+pub fn format_sess_ok(id: u64, sess: u64, rows: usize, cols: usize) -> String {
+    format!("SESS id={id} sess={sess} rows={rows} cols={cols}")
+}
+
+pub fn parse_sess_ok(line: &str) -> Result<(u64, u64, usize, usize)> {
+    let rest = line.trim().strip_prefix("SESS ").context("expected SESS reply")?;
+    let mut it = rest.split_whitespace();
+    let id = parse_kv(it.next(), "id", line)?;
+    let sess = parse_kv(it.next(), "sess", line)?;
+    let rows = parse_kv(it.next(), "rows", line)?;
+    let cols = parse_kv(it.next(), "cols", line)?;
+    Ok((id, sess, rows, cols))
+}
+
+pub fn format_dack(id: u64, applied: u64, stale: u64) -> String {
+    format!("DACK id={id} applied={applied} stale={stale}")
+}
+
+pub fn parse_dack(line: &str) -> Result<(u64, u64, u64)> {
+    let rest = line.trim().strip_prefix("DACK ").context("expected DACK reply")?;
+    let mut it = rest.split_whitespace();
+    let id = parse_kv(it.next(), "id", line)?;
+    let applied = parse_kv(it.next(), "applied", line)?;
+    let stale = parse_kv(it.next(), "stale", line)?;
+    Ok((id, applied, stale))
+}
+
+pub fn format_rows_ok(id: u64, rows: usize, cols: usize, applied: u64, clean: u64) -> String {
+    format!("ROWS id={id} rows={rows} cols={cols} applied={applied} clean={clean}")
+}
+
+pub fn parse_rows_ok(line: &str) -> Result<(u64, usize, usize, u64, u64)> {
+    let rest = line.trim().strip_prefix("ROWS ").context("expected ROWS reply")?;
+    let mut it = rest.split_whitespace();
+    let id = parse_kv(it.next(), "id", line)?;
+    let rows = parse_kv(it.next(), "rows", line)?;
+    let cols = parse_kv(it.next(), "cols", line)?;
+    let applied = parse_kv(it.next(), "applied", line)?;
+    let clean = parse_kv(it.next(), "clean", line)?;
+    Ok((id, rows, cols, applied, clean))
+}
+
+pub fn format_closed(id: u64) -> String {
+    format!("CLOSED id={id}")
+}
+
+pub fn parse_closed(line: &str) -> Result<u64> {
+    let rest = line.trim().strip_prefix("CLOSED ").context("expected CLOSED reply")?;
+    parse_kv(rest.split_whitespace().next(), "id", line)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -415,5 +694,84 @@ mod tests {
         let mut scratch = Vec::new();
         let err = drain_request_body(&mut Cursor::new(&buf), &mut scratch).unwrap_err();
         assert!(format!("{err:#}").contains("exceeds the wire limit"), "{err:#}");
+    }
+
+    #[test]
+    fn session_header_round_trip() {
+        let h = SessionHeader {
+            id: 11,
+            options: GeeOptions::ALL,
+            n: 40,
+            k: 3,
+            rescale_threshold: Some(0.5),
+        };
+        assert_eq!(parse_session_header(&format_session_header(&h)).unwrap(), h);
+        let bare = SessionHeader { rescale_threshold: None, ..h };
+        assert_eq!(parse_session_header(&format_session_header(&bare)).unwrap(), bare);
+        assert!(parse_session_header("SESS2 code=ldc n=3 k=2").is_err(), "id mandatory");
+        assert!(parse_session_header("SESS2 id=1 code=ldc n=3 k=2 thresh=1.5").is_err());
+        assert!(parse_session_header("SESS2 id=1 code=zzz n=3 k=2").is_err());
+        assert!(parse_session_header("EMBED2 id=1 code=ldc n=3 k=2").is_err());
+    }
+
+    #[test]
+    fn session_op_headers_round_trip() {
+        let h = SessionOpHeader { id: 4, sess: 9, count: 128 };
+        assert_eq!(parse_session_op(&format_delta_header(&h), "DELTA2").unwrap(), h);
+        assert_eq!(parse_session_op(&format_rows_header(&h), "ROWS2").unwrap(), h);
+        let c = parse_session_op(&format_close_header(5, 9), "CLOSE2").unwrap();
+        assert_eq!((c.id, c.sess, c.count), (5, 9, 0));
+        assert!(parse_session_op("DELTA2 id=1 count=2", "DELTA2").is_err(), "sess mandatory");
+        assert!(parse_session_op("CLOSE2 id=1 sess=2 count=3", "CLOSE2").is_err());
+        assert!(parse_session_op("ROWS2 id=1 sess=2 zap=3", "ROWS2").is_err());
+    }
+
+    #[test]
+    fn delta_frame_round_trips_bitwise() {
+        let deltas = vec![
+            Delta::Insert { a: 1, b: 2, w: 0.1 + 0.2 },
+            Delta::Delete { a: 2, b: 2 },
+            Delta::Relabel { v: 7, label: -1 },
+            Delta::Relabel { v: 8, label: 3 },
+        ];
+        let mut buf = Vec::new();
+        write_delta_frame(&mut buf, &deltas).unwrap();
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        read_delta_frame(&mut Cursor::new(&buf), 4, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, deltas);
+        // count mismatch is a framing error
+        assert!(read_delta_frame(&mut Cursor::new(&buf), 3, &mut scratch, &mut out).is_err());
+        // unknown op code inside a well-formed frame errors after the
+        // body is consumed (request-scoped at the server)
+        let mut buf = Vec::new();
+        codec::write_frame_len(&mut buf, DELTA_RECORD_BYTES as u64).unwrap();
+        codec::write_delta_record(&mut buf, 99, 0, 1, 1.0).unwrap();
+        let err =
+            read_delta_frame(&mut Cursor::new(&buf), 1, &mut scratch, &mut out).unwrap_err();
+        assert!(err.to_string().contains("unknown delta op 99"), "{err:#}");
+    }
+
+    #[test]
+    fn rows_frame_round_trips() {
+        let ids = vec![0u32, 7, 3, u32::MAX];
+        let mut buf = Vec::new();
+        write_rows_frame(&mut buf, &ids).unwrap();
+        let (mut scratch, mut out) = (Vec::new(), Vec::new());
+        read_rows_frame(&mut Cursor::new(&buf), 4, &mut scratch, &mut out).unwrap();
+        assert_eq!(out, ids);
+        assert!(read_rows_frame(&mut Cursor::new(&buf), 5, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn session_reply_lines_round_trip() {
+        assert_eq!(parse_sess_ok(&format_sess_ok(1, 9, 40, 3)).unwrap(), (1, 9, 40, 3));
+        assert_eq!(parse_dack(&format_dack(2, 17, 5)).unwrap(), (2, 17, 5));
+        assert_eq!(
+            parse_rows_ok(&format_rows_ok(3, 8, 3, 17, 12)).unwrap(),
+            (3, 8, 3, 17, 12)
+        );
+        assert_eq!(parse_closed(&format_closed(4)).unwrap(), 4);
+        assert!(parse_sess_ok("DACK id=1 applied=2 stale=0").is_err());
+        assert!(parse_dack("DACK id=1 applied=x stale=0").is_err());
     }
 }

@@ -1,0 +1,241 @@
+//! Incrementally-maintained global vectors shared by the batch and
+//! resident lanes.
+//!
+//! A GEE row depends on exactly two global vectors: the per-class vertex
+//! counts `n_k` (through the weight values `1/n_k[y_c]`) and, under the
+//! laplacian option, the per-vertex degrees (through the scale
+//! `1/sqrt(deg + bump)`). [`Globals`] owns both and keeps them current
+//! under edge and label deltas, so the session / streaming lanes never
+//! re-derive them from scratch — and because class counts move by exact
+//! whole numbers (±1.0, exact in f64) the maintained `n_k` is *bitwise*
+//! what `class_counts_into` would recount, which is what lets incremental
+//! refresh stay bit-identical to a from-scratch `sparse-fast` embed.
+//!
+//! [`DirtySet`] is the companion coalescing structure: an O(1) "mark row
+//! dirty" set with a dense membership flag, drained by the refresh pass.
+
+use crate::gee::weights::{class_counts_into, weight_values_from_counts};
+use crate::gee::GeeOptions;
+use crate::sparse::ops::safe_recip_sqrt;
+
+/// The global `n_k` / degree vectors a GEE row reads besides its own
+/// adjacency.
+#[derive(Clone, Debug, Default)]
+pub struct Globals {
+    /// Per-class labeled-vertex counts (exact whole numbers).
+    pub n_k: Vec<f64>,
+    /// Per-vertex degrees (sum of incident weights; self-loops once).
+    pub deg: Vec<f64>,
+}
+
+impl Globals {
+    /// Zeroed globals for `n` vertices and `k` classes.
+    pub fn new(n: usize, k: usize) -> Self {
+        Globals { n_k: vec![0.0; k], deg: vec![0.0; n] }
+    }
+
+    /// Recount `n_k` from a label vector (the batch-path recount; the
+    /// incremental updates below stay bitwise equal to this).
+    pub fn recount_labels(&mut self, labels: &[i32], k: usize) {
+        class_counts_into(labels, k, &mut self.n_k);
+    }
+
+    /// Number of classes.
+    pub fn k(&self) -> usize {
+        self.n_k.len()
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.deg.len()
+    }
+
+    /// Register one more vertex carrying `label` (-1 = unlabeled).
+    pub fn count_label(&mut self, label: i32) {
+        if label >= 0 {
+            self.n_k[label as usize] += 1.0;
+        }
+    }
+
+    /// Unregister one vertex carrying `label` (-1 = unlabeled).
+    pub fn uncount_label(&mut self, label: i32) {
+        if label >= 0 {
+            self.n_k[label as usize] -= 1.0;
+        }
+    }
+
+    /// Move one vertex from class `old` to class `new`.
+    pub fn relabel(&mut self, old: i32, new: i32) {
+        self.uncount_label(old);
+        self.count_label(new);
+    }
+
+    /// Grow by one vertex with the given label; returns its id.
+    pub fn add_vertex(&mut self, label: i32) -> u32 {
+        let v = self.deg.len() as u32;
+        self.deg.push(0.0);
+        self.count_label(label);
+        v
+    }
+
+    /// Fill `wv` with per-vertex `1/n_k[y_j]` weights from the maintained
+    /// counts — bitwise the batch `weight_values_into` result.
+    pub fn weight_values_into(&self, labels: &[i32], wv: &mut Vec<f64>) {
+        weight_values_from_counts(labels, &self.n_k, wv);
+    }
+
+    /// The laplacian scale value for vertex `v` under `opts` — the same
+    /// `safe_recip_sqrt(deg + bump)` the fused batch path computes, so a
+    /// point lookup is bitwise the batch vector entry.
+    pub fn scale_at(&self, v: usize, opts: &GeeOptions) -> f64 {
+        safe_recip_sqrt(self.deg[v] + diag_bump(opts))
+    }
+
+    /// Fill `scale` with the full laplacian scale vector under `opts`.
+    pub fn scale_into(&self, opts: &GeeOptions, scale: &mut Vec<f64>) {
+        let bump = diag_bump(opts);
+        scale.clear();
+        scale.extend(self.deg.iter().map(|&d| safe_recip_sqrt(d + bump)));
+    }
+}
+
+/// The +1 the diagonal option adds to every degree before the laplacian
+/// scale (the augmented self-loop), 0 otherwise.
+pub fn diag_bump(opts: &GeeOptions) -> f64 {
+    if opts.diagonal {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Coalescing dirty-row set: O(1) mark with a dense membership flag, so
+/// a row touched by many deltas between refreshes is refreshed once.
+#[derive(Clone, Debug, Default)]
+pub struct DirtySet {
+    flag: Vec<bool>,
+    rows: Vec<u32>,
+    all: bool,
+}
+
+impl DirtySet {
+    /// Empty set over `n` rows.
+    pub fn new(n: usize) -> Self {
+        DirtySet { flag: vec![false; n], rows: Vec::new(), all: false }
+    }
+
+    /// Mark row `v` dirty (no-op if already dirty or everything is).
+    pub fn mark(&mut self, v: u32) {
+        if !self.all && !self.flag[v as usize] {
+            self.flag[v as usize] = true;
+            self.rows.push(v);
+        }
+    }
+
+    /// Escalate to "every row is dirty" (relabel storms, shape changes).
+    pub fn mark_all(&mut self) {
+        self.all = true;
+    }
+
+    /// Grow the flag vector to cover `n` rows (vertex growth).
+    pub fn grow(&mut self, n: usize) {
+        if n > self.flag.len() {
+            self.flag.resize(n, false);
+        }
+    }
+
+    /// Is everything dirty?
+    pub fn is_all(&self) -> bool {
+        self.all
+    }
+
+    /// Number of individually-marked rows (meaningless when `is_all`).
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Nothing to refresh?
+    pub fn is_empty(&self) -> bool {
+        !self.all && self.rows.is_empty()
+    }
+
+    /// The individually-marked rows (unordered, duplicate-free).
+    pub fn rows(&self) -> &[u32] {
+        &self.rows
+    }
+
+    /// Reset to clean after a refresh pass.
+    pub fn clear(&mut self) {
+        if self.all {
+            // flags for individually-marked rows may predate mark_all
+            self.flag.iter_mut().for_each(|f| *f = false);
+        } else {
+            for &r in &self.rows {
+                self.flag[r as usize] = false;
+            }
+        }
+        self.rows.clear();
+        self.all = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::weights::{class_counts, weight_values};
+
+    #[test]
+    fn incremental_counts_match_recount_bitwise() {
+        let mut labels = vec![0, 1, 1, 2, -1, 0];
+        let mut g = Globals::new(labels.len(), 3);
+        g.recount_labels(&labels, 3);
+        assert_eq!(g.n_k, class_counts(&labels, 3));
+
+        // churn labels incrementally and compare against a fresh recount
+        let moves = [(0usize, 2i32), (4, 1), (1, -1), (3, 0), (2, 2)];
+        for &(v, new) in &moves {
+            g.relabel(labels[v], new);
+            labels[v] = new;
+            assert_eq!(g.n_k, class_counts(&labels, 3), "after {v} -> {new}");
+            let mut wv = Vec::new();
+            g.weight_values_into(&labels, &mut wv);
+            let batch = weight_values(&labels, 3);
+            assert!(wv.iter().zip(&batch).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn scale_point_lookup_matches_vector() {
+        let mut g = Globals::new(4, 2);
+        g.deg = vec![0.0, 1.0, 3.5, 100.0];
+        for opts in GeeOptions::table_order() {
+            let mut s = Vec::new();
+            g.scale_into(&opts, &mut s);
+            for v in 0..4 {
+                assert_eq!(g.scale_at(v, &opts).to_bits(), s[v].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_set_coalesces_and_clears() {
+        let mut d = DirtySet::new(5);
+        d.mark(3);
+        d.mark(1);
+        d.mark(3);
+        assert_eq!(d.len(), 2);
+        assert!(!d.is_empty());
+        d.clear();
+        assert!(d.is_empty());
+        d.mark(2);
+        d.mark_all();
+        assert!(d.is_all());
+        d.clear();
+        assert!(d.is_empty());
+        d.mark(2); // flag from before mark_all must have been reset
+        assert_eq!(d.rows(), &[2]);
+        d.grow(9);
+        d.mark(8);
+        assert_eq!(d.len(), 2);
+    }
+}

@@ -16,6 +16,9 @@
 //!   has an `*_into` lane that allocates nothing once the workspace is
 //!   warm ([`workspace::WorkspacePool`] shares them between workers)
 //! * [`embed::Engine`] — unified front-end over all implementations
+//! * [`globals::Globals`] / [`globals::DirtySet`] — incrementally
+//!   maintained `n_k`/degree vectors + coalescing dirty-row set shared
+//!   by the resident session and streaming lanes
 
 pub mod dense_gee;
 pub mod ensemble;
@@ -23,6 +26,7 @@ pub mod edgelist_gee;
 pub mod edgelist_par;
 pub mod embed;
 pub mod fusion;
+pub mod globals;
 pub mod kernel;
 pub mod options;
 pub mod parallel;

@@ -87,6 +87,13 @@ pub fn class_counts_into(labels: &[i32], k: usize, n_k: &mut Vec<f64>) {
 /// buffers reuse their capacity: zero allocations once warm.
 pub fn weight_values_into(labels: &[i32], k: usize, n_k: &mut Vec<f64>, wv: &mut Vec<f64>) {
     class_counts_into(labels, k, n_k);
+    weight_values_from_counts(labels, n_k, wv);
+}
+
+/// Fill `wv` from already-maintained class counts. Split out of
+/// [`weight_values_into`] so incrementally-tracked `n_k` (the session /
+/// streaming lanes) produces bit-identical weights to the batch path.
+pub fn weight_values_from_counts(labels: &[i32], n_k: &[f64], wv: &mut Vec<f64>) {
     wv.clear();
     wv.extend(labels.iter().map(|&l| {
         if l >= 0 && n_k[l as usize] > 0.0 {

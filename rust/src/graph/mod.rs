@@ -6,6 +6,7 @@ pub mod chung_lu;
 pub mod datasets;
 pub mod edgelist;
 pub mod io;
+pub mod rowstore;
 pub mod sbm;
 pub mod stats;
 

@@ -1,0 +1,243 @@
+//! Mutable per-row edge storage for resident embedding sessions.
+//!
+//! The batch pipeline builds an immutable [`Graph`](super::Graph), runs
+//! `prepare_into` once, and drops everything. The session lane instead
+//! keeps the adjacency resident and mutates it edge by edge, so it needs
+//! a representation that (a) supports O(deg) insert/delete, (b) can
+//! export the exact CSR layout `prepare_into` would have produced, and
+//! (c) preserves *floating-point accumulation order* across mutations so
+//! refreshed rows stay bitwise-identical to a from-scratch embed.
+//!
+//! The order argument: `prepare_into` appends each stored edge to both
+//! endpoints' rows while scanning the edge list front to back, so a
+//! row's neighbor order is ascending *global stored-edge order*. We make
+//! that order explicit with a monotonically increasing `id` per stored
+//! edge. Appending a new edge keeps each row's list id-sorted; deleting
+//! with `Vec::remove` keeps it id-sorted too. Rebuilding a `Graph` by
+//! emitting surviving edges in ascending id order therefore reproduces
+//! every per-row list — and hence every kernel FP sequence — bitwise.
+
+use super::Graph;
+
+/// One directed half of a stored undirected edge (self-loops store one).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StoredEdge {
+    /// Neighbor vertex id.
+    pub nbr: u32,
+    /// Edge weight.
+    pub w: f64,
+    /// Global insertion id: ascending ids define the canonical edge order.
+    pub id: u64,
+}
+
+/// Per-row adjacency with stable insertion ids.
+#[derive(Clone, Debug, Default)]
+pub struct RowStore {
+    rows: Vec<Vec<StoredEdge>>,
+    next_id: u64,
+    /// Directed entry count (self-loops count once), i.e. CSR nnz.
+    nnz: usize,
+    /// Undirected stored-edge count.
+    edges: usize,
+}
+
+impl RowStore {
+    /// Empty store over `n` vertices.
+    pub fn new(n: usize) -> Self {
+        RowStore { rows: vec![Vec::new(); n], next_id: 0, nnz: 0, edges: 0 }
+    }
+
+    /// Replay a batch [`Graph`]'s edges in list order, so the store's
+    /// canonical order equals the graph's edge order.
+    pub fn from_graph(g: &Graph) -> Self {
+        let mut store = RowStore::new(g.n);
+        for i in 0..g.src.len() {
+            store.insert(g.src[i], g.dst[i], g.w[i]);
+        }
+        store
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Undirected stored-edge count.
+    pub fn num_edges(&self) -> usize {
+        self.edges
+    }
+
+    /// Directed entry count (CSR nnz; self-loops count once).
+    pub fn num_directed(&self) -> usize {
+        self.nnz
+    }
+
+    /// Insert an undirected edge `(a, b)` with weight `w`; returns its id.
+    /// Callers must bounds-check endpoints first.
+    pub fn insert(&mut self, a: u32, b: u32, w: f64) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.rows[a as usize].push(StoredEdge { nbr: b, w, id });
+        self.nnz += 1;
+        if a != b {
+            self.rows[b as usize].push(StoredEdge { nbr: a, w, id });
+            self.nnz += 1;
+        }
+        self.edges += 1;
+        id
+    }
+
+    /// Delete the *oldest* stored edge between `a` and `b` (lowest id —
+    /// the first list hit, since rows are id-sorted). Returns its weight,
+    /// or `None` if no such edge exists.
+    pub fn remove(&mut self, a: u32, b: u32) -> Option<f64> {
+        let (ai, bi) = (a as usize, b as usize);
+        let pos = self.rows[ai].iter().position(|e| e.nbr == b)?;
+        let hit = self.rows[ai].remove(pos);
+        self.nnz -= 1;
+        if a != b {
+            let back = self.rows[bi]
+                .iter()
+                .position(|e| e.id == hit.id)
+                .expect("row store invariant: reverse half missing");
+            self.rows[bi].remove(back);
+            self.nnz -= 1;
+        }
+        self.edges -= 1;
+        Some(hit.w)
+    }
+
+    /// The id-sorted adjacency list of vertex `v`.
+    pub fn row(&self, v: usize) -> &[StoredEdge] {
+        &self.rows[v]
+    }
+
+    /// Re-sum vertex `v`'s degree by folding its row weights in id order
+    /// from 0.0 — the same left-to-right addition sequence `prepare_into`
+    /// produces, so the result is bitwise what a fresh prepare computes.
+    pub fn resum_degree(&self, v: usize) -> f64 {
+        let mut d = 0.0f64;
+        for e in &self.rows[v] {
+            d += e.w;
+        }
+        d
+    }
+
+    /// Export the full CSR snapshot into pooled buffers, identical to
+    /// what `prepare_into` would emit for [`Self::to_graph`]'s output.
+    pub fn export_csr(&self, indptr: &mut Vec<u32>, cols: &mut Vec<u32>, vals: &mut Vec<f64>) {
+        let n = self.rows.len();
+        indptr.clear();
+        indptr.reserve(n + 1);
+        cols.clear();
+        cols.reserve(self.nnz);
+        vals.clear();
+        vals.reserve(self.nnz);
+        indptr.push(0);
+        for row in &self.rows {
+            for e in row {
+                cols.push(e.nbr);
+                vals.push(e.w);
+            }
+            indptr.push(cols.len() as u32);
+        }
+    }
+
+    /// Materialize an immutable [`Graph`] whose edge list is the stored
+    /// edges in ascending id order, carrying the given labels. Running
+    /// `prepare_into` on the result reproduces this store's per-row
+    /// lists (and degrees) bitwise — the parity-oracle bridge.
+    pub fn to_graph(&self, labels: &[i32], k: usize) -> Graph {
+        assert_eq!(labels.len(), self.rows.len());
+        let mut proper: Vec<(u64, u32, u32, f64)> = Vec::with_capacity(self.edges);
+        for (v, row) in self.rows.iter().enumerate() {
+            for e in row {
+                if e.nbr as usize >= v {
+                    proper.push((e.id, v as u32, e.nbr, e.w));
+                }
+            }
+        }
+        proper.sort_unstable_by_key(|&(id, ..)| id);
+        let mut g = Graph::new(self.rows.len(), k);
+        g.labels.copy_from_slice(labels);
+        for &(_, a, b, w) in &proper {
+            g.add_edge(a, b, w);
+        }
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::sbm::{generate_sbm, SbmParams};
+    use crate::util::rng::Rng;
+
+    fn prepare(g: &Graph) -> (Vec<u32>, Vec<u32>, Vec<f64>, Vec<f64>) {
+        let (mut indptr, mut next, mut cols, mut vals, mut deg) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        crate::gee::sparse_gee::prepare_into(
+            g, &mut indptr, &mut next, &mut cols, &mut vals, &mut deg,
+        );
+        (indptr, cols, vals, deg)
+    }
+
+    fn assert_csr_matches(store: &RowStore, g: &Graph) {
+        let (indptr, cols, vals, deg) = prepare(g);
+        let (mut si, mut sc, mut sv) = (Vec::new(), Vec::new(), Vec::new());
+        store.export_csr(&mut si, &mut sc, &mut sv);
+        assert_eq!(si, indptr);
+        assert_eq!(sc, cols);
+        // bitwise, not approximate: the whole point of the id ordering
+        assert!(sv.iter().zip(&vals).all(|(a, b)| a.to_bits() == b.to_bits()));
+        for v in 0..store.n() {
+            assert_eq!(store.resum_degree(v).to_bits(), deg[v].to_bits(), "deg[{v}]");
+        }
+    }
+
+    #[test]
+    fn from_graph_matches_prepare() {
+        let g = generate_sbm(&SbmParams::paper(300), 41);
+        let store = RowStore::from_graph(&g);
+        assert_eq!(store.num_edges(), g.num_edges());
+        assert_csr_matches(&store, &g);
+    }
+
+    #[test]
+    fn churn_roundtrips_through_to_graph() {
+        let g = generate_sbm(&SbmParams::paper(200), 42);
+        let mut store = RowStore::from_graph(&g);
+        let mut rng = Rng::new(7);
+        let n = store.n() as u32;
+        let mut live: Vec<(u32, u32)> = (0..g.src.len()).map(|i| (g.src[i], g.dst[i])).collect();
+        for _ in 0..400 {
+            if rng.f64() < 0.5 || live.is_empty() {
+                let (a, b) = (rng.below(n as usize) as u32, rng.below(n as usize) as u32);
+                store.insert(a, b, 1.0 + rng.f64());
+                live.push((a, b));
+            } else {
+                let (a, b) = live.swap_remove(rng.below(live.len()));
+                assert!(store.remove(a, b).is_some());
+            }
+        }
+        // the oracle bridge: prepare(to_graph()) must equal export_csr()
+        let back = store.to_graph(&g.labels, g.k);
+        assert_eq!(back.num_edges(), store.num_edges());
+        assert_csr_matches(&store, &back);
+    }
+
+    #[test]
+    fn remove_takes_oldest_duplicate_and_self_loops_store_once() {
+        let mut store = RowStore::new(3);
+        store.insert(0, 1, 1.0);
+        store.insert(0, 1, 2.0);
+        store.insert(2, 2, 5.0);
+        assert_eq!(store.num_directed(), 5);
+        assert_eq!(store.remove(1, 0), Some(1.0)); // oldest first, either orientation
+        assert_eq!(store.remove(0, 1), Some(2.0));
+        assert_eq!(store.remove(0, 1), None);
+        assert_eq!(store.remove(2, 2), Some(5.0));
+        assert_eq!(store.num_directed(), 0);
+        assert_eq!(store.num_edges(), 0);
+    }
+}

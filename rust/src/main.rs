@@ -12,6 +12,9 @@
 //! * `serve`        — run the embedding service demo under synthetic load
 //! * `client-embed` — embed a graph against a running `serve --listen`
 //!                    daemon (binary v2 wire, `--text-wire` for v1)
+//! * `client-stream` — open a resident session on a `serve --listen
+//!                    --sessions` daemon, stream a held-back edge suffix
+//!                    as `DELTA2` batches, and drain to a full read
 //!
 //! Arg parsing is hand-rolled (`--key value` / `--key=value` /
 //! `--flag`) because the offline crate set has no clap; see `Args`
@@ -25,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use gee_sparse::coordinator::batcher::BatchCapacity;
 use gee_sparse::coordinator::{
-    ClientConfig, EmbedClient, EmbedRequest, EmbedService, Lane, ServiceConfig,
+    ClientConfig, Delta, EmbedClient, EmbedRequest, EmbedService, Lane, ServiceConfig,
 };
 use gee_sparse::gee::{Engine, GeeOptions};
 use gee_sparse::graph::datasets::by_name;
@@ -455,6 +458,96 @@ fn cmd_client_embed(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Open a resident session with part of the graph held back, stream the
+/// holdback as `DELTA2` insert batches (interleaved with watermark'd
+/// `ROWS2` probes), drain, and dump the full embedding. Because the
+/// session replays inserts in the original edge order, the output is
+/// bitwise identical to `client-embed` of the whole graph — CI `cmp`s
+/// the two files.
+fn cmd_client_stream(args: &Args) -> Result<()> {
+    let addr: std::net::SocketAddr = args
+        .get("addr")
+        .context("--addr HOST:PORT required (a running `gee serve --listen --sessions N` daemon)")?
+        .parse()
+        .context("--addr must be HOST:PORT")?;
+    let g = load_graph(args)?;
+    let code = args.get("options").unwrap_or("---");
+    GeeOptions::from_code(code).context("--options takes a 3-char code like ldc, l-c, ---")?;
+    let holdback = args.get_usize("deltas", 1_000)?.min(g.num_edges());
+    let batch = args.get_usize("batch", 256)?.max(1);
+    let thresh: Option<f64> = match args.get("thresh") {
+        Some(v) => Some(v.parse().context("--thresh must be a fraction in 0..=1")?),
+        None => None,
+    };
+    let split = g.num_edges() - holdback;
+    let base: Vec<(u32, u32, f64)> =
+        (0..split).map(|i| (g.src[i], g.dst[i], g.w[i])).collect();
+
+    let counters = std::sync::Arc::new(gee_sparse::shard::codec::ByteCounters::default());
+    let cfg = ClientConfig {
+        tenant: args.get("tenant").map(|s| s.to_string()),
+        force_text: false,
+        counters: Some(counters.clone()),
+    };
+    let mut client = EmbedClient::connect(addr, &cfg)?;
+    if !client.is_binary() {
+        bail!("sessions require the v2 binary wire (is the server --text-only?)");
+    }
+    let t0 = Instant::now();
+    let sess = client.open_session(code, &g.labels, &base, g.k, thresh)?;
+    println!("session {sess}: n={} k={} opened with {} base edges", g.n, g.k, split);
+
+    // stream the holdback, probing a few rows each batch to show the
+    // bounded-staleness watermark moving
+    let probe: Vec<u32> = (0..g.n.min(4) as u32).collect();
+    let mut max_stale = 0u64;
+    let mut i = split;
+    while i < g.num_edges() {
+        let hi = (i + batch).min(g.num_edges());
+        let ds: Vec<Delta> = (i..hi)
+            .map(|j| Delta::Insert { a: g.src[j], b: g.dst[j], w: g.w[j] })
+            .collect();
+        let (_, stale) = client.send_deltas(sess, &ds)?;
+        max_stale = max_stale.max(stale);
+        if !probe.is_empty() {
+            let (_, applied, clean) = client.fetch_rows(sess, &probe)?;
+            max_stale = max_stale.max(applied - clean);
+        }
+        i = hi;
+    }
+    let applied = client.wait_clean(sess, Duration::from_secs(120))?;
+    let stream_dt = t0.elapsed();
+
+    // drain done: fetch every row, chunked to keep replies bounded
+    let mut text = String::new();
+    let ids: Vec<u32> = (0..g.n as u32).collect();
+    for chunk in ids.chunks(16_384) {
+        let (z, _, clean) = client.fetch_rows(sess, chunk)?;
+        anyhow::ensure!(clean == applied, "read raced a refresh after drain");
+        for r in 0..z.nrows {
+            // full precision: CI compares against client-embed byte for byte
+            let row: Vec<String> = z.row(r).iter().map(|v| format!("{v}")).collect();
+            text.push_str(&row.join("\t"));
+            text.push('\n');
+        }
+    }
+    client.close_session(sess)?;
+    use std::sync::atomic::Ordering;
+    println!(
+        "streamed {holdback} deltas in {:.3}s ({:.0} deltas/s), max staleness {max_stale}, \
+         applied watermark {applied} ({} B sent, {} B received)",
+        stream_dt.as_secs_f64(),
+        holdback as f64 / stream_dt.as_secs_f64().max(1e-9),
+        counters.sent.load(Ordering::Relaxed),
+        counters.received.load(Ordering::Relaxed),
+    );
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, text)?;
+        println!("embedding written to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
@@ -471,6 +564,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             shard_remote_workers,
             shard_wire_text: args.has("text-wire"),
             tenant_tokens: args.get_usize("tenant-tokens", 64)?,
+            session_workers: args.get_usize("sessions", 0)?,
+            session_quota: args.get_usize("session-quota", 4)?,
             ..ServiceConfig::default()
         }));
         // --text-only refuses the HELLO2 upgrade — emulates a pre-v2
@@ -571,11 +666,19 @@ fn usage() -> &'static str {
                     [--listen ADDR:PORT]   (network mode: v1 text + v2\n\
                     binary client wire)  [--text-only]   (refuse the v2\n\
                     upgrade)  [--tenant-tokens N]   (per-tenant in-flight\n\
-                    quota, default 64)\n\
+                    quota, default 64)  [--sessions W]   (enable the\n\
+                    resident-session lane with W fast-lane refresh threads)\n\
+                    [--session-quota N]   (open sessions per tenant, default 4)\n\
        client-embed --addr HOST:PORT   --dataset NAME | --sbm N | --input STEM\n\
                     [--options ldc] [--tenant NAME] [--text-wire] [--out FILE]\n\
                     (one embed against a running `serve --listen` daemon;\n\
-                    negotiates the binary v2 wire, --text-wire forces v1)\n"
+                    negotiates the binary v2 wire, --text-wire forces v1)\n\
+       client-stream --addr HOST:PORT  --dataset NAME | --sbm N | --input STEM\n\
+                    [--options ldc] [--deltas D] [--batch B] [--thresh F]\n\
+                    [--tenant NAME] [--out FILE]\n\
+                    (open a session holding back the last D edges, stream\n\
+                    them as DELTA2 batches, drain, and dump Z — bitwise\n\
+                    identical to client-embed of the full graph)\n"
 }
 
 fn main() -> Result<()> {
@@ -595,6 +698,7 @@ fn main() -> Result<()> {
         "bench-table" => cmd_bench_table(&args),
         "serve" => cmd_serve(&args),
         "client-embed" => cmd_client_embed(&args),
+        "client-stream" => cmd_client_stream(&args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(())

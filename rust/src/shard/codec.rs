@@ -55,6 +55,7 @@ pub const FRAME_CHUNK_BYTES: usize = 1 << 20;
 const _: () = assert!(FRAME_CHUNK_BYTES % EDGE_RECORD_BYTES == 0);
 const _: () = assert!(EDGE_RECORD_BYTES % F64_RECORD_BYTES == 0);
 const _: () = assert!(F64_RECORD_BYTES % LABEL_RECORD_BYTES == 0);
+const _: () = assert!(FRAME_CHUNK_BYTES % DELTA_RECORD_BYTES == 0);
 
 /// Extension marking a file as binary records; everything else is the
 /// legacy text format. Explicit-by-name beats content sniffing: a spill
@@ -93,6 +94,54 @@ pub fn decode_edge(rec: &[u8]) -> (u32, u32, f64) {
 #[inline]
 pub fn write_edge_record(w: &mut impl Write, a: u32, b: u32, wt: f64) -> std::io::Result<()> {
     w.write_all(&encode_edge(a, b, wt))
+}
+
+/// Bytes per session delta record (`DELTA2` frame bodies):
+/// `u32 op | u32 a | u32 b | u32 pad | f64 weight | f64 reserved`.
+/// 32 bytes keeps [`FRAME_CHUNK_BYTES`] a whole number of records, so
+/// chunked frame reads never split one.
+pub const DELTA_RECORD_BYTES: usize = 32;
+
+/// Delta op codes. For [`DELTA_OP_RELABEL`], `a` is the vertex and `b`
+/// carries the new label's i32 bit pattern (`-1` = unlabeled); the
+/// weight field is ignored.
+pub const DELTA_OP_INSERT: u32 = 0;
+pub const DELTA_OP_DELETE: u32 = 1;
+pub const DELTA_OP_RELABEL: u32 = 2;
+
+/// Encode one session delta record.
+#[inline]
+pub fn encode_delta(op: u32, a: u32, b: u32, w: f64) -> [u8; DELTA_RECORD_BYTES] {
+    let mut rec = [0u8; DELTA_RECORD_BYTES];
+    rec[0..4].copy_from_slice(&op.to_le_bytes());
+    rec[4..8].copy_from_slice(&a.to_le_bytes());
+    rec[8..12].copy_from_slice(&b.to_le_bytes());
+    rec[16..24].copy_from_slice(&w.to_le_bytes());
+    rec
+}
+
+/// Decode one session delta record (inverse of [`encode_delta`],
+/// bitwise on the weight).
+#[inline]
+pub fn decode_delta(rec: &[u8]) -> (u32, u32, u32, f64) {
+    debug_assert_eq!(rec.len(), DELTA_RECORD_BYTES);
+    let op = u32::from_le_bytes(rec[0..4].try_into().unwrap());
+    let a = u32::from_le_bytes(rec[4..8].try_into().unwrap());
+    let b = u32::from_le_bytes(rec[8..12].try_into().unwrap());
+    let w = f64::from_le_bytes(rec[16..24].try_into().unwrap());
+    (op, a, b, w)
+}
+
+/// Append one session delta record to a writer.
+#[inline]
+pub fn write_delta_record(
+    w: &mut impl Write,
+    op: u32,
+    a: u32,
+    b: u32,
+    wt: f64,
+) -> std::io::Result<()> {
+    w.write_all(&encode_delta(op, a, b, wt))
 }
 
 // ------------------------------------------------------------ record files
@@ -448,6 +497,26 @@ mod tests {
             assert_eq!((a, b), (a2, b2));
             assert_eq!(w.to_bits(), w2.to_bits(), "weight bits drifted");
         }
+    }
+
+    #[test]
+    fn delta_record_roundtrips_bitwise() {
+        for (op, a, b, w) in [
+            (DELTA_OP_INSERT, 0u32, 1u32, 1.5f64),
+            (DELTA_OP_DELETE, u32::MAX, 7, 0.0),
+            (DELTA_OP_RELABEL, 3, (-1i32) as u32, f64::NAN),
+            (DELTA_OP_RELABEL, 9, 4, 0.1 + 0.2),
+        ] {
+            let rec = encode_delta(op, a, b, w);
+            assert_eq!(rec.len(), DELTA_RECORD_BYTES);
+            let (op2, a2, b2, w2) = decode_delta(&rec);
+            assert_eq!((op, a, b), (op2, a2, b2));
+            assert_eq!(w.to_bits(), w2.to_bits(), "weight bits drifted");
+        }
+        // the relabel label round-trips through the u32 field
+        let rec = encode_delta(DELTA_OP_RELABEL, 5, (-1i32) as u32, 0.0);
+        let (_, _, label_bits, _) = decode_delta(&rec);
+        assert_eq!(label_bits as i32, -1);
     }
 
     #[test]

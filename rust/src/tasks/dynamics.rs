@@ -4,7 +4,22 @@
 //! embeddings. Vertices whose communication pattern shifts show large
 //! dynamics; stable vertices stay near zero — the reference uses this to
 //! discover pattern shifts in large-scale networks.
+//!
+//! The per-window embeddings ride the resident-session layer
+//! ([`GeeSession`]): the first window opens a session, and every later
+//! window is diffed against its predecessor and applied as a batch of
+//! edge/label deltas, so each step costs O(Δ) row refreshes instead of a
+//! from-scratch embed. Consecutive communication windows overlap heavily
+//! in practice, which is exactly the regime the delta lane is built for.
+//! The old rebuild-every-window path survives as
+//! [`vertex_dynamics_batch`], the parity oracle: the session path must
+//! agree with it to ~1e-9 (not bitwise — replaying a window as
+//! deletes+inserts reorders the stored edge list, which reorders the FP
+//! accumulation).
 
+use std::collections::BTreeMap;
+
+use crate::coordinator::session::{Delta, GeeSession, SessionConfig};
 use crate::gee::options::GeeOptions;
 use crate::gee::sparse_gee::SparseGee;
 use crate::graph::Graph;
@@ -23,10 +38,92 @@ pub struct DynamicsResult {
 /// Embed a time series of graphs (same vertex set / labels per window)
 /// and compute vertex dynamics. The correlation option is recommended so
 /// displacement measures direction change, not degree drift.
+///
+/// Windows are embedded through a resident [`GeeSession`]: consecutive
+/// windows with the same shape are applied as deltas (O(Δ) refresh); a
+/// shape change (different `n` or `k`) or a rejected delta reopens the
+/// session from that window.
 pub fn vertex_dynamics(windows: &[&Graph], opts: &GeeOptions) -> DynamicsResult {
+    let cfg = SessionConfig { opts: *opts, rescale_threshold: 0.25 };
+    let mut embeddings: Vec<Dense> = Vec::with_capacity(windows.len());
+    let mut session: Option<GeeSession> = None;
+    for (t, g) in windows.iter().enumerate() {
+        let same_shape =
+            t > 0 && windows[t - 1].n == g.n && windows[t - 1].k == g.k;
+        let mut advanced = false;
+        if same_shape {
+            let s = session.as_mut().expect("t > 0 implies an open session");
+            let deltas = window_deltas(windows[t - 1], g);
+            let (_, res) = s.apply_all(&deltas);
+            if res.is_ok() {
+                s.refresh();
+                advanced = true;
+            }
+            // a rejected delta (shouldn't happen for valid windows) falls
+            // through to a clean reopen below
+        }
+        if !advanced {
+            session = Some(GeeSession::from_graph(g, &cfg));
+        }
+        embeddings.push(session.as_ref().expect("session opened above").z().clone());
+    }
+    dynamics_from(embeddings)
+}
+
+/// From-scratch per-window embedding — the batch oracle the session path
+/// is tested against.
+pub fn vertex_dynamics_batch(windows: &[&Graph], opts: &GeeOptions) -> DynamicsResult {
     let engine = SparseGee::fast();
     let embeddings: Vec<Dense> = windows.iter().map(|g| engine.embed(g, opts)).collect();
-    let mut dynamics = Vec::with_capacity(windows.len());
+    dynamics_from(embeddings)
+}
+
+/// Diff two same-shape windows into session deltas: label changes become
+/// `Relabel`; for every endpoint pair whose weight multiset changed, the
+/// stored copies are deleted and the new window's copies inserted.
+/// Identical pairs (the common case for overlapping windows) cost nothing.
+fn window_deltas(prev: &Graph, cur: &Graph) -> Vec<Delta> {
+    debug_assert_eq!(prev.n, cur.n);
+    let mut out = Vec::new();
+    for v in 0..cur.n {
+        if prev.labels[v] != cur.labels[v] {
+            out.push(Delta::Relabel { v: v as u32, label: cur.labels[v] });
+        }
+    }
+    // BTreeMap keeps the delta order deterministic across runs
+    let mut pairs: BTreeMap<(u32, u32), (Vec<f64>, Vec<f64>)> = BTreeMap::new();
+    let key = |a: u32, b: u32| if a <= b { (a, b) } else { (b, a) };
+    for i in 0..prev.num_edges() {
+        pairs.entry(key(prev.src[i], prev.dst[i])).or_default().0.push(prev.w[i]);
+    }
+    for i in 0..cur.num_edges() {
+        pairs.entry(key(cur.src[i], cur.dst[i])).or_default().1.push(cur.w[i]);
+    }
+    for (&(a, b), (pw, cw)) in pairs.iter() {
+        if pw.len() == cw.len() {
+            let mut ps: Vec<u64> = pw.iter().map(|w| w.to_bits()).collect();
+            let mut cs: Vec<u64> = cw.iter().map(|w| w.to_bits()).collect();
+            ps.sort_unstable();
+            cs.sort_unstable();
+            if ps == cs {
+                continue;
+            }
+        }
+        // Delete removes the oldest stored copy regardless of weight, so a
+        // changed multiset clears the pair and re-inserts the new copies.
+        for _ in 0..pw.len() {
+            out.push(Delta::Delete { a, b });
+        }
+        for &w in cw.iter() {
+            out.push(Delta::Insert { a, b, w });
+        }
+    }
+    out
+}
+
+/// Displacement bookkeeping shared by the session and batch paths.
+fn dynamics_from(embeddings: Vec<Dense>) -> DynamicsResult {
+    let mut dynamics = Vec::with_capacity(embeddings.len());
     for t in 0..embeddings.len() {
         if t == 0 {
             dynamics.push(vec![0.0; embeddings[0].nrows]);
@@ -134,6 +231,91 @@ mod tests {
         let top: Vec<usize> = shifts.iter().take(8).map(|&(v, _)| v).collect();
         let movers_in_top = top.iter().filter(|&&v| v < 5).count();
         assert!(movers_in_top >= 3, "top8 {top:?}");
+    }
+
+    #[test]
+    fn session_path_matches_batch_oracle() {
+        let windows = series(26);
+        let refs: Vec<&Graph> = windows.iter().collect();
+        for opts in GeeOptions::table_order() {
+            let sess = vertex_dynamics(&refs, &opts);
+            let batch = vertex_dynamics_batch(&refs, &opts);
+            for t in 0..refs.len() {
+                let d = sess.embeddings[t].max_abs_diff(&batch.embeddings[t]);
+                assert!(d < 1e-9, "{opts:?} window {t}: embed diff {d}");
+                for (v, (a, b)) in
+                    sess.dynamics[t].iter().zip(&batch.dynamics[t]).enumerate()
+                {
+                    assert!(
+                        (a - b).abs() < 1e-9,
+                        "{opts:?} window {t} vertex {v}: dynamics {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn label_churn_rides_relabel_deltas() {
+        // same edges, drifting labels: the diff is pure Relabel deltas
+        let mut rng = Rng::new(27);
+        let n = 40;
+        let mut base = Graph::new(n, 3);
+        for l in base.labels.iter_mut() {
+            *l = rng.below(3) as i32;
+        }
+        for _ in 0..160 {
+            base.add_edge(rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1);
+        }
+        let mut windows = vec![base.clone()];
+        for _ in 0..3 {
+            let mut g = windows.last().unwrap().clone();
+            for _ in 0..6 {
+                let v = rng.below(n);
+                g.labels[v] = (rng.below(4) as i32) - 1; // includes -1
+            }
+            windows.push(g);
+        }
+        let refs: Vec<&Graph> = windows.iter().collect();
+        let opts = GeeOptions::ALL;
+        let sess = vertex_dynamics(&refs, &opts);
+        let batch = vertex_dynamics_batch(&refs, &opts);
+        for t in 0..refs.len() {
+            let d = sess.embeddings[t].max_abs_diff(&batch.embeddings[t]);
+            assert!(d < 1e-9, "window {t}: embed diff {d}");
+        }
+    }
+
+    #[test]
+    fn shape_change_reopens_session() {
+        // windows of different vertex counts can't share a session; the
+        // fallback must still match the batch oracle
+        let mut rng = Rng::new(28);
+        let mut small = Graph::new(20, 2);
+        for l in small.labels.iter_mut() {
+            *l = rng.below(2) as i32;
+        }
+        for _ in 0..60 {
+            small.add_edge(rng.below(20) as u32, rng.below(20) as u32, 1.0);
+        }
+        let mut big = Graph::new(25, 2);
+        for l in big.labels.iter_mut() {
+            *l = rng.below(2) as i32;
+        }
+        for _ in 0..80 {
+            big.add_edge(rng.below(25) as u32, rng.below(25) as u32, 1.0);
+        }
+        let windows = [&small, &big, &small];
+        let opts = GeeOptions::new(true, false, true);
+        let sess = vertex_dynamics(&windows, &opts);
+        let batch = vertex_dynamics_batch(&windows, &opts);
+        assert_eq!(sess.embeddings.len(), 3);
+        for t in 0..3 {
+            let d = sess.embeddings[t].max_abs_diff(&batch.embeddings[t]);
+            assert!(d < 1e-9, "window {t}: embed diff {d}");
+        }
+        // dynamics across the size boundary only covers the shared prefix
+        assert_eq!(sess.dynamics[1].len(), 25);
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! End-to-end tests for the client wire: v1/v2 parity, pipelining,
-//! admission, and hostile inputs against a live loopback server.
+//! admission, the session/delta lane, and hostile inputs against a live
+//! loopback server.
 
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::TcpStream;
@@ -8,7 +9,7 @@ use std::sync::Arc;
 use gee_sparse::coordinator::server::{MAX_WIRE_VERTICES, TcpServer};
 use gee_sparse::coordinator::wire;
 use gee_sparse::coordinator::{
-    ClientConfig, ClientReply, EmbedClient, EmbedService, ServiceConfig,
+    ClientConfig, ClientReply, Delta, EmbedClient, EmbedService, ServiceConfig,
 };
 use gee_sparse::gee::GeeOptions;
 use gee_sparse::shard::codec;
@@ -275,6 +276,218 @@ fn hostile_v1_verb_after_v2_negotiation_is_fatal() {
     writeln!(writer, "EMBED code=--- k=2 n=2").unwrap();
     writer.flush().unwrap();
     expect_fatal(&mut reader, "v1 verb on v2 connection");
+    server.stop();
+}
+
+// ---------------------------------------------------- session lane
+
+fn session_config() -> ServiceConfig {
+    ServiceConfig { session_workers: 2, ..ServiceConfig::default() }
+}
+
+/// Raw-socket SESS2 open; returns the server-assigned session id.
+fn raw_open_session(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut BufWriter<TcpStream>,
+    id: u64,
+    labels: &[i32],
+    edges: &[(u32, u32, f64)],
+    k: usize,
+) -> u64 {
+    let h = wire::SessionHeader {
+        id,
+        options: GeeOptions::NONE,
+        n: labels.len(),
+        k,
+        rescale_threshold: None,
+    };
+    writeln!(writer, "{}", wire::format_session_header(&h)).unwrap();
+    wire::write_request_body(writer, labels, edges).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let (rid, sess, rows, cols) =
+        wire::parse_sess_ok(&line).unwrap_or_else(|e| panic!("{e}: {line}"));
+    assert_eq!((rid, rows, cols), (id, labels.len(), k));
+    sess
+}
+
+/// End-to-end session parity: a graph streamed as base + insert deltas
+/// returns, row for row, the same bits as a one-shot embed of the full
+/// graph (the session replays inserts in arrival order, so the stored
+/// edge order matches the one-shot build).
+#[test]
+fn session_stream_matches_one_shot_embed_bitwise() {
+    let (server, _svc) = start(session_config());
+    let (labels, edges) = random_graph(31, 60, 3, 300);
+    let mut client = EmbedClient::connect(server.addr(), &ClientConfig::default()).unwrap();
+    assert!(client.is_binary(), "session verbs ride the binary wire");
+    let split = edges.len() - 80;
+    let sess = client.open_session("ldc", &labels, &edges[..split], 3, None).unwrap();
+    for chunk in edges[split..].chunks(16) {
+        let deltas: Vec<Delta> =
+            chunk.iter().map(|&(a, b, w)| Delta::Insert { a, b, w }).collect();
+        client.send_deltas(sess, &deltas).unwrap();
+    }
+    let applied = client.wait_clean(sess, std::time::Duration::from_secs(30)).unwrap();
+    assert_eq!(applied, 80);
+    let ids: Vec<u32> = (0..labels.len() as u32).collect();
+    let (z, applied, clean) = client.fetch_rows(sess, &ids).unwrap();
+    assert_eq!((applied, clean), (80, 80), "drained session must read clean");
+    let want = client.embed("ldc", &labels, &edges, 3).unwrap();
+    assert_eq!((z.nrows, z.ncols), (want.nrows, want.ncols));
+    for (i, (a, b)) in z.data.iter().zip(&want.data).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "cell {i}: {a} vs {b}");
+    }
+    client.close_session(sess).unwrap();
+    server.stop();
+}
+
+/// SESS2 against a server started without `--sessions` is request-scoped:
+/// the body drains and the connection still serves embeds.
+#[test]
+fn session_open_with_lane_disabled_fails_request_scoped() {
+    let (server, _svc) = start(ServiceConfig::default());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    let h = wire::SessionHeader {
+        id: 1,
+        options: GeeOptions::NONE,
+        n: 2,
+        k: 2,
+        rescale_threshold: None,
+    };
+    writeln!(writer, "{}", wire::format_session_header(&h)).unwrap();
+    wire::write_request_body(&mut writer, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+    writeln!(writer, "EMBED2 id=2 code=--- n=2 k=2").unwrap();
+    wire::write_request_body(&mut writer, &[0, 1], &[(0, 1, 1.0)]).unwrap();
+    writer.flush().unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=1 "), "{line}");
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("OK id=2 "), "{line}");
+    server.stop();
+}
+
+/// Content errors on session ops (unknown session, unknown delta op,
+/// rejected delta, bad row id) are request-scoped `ERR id=`; the same
+/// connection keeps serving.
+#[test]
+fn hostile_session_content_errors_are_request_scoped() {
+    let (server, _svc) = start(session_config());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    let (labels, edges) = random_graph(33, 10, 2, 30);
+    let sess = raw_open_session(&mut reader, &mut writer, 1, &labels, &edges, 2);
+    let mut line = String::new();
+
+    // DELTA2 on a session id that was never opened
+    writeln!(writer, "DELTA2 id=2 sess=4242 count=1").unwrap();
+    wire::write_delta_frame(&mut writer, &[Delta::Insert { a: 0, b: 1, w: 1.0 }]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=2 "), "{line}");
+
+    // unknown op code inside a well-formed frame
+    line.clear();
+    writeln!(writer, "DELTA2 id=3 sess={sess} count=1").unwrap();
+    codec::write_frame_len(&mut writer, codec::DELTA_RECORD_BYTES as u64).unwrap();
+    codec::write_delta_record(&mut writer, 99, 0, 1, 1.0).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=3 "), "{line}");
+
+    // a semantically-invalid delta (vertex out of range)
+    line.clear();
+    writeln!(writer, "DELTA2 id=4 sess={sess} count=1").unwrap();
+    wire::write_delta_frame(&mut writer, &[Delta::Insert { a: 0, b: 99, w: 1.0 }]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=4 "), "{line}");
+
+    // ROWS2 with an out-of-range row id
+    line.clear();
+    writeln!(writer, "ROWS2 id=5 sess={sess} count=1").unwrap();
+    wire::write_rows_frame(&mut writer, &[999]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=5 "), "{line}");
+
+    // CLOSE2 on an unknown session
+    line.clear();
+    writeln!(writer, "CLOSE2 id=6 sess=4242").unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=6 "), "{line}");
+
+    // the connection survived all of it: a valid delta batch ACKs...
+    line.clear();
+    writeln!(writer, "DELTA2 id=7 sess={sess} count=1").unwrap();
+    wire::write_delta_frame(&mut writer, &[Delta::Insert { a: 0, b: 1, w: 1.0 }]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    let (rid, applied, _stale) = wire::parse_dack(&line).unwrap_or_else(|e| panic!("{e}: {line}"));
+    assert_eq!((rid, applied), (7, 1));
+
+    // ...and a valid read returns the row frame
+    line.clear();
+    writeln!(writer, "ROWS2 id=8 sess={sess} count=2").unwrap();
+    wire::write_rows_frame(&mut writer, &[0, 1]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    let (rid, rows, cols, ..) =
+        wire::parse_rows_ok(&line).unwrap_or_else(|e| panic!("{e}: {line}"));
+    assert_eq!((rid, rows, cols), (8, 2, 2));
+    let len = codec::read_frame_len(&mut reader, "rows frame").unwrap();
+    assert_eq!(len, (rows * cols * 8) as u64);
+    std::io::copy(&mut std::io::Read::take(&mut reader, len), &mut std::io::sink()).unwrap();
+
+    // a closed session stops answering
+    line.clear();
+    writeln!(writer, "CLOSE2 id=9 sess={sess}").unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(wire::parse_closed(&line).unwrap(), 9, "{line}");
+    line.clear();
+    writeln!(writer, "DELTA2 id=10 sess={sess} count=0").unwrap();
+    wire::write_delta_frame(&mut writer, &[]).unwrap();
+    writer.flush().unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.starts_with("ERR id=10 "), "{line}");
+    server.stop();
+}
+
+/// A DELTA2 frame whose byte length disagrees with `count=` is a framing
+/// violation: bare fatal `ERR` and the connection closes.
+#[test]
+fn hostile_misaligned_delta_frame_is_fatal() {
+    let (server, _svc) = start(session_config());
+    let (mut reader, mut writer) = raw_v2(server.addr());
+    let (labels, edges) = random_graph(34, 8, 2, 20);
+    let sess = raw_open_session(&mut reader, &mut writer, 1, &labels, &edges, 2);
+    writeln!(writer, "DELTA2 id=2 sess={sess} count=1").unwrap();
+    codec::write_frame_len(&mut writer, 20).unwrap(); // record is 32 bytes
+    writer.write_all(&[0u8; 20]).unwrap();
+    writer.flush().unwrap();
+    expect_fatal(&mut reader, "misaligned delta frame");
+    server.stop();
+}
+
+/// Per-tenant session quota: the third concurrent open on a quota of two
+/// gets BUSY; closing one frees the slot.
+#[test]
+fn session_quota_busy_then_recovers() {
+    let cfg = ServiceConfig { session_workers: 1, session_quota: 2, ..ServiceConfig::default() };
+    let (server, _svc) = start(cfg);
+    let (labels, edges) = random_graph(35, 12, 2, 30);
+    let mut client = EmbedClient::connect(server.addr(), &ClientConfig::default()).unwrap();
+    let s1 = client.open_session("---", &labels, &edges, 2, None).unwrap();
+    let _s2 = client.open_session("---", &labels, &edges, 2, None).unwrap();
+    let err = client.open_session("---", &labels, &edges, 2, None).unwrap_err();
+    assert!(err.to_string().contains("busy"), "{err}");
+    client.close_session(s1).unwrap();
+    let s3 = client.open_session("---", &labels, &edges, 2, None).unwrap();
+    client.close_session(s3).unwrap();
     server.stop();
 }
 

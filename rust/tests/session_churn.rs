@@ -1,0 +1,142 @@
+//! Randomized churn over resident sessions (public API): SBM and
+//! Chung-Lu graphs, ≥1k mixed deltas per session, the full option grid,
+//! 1 and 4 fast-lane workers, a spread of rescale thresholds — and after
+//! every drain the session `Z` must be **bitwise** identical to a
+//! from-scratch `sparse-fast` embed of the session's current graph.
+//! This is the end-to-end pin for the O(Δ) refresh chain (RowStore order
+//! → re-summed degrees → one-row kernel windows).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gee_sparse::coordinator::metrics::Metrics;
+use gee_sparse::coordinator::session::{Delta, SessionConfig, SessionEntry, SessionRegistry};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::chung_lu::{generate_chung_lu, ChungLuParams};
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::util::rng::Rng;
+
+fn random_delta(rng: &mut Rng, n: usize, k: usize, live: &mut Vec<(u32, u32)>) -> Delta {
+    let roll = rng.f64();
+    if roll < 0.45 || live.is_empty() {
+        let (a, b) = (rng.below(n) as u32, rng.below(n) as u32);
+        live.push((a, b));
+        Delta::Insert { a, b, w: 1.0 + rng.f64() }
+    } else if roll < 0.85 {
+        let (a, b) = live.swap_remove(rng.below(live.len()));
+        Delta::Delete { a, b }
+    } else {
+        Delta::Relabel { v: rng.below(n) as u32, label: rng.below(k + 1) as i32 - 1 }
+    }
+}
+
+fn wait_clean(entry: &Arc<SessionEntry>, what: &str) {
+    let deadline = Instant::now() + Duration::from_secs(60);
+    loop {
+        if entry.session.lock().unwrap().stale() == 0 {
+            return;
+        }
+        assert!(Instant::now() < deadline, "{what}: fast lane never drained");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn assert_clean_bitwise(entry: &Arc<SessionEntry>, what: &str) {
+    let s = entry.session.lock().unwrap();
+    let fresh = SparseGee::fast().embed(&s.to_graph(), s.opts());
+    assert_eq!((s.z().nrows, s.z().ncols), (fresh.nrows, fresh.ncols), "{what}: shape");
+    for (i, (a, b)) in s.z().data.iter().zip(&fresh.data).enumerate() {
+        assert!(
+            a.to_bits() == b.to_bits(),
+            "{what}: cell {i} differs: {a:e} vs {b:e}"
+        );
+    }
+}
+
+/// Drive `deltas` mixed mutations through a registry-held session in
+/// batches, enqueueing a fast-lane refresh per batch, then drain and
+/// compare bitwise against the from-scratch oracle.
+fn churn_one(
+    reg: &Arc<SessionRegistry>,
+    g: &Graph,
+    cfg: &SessionConfig,
+    deltas: usize,
+    seed: u64,
+    what: &str,
+) {
+    let entry = reg.open("churn", g, cfg).expect("open session");
+    let mut rng = Rng::new(seed);
+    let mut live: Vec<(u32, u32)> =
+        (0..g.num_edges()).map(|i| (g.src[i], g.dst[i])).collect();
+    let mut sent = 0usize;
+    while sent < deltas {
+        let batch: Vec<Delta> = (0..32.min(deltas - sent))
+            .map(|_| random_delta(&mut rng, g.n, g.k, &mut live))
+            .collect();
+        {
+            let mut s = entry.session.lock().unwrap();
+            let (applied, res) = s.apply_all(&batch);
+            assert_eq!(applied, batch.len(), "{what}: {res:?}");
+        }
+        reg.enqueue_refresh(&entry);
+        sent += batch.len();
+    }
+    wait_clean(&entry, what);
+    assert_clean_bitwise(&entry, what);
+    assert!(reg.close(entry.id), "{what}: close");
+}
+
+#[test]
+fn sbm_churn_bitwise_across_option_grid_one_worker() {
+    let reg = SessionRegistry::start(1, 16, Arc::new(Metrics::default()));
+    let g = generate_sbm(&SbmParams::paper(250), 71);
+    // cycle the escalation threshold so the grid covers always-full,
+    // mixed, and never-escalate refresh regimes
+    let thresholds = [0.0, 0.25, 1.0];
+    for (i, opts) in GeeOptions::table_order().into_iter().enumerate() {
+        let cfg = SessionConfig { opts, rescale_threshold: thresholds[i % 3] };
+        churn_one(&reg, &g, &cfg, 1_100, 900 + i as u64, &format!("sbm {}", opts.code()));
+    }
+    reg.shutdown();
+}
+
+#[test]
+fn chung_lu_churn_bitwise_four_workers() {
+    let reg = SessionRegistry::start(4, 16, Arc::new(Metrics::default()));
+    let p = ChungLuParams { n: 600, edges: 3_000, gamma: 1.8, k: 5 };
+    let g = generate_chung_lu(&p, 77);
+    for (i, opts) in [GeeOptions::NONE, GeeOptions::ALL].into_iter().enumerate() {
+        let cfg = SessionConfig { opts, rescale_threshold: 0.25 };
+        churn_one(&reg, &g, &cfg, 1_500, 400 + i as u64, &format!("cl {}", opts.code()));
+    }
+    reg.shutdown();
+}
+
+#[test]
+fn concurrent_sessions_churn_independently() {
+    // four sessions over two graphs churn in parallel threads against a
+    // shared 4-worker fast lane; each must drain to its own bitwise-clean Z
+    let reg = SessionRegistry::start(4, 16, Arc::new(Metrics::default()));
+    let sbm = generate_sbm(&SbmParams::paper(150), 5);
+    let cl = generate_chung_lu(&ChungLuParams { n: 300, edges: 1_500, gamma: 1.8, k: 4 }, 6);
+    std::thread::scope(|scope| {
+        for (t, (g, opts)) in [
+            (&sbm, GeeOptions::ALL),
+            (&sbm, GeeOptions::NONE),
+            (&cl, GeeOptions::new(true, false, true)),
+            (&cl, GeeOptions::new(false, true, false)),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let reg = Arc::clone(&reg);
+            scope.spawn(move || {
+                let cfg = SessionConfig { opts, rescale_threshold: 0.25 };
+                churn_one(&reg, g, &cfg, 1_000, 60 + t as u64, &format!("par {t}"));
+            });
+        }
+    });
+    reg.shutdown();
+}
