@@ -1,0 +1,217 @@
+//! Bench: cluster_loop — the iterative self-clustering lane (One-Hot
+//! GEE: embed → k-means → relabel) locally and across a 2-daemon shard
+//! fleet.
+//!
+//! A planted-partition SBM (the paper's 3-class shape, n=50k) is
+//! clustered from deterministic seed labels. The local lane drives
+//! [`IterativeJob`] over `sparse-fast`; the fleet lane drives the same
+//! loop through a [`FleetSession`] against two in-process shard
+//! daemons, where the graph ships once and rounds after the first
+//! re-send only the label vector. Gates:
+//!
+//! * both lanes produce bitwise-identical per-round states and final Z;
+//! * fleet traffic for rounds r>1 is O(W·n) label bytes — far below the
+//!   round-1 cost of shipping edges (the RELABEL/RESHARD win);
+//! * (full mode) the loop converges to ARI ≥ 0.9 vs the planted labels.
+//!
+//! One `BENCH_gee.json` row per round per lane: `median_ns` is that
+//! round's wall time, `speedup` carries the round's ARI vs the previous
+//! round's labels (the convergence trajectory), and the bytes columns
+//! carry that round's fleet wire traffic. `QUICK=1` trims n for CI.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use gee_sparse::gee::iterate::{init_labels, IterativeJob, RoundState, INIT_SEED};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::shard::codec::ByteCounters;
+use gee_sparse::shard::spill::spill_from_graph;
+use gee_sparse::shard::{DispatchConfig, FleetSession, ShardServer, SpillConfig};
+use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+
+const ROUNDS: usize = 10;
+
+struct LaneResult {
+    z: Vec<f64>,
+    labels: Vec<i32>,
+    rounds: Vec<RoundState>,
+    round_ns: Vec<u128>,
+    /// Cumulative (sent, received) fleet bytes after each round; empty
+    /// for the local lane.
+    byte_marks: Vec<(u64, u64)>,
+}
+
+fn main() {
+    let quick = quick_mode();
+    let n = if quick { 5_000 } else { 50_000 };
+    let seed = 42u64;
+    let g = generate_sbm(&SbmParams::paper(n), seed);
+    let k = g.k;
+    let m = g.num_directed();
+    let opts = GeeOptions::new(true, false, true);
+    let truth = g.labels.clone();
+    let init = init_labels(g.n, k, INIT_SEED);
+    println!("== bench cluster_loop (n={n}, directed={m}, k={k}, rounds<={ROUNDS}) ==\n");
+
+    // ---- local lane: IterativeJob over the in-process engine
+    let mut wg = g.clone();
+    wg.labels.copy_from_slice(&init);
+    let driver = IterativeJob { rounds: ROUNDS, ..IterativeJob::new(g.n, k) };
+    let engine = SparseGee::fast();
+    let mut local = LaneResult {
+        z: Vec::new(),
+        labels: Vec::new(),
+        rounds: Vec::new(),
+        round_ns: Vec::new(),
+        byte_marks: Vec::new(),
+    };
+    let mut last = Instant::now();
+    let out = driver
+        .run(
+            Some(init.clone()),
+            |lab| {
+                wg.labels.copy_from_slice(lab);
+                Ok(engine.embed(&wg, &opts))
+            },
+            |rs| {
+                local.round_ns.push(last.elapsed().as_nanos().max(1));
+                last = Instant::now();
+                local.rounds.push(*rs);
+            },
+        )
+        .expect("local cluster loop");
+    local.z = out.z.data;
+    local.labels = out.labels;
+
+    // ---- fleet lane: same driver, rounds served by 2 shard daemons
+    let s1 = ShardServer::start("127.0.0.1:0").expect("daemon 1");
+    let s2 = ShardServer::start("127.0.0.1:0").expect("daemon 2");
+    let spill_dir = std::env::temp_dir().join(format!("gee_cluster_bench_{}", std::process::id()));
+    let mut fg = g.clone();
+    fg.labels.copy_from_slice(&init);
+    let sp = spill_from_graph(&fg, &SpillConfig { shards: 6, ..SpillConfig::new(spill_dir) })
+        .expect("spill");
+    let counters = Arc::new(ByteCounters::default());
+    let dcfg = DispatchConfig {
+        counters: Some(counters.clone()),
+        ..DispatchConfig::new(vec![s1.addr().to_string(), s2.addr().to_string()])
+    };
+    let mut session = FleetSession::connect(&sp, &opts, &dcfg).expect("fleet session");
+    let mut fleet = LaneResult {
+        z: Vec::new(),
+        labels: Vec::new(),
+        rounds: Vec::new(),
+        round_ns: Vec::new(),
+        byte_marks: Vec::new(),
+    };
+    let mut last = Instant::now();
+    let out = driver
+        .run(
+            Some(init.clone()),
+            |lab| session.embed_round(lab),
+            |rs| {
+                fleet.round_ns.push(last.elapsed().as_nanos().max(1));
+                last = Instant::now();
+                fleet.rounds.push(*rs);
+                fleet.byte_marks.push((
+                    counters.sent.load(Ordering::Relaxed),
+                    counters.received.load(Ordering::Relaxed),
+                ));
+            },
+        )
+        .expect("fleet cluster loop");
+    session.close();
+    s1.stop();
+    s2.stop();
+    fleet.z = out.z.data;
+    fleet.labels = out.labels;
+
+    // ---- gates: the lanes are the same computation
+    assert_eq!(local.rounds, fleet.rounds, "per-round states must match");
+    assert_eq!(local.labels, fleet.labels, "final labels must match");
+    assert_eq!(local.z, fleet.z, "final Z must be bitwise identical across lanes");
+
+    // rounds r>1 re-ship only the n-vector of labels (plus per-shard
+    // headers): O(W·n) bytes against W=2 endpoints, far below round 1's
+    // edge shipment
+    let round1_sent = fleet.byte_marks[0].0;
+    for (r, w) in fleet.byte_marks.windows(2).enumerate() {
+        let sent = w[1].0 - w[0].0;
+        assert!(
+            sent <= 2 * (4 * n as u64) + 8_192,
+            "round {} resent {} B — labels alone are {} B across 2 endpoints",
+            r + 2,
+            sent,
+            2 * 4 * n as u64,
+        );
+        assert!(
+            sent < round1_sent,
+            "round {} sent {} B, not below round 1's {} B edge shipment",
+            r + 2,
+            sent,
+            round1_sent,
+        );
+    }
+
+    let pred = &local.labels;
+    let (a, b) = paired_labels(pred, &truth);
+    let ari = adjusted_rand_index(&a, &b);
+    println!(
+        "{:>6} {:>14} {:>14} {:>10} {:>12} {:>12}",
+        "round", "local(ms)", "fleet(ms)", "changed", "ari_vs_prev", "fleet sent B"
+    );
+    let mut prev_sent = 0u64;
+    for (i, rs) in local.rounds.iter().enumerate() {
+        let sent = fleet.byte_marks[i].0 - prev_sent;
+        prev_sent = fleet.byte_marks[i].0;
+        println!(
+            "{:>6} {:>14.3} {:>14.3} {:>10} {:>12.4} {:>12}",
+            rs.round,
+            local.round_ns[i] as f64 / 1e6,
+            fleet.round_ns[i] as f64 / 1e6,
+            rs.changed,
+            rs.ari_vs_prev,
+            sent,
+        );
+    }
+    println!("\nfinal ARI vs planted labels: {ari:.4} ({} rounds)", local.rounds.len());
+    if !quick {
+        assert!(ari >= 0.9, "cluster loop must recover the planted partition, got ARI {ari:.4}");
+    }
+
+    let mut records: Vec<BenchRecord> = Vec::new();
+    let mut prev = (0u64, 0u64);
+    for (i, rs) in local.rounds.iter().enumerate() {
+        records.push(BenchRecord {
+            bench: "cluster_loop".into(),
+            engine: format!("cluster-local:r{}", rs.round),
+            n,
+            m,
+            k,
+            threads: 1,
+            median_ns: local.round_ns[i],
+            speedup: rs.ari_vs_prev,
+            ..BenchRecord::default()
+        });
+        let (sent, received) = fleet.byte_marks[i];
+        records.push(BenchRecord {
+            bench: "cluster_loop".into(),
+            engine: format!("cluster-fleet:r{}", rs.round),
+            n,
+            m,
+            k,
+            threads: 2,
+            median_ns: fleet.round_ns[i],
+            speedup: rs.ari_vs_prev,
+            bytes_sent: sent - prev.0,
+            bytes_received: received - prev.1,
+            ..BenchRecord::default()
+        });
+        prev = (sent, received);
+    }
+    write_records("cluster_loop", &records);
+}

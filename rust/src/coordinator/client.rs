@@ -8,6 +8,9 @@
 //! * [`EmbedClient::submit`] + [`EmbedClient::recv_any`] — pipelining:
 //!   queue any number of requests, then collect replies in whatever
 //!   order the server finishes them, matched by request id (v2 only).
+//! * [`EmbedClient::cluster_embed`] — one `ITER2` self-clustering job:
+//!   the graph ships once, per-round progress streams back, the final Z
+//!   follows (text-only servers run the identical loop client-side).
 //! * [`EmbedClient::open_session`] / [`send_deltas`](EmbedClient::send_deltas)
 //!   / [`fetch_rows`](EmbedClient::fetch_rows) /
 //!   [`close_session`](EmbedClient::close_session) — the resident-session
@@ -168,6 +171,93 @@ impl EmbedClient {
                 Reply::Fatal(msg) => bail!("server error: {msg}"),
             }
         }
+    }
+
+    /// One self-clustering job (`ITER2`): ship the graph once, let the
+    /// server run the embed→kmeans→relabel loop, and stream per-round
+    /// progress back ahead of the final Z. `labels` seed round 1 (use
+    /// [`crate::gee::iterate::init_labels`] for the deterministic
+    /// default); `rounds`/`tol` of 0 accept the driver defaults.
+    ///
+    /// On a text-only server the same loop runs client-side — one
+    /// `EMBED` round trip per round, the kmeans/relabel steps local.
+    /// Shortest-roundtrip decimals make the text lane recover exact
+    /// bits, so both paths return the identical `(Z, rounds)`.
+    pub fn cluster_embed(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+        rounds: usize,
+        tol: f64,
+    ) -> Result<(Dense, Vec<crate::gee::iterate::RoundState>)> {
+        if !self.binary {
+            return self.cluster_embed_text(code, labels, edges, k, rounds, tol);
+        }
+        let options = GeeOptions::from_code(code).context("bad options code")?;
+        let id = self.next_id;
+        self.next_id += 1;
+        let h = wire::IterHeader { id, options, n: labels.len(), k, rounds, tol };
+        writeln!(self.writer, "{}", wire::format_iter_header(&h))?;
+        wire::write_request_body(&mut self.writer, labels, edges)?;
+        self.writer.flush()?;
+        let mut states = Vec::new();
+        loop {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("server closed the connection");
+            }
+            if line.starts_with("ROUND ") {
+                let (rid, rs) = wire::parse_round(&line)?;
+                if rid != id {
+                    bail!("ROUND line for unexpected id {rid} (awaiting {id})");
+                }
+                states.push(rs);
+                continue;
+            }
+            match wire::parse_reply(&line)? {
+                Reply::Ok { id: rid, rows, cols } => {
+                    if rid != id {
+                        bail!("reply for unexpected id {rid} (awaiting {id})");
+                    }
+                    let z = self.read_z_frame(rows, cols)?;
+                    return Ok((z, states));
+                }
+                Reply::Busy { retry_ms, .. } => {
+                    bail!("server busy (retry after {retry_ms}ms)")
+                }
+                Reply::Err { msg, .. } => bail!("server error: {msg}"),
+                Reply::Pong => continue,
+                Reply::Fatal(msg) => bail!("server error: {msg}"),
+            }
+        }
+    }
+
+    /// The client-side loop behind [`cluster_embed`](Self::cluster_embed)
+    /// on the v1 text wire: same driver, same seeds, one `EMBED` round
+    /// trip per round.
+    fn cluster_embed_text(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+        rounds: usize,
+        tol: f64,
+    ) -> Result<(Dense, Vec<crate::gee::iterate::RoundState>)> {
+        let driver = crate::gee::iterate::IterativeJob {
+            rounds,
+            tol,
+            ..crate::gee::iterate::IterativeJob::new(labels.len(), k)
+        };
+        let mut states = Vec::new();
+        let out = driver.run(
+            Some(labels.to_vec()),
+            |lab| self.embed_text(code, lab, edges, k),
+            |rs| states.push(*rs),
+        )?;
+        Ok((out.z, states))
     }
 
     // ------------------------------------------------- session lane (v2)

@@ -50,6 +50,12 @@ pub struct Metrics {
     pub session_refreshes: AtomicU64,
     pub session_rows_refreshed: AtomicU64,
     pub session_full_rescales: AtomicU64,
+    /// Iterative lane: self-clustering jobs completed (`ITER2` /
+    /// `submit_admitted_iter`) and total embed→kmeans→relabel rounds
+    /// they ran — rounds far outpacing jobs means the loop is not
+    /// converging within its caps.
+    pub iter_jobs: AtomicU64,
+    pub iter_rounds: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     /// Per-tenant admission counters, created lazily on first touch
@@ -90,6 +96,8 @@ impl Default for Metrics {
             session_refreshes: AtomicU64::new(0),
             session_rows_refreshed: AtomicU64::new(0),
             session_full_rescales: AtomicU64::new(0),
+            iter_jobs: AtomicU64::new(0),
+            iter_rounds: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
@@ -183,6 +191,13 @@ impl Metrics {
                 self.session_refreshes.load(Ordering::Relaxed),
                 self.session_rows_refreshed.load(Ordering::Relaxed),
                 self.session_full_rescales.load(Ordering::Relaxed),
+            ));
+        }
+        let iter_rounds = self.iter_rounds.load(Ordering::Relaxed);
+        if iter_rounds > 0 {
+            s.push_str(&format!(
+                "\n  iter: jobs={} rounds={iter_rounds}",
+                self.iter_jobs.load(Ordering::Relaxed),
             ));
         }
         for (name, tc) in self.tenant_snapshot() {
@@ -305,6 +320,16 @@ mod tests {
         let s = m.summary();
         assert!(s.contains("sessions: opened=2"), "{s}");
         assert!(s.contains("deltas=10"), "{s}");
+    }
+
+    #[test]
+    fn iter_counters_surface_in_summary_only_when_active() {
+        let m = Metrics::new();
+        assert!(!m.summary().contains("iter:"));
+        m.iter_jobs.fetch_add(1, Ordering::Relaxed);
+        m.iter_rounds.fetch_add(5, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("iter: jobs=1 rounds=5"), "{s}");
     }
 
     #[test]

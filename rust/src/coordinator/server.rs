@@ -46,6 +46,11 @@
 //! error taxonomy as embeds — content errors (unknown session, bad
 //! vertex, quota) are request-scoped `ERR id=`/`BUSY` with the body
 //! consumed, framing violations are ERR-then-close.
+//!
+//! The v2 lane also accepts `ITER2` (see [`super::wire`]): the graph
+//! ships once, the embed→kmeans→relabel self-clustering loop runs
+//! server-side under a single admission, and per-round `ROUND id=`
+//! progress lines stream back ahead of the final `OK id=` + Z frame.
 
 use std::collections::HashSet;
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -56,7 +61,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{bail, Context, Result};
 
-use super::service::{EmbedRequest, EmbedResponse, EmbedService, ReplySink};
+use super::service::{EmbedRequest, EmbedResponse, EmbedService, IterSpec, ReplySink};
 use super::session::{Delta, OpenError, SessionConfig};
 use super::wire;
 use crate::gee::GeeOptions;
@@ -377,6 +382,9 @@ enum Out {
     Rows { id: u64, rows: usize, cols: usize, applied: u64, clean: u64, data: Vec<f64> },
     /// A session closed: `CLOSED id=`.
     Closed { id: u64 },
+    /// One round of an `ITER2` job finished: progress line, streamed
+    /// while the job stays in flight (the final `Reply` carries Z).
+    Round { id: u64, state: crate::gee::iterate::RoundState },
     Pong,
     /// Protocol violation: announce and hang up.
     Fatal(String),
@@ -464,6 +472,11 @@ fn writer_loop(
                 writeln!(writer, "{}", wire::format_closed(id))?;
                 writer.flush()?;
             }
+            Out::Round { id, state } => {
+                // progress only — the id stays in flight until its Reply
+                writeln!(writer, "{}", wire::format_round(id, &state))?;
+                writer.flush()?;
+            }
             Out::Pong => {
                 writeln!(writer, "PONG")?;
                 writer.flush()?;
@@ -522,12 +535,16 @@ fn v2_read_loop(
             handle_close2(t, service, tx)?;
             continue;
         }
+        if t.starts_with("ITER2") {
+            handle_iter2(t, reader, service, tenant, tx, inflight, &mut scratch)?;
+            continue;
+        }
         if !t.starts_with("EMBED2") {
             // a v1 EMBED (or anything else) after v2 negotiation has no
             // framing we can trust — ERR-then-close
             return Err(fatal(
                 tx,
-                format!("expected EMBED2/SESS2/DELTA2/ROWS2/CLOSE2 after v2 negotiation, got '{t}'"),
+                format!("expected EMBED2/ITER2/SESS2/DELTA2/ROWS2/CLOSE2 after v2 negotiation, got '{t}'"),
             ));
         }
         let h = match wire::parse_request_header(t) {
@@ -590,6 +607,87 @@ fn v2_read_loop(
             }
         }
     }
+}
+
+/// `ITER2`: an `EMBED2`-shaped submission that runs the self-clustering
+/// loop server-side. One admission covers the whole job; each round
+/// streams a `ROUND id=` progress line through the writer (per-producer
+/// mpsc ordering guarantees they precede the final `OK id=` + Z frame,
+/// since the worker thread sends both).
+#[allow(clippy::too_many_arguments)]
+fn handle_iter2(
+    line: &str,
+    reader: &mut ConnReader,
+    service: &EmbedService,
+    tenant: &str,
+    tx: &mpsc::Sender<Out>,
+    inflight: &Mutex<HashSet<u64>>,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    let h = match wire::parse_iter_header(line) {
+        Ok(h) => h,
+        Err(e) => return Err(fatal(tx, format!("{e:#}"))),
+    };
+    if !inflight.lock().unwrap().insert(h.id) {
+        return Err(fatal(tx, format!("duplicate in-flight request id {}", h.id)));
+    }
+    if let Err(e) = validate_wire_dims(h.n, h.k) {
+        if let Err(de) = wire::drain_request_body(reader, scratch) {
+            return Err(fatal(tx, format!("{de:#}")));
+        }
+        let _ = tx.send(Out::Failed { id: h.id, msg: format!("{e:#}") });
+        return Ok(());
+    }
+    match service.try_admit(tenant) {
+        Ok(admission) => {
+            let rh = wire::RequestHeader { id: h.id, options: h.options, n: h.n, k: h.k };
+            let mut g = Graph::new(h.n, h.k);
+            if let Err(e) = wire::read_request_body_into(reader, &rh, &mut g, scratch) {
+                return Err(fatal(tx, format!("{e:#}")));
+            }
+            if let Err(e) = g.validate() {
+                let _ = tx.send(Out::Failed { id: h.id, msg: e });
+                return Ok(()); // dropping the admission returns its slot
+            }
+            let id = h.id;
+            let tx_round = tx.clone();
+            let spec = IterSpec {
+                rounds: h.rounds,
+                tol: h.tol,
+                on_round: Arc::new(move |rs| {
+                    let _ = tx_round.send(Out::Round { id, state: *rs });
+                }),
+            };
+            let txc = tx.clone();
+            let sink = ReplySink::callback(move |result| {
+                let _ = txc.send(Out::Reply { id, result });
+            });
+            if service
+                .submit_admitted_iter(
+                    admission,
+                    EmbedRequest { graph: g, options: h.options },
+                    spec,
+                    sink,
+                )
+                .is_err()
+            {
+                let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
+            }
+        }
+        Err(super::queue::AdmitError::Closed) => {
+            if let Err(de) = wire::drain_request_body(reader, scratch) {
+                return Err(fatal(tx, format!("{de:#}")));
+            }
+            let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
+        }
+        Err(_) => {
+            if let Err(de) = wire::drain_request_body(reader, scratch) {
+                return Err(fatal(tx, format!("{de:#}")));
+            }
+            let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
+        }
+    }
+    Ok(())
 }
 
 /// `SESS2`: an `EMBED2`-shaped open (the same two body frames follow)
@@ -953,6 +1051,68 @@ mod tests {
             );
         }
         server.stop();
+    }
+
+    #[test]
+    fn iter2_streams_rounds_and_matches_local_loop_on_both_wires() {
+        let (server, _svc) = start_server();
+        let mut rng = Rng::new(911);
+        let n = 60;
+        let k = 3;
+        let edges: Vec<(u32, u32, f64)> = (0..240)
+            .map(|_| (rng.below(n) as u32, rng.below(n) as u32, 1.0))
+            .collect();
+        let labels =
+            crate::gee::iterate::init_labels(n, k, crate::gee::iterate::INIT_SEED);
+        let mut client = crate::coordinator::client::EmbedClient::connect(
+            server.addr(),
+            &Default::default(),
+        )
+        .unwrap();
+        assert!(client.is_binary());
+        let (z, rounds) = client.cluster_embed("ldc", &labels, &edges, k, 3, 0.0).unwrap();
+        assert!(!rounds.is_empty());
+
+        // mirror the loop locally: same seed labels, same engine — the
+        // server's rounds and final Z must be bitwise identical
+        let mut g = Graph::new(n, k);
+        g.labels = labels.clone();
+        for &(a, b, w) in &edges {
+            g.add_edge(a, b, w);
+        }
+        let opts = GeeOptions::from_code("ldc").unwrap();
+        let driver = crate::gee::iterate::IterativeJob {
+            rounds: 3,
+            ..crate::gee::iterate::IterativeJob::new(n, k)
+        };
+        let mut lg = g.clone();
+        let expect = driver
+            .run(
+                Some(labels.clone()),
+                |lab| {
+                    lg.labels.copy_from_slice(lab);
+                    Engine::SparseFast.embed(&lg, &opts)
+                },
+                |_| {},
+            )
+            .unwrap();
+        assert_eq!(z.data, expect.z.data, "ITER2 must stay bitwise");
+        assert_eq!(rounds, expect.rounds);
+
+        // a text-only server runs the identical loop client-side
+        let svc2 = Arc::new(EmbedService::start(ServiceConfig::default()));
+        let server2 = TcpServer::start_text_only("127.0.0.1:0", svc2).unwrap();
+        let mut tclient = crate::coordinator::client::EmbedClient::connect(
+            server2.addr(),
+            &Default::default(),
+        )
+        .unwrap();
+        assert!(!tclient.is_binary());
+        let (tz, trounds) = tclient.cluster_embed("ldc", &labels, &edges, k, 3, 0.0).unwrap();
+        assert_eq!(tz.data, z.data, "text fallback must stay bitwise");
+        assert_eq!(trounds, rounds);
+        server.stop();
+        server2.stop();
     }
 
     #[test]

@@ -197,6 +197,23 @@ impl ReplySink {
     }
 }
 
+/// Parameters of a multi-round self-clustering job (the `ITER2` wire
+/// verb and `--engine cluster`). One admission covers the whole job:
+/// the tenant permit is held from submit to final reply and the job
+/// occupies exactly one queue slot — rounds run inside the worker and
+/// never re-enter the queue.
+#[derive(Clone)]
+pub struct IterSpec {
+    /// Embed→kmeans→relabel round cap (0 = the driver default).
+    pub rounds: usize,
+    /// Stop once the changed-label fraction drops to this (0 = full
+    /// fixpoint).
+    pub tol: f64,
+    /// Invoked on the worker thread after every round — must be cheap
+    /// and non-blocking (typically an mpsc send to a writer thread).
+    pub on_round: Arc<dyn Fn(&crate::gee::iterate::RoundState) + Send + Sync>,
+}
+
 struct Job {
     req: EmbedRequest,
     submitted: Instant,
@@ -205,6 +222,10 @@ struct Job {
     /// done; `None` for the legacy in-process submit APIs. Never read —
     /// it exists for its Drop.
     _permit: Option<TenantPermit>,
+    /// `Some` turns the request into an iterative self-clustering job:
+    /// the labels in `req.graph` seed the loop, the reply carries the
+    /// final-round Z.
+    iter: Option<IterSpec>,
 }
 
 /// Handle to a running service.
@@ -322,7 +343,7 @@ impl EmbedService {
         req: EmbedRequest,
     ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
         let (reply, rx) = ReplySink::channel();
-        let job = Job { req, submitted: Instant::now(), reply, _permit: None };
+        let job = Job { req, submitted: Instant::now(), reply, _permit: None, iter: None };
         match self.queue.try_push(job) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -341,7 +362,7 @@ impl EmbedService {
         req: EmbedRequest,
     ) -> Result<mpsc::Receiver<Result<EmbedResponse>>, PushError> {
         let (reply, rx) = ReplySink::channel();
-        let job = Job { req, submitted: Instant::now(), reply, _permit: None };
+        let job = Job { req, submitted: Instant::now(), reply, _permit: None, iter: None };
         match self.queue.push(job) {
             Ok(()) => {
                 self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
@@ -388,9 +409,34 @@ impl EmbedService {
     /// service shut down in between.
     pub fn submit_admitted(
         &self,
+        admission: Admission,
+        req: EmbedRequest,
+        reply: ReplySink,
+    ) -> Result<(), PushError> {
+        self.push_admitted(admission, req, reply, None)
+    }
+
+    /// [`submit_admitted`](Self::submit_admitted) for a multi-round
+    /// self-clustering job: `req.graph.labels` seed the loop, `spec`
+    /// bounds it, and `spec.on_round` streams per-round progress. The
+    /// single [`Admission`] covers every round — the tenant permit and
+    /// queue slot are held for the job's whole lifetime.
+    pub fn submit_admitted_iter(
+        &self,
+        admission: Admission,
+        req: EmbedRequest,
+        spec: IterSpec,
+        reply: ReplySink,
+    ) -> Result<(), PushError> {
+        self.push_admitted(admission, req, reply, Some(spec))
+    }
+
+    fn push_admitted(
+        &self,
         mut admission: Admission,
         req: EmbedRequest,
         reply: ReplySink,
+        iter: Option<IterSpec>,
     ) -> Result<(), PushError> {
         admission.consumed = true;
         let job = Job {
@@ -398,6 +444,7 @@ impl EmbedService {
             submitted: Instant::now(),
             reply,
             _permit: admission.permit.take(),
+            iter,
         };
         match self.queue.push_reserved(job) {
             Ok(()) => {
@@ -497,6 +544,17 @@ fn process_jobs<F>(
 ) where
     F: FnMut(&Graph, &GeeOptions) -> (Result<Dense>, &'static str),
 {
+    // iterative jobs run solo (their rounds loop inside the worker);
+    // everything else proceeds through the batcher
+    let mut plain = Vec::new();
+    for job in jobs {
+        if job.iter.is_some() {
+            run_iter_job(job, metrics, &mut run);
+        } else {
+            plain.push(job);
+        }
+    }
+    let jobs = plain;
     // group by option combo (batches must share the transform)
     let mut groups: std::collections::HashMap<GeeOptions, Vec<Job>> =
         std::collections::HashMap::new();
@@ -599,6 +657,49 @@ fn process_jobs<F>(
                 Err(e) => fail(job, format!("{e:#}"), metrics),
             }
         }
+    }
+}
+
+/// One self-clustering job: drive [`IterativeJob`] through the worker's
+/// `run` closure (so every round reuses the worker's pooled workspace
+/// and compute lane), streaming per-round progress through the spec's
+/// callback and the `iter_rounds` counter. The job's tenant permit is
+/// released only when `finish`/`fail` drops it with the job.
+///
+/// [`IterativeJob`]: crate::gee::iterate::IterativeJob
+fn run_iter_job<F>(job: Job, metrics: &Metrics, run: &mut F)
+where
+    F: FnMut(&Graph, &GeeOptions) -> (Result<Dense>, &'static str),
+{
+    let spec = job.iter.clone().expect("run_iter_job requires an iter spec");
+    let mut g = job.req.graph.clone();
+    let driver = crate::gee::iterate::IterativeJob {
+        rounds: spec.rounds,
+        tol: spec.tol,
+        ..crate::gee::iterate::IterativeJob::new(g.n, g.k)
+    };
+    let labels0 = g.labels.clone();
+    let opts = job.req.options;
+    let mut via: &'static str = "native";
+    let result = driver.run(
+        Some(labels0),
+        |labels| {
+            g.labels.copy_from_slice(labels);
+            let (r, v) = run(&g, &opts);
+            via = v;
+            r
+        },
+        |rs| {
+            metrics.iter_rounds.fetch_add(1, Ordering::Relaxed);
+            (spec.on_round)(rs);
+        },
+    );
+    match result {
+        Ok(out) => {
+            metrics.iter_jobs.fetch_add(1, Ordering::Relaxed);
+            finish(&job, out.z, via, 1, metrics);
+        }
+        Err(e) => fail(&job, format!("{e:#}"), metrics),
     }
 }
 
@@ -1110,6 +1211,65 @@ mod tests {
             m.tenant("t").rejected_backpressure.load(Ordering::Relaxed),
             1
         );
+    }
+
+    #[test]
+    fn iter_job_runs_rounds_under_one_admission() {
+        let svc = EmbedService::start(ServiceConfig {
+            workers: 1,
+            tenant_tokens: 1,
+            ..ServiceConfig::default()
+        });
+        let g = random_graph(510, 60, 240, 3);
+        let opts = GeeOptions::new(true, false, true);
+
+        let adm = svc.try_admit("iter").unwrap();
+        let rounds_seen = Arc::new(std::sync::Mutex::new(Vec::new()));
+        let rs_sink = rounds_seen.clone();
+        let spec = IterSpec {
+            rounds: 3,
+            tol: 0.0,
+            on_round: Arc::new(move |rs| rs_sink.lock().unwrap().push(*rs)),
+        };
+        let (reply, rx) = ReplySink::channel();
+        svc.submit_admitted_iter(
+            adm,
+            EmbedRequest { graph: g.clone(), options: opts },
+            spec,
+            reply,
+        )
+        .unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+
+        // mirror the loop locally: same seed labels, same engine → the
+        // service's final Z must be bitwise identical
+        let driver = crate::gee::iterate::IterativeJob {
+            rounds: 3,
+            ..crate::gee::iterate::IterativeJob::new(g.n, g.k)
+        };
+        let mut lg = g.clone();
+        let expect = driver
+            .run(
+                Some(g.labels.clone()),
+                |labels| {
+                    lg.labels.copy_from_slice(labels);
+                    Engine::SparseFast.embed(&lg, &opts)
+                },
+                |_| {},
+            )
+            .unwrap();
+        assert_eq!(resp.z.data, expect.z.data, "iter lane must stay bitwise");
+
+        let seen = rounds_seen.lock().unwrap().clone();
+        assert_eq!(seen.len(), expect.rounds.len());
+        for (a, b) in seen.iter().zip(expect.rounds.iter()) {
+            assert_eq!(a, b);
+        }
+
+        let m = svc.shutdown();
+        assert_eq!(m.completed.load(Ordering::Relaxed), 1);
+        assert_eq!(m.iter_jobs.load(Ordering::Relaxed), 1);
+        assert_eq!(m.iter_rounds.load(Ordering::Relaxed), seen.len() as u64);
     }
 
     #[test]

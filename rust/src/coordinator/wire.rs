@@ -31,6 +31,12 @@
 //! an `EMBED2`-shaped body, `DELTA2` streams batched edge
 //! insert/delete/relabel records, `ROWS2` fetches chosen Z rows plus the
 //! `applied`/`clean` staleness watermark, `CLOSE2` unregisters.
+//!
+//! The iterative lane adds `ITER2` (see [`IterHeader`]): an
+//! `EMBED2`-shaped body whose labels frame seeds a self-clustering
+//! embed→kmeans→relabel loop. The reply streams one `ROUND` progress
+//! line per round, then the usual `OK` + final Z frame. One `ITER2` is
+//! one admission — rounds never re-enter the queue.
 
 use std::io::{Read, Write};
 
@@ -572,6 +578,106 @@ pub fn parse_closed(line: &str) -> Result<u64> {
     parse_kv(rest.split_whitespace().next(), "id", line)
 }
 
+// --------------------------------------------------------- iterative verbs
+
+/// Hard cap on `rounds=` — far above any converging job; bounds the
+/// work a single hostile header can demand.
+pub const MAX_WIRE_ROUNDS: usize = 10_000;
+
+/// `ITER2` header: an `EMBED2`-shaped request (same two body frames —
+/// the labels frame carries the *initial* labels, usually random) whose
+/// reply is a self-clustering run: per-round `ROUND` progress lines,
+/// then `OK` + the final Z frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterHeader {
+    pub id: u64,
+    pub options: GeeOptions,
+    pub n: usize,
+    pub k: usize,
+    /// `rounds=` — embed→kmeans→relabel round cap; server default when 0.
+    pub rounds: usize,
+    /// `tol=` — stop once the changed-label fraction drops to this; 0
+    /// demands a full fixpoint.
+    pub tol: f64,
+}
+
+pub fn format_iter_header(h: &IterHeader) -> String {
+    let mut s = format!("ITER2 id={} code={} n={} k={}", h.id, h.options.code(), h.n, h.k);
+    if h.rounds > 0 {
+        s.push_str(&format!(" rounds={}", h.rounds));
+    }
+    if h.tol > 0.0 {
+        s.push_str(&format!(" tol={}", h.tol));
+    }
+    s
+}
+
+/// Parse an `ITER2` header (fatality contract of
+/// [`parse_request_header`]; `rounds`/`tol` are range-checked here like
+/// `SESS2`'s `thresh`).
+pub fn parse_iter_header(line: &str) -> Result<IterHeader> {
+    let mut parts = line.split_whitespace();
+    if parts.next() != Some("ITER2") {
+        bail!("expected ITER2, got '{line}'");
+    }
+    let mut id: Option<u64> = None;
+    let mut code = "---".to_string();
+    let mut n = 0usize;
+    let mut k = 0usize;
+    let mut rounds = 0usize;
+    let mut tol = 0.0f64;
+    for p in parts {
+        let (key, val) = p.split_once('=').context("ITER2 args are key=val")?;
+        match key {
+            "id" => id = Some(val.parse().context("bad id")?),
+            "code" => code = val.to_string(),
+            "n" => n = val.parse().context("bad n")?,
+            "k" => k = val.parse().context("bad k")?,
+            "rounds" => {
+                rounds = val.parse().context("bad rounds")?;
+                if rounds > MAX_WIRE_ROUNDS {
+                    bail!("rounds {rounds} over the cap {MAX_WIRE_ROUNDS}");
+                }
+            }
+            "tol" => {
+                tol = val.parse().context("bad tol")?;
+                if !(0.0..=1.0).contains(&tol) {
+                    bail!("tol {tol} outside 0..=1");
+                }
+            }
+            other => bail!("unknown ITER2 arg '{other}'"),
+        }
+    }
+    let id = id.context("ITER2 requires id=<u64>")?;
+    let options = GeeOptions::from_code(&code).context("bad options code")?;
+    Ok(IterHeader { id, options, n, k, rounds, tol })
+}
+
+/// One per-round progress line of an `ITER2` reply:
+/// `ROUND id= r= changed= ari= inertia= iters=`. Floats travel as Rust's
+/// shortest round-trippable decimal, so parse recovers the exact bits.
+pub fn format_round(id: u64, rs: &crate::gee::iterate::RoundState) -> String {
+    format!(
+        "ROUND id={id} r={} changed={} ari={} inertia={} iters={}",
+        rs.round, rs.changed, rs.ari_vs_prev, rs.inertia, rs.kmeans_iters
+    )
+}
+
+pub fn parse_round(line: &str) -> Result<(u64, crate::gee::iterate::RoundState)> {
+    let rest = line.trim().strip_prefix("ROUND ").context("expected ROUND reply")?;
+    let mut it = rest.split_whitespace();
+    let id = parse_kv(it.next(), "id", line)?;
+    let round = parse_kv(it.next(), "r", line)?;
+    let changed = parse_kv(it.next(), "changed", line)?;
+    let ari_vs_prev = parse_kv(it.next(), "ari", line)?;
+    let inertia = parse_kv(it.next(), "inertia", line)?;
+    let kmeans_iters = parse_kv(it.next(), "iters", line)?;
+    Ok((
+        id,
+        crate::gee::iterate::RoundState { round, changed, ari_vs_prev, inertia, kmeans_iters },
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -760,6 +866,56 @@ mod tests {
         read_rows_frame(&mut Cursor::new(&buf), 4, &mut scratch, &mut out).unwrap();
         assert_eq!(out, ids);
         assert!(read_rows_frame(&mut Cursor::new(&buf), 5, &mut scratch, &mut out).is_err());
+    }
+
+    #[test]
+    fn iter_header_round_trip_and_bounds() {
+        let h = IterHeader {
+            id: 13,
+            options: GeeOptions::ALL,
+            n: 50,
+            k: 4,
+            rounds: 12,
+            tol: 0.01,
+        };
+        assert_eq!(parse_iter_header(&format_iter_header(&h)).unwrap(), h);
+        // defaults (rounds=0, tol=0) are omitted from the line and
+        // recovered on parse
+        let bare = IterHeader { rounds: 0, tol: 0.0, ..h };
+        let line = format_iter_header(&bare);
+        assert!(!line.contains("rounds=") && !line.contains("tol="), "{line}");
+        assert_eq!(parse_iter_header(&line).unwrap(), bare);
+        assert!(parse_iter_header("ITER2 code=ldc n=3 k=2").is_err(), "id mandatory");
+        assert!(parse_iter_header("ITER2 id=1 code=ldc n=3 k=2 tol=1.5").is_err());
+        assert!(
+            parse_iter_header(&format!(
+                "ITER2 id=1 code=ldc n=3 k=2 rounds={}",
+                MAX_WIRE_ROUNDS + 1
+            ))
+            .is_err()
+        );
+        assert!(parse_iter_header("ITER2 id=1 code=ldc n=3 k=2 zap=1").is_err());
+        assert!(parse_iter_header("EMBED2 id=1 code=ldc n=3 k=2").is_err());
+    }
+
+    #[test]
+    fn round_line_round_trips_float_bits() {
+        let rs = crate::gee::iterate::RoundState {
+            round: 3,
+            changed: 17,
+            ari_vs_prev: 0.1 + 0.2, // not exactly representable in decimal
+            inertia: 12345.678901234567,
+            kmeans_iters: 9,
+        };
+        let (id, back) = parse_round(&format_round(7, &rs)).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(back.round, rs.round);
+        assert_eq!(back.changed, rs.changed);
+        assert_eq!(back.ari_vs_prev.to_bits(), rs.ari_vs_prev.to_bits());
+        assert_eq!(back.inertia.to_bits(), rs.inertia.to_bits());
+        assert_eq!(back.kmeans_iters, rs.kmeans_iters);
+        assert!(parse_round("OK id=1 rows=2 cols=3").is_err());
+        assert!(parse_round("ROUND id=1 r=x changed=0 ari=0 inertia=0 iters=0").is_err());
     }
 
     #[test]

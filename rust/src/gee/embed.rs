@@ -44,6 +44,12 @@ pub enum Engine {
     /// the u32 index space (each shard's structure is local, so only the
     /// per-shard slice must fit).
     Sharded(usize),
+    /// Self-clustering GEE (One-Hot GEE, arXiv:2109.13098): alternate
+    /// embed → k-means on Z → relabel for up to R rounds (0 = default
+    /// cap), ignoring any input labels. The only lane whose output is a
+    /// label *discovery*, not a supervised encoding — it is therefore
+    /// excluded from [`Engine::ALL`] parity sweeps.
+    Cluster(usize),
 }
 
 impl Engine {
@@ -66,6 +72,7 @@ impl Engine {
             Engine::SparseFast => "sparse-fast",
             Engine::SparsePar(_) => "sparse-par",
             Engine::Sharded(_) => "sharded",
+            Engine::Cluster(_) => "cluster",
         }
     }
 
@@ -81,6 +88,9 @@ impl Engine {
         if let Some(t) = s.strip_prefix("sharded:") {
             return t.parse().ok().map(Engine::Sharded);
         }
+        if let Some(t) = s.strip_prefix("cluster:") {
+            return t.parse().ok().map(Engine::Cluster);
+        }
         match s {
             "dense" => Some(Engine::Dense),
             "edgelist" | "gee" | "original" => Some(Engine::EdgeList),
@@ -89,6 +99,7 @@ impl Engine {
             "sparse-fast" | "fast" => Some(Engine::SparseFast),
             "sparse-par" | "par" => Some(Engine::SparsePar(0)),
             "sharded" | "shard" => Some(Engine::Sharded(0)),
+            "cluster" => Some(Engine::Cluster(0)),
             _ => None,
         }
     }
@@ -126,6 +137,7 @@ impl Engine {
             Engine::Sparse => Ok(SparseGee::default().embed(g, opts)),
             Engine::SparseFast => Ok(SparseGee::fast().embed(g, opts)),
             Engine::SparsePar(t) => Ok(ParallelGee::new(*t).embed(g, opts)),
+            Engine::Cluster(iters) => cluster_local(g, opts, *iters),
             Engine::Sharded(_) => unreachable!("handled above"),
         }
     }
@@ -166,11 +178,37 @@ impl Engine {
                 Ok(ws.take_z())
             }
             // the sharded engine pools one workspace per worker thread
-            // internally; the reference configurations keep their
-            // allocating paths for fidelity to the published pipeline
-            Engine::Dense | Engine::Sparse | Engine::Sharded(_) => self.embed(g, opts),
+            // internally; the cluster lane owns a workspace across its
+            // rounds; the reference configurations keep their allocating
+            // paths for fidelity to the published pipeline
+            Engine::Dense | Engine::Sparse | Engine::Sharded(_) | Engine::Cluster(_) => {
+                self.embed(g, opts)
+            }
         }
     }
+}
+
+/// `Engine::Cluster` body: run the iterative self-clustering loop
+/// in-process, riding `SparseFast`'s pooled lane with one workspace
+/// reused across every round. Input labels are ignored (the loop
+/// discovers its own from the deterministic init); `g.k` sets both the
+/// cluster count and the embedding dimension.
+fn cluster_local(g: &Graph, opts: &GeeOptions, iters: usize) -> Result<Dense> {
+    let job = super::iterate::IterativeJob {
+        rounds: iters,
+        ..super::iterate::IterativeJob::new(g.n, g.k)
+    };
+    let mut gl = g.clone();
+    let mut ws = EmbedWorkspace::new();
+    let out = job.run(
+        None,
+        |labels: &[i32]| {
+            gl.labels.copy_from_slice(labels);
+            Engine::SparseFast.embed_pooled(&gl, opts, &mut ws)
+        },
+        |_| {},
+    )?;
+    Ok(out.z)
 }
 
 /// An embedding result with its provenance.
@@ -207,8 +245,12 @@ mod tests {
         );
         assert_eq!(Engine::from_name("sharded"), Some(Engine::Sharded(0)));
         assert_eq!(Engine::from_name("sharded:5"), Some(Engine::Sharded(5)));
+        assert_eq!(Engine::from_name("cluster"), Some(Engine::Cluster(0)));
+        assert_eq!(Engine::from_name("cluster:7"), Some(Engine::Cluster(7)));
+        assert_eq!(Engine::Cluster(3).name(), "cluster");
         assert_eq!(Engine::from_name("sparse-par:zap"), None);
         assert_eq!(Engine::from_name("sharded:x"), None);
+        assert_eq!(Engine::from_name("cluster:x"), None);
         assert_eq!(Engine::from_name("bogus"), None);
     }
 

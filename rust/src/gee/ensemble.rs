@@ -79,7 +79,7 @@ pub fn gee_ensemble(g: &Graph, k: usize, cfg: &EnsembleConfig) -> EnsembleResult
             // re-cluster in embedding space
             let km = kmeans(
                 &z,
-                &KMeansConfig { k, max_iters: 50, tol: 1e-6, seed: rng.next_u64() },
+                &KMeansConfig { max_iters: 50, seed: rng.next_u64(), ..KMeansConfig::new(k) },
             );
             let new_labels: Vec<i32> = km.assignments.iter().map(|&c| c as i32).collect();
             let changed = new_labels
@@ -94,7 +94,7 @@ pub fn gee_ensemble(g: &Graph, k: usize, cfg: &EnsembleConfig) -> EnsembleResult
         }
         rounds_log.push(rounds);
         // objective: k-means inertia normalized by total variance
-        let km = kmeans(&z, &KMeansConfig { k, max_iters: 50, tol: 1e-6, seed: 1 });
+        let km = kmeans(&z, &KMeansConfig { max_iters: 50, seed: 1, ..KMeansConfig::new(k) });
         let total_var: f64 = {
             let mut mean = vec![0.0; z.ncols];
             for r in 0..z.nrows {

@@ -1,0 +1,358 @@
+//! Round-based iterative jobs: the embed→kmeans→relabel driver behind
+//! `--engine cluster[:iters]` (One-Hot GEE's self-clustering loop,
+//! arXiv:2109.13098) and every future iterative workload.
+//!
+//! The driver is transport-agnostic: it owns the loop — deterministic
+//! label init, k-means on Z (the zero-allocation `kmeans_into` lane with
+//! scratch reused across rounds), cluster-id alignment, convergence
+//! bookkeeping — while the *embedding of the current labels* is a
+//! closure supplied by the caller. The same driver therefore runs
+//! against a local engine (`Engine::Cluster`), a pooled service worker,
+//! or a persistent shard fleet where round r>1 re-ships only the label
+//! vector against the cached `GLOBALS` hash.
+//!
+//! Determinism contract: given (n, k, seed) the initial labels are a
+//! pure function of the config, k-means is bitwise-stable at any thread
+//! count, and cluster-id alignment breaks ties by lowest index — so
+//! every lane that embeds the same labels to the same Z walks the same
+//! label trajectory and returns byte-identical output.
+
+use anyhow::{Result, bail};
+
+use crate::sparse::Dense;
+use crate::tasks::kmeans::{KMeansConfig, KMeansScratch, kmeans_into};
+use crate::tasks::metrics::{adjusted_rand_index, paired_labels};
+use crate::util::rng::Rng;
+
+/// Rounds cap when the caller asks for `cluster` without `:iters`.
+pub const DEFAULT_ROUNDS: usize = 20;
+
+/// Seed for the deterministic random label init. One constant shared by
+/// every lane (CLI, service, wire client/server, fleet) — parity across
+/// lanes starts from identical round-1 labels.
+pub const INIT_SEED: u64 = 0x17E2_47E5;
+
+/// Seed for the per-round k-means (fixed, not advanced round-to-round:
+/// a round's output must be a pure function of its input Z).
+const KMEANS_SEED: u64 = 0xC1_0551;
+
+/// One embed→kmeans→relabel round, as reported to progress callbacks
+/// and streamed back over the wire as a convergence summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RoundState {
+    /// 1-based round number.
+    pub round: usize,
+    /// Labels that differ from the previous round (after alignment).
+    pub changed: usize,
+    /// ARI between the previous and new labeling (1.0 = same partition).
+    pub ari_vs_prev: f64,
+    /// k-means inertia of this round's clustering.
+    pub inertia: f64,
+    /// Lloyd iterations the round's k-means took to converge.
+    pub kmeans_iters: usize,
+}
+
+/// Outcome of an iterative job: the final embedding (always the embed of
+/// `labels` — the driver re-embeds after the last relabel, so Z and
+/// labels never disagree), the final labels, and the round trajectory.
+#[derive(Clone, Debug)]
+pub struct IterOutcome {
+    pub z: Dense,
+    pub labels: Vec<i32>,
+    pub rounds: Vec<RoundState>,
+}
+
+/// Configuration for a round-based iterative job.
+#[derive(Clone, Copy, Debug)]
+pub struct IterativeJob {
+    pub n: usize,
+    /// Number of clusters (= embedding dimension).
+    pub k: usize,
+    /// Maximum rounds; 0 means [`DEFAULT_ROUNDS`].
+    pub rounds: usize,
+    /// Convergence tolerance: stop once `changed <= tol * n`. 0.0 means
+    /// run to an exact label fixpoint (or the rounds cap).
+    pub tol: f64,
+    /// Seed for the deterministic label init.
+    pub seed: u64,
+    /// Thread budget for the k-means assignment step (0 = all cores);
+    /// never changes results, only speed.
+    pub kmeans_threads: usize,
+}
+
+impl IterativeJob {
+    pub fn new(n: usize, k: usize) -> IterativeJob {
+        IterativeJob { n, k, rounds: 0, tol: 0.0, seed: INIT_SEED, kmeans_threads: 0 }
+    }
+
+    /// The effective rounds cap (resolves the 0 = default sentinel).
+    pub fn rounds_cap(&self) -> usize {
+        if self.rounds == 0 { DEFAULT_ROUNDS } else { self.rounds }
+    }
+
+    /// Deterministic round-1 labels: a pure function of (n, k, seed).
+    pub fn init_labels(&self) -> Vec<i32> {
+        init_labels(self.n, self.k, self.seed)
+    }
+
+    /// Drive the loop. `embed` maps a label vector to its GEE embedding
+    /// (local engine, pooled worker, or fleet round — the driver doesn't
+    /// care); `on_round` observes each round as it completes (progress
+    /// callbacks into metrics, wire `ROUND` lines). `labels0` overrides
+    /// the deterministic init (a warm start from a previous job).
+    pub fn run<E, C>(
+        &self,
+        labels0: Option<Vec<i32>>,
+        mut embed: E,
+        mut on_round: C,
+    ) -> Result<IterOutcome>
+    where
+        E: FnMut(&[i32]) -> Result<Dense>,
+        C: FnMut(&RoundState),
+    {
+        if self.n == 0 || self.k == 0 {
+            bail!("iterative job needs n >= 1 and k >= 1 (got n={}, k={})", self.n, self.k);
+        }
+        let mut labels = match labels0 {
+            Some(l) => {
+                if l.len() != self.n {
+                    bail!("warm-start labels have length {}, graph has {}", l.len(), self.n);
+                }
+                l
+            }
+            None => self.init_labels(),
+        };
+        let kcfg = KMeansConfig {
+            k: self.k,
+            seed: KMEANS_SEED,
+            threads: self.kmeans_threads,
+            ..KMeansConfig::new(self.k)
+        };
+        let mut scratch = KMeansScratch::new();
+        let mut new_labels: Vec<i32> = Vec::with_capacity(self.n);
+        let mut rounds_log = Vec::new();
+
+        // Z always holds the embedding of `labels` at loop top.
+        let mut z = embed(&labels)?;
+        for round in 1..=self.rounds_cap() {
+            let (inertia, kmeans_iters) = kmeans_into(&z, &kcfg, &mut scratch);
+            new_labels.clear();
+            new_labels.extend(scratch.assignments.iter().map(|&c| c as i32));
+            // k-means is blind to cluster naming; align ids to the
+            // previous round so the changed-count fixpoint is reachable
+            align_to_previous(&labels, &mut new_labels, self.k);
+            let changed = labels
+                .iter()
+                .zip(new_labels.iter())
+                .filter(|(a, b)| a != b)
+                .count();
+            let ari_vs_prev = {
+                let (a, b) = paired_labels(&labels, &new_labels);
+                adjusted_rand_index(&a, &b)
+            };
+            let state = RoundState { round, changed, ari_vs_prev, inertia, kmeans_iters };
+            on_round(&state);
+            rounds_log.push(state);
+            std::mem::swap(&mut labels, &mut new_labels);
+            if changed == 0 {
+                // exact fixpoint: Z is already the embedding of `labels`
+                return Ok(IterOutcome { z, labels, rounds: rounds_log });
+            }
+            // keep the Z ↔ labels invariant: re-embed under the new
+            // labels (also the final Z when this was the last round)
+            z = embed(&labels)?;
+            if (changed as f64) <= self.tol * self.n as f64 {
+                break;
+            }
+        }
+        Ok(IterOutcome { z, labels, rounds: rounds_log })
+    }
+}
+
+/// Deterministic random label init shared by every lane.
+pub fn init_labels(n: usize, k: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.below(k.max(1)) as i32).collect()
+}
+
+/// Rename the clusters in `new` (values in `0..k`) to maximally overlap
+/// `old`: greedy largest-overlap assignment, ties broken by lowest new
+/// id then lowest old id — deterministic, O(k³ + n). k-means output is
+/// only a partition; without this, a converged partition whose ids
+/// happen to permute between rounds would never reach `changed == 0`.
+fn align_to_previous(old: &[i32], new: &mut [i32], k: usize) {
+    if k == 0 {
+        return;
+    }
+    let mut overlap = vec![0u64; k * k]; // overlap[new * k + old]
+    for (&o, &nw) in old.iter().zip(new.iter()) {
+        if o >= 0 && (o as usize) < k {
+            overlap[nw as usize * k + o as usize] += 1;
+        }
+    }
+    let mut perm = vec![usize::MAX; k]; // new id -> old id
+    let mut used_old = vec![false; k];
+    let mut used_new = vec![false; k];
+    for _ in 0..k {
+        let mut best: Option<(usize, usize, u64)> = None;
+        for c in 0..k {
+            if used_new[c] {
+                continue;
+            }
+            for o in 0..k {
+                if used_old[o] {
+                    continue;
+                }
+                let v = overlap[c * k + o];
+                // strict > keeps the first (lowest c, then lowest o) max
+                let better = match best {
+                    None => true,
+                    Some((_, _, bv)) => v > bv,
+                };
+                if better {
+                    best = Some((c, o, v));
+                }
+            }
+        }
+        let (c, o, _) = best.expect("k unused pairs remain by construction");
+        perm[c] = o;
+        used_new[c] = true;
+        used_old[o] = true;
+    }
+    for l in new.iter_mut() {
+        *l = perm[*l as usize] as i32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gee::{Engine, GeeOptions};
+    use crate::graph::Graph;
+
+    #[test]
+    fn init_labels_deterministic_and_in_range() {
+        let a = init_labels(100, 4, 7);
+        let b = init_labels(100, 4, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&l| (0..4).contains(&l)));
+        assert_ne!(a, init_labels(100, 4, 8), "different seed, different init");
+    }
+
+    #[test]
+    fn align_maps_permuted_partition_onto_previous_ids() {
+        let old = vec![0, 0, 1, 1, 2, 2];
+        let mut new = vec![2, 2, 0, 0, 1, 1]; // same partition, renamed
+        align_to_previous(&old, &mut new, 3);
+        assert_eq!(new, old);
+    }
+
+    #[test]
+    fn align_is_greedy_on_partial_overlap() {
+        // new cluster 0 mostly covers old 1, new 1 mostly covers old 0
+        let old = vec![1, 1, 1, 0, 0, 2];
+        let mut new = vec![0, 0, 0, 1, 1, 2];
+        align_to_previous(&old, &mut new, 3);
+        assert_eq!(new, vec![1, 1, 1, 0, 0, 2]);
+    }
+
+    #[test]
+    fn loop_reaches_fixpoint_on_label_independent_embedding() {
+        // the embedding ignores the labels entirely (two fixed blobs),
+        // so round 1 snaps the labels to the k-means partition and round
+        // 2 must observe changed == 0 and stop — reusing round 2's Z
+        // without a third embed call.
+        let n = 12;
+        let mut calls = 0usize;
+        let embed = |_labels: &[i32]| {
+            calls += 1;
+            let mut z = Dense::zeros(n, 2);
+            for i in 0..n {
+                let hi = (i >= n / 2) as usize;
+                *z.get_mut(i, hi) = 10.0;
+            }
+            Ok(z)
+        };
+        let mut seen = Vec::new();
+        let job = IterativeJob { rounds: 10, ..IterativeJob::new(n, 2) };
+        let out = job.run(None, embed, |r| seen.push(*r)).unwrap();
+        assert!(out.rounds.len() <= 2, "rounds: {:?}", out.rounds);
+        let last = out.rounds.last().unwrap();
+        assert_eq!(last.changed, 0);
+        assert!((last.ari_vs_prev - 1.0).abs() < 1e-12);
+        assert_eq!(seen, out.rounds, "callback must see every round in order");
+        // one embed per loop-top state; the fixpoint round reuses Z
+        assert_eq!(calls, out.rounds.len());
+        // labels must split exactly at n/2 (two coincident-point blobs)
+        let a = out.labels[0];
+        let b = out.labels[n / 2];
+        assert_ne!(a, b);
+        assert!(out.labels[..n / 2].iter().all(|&l| l == a));
+        assert!(out.labels[n / 2..].iter().all(|&l| l == b));
+    }
+
+    #[test]
+    fn rounds_cap_bounds_the_loop() {
+        // an embedding of pure noise that reshuffles with the labels
+        // never converges; the cap must stop it
+        let n = 16;
+        let embed = |labels: &[i32]| {
+            let mut z = Dense::zeros(n, 2);
+            let mut h = 0x9E37_79B9_u64;
+            for (i, &l) in labels.iter().enumerate() {
+                h = h.wrapping_mul(6364136223846793005).wrapping_add(l as u64 + i as u64);
+                *z.get_mut(i, 0) = (h >> 11) as f64 / (1u64 << 53) as f64;
+                *z.get_mut(i, 1) = (h >> 7) as f64 / (1u64 << 57) as f64;
+            }
+            Ok(z)
+        };
+        let job = IterativeJob { rounds: 3, ..IterativeJob::new(n, 2) };
+        let out = job.run(None, embed, |_| {}).unwrap();
+        assert!(out.rounds.len() <= 3);
+    }
+
+    #[test]
+    fn recovers_planted_cliques_with_real_engine() {
+        // two self-looped cliques (sizes 9 and 11): under any labeling,
+        // every vertex of a clique sees the same neighbor multiset, so
+        // clique rows coincide exactly and k-means++ must place its
+        // second seed in the other clique (all distance mass is there).
+        // The loop therefore snaps to the planted partition and stops.
+        let sizes = [9usize, 11];
+        let n = sizes.iter().sum::<usize>();
+        let mut g = Graph::new(n, 2);
+        let mut planted = vec![0i32; n];
+        let mut base = 0usize;
+        for (c, &sz) in sizes.iter().enumerate() {
+            for i in base..base + sz {
+                planted[i] = c as i32;
+                for j in i..base + sz {
+                    g.add_edge(i as u32, j as u32, 1.0);
+                }
+            }
+            base += sz;
+        }
+        let opts = GeeOptions::NONE;
+        let job = IterativeJob::new(n, 2);
+        let out = job
+            .run(
+                None,
+                |labels: &[i32]| {
+                    let mut gl = g.clone();
+                    gl.labels.copy_from_slice(labels);
+                    Engine::SparseFast.embed(&gl, &opts)
+                },
+                |_| {},
+            )
+            .unwrap();
+        let (a, b) = paired_labels(&planted, &out.labels);
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari > 0.99, "planted cliques not recovered: ARI {ari}");
+        assert_eq!(out.rounds.last().unwrap().changed, 0, "{:?}", out.rounds);
+        // the invariant: returned Z is the embedding of returned labels
+        let mut gl = g.clone();
+        gl.labels.copy_from_slice(&out.labels);
+        let fresh = Engine::SparseFast.embed(&gl, &opts).unwrap();
+        assert_eq!(out.z.data, fresh.data);
+    }
+}

@@ -16,6 +16,8 @@
 //!   has an `*_into` lane that allocates nothing once the workspace is
 //!   warm ([`workspace::WorkspacePool`] shares them between workers)
 //! * [`embed::Engine`] — unified front-end over all implementations
+//! * [`iterate::IterativeJob`] — round-based embed→kmeans→relabel driver
+//!   (the `cluster[:iters]` engine and the fleet/service cluster lanes)
 //! * [`globals::Globals`] / [`globals::DirtySet`] — incrementally
 //!   maintained `n_k`/degree vectors + coalescing dirty-row set shared
 //!   by the resident session and streaming lanes
@@ -27,6 +29,7 @@ pub mod edgelist_par;
 pub mod embed;
 pub mod fusion;
 pub mod globals;
+pub mod iterate;
 pub mod kernel;
 pub mod options;
 pub mod parallel;

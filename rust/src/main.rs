@@ -15,6 +15,9 @@
 //! * `client-stream` — open a resident session on a `serve --listen
 //!                    --sessions` daemon, stream a held-back edge suffix
 //!                    as `DELTA2` batches, and drain to a full read
+//! * `cluster-embed` — unsupervised One-Hot GEE: embed → k-means →
+//!                    relabel until labels stabilize, locally, against a
+//!                    `serve` daemon (`ITER2`), or across a shard fleet
 //!
 //! Arg parsing is hand-rolled (`--key value` / `--key=value` /
 //! `--flag`) because the offline crate set has no clap; see `Args`
@@ -30,6 +33,7 @@ use gee_sparse::coordinator::batcher::BatchCapacity;
 use gee_sparse::coordinator::{
     ClientConfig, Delta, EmbedClient, EmbedRequest, EmbedService, Lane, ServiceConfig,
 };
+use gee_sparse::gee::iterate;
 use gee_sparse::gee::{Engine, GeeOptions};
 use gee_sparse::graph::datasets::by_name;
 use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
@@ -38,8 +42,8 @@ use gee_sparse::harness;
 use gee_sparse::runtime::{Manifest, Runtime};
 use gee_sparse::shard::{
     embed_multiprocess, embed_out_of_core, embed_remote, run_worker,
-    spill::spill_from_files, DispatchConfig, ProcessConfig, ShardServer,
-    SpillConfig, WorkerArgs,
+    spill::{spill_from_files, spill_from_graph},
+    DispatchConfig, FleetSession, ProcessConfig, ShardServer, SpillConfig, WorkerArgs,
 };
 use gee_sparse::tasks::kmeans::{kmeans, KMeansConfig};
 use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
@@ -209,7 +213,7 @@ fn cmd_embed(args: &Args) -> Result<()> {
     } else {
         let engine = Engine::from_name(args.get("engine").unwrap_or("sparse"))
             .context(
-                "--engine must be dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]",
+                "--engine must be dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]|cluster[:R]",
             )?;
         engine.embed(&g, &opts)?
     };
@@ -548,6 +552,129 @@ fn cmd_client_stream(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Self-clustering embed (One-Hot GEE, arXiv:2109.13098): start from
+/// deterministic seed labels, alternate embed → k-means → relabel until
+/// labels stabilize. Three lanes share one driver and stay bitwise
+/// identical: local (default), `--addr` (one `ITER2` job against a
+/// `serve --listen` daemon; a text-only server runs the loop
+/// client-side), and `--workers` (shard fleet — the graph spills once,
+/// rounds after the first re-ship only the label vector).
+fn cmd_cluster_embed(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let code = args.get("options").unwrap_or("---");
+    let opts = GeeOptions::from_code(code)
+        .context("--options takes a 3-char code like ldc, l-c, ---")?;
+    let k = match args.get("k") {
+        None | Some("auto") => g.k,
+        Some(v) => v.parse().context("--k takes a class count or 'auto'")?,
+    };
+    anyhow::ensure!(k >= 2, "--k must be at least 2 (got {k})");
+    let rounds = args.get_usize("iters", 0)?;
+    let tol: f64 = match args.get("tol") {
+        Some(v) => v.parse().context("--tol must be a fraction in 0..=1")?,
+        None => 0.0,
+    };
+    let init = iterate::init_labels(g.n, k, iterate::INIT_SEED);
+    let on_round = |rs: &iterate::RoundState| {
+        println!(
+            "round {}: changed={} ari_vs_prev={:.4} inertia={:.3} kmeans_iters={}",
+            rs.round, rs.changed, rs.ari_vs_prev, rs.inertia, rs.kmeans_iters
+        );
+    };
+
+    let t0 = Instant::now();
+    let (z, states, lane) = if let Some(addr) = args.get("addr") {
+        let addr: std::net::SocketAddr = addr.parse().context("--addr must be HOST:PORT")?;
+        let edges: Vec<(u32, u32, f64)> =
+            (0..g.num_edges()).map(|i| (g.src[i], g.dst[i], g.w[i])).collect();
+        let cfg = ClientConfig {
+            tenant: args.get("tenant").map(|s| s.to_string()),
+            force_text: args.has("text-wire"),
+            counters: None,
+        };
+        let mut client = EmbedClient::connect(addr, &cfg)?;
+        let lane =
+            if client.is_binary() { "ITER2 wire" } else { "text v1 (client-side loop)" };
+        let (z, states) = client.cluster_embed(code, &init, &edges, k, rounds, tol)?;
+        for rs in &states {
+            on_round(rs);
+        }
+        (z, states, lane)
+    } else {
+        // both in-process lanes: rebuild the graph with the requested k
+        // and the deterministic seed labels, then drive the shared loop
+        let mut wg = Graph::new(g.n, k);
+        wg.labels = init.clone();
+        for i in 0..g.num_edges() {
+            wg.add_edge(g.src[i], g.dst[i], g.w[i]);
+        }
+        let driver =
+            iterate::IterativeJob { rounds, tol, ..iterate::IterativeJob::new(g.n, k) };
+        if let Some(w) = args.get("workers") {
+            let endpoints: Vec<String> =
+                w.split(',').map(|s| s.trim().to_string()).collect();
+            let spill_dir = args.get("spill-dir").map(PathBuf::from).unwrap_or_else(|| {
+                std::env::temp_dir().join(format!("gee_cluster_{}", std::process::id()))
+            });
+            let sp = spill_from_graph(
+                &wg,
+                &SpillConfig {
+                    shards: args.get_usize("shards", 0)?,
+                    ..SpillConfig::new(spill_dir)
+                },
+            )?;
+            let mut dcfg = DispatchConfig::new(endpoints);
+            dcfg.slots_per_worker = args.get_usize("slots", 1)?;
+            dcfg.force_text = args.has("text-wire");
+            let mut session = FleetSession::connect(&sp, &opts, &dcfg)?;
+            let out =
+                driver.run(Some(init.clone()), |lab| session.embed_round(lab), on_round)?;
+            session.close();
+            (out.z, out.rounds, "shard fleet")
+        } else {
+            let out = driver.run(
+                Some(init.clone()),
+                |lab| {
+                    wg.labels.copy_from_slice(lab);
+                    Engine::SparseFast.embed(&wg, &opts)
+                },
+                on_round,
+            )?;
+            (out.z, out.rounds, "local")
+        }
+    };
+    let dt = t0.elapsed();
+    println!(
+        "cluster-embed ({lane}): n={} edges={} k={k} {} rounds with {} in {:.3}s",
+        g.n,
+        g.num_edges(),
+        states.len(),
+        opts.label(),
+        dt.as_secs_f64(),
+    );
+    if g.labels.iter().any(|&l| l >= 0) {
+        // lane-independent quality report: k-means on the final Z vs the
+        // graph's own labels (planted classes for SBM / dataset twins)
+        let res = kmeans(&z, &KMeansConfig::new(k));
+        let pred: Vec<i32> = res.assignments.iter().map(|&c| c as i32).collect();
+        let (a, b) = paired_labels(&pred, &g.labels);
+        println!("final k-means ARI vs labels: {:.4}", adjusted_rand_index(&a, &b));
+    }
+    if let Some(out) = args.get("out") {
+        // full-precision rows: CI compares the lanes' outputs byte for
+        // byte, and rounding would hide wire or fleet bugs
+        let mut text = String::new();
+        for r in 0..z.nrows {
+            let row: Vec<String> = z.row(r).iter().map(|v| format!("{v}")).collect();
+            text.push_str(&row.join("\t"));
+            text.push('\n');
+        }
+        std::fs::write(out, text)?;
+        println!("embedding written to {out}");
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests", 200)?;
     let workers = args.get_usize("workers", 2)?;
@@ -642,7 +769,7 @@ fn usage() -> &'static str {
        info         [--artifacts DIR]\n\
        generate     --dataset NAME | --sbm N   --out STEM [--seed S]\n\
        embed        --dataset NAME | --sbm N | --input STEM\n\
-                    [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]]\n\
+                    [--engine dense|edgelist|edgelist-par[:T]|sparse|sparse-fast|sparse-par[:T]|sharded[:S]|cluster[:R]]\n\
                     [--options ldc] [--pjrt [--artifacts DIR]] [--cluster] [--out FILE]\n\
        shard-embed  --input STEM | --edges FILE --labels FILE\n\
                     [--shards S] [--mem-budget-edges B]\n\
@@ -678,7 +805,16 @@ fn usage() -> &'static str {
                     [--tenant NAME] [--out FILE]\n\
                     (open a session holding back the last D edges, stream\n\
                     them as DELTA2 batches, drain, and dump Z — bitwise\n\
-                    identical to client-embed of the full graph)\n"
+                    identical to client-embed of the full graph)\n\
+       cluster-embed --dataset NAME | --sbm N | --input STEM\n\
+                    [--k K|auto] [--iters R] [--tol F] [--options ldc]\n\
+                    [--addr HOST:PORT [--tenant NAME] [--text-wire]]\n\
+                    [--workers HOST:PORT,... [--shards S] [--slots N]\n\
+                     [--spill-dir D]] [--out FILE]\n\
+                    (unsupervised One-Hot GEE: embed → k-means → relabel\n\
+                    until labels stabilize; --addr runs one ITER2 job on a\n\
+                    serve daemon, --workers drives a shard fleet re-shipping\n\
+                    only labels after round 1 — all lanes bitwise identical)\n"
 }
 
 fn main() -> Result<()> {
@@ -699,6 +835,7 @@ fn main() -> Result<()> {
         "serve" => cmd_serve(&args),
         "client-embed" => cmd_client_embed(&args),
         "client-stream" => cmd_client_stream(&args),
+        "cluster-embed" => cmd_cluster_embed(&args),
         "help" | "--help" | "-h" => {
             print!("{}", usage());
             Ok(())

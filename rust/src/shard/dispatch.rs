@@ -41,7 +41,9 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use super::codec::{globals_hash, ByteCounters, CountingReader, CountingWriter};
-use super::remote::{request_shard, request_shard_v2, send_globals};
+use super::remote::{
+    request_reshard, request_shard, request_shard_v2, send_globals, send_relabel,
+};
 use super::spill::SpilledShards;
 use crate::gee::options::GeeOptions;
 use crate::sparse::Dense;
@@ -214,6 +216,7 @@ impl SlotConn {
                 s,
                 ghash,
                 &mut self.scratch,
+                false,
             )
         } else {
             request_shard(&mut self.reader, &mut self.writer, sp, opts, s)
@@ -390,6 +393,254 @@ fn connect(endpoint: &str, cfg: &DispatchConfig) -> Result<SlotConn> {
     writer.flush()?;
     expect_pong(&mut reader, &mut line, "health probe (text fallback)")?;
     Ok(SlotConn::new(reader, writer, false))
+}
+
+/// Per-endpoint connection state a [`FleetSession`] holds across rounds.
+struct EndpointState {
+    conn: SlotConn,
+    /// Hash of the global vectors this daemon currently holds (`None`
+    /// until the first `GLOBALS` ships).
+    ghash: Option<u64>,
+    /// Shards whose spill payload this daemon retains (`SHARD2 keep=1`
+    /// was served) — eligible for edge-free `RESHARD` in later rounds.
+    kept: std::collections::HashSet<usize>,
+}
+
+/// A multi-round fleet conversation for the iterative cluster loop.
+///
+/// [`embed_remote`] is one-shot: connections are opened, the job runs,
+/// everything is torn down. The cluster loop embeds the *same* spilled
+/// graph many times under *changing labels*, so a session keeps one v2
+/// connection per endpoint alive across rounds and exploits the daemon's
+/// retained-payload cache:
+///
+/// * round 1 — `GLOBALS` once per endpoint, then `SHARD2 keep=1` per
+///   owned shard (edges cross the wire exactly once);
+/// * round r>1 — one `RELABEL` per endpoint (the n-vector of labels
+///   against the cached globals hash) and one `RESHARD` header per
+///   shard: per-round fleet traffic is O(W·n) label bytes, never O(E).
+///
+/// Shard ownership is deterministic (contiguous blocks over live
+/// endpoints), which keeps the daemon-side caches hot. An endpoint that
+/// dies mid-session is excluded and its shards are re-served on the
+/// survivors via `SHARD2 keep=1` — the spill files back every retry, so
+/// output stays bitwise-identical to the in-process lanes through any
+/// failure sequence that leaves one endpoint alive.
+pub struct FleetSession<'a> {
+    sp: &'a SpilledShards,
+    opts: GeeOptions,
+    endpoints: Vec<String>,
+    /// `None` marks a dead endpoint (connect failure, v1-only daemon,
+    /// or a mid-round wire error).
+    conns: Vec<Option<EndpointState>>,
+    /// Hash of the labels the spill was taken under — what `GLOBALS`
+    /// ships to a fresh connection before any `RELABEL`.
+    sp_hash: u64,
+    failures: Vec<String>,
+}
+
+impl<'a> FleetSession<'a> {
+    /// Connect and negotiate v2 with every endpoint. Endpoints that are
+    /// down or speak only the v1 text wire are recorded as dead (the
+    /// session needs `RELABEL`/`RESHARD`, which v1 lacks); at least one
+    /// live v2 endpoint is required.
+    pub fn connect(
+        sp: &'a SpilledShards,
+        opts: &GeeOptions,
+        cfg: &DispatchConfig,
+    ) -> Result<FleetSession<'a>> {
+        if cfg.endpoints.is_empty() {
+            bail!("cluster fleet session needs at least one worker endpoint");
+        }
+        if cfg.force_text {
+            bail!("cluster fleet session requires the binary v2 wire (force_text is set)");
+        }
+        let mut conns = Vec::with_capacity(cfg.endpoints.len());
+        let mut failures = Vec::new();
+        for ep in &cfg.endpoints {
+            match connect(ep, cfg) {
+                Ok(c) if c.v2 => conns.push(Some(EndpointState {
+                    conn: c,
+                    ghash: None,
+                    kept: std::collections::HashSet::new(),
+                })),
+                Ok(_) => {
+                    failures.push(format!("{ep}: speaks only the v1 text wire"));
+                    conns.push(None);
+                }
+                Err(e) => {
+                    failures.push(format!("{ep}: {e:#}"));
+                    conns.push(None);
+                }
+            }
+        }
+        if conns.iter().all(|c| c.is_none()) {
+            bail!(
+                "no live v2 endpoint for cluster fleet session: {}",
+                failures.join("; ")
+            );
+        }
+        Ok(FleetSession {
+            sp,
+            opts: *opts,
+            endpoints: cfg.endpoints.clone(),
+            conns,
+            sp_hash: globals_hash(&sp.labels, &sp.plan.deg),
+            failures,
+        })
+    }
+
+    /// Embed the spilled graph under `labels`, reusing kept payloads.
+    /// Bitwise-identical to `SparseGee::fast()` on the same graph and
+    /// labels, for any endpoint count and any death sequence that
+    /// leaves one endpoint alive.
+    pub fn embed_round(&mut self, labels: &[i32]) -> Result<Dense> {
+        let plan = &self.sp.plan;
+        if labels.len() != plan.n {
+            bail!(
+                "label vector has {} entries for a {}-vertex spill",
+                labels.len(),
+                plan.n
+            );
+        }
+        let hash = globals_hash(labels, &plan.deg);
+        let total = plan.shards();
+        let mut z = Dense::zeros(plan.n, plan.k);
+        let mut todo: Vec<usize> = (0..total).collect();
+        let (sp, opts, sp_hash) = (self.sp, self.opts, self.sp_hash);
+        while !todo.is_empty() {
+            let live: Vec<usize> = self
+                .conns
+                .iter()
+                .enumerate()
+                .filter_map(|(i, c)| c.as_ref().map(|_| i))
+                .collect();
+            if live.is_empty() {
+                bail!(
+                    "cluster fleet dead with {} shards pending: {}",
+                    todo.len(),
+                    self.failures.join("; ")
+                );
+            }
+            // deterministic contiguous blocks over live endpoints; with
+            // a stable fleet the same endpoint serves the same shards
+            // every round, so its retained payloads always hit
+            let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); self.conns.len()];
+            for (i, &s) in todo.iter().enumerate() {
+                assigned[live[i * live.len() / todo.len()]].push(s);
+            }
+            let results = std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for ((e, slot), shards) in
+                    self.conns.iter_mut().enumerate().zip(assigned.iter())
+                {
+                    let Some(st) = slot.as_mut() else { continue };
+                    if shards.is_empty() {
+                        continue;
+                    }
+                    handles.push((e, sc.spawn(move || -> Result<Vec<(usize, Vec<f64>)>> {
+                        ensure_globals(st, sp, labels, hash, sp_hash)?;
+                        let mut out = Vec::with_capacity(shards.len());
+                        for &s in shards {
+                            let rows = if st.kept.contains(&s) {
+                                request_reshard(
+                                    &mut st.conn.reader,
+                                    &mut st.conn.writer,
+                                    &sp.plan,
+                                    &opts,
+                                    s,
+                                    hash,
+                                    &mut st.conn.scratch,
+                                )
+                                .with_context(|| format!("RESHARD shard {s}"))?
+                            } else {
+                                let r = request_shard_v2(
+                                    &mut st.conn.reader,
+                                    &mut st.conn.writer,
+                                    sp,
+                                    &opts,
+                                    s,
+                                    hash,
+                                    &mut st.conn.scratch,
+                                    true,
+                                )
+                                .with_context(|| format!("SHARD2 shard {s}"))?;
+                                st.kept.insert(s);
+                                r
+                            };
+                            out.push((s, rows));
+                        }
+                        Ok(out)
+                    })));
+                }
+                handles
+                    .into_iter()
+                    .map(|(e, h)| (e, h.join().expect("session endpoint thread panicked")))
+                    .collect::<Vec<_>>()
+            });
+            todo.clear();
+            for (e, res) in results {
+                match res {
+                    Ok(rows) => {
+                        for (s, r) in rows {
+                            let (v0, v1) = plan.shard_range(s);
+                            z.data[v0 * plan.k..v1 * plan.k].copy_from_slice(&r);
+                        }
+                    }
+                    Err(err) => {
+                        self.failures
+                            .push(format!("{}: {err:#}", self.endpoints[e]));
+                        self.conns[e] = None;
+                        todo.extend(assigned[e].iter().copied());
+                    }
+                }
+            }
+            todo.sort_unstable();
+        }
+        Ok(z)
+    }
+
+    /// Politely end the session (`QUIT` on every live connection).
+    pub fn close(mut self) {
+        for slot in self.conns.iter_mut().filter_map(|c| c.as_mut()) {
+            let _ = writeln!(slot.conn.writer, "QUIT");
+            let _ = slot.conn.writer.flush();
+        }
+    }
+}
+
+/// Bring one daemon's global vectors up to `hash`: first contact ships
+/// the spill-time `GLOBALS` (optionally followed by a `RELABEL` when the
+/// round's labels already differ); later rounds ship only the `RELABEL`.
+fn ensure_globals(
+    st: &mut EndpointState,
+    sp: &SpilledShards,
+    labels: &[i32],
+    hash: u64,
+    sp_hash: u64,
+) -> Result<()> {
+    if st.ghash == Some(hash) {
+        return Ok(());
+    }
+    if st.ghash.is_none() {
+        send_globals(&mut st.conn.reader, &mut st.conn.writer, sp, sp_hash)
+            .context("send GLOBALS")?;
+        st.ghash = Some(sp_hash);
+        if hash == sp_hash {
+            return Ok(());
+        }
+    }
+    send_relabel(
+        &mut st.conn.reader,
+        &mut st.conn.writer,
+        labels,
+        sp.plan.n,
+        sp.plan.k,
+        hash,
+    )
+    .context("send RELABEL")?;
+    st.ghash = Some(hash);
+    Ok(())
 }
 
 #[cfg(test)]
@@ -637,6 +888,121 @@ mod tests {
         );
         live.stop();
         drop(bad_server);
+    }
+
+    fn rotate_labels(labels: &mut [i32], k: usize) {
+        for l in labels.iter_mut().filter(|l| **l >= 0) {
+            *l = (*l + 1) % k as i32;
+        }
+    }
+
+    #[test]
+    fn fleet_session_relabel_rounds_are_bitwise_and_edge_free() {
+        let g = random_graph(571, 200, 1200, 4);
+        let sp = spill(&g, "session", 6);
+        let s1 = ShardServer::start("127.0.0.1:0").unwrap();
+        let s2 = ShardServer::start("127.0.0.1:0").unwrap();
+        let counters = Arc::new(super::ByteCounters::default());
+        let cfg = DispatchConfig {
+            counters: Some(counters.clone()),
+            ..DispatchConfig::new(vec![
+                s1.addr().to_string(),
+                s2.addr().to_string(),
+            ])
+        };
+        let opts = crate::gee::GeeOptions::new(true, false, true);
+        let mut session = FleetSession::connect(&sp, &opts, &cfg).unwrap();
+        let mut labels = sp.labels.clone();
+        let mut gl = g.clone();
+        let mut sent_after = Vec::new();
+        for round in 0..3 {
+            if round > 0 {
+                rotate_labels(&mut labels, g.k);
+            }
+            let z = session.embed_round(&labels).unwrap();
+            gl.labels.copy_from_slice(&labels);
+            let expect = SparseGee::fast().embed(&gl, &opts);
+            assert_eq!(z.data, expect.data, "session drifted at round {round}");
+            sent_after.push(counters.sent.load(std::sync::atomic::Ordering::Relaxed));
+        }
+        // rounds after the first ship one RELABEL (label frame) per
+        // endpoint plus per-shard RESHARD headers — O(W*n) bytes, never
+        // the edge payload again
+        let round1 = sent_after[0];
+        let label_budget = 2 * (4 * g.n as u64) + 4096;
+        for (r, w) in sent_after.windows(2).enumerate() {
+            let delta = w[1] - w[0];
+            assert!(
+                delta <= label_budget,
+                "round {} sent {delta} bytes, over the O(W*n) budget {label_budget}",
+                r + 2
+            );
+            assert!(
+                delta < round1 / 4,
+                "round {} sent {delta} bytes — not clearly cheaper than the \
+                 edge-shipping round 1 ({round1})",
+                r + 2
+            );
+        }
+        session.close();
+        s1.stop();
+        s2.stop();
+    }
+
+    #[test]
+    fn fleet_session_survives_endpoint_death_between_rounds() {
+        let g = random_graph(572, 120, 700, 3);
+        let sp = spill(&g, "sessiondeath", 5);
+        let s1 = ShardServer::start("127.0.0.1:0").unwrap();
+        let s2 = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig::new(vec![
+            s1.addr().to_string(),
+            s2.addr().to_string(),
+        ]);
+        let opts = crate::gee::GeeOptions::ALL;
+        let mut session = FleetSession::connect(&sp, &opts, &cfg).unwrap();
+        let z1 = session.embed_round(&sp.labels).unwrap();
+        assert_eq!(z1.data, SparseGee::fast().embed(&g, &opts).data);
+        // endpoint 0 dies between rounds: its shards must be re-served
+        // on the survivor via SHARD2 keep=1 (the spill files still back
+        // every retry), and the round must stay bitwise
+        session.conns[0] = None;
+        let mut labels = sp.labels.clone();
+        rotate_labels(&mut labels, g.k);
+        let mut gl = g.clone();
+        gl.labels.copy_from_slice(&labels);
+        let z2 = session.embed_round(&labels).unwrap();
+        assert_eq!(z2.data, SparseGee::fast().embed(&gl, &opts).data);
+        session.close();
+        s1.stop();
+        s2.stop();
+    }
+
+    #[test]
+    fn fleet_session_excludes_connect_dead_endpoint_and_rejects_text_fleet() {
+        let g = random_graph(573, 80, 400, 3);
+        let sp = spill(&g, "sessionconnect", 4);
+        let live = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig {
+            connect_timeout: Duration::from_millis(300),
+            ..DispatchConfig::new(vec![
+                "127.0.0.1:1".to_string(),
+                live.addr().to_string(),
+            ])
+        };
+        let opts = crate::gee::GeeOptions::NONE;
+        let mut session = FleetSession::connect(&sp, &opts, &cfg).unwrap();
+        let z = session.embed_round(&sp.labels).unwrap();
+        assert_eq!(z.data, SparseGee::fast().embed(&g, &opts).data);
+        session.close();
+        live.stop();
+        // a fleet with no v2 daemon cannot host a session: RELABEL and
+        // RESHARD do not exist on the v1 text wire
+        let legacy = ShardServer::start_text_only("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig::new(vec![legacy.addr().to_string()]);
+        let err = FleetSession::connect(&sp, &opts, &cfg).unwrap_err();
+        assert!(err.to_string().contains("v1 text wire"), "{err}");
+        legacy.stop();
     }
 
     #[test]

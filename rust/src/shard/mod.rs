@@ -51,7 +51,7 @@ pub mod remote;
 pub mod spill;
 pub mod worker;
 
-pub use dispatch::{embed_remote, DispatchConfig};
+pub use dispatch::{embed_remote, DispatchConfig, FleetSession};
 pub use plan::{resolve_shards, GlobalPass, ShardPlan};
 pub use process::{embed_multiprocess, ProcessConfig};
 pub use remote::ShardServer;

@@ -116,10 +116,20 @@ impl ShardHeader {
     }
 
     /// Parse a `SHARD2` header: same fields plus the required `g=`
-    /// GLOBALS content hash this shard references.
-    pub fn parse_v2(header: &str) -> Result<(ShardHeader, u64)> {
-        let (h, hash) = parse_shard_header(header, "SHARD2")?;
-        Ok((h, hash.context("SHARD2 requires g= (the GLOBALS content hash)")?))
+    /// GLOBALS content hash this shard references and the optional
+    /// `keep=` flag asking the daemon to retain the edge payload for
+    /// later `RESHARD` rounds.
+    pub fn parse_v2(header: &str) -> Result<(ShardHeader, u64, bool)> {
+        let (h, hash, keep) = parse_shard_header(header, "SHARD2")?;
+        Ok((h, hash.context("SHARD2 requires g= (the GLOBALS content hash)")?, keep))
+    }
+
+    /// Parse a `RESHARD` header: the `SHARD2` grammar with no edge frame
+    /// to follow — the daemon re-embeds the edges cached by an earlier
+    /// `SHARD2 keep=1` for the same row range.
+    pub fn parse_reshard(header: &str) -> Result<(ShardHeader, u64)> {
+        let (h, hash, _) = parse_shard_header(header, "RESHARD")?;
+        Ok((h, hash.context("RESHARD requires g= (the GLOBALS content hash)")?))
     }
 
     /// Bounds gate, applied before anything is allocated from the header.
@@ -147,10 +157,13 @@ impl ShardHeader {
     }
 }
 
-/// The shared `SHARD`/`SHARD2` key=val grammar. The `g=` hash key is
-/// accepted only for `SHARD2` (an unknown-arg error for v1, so old
-/// daemons keep rejecting headers they cannot honor).
-fn parse_shard_header(header: &str, verb: &str) -> Result<(ShardHeader, Option<u64>)> {
+/// The shared `SHARD`/`SHARD2`/`RESHARD` key=val grammar. The `g=` hash
+/// and `keep=` retention keys are v2-only (an unknown-arg error for v1,
+/// so old daemons keep rejecting headers they cannot honor).
+fn parse_shard_header(
+    header: &str,
+    verb: &str,
+) -> Result<(ShardHeader, Option<u64>, bool)> {
     let mut parts = header.split_whitespace();
     if parts.next() != Some(verb) {
         bail!("expected {verb}, got '{header}'");
@@ -158,6 +171,7 @@ fn parse_shard_header(header: &str, verb: &str) -> Result<(ShardHeader, Option<u
     let (mut n, mut k, mut row0, mut row1) = (None, None, None, None);
     let (mut lap, mut diag, mut cor) = (false, false, false);
     let mut hash = None;
+    let mut keep = false;
     let mut parse_bool = |val: &str, key: &str| -> Result<bool> {
         match val {
             "0" => Ok(false),
@@ -175,9 +189,10 @@ fn parse_shard_header(header: &str, verb: &str) -> Result<(ShardHeader, Option<u
             "lap" => lap = parse_bool(val, "lap")?,
             "diag" => diag = parse_bool(val, "diag")?,
             "cor" => cor = parse_bool(val, "cor")?,
-            "g" if verb == "SHARD2" => {
+            "g" if verb != "SHARD" => {
                 hash = Some(parse_hash(val)?);
             }
+            "keep" if verb == "SHARD2" => keep = parse_bool(val, "keep")?,
             other => bail!("unknown {verb} arg '{other}'"),
         }
     }
@@ -189,7 +204,7 @@ fn parse_shard_header(header: &str, verb: &str) -> Result<(ShardHeader, Option<u
         options: GeeOptions::new(lap, diag, cor),
     };
     h.validate()?;
-    Ok((h, hash))
+    Ok((h, hash, keep))
 }
 
 fn parse_hash(val: &str) -> Result<u64> {
@@ -208,27 +223,41 @@ impl GlobalsHeader {
     /// Parse and bounds-gate a `GLOBALS g=<hex> n=<n> k=<k>` line —
     /// nothing is allocated from the header before this passes.
     pub fn parse(header: &str) -> Result<GlobalsHeader> {
+        Self::parse_verb(header, "GLOBALS")
+    }
+
+    /// Parse a `RELABEL` header — the `GLOBALS` grammar under a
+    /// different verb: only the label frame follows (the cached degrees
+    /// are round-invariant), and `g=` declares the hash of the *new*
+    /// labels against the cached degrees.
+    pub fn parse_relabel(header: &str) -> Result<GlobalsHeader> {
+        Self::parse_verb(header, "RELABEL")
+    }
+
+    fn parse_verb(header: &str, verb: &str) -> Result<GlobalsHeader> {
         let mut parts = header.split_whitespace();
-        if parts.next() != Some("GLOBALS") {
-            bail!("expected GLOBALS, got '{header}'");
+        if parts.next() != Some(verb) {
+            bail!("expected {verb}, got '{header}'");
         }
         let (mut hash, mut n, mut k) = (None, None, None);
         for p in parts {
-            let (key, val) = p.split_once('=').context("GLOBALS args are key=val")?;
+            let (key, val) = p
+                .split_once('=')
+                .with_context(|| format!("{verb} args are key=val"))?;
             match key {
                 "g" => hash = Some(parse_hash(val)?),
                 "n" => n = Some(val.parse::<usize>().context("bad n")?),
                 "k" => k = Some(val.parse::<usize>().context("bad k")?),
-                other => bail!("unknown GLOBALS arg '{other}'"),
+                other => bail!("unknown {verb} arg '{other}'"),
             }
         }
         let h = GlobalsHeader {
-            hash: hash.context("GLOBALS requires g=")?,
-            n: n.context("GLOBALS requires n=")?,
-            k: k.context("GLOBALS requires k=")?,
+            hash: hash.with_context(|| format!("{verb} requires g="))?,
+            n: n.with_context(|| format!("{verb} requires n="))?,
+            k: k.with_context(|| format!("{verb} requires k="))?,
         };
         if h.n == 0 {
-            bail!("GLOBALS requires n >= 1");
+            bail!("{verb} requires n >= 1");
         }
         if h.n > MAX_FRAME_VERTICES {
             bail!("n={} exceeds the wire limit {MAX_FRAME_VERTICES}", h.n);
@@ -266,6 +295,20 @@ struct ConnState {
     wv: Vec<f64>,
     /// Frame chunk scratch (bounded by [`codec::FRAME_CHUNK_BYTES`]).
     chunk: Vec<u8>,
+    /// Edge payloads retained by `SHARD2 keep=1`, keyed by row range —
+    /// round r>1 of an iterative job re-embeds them via `RESHARD`
+    /// without the edges ever crossing the wire again. Structural
+    /// validity only depends on `n`, so the cache survives `RELABEL`
+    /// (the whole point) and is dropped when a `GLOBALS` re-dimensions
+    /// the connection or a v1 request clobbers the buffers.
+    cache: std::collections::HashMap<(usize, usize), CachedShard>,
+}
+
+/// One retained `SHARD2 keep=1` edge payload.
+struct CachedShard {
+    src: Vec<u32>,
+    dst: Vec<u32>,
+    w: Vec<f64>,
 }
 
 impl ConnState {
@@ -284,6 +327,7 @@ impl ConnState {
             g_k: 0,
             wv: Vec::new(),
             chunk: Vec::new(),
+            cache: std::collections::HashMap::new(),
         }
     }
 }
@@ -382,6 +426,10 @@ fn handle_connection(stream: TcpStream, text_only: bool) -> Result<()> {
             serve_globals(&line, &mut reader, &mut writer, &mut st)
         } else if !text_only && line.starts_with("SHARD2") {
             serve_shard2(&line, &mut reader, &mut writer, &mut st)
+        } else if !text_only && line.starts_with("RELABEL") {
+            serve_relabel(&line, &mut reader, &mut writer, &mut st)
+        } else if !text_only && line.starts_with("RESHARD") {
+            serve_reshard(&line, &mut writer, &mut st)
         } else {
             // v1 text request — or, in text-only mode, *any* v2 verb,
             // which fails here exactly as a pre-v2 daemon fails it
@@ -413,9 +461,11 @@ fn serve_shard(
     let (n, k) = (h.n, h.k);
 
     // a v1 request refills the label/degree buffers, clobbering any
-    // cached GLOBALS — drop the fingerprint so a later SHARD2 cannot
-    // reference vectors that are no longer there
+    // cached GLOBALS — drop the fingerprint (and the retained edge
+    // payloads that referenced its dimensions) so a later SHARD2 or
+    // RESHARD cannot reference vectors that are no longer there
     st.g_hash = None;
+    st.cache.clear();
 
     // globals: n labels, then n degrees — allocation tracks received data
     st.labels.clear();
@@ -498,6 +548,11 @@ fn serve_globals(
     // invalidate while loading: a failure mid-upload must not leave a
     // stale fingerprint over half-replaced buffers
     st.g_hash = None;
+    if h.n != st.g_n {
+        // retained edge payloads were validated against the old n; a
+        // re-dimensioned connection must not serve them
+        st.cache.clear();
+    }
     let mut hasher = codec::Fnv64::new();
 
     let len = codec::read_frame_len(reader, "GLOBALS labels frame")?;
@@ -556,34 +611,42 @@ fn serve_globals(
     Ok(())
 }
 
-/// Serve one `SHARD2` request against the connection's cached GLOBALS:
-/// header → edge frame → embed → `OK rows=` + Z frame.
-fn serve_shard2(
-    header: &str,
-    reader: &mut impl BufRead,
-    writer: &mut impl Write,
-    st: &mut ConnState,
-) -> Result<()> {
-    let (h, hash) = ShardHeader::parse_v2(header)?;
+/// Check a shard-family header's declared hash and dimensions against
+/// the connection's cached GLOBALS.
+fn check_cached_globals(verb: &str, h: &ShardHeader, hash: u64, st: &ConnState) -> Result<()> {
     match st.g_hash {
         Some(g) if g == hash => {}
         Some(g) => bail!(
-            "SHARD2 references GLOBALS {hash:016x} but this connection cached \
+            "{verb} references GLOBALS {hash:016x} but this connection cached \
              {g:016x} — resend GLOBALS"
         ),
         None => bail!(
-            "SHARD2 before GLOBALS: no global vectors cached on this connection"
+            "{verb} before GLOBALS: no global vectors cached on this connection"
         ),
     }
     if h.n != st.g_n || h.k != st.g_k {
         bail!(
-            "SHARD2 n={} k={} disagrees with cached GLOBALS n={} k={}",
+            "{verb} n={} k={} disagrees with cached GLOBALS n={} k={}",
             h.n,
             h.k,
             st.g_n,
             st.g_k
         );
     }
+    Ok(())
+}
+
+/// Serve one `SHARD2` request against the connection's cached GLOBALS:
+/// header → edge frame → embed → `OK rows=` + Z frame. With `keep=1`
+/// the decoded edge payload is retained for later `RESHARD` rounds.
+fn serve_shard2(
+    header: &str,
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    st: &mut ConnState,
+) -> Result<()> {
+    let (h, hash, keep) = ShardHeader::parse_v2(header)?;
+    check_cached_globals("SHARD2", &h, hash, st)?;
     let (n, k) = (h.n, h.k);
 
     let len = codec::read_frame_len(reader, "SHARD2 edge frame")?;
@@ -623,6 +686,126 @@ fn serve_shard2(
         &st.src,
         &st.dst,
         &st.w,
+        h.row0,
+        h.row1,
+        &st.labels,
+        &st.wv,
+        scale.as_deref(),
+        k,
+        &h.options,
+        &mut st.ws,
+        &mut st.out,
+    );
+
+    writeln!(writer, "OK rows={rows}")?;
+    codec::write_frame_f64s(writer, &st.out)?;
+
+    if keep {
+        // retain the decoded payload for RESHARD rounds (replacing any
+        // earlier payload kept for the same row range)
+        st.cache.insert(
+            (h.row0, h.row1),
+            CachedShard { src: st.src.clone(), dst: st.dst.clone(), w: st.w.clone() },
+        );
+    }
+    Ok(())
+}
+
+/// Serve a `RELABEL`: swap in a new label vector against the cached
+/// degrees — the round r>1 path of an iterative job, where only the
+/// n-vector of labels crosses the wire. The declared `g=` must equal
+/// the content hash of (new labels, cached degrees); on success the
+/// cached weight vector is re-derived and the connection's GLOBALS
+/// epoch moves to the new hash.
+fn serve_relabel(
+    header: &str,
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    st: &mut ConnState,
+) -> Result<()> {
+    let h = GlobalsHeader::parse_relabel(header)?;
+    if st.g_hash.is_none() {
+        bail!("RELABEL before GLOBALS: no global vectors cached on this connection");
+    }
+    if h.n != st.g_n || h.k != st.g_k {
+        bail!(
+            "RELABEL n={} k={} disagrees with cached GLOBALS n={} k={}",
+            h.n,
+            h.k,
+            st.g_n,
+            st.g_k
+        );
+    }
+    // invalidate while loading — a mid-frame failure closes the
+    // connection, but it must not close it with a stale fingerprint
+    st.g_hash = None;
+    let mut hasher = codec::Fnv64::new();
+
+    let len = codec::read_frame_len(reader, "RELABEL labels frame")?;
+    codec::check_frame_len(
+        len,
+        codec::LABEL_RECORD_BYTES,
+        (MAX_FRAME_VERTICES * codec::LABEL_RECORD_BYTES) as u64,
+        Some((h.n * codec::LABEL_RECORD_BYTES) as u64),
+        "RELABEL labels frame",
+    )?;
+    st.labels.clear();
+    let (labels, chunk) = (&mut st.labels, &mut st.chunk);
+    let k = h.k;
+    codec::read_frame_body(reader, len, chunk, "RELABEL labels frame", |bytes| {
+        hasher.update(bytes);
+        for rec in bytes.chunks_exact(codec::LABEL_RECORD_BYTES) {
+            let l = i32::from_le_bytes(rec.try_into().unwrap());
+            codec::validate_label(l, k)?;
+            labels.push(l);
+        }
+        Ok(())
+    })?;
+    // fold the round-invariant cached degrees into the hash — the
+    // declared fingerprint is over (labels, degrees), exactly what a
+    // full GLOBALS upload of the same vectors would hash
+    for &d in &st.deg {
+        hasher.update(&d.to_le_bytes());
+    }
+    let got = hasher.finish();
+    if got != h.hash {
+        bail!(
+            "RELABEL hash mismatch: header declared {:016x} but the new labels \
+             with the cached degrees hash to {got:016x}",
+            h.hash
+        );
+    }
+    st.wv = weight_values(&st.labels, h.k);
+    st.g_hash = Some(h.hash);
+    writeln!(writer, "OK")?;
+    Ok(())
+}
+
+/// Serve a `RESHARD`: embed a row range from the edge payload retained
+/// by an earlier `SHARD2 keep=1`, under the connection's *current*
+/// globals — no body follows the header, so an iterative round's
+/// per-shard cost is one header line down and one Z frame back.
+fn serve_reshard(header: &str, writer: &mut impl Write, st: &mut ConnState) -> Result<()> {
+    let (h, hash) = ShardHeader::parse_reshard(header)?;
+    check_cached_globals("RESHARD", &h, hash, st)?;
+    let k = h.k;
+    let Some(cached) = st.cache.get(&(h.row0, h.row1)) else {
+        bail!(
+            "RESHARD for rows [{}, {}) but no SHARD2 keep=1 payload is retained \
+             for that range on this connection",
+            h.row0,
+            h.row1
+        );
+    };
+
+    let scale = scale_from_deg(&st.deg, &h.options);
+    let rows = h.row1 - h.row0;
+    st.out.clear();
+    st.out.resize(rows * k, 0.0);
+    embed_shard(
+        &cached.src,
+        &cached.dst,
+        &cached.w,
         h.row0,
         h.row1,
         &st.labels,
@@ -752,7 +935,8 @@ pub(crate) fn send_globals(
 /// bit patterns. Requires [`send_globals`] to have shipped `hash` on
 /// this connection already. `scratch` is the caller's reused frame-chunk
 /// buffer (a slot holds one for its lifetime, so per-shard calls do not
-/// re-allocate it).
+/// re-allocate it). With `keep` the daemon retains the edge payload so
+/// later rounds can [`request_reshard`] the same row range.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn request_shard_v2(
     reader: &mut impl BufRead,
@@ -762,6 +946,7 @@ pub(crate) fn request_shard_v2(
     s: usize,
     hash: u64,
     scratch: &mut Vec<u8>,
+    keep: bool,
 ) -> Result<Vec<f64>> {
     let plan = &sp.plan;
     let (v0, v1) = plan.shard_range(s);
@@ -780,9 +965,12 @@ pub(crate) fn request_shard_v2(
     }
 
     let b = |v: bool| if v { "1" } else { "0" };
+    // keep= only goes out when asked for: the plain dispatch path keeps
+    // emitting byte-identical headers that pre-RESHARD daemons accept
+    let keep_arg = if keep { " keep=1" } else { "" };
     writeln!(
         writer,
-        "SHARD2 g={hash:016x} n={} k={} row0={v0} row1={v1} lap={} diag={} cor={}",
+        "SHARD2 g={hash:016x} n={} k={} row0={v0} row1={v1} lap={} diag={} cor={}{keep_arg}",
         plan.n,
         plan.k,
         b(opts.laplacian),
@@ -804,6 +992,66 @@ pub(crate) fn request_shard_v2(
     }
     writer.flush()?;
 
+    read_z_reply(reader, v1 - v0, plan.k, scratch)
+}
+
+/// Ship a new label vector for an iterative round — the `RELABEL` round
+/// trip. `hash` must be `codec::globals_hash(labels, deg)` over the
+/// *cached* (round-invariant) degrees; after `OK` every subsequent
+/// `SHARD2`/`RESHARD` on the connection references the new hash.
+pub(crate) fn send_relabel(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    labels: &[i32],
+    n: usize,
+    k: usize,
+    hash: u64,
+) -> Result<()> {
+    writeln!(writer, "RELABEL g={hash:016x} n={n} k={k}")?;
+    codec::write_frame_i32s(writer, labels)?;
+    writer.flush()?;
+    let mut line = String::new();
+    let t = read_trimmed(reader, &mut line).context("RELABEL reply")?;
+    if t != "OK" {
+        bail!("worker rejected RELABEL: {t}");
+    }
+    Ok(())
+}
+
+/// Client side of one `RESHARD` round trip: one header line out (no
+/// edges — the daemon re-embeds the payload it retained from `SHARD2
+/// keep=1`), `OK rows=` + Z frame back.
+pub(crate) fn request_reshard(
+    reader: &mut impl BufRead,
+    writer: &mut impl Write,
+    plan: &super::plan::ShardPlan,
+    opts: &GeeOptions,
+    s: usize,
+    hash: u64,
+    scratch: &mut Vec<u8>,
+) -> Result<Vec<f64>> {
+    let (v0, v1) = plan.shard_range(s);
+    let b = |v: bool| if v { "1" } else { "0" };
+    writeln!(
+        writer,
+        "RESHARD g={hash:016x} n={} k={} row0={v0} row1={v1} lap={} diag={} cor={}",
+        plan.n,
+        plan.k,
+        b(opts.laplacian),
+        b(opts.diagonal),
+        b(opts.correlation)
+    )?;
+    writer.flush()?;
+    read_z_reply(reader, v1 - v0, plan.k, scratch)
+}
+
+/// Parse the `OK rows=` + Z-frame reply shared by `SHARD2`/`RESHARD`.
+fn read_z_reply(
+    reader: &mut impl BufRead,
+    rows: usize,
+    k: usize,
+    scratch: &mut Vec<u8>,
+) -> Result<Vec<f64>> {
     let mut line = String::new();
     let t = read_trimmed(reader, &mut line).context("shard reply header")?;
     let rows_claim: usize = t
@@ -811,11 +1059,9 @@ pub(crate) fn request_shard_v2(
         .with_context(|| format!("worker said: {t}"))?
         .parse()
         .context("bad rows count")?;
-    let rows = v1 - v0;
     if rows_claim != rows {
         bail!("worker replied {rows_claim} rows, expected {rows}");
     }
-    let k = plan.k;
     let expect = (rows * k * codec::F64_RECORD_BYTES) as u64;
     let len = codec::read_frame_len(reader, "Z frame")?;
     codec::check_frame_len(len, codec::F64_RECORD_BYTES, expect, Some(expect), "Z frame")?;
@@ -960,6 +1206,7 @@ mod tests {
                     s,
                     hash,
                     &mut scratch,
+                    false,
                 )
                 .unwrap();
                 assert_eq!(
@@ -1156,11 +1403,162 @@ mod tests {
         assert!(ShardHeader::parse("SHARD g=1 n=5 k=2 row0=0 row1=5").is_err());
         // and SHARD2 requires it
         assert!(ShardHeader::parse_v2("SHARD2 n=5 k=2 row0=0 row1=5").is_err());
-        let (h2, hash) =
+        let (h2, hash, keep) =
             ShardHeader::parse_v2("SHARD2 g=ab n=5 k=2 row0=0 row1=5 lap=1").unwrap();
         assert_eq!(hash, 0xab);
         assert_eq!((h2.n, h2.k, h2.row0, h2.row1), (5, 2, 0, 5));
         assert!(h2.options.laplacian);
+        assert!(!keep, "keep defaults to off");
+        let (_, _, keep) =
+            ShardHeader::parse_v2("SHARD2 g=ab n=5 k=2 row0=0 row1=5 keep=1").unwrap();
+        assert!(keep);
+        // keep= is v2-only grammar, and RESHARD shares the SHARD2 shape
+        assert!(ShardHeader::parse("SHARD n=5 k=2 row0=0 row1=5 keep=1").is_err());
+        let (h3, hash3) =
+            ShardHeader::parse_reshard("RESHARD g=cd n=5 k=2 row0=2 row1=5").unwrap();
+        assert_eq!(hash3, 0xcd);
+        assert_eq!((h3.row0, h3.row1), (2, 5));
+        assert!(ShardHeader::parse_reshard("RESHARD n=5 k=2 row0=0 row1=5").is_err());
+        // RELABEL shares the GLOBALS grammar under its own verb
+        let r = GlobalsHeader::parse_relabel("RELABEL g=0f n=7 k=3").unwrap();
+        assert_eq!((r.hash, r.n, r.k), (0x0f, 7, 3));
+        assert!(GlobalsHeader::parse_relabel("GLOBALS g=0f n=7 k=3").is_err());
+    }
+
+    #[test]
+    fn relabel_reshard_rounds_are_bitwise_with_edges_shipped_once() {
+        // the iterative-job wire pattern end to end: GLOBALS + SHARD2
+        // keep=1 once, then per round RELABEL (labels only) + RESHARD
+        // per shard — every round's rows bitwise vs a from-scratch
+        // fused embed under that round's labels
+        let dir = std::env::temp_dir()
+            .join(format!("gee_remote_reshard_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = random_graph(554, 70, 400, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 2, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        let opts = GeeOptions::new(true, false, true);
+        let mut scratch = Vec::new();
+
+        // round 1: globals + edges, retained
+        let hash = codec::globals_hash(&sp.labels, &sp.plan.deg);
+        send_globals(&mut reader, &mut writer, &sp, hash).unwrap();
+        let whole = SparseGee::fast().embed(&g, &opts);
+        for s in 0..sp.plan.shards() {
+            let (v0, v1) = sp.plan.shard_range(s);
+            let rows = request_shard_v2(
+                &mut reader, &mut writer, &sp, &opts, s, hash, &mut scratch, true,
+            )
+            .unwrap();
+            assert_eq!(rows, whole.data[v0 * g.k..v1 * g.k].to_vec());
+        }
+
+        // rounds 2..: rotate every label, ship only the label vector
+        let mut labels = sp.labels.clone();
+        for round in 0..3 {
+            for l in labels.iter_mut() {
+                if *l >= 0 {
+                    *l = (*l + 1) % g.k as i32;
+                }
+            }
+            let rhash = codec::globals_hash(&labels, &sp.plan.deg);
+            send_relabel(&mut reader, &mut writer, &labels, g.n, g.k, rhash).unwrap();
+            let mut gl = g.clone();
+            gl.labels.copy_from_slice(&labels);
+            let whole = SparseGee::fast().embed(&gl, &opts);
+            for s in 0..sp.plan.shards() {
+                let (v0, v1) = sp.plan.shard_range(s);
+                let rows = request_reshard(
+                    &mut reader, &mut writer, &sp.plan, &opts, s, rhash, &mut scratch,
+                )
+                .unwrap();
+                assert_eq!(
+                    rows,
+                    whole.data[v0 * g.k..v1 * g.k].to_vec(),
+                    "round {round} shard {s} drifted"
+                );
+            }
+        }
+        server.stop();
+    }
+
+    #[test]
+    fn reshard_without_retained_payload_is_a_typed_error() {
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let (mut reader, mut writer) = raw_conn(&server);
+        let (labels, deg) = (vec![0, 1, -1], vec![1.0, 2.0, 0.5]);
+        let hash = codec::globals_hash(&labels, &deg);
+        writeln!(writer, "GLOBALS g={hash:016x} n=3 k=2").unwrap();
+        codec::write_frame_i32s(&mut writer, &labels).unwrap();
+        codec::write_frame_f64s(&mut writer, &deg).unwrap();
+        writer.flush().unwrap();
+        assert_eq!(read_reply(&mut reader), "OK");
+        // nothing was kept for [0,2): RESHARD must fail with a pointer
+        // at the SHARD2 keep=1 contract
+        writeln!(writer, "RESHARD g={hash:016x} n=3 k=2 row0=0 row1=2").unwrap();
+        writer.flush().unwrap();
+        let t = read_reply(&mut reader);
+        assert!(t.starts_with("ERR"), "{t}");
+        assert!(t.contains("keep=1"), "{t}");
+        server.stop();
+    }
+
+    #[test]
+    fn relabel_guards_hash_epoch_and_ordering() {
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        // RELABEL before any GLOBALS: typed rejection
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            writeln!(writer, "RELABEL g=01 n=3 k=2").unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("before GLOBALS"), "{t}");
+        }
+        // RELABEL whose declared hash disagrees with (labels, cached deg)
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            let (labels, deg) = (vec![0, 1, -1], vec![1.0, 2.0, 0.5]);
+            let hash = codec::globals_hash(&labels, &deg);
+            writeln!(writer, "GLOBALS g={hash:016x} n=3 k=2").unwrap();
+            codec::write_frame_i32s(&mut writer, &labels).unwrap();
+            codec::write_frame_f64s(&mut writer, &deg).unwrap();
+            writer.flush().unwrap();
+            assert_eq!(read_reply(&mut reader), "OK");
+            let new_labels = vec![1, 0, -1];
+            writeln!(writer, "RELABEL g={:016x} n=3 k=2", hash ^ 5).unwrap();
+            codec::write_frame_i32s(&mut writer, &new_labels).unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("hash mismatch"), "{t}");
+        }
+        // dimension drift is rejected before any frame is read
+        {
+            let (mut reader, mut writer) = raw_conn(&server);
+            let (labels, deg) = (vec![0, 1, -1], vec![1.0, 2.0, 0.5]);
+            let hash = codec::globals_hash(&labels, &deg);
+            writeln!(writer, "GLOBALS g={hash:016x} n=3 k=2").unwrap();
+            codec::write_frame_i32s(&mut writer, &labels).unwrap();
+            codec::write_frame_f64s(&mut writer, &deg).unwrap();
+            writer.flush().unwrap();
+            assert_eq!(read_reply(&mut reader), "OK");
+            writeln!(writer, "RELABEL g={hash:016x} n=4 k=2").unwrap();
+            writer.flush().unwrap();
+            let t = read_reply(&mut reader);
+            assert!(t.starts_with("ERR"), "{t}");
+            assert!(t.contains("disagrees"), "{t}");
+        }
+        server.stop();
     }
 
     #[test]

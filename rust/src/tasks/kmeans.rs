@@ -1,8 +1,28 @@
 //! Lloyd's k-means with k-means++ initialization — vertex clustering on
 //! GEE embeddings (the paper's cited downstream task; GEE+k-means is the
 //! community-detection recipe of Shen et al.).
+//!
+//! Two entry points: [`kmeans`] allocates its result, [`kmeans_into`]
+//! reuses a caller-held [`KMeansScratch`] so the iterative cluster loop
+//! (`gee::iterate`) performs no per-round allocation once the scratch is
+//! warm — the same contract the embed engines give via `EmbedWorkspace`.
+//!
+//! Determinism contract (the cluster lane's fleet parity rests on it):
+//! * assignment ties break to the **lowest centroid index** (strict `<`
+//!   scan in index order), so equidistant points land identically on
+//!   every run;
+//! * the assignment step may fan rows across threads
+//!   ([`KMeansConfig::threads`]) — each row's scan is independent, so
+//!   assignments, centroids, and inertia are **bitwise-identical at any
+//!   thread count** (inertia is re-summed serially from the per-point
+//!   distances, never from per-thread partials);
+//! * an emptied centroid is re-seeded from the farthest point under the
+//!   *pre-update* assignment distances, first-maximum wins, and the
+//!   chosen point is poisoned so a second empty centroid in the same
+//!   iteration picks a different point.
 
 use crate::sparse::Dense;
+use crate::sparse::partition::{even_chunks, resolve_threads};
 use crate::util::rng::Rng;
 
 /// k-means configuration.
@@ -13,11 +33,14 @@ pub struct KMeansConfig {
     /// Relative change of total inertia that counts as converged.
     pub tol: f64,
     pub seed: u64,
+    /// Worker threads for the assignment step (0 = all cores). Results
+    /// are bitwise-identical at any thread count; this only buys speed.
+    pub threads: usize,
 }
 
 impl KMeansConfig {
     pub fn new(k: usize) -> Self {
-        KMeansConfig { k, max_iters: 100, tol: 1e-6, seed: 0xC1_0551 }
+        KMeansConfig { k, max_iters: 100, tol: 1e-6, seed: 0xC1_0551, threads: 1 }
     }
 }
 
@@ -30,29 +53,209 @@ pub struct KMeansResult {
     pub iterations: usize,
 }
 
+/// Reusable buffers for [`kmeans_into`]: every field keeps its capacity
+/// across calls, so a loop clustering same-shape embeddings settles into
+/// zero steady-state allocation.
+#[derive(Debug)]
+pub struct KMeansScratch {
+    /// Cluster id per row of the most recent `kmeans_into` call.
+    pub assignments: Vec<usize>,
+    /// Centroids (k × d) of the most recent call.
+    pub centroids: Dense,
+    /// Per-point squared distance to its assigned centroid.
+    dist2: Vec<f64>,
+    counts: Vec<usize>,
+    sums: Dense,
+}
+
+impl KMeansScratch {
+    pub fn new() -> KMeansScratch {
+        KMeansScratch {
+            assignments: Vec::new(),
+            centroids: Dense::zeros(0, 0),
+            dist2: Vec::new(),
+            counts: Vec::new(),
+            sums: Dense::zeros(0, 0),
+        }
+    }
+}
+
+impl Default for KMeansScratch {
+    fn default() -> KMeansScratch {
+        KMeansScratch::new()
+    }
+}
+
+/// Shape a Dense to `r × c` and zero it, reusing capacity.
+fn reset_dense(d: &mut Dense, r: usize, c: usize) {
+    d.nrows = r;
+    d.ncols = c;
+    d.data.clear();
+    d.data.resize(r * c, 0.0);
+}
+
 #[inline]
 fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
     a.iter().zip(b.iter()).map(|(x, y)| (x - y) * (x - y)).sum()
 }
 
-/// Run k-means on the rows of `x`.
-pub fn kmeans(x: &Dense, cfg: &KMeansConfig) -> KMeansResult {
+/// Nearest-centroid scan for rows `[i0, i0 + len)`, writing into the
+/// caller's disjoint `assignments`/`dist2` windows. Strict `<` keeps the
+/// lowest-index centroid on ties; each row is independent, which is the
+/// whole bitwise-at-any-thread-count argument.
+fn assign_rows(
+    x: &Dense,
+    centroids: &Dense,
+    k: usize,
+    i0: usize,
+    assignments: &mut [usize],
+    dist2: &mut [f64],
+) {
+    for (j, (a, d2)) in assignments.iter_mut().zip(dist2.iter_mut()).enumerate() {
+        let row = x.row(i0 + j);
+        let mut best = 0usize;
+        let mut best_d = f64::INFINITY;
+        for c in 0..k {
+            let d = sq_dist(row, centroids.row(c));
+            if d < best_d {
+                best_d = d;
+                best = c;
+            }
+        }
+        *a = best;
+        *d2 = best_d;
+    }
+}
+
+/// The assignment step, fanned over near-equal row chunks when the
+/// config asks for threads and the input is big enough to pay for the
+/// spawns. Serial and parallel paths produce identical bytes.
+fn assign_step(
+    x: &Dense,
+    centroids: &Dense,
+    k: usize,
+    cfg: &KMeansConfig,
+    assignments: &mut [usize],
+    dist2: &mut [f64],
+) {
+    let n = x.nrows;
+    let threads = resolve_threads(cfg.threads).min(n.max(1));
+    if threads <= 1 || n < 2 * PAR_MIN_ROWS {
+        assign_rows(x, centroids, k, 0, assignments, dist2);
+        return;
+    }
+    let bounds = even_chunks(n, threads);
+    std::thread::scope(|sc| {
+        let mut arest: &mut [usize] = assignments;
+        let mut drest: &mut [f64] = dist2;
+        for w in bounds.windows(2) {
+            let (i0, i1) = (w[0], w[1]);
+            let (a, ar) = arest.split_at_mut(i1 - i0);
+            let (d, dr) = drest.split_at_mut(i1 - i0);
+            arest = ar;
+            drest = dr;
+            sc.spawn(move || assign_rows(x, centroids, k, i0, a, d));
+        }
+    });
+}
+
+/// Rows below which the assignment step stays serial regardless of the
+/// thread budget — thread spawns cost more than the scan they'd split.
+const PAR_MIN_ROWS: usize = 1 << 10;
+
+/// Lloyd iterations over pre-seeded `s.centroids`. Returns
+/// `(inertia, iterations)`; assignments/centroids are left in `s`.
+fn lloyd(x: &Dense, cfg: &KMeansConfig, k: usize, s: &mut KMeansScratch) -> (f64, usize) {
+    let n = x.nrows;
+    let d = x.ncols;
+    s.assignments.clear();
+    s.assignments.resize(n, 0);
+    s.dist2.clear();
+    s.dist2.resize(n, 0.0);
+    s.counts.clear();
+    s.counts.resize(k, 0);
+    reset_dense(&mut s.sums, k, d);
+
+    let mut inertia = f64::INFINITY;
+    let mut iterations = 0;
+    for it in 0..cfg.max_iters {
+        iterations = it + 1;
+        // assign (possibly parallel; bitwise-stable either way), then sum
+        // inertia serially from the per-point distances so the total is a
+        // pure function of the assignment, not of the chunking
+        assign_step(x, &s.centroids, k, cfg, &mut s.assignments, &mut s.dist2);
+        let new_inertia: f64 = s.dist2.iter().sum();
+        // update
+        s.counts.fill(0);
+        s.sums.data.fill(0.0);
+        for i in 0..n {
+            let c = s.assignments[i];
+            s.counts[c] += 1;
+            for (acc, &v) in s.sums.row_mut(c).iter_mut().zip(x.row(i)) {
+                *acc += v;
+            }
+        }
+        let mut reseeded = false;
+        for c in 0..k {
+            if s.counts[c] > 0 {
+                let inv = 1.0 / s.counts[c] as f64;
+                for (dst, &v) in s.centroids.row_mut(c).iter_mut().zip(s.sums.row(c)) {
+                    *dst = v * inv;
+                }
+            } else {
+                // re-seed the emptied centroid from the farthest point
+                // under the assignment distances just computed (a
+                // deterministic pre-update baseline): first maximum wins,
+                // and the chosen point is poisoned so a second empty
+                // centroid this iteration picks a different point
+                let mut far = 0usize;
+                let mut far_d = f64::NEG_INFINITY;
+                for (i, &d2) in s.dist2.iter().enumerate() {
+                    if d2 > far_d {
+                        far_d = d2;
+                        far = i;
+                    }
+                }
+                s.centroids.row_mut(c).copy_from_slice(x.row(far));
+                s.dist2[far] = f64::NEG_INFINITY;
+                reseeded = true;
+            }
+        }
+        // converged? (never while a reseed is pending: the fresh centroid
+        // must get at least one assignment pass)
+        if !reseeded
+            && inertia.is_finite()
+            && (inertia - new_inertia).abs() <= cfg.tol * inertia.max(1e-12)
+        {
+            inertia = new_inertia;
+            break;
+        }
+        inertia = new_inertia;
+    }
+    (inertia, iterations)
+}
+
+/// Run k-means on the rows of `x` with scratch borrowed from `s` — the
+/// allocation-free lane. Returns `(inertia, iterations)`; assignments
+/// and centroids are left in the scratch.
+pub fn kmeans_into(x: &Dense, cfg: &KMeansConfig, s: &mut KMeansScratch) -> (f64, usize) {
     let n = x.nrows;
     let d = x.ncols;
     let k = cfg.k.min(n.max(1));
     let mut rng = Rng::new(cfg.seed);
 
     // --- k-means++ seeding
-    let mut centroids = Dense::zeros(k, d);
+    reset_dense(&mut s.centroids, k, d);
     let first = rng.below(n);
-    centroids.row_mut(0).copy_from_slice(x.row(first));
-    let mut dist2: Vec<f64> = (0..n).map(|i| sq_dist(x.row(i), centroids.row(0))).collect();
+    s.centroids.row_mut(0).copy_from_slice(x.row(first));
+    s.dist2.clear();
+    s.dist2.extend((0..n).map(|i| sq_dist(x.row(i), s.centroids.row(0))));
     for c in 1..k {
-        let total: f64 = dist2.iter().sum();
+        let total: f64 = s.dist2.iter().sum();
         let pick = if total > 0.0 {
             let mut t = rng.f64() * total;
             let mut chosen = n - 1;
-            for (i, &d2) in dist2.iter().enumerate() {
+            for (i, &d2) in s.dist2.iter().enumerate() {
                 t -= d2;
                 if t <= 0.0 {
                     chosen = i;
@@ -63,73 +266,30 @@ pub fn kmeans(x: &Dense, cfg: &KMeansConfig) -> KMeansResult {
         } else {
             rng.below(n)
         };
-        centroids.row_mut(c).copy_from_slice(x.row(pick));
+        s.centroids.row_mut(c).copy_from_slice(x.row(pick));
         for i in 0..n {
-            let nd = sq_dist(x.row(i), centroids.row(c));
-            if nd < dist2[i] {
-                dist2[i] = nd;
+            let nd = sq_dist(x.row(i), s.centroids.row(c));
+            if nd < s.dist2[i] {
+                s.dist2[i] = nd;
             }
         }
     }
 
     // --- Lloyd iterations
-    let mut assignments = vec![0usize; n];
-    let mut inertia = f64::INFINITY;
-    let mut iterations = 0;
-    for it in 0..cfg.max_iters {
-        iterations = it + 1;
-        // assign
-        let mut new_inertia = 0.0;
-        for i in 0..n {
-            let mut best = 0usize;
-            let mut best_d = f64::INFINITY;
-            for c in 0..k {
-                let d2 = sq_dist(x.row(i), centroids.row(c));
-                if d2 < best_d {
-                    best_d = d2;
-                    best = c;
-                }
-            }
-            assignments[i] = best;
-            new_inertia += best_d;
-        }
-        // update
-        let mut counts = vec![0usize; k];
-        let mut sums = Dense::zeros(k, d);
-        for i in 0..n {
-            let c = assignments[i];
-            counts[c] += 1;
-            for (s, &v) in sums.row_mut(c).iter_mut().zip(x.row(i)) {
-                *s += v;
-            }
-        }
-        for c in 0..k {
-            if counts[c] > 0 {
-                for s in sums.row_mut(c) {
-                    *s /= counts[c] as f64;
-                }
-                centroids.row_mut(c).copy_from_slice(sums.row(c));
-            } else {
-                // re-seed empty cluster at the farthest point
-                let far = (0..n)
-                    .max_by(|&a, &b| {
-                        sq_dist(x.row(a), centroids.row(assignments[a]))
-                            .partial_cmp(&sq_dist(x.row(b), centroids.row(assignments[b])))
-                            .unwrap()
-                    })
-                    .unwrap_or(0);
-                centroids.row_mut(c).copy_from_slice(x.row(far));
-            }
-        }
-        // converged?
-        if inertia.is_finite() && (inertia - new_inertia).abs() <= cfg.tol * inertia.max(1e-12) {
-            inertia = new_inertia;
-            break;
-        }
-        inertia = new_inertia;
-    }
+    lloyd(x, cfg, k, s)
+}
 
-    KMeansResult { assignments, centroids, inertia, iterations }
+/// Run k-means on the rows of `x` (allocating convenience front-end over
+/// [`kmeans_into`]).
+pub fn kmeans(x: &Dense, cfg: &KMeansConfig) -> KMeansResult {
+    let mut s = KMeansScratch::new();
+    let (inertia, iterations) = kmeans_into(x, cfg, &mut s);
+    KMeansResult {
+        assignments: s.assignments,
+        centroids: s.centroids,
+        inertia,
+        iterations,
+    }
 }
 
 #[cfg(test)]
@@ -183,5 +343,110 @@ mod tests {
         let x = Dense::from_vec(4, 1, vec![0.0, 5.0, 10.0, 15.0]);
         let res = kmeans(&x, &KMeansConfig::new(4));
         assert!(res.inertia < 1e-9, "inertia {}", res.inertia);
+    }
+
+    #[test]
+    fn scratch_lane_matches_allocating_lane_and_reuses_buffers() {
+        let x = blobs();
+        let cfg = KMeansConfig::new(2);
+        let base = kmeans(&x, &cfg);
+        let mut s = KMeansScratch::new();
+        for _ in 0..3 {
+            let (inertia, iterations) = kmeans_into(&x, &cfg, &mut s);
+            assert_eq!(s.assignments, base.assignments);
+            assert_eq!(s.centroids.data, base.centroids.data);
+            assert!((inertia - base.inertia).abs() == 0.0);
+            assert_eq!(iterations, base.iterations);
+        }
+    }
+
+    #[test]
+    fn parallel_assignment_is_bitwise_at_any_thread_count() {
+        // a big-enough random cloud that the parallel path actually runs
+        // (n >= 2 * PAR_MIN_ROWS), checked against the serial path
+        let n = 2 * PAR_MIN_ROWS + 57;
+        let mut rng = Rng::new(991);
+        let data: Vec<f64> = (0..n * 3).map(|_| rng.f64() * 4.0).collect();
+        let x = Dense::from_vec(n, 3, data);
+        let serial = kmeans(&x, &KMeansConfig { threads: 1, ..KMeansConfig::new(5) });
+        for threads in [2, 3, 8] {
+            let par = kmeans(&x, &KMeansConfig { threads, ..KMeansConfig::new(5) });
+            assert_eq!(par.assignments, serial.assignments, "threads={threads}");
+            assert_eq!(par.centroids.data, serial.centroids.data, "threads={threads}");
+            assert_eq!(
+                par.inertia.to_bits(),
+                serial.inertia.to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(par.iterations, serial.iterations, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn ties_assign_to_lowest_centroid_index() {
+        // two identical centroids: every point is equidistant, so all
+        // assignments must land on index 0 (then centroid 1 empties and
+        // the reseed path takes over — covered below)
+        let x = Dense::from_vec(4, 1, vec![1.0, 1.0, 1.0, 9.0]);
+        let centroids = Dense::from_vec(2, 1, vec![1.0, 1.0]);
+        let mut assignments = vec![0usize; 4];
+        let mut dist2 = vec![0.0f64; 4];
+        assign_rows(&x, &centroids, 2, 0, &mut assignments, &mut dist2);
+        assert_eq!(assignments, vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn emptied_centroid_reseeds_from_farthest_point() {
+        // regression for the empty-cluster path: centroids [0, 0, 10]
+        // tie points 0.0/0.2 onto centroid 0 (lowest index wins), so
+        // centroid 1 is emptied and must be re-seeded at the farthest
+        // point (100.0) — deterministically, from the pre-update
+        // assignment distances. The loop then converges with every
+        // cluster populated.
+        let x = Dense::from_vec(5, 1, vec![0.0, 0.2, 10.0, 10.2, 100.0]);
+        let mut s = KMeansScratch::new();
+        s.centroids = Dense::from_vec(3, 1, vec![0.0, 0.0, 10.0]);
+        let cfg = KMeansConfig::new(3);
+        let (inertia, _) = lloyd(&x, &cfg, 3, &mut s);
+        assert_eq!(s.assignments, vec![0, 0, 2, 2, 1]);
+        assert_eq!(s.centroids.get(1, 0), 100.0, "reseed must land on the outlier");
+        let mut counts = [0usize; 3];
+        s.assignments.iter().for_each(|&c| counts[c] += 1);
+        assert!(counts.iter().all(|&c| c > 0), "no cluster may stay empty: {counts:?}");
+        assert!(inertia < 0.1, "inertia {inertia}");
+    }
+
+    #[test]
+    fn two_emptied_centroids_reseed_from_distinct_points() {
+        // all three centroids identical: clusters 1 and 2 are both
+        // emptied in the same iteration. Poisoning the first reseed's
+        // point forces the second onto a *different* point — without it
+        // both would grab the same outlier and one stayed empty.
+        let x = Dense::from_vec(5, 1, vec![0.0, 0.2, 10.0, 10.2, 100.0]);
+        let mut s = KMeansScratch::new();
+        s.centroids = Dense::from_vec(3, 1, vec![0.0, 0.0, 0.0]);
+        let cfg = KMeansConfig::new(3);
+        lloyd(&x, &cfg, 3, &mut s);
+        let mut counts = [0usize; 3];
+        s.assignments.iter().for_each(|&c| counts[c] += 1);
+        assert!(counts.iter().all(|&c| c > 0), "no cluster may stay empty: {counts:?}");
+        // the partition must be the natural one: {0,.2} {10,10.2} {100}
+        assert_eq!(s.assignments[0], s.assignments[1]);
+        assert_eq!(s.assignments[2], s.assignments[3]);
+        assert_ne!(s.assignments[0], s.assignments[2]);
+        assert_ne!(s.assignments[0], s.assignments[4]);
+        assert_ne!(s.assignments[2], s.assignments[4]);
+    }
+
+    #[test]
+    fn reseed_is_deterministic_across_runs() {
+        let x = Dense::from_vec(5, 1, vec![0.0, 0.2, 10.0, 10.2, 100.0]);
+        let run = || {
+            let mut s = KMeansScratch::new();
+            s.centroids = Dense::from_vec(3, 1, vec![0.0, 0.0, 10.0]);
+            lloyd(&x, &KMeansConfig::new(3), 3, &mut s);
+            (s.assignments.clone(), s.centroids.data.clone())
+        };
+        assert_eq!(run(), run());
     }
 }

@@ -149,4 +149,65 @@ mod tests {
         assert_eq!(a, vec![0]);
         assert_eq!(b, vec![1]);
     }
+
+    #[test]
+    fn ari_symmetric_under_argument_swap() {
+        let a: Vec<usize> = (0..30).map(|i| i % 3).collect();
+        let b: Vec<usize> = (0..30).map(|i| i / 10).collect();
+        let ab = adjusted_rand_index(&a, &b);
+        let ba = adjusted_rand_index(&b, &a);
+        assert!((ab - ba).abs() < 1e-12, "{ab} vs {ba}");
+    }
+
+    #[test]
+    fn ari_compares_i32_labels_against_usize_assignments() {
+        // the cluster loop's exact shape: planted i32 labels (with a -1
+        // unknown) vs k-means usize assignments cast to i32, joined
+        // through paired_labels
+        let truth: Vec<i32> = vec![0, 0, 0, -1, 1, 1, 1, 2, 2, 2];
+        let assignments: Vec<usize> = vec![2, 2, 2, 0, 0, 0, 0, 1, 1, 1];
+        let pred: Vec<i32> = assignments.iter().map(|&c| c as i32).collect();
+        let (a, b) = paired_labels(&truth, &pred);
+        assert_eq!(a.len(), 9, "the -1 pair must be dropped");
+        // perfect partition match up to label names -> ARI exactly 1
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+        // flipping one prediction must strictly lower it
+        let mut worse = b.clone();
+        worse[0] = 1;
+        assert!(adjusted_rand_index(&a, &worse) < 1.0);
+    }
+
+    #[test]
+    fn ari_degenerate_single_cluster_both_sides() {
+        // one cluster on both sides: max_index == expected, identical
+        // partitions -> 1 by convention
+        let a = vec![0usize; 8];
+        let b = vec![3usize; 8];
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_degenerate_all_singletons_both_sides() {
+        // every point its own cluster on both sides: again a degenerate
+        // agreement (sum_ij == expected == 0) -> 1
+        let a: Vec<usize> = (0..8).collect();
+        let b: Vec<usize> = (0..8).rev().collect();
+        assert!((adjusted_rand_index(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_single_cluster_vs_all_singletons_is_zero() {
+        // maximally uninformative pair: one side lumps, the other
+        // splits; the adjusted index's degenerate branch returns 0
+        let a = vec![0usize; 8];
+        let b: Vec<usize> = (0..8).collect();
+        let ari = adjusted_rand_index(&a, &b);
+        assert!(ari.abs() < 1e-12, "ari {ari}");
+        assert!(adjusted_rand_index(&b, &a).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_empty_input_is_zero() {
+        assert_eq!(adjusted_rand_index(&[], &[]), 0.0);
+    }
 }
