@@ -1,0 +1,214 @@
+//! Bench: recovery time under wire failures (ISSUE 10 satellite).
+//!
+//! Four rows, all against live loopback servers:
+//!
+//! * `clean` — fleet embed over two healthy daemons: the baseline.
+//! * `daemon-kill` — one daemon accepts and immediately dies (fault plan
+//!   `eof=1.0 grace=0`, the accept-then-die flap): time until the
+//!   endpoint is condemned, its shards requeue onto the survivor, and
+//!   the job completes — still bitwise-identical.
+//! * `stall` — one daemon stalls every op past the hello budget: time
+//!   for the deadline-driven condemnation path (each probe burns a
+//!   `hello` timeout instead of an instant EOF).
+//! * `slow-loris` — a coordinator connection that trickles a partial
+//!   request line and stops: time until the header budget reaps it
+//!   (measured via the `wire_loris_drops` counter).
+//!
+//! The fleet rows gate on bitwise equality with `SparseGee::fast()` —
+//! recovery must never cost correctness. `speedup` records
+//! clean-vs-row slowdown. Results append to `BENCH_gee.json`;
+//! `QUICK=1` trims sizes for the CI smoke leg.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gee_sparse::coordinator::server::TcpServer;
+use gee_sparse::coordinator::{EmbedService, ServiceConfig};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::shard::{
+    embed_remote, spill::spill_from_graph, DaemonConfig, DispatchConfig,
+    ShardServer, SpillConfig, SpilledShards,
+};
+use gee_sparse::util::benchlog::{quick_mode, write_records, BenchRecord};
+use gee_sparse::util::fault::FaultPlan;
+use gee_sparse::util::retry::{BackoffPolicy, Deadlines};
+use gee_sparse::util::timing::{bench_runs, secs, Stats};
+
+fn faulty_daemon(spec: &str) -> ShardServer {
+    let plan = Arc::new(FaultPlan::parse(spec).expect("fault plan"));
+    ShardServer::start_with_config(
+        "127.0.0.1:0",
+        DaemonConfig {
+            fault: Some(plan),
+            idle_timeout: Some(Duration::from_secs(4)),
+            io_timeout: Some(Duration::from_secs(2)),
+            ..DaemonConfig::default()
+        },
+    )
+    .expect("daemon")
+}
+
+fn fleet_config(endpoints: Vec<String>) -> DispatchConfig {
+    DispatchConfig {
+        deadlines: Deadlines::tight(),
+        retry: BackoffPolicy {
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(40),
+            attempts: 2,
+            seed: 0xC4A05,
+        },
+        ..DispatchConfig::new(endpoints)
+    }
+}
+
+/// One timed fleet embed, gated bitwise against the clean reference.
+fn fleet_row(
+    reps: usize,
+    sp: &SpilledShards,
+    opts: &GeeOptions,
+    endpoints: Vec<String>,
+    want: &[f64],
+    row: &str,
+) -> Stats {
+    let cfg = fleet_config(endpoints);
+    Stats::from_runs(&bench_runs(0, reps, || {
+        let z = embed_remote(sp, opts, &cfg).expect("fleet embed");
+        assert_eq!(&z.data[..], want, "{row}: recovery must stay bitwise");
+    }))
+}
+
+fn main() {
+    let quick = quick_mode();
+    let reps = if quick { 2 } else { 3 };
+    let n = if quick { 500 } else { 1_500 };
+    println!("== bench chaos_recovery (reps={reps}) ==\n");
+
+    let g = generate_sbm(&SbmParams::paper(n), 23);
+    let opts = GeeOptions::ALL;
+    let want = SparseGee::fast().embed(&g, &opts);
+    let dir = std::env::temp_dir()
+        .join(format!("gee_chaos_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("tmpdir");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 4, ..SpillConfig::new(&dir) },
+    )
+    .expect("spill");
+    println!("-- SBM: n={} edges={} k={}, 4 shards", g.n, g.num_edges(), g.k);
+
+    let mut results: Vec<(String, Stats)> = Vec::new();
+
+    // clean baseline: two healthy daemons
+    {
+        let a = ShardServer::start("127.0.0.1:0").expect("daemon");
+        let b = ShardServer::start("127.0.0.1:0").expect("daemon");
+        let st = fleet_row(
+            reps,
+            &sp,
+            &opts,
+            vec![a.addr().to_string(), b.addr().to_string()],
+            &want.data,
+            "clean",
+        );
+        results.push(("clean".into(), st));
+        a.stop();
+        b.stop();
+    }
+
+    // daemon-kill: one endpoint accepts, then every op is a hard EOF —
+    // condemnation is instant (no timeout burned), shards requeue
+    {
+        let live = ShardServer::start("127.0.0.1:0").expect("daemon");
+        let dead = faulty_daemon("seed=1 grace=0 eof=1.0");
+        let st = fleet_row(
+            reps,
+            &sp,
+            &opts,
+            vec![live.addr().to_string(), dead.addr().to_string()],
+            &want.data,
+            "daemon-kill",
+        );
+        results.push(("daemon-kill".into(), st));
+        live.stop();
+        dead.stop();
+    }
+
+    // stall: the bad endpoint wedges every op for 3s, past the tight
+    // hello budget — each probe costs a full deadline before condemnation
+    {
+        let live = ShardServer::start("127.0.0.1:0").expect("daemon");
+        let wedged = faulty_daemon("seed=2 grace=0 stall=1.0:3000");
+        let st = fleet_row(
+            reps,
+            &sp,
+            &opts,
+            vec![live.addr().to_string(), wedged.addr().to_string()],
+            &want.data,
+            "stall",
+        );
+        results.push(("stall".into(), st));
+        live.stop();
+        wedged.stop();
+    }
+
+    // slow-loris: partial request line against the coordinator; recovery
+    // time is open-to-reap latency under a 300ms header budget
+    {
+        let svc = Arc::new(EmbedService::start(ServiceConfig {
+            wire_deadlines: Deadlines {
+                header: Some(Duration::from_millis(300)),
+                ..Deadlines::tight()
+            },
+            ..ServiceConfig::default()
+        }));
+        let server = TcpServer::start("127.0.0.1:0", svc.clone()).expect("server");
+        let st = Stats::from_runs(&bench_runs(0, reps, || {
+            let before = svc.metrics().wire_loris_drops.load(Ordering::Relaxed);
+            let mut s = TcpStream::connect(server.addr()).expect("connect");
+            s.write_all(b"EMBED code=--- ").expect("partial header");
+            s.flush().expect("flush");
+            let t0 = Instant::now();
+            while svc.metrics().wire_loris_drops.load(Ordering::Relaxed) == before {
+                assert!(
+                    t0.elapsed() < Duration::from_secs(10),
+                    "loris connection was never reaped"
+                );
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }));
+        results.push(("slow-loris".into(), st));
+        server.stop();
+    }
+
+    let base_ns = results[0].1.median.as_nanos();
+    let mut records = Vec::new();
+    println!("   {:>14} {:>12} {:>10}", "row", "median (s)", "slowdown");
+    for (engine, st) in results {
+        let ns = st.median.as_nanos();
+        println!(
+            "   {:>14} {:>12} {:>9.2}x",
+            engine,
+            secs(st.median),
+            ns.max(1) as f64 / base_ns.max(1) as f64
+        );
+        records.push(BenchRecord {
+            bench: "chaos_recovery".into(),
+            engine,
+            n: g.n,
+            m: g.num_directed(),
+            k: g.k,
+            threads: 1,
+            median_ns: ns,
+            speedup: base_ns as f64 / (ns.max(1) as f64),
+            ..BenchRecord::default()
+        });
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    write_records("chaos_recovery", &records);
+}

@@ -33,6 +33,7 @@ use super::wire::{self, Reply, RequestHeader, SessionHeader, SessionOpHeader};
 use crate::gee::GeeOptions;
 use crate::shard::codec::{self, ByteCounters, CountingReader, CountingWriter, F64_RECORD_BYTES};
 use crate::sparse::Dense;
+use crate::util::retry::{BackoffPolicy, Deadlines};
 
 /// Connection options for [`EmbedClient::connect`].
 #[derive(Debug, Default, Clone)]
@@ -46,6 +47,14 @@ pub struct ClientConfig {
     /// Share a caller-owned byte counter (benches aggregate across
     /// connections this way); a private one is created when `None`.
     pub counters: Option<Arc<ByteCounters>>,
+    /// Per-phase wire budgets: `connect` bounds the TCP dial, `hello`
+    /// the negotiation reply, `compute` the wait for a job's reply line,
+    /// `frame` every read while a Z frame streams and every write.
+    pub deadlines: Deadlines,
+    /// Bounded, deterministically jittered backoff for
+    /// [`EmbedClient::connect`] redials and
+    /// [`EmbedClient::embed_with_retry`] `BUSY` retries.
+    pub retry: BackoffPolicy,
 }
 
 /// One pipelined reply from [`EmbedClient::recv_any`].
@@ -62,35 +71,80 @@ pub enum ClientReply {
 pub struct EmbedClient {
     reader: BufReader<CountingReader<TcpStream>>,
     writer: BufWriter<CountingWriter<TcpStream>>,
+    /// Retained clone of the connection: socket timeouts live on the
+    /// shared file description, so this handle flips the read budget
+    /// between the `compute` (reply wait) and `frame` (body streaming)
+    /// phases without touching the reader/writer halves.
+    ctl: TcpStream,
+    deadlines: Deadlines,
+    retry: BackoffPolicy,
     binary: bool,
     next_id: u64,
     scratch: Vec<u8>,
 }
 
 impl EmbedClient {
-    /// Connect and negotiate. Tries `HELLO2` first (unless
-    /// `force_text`); any refusal — a text-only server, a pre-v2 server
-    /// that doesn't know the verb, a closed socket — reconnects fresh as
-    /// v1 text rather than guessing at the old connection's state.
+    /// Connect and negotiate, redialing under the config's bounded
+    /// backoff when the dial or negotiation fails. Tries `HELLO2` first
+    /// (unless `force_text`); any refusal — a text-only server, a pre-v2
+    /// server that doesn't know the verb, a closed socket — reconnects
+    /// fresh as v1 text rather than guessing at the old connection's
+    /// state.
     pub fn connect(addr: SocketAddr, cfg: &ClientConfig) -> Result<EmbedClient> {
+        let mut backoff = cfg.retry.schedule(u64::from(addr.port()) ^ 0xC11E_47);
+        loop {
+            match Self::connect_once(addr, cfg) {
+                Ok(c) => return Ok(c),
+                Err(e) => match backoff.next_delay() {
+                    Some(d) => std::thread::sleep(d),
+                    None => {
+                        return Err(e.context(format!(
+                            "giving up after {} connection attempt(s)",
+                            cfg.retry.attempts.max(1)
+                        )))
+                    }
+                },
+            }
+        }
+    }
+
+    fn connect_once(addr: SocketAddr, cfg: &ClientConfig) -> Result<EmbedClient> {
         let counters = cfg.counters.clone().unwrap_or_default();
         if !cfg.force_text {
-            let (mut reader, mut writer) = open(addr, &counters)?;
-            writeln!(writer, "{}", wire::format_hello(cfg.tenant.as_deref()))?;
-            writer.flush()?;
+            let (mut reader, mut writer, ctl) = open(addr, &counters, &cfg.deadlines)?;
+            io_phase(
+                writeln!(writer, "{}", wire::format_hello(cfg.tenant.as_deref())),
+                "hello",
+            )?;
+            io_phase(writer.flush(), "hello")?;
             let mut line = String::new();
-            if reader.read_line(&mut line)? > 0 && line.trim() == "HELLO2" {
+            if io_phase(reader.read_line(&mut line), "hello")? > 0 && line.trim() == "HELLO2" {
+                // negotiated: replies now take as long as jobs compute
+                ctl.set_read_timeout(cfg.deadlines.compute).ok();
                 return Ok(EmbedClient {
                     reader,
                     writer,
+                    ctl,
+                    deadlines: cfg.deadlines.clone(),
+                    retry: cfg.retry.clone(),
                     binary: true,
                     next_id: 1,
                     scratch: Vec::new(),
                 });
             }
         }
-        let (reader, writer) = open(addr, &counters)?;
-        Ok(EmbedClient { reader, writer, binary: false, next_id: 1, scratch: Vec::new() })
+        let (reader, writer, ctl) = open(addr, &counters, &cfg.deadlines)?;
+        ctl.set_read_timeout(cfg.deadlines.compute).ok();
+        Ok(EmbedClient {
+            reader,
+            writer,
+            ctl,
+            deadlines: cfg.deadlines.clone(),
+            retry: cfg.retry.clone(),
+            binary: false,
+            next_id: 1,
+            scratch: Vec::new(),
+        })
     }
 
     /// True when the connection negotiated the v2 binary wire.
@@ -128,6 +182,36 @@ impl EmbedClient {
         }
     }
 
+    /// [`embed`](Self::embed) with bounded, deterministically jittered
+    /// retries on `BUSY` admission refusals. A retry re-submits the
+    /// identical request, so the returned bits are unaffected; sleeps
+    /// honour whichever is longer of the server's `retry=` hint and the
+    /// backoff schedule. Any non-BUSY error returns immediately.
+    pub fn embed_with_retry(
+        &mut self,
+        code: &str,
+        labels: &[i32],
+        edges: &[(u32, u32, f64)],
+        k: usize,
+    ) -> Result<Dense> {
+        let mut backoff = self.retry.schedule(self.next_id ^ 0xB0_55);
+        loop {
+            match self.embed(code, labels, edges, k) {
+                Ok(z) => return Ok(z),
+                Err(e) => {
+                    let Some(server_ms) = busy_retry_ms(&e) else { return Err(e) };
+                    let Some(d) = backoff.next_delay() else {
+                        return Err(e.context(format!(
+                            "still busy after {} attempt(s)",
+                            self.retry.attempts.max(1)
+                        )));
+                    };
+                    std::thread::sleep(d.max(std::time::Duration::from_millis(server_ms)));
+                }
+            }
+        }
+    }
+
     /// Queue one request on the binary wire and return its id. Replies
     /// arrive via [`recv_any`](Self::recv_any), possibly out of order.
     pub fn submit(
@@ -144,9 +228,9 @@ impl EmbedClient {
         let id = self.next_id;
         self.next_id += 1;
         let h = RequestHeader { id, options, n: labels.len(), k };
-        writeln!(self.writer, "{}", wire::format_request_header(&h))?;
-        wire::write_request_body(&mut self.writer, labels, edges)?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_request_header(&h)), "frame")?;
+        io_phase(wire::write_request_body(&mut self.writer, labels, edges), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         Ok(id)
     }
 
@@ -157,7 +241,7 @@ impl EmbedClient {
     pub fn recv_any(&mut self) -> Result<(u64, ClientReply)> {
         loop {
             let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
+            if io_phase(self.reader.read_line(&mut line), "compute")? == 0 {
                 bail!("server closed the connection");
             }
             match wire::parse_reply(&line)? {
@@ -199,13 +283,13 @@ impl EmbedClient {
         let id = self.next_id;
         self.next_id += 1;
         let h = wire::IterHeader { id, options, n: labels.len(), k, rounds, tol };
-        writeln!(self.writer, "{}", wire::format_iter_header(&h))?;
-        wire::write_request_body(&mut self.writer, labels, edges)?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_iter_header(&h)), "frame")?;
+        io_phase(wire::write_request_body(&mut self.writer, labels, edges), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         let mut states = Vec::new();
         loop {
             let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
+            if io_phase(self.reader.read_line(&mut line), "compute")? == 0 {
                 bail!("server closed the connection");
             }
             if line.starts_with("ROUND ") {
@@ -280,9 +364,9 @@ impl EmbedClient {
         let id = self.next_id;
         self.next_id += 1;
         let h = SessionHeader { id, options, n: labels.len(), k, rescale_threshold };
-        writeln!(self.writer, "{}", wire::format_session_header(&h))?;
-        wire::write_request_body(&mut self.writer, labels, edges)?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_session_header(&h)), "frame")?;
+        io_phase(wire::write_request_body(&mut self.writer, labels, edges), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         let line = self.session_reply_line()?;
         match wire::parse_sess_ok(&line) {
             Ok((rid, sess, rows, cols)) => {
@@ -308,9 +392,9 @@ impl EmbedClient {
         let id = self.next_id;
         self.next_id += 1;
         let h = SessionOpHeader { id, sess, count: deltas.len() as u64 };
-        writeln!(self.writer, "{}", wire::format_delta_header(&h))?;
-        wire::write_delta_frame(&mut self.writer, deltas)?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_delta_header(&h)), "frame")?;
+        io_phase(wire::write_delta_frame(&mut self.writer, deltas), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         let line = self.session_reply_line()?;
         match wire::parse_dack(&line) {
             Ok((rid, applied, stale)) => {
@@ -333,9 +417,9 @@ impl EmbedClient {
         let id = self.next_id;
         self.next_id += 1;
         let h = SessionOpHeader { id, sess, count: ids.len() as u64 };
-        writeln!(self.writer, "{}", wire::format_rows_header(&h))?;
-        wire::write_rows_frame(&mut self.writer, ids)?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_rows_header(&h)), "frame")?;
+        io_phase(wire::write_rows_frame(&mut self.writer, ids), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         let line = self.session_reply_line()?;
         match wire::parse_rows_ok(&line) {
             Ok((rid, rows, cols, applied, clean)) => {
@@ -375,8 +459,8 @@ impl EmbedClient {
         }
         let id = self.next_id;
         self.next_id += 1;
-        writeln!(self.writer, "{}", wire::format_close_header(id, sess))?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "{}", wire::format_close_header(id, sess)), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
         let line = self.session_reply_line()?;
         match wire::parse_closed(&line) {
             Ok(rid) => {
@@ -393,7 +477,7 @@ impl EmbedClient {
     fn session_reply_line(&mut self) -> Result<String> {
         loop {
             let mut line = String::new();
-            if self.reader.read_line(&mut line)? == 0 {
+            if io_phase(self.reader.read_line(&mut line), "compute")? == 0 {
                 bail!("server closed the connection");
             }
             if line.trim() == "PONG" {
@@ -404,6 +488,23 @@ impl EmbedClient {
     }
 
     fn read_z_frame(&mut self, rows: usize, cols: usize) -> Result<Dense> {
+        // while the frame streams, each read must make progress within
+        // the frame budget; restore the (longer) compute budget for the
+        // next reply wait afterwards
+        self.ctl.set_read_timeout(self.deadlines.frame).ok();
+        let out = self.read_z_frame_inner(rows, cols).map_err(|e| {
+            let timed_out = e
+                .root_cause()
+                .downcast_ref::<std::io::Error>()
+                .map(crate::util::retry::is_timeout)
+                .unwrap_or(false);
+            if timed_out { e.context("frame deadline exceeded") } else { e }
+        });
+        self.ctl.set_read_timeout(self.deadlines.compute).ok();
+        out
+    }
+
+    fn read_z_frame_inner(&mut self, rows: usize, cols: usize) -> Result<Dense> {
         let cells = rows
             .checked_mul(cols)
             .filter(|&c| c <= MAX_WIRE_CELLS)
@@ -440,19 +541,22 @@ impl EmbedClient {
         edges: &[(u32, u32, f64)],
         k: usize,
     ) -> Result<Dense> {
-        writeln!(self.writer, "EMBED code={code} k={k} n={}", labels.len())?;
+        io_phase(
+            writeln!(self.writer, "EMBED code={code} k={k} n={}", labels.len()),
+            "frame",
+        )?;
         let labs: Vec<String> = labels.iter().map(|l| l.to_string()).collect();
-        writeln!(self.writer, "LABELS {}", labs.join(" "))?;
+        io_phase(writeln!(self.writer, "LABELS {}", labs.join(" ")), "frame")?;
         for chunk in edges.chunks(512) {
             let toks: Vec<String> =
                 chunk.iter().map(|(a, b, w)| format!("{a}:{b}:{w}")).collect();
-            writeln!(self.writer, "EDGES {}", toks.join(" "))?;
+            io_phase(writeln!(self.writer, "EDGES {}", toks.join(" ")), "frame")?;
         }
-        writeln!(self.writer, "END")?;
-        self.writer.flush()?;
+        io_phase(writeln!(self.writer, "END"), "frame")?;
+        io_phase(self.writer.flush(), "frame")?;
 
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
+        io_phase(self.reader.read_line(&mut line), "compute")?;
         let t = line.trim();
         if let Some(rest) = t.strip_prefix("BUSY ") {
             let retry_ms: u64 = rest.trim().parse().unwrap_or(wire::RETRY_AFTER_MS);
@@ -465,7 +569,7 @@ impl EmbedClient {
         let mut z = Dense::zeros(nrows, ncols);
         for r in 0..nrows {
             line.clear();
-            self.reader.read_line(&mut line)?;
+            io_phase(self.reader.read_line(&mut line), "compute")?;
             let row = z.row_mut(r);
             for (i, tok) in line.split_whitespace().enumerate() {
                 if i >= ncols {
@@ -475,7 +579,7 @@ impl EmbedClient {
             }
         }
         line.clear();
-        self.reader.read_line(&mut line)?;
+        io_phase(self.reader.read_line(&mut line), "compute")?;
         if line.trim() != "DONE" {
             bail!("expected DONE, got '{}'", line.trim());
         }
@@ -486,6 +590,22 @@ impl EmbedClient {
 /// Turn a non-matching session reply line into the call's error: the
 /// server's request-scoped `ERR id=`/`BUSY` (or a bare fatal `ERR`)
 /// with the connection left usable where the taxonomy says it is.
+/// Extract the server's wait hint from a `BUSY` error (`None` for every
+/// other failure — only admission refusals are retryable in place).
+fn busy_retry_ms(e: &anyhow::Error) -> Option<u64> {
+    let msg = format!("{e:#}");
+    let rest = msg.split("retry after ").nth(1)?;
+    let digits: String = rest.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
+/// Map a socket-timeout expiry onto its protocol phase so failures name
+/// the budget that fired ("compute deadline exceeded") instead of
+/// surfacing a bare os error.
+fn io_phase<T>(r: std::io::Result<T>, phase: &str) -> Result<T> {
+    r.map_err(|e| anyhow::Error::from(crate::util::retry::deadline_error(phase, e)))
+}
+
 fn session_err(line: &str) -> anyhow::Error {
     match wire::parse_reply(line) {
         Ok(Reply::Busy { retry_ms, .. }) => {
@@ -498,13 +618,19 @@ fn session_err(line: &str) -> anyhow::Error {
     }
 }
 
-fn open(
-    addr: SocketAddr,
-    counters: &Arc<ByteCounters>,
-) -> Result<(BufReader<CountingReader<TcpStream>>, BufWriter<CountingWriter<TcpStream>>)> {
-    let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+type OpenHalves =
+    (BufReader<CountingReader<TcpStream>>, BufWriter<CountingWriter<TcpStream>>, TcpStream);
+
+fn open(addr: SocketAddr, counters: &Arc<ByteCounters>, deadlines: &Deadlines) -> Result<OpenHalves> {
+    let stream = TcpStream::connect_timeout(&addr, deadlines.connect)
+        .with_context(|| format!("connect {addr} (connect deadline {:?})", deadlines.connect))?;
     stream.set_nodelay(true).ok();
+    // negotiation budget until the HELLO2 reply lands; every write gets
+    // the frame budget (the send-side stall bound)
+    stream.set_read_timeout(deadlines.hello).ok();
+    stream.set_write_timeout(deadlines.frame).ok();
+    let ctl = stream.try_clone()?;
     let reader = BufReader::new(CountingReader::new(stream.try_clone()?, counters.clone()));
     let writer = BufWriter::new(CountingWriter::new(stream, counters.clone()));
-    Ok((reader, writer))
+    Ok((reader, writer, ctl))
 }

@@ -56,6 +56,14 @@ pub struct Metrics {
     /// converging within its caps.
     pub iter_jobs: AtomicU64,
     pub iter_rounds: AtomicU64,
+    /// Accepted connections dropped because the header budget expired
+    /// while the peer sat silent between requests (idle reap) or stalled
+    /// partway through a request (slow-loris / mid-body stall). Steady
+    /// growth under normal traffic means the `header`/`frame` budgets
+    /// are too tight; growth during an incident is the wire defending
+    /// itself.
+    pub wire_idle_reaps: AtomicU64,
+    pub wire_loris_drops: AtomicU64,
     latency_us: [AtomicU64; BUCKETS],
     latency_sum_us: AtomicU64,
     /// Per-tenant admission counters, created lazily on first touch
@@ -98,6 +106,8 @@ impl Default for Metrics {
             session_full_rescales: AtomicU64::new(0),
             iter_jobs: AtomicU64::new(0),
             iter_rounds: AtomicU64::new(0),
+            wire_idle_reaps: AtomicU64::new(0),
+            wire_loris_drops: AtomicU64::new(0),
             latency_us: std::array::from_fn(|_| AtomicU64::new(0)),
             latency_sum_us: AtomicU64::new(0),
             tenants: Mutex::new(HashMap::new()),
@@ -199,6 +209,11 @@ impl Metrics {
                 "\n  iter: jobs={} rounds={iter_rounds}",
                 self.iter_jobs.load(Ordering::Relaxed),
             ));
+        }
+        let idle = self.wire_idle_reaps.load(Ordering::Relaxed);
+        let loris = self.wire_loris_drops.load(Ordering::Relaxed);
+        if idle > 0 || loris > 0 {
+            s.push_str(&format!("\n  wire: idle_reaps={idle} loris_drops={loris}"));
         }
         for (name, tc) in self.tenant_snapshot() {
             s.push_str(&format!(

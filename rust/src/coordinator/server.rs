@@ -67,6 +67,8 @@ use super::wire;
 use crate::gee::GeeOptions;
 use crate::graph::Graph;
 use crate::shard::codec::{self, ByteCounters, CountingReader, CountingWriter};
+use crate::util::fault::{FaultPlan, FaultyStream};
+use crate::util::retry::{self, Deadlines};
 
 /// A running TCP server bound to `addr()`.
 pub struct TcpServer {
@@ -81,16 +83,31 @@ impl TcpServer {
     /// connection adds one writer thread); pipelining happens *within* a
     /// connection, so this stays plenty.
     pub fn start(bind: &str, service: Arc<EmbedService>) -> Result<TcpServer> {
-        Self::start_with(bind, service, false)
+        Self::start_with(bind, service, false, None)
     }
 
     /// [`start`](Self::start) with the v2 upgrade refused (`text_only`) —
     /// the ops escape hatch mirroring the shard fleet's `--text-only`.
     pub fn start_text_only(bind: &str, service: Arc<EmbedService>) -> Result<TcpServer> {
-        Self::start_with(bind, service, true)
+        Self::start_with(bind, service, true, None)
     }
 
-    fn start_with(bind: &str, service: Arc<EmbedService>, text_only: bool) -> Result<TcpServer> {
+    /// [`start`](Self::start) with a fault plan armed on every accepted
+    /// connection (chaos testing; the CLI wires `GEE_FAULT_PLAN` here).
+    pub fn start_with_fault(
+        bind: &str,
+        service: Arc<EmbedService>,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Result<TcpServer> {
+        Self::start_with(bind, service, false, fault)
+    }
+
+    fn start_with(
+        bind: &str,
+        service: Arc<EmbedService>,
+        text_only: bool,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -101,8 +118,9 @@ impl TcpServer {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let svc = service.clone();
+                        let fp = fault.clone();
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, &svc, text_only);
+                            let _ = handle_connection(stream, &svc, text_only, &fp);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -128,11 +146,48 @@ impl TcpServer {
     }
 }
 
-type ConnReader = BufReader<CountingReader<TcpStream>>;
-type ConnWriter = BufWriter<CountingWriter<TcpStream>>;
+type ConnReader = BufReader<CountingReader<FaultyStream>>;
+type ConnWriter = BufWriter<CountingWriter<FaultyStream>>;
 
-fn handle_connection(stream: TcpStream, service: &EmbedService, text_only: bool) -> Result<()> {
+/// Per-connection deadline switch. Socket read/write timeouts live on the
+/// shared file description, so this retained clone of the connection's
+/// stream flips the *reader half's* budget between protocol phases:
+/// `header` while waiting (possibly a long time, that is the idle reap)
+/// for the next verb line, `frame` while a request body must keep
+/// arriving. The write timeout is set once — every reply write gets the
+/// frame budget, which is the slow-loris bound on the send side.
+struct PhaseCtl {
+    ctl: FaultyStream,
+    deadlines: Deadlines,
+}
+
+impl PhaseCtl {
+    fn new(ctl: FaultyStream, deadlines: Deadlines) -> PhaseCtl {
+        ctl.set_write_timeout(deadlines.frame).ok();
+        ctl.set_read_timeout(deadlines.header).ok();
+        PhaseCtl { ctl, deadlines }
+    }
+
+    /// Waiting for the next request line: the idle / slow-loris budget.
+    fn header(&self) {
+        self.ctl.set_read_timeout(self.deadlines.header).ok();
+    }
+
+    /// A request body is streaming: each read must make progress.
+    fn frame(&self) {
+        self.ctl.set_read_timeout(self.deadlines.frame).ok();
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    service: &EmbedService,
+    text_only: bool,
+    fault: &Option<Arc<FaultPlan>>,
+) -> Result<()> {
+    let stream = FaultPlan::wrap(fault, stream);
     stream.set_nodelay(true).ok();
+    let phase = PhaseCtl::new(stream.try_clone()?, service.wire_deadlines().clone());
     // every byte of the connection flows through these counters; they
     // are attributed to the declared tenant when the connection ends
     // (the tenant is only known after HELLO)
@@ -141,7 +196,7 @@ fn handle_connection(stream: TcpStream, service: &EmbedService, text_only: bool)
         BufReader::new(CountingReader::new(stream.try_clone()?, conn_bytes.clone()));
     let writer = BufWriter::new(CountingWriter::new(stream, conn_bytes.clone()));
     let mut tenant = wire::DEFAULT_TENANT.to_string();
-    let result = serve_connection(&mut reader, writer, service, &mut tenant, text_only);
+    let result = serve_connection(&mut reader, writer, service, &mut tenant, text_only, &phase);
     let tc = service.metrics().tenant(&tenant);
     tc.bytes
         .sent
@@ -160,17 +215,40 @@ fn serve_connection(
     service: &EmbedService,
     tenant: &mut String,
     text_only: bool,
+    phase: &PhaseCtl,
 ) -> Result<()> {
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        phase.header();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if retry::is_timeout(&e) => {
+                // the header budget expired: an empty line means the peer
+                // sat silent (idle reap); partial bytes mean it trickled
+                // the request line (slow loris) — either way, named error
+                // then hang up
+                let msg = if line.trim().is_empty() {
+                    service.metrics().wire_idle_reaps.fetch_add(1, Ordering::Relaxed);
+                    "idle connection reaped (header deadline exceeded)"
+                } else {
+                    service.metrics().wire_loris_drops.fetch_add(1, Ordering::Relaxed);
+                    "header deadline exceeded (request line stalled)"
+                };
+                let _ = writeln!(writer, "ERR {msg}");
+                let _ = writer.flush();
+                bail!("{msg}");
+            }
+            Err(e) => return Err(e.into()),
         }
         let t = line.trim();
         if t.is_empty() {
             continue;
         }
+        // a verb arrived — while its body streams, every read must make
+        // progress within the frame budget
+        phase.frame();
         if t == "PING" {
             writeln!(writer, "PONG")?;
             writer.flush()?;
@@ -192,7 +270,7 @@ fn serve_connection(
                     *tenant = name;
                     writeln!(writer, "HELLO2")?;
                     writer.flush()?;
-                    return serve_v2(reader, writer, service, tenant);
+                    return serve_v2(reader, writer, service, tenant, phase);
                 }
                 Err(e) => {
                     writeln!(writer, "{}", wire::format_fatal(&format!("{e:#}")))?;
@@ -217,6 +295,15 @@ fn serve_connection(
                 writeln!(writer, "BUSY {retry_ms}")?;
             }
             Err(e) => {
+                if io_timed_out(&e) {
+                    // a body read hit the frame budget: the stream has no
+                    // resync point, so this is connection-fatal, not a
+                    // request-scoped ERR
+                    service.metrics().wire_loris_drops.fetch_add(1, Ordering::Relaxed);
+                    let _ = writeln!(writer, "ERR frame deadline exceeded (stalled mid-request)");
+                    let _ = writer.flush();
+                    return Err(e.context("frame deadline exceeded (stalled mid-request)"));
+                }
                 writeln!(writer, "ERR {e:#}")?;
             }
         }
@@ -397,6 +484,34 @@ fn fatal(tx: &mpsc::Sender<Out>, msg: String) -> anyhow::Error {
     anyhow::anyhow!(msg)
 }
 
+/// Did this error chain bottom out in a socket timeout (a deadline, not a
+/// peer failure)?
+fn io_timed_out(e: &anyhow::Error) -> bool {
+    e.root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(retry::is_timeout)
+        .unwrap_or(false)
+}
+
+/// [`fatal`] for body-frame errors: when the root cause is a socket
+/// timeout, name the deadline so the peer (and the log) can tell a
+/// stalled sender from a framing violation.
+fn fatal_io(tx: &mpsc::Sender<Out>, e: anyhow::Error) -> anyhow::Error {
+    if io_timed_out(&e) {
+        fatal(tx, format!("frame deadline exceeded (stalled mid-frame): {e:#}"))
+    } else {
+        fatal(tx, format!("{e:#}"))
+    }
+}
+
+/// Poison-tolerant lock: a panic on some other connection's thread must
+/// not cascade here — the guarded state (in-flight id set, session
+/// bookkeeping) is updated atomically enough that the value is still
+/// coherent after a poisoning panic.
+fn lock_ok<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// The v2 connection: this thread keeps reading (validate → admit →
 /// decode → submit); a spawned writer thread owns the socket's write
 /// half and streams replies in completion order.
@@ -405,12 +520,13 @@ fn serve_v2(
     writer: ConnWriter,
     service: &EmbedService,
     tenant: &str,
+    phase: &PhaseCtl,
 ) -> Result<()> {
     let (tx, rx) = mpsc::channel::<Out>();
     let inflight: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
     let inflight_w = inflight.clone();
     let writer_thread = std::thread::spawn(move || writer_loop(writer, rx, &inflight_w));
-    let read_result = v2_read_loop(reader, service, tenant, &tx, &inflight);
+    let read_result = v2_read_loop(reader, service, tenant, &tx, &inflight, phase);
     // drop our sender; the writer drains replies for jobs still in the
     // service (their callbacks hold clones) and exits when the last one
     // resolves — queued work is answered even after the client stops
@@ -430,7 +546,7 @@ fn writer_loop(
     while let Ok(out) = rx.recv() {
         match out {
             Out::Reply { id, result } => {
-                inflight.lock().unwrap().remove(&id);
+                lock_ok(inflight).remove(&id);
                 match result {
                     Ok(resp) => {
                         writeln!(writer, "{}", wire::format_ok(id, resp.z.nrows, resp.z.ncols))?;
@@ -446,12 +562,12 @@ fn writer_loop(
                 writer.flush()?;
             }
             Out::Busy { id, retry_ms } => {
-                inflight.lock().unwrap().remove(&id);
+                lock_ok(inflight).remove(&id);
                 writeln!(writer, "{}", wire::format_busy(id, retry_ms))?;
                 writer.flush()?;
             }
             Out::Failed { id, msg } => {
-                inflight.lock().unwrap().remove(&id);
+                lock_ok(inflight).remove(&id);
                 writeln!(writer, "{}", wire::format_err(id, &msg))?;
                 writer.flush()?;
             }
@@ -498,6 +614,7 @@ fn v2_read_loop(
     tenant: &str,
     tx: &mpsc::Sender<Out>,
     inflight: &Mutex<HashSet<u64>>,
+    phase: &PhaseCtl,
 ) -> Result<()> {
     let mut scratch: Vec<u8> = Vec::new();
     let mut deltas: Vec<Delta> = Vec::new();
@@ -505,13 +622,27 @@ fn v2_read_loop(
     let mut line = String::new();
     loop {
         line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        phase.header();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if retry::is_timeout(&e) => {
+                let msg = if line.trim().is_empty() {
+                    service.metrics().wire_idle_reaps.fetch_add(1, Ordering::Relaxed);
+                    "idle connection reaped (header deadline exceeded)"
+                } else {
+                    service.metrics().wire_loris_drops.fetch_add(1, Ordering::Relaxed);
+                    "header deadline exceeded (request line stalled)"
+                };
+                return Err(fatal(tx, msg.to_string()));
+            }
+            Err(e) => return Err(e.into()),
         }
         let t = line.trim();
         if t.is_empty() {
             continue;
         }
+        phase.frame();
         if t == "PING" {
             let _ = tx.send(Out::Pong);
             continue;
@@ -553,14 +684,14 @@ fn v2_read_loop(
             // frames follow: connection-fatal
             Err(e) => return Err(fatal(tx, format!("{e:#}"))),
         };
-        if !inflight.lock().unwrap().insert(h.id) {
+        if !lock_ok(inflight).insert(h.id) {
             return Err(fatal(tx, format!("duplicate in-flight request id {}", h.id)));
         }
         if let Err(e) = validate_wire_dims(h.n, h.k) {
             // dims refused, but the two body frames still follow and the
             // codec caps bound the drain — request-scoped error
             if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
-                return Err(fatal(tx, format!("{de:#}")));
+                return Err(fatal_io(tx, de));
             }
             let _ = tx.send(Out::Failed { id: h.id, msg: format!("{e:#}") });
             continue;
@@ -570,7 +701,7 @@ fn v2_read_loop(
                 let mut g = Graph::new(h.n, h.k);
                 if let Err(e) = wire::read_request_body_into(reader, &h, &mut g, &mut scratch) {
                     // mid-frame failure: the stream has no resync point
-                    return Err(fatal(tx, format!("{e:#}")));
+                    return Err(fatal_io(tx, e));
                 }
                 if let Err(e) = g.validate() {
                     let _ = tx.send(Out::Failed { id: h.id, msg: e });
@@ -593,7 +724,7 @@ fn v2_read_loop(
             }
             Err(super::queue::AdmitError::Closed) => {
                 if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
-                    return Err(fatal(tx, format!("{de:#}")));
+                    return Err(fatal_io(tx, de));
                 }
                 let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
             }
@@ -601,7 +732,7 @@ fn v2_read_loop(
                 // over quota / backpressure: drain within the codec caps,
                 // never allocate the request
                 if let Err(de) = wire::drain_request_body(reader, &mut scratch) {
-                    return Err(fatal(tx, format!("{de:#}")));
+                    return Err(fatal_io(tx, de));
                 }
                 let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
             }
@@ -628,7 +759,7 @@ fn handle_iter2(
         Ok(h) => h,
         Err(e) => return Err(fatal(tx, format!("{e:#}"))),
     };
-    if !inflight.lock().unwrap().insert(h.id) {
+    if !lock_ok(inflight).insert(h.id) {
         return Err(fatal(tx, format!("duplicate in-flight request id {}", h.id)));
     }
     if let Err(e) = validate_wire_dims(h.n, h.k) {
@@ -643,7 +774,7 @@ fn handle_iter2(
             let rh = wire::RequestHeader { id: h.id, options: h.options, n: h.n, k: h.k };
             let mut g = Graph::new(h.n, h.k);
             if let Err(e) = wire::read_request_body_into(reader, &rh, &mut g, scratch) {
-                return Err(fatal(tx, format!("{e:#}")));
+                return Err(fatal_io(tx, e));
             }
             if let Err(e) = g.validate() {
                 let _ = tx.send(Out::Failed { id: h.id, msg: e });
@@ -676,13 +807,13 @@ fn handle_iter2(
         }
         Err(super::queue::AdmitError::Closed) => {
             if let Err(de) = wire::drain_request_body(reader, scratch) {
-                return Err(fatal(tx, format!("{de:#}")));
+                return Err(fatal_io(tx, de));
             }
             let _ = tx.send(Out::Failed { id: h.id, msg: "service is shutting down".into() });
         }
         Err(_) => {
             if let Err(de) = wire::drain_request_body(reader, scratch) {
-                return Err(fatal(tx, format!("{de:#}")));
+                return Err(fatal_io(tx, de));
             }
             let _ = tx.send(Out::Busy { id: h.id, retry_ms: wire::RETRY_AFTER_MS });
         }
@@ -776,14 +907,18 @@ fn handle_delta2(
             let _ = tx.send(Out::Failed { id: h.id, msg });
             return Ok(());
         }
-        return Err(fatal(tx, msg));
+        return Err(fatal_io(tx, e));
     }
     let Some(entry) = session_target(service, h.sess, h.id, tx) else {
         return Ok(());
     };
-    let registry = service.sessions().expect("session_target checked the registry");
+    let Some(registry) = service.sessions() else {
+        // session_target just resolved the entry, so the registry exists;
+        // if it somehow does not, drop the request rather than panic
+        return Ok(());
+    };
     let (applied_count, res, applied, stale) = {
-        let mut s = entry.session.lock().unwrap();
+        let mut s = lock_ok(&entry.session);
         let (count, res) = s.apply_all(deltas);
         let (applied, _clean) = s.watermark();
         (count, res, applied, s.stale())
@@ -822,12 +957,12 @@ fn handle_rows2(
         Err(e) => return Err(fatal(tx, format!("{e:#}"))),
     };
     if let Err(e) = wire::read_rows_frame(reader, h.count, scratch, row_ids) {
-        return Err(fatal(tx, format!("{e:#}")));
+        return Err(fatal_io(tx, e));
     }
     let Some(entry) = session_target(service, h.sess, h.id, tx) else {
         return Ok(());
     };
-    let s = entry.session.lock().unwrap();
+    let s = lock_ok(&entry.session);
     let (n, k) = (s.n(), s.k());
     // ids may repeat, so the reply is bounded by the request, not by the
     // session: apply the same cell cap the embed header gate enforces
@@ -1161,6 +1296,77 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("OK"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn idle_and_slow_loris_connections_are_reaped() {
+        let svc = Arc::new(EmbedService::start(ServiceConfig {
+            wire_deadlines: Deadlines {
+                header: Some(std::time::Duration::from_millis(250)),
+                ..Deadlines::default()
+            },
+            ..ServiceConfig::default()
+        }));
+        let server = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+
+        // idle: connect and say nothing — the header budget expires and
+        // the server hangs up with a named error
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("idle connection reaped"), "{line}");
+
+        // slow loris: trickle a partial request line, then stall forever
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+            .unwrap();
+        stream.write_all(b"EMBED code=--- ").unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("header deadline exceeded"), "{line}");
+
+        assert!(svc.metrics().wire_idle_reaps.load(Ordering::Relaxed) >= 1);
+        assert!(svc.metrics().wire_loris_drops.load(Ordering::Relaxed) >= 1);
+        server.stop();
+    }
+
+    #[test]
+    fn erroring_connection_returns_permit_and_server_survives() {
+        let svc = Arc::new(EmbedService::start(ServiceConfig::default()));
+        let server = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+        {
+            let stream = TcpStream::connect(server.addr()).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut writer = BufWriter::new(stream);
+            writeln!(writer, "HELLO2").unwrap();
+            writer.flush().unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            assert_eq!(line.trim(), "HELLO2");
+            // the header claims body frames that never arrive — the
+            // admission this header earns must not leak when the
+            // connection dies mid-frame
+            writeln!(writer, "EMBED2 id=1 code=--- n=4 k=2").unwrap();
+            writer.flush().unwrap();
+        } // both halves drop: the server hits EOF mid-frame
+        let t0 = std::time::Instant::now();
+        while svc.governor().in_flight(wire::DEFAULT_TENANT) != 0 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "admission permit stranded by a dead connection"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        // and the unwind was request-scoped: the server still serves
+        let z = client_embed(server.addr(), "---", &[0, 1], &[(0, 1, 1.0)], 2).unwrap();
+        assert_eq!(z.nrows, 2);
         server.stop();
     }
 }

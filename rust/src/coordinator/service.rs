@@ -34,6 +34,7 @@ use crate::gee::{Engine, GeeOptions};
 use crate::graph::Graph;
 use crate::runtime::Runtime;
 use crate::sparse::Dense;
+use crate::util::retry::Deadlines;
 
 /// Which compute lane serves requests.
 #[derive(Clone, Debug)]
@@ -114,6 +115,13 @@ pub struct ServiceConfig {
     /// escalates to a full rescale pass; a `SESS2 thresh=` overrides it
     /// per session.
     pub session_rescale_threshold: f64,
+    /// Per-phase wire budgets applied to every accepted connection
+    /// ([`super::server::TcpServer`]): `header` bounds the silent wait
+    /// for the next verb line (idle reap / slow-loris defence), `frame`
+    /// bounds each read while a request body streams, and writes. The
+    /// `connect`/`hello`/`compute` fields are client-side knobs and are
+    /// ignored here.
+    pub wire_deadlines: Deadlines,
 }
 
 impl Default for ServiceConfig {
@@ -135,6 +143,7 @@ impl Default for ServiceConfig {
             session_workers: 0,
             session_quota: 4,
             session_rescale_threshold: 0.25,
+            wire_deadlines: Deadlines::default(),
         }
     }
 }
@@ -247,6 +256,9 @@ pub struct EmbedService {
     sessions: Option<Arc<SessionRegistry>>,
     /// Default rescale threshold for sessions opened without `thresh=`.
     session_rescale_threshold: f64,
+    /// Per-phase wire budgets the TCP front door applies to every
+    /// accepted connection.
+    wire_deadlines: Deadlines,
     handles: Vec<JoinHandle<()>>,
 }
 
@@ -284,6 +296,7 @@ impl EmbedService {
             None
         };
         let session_rescale_threshold = cfg.session_rescale_threshold.clamp(0.0, 1.0);
+        let wire_deadlines = cfg.wire_deadlines.clone();
         let mut handles = Vec::new();
 
         match &cfg.lane {
@@ -332,6 +345,7 @@ impl EmbedService {
             governor,
             sessions,
             session_rescale_threshold,
+            wire_deadlines,
             handles,
         }
     }
@@ -472,6 +486,12 @@ impl EmbedService {
     /// Default rescale threshold for sessions opened without `thresh=`.
     pub fn session_rescale_threshold(&self) -> f64 {
         self.session_rescale_threshold
+    }
+
+    /// Per-phase wire budgets the TCP front door should apply to every
+    /// accepted connection.
+    pub fn wire_deadlines(&self) -> &Deadlines {
+        &self.wire_deadlines
     }
 
     pub fn metrics(&self) -> &Metrics {

@@ -43,10 +43,13 @@ use gee_sparse::runtime::{Manifest, Runtime};
 use gee_sparse::shard::{
     embed_multiprocess, embed_out_of_core, embed_remote, run_worker,
     spill::{spill_from_files, spill_from_graph},
-    DispatchConfig, FleetSession, ProcessConfig, ShardServer, SpillConfig, WorkerArgs,
+    DaemonConfig, DispatchConfig, FleetSession, ProcessConfig, ShardServer, SpillConfig,
+    WorkerArgs,
 };
 use gee_sparse::tasks::kmeans::{kmeans, KMeansConfig};
 use gee_sparse::tasks::metrics::{adjusted_rand_index, paired_labels};
+use gee_sparse::util::fault::FaultPlan;
+use gee_sparse::util::retry::Deadlines;
 use gee_sparse::util::rng::Rng;
 
 /// Flags that take no value. Declaring them is what lets every *other*
@@ -134,6 +137,21 @@ impl Args {
     fn has(&self, flag: &str) -> bool {
         self.flags.iter().any(|f| f == flag)
             || matches!(self.get(flag), Some("1") | Some("true"))
+    }
+
+    /// A millisecond timeout knob: `0` disables the budget entirely,
+    /// absent keeps the built-in default.
+    fn get_timeout_ms(&self, key: &str, default: Option<Duration>) -> Result<Option<Duration>> {
+        match self.get(key) {
+            Some("0") => Ok(None),
+            Some(v) => {
+                let ms: u64 = v
+                    .parse()
+                    .with_context(|| format!("--{key} takes milliseconds (0 disables)"))?;
+                Ok(Some(Duration::from_millis(ms)))
+            }
+            None => Ok(default),
+        }
     }
 }
 
@@ -398,13 +416,21 @@ fn cmd_shard_worker(args: &Args) -> Result<()> {
 
 fn cmd_shard_serve(args: &Args) -> Result<()> {
     let bind = args.get("listen").unwrap_or("127.0.0.1:0");
+    let defaults = DaemonConfig::default();
+    let fault = FaultPlan::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    if fault.is_some() {
+        eprintln!("shard-serve: GEE_FAULT_PLAN armed — injecting deterministic wire faults");
+    }
     // --text-only serves just the v1 text protocol — a stand-in for a
     // legacy daemon when testing mixed-fleet negotiation
-    let server = if args.has("text-only") {
-        ShardServer::start_text_only(bind)?
-    } else {
-        ShardServer::start(bind)?
+    let cfg = DaemonConfig {
+        text_only: args.has("text-only"),
+        idle_timeout: args.get_timeout_ms("idle-timeout", defaults.idle_timeout)?,
+        io_timeout: args.get_timeout_ms("io-timeout", defaults.io_timeout)?,
+        keep_ttl: args.get_timeout_ms("keep-ttl", defaults.keep_ttl)?,
+        fault,
     };
+    let server = ShardServer::start_with_config(bind, cfg)?;
     // the bound address is the contract with launchers: with port 0 this
     // line is how they learn the ephemeral port, so flush it eagerly
     // (stdout is block-buffered under a pipe)
@@ -431,6 +457,7 @@ fn cmd_client_embed(args: &Args) -> Result<()> {
         tenant: args.get("tenant").map(|s| s.to_string()),
         force_text: args.has("text-wire"),
         counters: Some(counters.clone()),
+        ..ClientConfig::default()
     };
     let t0 = Instant::now();
     let mut client = EmbedClient::connect(addr, &cfg)?;
@@ -492,6 +519,7 @@ fn cmd_client_stream(args: &Args) -> Result<()> {
         tenant: args.get("tenant").map(|s| s.to_string()),
         force_text: false,
         counters: Some(counters.clone()),
+        ..ClientConfig::default()
     };
     let mut client = EmbedClient::connect(addr, &cfg)?;
     if !client.is_binary() {
@@ -591,6 +619,7 @@ fn cmd_cluster_embed(args: &Args) -> Result<()> {
             tenant: args.get("tenant").map(|s| s.to_string()),
             force_text: args.has("text-wire"),
             counters: None,
+            ..ClientConfig::default()
         };
         let mut client = EmbedClient::connect(addr, &cfg)?;
         let lane =
@@ -685,6 +714,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_default();
     // network mode: expose the service over TCP and block
     if let Some(bind) = args.get("listen") {
+        let wire_defaults = Deadlines::default();
+        let wire_deadlines = Deadlines {
+            header: args.get_timeout_ms("header-timeout", wire_defaults.header)?,
+            frame: args.get_timeout_ms("frame-timeout", wire_defaults.frame)?,
+            ..wire_defaults
+        };
         let svc = std::sync::Arc::new(EmbedService::start(ServiceConfig {
             workers,
             intra_op_threads: args.get_usize("intra-op", 0)?,
@@ -693,14 +728,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             tenant_tokens: args.get_usize("tenant-tokens", 64)?,
             session_workers: args.get_usize("sessions", 0)?,
             session_quota: args.get_usize("session-quota", 4)?,
+            wire_deadlines,
             ..ServiceConfig::default()
         }));
+        let fault = FaultPlan::from_env().map_err(|e| anyhow::anyhow!(e))?;
         // --text-only refuses the HELLO2 upgrade — emulates a pre-v2
         // daemon for mixed-version testing
         let server = if args.has("text-only") {
+            if fault.is_some() {
+                eprintln!("serve: GEE_FAULT_PLAN is ignored with --text-only");
+            }
             gee_sparse::coordinator::TcpServer::start_text_only(bind, svc)?
         } else {
-            gee_sparse::coordinator::TcpServer::start(bind, svc)?
+            if fault.is_some() {
+                eprintln!("serve: GEE_FAULT_PLAN armed — injecting deterministic wire faults");
+            }
+            gee_sparse::coordinator::TcpServer::start_with_fault(bind, svc, fault)?
         };
         println!(
             "listening on {} (v1 text + v2 binary wire; PING/EMBED/HELLO2; ctrl-c to stop)",
@@ -785,6 +828,9 @@ fn usage() -> &'static str {
        shard-serve  [--listen ADDR:PORT] [--text-only]   (shard-fleet worker\n\
                     daemon; port 0 = ephemeral, the bound address is printed;\n\
                     --text-only serves just the legacy v1 text protocol)\n\
+                    [--idle-timeout MS] [--io-timeout MS] [--keep-ttl MS]\n\
+                    (lifecycle budgets, 0 disables; defaults 300000 / 60000 /\n\
+                    600000; GEE_FAULT_PLAN=... arms deterministic wire faults)\n\
        bench-table  --table 2|3|4|fig3 [--reps R] [--quick] [--sizes a,b,c]\n\
        serve        [--requests N] [--workers W] [--pjrt] [--no-batching]\n\
                     [--intra-op T]   (row-parallel threads for oversize graphs)\n\
@@ -796,6 +842,9 @@ fn usage() -> &'static str {
                     quota, default 64)  [--sessions W]   (enable the\n\
                     resident-session lane with W fast-lane refresh threads)\n\
                     [--session-quota N]   (open sessions per tenant, default 4)\n\
+                    [--header-timeout MS] [--frame-timeout MS]   (per-phase\n\
+                    wire budgets on accepted connections, 0 disables; defaults\n\
+                    300000 / 60000; GEE_FAULT_PLAN=... arms wire faults)\n\
        client-embed --addr HOST:PORT   --dataset NAME | --sbm N | --input STEM\n\
                     [--options ldc] [--tenant NAME] [--text-wire] [--out FILE]\n\
                     (one embed against a running `serve --listen` daemon;\n\

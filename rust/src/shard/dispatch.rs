@@ -36,17 +36,17 @@ use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpStream, ToSocketAddrs};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::codec::{globals_hash, ByteCounters, CountingReader, CountingWriter};
+use super::codec::{globals_hash, ByteCounters, CountingReader, CountingWriter, Fnv64};
 use super::remote::{
     request_reshard, request_shard, request_shard_v2, send_globals, send_relabel,
 };
 use super::spill::SpilledShards;
 use crate::gee::options::GeeOptions;
 use crate::sparse::Dense;
+use crate::util::retry::{self, BackoffPolicy, Deadlines};
 
 /// Fleet shape.
 #[derive(Clone, Debug)]
@@ -57,16 +57,22 @@ pub struct DispatchConfig {
     /// Concurrent in-flight shards per endpoint (each slot holds its own
     /// connection; a daemon embeds its slots on parallel threads).
     pub slots_per_worker: usize,
-    /// TCP connect timeout per endpoint.
-    pub connect_timeout: Duration,
-    /// Per-syscall read/write timeout on worker connections. A *hung*
-    /// worker (silent network partition — no RST, so reads block
-    /// forever) would otherwise stall the whole dispatch with its
-    /// in-flight shard never requeued; with the timeout the slot fails
-    /// like a dead one and survivors take over. The clock only runs
-    /// while a single read/write makes no progress, not across a whole
-    /// shard, so the default is safe for long embeds; `None` disables.
-    pub io_timeout: Option<Duration>,
+    /// Per-phase I/O budgets, replacing the old single `io_timeout`:
+    /// `connect` bounds the TCP handshake, `hello` the PING/HELLO2
+    /// negotiation, `frame` write progress while a spill payload
+    /// streams out, and `compute` reads while a request is in flight
+    /// (the reply wait — legitimately long on huge shards). A *hung*
+    /// worker (silent network partition — no RST) would otherwise
+    /// stall the whole dispatch with its in-flight shard never
+    /// requeued; with budgets the slot fails like a dead one and
+    /// survivors take over. Each is a per-syscall progress clock, not
+    /// a whole-shard clock, so the defaults are safe for long embeds.
+    pub deadlines: Deadlines,
+    /// Bounded exponential backoff (deterministic jitter) for the
+    /// connect/negotiate path: a flapping endpoint is condemned after
+    /// `retry.attempts` connection attempts instead of being retried
+    /// forever or condemned on one blip.
+    pub retry: BackoffPolicy,
     /// Skip the `HELLO2` upgrade and speak the v1 text protocol even to
     /// daemons that could do better — the ops escape hatch (and what the
     /// bench uses to put the text lane's byte count on the record next
@@ -83,8 +89,8 @@ impl DispatchConfig {
         DispatchConfig {
             endpoints,
             slots_per_worker: 1,
-            connect_timeout: Duration::from_secs(5),
-            io_timeout: Some(Duration::from_secs(600)),
+            deadlines: Deadlines::default(),
+            retry: BackoffPolicy::default(),
             force_text: false,
             counters: None,
         }
@@ -140,11 +146,11 @@ pub fn embed_remote(
     let (tx, rx) = std::sync::mpsc::channel::<(usize, Vec<f64>)>();
     std::thread::scope(|sc| {
         for (ep_idx, ep) in cfg.endpoints.iter().enumerate() {
-            for _ in 0..slots {
+            for slot in 0..slots {
                 let tx = tx.clone();
                 let (state, cond) = (&state, &cond);
                 sc.spawn(move || {
-                    slot_loop(ep, ep_idx, sp, opts, cfg, ghash, state, cond, tx)
+                    slot_loop(ep, ep_idx, slot, sp, opts, cfg, ghash, state, cond, tx)
                 });
             }
         }
@@ -186,11 +192,21 @@ struct SlotConn {
 }
 
 impl SlotConn {
+    /// `ctl` is a dup of the connection's fd: socket timeouts live on
+    /// the shared file description, so flipping them here reaches both
+    /// the reader and writer halves. Negotiation ran under the `hello`
+    /// budget; steady state is read=`compute` (the reply wait — the
+    /// legitimately long pole) and write=`frame` (per-syscall progress
+    /// while a spill payload streams out).
     fn new(
         reader: BufReader<CountingReader<TcpStream>>,
         writer: BufWriter<CountingWriter<TcpStream>>,
+        ctl: &TcpStream,
+        deadlines: &Deadlines,
         v2: bool,
     ) -> SlotConn {
+        ctl.set_read_timeout(deadlines.compute).ok();
+        ctl.set_write_timeout(deadlines.frame).ok();
         SlotConn { reader, writer, scratch: Vec::new(), v2, globals_sent: false }
     }
 
@@ -202,25 +218,44 @@ impl SlotConn {
         s: usize,
         ghash: u64,
     ) -> Result<Vec<f64>> {
-        if self.v2 {
-            if !self.globals_sent {
-                send_globals(&mut self.reader, &mut self.writer, sp, ghash)
-                    .context("send GLOBALS")?;
-                self.globals_sent = true;
+        let mut run = || -> Result<Vec<f64>> {
+            if self.v2 {
+                if !self.globals_sent {
+                    send_globals(&mut self.reader, &mut self.writer, sp, ghash)
+                        .context("send GLOBALS")?;
+                    self.globals_sent = true;
+                }
+                request_shard_v2(
+                    &mut self.reader,
+                    &mut self.writer,
+                    sp,
+                    opts,
+                    s,
+                    ghash,
+                    &mut self.scratch,
+                    false,
+                )
+            } else {
+                request_shard(&mut self.reader, &mut self.writer, sp, opts, s)
             }
-            request_shard_v2(
-                &mut self.reader,
-                &mut self.writer,
-                sp,
-                opts,
-                s,
-                ghash,
-                &mut self.scratch,
-                false,
-            )
-        } else {
-            request_shard(&mut self.reader, &mut self.writer, sp, opts, s)
-        }
+        };
+        run().map_err(|e| name_deadline(e, "frame/compute"))
+    }
+}
+
+/// Rename a timeout-rooted error after the protocol phase whose budget
+/// it blew — the bare `WouldBlock`/`TimedOut` a socket read surfaces
+/// says nothing about *which* deadline fired.
+fn name_deadline(e: anyhow::Error, phase: &str) -> anyhow::Error {
+    let timed_out = e
+        .root_cause()
+        .downcast_ref::<std::io::Error>()
+        .map(retry::is_timeout)
+        .unwrap_or(false);
+    if timed_out {
+        e.context(format!("{phase} deadline exceeded"))
+    } else {
+        e
     }
 }
 
@@ -233,6 +268,7 @@ impl SlotConn {
 fn slot_loop(
     endpoint: &str,
     ep_idx: usize,
+    slot: usize,
     sp: &SpilledShards,
     opts: &GeeOptions,
     cfg: &DispatchConfig,
@@ -241,7 +277,8 @@ fn slot_loop(
     cond: &Condvar,
     tx: Sender<(usize, Vec<f64>)>,
 ) {
-    let mut conn = match connect(endpoint, cfg) {
+    let key = ((ep_idx as u64) << 32) | slot as u64;
+    let mut conn = match connect_with_retry(endpoint, key, cfg) {
         Ok(c) => c,
         Err(e) => {
             let mut g = state.lock().unwrap();
@@ -300,28 +337,36 @@ fn slot_loop(
     let _ = conn.writer.flush();
 }
 
-/// Raw TCP connect with timeouts; byte-counted reader/writer over one
-/// shared stream.
+/// Raw TCP connect under the `connect` budget; byte-counted
+/// reader/writer over one shared stream, plus a `ctl` dup for later
+/// phase-timeout flips. The socket opens in the `hello` phase: reads
+/// are budgeted for negotiation until [`SlotConn::new`] switches to
+/// steady state.
 fn tcp_connect(
     endpoint: &str,
     cfg: &DispatchConfig,
-) -> Result<(BufReader<CountingReader<TcpStream>>, BufWriter<CountingWriter<TcpStream>>)> {
+) -> Result<(
+    BufReader<CountingReader<TcpStream>>,
+    BufWriter<CountingWriter<TcpStream>>,
+    TcpStream,
+)> {
     let addr = endpoint
         .to_socket_addrs()
         .with_context(|| format!("resolve {endpoint}"))?
         .next()
         .with_context(|| format!("{endpoint} resolved to no address"))?;
-    let stream = TcpStream::connect_timeout(&addr, cfg.connect_timeout)
+    let stream = TcpStream::connect_timeout(&addr, cfg.deadlines.connect)
         .with_context(|| format!("connect {endpoint}"))?;
-    stream.set_read_timeout(cfg.io_timeout)?;
-    stream.set_write_timeout(cfg.io_timeout)?;
+    stream.set_read_timeout(cfg.deadlines.hello)?;
+    stream.set_write_timeout(cfg.deadlines.frame)?;
     stream.set_nodelay(true).ok();
     let counters = cfg
         .counters
         .clone()
         .unwrap_or_else(|| Arc::new(ByteCounters::default()));
+    let ctl = stream.try_clone()?;
     let reader = BufReader::new(CountingReader::new(stream.try_clone()?, counters.clone()));
-    Ok((reader, BufWriter::new(CountingWriter::new(stream, counters))))
+    Ok((reader, BufWriter::new(CountingWriter::new(stream, counters)), ctl))
 }
 
 fn read_reply_line(
@@ -355,20 +400,22 @@ fn expect_pong(reader: &mut impl BufRead, line: &mut String, what: &str) -> Resu
 /// v1 text. One extra round trip per connection, only against legacy
 /// daemons.
 fn connect(endpoint: &str, cfg: &DispatchConfig) -> Result<SlotConn> {
-    let (mut reader, mut writer) = tcp_connect(endpoint, cfg)?;
+    let (mut reader, mut writer, ctl) = tcp_connect(endpoint, cfg)?;
     let mut line = String::new();
     if cfg.force_text {
         writeln!(writer, "PING")?;
         writer.flush()?;
-        expect_pong(&mut reader, &mut line, "health probe")?;
-        return Ok(SlotConn::new(reader, writer, false));
+        expect_pong(&mut reader, &mut line, "health probe")
+            .map_err(|e| name_deadline(e, "hello"))?;
+        return Ok(SlotConn::new(reader, writer, &ctl, &cfg.deadlines, false));
     }
     writeln!(writer, "PING\nHELLO2")?;
     writer.flush()?;
-    expect_pong(&mut reader, &mut line, "health probe")?;
+    expect_pong(&mut reader, &mut line, "health probe")
+        .map_err(|e| name_deadline(e, "hello"))?;
     match read_reply_line(&mut reader, &mut line) {
         Ok(Some(t)) if t == "HELLO2" => {
-            return Ok(SlotConn::new(reader, writer, true));
+            return Ok(SlotConn::new(reader, writer, &ctl, &cfg.deadlines, true));
         }
         // an ERR line, a clean close, or a teardown-class error while the
         // legacy daemon drops the connection — "no v2 here", fall back
@@ -384,15 +431,46 @@ fn connect(endpoint: &str, cfg: &DispatchConfig) -> Result<SlotConn> {
         // a sick endpoint, not a legacy one: fail the slot instead of
         // silently downgrading a healthy v2 fleet to the text wire
         Err(e) => {
-            return Err(anyhow::Error::new(e)
-                .context("reading HELLO2 reply (endpoint answered PONG, then wedged)"));
+            return Err(name_deadline(
+                anyhow::Error::new(e)
+                    .context("reading HELLO2 reply (endpoint answered PONG, then wedged)"),
+                "hello",
+            ));
         }
     }
-    let (mut reader, mut writer) = tcp_connect(endpoint, cfg)?;
+    let (mut reader, mut writer, ctl) = tcp_connect(endpoint, cfg)?;
     writeln!(writer, "PING")?;
     writer.flush()?;
-    expect_pong(&mut reader, &mut line, "health probe (text fallback)")?;
-    Ok(SlotConn::new(reader, writer, false))
+    expect_pong(&mut reader, &mut line, "health probe (text fallback)")
+        .map_err(|e| name_deadline(e, "hello"))?;
+    Ok(SlotConn::new(reader, writer, &ctl, &cfg.deadlines, false))
+}
+
+/// [`connect`] under the configured backoff policy: transient failures
+/// (refused, accept-then-die flapping, negotiation timeouts) are
+/// retried with deterministically jittered exponential delays, and the
+/// endpoint is condemned once the attempt budget is spent. The jitter
+/// stream is keyed by endpoint name and slot so parallel slots don't
+/// thunder in lockstep, yet every run with the same policy seed replays
+/// the same schedule.
+fn connect_with_retry(endpoint: &str, key: u64, cfg: &DispatchConfig) -> Result<SlotConn> {
+    let mut fnv = Fnv64::new();
+    fnv.update(endpoint.as_bytes());
+    let mut backoff = cfg.retry.schedule(fnv.finish() ^ key);
+    loop {
+        match connect(endpoint, cfg) {
+            Ok(c) => return Ok(c),
+            Err(e) => match backoff.next_delay() {
+                Some(d) => std::thread::sleep(d),
+                None => {
+                    return Err(e.context(format!(
+                        "endpoint condemned after {} connection attempt(s)",
+                        cfg.retry.attempts.max(1)
+                    )))
+                }
+            },
+        }
+    }
 }
 
 /// Per-endpoint connection state a [`FleetSession`] holds across rounds.
@@ -457,8 +535,8 @@ impl<'a> FleetSession<'a> {
         }
         let mut conns = Vec::with_capacity(cfg.endpoints.len());
         let mut failures = Vec::new();
-        for ep in &cfg.endpoints {
-            match connect(ep, cfg) {
+        for (i, ep) in cfg.endpoints.iter().enumerate() {
+            match connect_with_retry(ep, i as u64, cfg) {
                 Ok(c) if c.v2 => conns.push(Some(EndpointState {
                     conn: c,
                     ghash: None,
@@ -651,6 +729,21 @@ mod tests {
     use crate::shard::remote::ShardServer;
     use crate::shard::spill::{spill_from_graph, SpillConfig};
     use crate::util::rng::Rng;
+    use std::time::Duration;
+
+    /// A connect budget for tests that point at dead endpoints: fail
+    /// fast, retry fast, keep the suite quick.
+    fn fast_fail() -> (Deadlines, BackoffPolicy) {
+        (
+            Deadlines { connect: Duration::from_millis(300), ..Deadlines::default() },
+            BackoffPolicy {
+                base: Duration::from_millis(2),
+                cap: Duration::from_millis(10),
+                attempts: 2,
+                seed: 7,
+            },
+        )
+    }
 
     fn random_graph(seed: u64, n: usize, m: usize, k: usize) -> Graph {
         let mut rng = Rng::new(seed);
@@ -699,8 +792,10 @@ mod tests {
         let live = ShardServer::start("127.0.0.1:0").unwrap();
         // 127.0.0.1:1 — reserved port, nothing listens: connect fails,
         // every shard lands on the survivor
+        let (deadlines, retry) = fast_fail();
         let cfg = DispatchConfig {
-            connect_timeout: Duration::from_millis(500),
+            deadlines,
+            retry,
             ..DispatchConfig::new(vec![
                 "127.0.0.1:1".to_string(),
                 live.addr().to_string(),
@@ -983,8 +1078,10 @@ mod tests {
         let g = random_graph(573, 80, 400, 3);
         let sp = spill(&g, "sessionconnect", 4);
         let live = ShardServer::start("127.0.0.1:0").unwrap();
+        let (deadlines, retry) = fast_fail();
         let cfg = DispatchConfig {
-            connect_timeout: Duration::from_millis(300),
+            deadlines,
+            retry,
             ..DispatchConfig::new(vec![
                 "127.0.0.1:1".to_string(),
                 live.addr().to_string(),
@@ -1009,8 +1106,10 @@ mod tests {
     fn whole_fleet_dead_reports_every_endpoint() {
         let g = random_graph(563, 30, 90, 2);
         let sp = spill(&g, "allgone", 2);
+        let (deadlines, retry) = fast_fail();
         let cfg = DispatchConfig {
-            connect_timeout: Duration::from_millis(300),
+            deadlines,
+            retry,
             ..DispatchConfig::new(vec![
                 "127.0.0.1:1".to_string(),
                 "127.0.0.1:2".to_string(),
@@ -1020,6 +1119,57 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("0/2 shards"), "{msg}");
         assert!(msg.contains("127.0.0.1:1") && msg.contains("127.0.0.1:2"), "{msg}");
+    }
+
+    #[test]
+    fn flapping_endpoint_is_condemned_within_attempt_budget() {
+        use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+        // an endpoint that accepts and immediately slams the door,
+        // forever: every connect attempt sees EOF instead of PONG. The
+        // retry loop must spend exactly `retry.attempts` connections on
+        // it, then condemn — and the survivor finishes the job.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let flap_addr = listener.local_addr().unwrap().to_string();
+        listener.set_nonblocking(true).unwrap();
+        let accepts = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (accepts_t, stop_t) = (accepts.clone(), stop.clone());
+        let flapper = std::thread::spawn(move || {
+            while !stop_t.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        accepts_t.fetch_add(1, Ordering::Relaxed);
+                        drop(stream);
+                    }
+                    Err(_) => std::thread::sleep(Duration::from_millis(2)),
+                }
+            }
+        });
+        let g = random_graph(574, 60, 300, 3);
+        let sp = spill(&g, "flap", 4);
+        let live = ShardServer::start("127.0.0.1:0").unwrap();
+        let attempts = 3;
+        let cfg = DispatchConfig {
+            retry: BackoffPolicy {
+                base: Duration::from_millis(2),
+                cap: Duration::from_millis(10),
+                attempts,
+                seed: 42,
+            },
+            ..DispatchConfig::new(vec![flap_addr, live.addr().to_string()])
+        };
+        let opts = crate::gee::GeeOptions::NONE;
+        let expect = SparseGee::fast().embed(&g, &opts);
+        let z = embed_remote(&sp, &opts, &cfg).unwrap();
+        assert_eq!(z.data, expect.data);
+        assert_eq!(
+            accepts.load(Ordering::Relaxed),
+            attempts as u64,
+            "retry loop must spend exactly the attempt budget on a flapping endpoint"
+        );
+        stop.store(true, Ordering::Relaxed);
+        flapper.join().unwrap();
+        live.stop();
     }
 
     #[test]

@@ -54,7 +54,7 @@ pub mod worker;
 pub use dispatch::{embed_remote, DispatchConfig, FleetSession};
 pub use plan::{resolve_shards, GlobalPass, ShardPlan};
 pub use process::{embed_multiprocess, ProcessConfig};
-pub use remote::ShardServer;
+pub use remote::{DaemonConfig, ShardServer};
 pub use spill::{embed_out_of_core, SpillConfig, SpilledShards};
 pub use worker::{run_worker, WorkerArgs};
 

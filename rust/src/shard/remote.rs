@@ -66,9 +66,10 @@
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -79,6 +80,8 @@ use crate::gee::options::GeeOptions;
 use crate::gee::weights::weight_values;
 use crate::gee::workspace::EmbedWorkspace;
 use crate::graph::io::parse_edge_fields;
+use crate::util::fault::{FaultPlan, FaultyStream};
+use crate::util::retry;
 
 /// Vertex ids travel as u32, so no header may claim more vertices.
 pub const MAX_FRAME_VERTICES: usize = u32::MAX as usize;
@@ -269,6 +272,56 @@ impl GlobalsHeader {
     }
 }
 
+/// Connections dropped because no header arrived within `idle_timeout`.
+static REAPED_IDLE: AtomicU64 = AtomicU64::new(0);
+/// `keep=1` payloads dropped because they outlived `keep_ttl`.
+static EXPIRED_KEEPS: AtomicU64 = AtomicU64::new(0);
+/// Live `keep=1` payloads across every connection in this process —
+/// the leak gauge the chaos soak drives back to zero.
+static CACHED_PAYLOADS: AtomicI64 = AtomicI64::new(0);
+
+/// Process-wide daemon lifecycle counters:
+/// `(idle connections reaped, keep=1 payloads expired, payloads live now)`.
+/// Also served over the wire as the `STATS` verb.
+pub fn reap_stats() -> (u64, u64, i64) {
+    (
+        REAPED_IDLE.load(Ordering::Relaxed),
+        EXPIRED_KEEPS.load(Ordering::Relaxed),
+        CACHED_PAYLOADS.load(Ordering::Relaxed),
+    )
+}
+
+/// Daemon lifecycle and robustness knobs (CLI: `gee shard-serve`).
+#[derive(Clone, Debug)]
+pub struct DaemonConfig {
+    /// Serve only the v1 text protocol (legacy-daemon emulation).
+    pub text_only: bool,
+    /// Reap a connection when no request header arrives within this
+    /// budget — a dead driver cannot pin a thread (or its `keep=1`
+    /// payloads) forever.
+    pub idle_timeout: Option<Duration>,
+    /// Per-read/write progress budget once a request has started.
+    pub io_timeout: Option<Duration>,
+    /// Drop `keep=1` edge payloads not re-embedded within this window;
+    /// an expired range fails `RESHARD` with the usual typed error.
+    pub keep_ttl: Option<Duration>,
+    /// Deterministic fault plan armed on accepted connections (chaos
+    /// testing; see [`crate::util::fault`]).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for DaemonConfig {
+    fn default() -> Self {
+        DaemonConfig {
+            text_only: false,
+            idle_timeout: Some(Duration::from_secs(300)),
+            io_timeout: Some(Duration::from_secs(60)),
+            keep_ttl: Some(Duration::from_secs(600)),
+            fault: None,
+        }
+    }
+}
+
 /// Per-connection scratch: every buffer is reused across the pipelined
 /// requests of one connection, so a fleet daemon serving a long driver
 /// session settles into zero steady-state allocation growth. The same
@@ -304,11 +357,12 @@ struct ConnState {
     cache: std::collections::HashMap<(usize, usize), CachedShard>,
 }
 
-/// One retained `SHARD2 keep=1` edge payload.
+/// One retained `SHARD2 keep=1` edge payload, stamped for TTL expiry.
 struct CachedShard {
     src: Vec<u32>,
     dst: Vec<u32>,
     w: Vec<f64>,
+    kept_at: Instant,
 }
 
 impl ConnState {
@@ -330,6 +384,51 @@ impl ConnState {
             cache: std::collections::HashMap::new(),
         }
     }
+
+    /// Retain a payload, keeping the process-wide gauge in step
+    /// (replacement of the same row range is not a net gain).
+    fn cache_insert(&mut self, key: (usize, usize), val: CachedShard) {
+        if self.cache.insert(key, val).is_none() {
+            CACHED_PAYLOADS.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop every retained payload (v1 clobber / GLOBALS re-dimension).
+    fn cache_clear(&mut self) {
+        let n = self.cache.len() as i64;
+        if n > 0 {
+            CACHED_PAYLOADS.fetch_sub(n, Ordering::Relaxed);
+        }
+        self.cache.clear();
+    }
+
+    /// Expire payloads older than `ttl`; counted so an operator can see
+    /// dead drivers' memory being reclaimed.
+    fn cache_purge_expired(&mut self, ttl: Option<Duration>) {
+        let Some(ttl) = ttl else { return };
+        if self.cache.is_empty() {
+            return;
+        }
+        let before = self.cache.len();
+        let now = Instant::now();
+        self.cache
+            .retain(|_, c| now.duration_since(c.kept_at) <= ttl);
+        let dropped = (before - self.cache.len()) as i64;
+        if dropped > 0 {
+            EXPIRED_KEEPS.fetch_add(dropped as u64, Ordering::Relaxed);
+            CACHED_PAYLOADS.fetch_sub(dropped, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for ConnState {
+    fn drop(&mut self) {
+        // a closing connection releases its retained payloads
+        let n = self.cache.len() as i64;
+        if n > 0 {
+            CACHED_PAYLOADS.fetch_sub(n, Ordering::Relaxed);
+        }
+    }
 }
 
 /// A running shard-worker daemon bound to `addr()`.
@@ -345,7 +444,7 @@ impl ShardServer {
     /// keeps one connection per dispatch slot, so connection count
     /// equals fleet slot count.
     pub fn start(bind: &str) -> Result<ShardServer> {
-        Self::start_with(bind, false)
+        Self::start_with_config(bind, DaemonConfig::default())
     }
 
     /// Serve only the v1 text protocol — `HELLO2`/`GLOBALS`/`SHARD2`
@@ -353,22 +452,29 @@ impl ShardServer {
     /// stand-in for a legacy daemon in negotiation tests and the CI
     /// mixed-fleet smoke (CLI: `gee shard-serve --text-only`).
     pub fn start_text_only(bind: &str) -> Result<ShardServer> {
-        Self::start_with(bind, true)
+        Self::start_with_config(
+            bind,
+            DaemonConfig { text_only: true, ..DaemonConfig::default() },
+        )
     }
 
-    fn start_with(bind: &str, text_only: bool) -> Result<ShardServer> {
+    /// Bind and serve under explicit lifecycle/chaos configuration.
+    pub fn start_with_config(bind: &str, cfg: DaemonConfig) -> Result<ShardServer> {
         let listener =
             TcpListener::bind(bind).with_context(|| format!("bind {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let cfg = Arc::new(cfg);
         let accept_thread = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        let cfg = Arc::clone(&cfg);
                         std::thread::spawn(move || {
-                            let _ = handle_connection(stream, text_only);
+                            let stream = FaultPlan::wrap(&cfg.fault, stream);
+                            let _ = handle_connection(stream, &cfg);
                         });
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -394,22 +500,49 @@ impl ShardServer {
     }
 }
 
-fn handle_connection(stream: TcpStream, text_only: bool) -> Result<()> {
+fn handle_connection(stream: FaultyStream, cfg: &DaemonConfig) -> Result<()> {
+    let text_only = cfg.text_only;
     stream.set_nodelay(true).ok();
+    // write progress budget: a peer that stops draining replies cannot
+    // pin this thread forever
+    stream.set_write_timeout(cfg.io_timeout).ok();
+    // `try_clone` dups the fd but socket options live on the shared file
+    // description, so this control handle flips the read budget between
+    // the idle (header) phase and the in-request phase for both halves
+    let ctl = stream.try_clone()?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     let mut st = ConnState::new();
     loop {
         st.line.clear();
-        if reader.read_line(&mut st.line)? == 0 {
-            return Ok(()); // client closed
+        ctl.set_read_timeout(cfg.idle_timeout).ok();
+        match reader.read_line(&mut st.line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {}
+            Err(e) if retry::is_timeout(&e) => {
+                // no (complete) header within the idle budget: reap the
+                // connection — and with it any retained keep=1 payloads
+                REAPED_IDLE.fetch_add(1, Ordering::Relaxed);
+                let _ = writeln!(writer, "ERR idle connection reaped (header deadline exceeded)");
+                let _ = writer.flush();
+                bail!("idle connection reaped (header deadline exceeded)");
+            }
+            Err(e) => return Err(e.into()),
         }
+        ctl.set_read_timeout(cfg.io_timeout).ok();
+        st.cache_purge_expired(cfg.keep_ttl);
         let line = st.line.trim().to_string();
         if line.is_empty() {
             continue;
         }
         if line == "PING" {
             writeln!(writer, "PONG")?;
+            writer.flush()?;
+            continue;
+        }
+        if line == "STATS" {
+            let (reaped, expired, cached) = reap_stats();
+            writeln!(writer, "STATS cached={cached} reaped={reaped} expired={expired}")?;
             writer.flush()?;
             continue;
         }
@@ -465,7 +598,7 @@ fn serve_shard(
     // payloads that referenced its dimensions) so a later SHARD2 or
     // RESHARD cannot reference vectors that are no longer there
     st.g_hash = None;
-    st.cache.clear();
+    st.cache_clear();
 
     // globals: n labels, then n degrees — allocation tracks received data
     st.labels.clear();
@@ -551,7 +684,7 @@ fn serve_globals(
     if h.n != st.g_n {
         // retained edge payloads were validated against the old n; a
         // re-dimensioned connection must not serve them
-        st.cache.clear();
+        st.cache_clear();
     }
     let mut hasher = codec::Fnv64::new();
 
@@ -703,9 +836,14 @@ fn serve_shard2(
     if keep {
         // retain the decoded payload for RESHARD rounds (replacing any
         // earlier payload kept for the same row range)
-        st.cache.insert(
+        st.cache_insert(
             (h.row0, h.row1),
-            CachedShard { src: st.src.clone(), dst: st.dst.clone(), w: st.w.clone() },
+            CachedShard {
+                src: st.src.clone(),
+                dst: st.dst.clone(),
+                w: st.w.clone(),
+                kept_at: Instant::now(),
+            },
         );
     }
     Ok(())
@@ -1579,6 +1717,95 @@ mod tests {
         line.clear();
         reader.read_line(&mut line).unwrap();
         assert!(line.starts_with("ERR"), "{line}");
+        server.stop();
+    }
+
+    #[test]
+    fn idle_connection_is_reaped_with_named_error() {
+        let server = ShardServer::start_with_config(
+            "127.0.0.1:0",
+            DaemonConfig {
+                idle_timeout: Some(Duration::from_millis(100)),
+                ..DaemonConfig::default()
+            },
+        )
+        .unwrap();
+        let (reaped_before, _, _) = reap_stats();
+        let (mut reader, mut writer) = raw_conn(&server);
+        // healthy request first: the idle budget only bites between verbs
+        writeln!(writer, "PING").unwrap();
+        writer.flush().unwrap();
+        assert_eq!(read_reply(&mut reader), "PONG");
+        // then go silent; the daemon must reap us with a named error
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(
+            line.contains("idle connection reaped"),
+            "expected reap notice, got {line:?}"
+        );
+        let (reaped_after, _, _) = reap_stats();
+        assert!(reaped_after > reaped_before, "reap counter must advance");
+        server.stop();
+    }
+
+    #[test]
+    fn keep_payloads_expire_after_ttl() {
+        let server = ShardServer::start_with_config(
+            "127.0.0.1:0",
+            DaemonConfig {
+                keep_ttl: Some(Duration::from_millis(500)),
+                ..DaemonConfig::default()
+            },
+        )
+        .unwrap();
+        let dir = std::env::temp_dir()
+            .join(format!("gee_remote_ttl_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let g = random_graph(555, 40, 200, 3);
+        let sp = spill_from_graph(
+            &g,
+            &SpillConfig { shards: 1, ..SpillConfig::new(&dir) },
+        )
+        .unwrap();
+        let (mut reader, mut writer) = raw_conn(&server);
+        let hash = codec::globals_hash(&sp.labels, &sp.plan.deg);
+        send_globals(&mut reader, &mut writer, &sp, hash).unwrap();
+        let mut scratch = Vec::new();
+        let opts = GeeOptions::ALL;
+        request_shard_v2(
+            &mut reader, &mut writer, &sp, &opts, 0, hash, &mut scratch, true,
+        )
+        .unwrap();
+        let (_, expired_before, _) = reap_stats();
+        // immediate RESHARD works: the payload is fresh
+        request_reshard(
+            &mut reader, &mut writer, &sp.plan, &opts, 0, hash, &mut scratch,
+        )
+        .unwrap();
+        // after the TTL the payload is purged and RESHARD gets the typed
+        // "nothing retained" error
+        std::thread::sleep(Duration::from_millis(700));
+        let err = request_reshard(
+            &mut reader, &mut writer, &sp.plan, &opts, 0, hash, &mut scratch,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("keep=1"), "{err:#}");
+        let (_, expired_after, _) = reap_stats();
+        assert!(expired_after > expired_before, "expiry counter must advance");
+        server.stop();
+    }
+
+    #[test]
+    fn stats_verb_reports_counters() {
+        let server = ShardServer::start("127.0.0.1:0").unwrap();
+        let (mut reader, mut writer) = raw_conn(&server);
+        writeln!(writer, "STATS").unwrap();
+        writer.flush().unwrap();
+        let t = read_reply(&mut reader);
+        assert!(t.starts_with("STATS cached="), "{t}");
+        assert!(t.contains(" reaped="), "{t}");
+        assert!(t.contains(" expired="), "{t}");
         server.stop();
     }
 }

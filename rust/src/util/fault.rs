@@ -1,0 +1,527 @@
+//! Deterministic fault injection for the network lanes.
+//!
+//! A [`FaultPlan`] is a seeded schedule of wire misbehaviour — stalls,
+//! partial writes, mid-frame EOFs, garbage bytes, delayed and silently
+//! dropped writes — that servers arm on accepted connections. Each accepted
+//! connection gets its own deterministic sub-stream keyed by the plan seed
+//! and a per-plan connection counter, so a given `(plan seed, connection
+//! index)` pair always misbehaves identically while concurrent connections
+//! misbehave differently. Protocol phase is approximated by an op-count
+//! warmup (`grace`): the first `grace` reads/writes on a connection pass
+//! clean, which lets negotiation succeed before the chaos starts (set
+//! `grace=0` to attack the handshake itself).
+//!
+//! The shim wraps `TcpStream` concretely (not a generic `Read`) because the
+//! serving stack splits every connection into reader/writer halves with
+//! `try_clone`; a [`FaultyStream`] clone shares the fault state of its
+//! sibling so both halves consume one schedule.
+//!
+//! Plans are per-server configuration, *not* process-global, so parallel
+//! tests cannot interfere. The CLI wires `GEE_FAULT_PLAN` (see
+//! [`FaultPlan::from_env`]) into `serve`/`shard-serve` so a daemon fleet can
+//! run under a plan end to end; plan syntax is documented on
+//! [`FaultPlan::parse`].
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// Seeded schedule of wire faults, armed per accepted connection.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// Root seed; per-connection streams derive from `seed ^ conn_index`.
+    pub seed: u64,
+    /// Clean ops before faults may fire (lets negotiation complete).
+    pub grace: u64,
+    /// Per-op probability of a stall, and how long it sleeps.
+    pub stall: f64,
+    pub stall_ms: u64,
+    /// Per-op probability of a hard EOF (FIN + dead connection).
+    pub eof: f64,
+    /// Per-op probability of corrupting the bytes in flight.
+    pub garbage: f64,
+    /// Per-write probability of a short write followed by a dead socket.
+    pub partial: f64,
+    /// Per-write probability of silently swallowing the write (peer waits
+    /// for bytes that never arrive — exercises the peer's deadlines).
+    pub drop: f64,
+    /// Per-op probability of a small latency injection, and its size.
+    pub delay: f64,
+    pub delay_ms: u64,
+    conn_seq: AtomicU64,
+}
+
+impl FaultPlan {
+    /// A plan that never fires; useful as a parse fallback.
+    pub fn quiet(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            grace: 0,
+            stall: 0.0,
+            stall_ms: 0,
+            eof: 0.0,
+            garbage: 0.0,
+            partial: 0.0,
+            drop: 0.0,
+            delay: 0.0,
+            delay_ms: 0,
+            conn_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Derive one grid point of the chaos soak from a seed: small fault
+    /// probabilities (most jobs should complete), a warmup long enough that
+    /// negotiation usually survives, stalls long enough to trip tight
+    /// compute/frame deadlines.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut r = Rng::new(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xC4A0_5);
+        FaultPlan {
+            seed,
+            grace: 2 + r.below(12) as u64,
+            stall: 0.01 + 0.03 * r.f64(),
+            stall_ms: 1_500 + r.below(2_000) as u64,
+            eof: 0.01 + 0.02 * r.f64(),
+            garbage: 0.01 + 0.02 * r.f64(),
+            partial: 0.01 + 0.02 * r.f64(),
+            drop: 0.005 + 0.015 * r.f64(),
+            delay: 0.10 + 0.20 * r.f64(),
+            delay_ms: 1 + r.below(8) as u64,
+            conn_seq: AtomicU64::new(0),
+        }
+    }
+
+    /// Parse the `GEE_FAULT_PLAN` syntax: whitespace- or comma-separated
+    /// `key=value` pairs. Probabilities are `0.0..=1.0`; durations are
+    /// milliseconds attached with a colon.
+    ///
+    /// ```text
+    /// seed=7 grace=4 stall=0.05:2000 eof=0.02 garbage=0.02 \
+    ///     partial=0.02 drop=0.01 delay=0.2:5
+    /// ```
+    ///
+    /// Unknown keys are an error so typos don't silently run clean.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::quiet(1);
+        for tok in spec.split(|c: char| c.is_whitespace() || c == ',') {
+            if tok.is_empty() {
+                continue;
+            }
+            let (key, val) = tok
+                .split_once('=')
+                .ok_or_else(|| format!("fault plan: expected key=value, got {tok:?}"))?;
+            let prob_dur = |v: &str| -> Result<(f64, u64), String> {
+                let (p, ms) = match v.split_once(':') {
+                    Some((p, ms)) => (
+                        p.parse::<f64>().map_err(|e| format!("fault plan {key}: {e}"))?,
+                        ms.parse::<u64>().map_err(|e| format!("fault plan {key}: {e}"))?,
+                    ),
+                    None => (
+                        v.parse::<f64>().map_err(|e| format!("fault plan {key}: {e}"))?,
+                        0,
+                    ),
+                };
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("fault plan {key}: probability {p} out of [0,1]"));
+                }
+                Ok((p, ms))
+            };
+            match key {
+                "seed" => {
+                    plan.seed = val
+                        .parse()
+                        .map_err(|e| format!("fault plan seed: {e}"))?;
+                }
+                "grace" => {
+                    plan.grace = val
+                        .parse()
+                        .map_err(|e| format!("fault plan grace: {e}"))?;
+                }
+                "stall" => (plan.stall, plan.stall_ms) = prob_dur(val)?,
+                "eof" => (plan.eof, _) = prob_dur(val)?,
+                "garbage" => (plan.garbage, _) = prob_dur(val)?,
+                "partial" => (plan.partial, _) = prob_dur(val)?,
+                "drop" => (plan.drop, _) = prob_dur(val)?,
+                "delay" => (plan.delay, plan.delay_ms) = prob_dur(val)?,
+                _ => return Err(format!("fault plan: unknown key {key:?}")),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Read a plan from the `GEE_FAULT_PLAN` environment variable.
+    /// Returns `None` when unset/empty; a malformed plan is an error so a
+    /// chaos run never silently degrades to a clean one.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>, String> {
+        match std::env::var("GEE_FAULT_PLAN") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                FaultPlan::parse(&spec).map(|p| Some(Arc::new(p)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// Arm the plan on one accepted connection. Consumes the next
+    /// connection index so every accepted socket gets its own
+    /// deterministic fault stream.
+    pub fn arm(self: &Arc<Self>, stream: TcpStream) -> FaultyStream {
+        let conn = self.conn_seq.fetch_add(1, Ordering::Relaxed);
+        FaultyStream {
+            inner: stream,
+            fault: Some(Arc::new(ConnFault {
+                plan: Arc::clone(self),
+                rng: Mutex::new(Rng::new(
+                    self.seed ^ conn.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0xFA_17,
+                )),
+                ops: AtomicU64::new(0),
+                state: AtomicU8::new(ALIVE),
+            })),
+        }
+    }
+
+    /// Wrap a stream under an optional plan; `None` is a zero-cost
+    /// passthrough.
+    pub fn wrap(plan: &Option<Arc<FaultPlan>>, stream: TcpStream) -> FaultyStream {
+        match plan {
+            Some(p) => p.arm(stream),
+            None => FaultyStream::plain(stream),
+        }
+    }
+}
+
+const ALIVE: u8 = 0;
+const DEAD_EOF: u8 = 1;
+const DEAD_RESET: u8 = 2;
+
+/// Shared per-connection fault state (reader and writer halves of a
+/// `try_clone` pair consume one schedule).
+#[derive(Debug)]
+struct ConnFault {
+    plan: Arc<FaultPlan>,
+    rng: Mutex<Rng>,
+    ops: AtomicU64,
+    state: AtomicU8,
+}
+
+/// One fault decision for one read/write op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Action {
+    Pass,
+    Delay(u64),
+    Stall(u64),
+    Eof,
+    Garbage,
+    Partial,
+    DropWrite,
+}
+
+impl ConnFault {
+    fn decide(&self, is_write: bool) -> Action {
+        let op = self.ops.fetch_add(1, Ordering::Relaxed);
+        if op < self.plan.grace {
+            return Action::Pass;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        let x = rng.f64();
+        let p = &self.plan;
+        // One draw walks a cumulative ladder so at most one fault fires
+        // per op and the sequence is a pure function of the rng stream.
+        let mut edge = p.stall;
+        if x < edge {
+            return Action::Stall(p.stall_ms);
+        }
+        edge += p.eof;
+        if x < edge {
+            return Action::Eof;
+        }
+        edge += p.garbage;
+        if x < edge {
+            return Action::Garbage;
+        }
+        edge += p.partial;
+        if x < edge && is_write {
+            return Action::Partial;
+        }
+        edge += p.drop;
+        if x < edge && is_write {
+            return Action::DropWrite;
+        }
+        edge += p.delay;
+        if x < edge {
+            return Action::Delay(p.delay_ms);
+        }
+        Action::Pass
+    }
+
+    /// Deterministically corrupt bytes in flight (at least one flipped).
+    fn corrupt(&self, buf: &mut [u8]) {
+        if buf.is_empty() {
+            return;
+        }
+        let mut rng = self.rng.lock().unwrap_or_else(|e| e.into_inner());
+        let flips = 1 + rng.below(4.min(buf.len()));
+        for _ in 0..flips {
+            let at = rng.below(buf.len());
+            buf[at] ^= (rng.next_u64() as u8) | 0x01;
+        }
+    }
+}
+
+/// `TcpStream` wrapper that injects the plan's faults. With no plan armed
+/// it is a passthrough with one branch of overhead per op.
+#[derive(Debug)]
+pub struct FaultyStream {
+    inner: TcpStream,
+    fault: Option<Arc<ConnFault>>,
+}
+
+impl FaultyStream {
+    /// Wrap with no faults (production path).
+    pub fn plain(stream: TcpStream) -> Self {
+        FaultyStream {
+            inner: stream,
+            fault: None,
+        }
+    }
+
+    /// Clone the handle; the clone shares this connection's fault state.
+    pub fn try_clone(&self) -> io::Result<FaultyStream> {
+        Ok(FaultyStream {
+            inner: self.inner.try_clone()?,
+            fault: self.fault.clone(),
+        })
+    }
+
+    pub fn set_read_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        self.inner.set_read_timeout(dur)
+    }
+
+    pub fn set_write_timeout(&self, dur: Option<Duration>) -> io::Result<()> {
+        self.inner.set_write_timeout(dur)
+    }
+
+    pub fn set_nodelay(&self, on: bool) -> io::Result<()> {
+        self.inner.set_nodelay(on)
+    }
+
+    pub fn peer_addr(&self) -> io::Result<std::net::SocketAddr> {
+        self.inner.peer_addr()
+    }
+
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        self.inner.shutdown(how)
+    }
+
+    fn kill(&self, state: u8) {
+        if let Some(f) = &self.fault {
+            f.state.store(state, Ordering::Relaxed);
+        }
+        let _ = self.inner.shutdown(Shutdown::Both);
+    }
+
+    fn dead_read(&self, state: u8) -> io::Result<usize> {
+        match state {
+            DEAD_EOF => Ok(0),
+            _ => Err(io::Error::new(
+                io::ErrorKind::ConnectionReset,
+                "fault: connection reset",
+            )),
+        }
+    }
+}
+
+impl Read for FaultyStream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let Some(f) = self.fault.clone() else {
+            return self.inner.read(buf);
+        };
+        let state = f.state.load(Ordering::Relaxed);
+        if state != ALIVE {
+            return self.dead_read(state);
+        }
+        match f.decide(false) {
+            Action::Pass | Action::Partial | Action::DropWrite => self.inner.read(buf),
+            Action::Delay(ms) | Action::Stall(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.read(buf)
+            }
+            Action::Eof => {
+                self.kill(DEAD_EOF);
+                Ok(0)
+            }
+            Action::Garbage => {
+                let n = self.inner.read(buf)?;
+                f.corrupt(&mut buf[..n]);
+                Ok(n)
+            }
+        }
+    }
+}
+
+impl Write for FaultyStream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let Some(f) = self.fault.clone() else {
+            return self.inner.write(buf);
+        };
+        let state = f.state.load(Ordering::Relaxed);
+        if state != ALIVE {
+            return Err(io::Error::new(
+                io::ErrorKind::BrokenPipe,
+                "fault: broken pipe",
+            ));
+        }
+        match f.decide(true) {
+            Action::Pass => self.inner.write(buf),
+            Action::Delay(ms) | Action::Stall(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.write(buf)
+            }
+            Action::Eof => {
+                self.kill(DEAD_RESET);
+                Err(io::Error::new(
+                    io::ErrorKind::BrokenPipe,
+                    "fault: broken pipe",
+                ))
+            }
+            Action::Garbage => {
+                let mut corrupted = buf.to_vec();
+                f.corrupt(&mut corrupted);
+                let n = self.inner.write(&corrupted)?;
+                Ok(n)
+            }
+            Action::Partial => {
+                let n = (buf.len() / 2).max(1).min(buf.len());
+                let wrote = self.inner.write(&buf[..n])?;
+                self.kill(DEAD_RESET);
+                Ok(wrote)
+            }
+            Action::DropWrite => Ok(buf.len()),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn_fault(plan: FaultPlan) -> ConnFault {
+        let plan = Arc::new(plan);
+        ConnFault {
+            rng: Mutex::new(Rng::new(plan.seed ^ 0xFA_17)),
+            ops: AtomicU64::new(0),
+            state: AtomicU8::new(ALIVE),
+            plan,
+        }
+    }
+
+    #[test]
+    fn parse_full_spec() {
+        let p = FaultPlan::parse(
+            "seed=7 grace=4 stall=0.05:2000 eof=0.02 garbage=0.03 partial=0.02 drop=0.01 delay=0.2:5",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.grace, 4);
+        assert!((p.stall - 0.05).abs() < 1e-12);
+        assert_eq!(p.stall_ms, 2000);
+        assert!((p.eof - 0.02).abs() < 1e-12);
+        assert!((p.garbage - 0.03).abs() < 1e-12);
+        assert!((p.partial - 0.02).abs() < 1e-12);
+        assert!((p.drop - 0.01).abs() < 1e-12);
+        assert!((p.delay - 0.2).abs() < 1e-12);
+        assert_eq!(p.delay_ms, 5);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys_and_bad_probs() {
+        assert!(FaultPlan::parse("bogus=1").is_err());
+        assert!(FaultPlan::parse("stall").is_err());
+        assert!(FaultPlan::parse("eof=1.5").is_err());
+        assert!(FaultPlan::parse("seed=x").is_err());
+    }
+
+    #[test]
+    fn decisions_are_reproducible_for_seed() {
+        let a = conn_fault(FaultPlan::from_seed(3));
+        let b = conn_fault(FaultPlan::from_seed(3));
+        let da: Vec<_> = (0..200).map(|i| a.decide(i % 2 == 0)).collect();
+        let db: Vec<_> = (0..200).map(|i| b.decide(i % 2 == 0)).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn grace_ops_always_pass() {
+        let mut plan = FaultPlan::from_seed(5);
+        plan.grace = 10;
+        plan.eof = 1.0; // every post-grace op faults
+        plan.stall = 0.0;
+        let f = conn_fault(plan);
+        for _ in 0..10 {
+            assert_eq!(f.decide(false), Action::Pass);
+        }
+        assert_eq!(f.decide(false), Action::Eof);
+    }
+
+    #[test]
+    fn corrupt_changes_bytes_deterministically() {
+        let plan = FaultPlan::from_seed(9);
+        let a = conn_fault(FaultPlan::from_seed(9));
+        let b = conn_fault(plan);
+        let orig = [0u8; 32];
+        let mut x = orig;
+        let mut y = orig;
+        a.corrupt(&mut x);
+        b.corrupt(&mut y);
+        assert_ne!(x, orig, "corrupt must flip at least one byte");
+        assert_eq!(x, y, "corruption is a pure function of the rng stream");
+    }
+
+    #[test]
+    fn faulty_stream_roundtrip_with_quiet_plan() {
+        use std::io::{BufRead, BufReader, Write as _};
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let plan = Arc::new(FaultPlan::quiet(1));
+        let srv = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let fs = plan.arm(s);
+            let mut w = fs.try_clone().unwrap();
+            let mut r = BufReader::new(fs);
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            w.write_all(line.as_bytes()).unwrap();
+            w.flush().unwrap();
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.write_all(b"ping\n").unwrap();
+        let mut r = BufReader::new(c.try_clone().unwrap());
+        let mut echo = String::new();
+        r.read_line(&mut echo).unwrap();
+        assert_eq!(echo, "ping\n");
+        srv.join().unwrap();
+    }
+
+    #[test]
+    fn eof_fault_is_sticky() {
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let _c = TcpStream::connect(addr).unwrap();
+        let (s, _) = listener.accept().unwrap();
+        let mut plan = FaultPlan::quiet(1);
+        plan.eof = 1.0;
+        let mut fs = Arc::new(plan).arm(s);
+        let mut buf = [0u8; 8];
+        assert_eq!(fs.read(&mut buf).unwrap(), 0, "eof fault reads as EOF");
+        assert_eq!(fs.read(&mut buf).unwrap(), 0, "and stays EOF");
+        assert!(fs.write(b"x").is_err(), "writes after EOF fault fail");
+    }
+}

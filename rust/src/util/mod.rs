@@ -4,7 +4,9 @@
 //! each module documents the substitution.
 
 pub mod benchlog;
+pub mod fault;
 pub mod json;
 pub mod prop;
+pub mod retry;
 pub mod rng;
 pub mod timing;

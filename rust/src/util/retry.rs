@@ -1,0 +1,251 @@
+//! Per-phase wire deadlines and deterministic exponential backoff.
+//!
+//! Every network lane in the serving stack (fleet dispatch <-> shard daemon,
+//! client <-> coordinator, session stream) splits its single blunt
+//! `io_timeout` into distinct budgets keyed to protocol phase:
+//!
+//! * `connect` — TCP three-way handshake.
+//! * `hello`   — protocol negotiation (PING/HELLO2 round trip).
+//! * `header`  — waiting for a request/reply verb line. Doubles as the
+//!   idle-connection budget on accepted connections: a peer that opens a
+//!   socket and never completes a header (a slow-loris) or goes silent is
+//!   dropped when this budget expires.
+//! * `frame`   — per-read/write progress while a length-prefixed body is
+//!   streaming. This is a *progress* budget (per syscall), not a whole-body
+//!   budget, so big frames are fine as long as bytes keep moving.
+//! * `compute` — waiting for a reply after a request was fully sent (the
+//!   peer is embedding, not reading), the one phase that is legitimately
+//!   slow on billion-edge shards.
+//!
+//! Retry paths (reconnects, BUSY replies, flapping endpoints) share one
+//! [`BackoffPolicy`]: bounded exponential with deterministic jitter derived
+//! from a seed, so a retry schedule is bit-reproducible in tests and two
+//! slots hammering the same endpoint desynchronise without `rand`.
+
+use std::time::Duration;
+
+/// Per-phase I/O budgets. `None` disables the budget for that phase.
+#[derive(Clone, Debug)]
+pub struct Deadlines {
+    /// TCP connect budget (client side only).
+    pub connect: Duration,
+    /// Protocol negotiation budget (PING/HELLO2 round trip).
+    pub hello: Option<Duration>,
+    /// Verb/header-line budget; idle + slow-loris budget on accepted conns.
+    pub header: Option<Duration>,
+    /// Per-read/write progress budget while a frame body is streaming.
+    pub frame: Option<Duration>,
+    /// Reply-wait budget after a request is fully sent (peer is computing).
+    pub compute: Option<Duration>,
+}
+
+impl Default for Deadlines {
+    fn default() -> Self {
+        Deadlines {
+            connect: Duration::from_secs(5),
+            hello: Some(Duration::from_secs(10)),
+            // Generous by default: resident sessions and keep-alive client
+            // connections legitimately sit idle between requests.
+            header: Some(Duration::from_secs(300)),
+            frame: Some(Duration::from_secs(60)),
+            compute: Some(Duration::from_secs(600)),
+        }
+    }
+}
+
+impl Deadlines {
+    /// Tight budgets for tests and chaos runs: fail fast, never hang.
+    pub fn tight() -> Self {
+        Deadlines {
+            connect: Duration::from_millis(1_000),
+            hello: Some(Duration::from_millis(2_000)),
+            header: Some(Duration::from_millis(4_000)),
+            frame: Some(Duration::from_millis(2_000)),
+            compute: Some(Duration::from_millis(8_000)),
+        }
+    }
+}
+
+/// True if an I/O error is a socket-timeout expiry (`SO_RCVTIMEO` /
+/// `SO_SNDTIMEO` surface as `WouldBlock` on unix, `TimedOut` on windows).
+pub fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Wrap a phase-budget expiry in a named error so failure reports say
+/// *which* deadline fired, not just "Resource temporarily unavailable".
+pub fn deadline_error(phase: &str, e: std::io::Error) -> std::io::Error {
+    if is_timeout(&e) {
+        std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            format!("{phase} deadline exceeded"),
+        )
+    } else {
+        e
+    }
+}
+
+/// Bounded exponential backoff with deterministic jitter.
+#[derive(Clone, Debug)]
+pub struct BackoffPolicy {
+    /// First retry delay; doubles each attempt.
+    pub base: Duration,
+    /// Ceiling on any single delay.
+    pub cap: Duration,
+    /// Total connection attempts (1 = no retry).
+    pub attempts: u32,
+    /// Jitter seed; the schedule is a pure function of `(seed, key)`.
+    pub seed: u64,
+}
+
+impl Default for BackoffPolicy {
+    fn default() -> Self {
+        BackoffPolicy {
+            base: Duration::from_millis(50),
+            cap: Duration::from_secs(2),
+            attempts: 3,
+            seed: 0x9E37_79B9,
+        }
+    }
+}
+
+impl BackoffPolicy {
+    /// Deterministic schedule for one retry loop. `key` distinguishes
+    /// callers (hash of endpoint + slot) so concurrent loops desync.
+    pub fn schedule(&self, key: u64) -> Backoff {
+        Backoff {
+            policy: self.clone(),
+            rng: crate::util::rng::Rng::new(self.seed ^ key.wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            attempt: 0,
+        }
+    }
+
+    /// Worst-case total sleep across all retries (used for wall-clock
+    /// bounds in tests: condemnation must land inside this plus I/O budgets).
+    pub fn max_total_delay(&self) -> Duration {
+        let mut total = Duration::ZERO;
+        let mut d = self.base;
+        for _ in 1..self.attempts {
+            total += d.min(self.cap);
+            d = d.saturating_mul(2);
+        }
+        total
+    }
+}
+
+/// Iterator over retry delays; yields `attempts - 1` sleeps.
+pub struct Backoff {
+    policy: BackoffPolicy,
+    rng: crate::util::rng::Rng,
+    attempt: u32,
+}
+
+impl Backoff {
+    /// Delay to sleep before the next attempt, or `None` when the attempt
+    /// budget is spent and the endpoint should be condemned. Each delay is
+    /// `min(cap, base * 2^i)` scaled by a jitter factor in `[0.5, 1.0)`.
+    pub fn next_delay(&mut self) -> Option<Duration> {
+        self.attempt += 1;
+        if self.attempt >= self.policy.attempts {
+            return None;
+        }
+        let exp = self
+            .policy
+            .base
+            .saturating_mul(1u32 << (self.attempt - 1).min(20))
+            .min(self.policy.cap);
+        let jitter = 0.5 + 0.5 * self.rng.f64();
+        Some(exp.mul_f64(jitter))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_reproducible_from_seed() {
+        let policy = BackoffPolicy {
+            base: Duration::from_millis(10),
+            cap: Duration::from_millis(500),
+            attempts: 6,
+            seed: 42,
+        };
+        let mut s1 = policy.schedule(7);
+        let mut s2 = policy.schedule(7);
+        let d1: Vec<_> = std::iter::from_fn(|| s1.next_delay()).collect();
+        let d2: Vec<_> = std::iter::from_fn(|| s2.next_delay()).collect();
+        assert_eq!(d1, d2, "same (seed, key) must give same schedule");
+        assert_eq!(d1.len(), 5, "attempts=6 means 5 sleeps");
+    }
+
+    #[test]
+    fn different_keys_desynchronise() {
+        let policy = BackoffPolicy::default();
+        let mut s1 = policy.schedule(1);
+        let mut s2 = policy.schedule(2);
+        let d1: Vec<_> = std::iter::from_fn(|| s1.next_delay()).collect();
+        let d2: Vec<_> = std::iter::from_fn(|| s2.next_delay()).collect();
+        assert_ne!(d1, d2, "different keys must jitter differently");
+    }
+
+    #[test]
+    fn delays_grow_and_respect_cap() {
+        let policy = BackoffPolicy {
+            base: Duration::from_millis(100),
+            cap: Duration::from_millis(350),
+            attempts: 8,
+            seed: 5,
+        };
+        let mut s = policy.schedule(0);
+        let delays: Vec<_> = std::iter::from_fn(|| s.next_delay()).collect();
+        assert_eq!(delays.len(), 7);
+        for (i, d) in delays.iter().enumerate() {
+            let exp = policy
+                .base
+                .saturating_mul(1u32 << i.min(20))
+                .min(policy.cap);
+            assert!(*d <= exp, "delay {d:?} above un-jittered {exp:?}");
+            assert!(*d >= exp.mul_f64(0.5), "delay {d:?} below half of {exp:?}");
+        }
+    }
+
+    #[test]
+    fn single_attempt_means_no_retries() {
+        let policy = BackoffPolicy {
+            attempts: 1,
+            ..BackoffPolicy::default()
+        };
+        assert_eq!(policy.schedule(0).next_delay(), None);
+        assert_eq!(policy.max_total_delay(), Duration::ZERO);
+    }
+
+    #[test]
+    fn max_total_delay_bounds_schedule() {
+        let policy = BackoffPolicy {
+            base: Duration::from_millis(20),
+            cap: Duration::from_millis(200),
+            attempts: 5,
+            seed: 11,
+        };
+        let mut s = policy.schedule(99);
+        let total: Duration = std::iter::from_fn(|| s.next_delay()).sum();
+        assert!(total <= policy.max_total_delay());
+    }
+
+    #[test]
+    fn timeout_errors_are_named() {
+        let raw = std::io::Error::from(std::io::ErrorKind::WouldBlock);
+        let named = deadline_error("header", raw);
+        assert_eq!(named.kind(), std::io::ErrorKind::TimedOut);
+        assert!(named.to_string().contains("header deadline"));
+        let other = std::io::Error::from(std::io::ErrorKind::BrokenPipe);
+        assert_eq!(
+            deadline_error("frame", other).kind(),
+            std::io::ErrorKind::BrokenPipe
+        );
+    }
+}

@@ -1,0 +1,565 @@
+//! Chaos soak (ISSUE 10): every network lane — fleet dispatch, client
+//! embeds, ITER2 cluster jobs, the session stream — runs under a seeded
+//! grid of deterministic fault plans ([`gee_sparse::util::fault`]). The
+//! contract under chaos:
+//!
+//! * every job either completes **bitwise-identical** to the clean run
+//!   or fails with a **named** error, inside a bounded wall clock —
+//!   never a hang;
+//! * nothing leaks: admission permits return, queues drain, daemon-side
+//!   `keep=1` payloads fall back to zero, and the same service keeps
+//!   serving a clean connection afterwards.
+//!
+//! Grid plans carry no `garbage` faults: the binary frames are raw LE
+//! bit patterns with no checksum, so a payload bit-flip is
+//! indistinguishable from real data by design (detecting it would be a
+//! checksum feature, not a robustness property of this PR). Garbage is
+//! exercised separately with the invariant relaxed to
+//! terminates-with-some-outcome-and-keeps-serving, which is exactly
+//! what a checksum-less wire can promise.
+//!
+//! `QUICK=1` shrinks the seed grid to one point (the CI smoke leg).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use gee_sparse::coordinator::server::TcpServer;
+use gee_sparse::coordinator::wire;
+use gee_sparse::coordinator::{
+    ClientConfig, Delta, EmbedClient, EmbedService, ServiceConfig,
+};
+use gee_sparse::gee::sparse_gee::SparseGee;
+use gee_sparse::gee::GeeOptions;
+use gee_sparse::graph::sbm::{generate_sbm, SbmParams};
+use gee_sparse::graph::Graph;
+use gee_sparse::shard::remote::reap_stats;
+use gee_sparse::shard::{
+    embed_remote, spill::spill_from_graph, DaemonConfig, DispatchConfig,
+    FleetSession, ShardServer, SpillConfig,
+};
+use gee_sparse::util::fault::FaultPlan;
+use gee_sparse::util::retry::{BackoffPolicy, Deadlines};
+use gee_sparse::util::rng::Rng;
+
+/// No single job may take longer than this, success or failure. The
+/// deadlines + backoff budgets in the chaos configs add up to well
+/// under it; blowing the bound means something waited unboundedly.
+const JOB_BOUND: Duration = Duration::from_secs(90);
+
+/// One grid point per seed; `QUICK=1` is the CI smoke leg.
+fn seeds() -> Vec<u64> {
+    if std::env::var("QUICK").is_ok() {
+        vec![11]
+    } else {
+        vec![3, 11, 29]
+    }
+}
+
+/// A soak plan: moderate fault rates (most jobs should finish), a grace
+/// long enough that negotiation survives, stalls sized to straddle the
+/// tight frame budget (2s) — some merely slow a read, some trip the
+/// deadline. No garbage (see module docs).
+fn grid_plan(seed: u64) -> Arc<FaultPlan> {
+    let spec = format!(
+        "seed={seed} grace=6 stall=0.02:2500 eof=0.02 partial=0.015 drop=0.01 delay=0.15:3"
+    );
+    Arc::new(FaultPlan::parse(&spec).unwrap())
+}
+
+/// Fast, bounded retries so condemnation lands quickly under chaos.
+fn chaos_retry(seed: u64) -> BackoffPolicy {
+    BackoffPolicy {
+        base: Duration::from_millis(5),
+        cap: Duration::from_millis(40),
+        attempts: 3,
+        seed,
+    }
+}
+
+fn chaos_client_config(seed: u64) -> ClientConfig {
+    ClientConfig {
+        deadlines: Deadlines::tight(),
+        retry: chaos_retry(seed),
+        ..ClientConfig::default()
+    }
+}
+
+/// A failure under chaos must say *what* gave up — a deadline, a
+/// condemned endpoint, a dead connection, a server-sent ERR — not
+/// surface as a bare os error or an empty context chain.
+fn assert_named(lane: &str, msg: &str) {
+    const VOCAB: &[&str] = &[
+        "deadline exceeded",
+        "condemned",
+        "endpoint",
+        "connect",
+        "connection",
+        "closed",
+        "reset",
+        "broken pipe",
+        "pipe",
+        "server error",
+        "busy",
+        "BUSY",
+        "giving up",
+        "eof",
+        "EOF",
+        "ERR",
+        "reply",
+        "frame",
+        "drain",
+        "timed out",
+        "reaped",
+        "stalled",
+        "session",
+        "unexpected",
+        "incomplete",
+    ];
+    assert!(
+        VOCAB.iter().any(|w| msg.contains(w)),
+        "{lane}: failure is not named: {msg:?}"
+    );
+}
+
+fn assert_bounded(lane: &str, t0: Instant) {
+    assert!(
+        t0.elapsed() < JOB_BOUND,
+        "{lane}: job took {:?}, bound is {JOB_BOUND:?}",
+        t0.elapsed()
+    );
+}
+
+/// Poll a condition with a hard bound; chaos cleanup is asynchronous
+/// (daemon connection threads die on their own io timeouts).
+fn wait_for(what: &str, bound: Duration, mut ok: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !ok() {
+        assert!(t0.elapsed() < bound, "{what}: not true within {bound:?}");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("gee_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Self loops + unlabeled vertices, as in the engine-parity suites.
+fn mutate(g: &mut Graph, seed: u64) {
+    let mut rng = Rng::new(seed);
+    for _ in 0..5 {
+        let v = rng.below(g.n) as u32;
+        g.add_edge(v, v, rng.f64() + 0.5);
+    }
+    for _ in 0..g.n / 12 {
+        let v = rng.below(g.n);
+        g.labels[v] = -1;
+    }
+}
+
+/// Reproducible weighted graph for the client-lane tests.
+fn random_graph(
+    seed: u64,
+    n: usize,
+    k: usize,
+    m: usize,
+) -> (Vec<i32>, Vec<(u32, u32, f64)>) {
+    let mut rng = Rng::new(seed);
+    let mut labels: Vec<i32> = (0..n).map(|_| rng.below(k) as i32).collect();
+    labels[0] = -1;
+    let edges: Vec<(u32, u32, f64)> = (0..m)
+        .map(|_| (rng.below(n) as u32, rng.below(n) as u32, rng.f64() + 0.1))
+        .collect();
+    (labels, edges)
+}
+
+/// A chaos daemon: fault plan armed, lifecycle budgets tightened so a
+/// connection the driver abandoned mid-frame dies (and releases its
+/// payloads) within seconds instead of minutes.
+fn chaos_daemon(plan: Arc<FaultPlan>) -> ShardServer {
+    ShardServer::start_with_config(
+        "127.0.0.1:0",
+        DaemonConfig {
+            fault: Some(plan),
+            idle_timeout: Some(Duration::from_secs(4)),
+            io_timeout: Some(Duration::from_secs(2)),
+            keep_ttl: Some(Duration::from_secs(30)),
+            ..DaemonConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+// ------------------------------------------------------- fleet lane
+
+/// One-shot fleet dispatch *and* the keep=1 cluster session against two
+/// fault-armed daemons plus one clean survivor: every outcome is
+/// bitwise-or-named, and the daemon-side cached-payload gauge returns
+/// to zero once the fleet is torn down.
+#[test]
+fn fleet_lanes_survive_fault_grid() {
+    let mut g = generate_sbm(&SbmParams::paper(120), 71);
+    mutate(&mut g, 72);
+    let opts = GeeOptions::ALL;
+    let want = SparseGee::fast().embed(&g, &opts);
+    let dir = tmpdir("fleet");
+    let sp = spill_from_graph(
+        &g,
+        &SpillConfig { shards: 5, ..SpillConfig::new(&dir) },
+    )
+    .unwrap();
+
+    // round-2 labels for the cluster session: deterministic perturbation
+    let mut labels2 = g.labels.clone();
+    for (i, l) in labels2.iter_mut().enumerate() {
+        if i % 7 == 0 && *l >= 0 {
+            *l = (*l + 1) % g.k as i32;
+        }
+    }
+    let orig_labels = std::mem::replace(&mut g.labels, labels2.clone());
+    let want2 = SparseGee::fast().embed(&g, &opts);
+    g.labels = orig_labels;
+
+    for seed in seeds() {
+        let a = chaos_daemon(grid_plan(seed));
+        let b = chaos_daemon(grid_plan(seed ^ 0xB00));
+        let clean = ShardServer::start("127.0.0.1:0").unwrap();
+        let cfg = DispatchConfig {
+            deadlines: Deadlines::tight(),
+            retry: chaos_retry(seed),
+            ..DispatchConfig::new(vec![
+                a.addr().to_string(),
+                b.addr().to_string(),
+                clean.addr().to_string(),
+            ])
+        };
+
+        let t0 = Instant::now();
+        match embed_remote(&sp, &opts, &cfg) {
+            Ok(z) => assert_eq!(
+                z.data, want.data,
+                "seed {seed}: fleet embed must be bitwise vs sparse-fast"
+            ),
+            Err(e) => assert_named(
+                &format!("fleet embed seed {seed}"),
+                &format!("{e:#}"),
+            ),
+        }
+        assert_bounded("fleet embed", t0);
+
+        // the cluster session exercises keep=1 payload retention under
+        // the same plans (RESHARD on survivors when an endpoint dies)
+        let t0 = Instant::now();
+        match FleetSession::connect(&sp, &opts, &cfg) {
+            Ok(mut sess) => {
+                let rounds: [(&[i32], &[f64]); 2] =
+                    [(&g.labels, &want.data), (&labels2, &want2.data)];
+                for (round, (labels, expect)) in rounds.iter().enumerate() {
+                    match sess.embed_round(labels) {
+                        Ok(z) => assert_eq!(
+                            &z.data[..], *expect,
+                            "seed {seed} round {round}: fleet session must be bitwise"
+                        ),
+                        Err(e) => {
+                            assert_named(
+                                &format!("fleet session seed {seed} round {round}"),
+                                &format!("{e:#}"),
+                            );
+                            break;
+                        }
+                    }
+                }
+                sess.close();
+            }
+            Err(e) => assert_named(
+                &format!("fleet session connect seed {seed}"),
+                &format!("{e:#}"),
+            ),
+        }
+        assert_bounded("fleet session", t0);
+
+        a.stop();
+        b.stop();
+        clean.stop();
+    }
+
+    // leak gauge: every keep=1 payload armed during the soak is dropped
+    // when its connection dies (io timeout) or its TTL fires — the
+    // counters are process-global, so assert the live gauge, not deltas
+    wait_for("cached keep=1 payloads drain to zero", Duration::from_secs(20), || {
+        reap_stats().2 == 0
+    });
+}
+
+// ------------------------------------------------- client embed lane
+
+/// Client embeds against a fault-armed front door. A clean front door
+/// on the *same service* proves the service itself survives every seed:
+/// permits return, the queue drains, and clean requests still answer
+/// bitwise-identically.
+#[test]
+fn client_embeds_survive_fault_grid() {
+    let svc = Arc::new(EmbedService::start(ServiceConfig {
+        wire_deadlines: Deadlines::tight(),
+        ..ServiceConfig::default()
+    }));
+    let clean_door = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    let (labels, edges) = random_graph(41, 60, 3, 260);
+    let mut clean =
+        EmbedClient::connect(clean_door.addr(), &ClientConfig::default()).unwrap();
+    let want = clean.embed("ldc", &labels, &edges, 3).unwrap();
+
+    for seed in seeds() {
+        let chaos_door = TcpServer::start_with_fault(
+            "127.0.0.1:0",
+            svc.clone(),
+            Some(grid_plan(seed)),
+        )
+        .unwrap();
+        let cfg = chaos_client_config(seed);
+        for job in 0..4u64 {
+            let t0 = Instant::now();
+            let lane = format!("client embed seed {seed} job {job}");
+            match EmbedClient::connect(chaos_door.addr(), &cfg) {
+                Ok(mut client) => {
+                    match client.embed_with_retry("ldc", &labels, &edges, 3) {
+                        Ok(z) => assert_eq!(
+                            z.data, want.data,
+                            "{lane}: result must be bitwise vs clean run"
+                        ),
+                        Err(e) => assert_named(&lane, &format!("{e:#}")),
+                    }
+                }
+                Err(e) => assert_named(&lane, &format!("{e:#}")),
+            }
+            assert_bounded(&lane, t0);
+        }
+        chaos_door.stop();
+
+        // no admission permit or queue slot may outlive its connection
+        wait_for("permits returned", Duration::from_secs(10), || {
+            svc.governor().in_flight(wire::DEFAULT_TENANT) == 0
+        });
+        wait_for("queue drained", Duration::from_secs(10), || {
+            svc.queue_depth() == 0
+        });
+        // and the same service still serves a clean connection exactly
+        let z = clean.embed("ldc", &labels, &edges, 3).unwrap();
+        assert_eq!(z.data, want.data, "seed {seed}: clean lane diverged after chaos");
+    }
+    clean_door.stop();
+}
+
+// ------------------------------------------------------- ITER2 lane
+
+/// Server-driven self-clustering jobs (ITER2) under chaos: the final
+/// `(Z, rounds)` must match the clean run bitwise, or the job must die
+/// with a named error.
+#[test]
+fn cluster_jobs_survive_fault_grid() {
+    let svc = Arc::new(EmbedService::start(ServiceConfig {
+        wire_deadlines: Deadlines::tight(),
+        ..ServiceConfig::default()
+    }));
+    let clean_door = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    let (labels, edges) = random_graph(43, 50, 3, 220);
+    let mut clean =
+        EmbedClient::connect(clean_door.addr(), &ClientConfig::default()).unwrap();
+    let (want_z, want_states) =
+        clean.cluster_embed("ldc", &labels, &edges, 3, 6, 0.0).unwrap();
+
+    for seed in seeds() {
+        let chaos_door = TcpServer::start_with_fault(
+            "127.0.0.1:0",
+            svc.clone(),
+            Some(grid_plan(seed)),
+        )
+        .unwrap();
+        let cfg = chaos_client_config(seed);
+        for job in 0..2u64 {
+            let t0 = Instant::now();
+            let lane = format!("cluster seed {seed} job {job}");
+            match EmbedClient::connect(chaos_door.addr(), &cfg) {
+                Ok(mut client) => {
+                    match client.cluster_embed("ldc", &labels, &edges, 3, 6, 0.0) {
+                        Ok((z, states)) => {
+                            assert_eq!(
+                                z.data, want_z.data,
+                                "{lane}: Z must be bitwise vs clean run"
+                            );
+                            assert_eq!(
+                                states.len(),
+                                want_states.len(),
+                                "{lane}: round count must match clean run"
+                            );
+                        }
+                        Err(e) => assert_named(&lane, &format!("{e:#}")),
+                    }
+                }
+                Err(e) => assert_named(&lane, &format!("{e:#}")),
+            }
+            assert_bounded(&lane, t0);
+        }
+        chaos_door.stop();
+        wait_for("permits returned", Duration::from_secs(10), || {
+            svc.governor().in_flight(wire::DEFAULT_TENANT) == 0
+        });
+        wait_for("queue drained", Duration::from_secs(10), || {
+            svc.queue_depth() == 0
+        });
+    }
+    clean_door.stop();
+}
+
+// ----------------------------------------------------- session lane
+
+/// The resident-session stream under chaos. A full flow (open → deltas
+/// → wait clean → fetch rows → close) must read back the one-shot
+/// embedding bitwise; any step may instead die with a named error. The
+/// session lane must keep working for fresh tenants afterwards.
+#[test]
+fn session_stream_survives_fault_grid() {
+    let svc = Arc::new(EmbedService::start(ServiceConfig {
+        session_workers: 2,
+        wire_deadlines: Deadlines::tight(),
+        ..ServiceConfig::default()
+    }));
+    let clean_door = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    let (labels, edges) = random_graph(47, 40, 3, 200);
+    let split = edges.len() - 60;
+    let mut clean =
+        EmbedClient::connect(clean_door.addr(), &ClientConfig::default()).unwrap();
+    let want = clean.embed("ldc", &labels, &edges, 3).unwrap();
+
+    for seed in seeds() {
+        let chaos_door = TcpServer::start_with_fault(
+            "127.0.0.1:0",
+            svc.clone(),
+            Some(grid_plan(seed)),
+        )
+        .unwrap();
+        // a tenant per seed: a session whose SESS reply was swallowed by
+        // a fault stays open server-side (resident by design) and pins
+        // quota — isolate that per grid point
+        let tenant = format!("chaos{seed}");
+        let cfg = ClientConfig {
+            tenant: Some(tenant.clone()),
+            ..chaos_client_config(seed)
+        };
+        let lane = format!("session seed {seed}");
+        let t0 = Instant::now();
+        let mut opened = None;
+        let outcome: Result<(), anyhow::Error> = (|| {
+            let mut client = EmbedClient::connect(chaos_door.addr(), &cfg)?;
+            let sess =
+                client.open_session("ldc", &labels, &edges[..split], 3, None)?;
+            opened = Some(sess);
+            for chunk in edges[split..].chunks(12) {
+                let deltas: Vec<Delta> = chunk
+                    .iter()
+                    .map(|&(a, b, w)| Delta::Insert { a, b, w })
+                    .collect();
+                client.send_deltas(sess, &deltas)?;
+            }
+            client.wait_clean(sess, Duration::from_secs(30))?;
+            let ids: Vec<u32> = (0..labels.len() as u32).collect();
+            let (z, ..) = client.fetch_rows(sess, &ids)?;
+            assert_eq!(
+                z.data, want.data,
+                "{lane}: streamed rows must match the one-shot embed bitwise"
+            );
+            client.close_session(sess)?;
+            opened = None;
+            Ok(())
+        })();
+        if let Err(e) = outcome {
+            assert_named(&lane, &format!("{e:#}"));
+        }
+        assert_bounded(&lane, t0);
+
+        // release a session the chaos connection left behind: session
+        // ids are registry-scoped, so a clean connection can close it
+        if let Some(sess) = opened {
+            let clean_cfg = ClientConfig {
+                tenant: Some(tenant.clone()),
+                ..ClientConfig::default()
+            };
+            let mut closer =
+                EmbedClient::connect(clean_door.addr(), &clean_cfg).unwrap();
+            let _ = closer.close_session(sess);
+        }
+        chaos_door.stop();
+        wait_for("permits returned", Duration::from_secs(10), || {
+            svc.governor().in_flight(&tenant) == 0
+        });
+    }
+
+    // the session lane itself survived: a fresh tenant can still open,
+    // stream, and close
+    let probe_cfg = ClientConfig {
+        tenant: Some("probe".into()),
+        ..ClientConfig::default()
+    };
+    let mut probe = EmbedClient::connect(clean_door.addr(), &probe_cfg).unwrap();
+    let sess = probe.open_session("ldc", &labels, &edges, 3, None).unwrap();
+    let ids: Vec<u32> = (0..labels.len() as u32).collect();
+    let (z, ..) = probe.fetch_rows(sess, &ids).unwrap();
+    assert_eq!(z.data, want.data, "post-soak session lane diverged");
+    probe.close_session(sess).unwrap();
+    clean_door.stop();
+}
+
+// --------------------------------------------------- garbage faults
+
+/// Garbage bytes on the wire. The line-protocol surface detects
+/// corruption as parse errors; the binary payload carries no checksum,
+/// so a payload bit-flip can legitimately return wrong bits — which is
+/// why the soak grid above runs garbage-free and this test only pins
+/// the robustness half: every job terminates inside the bound, the
+/// server survives, and nothing leaks.
+#[test]
+fn garbage_faults_terminate_and_server_keeps_serving() {
+    let svc = Arc::new(EmbedService::start(ServiceConfig {
+        wire_deadlines: Deadlines::tight(),
+        ..ServiceConfig::default()
+    }));
+    let clean_door = TcpServer::start("127.0.0.1:0", svc.clone()).unwrap();
+    let (labels, edges) = random_graph(53, 30, 2, 120);
+    let mut clean =
+        EmbedClient::connect(clean_door.addr(), &ClientConfig::default()).unwrap();
+    let want = clean.embed("---", &labels, &edges, 2).unwrap();
+
+    for seed in seeds() {
+        let plan = Arc::new(
+            FaultPlan::parse(&format!("seed={seed} grace=6 garbage=0.10 eof=0.02"))
+                .unwrap(),
+        );
+        let chaos_door =
+            TcpServer::start_with_fault("127.0.0.1:0", svc.clone(), Some(plan))
+                .unwrap();
+        let cfg = chaos_client_config(seed);
+        for job in 0..4u64 {
+            let t0 = Instant::now();
+            // success is not bit-checked here (no checksum on the
+            // payload); the pin is termination + server survival
+            if let Ok(mut client) = EmbedClient::connect(chaos_door.addr(), &cfg) {
+                let _ = client.embed("---", &labels, &edges, 2);
+            }
+            assert_bounded(&format!("garbage seed {seed} job {job}"), t0);
+        }
+        chaos_door.stop();
+        wait_for("permits returned", Duration::from_secs(10), || {
+            svc.governor().in_flight(wire::DEFAULT_TENANT) == 0
+        });
+        wait_for("queue drained", Duration::from_secs(10), || {
+            svc.queue_depth() == 0
+        });
+        let z = clean.embed("---", &labels, &edges, 2).unwrap();
+        assert_eq!(z.data, want.data, "seed {seed}: clean lane diverged after garbage soak");
+    }
+    clean_door.stop();
+}
